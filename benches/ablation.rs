@@ -1,0 +1,158 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **chunk-order evaluation** (Alg. 3 lines 6–8) — how much of the
+//!    batch win comes from evaluating blocks in chunk order (cache
+//!    reuse + amortized dense-scratch loads)?
+//! 2. **sibling support overlap** (§4 item 2) — MSCM's chunk walk is
+//!    only cheaper than per-column walks when siblings share support;
+//!    sweep the generator's overlap knob and watch the speedup move.
+//! 3. **branching factor** — the paper's claim that larger B gives a
+//!    larger MSCM win, isolated on one dataset.
+//!
+//! `cargo bench --bench ablation`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mscm_xmr::data::synthetic::{measured_sibling_overlap, synth_model, synth_queries, DatasetSpec};
+use mscm_xmr::inference::{
+    set_chunk_order_enabled, EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo,
+};
+
+fn spec(overlap: f64) -> DatasetSpec {
+    DatasetSpec {
+        name: "ablation",
+        dim: 60_000,
+        num_labels: 30_000,
+        paper_dim: 0,
+        paper_labels: 0,
+        query_nnz: 60,
+        col_nnz: 100,
+        sibling_overlap: overlap,
+        zipf_theta: 1.0,
+    }
+}
+
+fn batch_ms(engine: &InferenceEngine, x: &mscm_xmr::sparse::CsrMatrix) -> f64 {
+    std::hint::black_box(engine.predict_batch(x, 10, 10));
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Instant::now();
+        std::hint::black_box(engine.predict_batch(x, 10, 10));
+        best = best.min(t.elapsed().as_secs_f64() * 1e3 / x.rows as f64);
+    }
+    best
+}
+
+fn main() {
+    // --- 1. chunk-order evaluation on/off (dense lookup feels it most) ---
+    println!("\n[ablation 1] chunk-order evaluation (Alg. 3 l.6-8), B=32 batch");
+    let s = spec(0.6);
+    let model = Arc::new(synth_model(&s, 32, 9));
+    let x = synth_queries(&s, 512, 10);
+    for iter in [IterationMethod::DenseLookup, IterationMethod::Hash] {
+        let engine = InferenceEngine::from_arc(
+            Arc::clone(&model),
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter,
+            },
+        );
+        set_chunk_order_enabled(true);
+        let with = batch_ms(&engine, &x);
+        set_chunk_order_enabled(false);
+        let without = batch_ms(&engine, &x);
+        set_chunk_order_enabled(true);
+        println!(
+            "  {:<16} with sort {:.3} ms/q   without {:.3} ms/q   ({:.2}x from chunk order)",
+            iter.label(),
+            with,
+            without,
+            without / with
+        );
+    }
+
+    // --- 2. sibling-overlap sweep ---
+    println!("\n[ablation 2] sibling support overlap -> MSCM speedup (binary, B=32)");
+    for overlap in [0.0, 0.3, 0.6, 0.9] {
+        let s = spec(overlap);
+        let model = Arc::new(synth_model(&s, 32, 11));
+        let measured = measured_sibling_overlap(&model);
+        let x = synth_queries(&s, 256, 12);
+        let cfg = |algo| EngineConfig {
+            algo,
+            iter: IterationMethod::BinarySearch,
+        };
+        let mscm = batch_ms(
+            &InferenceEngine::from_arc(Arc::clone(&model), cfg(MatmulAlgo::Mscm)),
+            &x,
+        );
+        let base = batch_ms(
+            &InferenceEngine::from_arc(Arc::clone(&model), cfg(MatmulAlgo::Baseline)),
+            &x,
+        );
+        println!(
+            "  overlap knob {overlap:.1} (measured jaccard {measured:.2}): mscm {mscm:.3} ms/q, baseline {base:.3} ms/q -> {:.2}x",
+            base / mscm
+        );
+    }
+
+    // --- 4. query reordering (paper §7 future work) ---
+    // The paper briefly investigated reordering *queries* (not blocks) to
+    // localize memory and "were unable to obtain a performance boost".
+    // Reproduce the experiment: sort batch queries by their dominant
+    // feature id so similar queries are adjacent, and compare.
+    println!("\n[ablation 4] query reordering (paper §7 future work), hash MSCM B=32 batch");
+    {
+        let s = spec(0.6);
+        let model = Arc::new(synth_model(&s, 32, 15));
+        let x = synth_queries(&s, 512, 16);
+        let engine = InferenceEngine::from_arc(
+            Arc::clone(&model),
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::Hash,
+            },
+        );
+        let unordered = batch_ms(&engine, &x);
+        // reorder rows by dominant (max |value|) feature id
+        let mut order: Vec<usize> = (0..x.rows).collect();
+        let dominant = |i: usize| -> u32 {
+            let r = x.row(i);
+            r.indices
+                .iter()
+                .zip(r.values)
+                .max_by(|a, b| a.1.abs().total_cmp(&b.1.abs()))
+                .map(|(&f, _)| f)
+                .unwrap_or(0)
+        };
+        order.sort_by_key(|&i| dominant(i));
+        let xr = x.select_rows(&order);
+        let reordered = batch_ms(&engine, &xr);
+        println!(
+            "  unordered {unordered:.3} ms/q   reordered {reordered:.3} ms/q   ({:+.1}% — paper also found no gain)",
+            (unordered / reordered - 1.0) * 100.0
+        );
+    }
+
+    // --- 3. branching-factor sweep ---
+    println!("\n[ablation 3] branching factor -> MSCM speedup (binary search)");
+    let s = spec(0.6);
+    for b in [2usize, 8, 32] {
+        let model = Arc::new(synth_model(&s, b, 13));
+        let x = synth_queries(&s, 256, 14);
+        let cfg = |algo| EngineConfig {
+            algo,
+            iter: IterationMethod::BinarySearch,
+        };
+        let mscm = batch_ms(
+            &InferenceEngine::from_arc(Arc::clone(&model), cfg(MatmulAlgo::Mscm)),
+            &x,
+        );
+        let base = batch_ms(
+            &InferenceEngine::from_arc(Arc::clone(&model), cfg(MatmulAlgo::Baseline)),
+            &x,
+        );
+        println!("  B={b:<3} mscm {mscm:.3} ms/q, baseline {base:.3} ms/q -> {:.2}x", base / mscm);
+    }
+}

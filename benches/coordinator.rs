@@ -1,0 +1,73 @@
+//! Serving-stack benchmark: coordinator throughput and latency versus
+//! direct engine calls — quantifies the L3 overhead (router + batcher +
+//! channels) and the benefit of dynamic batching.
+//!
+//! `cargo bench --bench coordinator`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mscm_xmr::coordinator::{Coordinator, CoordinatorConfig};
+use mscm_xmr::data::enterprise::EnterpriseSpec;
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+
+fn main() {
+    let spec = EnterpriseSpec {
+        num_labels: 100_000,
+        dim: 50_000,
+        ..Default::default()
+    };
+    eprintln!("synthesizing L={} model ...", spec.num_labels);
+    let model = Arc::new(spec.build_model());
+    let engine = Arc::new(InferenceEngine::from_arc(
+        Arc::clone(&model),
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        },
+    ));
+    let n = 4_000;
+    let x = spec.build_queries(n);
+
+    // 1. direct engine, single thread (lower bound on service time)
+    let mut ws = engine.workspace();
+    let queries: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
+    let t = Instant::now();
+    for q in &queries {
+        std::hint::black_box(engine.predict_with(q, 10, 10, &mut ws));
+    }
+    let direct_ms = t.elapsed().as_secs_f64() * 1e3 / n as f64;
+    println!("direct single-thread: {direct_ms:.3} ms/query");
+
+    // 2. through the coordinator at increasing worker counts
+    for workers in [1usize, 2, 4] {
+        let coord = Coordinator::start(
+            Arc::clone(&engine),
+            CoordinatorConfig {
+                workers,
+                max_batch: 32,
+                max_batch_delay: Duration::from_micros(300),
+                beam: 10,
+                topk: 10,
+                queue_capacity: 100_000,
+            },
+        );
+        let t = Instant::now();
+        let rxs: Vec<_> = queries
+            .iter()
+            .map(|q| coord.submit(q.clone()).unwrap().1)
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let wall = t.elapsed().as_secs_f64();
+        let s = coord.stats();
+        println!(
+            "coordinator w={workers}: {:.0} qps, latency {} (mean batch {:.1})",
+            n as f64 / wall,
+            s.latency.summary(),
+            s.mean_batch()
+        );
+        coord.shutdown();
+    }
+}

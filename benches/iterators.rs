@@ -1,0 +1,77 @@
+//! Micro-benchmarks of the four support-intersection iteration methods
+//! (paper §4 items 1–4) at the single vector × chunk product level — the
+//! innermost hot path of Algorithm 2.
+//!
+//! `cargo bench --bench iterators`
+
+use mscm_xmr::data::synthetic::{paper_suite, synth_model, synth_queries};
+use mscm_xmr::sparse::iterators::{
+    vec_chunk_binary, vec_chunk_dense, vec_chunk_hash, vec_chunk_marching, DenseScratch,
+};
+use mscm_xmr::util::bench::{bench_ms, black_box};
+
+fn main() {
+    let spec = &paper_suite(10)[1]; // amazoncat-13k shape
+    eprintln!("building {} model (B=32) ...", spec.name);
+    let model = synth_model(spec, 32, 1);
+    let x = synth_queries(spec, 64, 2);
+    let layer = model.layers.last().unwrap();
+    let chunks = &layer.chunked.chunks;
+    let n_chunks = chunks.len();
+
+    println!("\niterator micro-bench: 64 queries x 32 chunks each, {}", spec.name);
+    println!("{:<22}{:>14}{:>16}", "method", "ms/pass", "ns/product");
+    let passes = 64 * 32;
+    let mut scratch = DenseScratch::new(model.dim);
+
+    for method in ["marching", "binary", "hash", "dense"] {
+        let stats = bench_ms(2, 50, 2_000.0, || {
+            let mut out = vec![0.0f32; 64];
+            for qi in 0..64 {
+                let q = x.row(qi);
+                for c in 0..32 {
+                    let chunk = &chunks[(qi * 37 + c * 131) % n_chunks];
+                    let o = &mut out[..chunk.ncols as usize];
+                    o.fill(0.0);
+                    match method {
+                        "marching" => vec_chunk_marching(q, chunk, o),
+                        "binary" => vec_chunk_binary(q, chunk, o),
+                        "hash" => vec_chunk_hash(q, chunk, o),
+                        _ => {
+                            scratch.load(chunk);
+                            vec_chunk_dense(q, chunk, &scratch, o);
+                            scratch.clear(chunk);
+                        }
+                    }
+                    black_box(&o[0]);
+                }
+            }
+        });
+        println!(
+            "{:<22}{:>14.3}{:>16.1}",
+            method,
+            stats.mean_ms,
+            stats.mean_ms * 1e6 / passes as f64
+        );
+    }
+
+    // baseline per-column dots for contrast (the non-MSCM inner loop)
+    let csc = &layer.csc;
+    let stats = bench_ms(2, 50, 2_000.0, || {
+        let mut acc = 0.0f32;
+        for qi in 0..64 {
+            let q = x.row(qi);
+            for c in 0..32 {
+                let col = csc.col((qi * 37 + c * 131) % csc.cols);
+                acc += q.dot_binary_search(col);
+            }
+        }
+        black_box(acc);
+    });
+    println!(
+        "{:<22}{:>14.3}{:>16.1}   (per-column, 1 col per 'product')",
+        "baseline binary dot",
+        stats.mean_ms,
+        stats.mean_ms * 1e6 / passes as f64
+    );
+}

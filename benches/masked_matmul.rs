@@ -1,0 +1,36 @@
+//! End-to-end inference benchmark over the synthetic paper suite — the
+//! `cargo bench` entry point behind Tables 1–3 and Figures 3–4 (the full
+//! sweep with reports is `repro bench all`; this binary runs a reduced
+//! grid sized for CI).
+//!
+//! `cargo bench --bench masked_matmul [-- --scale 20 --queries 128]`
+
+use mscm_xmr::repro::{self, BenchOptions};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let opts = BenchOptions {
+        batch_queries: get("--queries", 128),
+        online_queries: get("--online", 64),
+        scale: get("--scale", 20),
+        only: vec![
+            "eurlex-4k".into(),
+            "amazoncat-13k".into(),
+            "amazon-670k".into(),
+        ],
+        ..Default::default()
+    };
+    for branching in [2usize, 8, 32] {
+        let rows = repro::bench_table(branching, &opts);
+        repro::print_table(branching, &rows);
+        repro::print_figure34(branching, &rows, false);
+        repro::print_figure34(branching, &rows, true);
+    }
+}

@@ -1,0 +1,173 @@
+//! **End-to-end driver** (DESIGN.md §7): enterprise-scale semantic
+//! product search served through the full L3 stack.
+//!
+//! Synthesizes a §6-shaped model (default 1M products, d=400K, B=32 — a
+//! 1/100-scale stand-in for the paper's proprietary 100M-product model),
+//! starts the coordinator (router → dynamic batcher → worker pool over
+//! the MSCM engine), drives an open-loop query load, and reports
+//! throughput plus avg/P95/P99 latency; then repeats with the non-MSCM
+//! baseline engine to measure the paper's headline speedup end to end.
+//!
+//! ```text
+//! cargo run --release --example enterprise_search            # full (~1M labels)
+//! cargo run --release --example enterprise_search -- --quick # CI-sized
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mscm_xmr::coordinator::{Coordinator, CoordinatorConfig};
+use mscm_xmr::data::enterprise::EnterpriseSpec;
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+
+fn run_load(
+    label: &str,
+    engine: Arc<InferenceEngine>,
+    queries: &mscm_xmr::sparse::CsrMatrix,
+    rps: u64,
+    workers: usize,
+) -> (f64, f64, f64, f64, f64) {
+    // Warm the engine (page in the model, build caches) outside the
+    // measured window so the first configuration is not penalized, and
+    // measure the direct service time to pick a non-saturating arrival
+    // rate (open-loop at >~60% utilization on this box just measures the
+    // queue, not the engine).
+    let service_ms = {
+        let mut ws = engine.workspace();
+        let warm = queries.rows.min(64);
+        for i in 0..warm {
+            std::hint::black_box(engine.predict_with(&queries.row_owned(i), 10, 10, &mut ws));
+        }
+        let t = Instant::now();
+        for i in 0..warm {
+            std::hint::black_box(engine.predict_with(&queries.row_owned(i), 10, 10, &mut ws));
+        }
+        t.elapsed().as_secs_f64() * 1e3 / warm as f64
+    };
+    let rps = rps.min((600.0 / service_ms) as u64).max(50);
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            workers,
+            max_batch: 32,
+            // Sub-ms engines want minimal coalescing delay; batches still
+            // form naturally under queueing.
+            max_batch_delay: Duration::from_micros(50),
+            beam: 10,
+            topk: 10,
+            queue_capacity: 100_000,
+        },
+    );
+    let n = queries.rows;
+    let interval = Duration::from_nanos(1_000_000_000 / rps);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let target = t0 + interval * i as u32;
+        if let Some(sleep) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(sleep);
+        }
+        match coord.submit(queries.row_owned(i)) {
+            Ok((_, rx)) => rxs.push(rx),
+            Err(e) => panic!("submit failed: {e}"),
+        }
+    }
+    let mut got = 0usize;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(60)).expect("reply");
+        assert_eq!(r.predictions.len(), 10);
+        got += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = coord.stats();
+    let qps = got as f64 / wall;
+    let (avg, p95, p99) = (
+        stats.latency.mean_ms(),
+        stats.latency.quantile_ms(0.95),
+        stats.latency.quantile_ms(0.99),
+    );
+    println!(
+        "{label:<24} {got} ok  {qps:>8.0} qps (offered {rps})  avg {avg:>7.3} ms  p95 {p95:>7.3} ms  p99 {p99:>7.3} ms  (service {service_ms:.3} ms, mean batch {:.1})",
+        stats.mean_batch()
+    );
+    coord.shutdown();
+    (qps, avg, p95, p99, service_ms)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let spec = if quick {
+        EnterpriseSpec {
+            num_labels: 100_000,
+            dim: 50_000,
+            ..Default::default()
+        }
+    } else {
+        EnterpriseSpec::default() // 1M labels, d = 400K, B = 32
+    };
+    println!(
+        "synthesizing enterprise model: L={} d={} B={} (1/{:.0} of the paper's 100M)",
+        spec.num_labels,
+        spec.dim,
+        spec.branching,
+        spec.scale_factor()
+    );
+    let t = Instant::now();
+    let model = Arc::new(spec.build_model());
+    println!(
+        "built in {:.1}s — {}",
+        t.elapsed().as_secs_f64(),
+        model.stats()
+    );
+
+    let n_queries = if quick { 2_000 } else { 6_000 };
+    let rps = if quick { 2_000 } else { 3_000 };
+    let queries = spec.build_queries(n_queries);
+    let workers = std::thread::available_parallelism()?.get().min(8);
+    // Single-core substrate note (EXPERIMENTS.md): with one core the
+    // coordinator pipeline (client, batcher, worker) time-shares; absolute
+    // latency includes scheduling noise, but the MSCM-vs-baseline ratio —
+    // the paper's claim — is preserved.
+    println!("\nserving {n_queries} queries open-loop at {rps} rps with {workers} workers\n");
+
+    let mscm = Arc::new(InferenceEngine::from_arc(
+        Arc::clone(&model),
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        },
+    ));
+    let (_, mscm_avg, _, mscm_p99, mscm_svc) = run_load("hash MSCM", mscm, &queries, rps, workers);
+
+    let bin_mscm = Arc::new(InferenceEngine::from_arc(
+        Arc::clone(&model),
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::BinarySearch,
+        },
+    ));
+    run_load("binary-search MSCM", bin_mscm, &queries, rps, workers);
+
+    let baseline = Arc::new(InferenceEngine::from_arc(
+        Arc::clone(&model),
+        EngineConfig {
+            algo: MatmulAlgo::Baseline,
+            iter: IterationMethod::BinarySearch,
+        },
+    ));
+    let (_, base_avg, _, base_p99, base_svc) =
+        run_load("binary-search baseline", baseline, &queries, rps, workers);
+
+    println!(
+        "\nengine service-time MSCM gain: {:.1}x  (paper §6 headline: 8x avg, single-thread)",
+        base_svc / mscm_svc
+    );
+    println!(
+        "end-to-end (incl. router/batcher overhead): avg {:.1}x, p99 {:.1}x",
+        base_avg / mscm_avg,
+        base_p99 / mscm_p99
+    );
+    Ok(())
+}

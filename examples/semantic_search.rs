@@ -1,0 +1,103 @@
+//! Semantic product search (the paper's §1/§6 motivating workload):
+//! train a search model over a product-title corpus, then serve
+//! free-text queries and retrieve the top-k matching products.
+//!
+//! ```text
+//! cargo run --release --example semantic_search
+//! ```
+
+use mscm_xmr::data::corpus::{Corpus, CorpusSpec};
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::train::{train_model, RankerParams, Tfidf};
+use mscm_xmr::util::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // Products are topics; documents are "titles/descriptions" of them.
+    let spec = CorpusSpec {
+        vocab: 8_000,
+        topics: 512, // 512 products
+        docs: 6_000,
+        doc_len: 24,
+        max_labels: 1,
+        seed: 13,
+        ..Default::default()
+    };
+    println!(
+        "catalog: {} products, {} training descriptions",
+        spec.topics, spec.docs
+    );
+    let corpus = Corpus::generate(spec.clone());
+    let tfidf = Tfidf::fit(&corpus.docs, spec.vocab);
+    let x = tfidf.transform(&corpus.docs);
+
+    let t = Instant::now();
+    let trained = train_model(
+        &x,
+        &corpus.labels,
+        spec.topics,
+        16,
+        &RankerParams {
+            epochs: 4,
+            ..Default::default()
+        },
+        3,
+    );
+    println!(
+        "trained in {:.1}s: {}",
+        t.elapsed().as_secs_f64(),
+        trained.model.stats()
+    );
+
+    // Production config per the paper's guidance (App. A.1): hash MSCM
+    // for the online setting.
+    let engine = InferenceEngine::new(
+        trained.model.clone(),
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        },
+    );
+
+    // "User queries": short keyword fragments of held-out descriptions.
+    let mut rng = Rng::seed_from_u64(99);
+    let mut ws = engine.workspace();
+    let mut hits = 0;
+    let n_queries = 200;
+    let t = Instant::now();
+    for qi in 0..n_queries {
+        let doc_id = rng.gen_range(0..corpus.docs.len());
+        let doc = &corpus.docs[doc_id];
+        // a 6-token search query sampled from the description
+        let q_tokens: Vec<u32> = (0..6.min(doc.len()))
+            .map(|_| doc[rng.gen_range(0..doc.len())])
+            .collect();
+        let q = tfidf.transform_doc(&q_tokens);
+        let preds = engine.predict_with(&q, 10, 5, &mut ws);
+        let truth = corpus.labels[doc_id][0];
+        if preds
+            .iter()
+            .any(|p| trained.label_perm[p.label as usize] == truth)
+        {
+            hits += 1;
+        }
+        if qi < 3 {
+            let top: Vec<String> = preds
+                .iter()
+                .take(3)
+                .map(|p| {
+                    format!(
+                        "product{}:{:.3}",
+                        trained.label_perm[p.label as usize], p.score
+                    )
+                })
+                .collect();
+            println!("query {qi} (truth product{truth}): {}", top.join(" "));
+        }
+    }
+    let ms = t.elapsed().as_secs_f64() * 1e3 / n_queries as f64;
+    println!("\nrecall@5: {:.1}% over {n_queries} queries", 100.0 * hits as f64 / n_queries as f64);
+    println!("online latency: {ms:.3} ms/query (hash MSCM, beam 10)");
+    assert!(hits * 2 > n_queries, "search quality collapsed");
+    Ok(())
+}

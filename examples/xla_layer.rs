@@ -1,0 +1,118 @@
+//! The L1/L2 ↔ L3 bridge: load the AOT-compiled JAX/Pallas layer step
+//! from `artifacts/` and cross-check it against the native rust engine's
+//! math on the same dense model.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example xla_layer
+//! ```
+
+use mscm_xmr::inference::sigmoid;
+use mscm_xmr::runtime::{Tensor, XlaRuntime};
+use mscm_xmr::util::{Json, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let meta_raw = std::fs::read_to_string(format!("{dir}/meta.json"))
+        .map_err(|e| anyhow::anyhow!("{e}; run `make artifacts` first"))?;
+    let meta = Json::parse(&meta_raw).map_err(anyhow::Error::msg)?;
+    let geti = |k: &str| meta.get(k).and_then(|v| v.as_f64()).unwrap() as usize;
+    let (n, d, b1, b2) = (geti("n"), geti("d"), geti("b1"), geti("b2"));
+    println!("artifact shapes: n={n} d={d} b1={b1} b2={b2}");
+
+    let rt = XlaRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Random dense inputs.
+    let mut rng = Rng::seed_from_u64(42);
+    let x = Tensor::new(
+        (0..n * d).map(|_| rng.gen_normal() * 0.2).collect(),
+        vec![n, d],
+    );
+    let w1 = Tensor::new(
+        (0..d * b1).map(|_| rng.gen_normal() * 0.05).collect(),
+        vec![1, d, b1],
+    );
+    let mask = Tensor::new(vec![1.0; n], vec![n, 1]);
+    let ps = Tensor::new(vec![1.0; n], vec![n, 1]);
+
+    // 1. matmul_only: the bare Pallas MSCM kernel.
+    let matmul = rt.load_hlo_text(format!("{dir}/matmul_only.hlo.txt"))?;
+    let out = matmul.run(&[x.clone(), w1.clone(), mask.clone(), ps.clone()])?;
+    let scores = &out[0];
+    assert_eq!(scores.dims, vec![n, b1]);
+
+    // Cross-check against rust math: sigmoid(x_i · w_col).
+    let mut max_err = 0f32;
+    for i in 0..n {
+        for c in 0..b1 {
+            let mut a = 0f32;
+            for k in 0..d {
+                a += x.data[i * d + k] * w1.data[k * b1 + c];
+            }
+            let want = sigmoid(a);
+            let got = scores.data[i * b1 + c];
+            max_err = max_err.max((want - got).abs());
+        }
+    }
+    println!("matmul_only: max |rust - xla| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4, "kernel mismatch");
+
+    // 2. layer_step: kernel + top-b beam.
+    let beam = geti("beam");
+    let layer = rt.load_hlo_text(format!("{dir}/layer_step.hlo.txt"))?;
+    let out = layer.run(&[x.clone(), w1.clone(), mask, ps])?;
+    let (top_s, top_i) = (&out[0], &out[1]);
+    assert_eq!(top_s.dims, vec![n, beam]);
+    for i in 0..n {
+        // top scores must be the beam largest of row i of the kernel output
+        let mut row: Vec<f32> = (0..b1).map(|c| scores.data[i * b1 + c]).collect();
+        row.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for (k, &s) in top_s.data[i * beam..(i + 1) * beam].iter().enumerate() {
+            anyhow::ensure!((s - row[k]).abs() < 1e-5, "beam mismatch at ({i},{k})");
+        }
+    }
+    println!("layer_step: top-{beam} beam matches rust selection");
+    let _ = top_i;
+
+    // 3. full_inference: the two-layer tree end to end.
+    let w2 = Tensor::new(
+        (0..b1 * d * b2).map(|_| rng.gen_normal() * 0.05).collect(),
+        vec![b1, d, b2],
+    );
+    let full = rt.load_hlo_text(format!("{dir}/full_inference.hlo.txt"))?;
+    let out = full.run(&[x.clone(), w1.clone(), w2.clone()])?;
+    let topk = geti("topk");
+    assert_eq!(out[0].dims, vec![n, topk]);
+    // rust reference: exhaustive two-layer beam with the same widths
+    for i in 0..n {
+        let mut l1: Vec<(usize, f32)> = (0..b1)
+            .map(|c| (c, scores.data[i * b1 + c]))
+            .collect();
+        l1.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        l1.truncate(beam);
+        let mut cands: Vec<f32> = Vec::new();
+        for &(p, ps) in &l1 {
+            for c in 0..b2 {
+                let mut a = 0f32;
+                for k in 0..d {
+                    a += x.data[i * d + k] * w2.data[(p * d + k) * b2 + c];
+                }
+                cands.push(ps * sigmoid(a));
+            }
+        }
+        cands.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for k in 0..topk {
+            let got = out[0].data[i * topk + k];
+            anyhow::ensure!(
+                (got - cands[k]).abs() < 1e-4,
+                "full_inference mismatch at ({i},{k}): {got} vs {}",
+                cands[k]
+            );
+        }
+    }
+    println!("full_inference: end-to-end scores match rust reference");
+    println!("\nxla_layer OK — the AOT Pallas/JAX stack and the rust engine agree");
+    Ok(())
+}

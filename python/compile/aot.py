@@ -1,0 +1,119 @@
+"""AOT export: lower the L2 layer step / full inference to HLO text.
+
+HLO *text* (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all f32, shapes fixed at export time and recorded in
+artifacts/meta.json so the rust loader can size its buffers):
+
+  layer_step.hlo.txt      one masked-chunk-matmul + top-b beam layer
+  full_inference.hlo.txt  two-layer tree end to end
+  matmul_only.hlo.txt     the bare masked chunk product (kernel A/B bench)
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.mscm import mscm_masked_matmul, vmem_bytes_per_step
+
+# Export shapes: a small but non-trivial tree — n queries, d features,
+# layer-1: 1 chunk x B1 children, layer-2: B1 chunks x B2 children.
+N = 8
+D = 256
+B1 = 16
+B2 = 32
+BEAM = 4
+TOPK = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((N, D), f32)
+    w1 = jax.ShapeDtypeStruct((1, D, B1), f32)
+    w2 = jax.ShapeDtypeStruct((B1, D, B2), f32)
+    mask1 = jax.ShapeDtypeStruct((N, 1), f32)
+    ps1 = jax.ShapeDtypeStruct((N, 1), f32)
+
+    export(
+        functools.partial(model.layer_step, beam=BEAM),
+        (x, w1, mask1, ps1),
+        os.path.join(args.out_dir, "layer_step.hlo.txt"),
+    )
+    export(
+        functools.partial(model.full_inference, beam=BEAM, topk=TOPK),
+        (x, w1, w2),
+        os.path.join(args.out_dir, "full_inference.hlo.txt"),
+    )
+    export(
+        mscm_masked_matmul,
+        (x, w1, mask1, ps1),
+        os.path.join(args.out_dir, "matmul_only.hlo.txt"),
+    )
+
+    meta = {
+        "n": N,
+        "d": D,
+        "b1": B1,
+        "b2": B2,
+        "beam": BEAM,
+        "topk": TOPK,
+        "dtype": "f32",
+        "vmem_bytes_per_step_l2": vmem_bytes_per_step(D, B2),
+        "artifacts": {
+            "layer_step": {
+                "inputs": [[N, D], [1, D, B1], [N, 1], [N, 1]],
+                "outputs": [[N, BEAM], [N, BEAM]],
+            },
+            "full_inference": {
+                "inputs": [[N, D], [1, D, B1], [B1, D, B2]],
+                "outputs": [[N, TOPK], [N, TOPK]],
+            },
+            "matmul_only": {
+                "inputs": [[N, D], [1, D, B1], [N, 1], [N, 1]],
+                "outputs": [[N, B1]],
+            },
+        },
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

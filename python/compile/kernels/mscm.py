@@ -1,0 +1,98 @@
+"""L1 — the MSCM hot spot as a Pallas kernel (TPU formulation).
+
+The paper's MSCM is a CPU sparse technique: the beam mask activates whole
+sibling *chunks* of the weight matrix, and the per-chunk support
+intersection is walked once per chunk. Sparse scatter/gather with
+data-dependent support does not vectorize on the MXU, so the TPU
+formulation (DESIGN.md §Hardware-Adaptation) keeps the paper's core
+insight — *gate whole chunks with the beam mask and amortize memory
+traffic per chunk* — but densifies the tiles:
+
+- queries are dense rows ``x: [n, d]`` (one search query is short; its
+  densified block is what rides in VMEM);
+- weights are per-parent chunk tiles ``w: [C, d, B]`` (chunk = the B
+  sibling columns under one parent — eq. 7 of the paper);
+- the beam mask ``mask: [n, C]`` gates *chunks*, exactly like the block
+  mask of eq. 9, and parent path-scores ``pscore: [n, C]`` implement the
+  conditional-probability combine (Alg. 1 line 8).
+
+Grid: one program per (query, chunk) — the analogue of Alg. 3's block
+list. BlockSpec streams the chunk tile HBM→VMEM once per grid column, the
+analogue of the paper's chunk-order evaluation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU efficiency is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mscm_block_kernel(x_ref, w_ref, mask_ref, pscore_ref, out_ref):
+    """One (query, chunk) block: out = mask ? pscore * sigmoid(x @ W_c) : 0."""
+    x = x_ref[...]  # [1, d]
+    w = w_ref[0]  # [d, B]
+    m = mask_ref[0, 0]  # scalar
+    p = pscore_ref[0, 0]  # scalar
+    # MXU-shaped product: (1, d) @ (d, B) -> (1, B).
+    a = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    act = p * jax.nn.sigmoid(a)
+    out_ref[...] = jnp.where(m > 0, act, jnp.zeros_like(act))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mscm_masked_matmul(x, w, mask, pscore):
+    """Masked chunk multiplication ``A = M ⊙ σ(X W) ⊙ P`` (eq. 6 + combine).
+
+    Args:
+      x: ``[n, d]`` dense queries.
+      w: ``[C, d, B]`` chunk tiles (C chunks of B sibling columns).
+      mask: ``[n, C]`` chunk activation mask (0/1 floats).
+      pscore: ``[n, C]`` parent path scores.
+
+    Returns:
+      ``[n, C * B]`` combined child scores (zero where masked out).
+    """
+    n, d = x.shape
+    c, dw, b = w.shape
+    assert d == dw, f"dim mismatch {d} != {dw}"
+    assert mask.shape == (n, c) and pscore.shape == (n, c)
+    return pl.pallas_call(
+        _mscm_block_kernel,
+        grid=(n, c),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d, b), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, c * b), jnp.float32),
+        interpret=True,
+    )(x, w, mask, pscore)
+
+
+def vmem_bytes_per_step(d: int, b: int) -> int:
+    """VMEM footprint of one grid step (query row + chunk tile + output).
+
+    Used by DESIGN.md's §Perf roofline estimate: the chunk tile must fit
+    comfortably in ~16 MB of VMEM with double-buffering headroom.
+    """
+    return 4 * (d + d * b + b)
+
+
+def mxu_utilization_estimate(d: int, b: int) -> float:
+    """Fraction of an (128x128)-MXU pass doing useful work for one block.
+
+    The (1, d) x (d, B) product tiles the MXU as ceil(d/128) passes of
+    width ceil(B/128)*128; utilization is B / (ceil(B/128)*128) times the
+    1/8 row occupancy of a single-query pass (batching queries to 8 rows
+    restores it — documented trade-off).
+    """
+    lanes = -(-b // 128) * 128
+    return min(1.0, b / lanes)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Pallas MSCM kernel.
+
+The reference computes the masked chunk product with plain einsum — no
+Pallas, no custom layout — and is the ground truth for
+python/tests/test_kernel.py (hypothesis sweeps shapes against it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mscm_masked_matmul_ref(x, w, mask, pscore):
+    """Reference for kernels.mscm.mscm_masked_matmul.
+
+    Args:
+      x: ``[n, d]`` dense queries.
+      w: ``[C, d, B]`` chunk tiles.
+      mask: ``[n, C]`` chunk activation mask.
+      pscore: ``[n, C]`` parent path scores.
+
+    Returns:
+      ``[n, C * B]`` combined child scores.
+    """
+    n, _ = x.shape
+    c, _, b = w.shape
+    acts = jnp.einsum("nd,cdb->ncb", x, w)  # [n, C, B]
+    scores = jax.nn.sigmoid(acts) * pscore[:, :, None]
+    scores = jnp.where(mask[:, :, None] > 0, scores, 0.0)
+    return scores.reshape(n, c * b)
+
+
+def layer_step_ref(x, w, mask, pscore, beam):
+    """Reference for model.layer_step: masked product then top-b beam."""
+    scores = mscm_masked_matmul_ref(x, w, mask, pscore)
+    top_scores, top_idx = jax.lax.top_k(scores, beam)
+    return top_scores, top_idx

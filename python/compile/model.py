@@ -1,0 +1,97 @@
+"""L2 — the XMR layer step as a JAX computation calling the L1 kernel.
+
+One beam-search layer of Algorithm 1, dense-chunked for TPU:
+
+  1. masked chunk multiplication + σ + parent combine  (L1 Pallas kernel)
+  2. top-b beam selection over the child scores        (jax.lax.top_k)
+  3. prolongation of the new beam to the next layer's chunk mask
+     (child node → its own chunk of children; the analogue of
+     ``P̃ C^T`` in Alg. 1 line 5 when chunks are contiguous)
+
+The full tree inference is the composition of `layer_step` per layer;
+`full_inference` composes a fixed two-layer tree as the end-to-end
+artifact the rust runtime loads and cross-checks against its native
+engine (rust/tests/runtime_artifacts.rs).
+
+Everything here is lowered once, at build time, by aot.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.mscm import mscm_masked_matmul
+
+
+def _topk(scores, k):
+    """Top-k via argsort.
+
+    ``jax.lax.top_k`` lowers to the ``topk`` HLO instruction (attribute
+    ``largest``) which the bundled xla_extension 0.5.1 text parser
+    rejects; ``argsort`` lowers to a plain ``sort`` with comparator,
+    which round-trips fine. Ties resolve to the lower index (same as
+    top_k).
+    """
+    idx = jnp.argsort(-scores, axis=-1, stable=True)[:, :k]
+    vals = jnp.take_along_axis(scores, idx, axis=-1)
+    return vals, idx
+
+
+def layer_step(x, w, mask, pscore, *, beam):
+    """One beam-search layer.
+
+    Args:
+      x: ``[n, d]`` dense queries.
+      w: ``[C, d, B]`` chunk tiles of this layer's weights.
+      mask: ``[n, C]`` active-chunk mask from the previous beam.
+      pscore: ``[n, C]`` parent path scores aligned with ``mask``.
+      beam: static beam width b.
+
+    Returns:
+      ``(top_scores [n, b], top_idx [n, b])`` — the new beam over this
+      layer's ``C * B`` child nodes. Indices are returned as f32 (the
+      rust runtime moves f32 tensors across the PJRT boundary; beam
+      indices are exact below 2^24).
+    """
+    scores = mscm_masked_matmul(x, w, mask, pscore)
+    top_scores, top_idx = _topk(scores, beam)
+    return top_scores, top_idx.astype(jnp.float32)
+
+
+def beam_to_mask(top_scores, top_idx, num_chunks):
+    """Prolongates a beam over layer-l nodes to layer-(l+1) chunk masks.
+
+    Child node `j` of layer l *is* parent chunk `j` of layer l+1 (chunks
+    are contiguous sibling groups), so scatter the beam into dense
+    ``[n, C_next]`` mask/pscore arrays.
+    """
+    top_idx = top_idx.astype(jnp.int32)
+    n, b = top_scores.shape
+    mask = jnp.zeros((n, num_chunks), jnp.float32)
+    pscore = jnp.zeros((n, num_chunks), jnp.float32)
+    rows = jnp.arange(n)[:, None]
+    # beamed entries may include zero-score padding; keep them masked off
+    valid = top_scores > 0
+    mask = mask.at[rows, top_idx].max(jnp.where(valid, 1.0, 0.0))
+    pscore = pscore.at[rows, top_idx].max(jnp.where(valid, top_scores, 0.0))
+    return mask, pscore
+
+
+def full_inference(x, w1, w2, *, beam, topk):
+    """Two-layer tree inference end to end (the AOT demo artifact).
+
+    Layer 1 has a single chunk (the root's children); its beam gates the
+    chunks of layer 2. Returns ``(scores [n, topk], labels [n, topk])``.
+    """
+    n, _ = x.shape
+    c1, _, b1 = w1.shape
+    assert c1 == 1, "layer 1 is the root's single chunk"
+    mask1 = jnp.ones((n, 1), jnp.float32)
+    ps1 = jnp.ones((n, 1), jnp.float32)
+    s1, i1 = layer_step(x, w1, mask1, ps1, beam=beam)
+    c2 = w2.shape[0]
+    assert c2 == b1, "one layer-2 chunk per layer-1 node"
+    mask2, ps2 = beam_to_mask(s1, i1, c2)
+    s2, i2 = layer_step(x, w2, mask2, ps2, beam=topk)
+    return s2, i2

@@ -1,0 +1,105 @@
+//! The L3 serving coordinator: request router, dynamic batcher and worker
+//! pool in front of an [`crate::inference::InferenceEngine`].
+//!
+//! This is the system layer the paper's §6 production deployment implies:
+//! queries arrive one at a time (online) but the engine is fastest in
+//! batch mode (dense-lookup MSCM amortizes chunk loads across queries —
+//! Alg. 3 line 7), so a dynamic batcher groups requests up to a maximum
+//! batch size or age before dispatching them to inference workers.
+//!
+//! Design (std threads; the offline build has no async runtime — and none
+//! is needed, the hot path is CPU-bound):
+//!
+//! ```text
+//! clients ──submit──► router queue ──batcher──► batch queue ──► worker 0..W
+//!    ▲                                                             │
+//!    └───────────────── per-request reply channel ◄────────────────┘
+//! ```
+//!
+//! Backpressure: the router queue is bounded; `submit` fails fast with
+//! [`SubmitError::Overloaded`] when the system is saturated rather than
+//! queueing unboundedly (availability over latency collapse).
+
+mod server;
+
+pub use server::{Coordinator, CoordinatorStats};
+
+use crate::inference::Prediction;
+use crate::sparse::SparseVec;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Maximum queries per dispatched batch.
+    pub max_batch: usize,
+    /// Maximum time the batcher waits to fill a batch once it holds at
+    /// least one request.
+    pub max_batch_delay: Duration,
+    /// Number of inference worker threads.
+    pub workers: usize,
+    /// Beam width used for every query.
+    pub beam: usize,
+    /// Labels returned per query.
+    pub topk: usize,
+    /// Router queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_batch_delay: Duration::from_micros(500),
+            workers: 2,
+            beam: 10,
+            topk: 10,
+            queue_capacity: 4096,
+        }
+    }
+}
+
+/// A query submitted to the coordinator.
+#[derive(Debug)]
+pub(crate) struct Request {
+    pub id: u64,
+    pub query: SparseVec,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// A completed query.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Request id (as returned by `submit`).
+    pub id: u64,
+    /// Ranked predictions.
+    pub predictions: Vec<Prediction>,
+    /// Time spent queued before batch dispatch.
+    pub queue_time: Duration,
+    /// End-to-end latency (submit → reply send).
+    pub total_time: Duration,
+    /// Size of the batch this query rode in.
+    pub batch_size: usize,
+}
+
+/// Submission failure modes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded router queue is full — shed load.
+    Overloaded,
+    /// The coordinator has shut down.
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "coordinator overloaded (queue full)"),
+            SubmitError::Shutdown => write!(f, "coordinator is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}

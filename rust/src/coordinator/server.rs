@@ -1,0 +1,370 @@
+//! Coordinator implementation: router queue, dynamic batcher thread,
+//! inference worker pool.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::{CoordinatorConfig, Request, Response, SubmitError};
+use crate::inference::InferenceEngine;
+use crate::metrics::LatencyHistogram;
+use crate::sparse::{CsrMatrix, SparseVec};
+
+/// Aggregated serving statistics.
+#[derive(Debug, Default)]
+pub struct CoordinatorStats {
+    /// Completed requests.
+    pub completed: AtomicU64,
+    /// Requests shed due to a full queue.
+    pub shed: AtomicU64,
+    /// Dispatched batches.
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (mean batch = this / batches).
+    pub batched_queries: AtomicU64,
+    /// End-to-end latency histogram.
+    pub latency: LatencyHistogram,
+    /// Queue-wait histogram.
+    pub queue_wait: LatencyHistogram,
+}
+
+impl CoordinatorStats {
+    /// Mean batch size so far.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// A running serving system (see module docs for the topology).
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+struct Inner {
+    engine: Arc<InferenceEngine>,
+    config: CoordinatorConfig,
+    stats: CoordinatorStats,
+    queue: Mutex<mpsc::Sender<Request>>,
+    queue_len: AtomicU64,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Coordinator {
+    /// Starts the batcher and worker threads.
+    pub fn start(engine: Arc<InferenceEngine>, config: CoordinatorConfig) -> Self {
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let inner = Arc::new(Inner {
+            engine,
+            config: config.clone(),
+            stats: CoordinatorStats::default(),
+            queue: Mutex::new(req_tx),
+            queue_len: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+
+        let batcher = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("mscm-batcher".into())
+                .spawn(move || batcher_loop(&inner, req_rx, batch_tx))
+                .expect("spawn batcher")
+        };
+        let workers = (0..config.workers.max(1))
+            .map(|w| {
+                let inner = Arc::clone(&inner);
+                let rx = Arc::clone(&batch_rx);
+                std::thread::Builder::new()
+                    .name(format!("mscm-worker-{w}"))
+                    .spawn(move || worker_loop(&inner, &rx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            inner,
+            batcher: Some(batcher),
+            workers,
+        }
+    }
+
+    /// Submits a query; the reply arrives on the returned channel.
+    /// Fails fast when the router queue is at capacity (backpressure).
+    pub fn submit(&self, query: SparseVec) -> Result<(u64, mpsc::Receiver<Response>), SubmitError> {
+        if self.inner.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::Shutdown);
+        }
+        if self.inner.queue_len.load(Ordering::Relaxed) >= self.inner.config.queue_capacity as u64 {
+            self.inner.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id,
+            query,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        self.inner.queue_len.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .queue
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| SubmitError::Shutdown)?;
+        Ok((id, rx))
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn query_blocking(&self, query: SparseVec) -> Result<Response, SubmitError> {
+        let (_, rx) = self.submit(query)?;
+        rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    /// Serving statistics.
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.inner.stats
+    }
+
+    /// Stops accepting work, drains in-flight batches, joins all threads.
+    pub fn shutdown(mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        // Dropping the sender wakes the batcher's recv with Err.
+        {
+            let (dead_tx, _) = mpsc::channel();
+            *self.inner.queue.lock().unwrap() = dead_tx;
+        }
+        if let Some(b) = self.batcher.take() {
+            b.join().ok();
+        }
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+    }
+}
+
+/// Dynamic batching: block for the first request, then fill the batch
+/// until `max_batch` or `max_batch_delay` since the first arrival.
+fn batcher_loop(inner: &Inner, rx: mpsc::Receiver<Request>, tx: mpsc::Sender<Vec<Request>>) {
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped → shutdown
+        };
+        let deadline = Instant::now() + inner.config.max_batch_delay;
+        let mut batch = vec![first];
+        while batch.len() < inner.config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    dispatch(inner, &tx, batch);
+                    return;
+                }
+            }
+        }
+        dispatch(inner, &tx, batch);
+    }
+}
+
+fn dispatch(inner: &Inner, tx: &mpsc::Sender<Vec<Request>>, batch: Vec<Request>) {
+    inner.stats.batches.fetch_add(1, Ordering::Relaxed);
+    inner
+        .stats
+        .batched_queries
+        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    // If workers are gone (shutdown), drop the batch.
+    let _ = tx.send(batch);
+}
+
+/// Inference worker: pull a batch, run the engine, reply per request.
+fn worker_loop(inner: &Inner, rx: &Arc<Mutex<mpsc::Receiver<Vec<Request>>>>) {
+    let mut ws = inner.engine.workspace();
+    let dim = inner.engine.model().dim;
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return,
+            }
+        };
+        let n = batch.len();
+        let dispatch_time = Instant::now();
+        let rows: Vec<SparseVec> = batch.iter().map(|r| r.query.clone()).collect();
+        let x = CsrMatrix::from_rows(rows, dim);
+        let mut out: Vec<Vec<crate::inference::Prediction>> = vec![Vec::new(); n];
+        inner.engine.predict_range(
+            &x,
+            0,
+            n,
+            inner.config.beam,
+            inner.config.topk,
+            &mut ws,
+            &mut out,
+        );
+        for (req, preds) in batch.into_iter().zip(out) {
+            let queue_time = dispatch_time.duration_since(req.submitted);
+            let total_time = req.submitted.elapsed();
+            inner.stats.queue_wait.record(queue_time);
+            inner.stats.latency.record(total_time);
+            inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+            inner.queue_len.fetch_sub(1, Ordering::Relaxed);
+            // Receiver may have gone away (client timeout) — fine.
+            let _ = req.reply.send(Response {
+                id: req.id,
+                predictions: preds,
+                queue_time,
+                total_time,
+                batch_size: n,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::{EngineConfig, IterationMethod, MatmulAlgo};
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn test_engine() -> Arc<InferenceEngine> {
+        let model = crate::tree::test_util::tiny_model(32, 4, 3, 77);
+        Arc::new(InferenceEngine::new(
+            model,
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::Hash,
+            },
+        ))
+    }
+
+    fn rand_query(rng: &mut Rng) -> SparseVec {
+        SparseVec::from_pairs(
+            (0..rng.gen_range(1..12))
+                .map(|_| (rng.gen_range(0..32) as u32, rng.gen_f32(-1.0, 1.0)))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn every_request_gets_matching_reply() {
+        let engine = test_engine();
+        let coord = Coordinator::start(
+            Arc::clone(&engine),
+            CoordinatorConfig {
+                workers: 3,
+                max_batch: 8,
+                max_batch_delay: Duration::from_micros(200),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::seed_from_u64(1);
+        let mut pending = Vec::new();
+        let mut queries = Vec::new();
+        for _ in 0..200 {
+            let q = rand_query(&mut rng);
+            let (id, rx) = coord.submit(q.clone()).unwrap();
+            pending.push((id, rx));
+            queries.push(q);
+        }
+        for (i, (id, rx)) in pending.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).expect("reply");
+            assert_eq!(resp.id, id);
+            // result must equal a direct engine call (bitwise)
+            let direct = engine.predict(&queries[i], 10, 10);
+            assert_eq!(resp.predictions, direct);
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+        }
+        assert_eq!(coord.stats().completed.load(Ordering::Relaxed), 200);
+        assert!(coord.stats().mean_batch() >= 1.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_sheds_when_full() {
+        let engine = test_engine();
+        let coord = Coordinator::start(
+            engine,
+            CoordinatorConfig {
+                workers: 1,
+                max_batch: 4,
+                queue_capacity: 8,
+                // long delay so the queue backs up
+                max_batch_delay: Duration::from_millis(50),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::seed_from_u64(2);
+        let mut ok = 0;
+        let mut shed = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            match coord.submit(rand_query(&mut rng)) {
+                Ok((_, rx)) => {
+                    ok += 1;
+                    rxs.push(rx);
+                }
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert!(ok > 0);
+        assert!(shed > 0, "expected shedding with tiny queue");
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).expect("reply");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work() {
+        let engine = test_engine();
+        let coord = Coordinator::start(engine, CoordinatorConfig::default());
+        let mut rng = Rng::seed_from_u64(3);
+        coord.query_blocking(rand_query(&mut rng)).unwrap();
+        let stats_completed = coord.stats().completed.load(Ordering::Relaxed);
+        assert_eq!(stats_completed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let engine = test_engine();
+        let coord = Coordinator::start(
+            engine,
+            CoordinatorConfig {
+                workers: 1,
+                max_batch: 32,
+                max_batch_delay: Duration::from_millis(20),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::seed_from_u64(4);
+        let rxs: Vec<_> = (0..32)
+            .map(|_| coord.submit(rand_query(&mut rng)).unwrap().1)
+            .collect();
+        let mut max_batch = 0;
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            max_batch = max_batch.max(r.batch_size);
+        }
+        assert!(max_batch > 1, "no batching happened");
+        coord.shutdown();
+    }
+}

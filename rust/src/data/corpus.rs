@@ -1,0 +1,166 @@
+//! Topic-model corpus generator — the labeled-text substrate for the
+//! training pipeline (TFIDF → PIFA → clustering → ranker fitting).
+//!
+//! Documents are bags of token ids drawn from a mixture of their topics'
+//! token distributions and a background Zipf distribution; each document
+//! is labeled with the topics that generated it. Topics with nearby ids
+//! share tokens, so hierarchical clustering has real structure to find —
+//! this is the synthetic stand-in for the product-title corpora behind
+//! the paper's semantic search application.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Corpus generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    /// Vocabulary size (token universe).
+    pub vocab: usize,
+    /// Number of topics = number of labels.
+    pub topics: usize,
+    /// Number of documents.
+    pub docs: usize,
+    /// Mean tokens per document.
+    pub doc_len: usize,
+    /// Tokens private to each topic's core distribution.
+    pub tokens_per_topic: usize,
+    /// Probability a token comes from the topic (vs background noise).
+    pub topic_affinity: f64,
+    /// Labels per document (1..=this).
+    pub max_labels: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        Self {
+            vocab: 5_000,
+            topics: 64,
+            docs: 2_000,
+            doc_len: 40,
+            tokens_per_topic: 30,
+            topic_affinity: 0.7,
+            max_labels: 2,
+            seed: 42,
+        }
+    }
+}
+
+/// A generated corpus: token documents plus label sets.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    /// The generating spec.
+    pub spec: CorpusSpec,
+    /// Documents as token-id bags (with repetition).
+    pub docs: Vec<Vec<u32>>,
+    /// Label (topic) ids per document.
+    pub labels: Vec<Vec<u32>>,
+}
+
+impl Corpus {
+    /// Generates a corpus from `spec`.
+    pub fn generate(spec: CorpusSpec) -> Self {
+        let mut rng = Rng::seed_from_u64(spec.seed);
+        let background = Zipf::new(spec.vocab, 1.0);
+        // Topic token pools: contiguous-ish regions with overlap between
+        // neighbouring topics (so clustering finds a hierarchy).
+        let pools: Vec<Vec<u32>> = (0..spec.topics)
+            .map(|t| {
+                let stride = spec.vocab / (spec.topics + 1);
+                let base = t * stride;
+                let mut pool: Vec<u32> = (0..spec.tokens_per_topic)
+                    .map(|k| ((base + k * stride / spec.tokens_per_topic.max(1)) % spec.vocab) as u32)
+                    .collect();
+                // plus a few random tokens to avoid perfect separability
+                for _ in 0..spec.tokens_per_topic / 4 {
+                    pool.push(rng.gen_range(0..spec.vocab) as u32);
+                }
+                pool
+            })
+            .collect();
+        let mut docs = Vec::with_capacity(spec.docs);
+        let mut labels = Vec::with_capacity(spec.docs);
+        for _ in 0..spec.docs {
+            let nlabels = rng.gen_range(1..spec.max_labels + 1);
+            let mut doc_topics: Vec<u32> = Vec::with_capacity(nlabels);
+            // correlated labels: a primary topic plus neighbours
+            let primary = rng.gen_range(0..spec.topics);
+            doc_topics.push(primary as u32);
+            for _ in 1..nlabels {
+                let nb = (primary + rng.gen_range(0..3)).min(spec.topics - 1);
+                if !doc_topics.contains(&(nb as u32)) {
+                    doc_topics.push(nb as u32);
+                }
+            }
+            let len = rng.gen_range(spec.doc_len / 2..spec.doc_len * 3 / 2 + 1);
+            let mut doc = Vec::with_capacity(len);
+            for _ in 0..len {
+                if rng.gen_bool(spec.topic_affinity) {
+                    let t = doc_topics[rng.gen_range(0..doc_topics.len())] as usize;
+                    doc.push(pools[t][rng.gen_range(0..pools[t].len())]);
+                } else {
+                    doc.push(background.sample(&mut rng) as u32);
+                }
+            }
+            docs.push(doc);
+            labels.push(doc_topics);
+        }
+        Self { spec, docs, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shape() {
+        let c = Corpus::generate(CorpusSpec {
+            docs: 100,
+            ..Default::default()
+        });
+        assert_eq!(c.docs.len(), 100);
+        assert_eq!(c.labels.len(), 100);
+        assert!(c.docs.iter().all(|d| !d.is_empty()));
+        assert!(c.labels.iter().all(|l| !l.is_empty()));
+        assert!(c
+            .docs
+            .iter()
+            .flatten()
+            .all(|&t| (t as usize) < c.spec.vocab));
+    }
+
+    #[test]
+    fn same_topic_docs_share_tokens() {
+        let c = Corpus::generate(CorpusSpec {
+            docs: 400,
+            topics: 8,
+            max_labels: 1,
+            seed: 7,
+            ..Default::default()
+        });
+        // average token overlap within topic vs across topics
+        let doc_set = |i: usize| -> std::collections::HashSet<u32> {
+            c.docs[i].iter().copied().collect()
+        };
+        let mut within = 0.0;
+        let mut across = 0.0;
+        let mut wn = 0;
+        let mut an = 0;
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let inter = doc_set(i).intersection(&doc_set(j)).count() as f64;
+                if c.labels[i][0] == c.labels[j][0] {
+                    within += inter;
+                    wn += 1;
+                } else {
+                    across += inter;
+                    an += 1;
+                }
+            }
+        }
+        if wn > 0 && an > 0 {
+            assert!(within / wn as f64 > across / an as f64 * 1.5);
+        }
+    }
+}

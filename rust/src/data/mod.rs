@@ -1,0 +1,31 @@
+//! Dataset substrate.
+//!
+//! The paper benchmarks on six public XMC datasets (Table 5) and one
+//! proprietary 100M-product semantic search model (§6). Neither is
+//! shippable here (multi-GB downloads / proprietary), so this module
+//! provides:
+//!
+//! - [`svmlight`] — a loader/saver for the extreme-classification
+//!   repository's SVMLight-like format, so the real datasets drop in when
+//!   available;
+//! - [`synthetic`] — generators that synthesize models and query streams
+//!   with the *structural statistics* that drive MSCM performance
+//!   (feature dimension, label count, per-query/per-column nnz, power-law
+//!   feature popularity, sibling support overlap) for each of the six
+//!   benchmarks, scaled to fit this machine;
+//! - [`enterprise`] — the §6 enterprise-scale model synthesizer;
+//! - [`corpus`] — a topic-model corpus generator that exercises the full
+//!   training pipeline (TFIDF → PIFA → clustering → rankers).
+//!
+//! DESIGN.md §5 documents why these substitutions preserve the paper's
+//! measured behaviour.
+
+pub mod corpus;
+pub mod enterprise;
+pub mod svmlight;
+pub mod synthetic;
+
+pub use corpus::{Corpus, CorpusSpec};
+pub use enterprise::EnterpriseSpec;
+pub use svmlight::{load_svmlight, save_svmlight, SvmlightData};
+pub use synthetic::{paper_suite, DatasetSpec, SyntheticDataset};

@@ -1,0 +1,187 @@
+//! Loader/saver for the extreme-classification repository's SVMLight-like
+//! multi-label format (the format of the paper's six public datasets):
+//!
+//! ```text
+//! <num_points> <num_features> <num_labels>      # optional header
+//! l1,l2,...  f1:v1 f2:v2 ...
+//! ```
+//!
+//! With this, the real eurlex/amazoncat/wiki/amazon datasets drop
+//! straight into the benchmark harness when available.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::sparse::{CsrMatrix, SparseVec};
+
+/// A loaded multi-label dataset: features plus per-row label sets.
+#[derive(Clone, Debug)]
+pub struct SvmlightData {
+    /// Feature matrix, one row per data point.
+    pub features: CsrMatrix,
+    /// Labels per data point.
+    pub labels: Vec<Vec<u32>>,
+    /// Total number of distinct labels (from header or max seen + 1).
+    pub num_labels: usize,
+}
+
+/// Loads a dataset. A leading `n d L` header line is honoured if present;
+/// otherwise dimensions are inferred.
+pub fn load_svmlight(path: impl AsRef<Path>) -> std::io::Result<SvmlightData> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let mut rows: Vec<SparseVec> = Vec::new();
+    let mut labels: Vec<Vec<u32>> = Vec::new();
+    let mut dim = 0usize;
+    let mut num_labels = 0usize;
+    let mut header_dim: Option<(usize, usize)> = None;
+
+    let mut first = true;
+    while let Some(line) = lines.next() {
+        let line = line?;
+        let line = line.trim();
+        if line.starts_with('#') {
+            continue;
+        }
+        // A blank line is a data point with no labels and no features
+        // (that is how `save_svmlight` serializes an empty row).
+        if line.is_empty() {
+            if !first {
+                rows.push(SparseVec::new());
+                labels.push(Vec::new());
+            }
+            continue;
+        }
+        // Header: exactly three integer tokens, no ':' or ','.
+        if first {
+            first = false;
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.len() == 3 && !line.contains(':') && !line.contains(',') {
+                if let (Ok(_n), Ok(d), Ok(l)) = (
+                    toks[0].parse::<usize>(),
+                    toks[1].parse::<usize>(),
+                    toks[2].parse::<usize>(),
+                ) {
+                    header_dim = Some((d, l));
+                    continue;
+                }
+            }
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().unwrap_or("");
+        let mut row_labels = Vec::new();
+        // A first token without ':' is the label list; with ':' the row
+        // has no labels and the token is a feature.
+        let mut pending_feature: Option<&str> = None;
+        if label_tok.contains(':') {
+            pending_feature = Some(label_tok);
+        } else if !label_tok.is_empty() {
+            for l in label_tok.split(',') {
+                if let Ok(v) = l.parse::<u32>() {
+                    num_labels = num_labels.max(v as usize + 1);
+                    row_labels.push(v);
+                }
+            }
+        }
+        let mut pairs: Vec<(u32, f32)> = Vec::new();
+        let push_feat = |tok: &str, dim: &mut usize, pairs: &mut Vec<(u32, f32)>| {
+            if let Some((i, v)) = tok.split_once(':') {
+                if let (Ok(i), Ok(v)) = (i.parse::<u32>(), v.parse::<f32>()) {
+                    *dim = (*dim).max(i as usize + 1);
+                    pairs.push((i, v));
+                }
+            }
+        };
+        if let Some(tok) = pending_feature {
+            push_feat(tok, &mut dim, &mut pairs);
+        }
+        for tok in parts {
+            push_feat(tok, &mut dim, &mut pairs);
+        }
+        rows.push(SparseVec::from_pairs(pairs));
+        labels.push(row_labels);
+    }
+    if let Some((d, l)) = header_dim {
+        dim = dim.max(d);
+        num_labels = num_labels.max(l);
+    }
+    Ok(SvmlightData {
+        features: CsrMatrix::from_rows(rows, dim),
+        labels,
+        num_labels,
+    })
+}
+
+/// Saves a dataset with header.
+pub fn save_svmlight(data: &SvmlightData, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(
+        w,
+        "{} {} {}",
+        data.features.rows, data.features.cols, data.num_labels
+    )?;
+    for i in 0..data.features.rows {
+        let lbls: Vec<String> = data.labels[i].iter().map(|l| l.to_string()).collect();
+        write!(w, "{}", lbls.join(","))?;
+        let row = data.features.row(i);
+        for (&f, &v) in row.indices.iter().zip(row.values) {
+            write!(w, " {f}:{v}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let data = SvmlightData {
+            features: CsrMatrix::from_rows(
+                vec![
+                    SparseVec::from_pairs(vec![(0, 1.5), (7, -2.0)]),
+                    SparseVec::from_pairs(vec![(3, 0.25)]),
+                    SparseVec::new(),
+                ],
+                10,
+            ),
+            labels: vec![vec![1, 4], vec![0], vec![]],
+            num_labels: 5,
+        };
+        let dir = crate::util::temp_dir("svmlight");
+        let path = dir.join("data.txt");
+        save_svmlight(&data, &path).unwrap();
+        let loaded = load_svmlight(&path).unwrap();
+        assert_eq!(loaded.features, data.features);
+        assert_eq!(loaded.labels, data.labels);
+        assert_eq!(loaded.num_labels, 5);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn parses_headerless_and_comments() {
+        let dir = crate::util::temp_dir("svmlight");
+        let path = dir.join("raw.txt");
+        std::fs::write(&path, "# comment\n2,3 1:0.5 4:1.0\n0 2:2.0\n").unwrap();
+        let d = load_svmlight(&path).unwrap();
+        assert_eq!(d.features.rows, 2);
+        assert_eq!(d.features.cols, 5);
+        assert_eq!(d.labels[0], vec![2, 3]);
+        assert_eq!(d.num_labels, 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn parses_unlabeled_rows() {
+        let dir = crate::util::temp_dir("svmlight");
+        let path = dir.join("u.txt");
+        std::fs::write(&path, "1:1.0 2:2.0\n").unwrap();
+        let d = load_svmlight(&path).unwrap();
+        assert_eq!(d.features.rows, 1);
+        assert_eq!(d.features.row(0).indices, &[1, 2]);
+        assert!(d.labels[0].is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

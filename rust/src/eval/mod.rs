@@ -1,0 +1,180 @@
+//! Ranking-quality evaluation — the standard XMC metrics (precision@k,
+//! recall@k, nDCG@k) used by the extreme-classification literature the
+//! paper builds on. MSCM itself is accuracy-neutral (exactness claim),
+//! so these metrics are how a deployment verifies that a *model* (or a
+//! beam-width choice) is good, and how the beam-width/accuracy trade-off
+//! of Alg. 1 is quantified.
+
+use crate::inference::Prediction;
+
+/// Accumulates ranking metrics over a test set.
+#[derive(Clone, Debug, Default)]
+pub struct RankingMetrics {
+    /// Number of evaluated queries.
+    pub queries: usize,
+    /// Σ precision@k numerators per k (index 0 = @1).
+    hits_at: Vec<f64>,
+    /// Σ recall@k per k.
+    recall_at: Vec<f64>,
+    /// Σ nDCG@k per k.
+    ndcg_at: Vec<f64>,
+    /// Largest k tracked.
+    pub max_k: usize,
+}
+
+impl RankingMetrics {
+    /// Tracks metrics up to `max_k`.
+    pub fn new(max_k: usize) -> Self {
+        Self {
+            queries: 0,
+            hits_at: vec![0.0; max_k],
+            recall_at: vec![0.0; max_k],
+            ndcg_at: vec![0.0; max_k],
+            max_k,
+        }
+    }
+
+    /// Adds one query's ranked predictions against its true label set.
+    /// `label_of` maps a predicted bottom-layer column to the original
+    /// label id (identity for synthetic models, `TrainedModel::
+    /// label_perm` for trained ones).
+    pub fn add(&mut self, preds: &[Prediction], truth: &[u32], label_of: impl Fn(u32) -> u32) {
+        if truth.is_empty() {
+            return;
+        }
+        self.queries += 1;
+        let mut hits = 0usize;
+        let mut dcg = 0.0f64;
+        // ideal DCG@k for |truth| relevant items
+        let mut idcg = vec![0.0f64; self.max_k];
+        let mut acc = 0.0;
+        for i in 0..self.max_k {
+            if i < truth.len() {
+                acc += 1.0 / ((i + 2) as f64).log2();
+            }
+            idcg[i] = acc;
+        }
+        for k in 0..self.max_k {
+            if let Some(p) = preds.get(k) {
+                if truth.contains(&label_of(p.label)) {
+                    hits += 1;
+                    dcg += 1.0 / ((k + 2) as f64).log2();
+                }
+            }
+            self.hits_at[k] += hits as f64 / (k + 1) as f64;
+            self.recall_at[k] += hits as f64 / truth.len() as f64;
+            self.ndcg_at[k] += if idcg[k] > 0.0 { dcg / idcg[k] } else { 0.0 };
+        }
+    }
+
+    /// Precision@k (1-based k).
+    pub fn precision_at(&self, k: usize) -> f64 {
+        self.avg(&self.hits_at, k)
+    }
+
+    /// Recall@k (1-based k).
+    pub fn recall_at(&self, k: usize) -> f64 {
+        self.avg(&self.recall_at, k)
+    }
+
+    /// nDCG@k (1-based k).
+    pub fn ndcg_at(&self, k: usize) -> f64 {
+        self.avg(&self.ndcg_at, k)
+    }
+
+    fn avg(&self, v: &[f64], k: usize) -> f64 {
+        assert!((1..=self.max_k).contains(&k), "k out of range");
+        if self.queries == 0 {
+            0.0
+        } else {
+            v[k - 1] / self.queries as f64
+        }
+    }
+
+    /// One-line summary (`P@1/3/5` style, as XMC papers report).
+    pub fn summary(&self) -> String {
+        let ks: Vec<usize> = [1usize, 3, 5]
+            .into_iter()
+            .filter(|&k| k <= self.max_k)
+            .collect();
+        let fmt = |f: &dyn Fn(usize) -> f64| {
+            ks.iter()
+                .map(|&k| format!("{:.4}", f(k)))
+                .collect::<Vec<_>>()
+                .join("/")
+        };
+        format!(
+            "n={} P@{}={} R@{}={} nDCG@{}={}",
+            self.queries,
+            ks.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("/"),
+            fmt(&|k| self.precision_at(k)),
+            ks.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("/"),
+            fmt(&|k| self.recall_at(k)),
+            ks.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("/"),
+            fmt(&|k| self.ndcg_at(k)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn preds(labels: &[u32]) -> Vec<Prediction> {
+        labels
+            .iter()
+            .enumerate()
+            .map(|(i, &label)| Prediction {
+                label,
+                score: 1.0 - i as f32 * 0.1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn perfect_ranking() {
+        let mut m = RankingMetrics::new(5);
+        m.add(&preds(&[7, 8, 9]), &[7, 8, 9], |l| l);
+        assert_eq!(m.precision_at(1), 1.0);
+        assert_eq!(m.precision_at(3), 1.0);
+        assert!((m.precision_at(5) - 3.0 / 5.0).abs() < 1e-12);
+        assert_eq!(m.recall_at(3), 1.0);
+        assert_eq!(m.ndcg_at(3), 1.0);
+    }
+
+    #[test]
+    fn miss_at_one_hit_at_two() {
+        let mut m = RankingMetrics::new(3);
+        m.add(&preds(&[5, 7]), &[7], |l| l);
+        assert_eq!(m.precision_at(1), 0.0);
+        assert_eq!(m.precision_at(2), 0.5);
+        assert_eq!(m.recall_at(2), 1.0);
+        // dcg = 1/log2(3), idcg = 1/log2(2) = 1
+        assert!((m.ndcg_at(2) - 1.0 / 3f64.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_mapping_applied() {
+        let mut m = RankingMetrics::new(1);
+        // predicted column 0 maps to original label 42
+        m.add(&preds(&[0]), &[42], |_| 42);
+        assert_eq!(m.precision_at(1), 1.0);
+    }
+
+    #[test]
+    fn averages_over_queries() {
+        let mut m = RankingMetrics::new(1);
+        m.add(&preds(&[1]), &[1], |l| l);
+        m.add(&preds(&[2]), &[3], |l| l);
+        assert_eq!(m.precision_at(1), 0.5);
+        assert_eq!(m.queries, 2);
+    }
+
+    #[test]
+    fn empty_truth_skipped() {
+        let mut m = RankingMetrics::new(3);
+        m.add(&preds(&[1]), &[], |l| l);
+        assert_eq!(m.queries, 0);
+        assert_eq!(m.precision_at(3), 0.0);
+    }
+}

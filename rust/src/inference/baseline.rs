@@ -1,0 +1,177 @@
+//! Vanilla per-column evaluation of the masked product — the baseline the
+//! paper measures MSCM against (§4 intro, Alg. 4).
+//!
+//! For every mask nonzero `(i, j)` the activation is an independent sparse
+//! dot product `A_ij = x_i · w_j`, under the same four iteration methods
+//! as MSCM: marching pointers / binary search (Alg. 4) walk the two sorted
+//! supports, hash keeps a **per-column** row→position map (NapkinXC's
+//! scheme), and dense lookup scatters the *query* into an `O(d)` dense
+//! array once per query (Parabel/Bonsai's scheme).
+
+use super::engine::Workspace;
+use super::{sigmoid, IterationMethod};
+use crate::sparse::{CscMatrix, CsrMatrix, SparseVecView, U32Map};
+use crate::tree::Layer;
+
+/// Builds the per-column row→position hash maps for one layer's CSC weight
+/// matrix (the baseline hash method's side index; its `O(c · nnz)` memory
+/// is what chunking amortizes).
+pub(crate) fn build_col_hash(csc: &CscMatrix) -> Vec<U32Map> {
+    (0..csc.cols)
+        .map(|j| {
+            let col = csc.col(j);
+            U32Map::from_pairs(
+                col.indices
+                    .iter()
+                    .enumerate()
+                    .map(|(p, &r)| (r, p as u32))
+                    .collect::<Vec<_>>()
+                    .into_iter(),
+            )
+        })
+        .collect()
+}
+
+/// Dot product via a per-column hash map: iterate the query support,
+/// look each feature up in the column's map.
+#[inline]
+fn dot_hash(x: SparseVecView<'_>, col: SparseVecView<'_>, map: &U32Map) -> f32 {
+    let mut z = 0.0f32;
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        if let Some(pos) = map.get(i) {
+            z += xv * col.values[pos as usize];
+        }
+    }
+    z
+}
+
+/// Dot product against a densely-scattered query: iterate the column
+/// support, read the query from the dense array.
+#[inline]
+fn dot_dense(col: SparseVecView<'_>, dense_x: &[f32]) -> f32 {
+    let mut z = 0.0f32;
+    for (&r, &wv) in col.indices.iter().zip(col.values) {
+        z += dense_x[r as usize] * wv;
+    }
+    z
+}
+
+/// Computes all layer candidates `(child node, path score)` for local
+/// queries `0..n` (rows `qlo..qlo+n` of `x`), appending into `ws.cands`.
+pub(crate) fn baseline_layer(
+    layer: &Layer,
+    x: &CsrMatrix,
+    qlo: usize,
+    n: usize,
+    iter: IterationMethod,
+    col_hash: Option<&Vec<U32Map>>,
+    ws: &mut Workspace,
+) {
+    let csc = &layer.csc;
+    let chunked = &layer.chunked; // only for the children ranges (tree topology)
+    for q in 0..n {
+        let xq = x.row(qlo + q);
+        // Baseline dense lookup: scatter the query once per query
+        // (amortized over every masked column it touches), clear after.
+        if iter == IterationMethod::DenseLookup {
+            let dense_x = ws.dense_x.as_mut().expect("dense query scatter");
+            for (&i, &v) in xq.indices.iter().zip(xq.values) {
+                dense_x[i as usize] = v;
+            }
+        }
+        let beam = std::mem::take(&mut ws.beams[q]);
+        let cands = &mut ws.cands[q];
+        for &(p, ps) in &beam {
+            let start = chunked.chunk_start(p as usize);
+            let width = chunked.chunk_width(p as usize);
+            for j in start..start + width {
+                let col = csc.col(j);
+                let a = match iter {
+                    IterationMethod::MarchingPointers => xq.dot_marching(col),
+                    IterationMethod::BinarySearch => xq.dot_binary_search(col),
+                    IterationMethod::Hash => {
+                        dot_hash(xq, col, &col_hash.expect("per-column hash index")[j])
+                    }
+                    IterationMethod::DenseLookup => {
+                        dot_dense(col, ws.dense_x.as_ref().unwrap())
+                    }
+                };
+                cands.push((j as u32, ps * sigmoid(a)));
+            }
+        }
+        ws.beams[q] = beam;
+        if iter == IterationMethod::DenseLookup {
+            let dense_x = ws.dense_x.as_mut().unwrap();
+            for &i in xq.indices {
+                dense_x[i as usize] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{EngineConfig, Workspace};
+    use super::super::MatmulAlgo;
+    use super::*;
+    use crate::sparse::SparseVec;
+    use crate::tree::{Layer, XmrModel};
+
+    fn layer() -> Layer {
+        Layer::new(
+            CscMatrix::from_cols(
+                vec![
+                    SparseVec::from_pairs(vec![(0, 1.0), (2, 2.0)]),
+                    SparseVec::from_pairs(vec![(0, -1.0)]),
+                    SparseVec::from_pairs(vec![(1, 3.0)]),
+                    SparseVec::from_pairs(vec![(1, 0.5), (3, 0.5)]),
+                ],
+                4,
+            ),
+            &[0, 2, 4],
+            false,
+        )
+    }
+
+    #[test]
+    fn col_hash_resolves_every_entry() {
+        let l = layer();
+        let maps = build_col_hash(&l.csc);
+        for j in 0..l.csc.cols {
+            let col = l.csc.col(j);
+            for (p, &r) in col.indices.iter().enumerate() {
+                assert_eq!(maps[j].get(r), Some(p as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn all_baseline_iterators_agree() {
+        let l = layer();
+        let model = XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], false)]);
+        let x = CsrMatrix::from_rows(
+            vec![SparseVec::from_pairs(vec![(0, 2.0), (1, -1.0), (3, 4.0)])],
+            4,
+        );
+        let beams = vec![vec![(0u32, 1.0f32), (1u32, 0.5f32)]];
+        let maps = build_col_hash(&l.csc);
+        let mut results = Vec::new();
+        for iter in IterationMethod::ALL {
+            let mut ws = Workspace::new(
+                &model,
+                EngineConfig {
+                    algo: MatmulAlgo::Baseline,
+                    iter,
+                },
+            );
+            ws.cands.resize_with(1, Vec::new);
+            ws.beams = beams.clone();
+            baseline_layer(&l, &x, 0, 1, iter, Some(&maps), &mut ws);
+            results.push(ws.cands[0].clone());
+        }
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+        assert_eq!(results[0].len(), 4);
+    }
+}

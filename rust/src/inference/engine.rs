@@ -1,0 +1,436 @@
+//! The beam-search inference engine (paper Algorithm 1).
+
+use std::sync::Arc;
+
+use super::baseline::{baseline_layer, build_col_hash};
+use super::mscm::mscm_layer;
+use super::{IterationMethod, MatmulAlgo};
+use crate::sparse::iterators::DenseScratch;
+use crate::sparse::{CsrMatrix, SparseVec, U32Map};
+use crate::tree::XmrModel;
+
+/// One retrieved label.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    /// Label id (column of the bottom layer).
+    pub label: u32,
+    /// Path score `Π σ(w·x)` (eq. 5).
+    pub score: f32,
+}
+
+/// Engine configuration: which masked-matmul algorithm and which support
+/// iteration method evaluate eq. 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EngineConfig {
+    /// Baseline (per column) or MSCM (per chunk).
+    pub algo: MatmulAlgo,
+    /// Support-intersection iteration method.
+    pub iter: IterationMethod,
+}
+
+impl EngineConfig {
+    /// All eight `(algo, iter)` combinations, baseline first.
+    pub fn all() -> Vec<EngineConfig> {
+        let mut v = Vec::new();
+        for algo in MatmulAlgo::ALL {
+            for iter in IterationMethod::ALL {
+                v.push(EngineConfig { algo, iter });
+            }
+        }
+        v
+    }
+
+    /// Table-row label, e.g. `"Binary Search MSCM"`.
+    pub fn label(&self) -> String {
+        format!("{}{}", self.iter.label(), self.algo.label())
+    }
+}
+
+/// Per-thread scratch. Buffers are sized for the model once and recycled
+/// across queries/batches so the hot path never allocates.
+pub struct Workspace {
+    /// `O(d)` chunk-row position scratch (MSCM dense lookup).
+    pub(crate) dense_pos: Option<DenseScratch>,
+    /// Chunk currently loaded into `dense_pos`.
+    pub(crate) loaded_chunk: Option<u32>,
+    /// `O(d)` query scatter (baseline dense lookup, Parabel/Bonsai style).
+    pub(crate) dense_x: Option<Vec<f32>>,
+    /// Dense output for one vector×chunk product (max sibling width).
+    pub(crate) out_block: Vec<f32>,
+    /// `(chunk, local query, parent score)` blocks of Alg. 3.
+    pub(crate) blocks: Vec<(u32, u32, f32)>,
+    /// Per-query candidate `(node, score)` buffers.
+    pub(crate) cands: Vec<Vec<(u32, f32)>>,
+    /// Per-query beams `(node, score)`, node ids ascending.
+    pub(crate) beams: Vec<Vec<(u32, f32)>>,
+}
+
+impl Workspace {
+    /// Allocates scratch for `model` under `config`. Only the structures
+    /// the configuration needs are allocated (this is what Table 6's
+    /// "extra memory overhead" column measures).
+    pub fn new(model: &XmrModel, config: EngineConfig) -> Self {
+        let max_b = model.stats().max_branching;
+        let dense_pos = (config.algo == MatmulAlgo::Mscm
+            && config.iter == IterationMethod::DenseLookup)
+            .then(|| DenseScratch::new(model.dim));
+        let dense_x = (config.algo == MatmulAlgo::Baseline
+            && config.iter == IterationMethod::DenseLookup)
+            .then(|| vec![0.0f32; model.dim]);
+        Self {
+            dense_pos,
+            loaded_chunk: None,
+            dense_x,
+            out_block: vec![0.0; max_b],
+            blocks: Vec::new(),
+            cands: Vec::new(),
+            beams: Vec::new(),
+        }
+    }
+
+    /// Approximate resident bytes of the scratch.
+    pub fn memory_bytes(&self) -> usize {
+        self.dense_pos.as_ref().map_or(0, |d| d.memory_bytes())
+            + self.dense_x.as_ref().map_or(0, |d| d.len() * 4)
+            + self.out_block.len() * 4
+    }
+
+    fn reset_for_batch(&mut self, n: usize) {
+        if self.cands.len() < n {
+            self.cands.resize_with(n, Vec::new);
+            self.beams.resize_with(n, Vec::new);
+        }
+        for q in 0..n {
+            self.cands[q].clear();
+            // Every query starts at the implicit root with score 1
+            // (Alg. 1 line 3); the root's children are chunk 0 of layer 0.
+            self.beams[q].clear();
+            self.beams[q].push((0u32, 1.0f32));
+        }
+    }
+}
+
+/// The inference engine: a model plus an eq.-6 evaluation strategy.
+///
+/// Engines are cheap to share (`Arc<XmrModel>` inside) and `Sync`; batch
+/// inference can be run on many threads via
+/// [`InferenceEngine::predict_batch_parallel`].
+pub struct InferenceEngine {
+    model: Arc<XmrModel>,
+    config: EngineConfig,
+    /// Per-layer, per-column row→position maps (baseline hash method —
+    /// NapkinXC's per-column scheme whose memory MSCM amortizes).
+    pub(crate) col_hash: Option<Vec<Vec<U32Map>>>,
+}
+
+impl InferenceEngine {
+    /// Builds an engine, constructing whatever side indices the
+    /// configuration needs (chunk row maps for MSCM hash, per-column maps
+    /// for baseline hash).
+    pub fn new(mut model: XmrModel, config: EngineConfig) -> Self {
+        if config.algo == MatmulAlgo::Mscm && config.iter == IterationMethod::Hash {
+            let missing = model
+                .layers
+                .iter()
+                .any(|l| l.chunked.chunks.iter().any(|c| c.row_map.is_none()));
+            if missing {
+                model.build_row_maps();
+            }
+        }
+        Self::from_arc(Arc::new(model), config)
+    }
+
+    /// Builds an engine around a shared model. The model must already have
+    /// chunk row maps when `config` is MSCM+Hash.
+    pub fn from_arc(model: Arc<XmrModel>, config: EngineConfig) -> Self {
+        if config.algo == MatmulAlgo::Mscm && config.iter == IterationMethod::Hash {
+            assert!(
+                model
+                    .layers
+                    .iter()
+                    .all(|l| l.chunked.chunks.iter().all(|c| c.row_map.is_some())),
+                "MSCM hash engine requires chunk row maps (XmrModel::build_row_maps)"
+            );
+        }
+        let col_hash = (config.algo == MatmulAlgo::Baseline
+            && config.iter == IterationMethod::Hash)
+            .then(|| model.layers.iter().map(|l| build_col_hash(&l.csc)).collect());
+        Self {
+            model,
+            config,
+            col_hash,
+        }
+    }
+
+    /// The underlying model.
+    pub fn model(&self) -> &Arc<XmrModel> {
+        &self.model
+    }
+
+    /// This engine's configuration.
+    pub fn config(&self) -> EngineConfig {
+        self.config
+    }
+
+    /// Bytes of side-index overhead beyond the model itself (Table 6's
+    /// "extra memory" column: per-column hash maps for baseline hash).
+    pub fn side_index_bytes(&self) -> usize {
+        self.col_hash.as_ref().map_or(0, |layers| {
+            layers
+                .iter()
+                .flat_map(|maps| maps.iter().map(|m| m.memory_bytes()))
+                .sum()
+        })
+    }
+
+    /// A workspace sized for this engine.
+    pub fn workspace(&self) -> Workspace {
+        Workspace::new(&self.model, self.config)
+    }
+
+    /// Online inference (paper's batch-size-1 setting): top `topk` labels
+    /// for one query under beam width `beam`.
+    pub fn predict(&self, x: &SparseVec, beam: usize, topk: usize) -> Vec<Prediction> {
+        let mut ws = self.workspace();
+        self.predict_with(x, beam, topk, &mut ws)
+    }
+
+    /// Online inference with a caller-provided workspace (alloc-free hot
+    /// path for serving).
+    pub fn predict_with(
+        &self,
+        x: &SparseVec,
+        beam: usize,
+        topk: usize,
+        ws: &mut Workspace,
+    ) -> Vec<Prediction> {
+        let xm = CsrMatrix::from_single_row(x, self.model.dim);
+        let mut out = vec![Vec::new()];
+        self.predict_range(&xm, 0, 1, beam, topk, ws, &mut out);
+        out.pop().unwrap()
+    }
+
+    /// Batch inference: top `topk` labels per row of `x`.
+    pub fn predict_batch(&self, x: &CsrMatrix, beam: usize, topk: usize) -> Vec<Vec<Prediction>> {
+        let mut ws = self.workspace();
+        let mut out = vec![Vec::new(); x.rows];
+        self.predict_range(x, 0, x.rows, beam, topk, &mut ws, &mut out);
+        out
+    }
+
+    /// Batch inference over rows `qlo..qhi` of `x`, writing into
+    /// `out[0..qhi-qlo]`. This is the unit that
+    /// [`InferenceEngine::predict_batch_parallel`] distributes.
+    pub fn predict_range(
+        &self,
+        x: &CsrMatrix,
+        qlo: usize,
+        qhi: usize,
+        beam: usize,
+        topk: usize,
+        ws: &mut Workspace,
+        out: &mut [Vec<Prediction>],
+    ) {
+        assert!(beam >= 1, "beam width must be >= 1");
+        assert!(x.cols == self.model.dim, "query dim mismatch");
+        let n = qhi - qlo;
+        assert!(out.len() >= n);
+        ws.reset_for_batch(n);
+        let depth = self.model.layers.len();
+        for li in 0..depth {
+            let layer = &self.model.layers[li];
+            for q in 0..n {
+                ws.cands[q].clear();
+            }
+            match self.config.algo {
+                MatmulAlgo::Mscm => {
+                    mscm_layer(layer, x, qlo, n, self.config.iter, ws);
+                }
+                MatmulAlgo::Baseline => {
+                    let col_hash = self.col_hash.as_ref().map(|c| &c[li]);
+                    baseline_layer(layer, x, qlo, n, self.config.iter, col_hash, ws);
+                }
+            }
+            // Beam step (Alg. 1 line 9): keep the top-b children per query.
+            for q in 0..n {
+                let (cands, beams) = (&mut ws.cands[q], &mut ws.beams[q]);
+                select_top(cands, beam, beams);
+            }
+        }
+        // Gather final predictions: top-k of the bottom beam.
+        for q in 0..n {
+            let beamed = &mut ws.beams[q];
+            beamed.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            beamed.truncate(topk);
+            out[q].clear();
+            out[q].extend(
+                beamed
+                    .iter()
+                    .map(|&(label, score)| Prediction { label, score }),
+            );
+        }
+    }
+}
+
+/// Selects the `b` highest-scoring candidates (ties broken by ascending
+/// node id for determinism) into `beam`, sorted by ascending node id.
+fn select_top(cands: &mut Vec<(u32, f32)>, b: usize, beam: &mut Vec<(u32, f32)>) {
+    let cmp = |a: &(u32, f32), b: &(u32, f32)| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0));
+    if cands.len() > b {
+        cands.select_nth_unstable_by(b - 1, cmp);
+        cands.truncate(b);
+    }
+    beam.clear();
+    beam.extend_from_slice(cands);
+    // Ascending node order keeps downstream chunk access monotonic and the
+    // result deterministic regardless of selection internals.
+    beam.sort_unstable_by_key(|e| e.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::sigmoid;
+    use crate::tree::XmrModel;
+
+    /// Brute-force reference: score every label by walking its full path
+    /// with exhaustive (un-beamed) search at beam = L (so beam search is
+    /// exact), using plain dense dot products.
+    fn exhaustive_scores(model: &XmrModel, x: &SparseVec) -> Vec<f32> {
+        let mut parent_scores = vec![1.0f32];
+        for layer in &model.layers {
+            let mut scores = vec![0.0f32; layer.num_nodes()];
+            for p in 0..layer.chunked.num_chunks() {
+                for j in layer.children_of(p) {
+                    let a = x.view().dot_marching(layer.csc.col(j));
+                    scores[j] = parent_scores[p] * sigmoid(a);
+                }
+            }
+            parent_scores = scores;
+        }
+        parent_scores
+    }
+
+    use crate::sparse::SparseVec;
+    use crate::tree::Layer;
+
+    fn model() -> XmrModel {
+        crate::tree::XmrModel::new(
+            8,
+            vec![
+                Layer::new(
+                    crate::sparse::CscMatrix::from_cols(
+                        vec![
+                            SparseVec::from_pairs(vec![(0, 1.0), (2, -0.5)]),
+                            SparseVec::from_pairs(vec![(1, 0.7), (3, 0.2)]),
+                        ],
+                        8,
+                    ),
+                    &[0, 2],
+                    true,
+                ),
+                Layer::new(
+                    crate::sparse::CscMatrix::from_cols(
+                        vec![
+                            SparseVec::from_pairs(vec![(0, 0.3)]),
+                            SparseVec::from_pairs(vec![(2, -0.2), (4, 0.9)]),
+                            SparseVec::from_pairs(vec![(1, 0.5), (5, 0.5)]),
+                            SparseVec::from_pairs(vec![(6, -1.0)]),
+                        ],
+                        8,
+                    ),
+                    &[0, 2, 4],
+                    true,
+                ),
+            ],
+        )
+    }
+
+    #[test]
+    fn full_beam_matches_exhaustive() {
+        let m = model();
+        let x = SparseVec::from_pairs(vec![(0, 1.0), (1, 0.5), (2, 2.0), (4, 1.0)]);
+        let expect = exhaustive_scores(&m, &x);
+        for cfg in EngineConfig::all() {
+            let engine = InferenceEngine::new(m.clone(), cfg);
+            // beam = 4 >= L1 so the search is exact
+            let preds = engine.predict(&x, 4, 4);
+            assert_eq!(preds.len(), 4, "{}", cfg.label());
+            for p in &preds {
+                assert_eq!(p.score, expect[p.label as usize], "{}", cfg.label());
+            }
+            // ranking is descending
+            for w in preds.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+        }
+    }
+
+    #[test]
+    fn all_configs_bitwise_identical() {
+        let m = model();
+        let x = SparseVec::from_pairs(vec![(1, 0.4), (3, -1.0), (5, 2.0)]);
+        let reference = InferenceEngine::new(
+            m.clone(),
+            EngineConfig {
+                algo: MatmulAlgo::Baseline,
+                iter: IterationMethod::MarchingPointers,
+            },
+        )
+        .predict(&x, 1, 1);
+        for cfg in EngineConfig::all() {
+            let engine = InferenceEngine::new(m.clone(), cfg);
+            assert_eq!(engine.predict(&x, 1, 1), reference, "{}", cfg.label());
+        }
+    }
+
+    #[test]
+    fn beam_respected() {
+        let m = model();
+        let x = SparseVec::from_pairs(vec![(0, 1.0)]);
+        let engine = InferenceEngine::new(
+            m,
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::BinarySearch,
+            },
+        );
+        // beam 1 explores only the best top-layer node → 2 leaf candidates
+        let preds = engine.predict(&x, 1, 10);
+        assert_eq!(preds.len(), 1.min(10)); // beamed to 1 leaf
+    }
+
+    #[test]
+    fn batch_equals_online() {
+        let m = model();
+        let rows = vec![
+            SparseVec::from_pairs(vec![(0, 1.0), (4, -2.0)]),
+            SparseVec::from_pairs(vec![(2, 0.3)]),
+            SparseVec::new(),
+        ];
+        let xm = CsrMatrix::from_rows(rows.clone(), 8);
+        for cfg in EngineConfig::all() {
+            let engine = InferenceEngine::new(m.clone(), cfg);
+            let batch = engine.predict_batch(&xm, 2, 2);
+            for (i, r) in rows.iter().enumerate() {
+                assert_eq!(batch[i], engine.predict(r, 2, 2), "{}", cfg.label());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_query_gets_prior_scores() {
+        // An all-zero query still ranks: every activation is σ(0) = 0.5.
+        let m = model();
+        let engine = InferenceEngine::new(
+            m,
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::Hash,
+            },
+        );
+        let preds = engine.predict(&SparseVec::new(), 2, 2);
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[0].score, 0.25);
+    }
+}

@@ -1,0 +1,131 @@
+//! Beam-search inference (paper Alg. 1) over XMR tree models, with the
+//! masked sparse matrix product (eq. 6) evaluated either by the vanilla
+//! per-column **baseline** (Alg. 4) or by **MSCM** (Alg. 2–3), each under
+//! any of the four support-intersection iteration methods.
+//!
+//! Every `(algo, iteration)` pair yields *bit-identical* predictions: the
+//! per-output-entry summation order (ascending feature id) is the same in
+//! all code paths, so the paper's "performance boost … is essentially
+//! free" exactness claim holds bitwise here and is enforced by property
+//! tests.
+
+mod baseline;
+mod engine;
+mod mscm;
+pub mod napkinxc;
+mod parallel;
+
+pub use engine::{EngineConfig, InferenceEngine, Prediction, Workspace};
+pub use mscm::set_chunk_order_enabled;
+
+/// How the support intersection `S(x) ∩ S(K)` (or `S(x) ∩ S(w_j)` for the
+/// baseline) is iterated — paper §4 items 1–4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IterationMethod {
+    /// Two sorted cursors advanced one step at a time.
+    MarchingPointers,
+    /// Marching pointers with `LowerBound` jumps (Alg. 4).
+    BinarySearch,
+    /// Prebuilt row-id hash maps (per chunk for MSCM, per column for the
+    /// baseline — the latter is NapkinXC's scheme).
+    Hash,
+    /// `O(d)` dense scratch: chunk rows scattered once per chunk (MSCM) /
+    /// the query scattered once per query (baseline, Parabel/Bonsai).
+    DenseLookup,
+}
+
+impl IterationMethod {
+    /// All four methods, in the paper's presentation order.
+    pub const ALL: [IterationMethod; 4] = [
+        IterationMethod::MarchingPointers,
+        IterationMethod::BinarySearch,
+        IterationMethod::Hash,
+        IterationMethod::DenseLookup,
+    ];
+
+    /// Short human-readable name matching the paper's tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            IterationMethod::MarchingPointers => "Marching Pointers",
+            IterationMethod::BinarySearch => "Binary Search",
+            IterationMethod::Hash => "Hash",
+            IterationMethod::DenseLookup => "Dense Lookup",
+        }
+    }
+}
+
+impl std::str::FromStr for IterationMethod {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "marching" | "marching-pointers" => Ok(IterationMethod::MarchingPointers),
+            "binary" | "binary-search" => Ok(IterationMethod::BinarySearch),
+            "hash" => Ok(IterationMethod::Hash),
+            "dense" | "dense-lookup" => Ok(IterationMethod::DenseLookup),
+            other => Err(format!(
+                "unknown iteration method '{other}' (expected marching|binary|hash|dense)"
+            )),
+        }
+    }
+}
+
+/// Which masked-matmul algorithm evaluates eq. 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatmulAlgo {
+    /// Vanilla per-column vector-dot-product evaluation.
+    Baseline,
+    /// Masked sparse chunk multiplication (the paper's contribution).
+    Mscm,
+}
+
+impl MatmulAlgo {
+    /// Both algorithms.
+    pub const ALL: [MatmulAlgo; 2] = [MatmulAlgo::Baseline, MatmulAlgo::Mscm];
+
+    /// Table label ("", " MSCM").
+    pub fn label(&self) -> &'static str {
+        match self {
+            MatmulAlgo::Baseline => "",
+            MatmulAlgo::Mscm => " MSCM",
+        }
+    }
+}
+
+impl std::str::FromStr for MatmulAlgo {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "vanilla" => Ok(MatmulAlgo::Baseline),
+            "mscm" | "chunked" => Ok(MatmulAlgo::Mscm),
+            other => Err(format!("unknown algo '{other}' (expected baseline|mscm)")),
+        }
+    }
+}
+
+/// The ranker activation function σ (logistic sigmoid).
+#[inline(always)]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        assert!(sigmoid(10.0) > 0.9999);
+        assert!(sigmoid(-10.0) < 0.0001);
+        assert!((sigmoid(1.0) + sigmoid(-1.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn enum_labels() {
+        assert_eq!(IterationMethod::Hash.label(), "Hash");
+        assert_eq!(MatmulAlgo::Mscm.label(), " MSCM");
+        assert_eq!(IterationMethod::ALL.len(), 4);
+    }
+}

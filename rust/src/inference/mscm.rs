@@ -1,0 +1,158 @@
+//! MSCM evaluation of the masked product (paper Algorithms 2 and 3).
+//!
+//! One layer step: every `(query, beamed parent)` pair is a nonzero mask
+//! *block* (paper §4 item 1) covering the parent's whole sibling chunk.
+//! Blocks are evaluated **in chunk order** when the batch has more than
+//! one query (Alg. 3 lines 6–8) so a chunk enters cache once; each block
+//! is one sparse-vector × chunk product (Alg. 2) under the configured
+//! iteration method.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::engine::Workspace;
+use super::{sigmoid, IterationMethod};
+use crate::sparse::iterators::{
+    vec_chunk_binary, vec_chunk_dense, vec_chunk_hash, vec_chunk_marching,
+};
+use crate::sparse::CsrMatrix;
+use crate::tree::Layer;
+
+/// Ablation hook (benches/ablation.rs): disables the chunk-order block
+/// sort of Alg. 3 lines 6–8 to measure how much of MSCM's batch win
+/// comes from cache-resident chunk reuse. Always on in production.
+static CHUNK_ORDER: AtomicBool = AtomicBool::new(true);
+
+/// Enables/disables chunk-order evaluation (ablation only; not thread-
+/// safe with concurrent predictions using different settings).
+pub fn set_chunk_order_enabled(enabled: bool) {
+    CHUNK_ORDER.store(enabled, Ordering::Relaxed);
+}
+
+/// Computes all layer candidates `(child node, path score)` for local
+/// queries `0..n` (rows `qlo..qlo+n` of `x`), appending into `ws.cands`.
+pub(crate) fn mscm_layer(
+    layer: &Layer,
+    x: &CsrMatrix,
+    qlo: usize,
+    n: usize,
+    iter: IterationMethod,
+    ws: &mut Workspace,
+) {
+    // Collect nonzero blocks (Alg. 3 line 5).
+    ws.blocks.clear();
+    for q in 0..n {
+        for &(p, ps) in &ws.beams[q] {
+            ws.blocks.push((p, q as u32, ps));
+        }
+    }
+    // Chunk-order evaluation (Alg. 3 lines 6–8); skipped in the online
+    // setting where it cannot pay off. Queries tie-break for determinism.
+    if n > 1 && CHUNK_ORDER.load(Ordering::Relaxed) {
+        ws.blocks.sort_unstable_by_key(|&(c, q, _)| (c, q));
+    }
+
+    let chunked = &layer.chunked;
+    ws.loaded_chunk = None;
+    // Split borrows: the block list is iterated while cands are appended.
+    let blocks = std::mem::take(&mut ws.blocks);
+    for &(p, q, ps) in &blocks {
+        let chunk = &chunked.chunks[p as usize];
+        let base = chunked.chunk_start(p as usize) as u32;
+        let width = chunk.ncols as usize;
+        let out = &mut ws.out_block[..width];
+        out.fill(0.0);
+        let xq = x.row(qlo + q as usize);
+        match iter {
+            IterationMethod::MarchingPointers => vec_chunk_marching(xq, chunk, out),
+            IterationMethod::BinarySearch => vec_chunk_binary(xq, chunk, out),
+            IterationMethod::Hash => vec_chunk_hash(xq, chunk, out),
+            IterationMethod::DenseLookup => {
+                // Load the chunk's rows into the dense scratch once per
+                // chunk — amortized across all queries hitting it.
+                if ws.loaded_chunk != Some(p) {
+                    let scratch = ws.dense_pos.as_mut().expect("dense scratch");
+                    if let Some(prev) = ws.loaded_chunk {
+                        scratch.clear(&chunked.chunks[prev as usize]);
+                    }
+                    scratch.load(chunk);
+                    ws.loaded_chunk = Some(p);
+                }
+                vec_chunk_dense(xq, chunk, ws.dense_pos.as_ref().unwrap(), out);
+            }
+        }
+        // Conditional-probability combine (Alg. 1 lines 7–8): σ then
+        // multiply by the parent's path score.
+        let cands = &mut ws.cands[q as usize];
+        for (c, &a) in out.iter().enumerate() {
+            cands.push((base + c as u32, ps * sigmoid(a)));
+        }
+    }
+    ws.blocks = blocks;
+    // Leave the scratch clean for the next layer/batch.
+    if let Some(prev) = ws.loaded_chunk.take() {
+        if let Some(scratch) = ws.dense_pos.as_mut() {
+            scratch.clear(&chunked.chunks[prev as usize]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{EngineConfig, Workspace};
+    use super::super::{IterationMethod, MatmulAlgo};
+    use super::*;
+    use crate::sparse::{CscMatrix, SparseVec};
+
+    fn layer() -> Layer {
+        Layer::new(
+            CscMatrix::from_cols(
+                vec![
+                    SparseVec::from_pairs(vec![(0, 1.0), (2, 2.0)]),
+                    SparseVec::from_pairs(vec![(0, -1.0)]),
+                    SparseVec::from_pairs(vec![(1, 3.0)]),
+                    SparseVec::from_pairs(vec![(1, 0.5), (3, 0.5)]),
+                ],
+                4,
+            ),
+            &[0, 2, 4],
+            true,
+        )
+    }
+
+    fn run(iter: IterationMethod, beams: Vec<Vec<(u32, f32)>>, x: &CsrMatrix) -> Vec<Vec<(u32, f32)>> {
+        let l = layer();
+        let model = crate::tree::XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], true)]);
+        let algo = MatmulAlgo::Mscm;
+        let mut ws = Workspace::new(&model, EngineConfig { algo, iter });
+        let n = beams.len();
+        ws.cands.resize_with(n, Vec::new);
+        ws.beams = beams;
+        mscm_layer(&l, x, 0, n, iter, &mut ws);
+        ws.cands[..n].to_vec()
+    }
+
+    #[test]
+    fn layer_candidates_match_dense_math() {
+        let x = CsrMatrix::from_rows(
+            vec![
+                SparseVec::from_pairs(vec![(0, 1.0), (1, 1.0)]),
+                SparseVec::from_pairs(vec![(2, 1.0), (3, 2.0)]),
+            ],
+            4,
+        );
+        // query 0 beams parent 0; query 1 beams both parents
+        let beams = vec![vec![(0u32, 1.0f32)], vec![(0u32, 0.5f32), (1u32, 0.25f32)]];
+        for iter in IterationMethod::ALL {
+            let cands = run(iter, beams.clone(), &x);
+            // q0: children 0,1 with a = [1.0, -1.0]
+            assert_eq!(cands[0][0], (0, sigmoid(1.0)));
+            assert_eq!(cands[0][1], (1, sigmoid(-1.0)));
+            // q1 parent0: a = [2.0, 0.0]; parent1: a = [0.0, 1.0]
+            let q1: std::collections::HashMap<u32, f32> = cands[1].iter().copied().collect();
+            assert_eq!(q1[&0], 0.5 * sigmoid(2.0));
+            assert_eq!(q1[&1], 0.5 * sigmoid(0.0));
+            assert_eq!(q1[&2], 0.25 * sigmoid(0.0));
+            assert_eq!(q1[&3], 0.25 * sigmoid(1.0));
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Multi-threaded batch inference (paper §6.1).
+//!
+//! Batch MSCM is embarrassingly parallel: queries are partitioned into
+//! contiguous ranges and each thread runs the whole layer loop on its own
+//! slice with a private [`Workspace`] — no synchronization on the hot
+//! path. This mirrors the paper's OpenMP row-chunk distribution; dense
+//! lookup pays an `O(d)` scratch per thread, which is exactly why the
+//! paper finds it uncompetitive when parallelized.
+
+use super::engine::{InferenceEngine, Prediction};
+use crate::sparse::CsrMatrix;
+
+impl InferenceEngine {
+    /// Batch inference over `threads` OS threads. Equivalent to
+    /// [`InferenceEngine::predict_batch`] (bitwise) but partitions rows.
+    pub fn predict_batch_parallel(
+        &self,
+        x: &CsrMatrix,
+        beam: usize,
+        topk: usize,
+        threads: usize,
+    ) -> Vec<Vec<Prediction>> {
+        let n = x.rows;
+        let threads = threads.max(1).min(n.max(1));
+        if threads <= 1 {
+            return self.predict_batch(x, beam, topk);
+        }
+        let mut out: Vec<Vec<Prediction>> = vec![Vec::new(); n];
+        // Contiguous, near-equal ranges.
+        let per = n / threads;
+        let rem = n % threads;
+        let mut slices: Vec<&mut [Vec<Prediction>]> = Vec::with_capacity(threads);
+        let mut bounds = Vec::with_capacity(threads);
+        {
+            let mut rest = out.as_mut_slice();
+            let mut lo = 0usize;
+            for t in 0..threads {
+                let len = per + usize::from(t < rem);
+                let (head, tail) = rest.split_at_mut(len);
+                slices.push(head);
+                bounds.push((lo, lo + len));
+                lo += len;
+                rest = tail;
+            }
+        }
+        std::thread::scope(|scope| {
+            for (slice, (qlo, qhi)) in slices.into_iter().zip(bounds) {
+                scope.spawn(move || {
+                    let mut ws = self.workspace();
+                    self.predict_range(x, qlo, qhi, beam, topk, &mut ws, slice);
+                });
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::EngineConfig;
+    use super::super::{IterationMethod, MatmulAlgo};
+    use super::*;
+    use crate::sparse::SparseVec;
+    use crate::util::Rng;
+
+    fn random_queries(n: usize, d: usize, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        let rows = (0..n)
+            .map(|_| {
+                let nnz = rng.gen_range(0..d / 2 + 1);
+                SparseVec::from_pairs(
+                    (0..nnz)
+                        .map(|_| (rng.gen_range(0..d) as u32, rng.gen_f32(-1.0, 1.0)))
+                        .collect(),
+                )
+            })
+            .collect();
+        CsrMatrix::from_rows(rows, d)
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let model = crate::tree::test_util::tiny_model(32, 4, 3, 11);
+        let x = random_queries(37, 32, 5);
+        for algo in MatmulAlgo::ALL {
+            for iter in IterationMethod::ALL {
+                let engine =
+                    InferenceEngine::new(model.clone(), EngineConfig { algo, iter });
+                let serial = engine.predict_batch(&x, 3, 3);
+                for threads in [2, 4, 7] {
+                    let par = engine.predict_batch_parallel(&x, 3, 3, threads);
+                    assert_eq!(par, serial, "{:?}/{:?} t={}", algo, iter, threads);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_thread_counts() {
+        let model = crate::tree::test_util::tiny_model(16, 2, 2, 3);
+        let engine = InferenceEngine::new(
+            model,
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::BinarySearch,
+            },
+        );
+        let x = random_queries(3, 16, 9);
+        let serial = engine.predict_batch(&x, 2, 2);
+        assert_eq!(engine.predict_batch_parallel(&x, 2, 2, 0), serial);
+        assert_eq!(engine.predict_batch_parallel(&x, 2, 2, 64), serial);
+    }
+}

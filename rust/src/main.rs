@@ -1,0 +1,558 @@
+//! `repro` — the MSCM-XMR command-line launcher.
+//!
+//! Subcommands (run `repro help` for details):
+//!
+//! - model production: `synth-model`, `train`, `gen-data`, `stats`
+//! - inference: `infer`, `serve`
+//! - paper reproduction: `bench table|figure3|figure4|figure5|figure6|
+//!   table4|table5|table6|all`
+//! - runtime: `xla-smoke` (load + execute the AOT artifacts)
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--flag`): the build
+//! environment vendors only the `xla` dependency closure.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use mscm_xmr::coordinator::{Coordinator, CoordinatorConfig};
+use mscm_xmr::data::corpus::{Corpus, CorpusSpec};
+use mscm_xmr::data::enterprise::EnterpriseSpec;
+use mscm_xmr::data::svmlight::{load_svmlight, save_svmlight, SvmlightData};
+use mscm_xmr::data::synthetic::paper_suite;
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::repro;
+use mscm_xmr::train::{train_model, RankerParams, Tfidf};
+use mscm_xmr::tree::{load_model, save_model};
+use mscm_xmr::util::Json;
+
+const HELP: &str = "\
+repro — MSCM for sparse XMR trees (WWW'22 reproduction)
+
+USAGE: repro <command> [--key value ...]
+
+MODEL PRODUCTION
+  synth-model   --dataset <name>|--labels N --dim N [--branching B] [--out m.bin]
+  gen-data      --out corpus.svm [--docs N] [--topics N] [--vocab N]
+  train         --data corpus.svm [--branching B] [--out m.bin]
+  stats         --model m.bin
+
+INFERENCE
+  infer         --model m.bin --queries q.svm [--algo mscm|baseline]
+                [--iter marching|binary|hash|dense] [--beam 10] [--topk 10]
+  eval          --data corpus.svm [--branching B] [--beams 1,5,10,20]
+                [--test-frac 0.2]  (train/test split; P@k/R@k/nDCG per beam)
+  serve         --model m.bin [--workers N] [--max-batch N] [--rps N]
+                [--requests N] (synthetic load; prints latency stats)
+
+PAPER REPRODUCTION (synthetic suite; see DESIGN.md §5-6)
+  bench table    --branching 2|8|32 [--scale 10] [--only d1,d2] [--json f]
+  bench figure3 | bench figure4   (speedups; same grid as tables)
+  bench figure5  (vs NapkinXC reimplementation)
+  bench figure6  [--threads 1,2,4,8]
+  bench table4   [--labels 1000000] [--dim 400000] [--queries 256]
+  bench table5 | bench table6
+  bench all      [--json-dir reports/]
+
+RUNTIME
+  xla-smoke     [--artifacts artifacts/]
+
+Common: --seed N, --queries N (batch count), --online N
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprint!("{HELP}");
+        return ExitCode::FAILURE;
+    }
+    let cmd = args[0].clone();
+    let (sub, rest) = if cmd == "bench" {
+        if args.len() < 2 {
+            eprintln!("bench needs a target (table|figure3|...|all)");
+            return ExitCode::FAILURE;
+        }
+        (Some(args[1].clone()), &args[2..])
+    } else {
+        (None, &args[1..])
+    };
+    let opts = parse_kv(rest);
+    let r = match (cmd.as_str(), sub.as_deref()) {
+        ("help" | "--help" | "-h", _) => {
+            print!("{HELP}");
+            Ok(())
+        }
+        ("synth-model", _) => cmd_synth_model(&opts),
+        ("gen-data", _) => cmd_gen_data(&opts),
+        ("train", _) => cmd_train(&opts),
+        ("stats", _) => cmd_stats(&opts),
+        ("infer", _) => cmd_infer(&opts),
+        ("eval", _) => cmd_eval(&opts),
+        ("serve", _) => cmd_serve(&opts),
+        ("xla-smoke", _) => cmd_xla_smoke(&opts),
+        ("bench", Some("table")) => cmd_bench_table(&opts),
+        ("bench", Some("figure3")) => cmd_bench_fig34(&opts, false),
+        ("bench", Some("figure4")) => cmd_bench_fig34(&opts, true),
+        ("bench", Some("figure5")) => cmd_bench_fig5(&opts),
+        ("bench", Some("figure6")) => cmd_bench_fig6(&opts),
+        ("bench", Some("table4")) => cmd_bench_table4(&opts),
+        ("bench", Some("table5")) => {
+            repro::table5(&bench_options(&opts));
+            Ok(())
+        }
+        ("bench", Some("table6")) => {
+            repro::table6(&bench_options(&opts));
+            Ok(())
+        }
+        ("bench", Some("all")) => cmd_bench_all(&opts),
+        _ => {
+            eprintln!("unknown command '{cmd}'\n{HELP}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type Opts = HashMap<String, String>;
+
+fn parse_kv(args: &[String]) -> Opts {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn get<T: std::str::FromStr>(opts: &Opts, key: &str, default: T) -> T
+where
+    T::Err: std::fmt::Debug,
+{
+    opts.get(key)
+        .map(|v| v.parse().unwrap_or_else(|e| panic!("bad --{key}: {e:?}")))
+        .unwrap_or(default)
+}
+
+fn bench_options(opts: &Opts) -> repro::BenchOptions {
+    let mut b = repro::BenchOptions {
+        batch_queries: get(opts, "queries", 512usize),
+        online_queries: get(opts, "online", 128usize),
+        beam: get(opts, "beam", 10usize),
+        topk: get(opts, "topk", 10usize),
+        scale: get(opts, "scale", 10usize),
+        seed: get(opts, "seed", 2022u64),
+        only: Vec::new(),
+    };
+    if let Some(only) = opts.get("only") {
+        b.only = only.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    b
+}
+
+fn engine_config(opts: &Opts) -> Result<EngineConfig, anyhow::Error> {
+    let algo: MatmulAlgo = opts
+        .get("algo")
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(MatmulAlgo::Mscm);
+    let iter: IterationMethod = opts
+        .get("iter")
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(IterationMethod::Hash);
+    Ok(EngineConfig { algo, iter })
+}
+
+fn cmd_synth_model(opts: &Opts) -> Result<(), anyhow::Error> {
+    let branching = get(opts, "branching", 32usize);
+    let seed = get(opts, "seed", 2022u64);
+    let model = if let Some(name) = opts.get("dataset") {
+        let scale = get(opts, "scale", 10usize);
+        let spec = paper_suite(scale)
+            .into_iter()
+            .find(|s| s.name == name.as_str())
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+        mscm_xmr::data::synthetic::synth_model(&spec, branching, seed)
+    } else {
+        let spec = EnterpriseSpec {
+            num_labels: get(opts, "labels", 100_000usize),
+            dim: get(opts, "dim", 100_000usize),
+            branching,
+            col_nnz: get(opts, "col-nnz", 24usize),
+            query_nnz: get(opts, "query-nnz", 12usize),
+            seed,
+        };
+        spec.build_model()
+    };
+    println!("model: {}", model.stats());
+    let out = opts.get("out").cloned().unwrap_or("model.bin".into());
+    save_model(&model, &out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_gen_data(opts: &Opts) -> Result<(), anyhow::Error> {
+    let spec = CorpusSpec {
+        vocab: get(opts, "vocab", 5_000usize),
+        topics: get(opts, "topics", 64usize),
+        docs: get(opts, "docs", 2_000usize),
+        seed: get(opts, "seed", 42u64),
+        ..Default::default()
+    };
+    let corpus = Corpus::generate(spec.clone());
+    let tfidf = Tfidf::fit(&corpus.docs, spec.vocab);
+    let features = tfidf.transform(&corpus.docs);
+    let out = opts.get("out").cloned().unwrap_or("corpus.svm".into());
+    save_svmlight(
+        &SvmlightData {
+            features,
+            labels: corpus.labels,
+            num_labels: spec.topics,
+        },
+        &out,
+    )?;
+    println!("wrote {out} ({} docs, {} topics)", spec.docs, spec.topics);
+    Ok(())
+}
+
+fn cmd_train(opts: &Opts) -> Result<(), anyhow::Error> {
+    let data_path = opts
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("--data required"))?;
+    let data = load_svmlight(data_path)?;
+    let branching = get(opts, "branching", 16usize);
+    let trained = train_model(
+        &data.features,
+        &data.labels,
+        data.num_labels,
+        branching,
+        &RankerParams::default(),
+        get(opts, "seed", 7u64),
+    );
+    println!("trained: {}", trained.model.stats());
+    let out = opts.get("out").cloned().unwrap_or("model.bin".into());
+    save_model(&trained.model, &out)?;
+    // save the permutation alongside
+    let perm = Json::Arr(
+        trained
+            .label_perm
+            .iter()
+            .map(|&l| Json::Num(l as f64))
+            .collect(),
+    );
+    std::fs::write(format!("{out}.labels.json"), perm.to_string())?;
+    println!("saved {out} (+ .labels.json)");
+    Ok(())
+}
+
+fn cmd_stats(opts: &Opts) -> Result<(), anyhow::Error> {
+    let path = opts
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let model = load_model(path, false)?;
+    println!("{}", model.stats());
+    for (l, layer) in model.layers.iter().enumerate() {
+        println!(
+            "layer {l}: nodes={} chunks={} nnz={} avg_col_nnz={:.1}",
+            layer.num_nodes(),
+            layer.chunked.num_chunks(),
+            layer.csc.nnz(),
+            layer.csc.avg_col_nnz()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
+    let model = load_model(
+        opts.get("model")
+            .ok_or_else(|| anyhow::anyhow!("--model required"))?,
+        true,
+    )?;
+    let queries = load_svmlight(
+        opts.get("queries")
+            .ok_or_else(|| anyhow::anyhow!("--queries required"))?,
+    )?;
+    let config = engine_config(opts)?;
+    let dim = model.dim;
+    let engine = InferenceEngine::new(model, config);
+    let beam = get(opts, "beam", 10usize);
+    let topk = get(opts, "topk", 10usize);
+    let mut ws = engine.workspace();
+    for i in 0..queries.features.rows {
+        let mut q = queries.features.row_owned(i);
+        // drop features beyond the model's dimension
+        let keep: Vec<(u32, f32)> = q
+            .indices
+            .iter()
+            .zip(&q.values)
+            .filter(|(&f, _)| (f as usize) < dim)
+            .map(|(&f, &v)| (f, v))
+            .collect();
+        q = mscm_xmr::sparse::SparseVec::from_pairs(keep);
+        let preds = engine.predict_with(&q, beam, topk, &mut ws);
+        let formatted: Vec<String> = preds
+            .iter()
+            .map(|p| format!("{}:{:.4}", p.label, p.score))
+            .collect();
+        println!("query {i}: {}", formatted.join(" "));
+    }
+    Ok(())
+}
+
+/// Train/test split evaluation: quantifies the beam-width ↔ accuracy
+/// trade-off of Alg. 1 (MSCM itself is accuracy-neutral — exactness).
+fn cmd_eval(opts: &Opts) -> Result<(), anyhow::Error> {
+    let data = load_svmlight(
+        opts.get("data")
+            .ok_or_else(|| anyhow::anyhow!("--data required"))?,
+    )?;
+    let test_frac: f64 = get(opts, "test-frac", 0.2f64);
+    let n = data.features.rows;
+    let n_test = ((n as f64 * test_frac) as usize).clamp(1, n - 1);
+    let n_train = n - n_test;
+    let train_idx: Vec<usize> = (0..n_train).collect();
+    let xtrain = data.features.select_rows(&train_idx);
+    let trained = train_model(
+        &xtrain,
+        &data.labels[..n_train],
+        data.num_labels,
+        get(opts, "branching", 16usize),
+        &RankerParams::default(),
+        get(opts, "seed", 7u64),
+    );
+    println!("trained on {n_train} rows: {}", trained.model.stats());
+    let beams: Vec<usize> = opts
+        .get("beams")
+        .map(|s| s.split(',').map(|b| b.trim().parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1, 5, 10, 20]);
+    let engine = InferenceEngine::new(
+        trained.model.clone(),
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        },
+    );
+    let mut ws = engine.workspace();
+    for beam in beams {
+        let mut metrics = mscm_xmr::eval::RankingMetrics::new(5);
+        for i in n_train..n {
+            let preds = engine.predict_with(&data.features.row_owned(i), beam, 5, &mut ws);
+            metrics.add(&preds, &data.labels[i], |c| {
+                trained.label_perm[c as usize]
+            });
+        }
+        println!("beam {beam:<4} {}", metrics.summary());
+    }
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
+    // Model: either from file or synthesized on the spot.
+    let model = if let Some(path) = opts.get("model") {
+        load_model(path, true)?
+    } else {
+        let spec = EnterpriseSpec {
+            num_labels: get(opts, "labels", 100_000usize),
+            dim: get(opts, "dim", 100_000usize),
+            ..Default::default()
+        };
+        eprintln!(
+            "no --model; synthesizing enterprise model (L={})",
+            spec.num_labels
+        );
+        spec.build_model()
+    };
+    let dim = model.dim;
+    let config = engine_config(opts)?;
+    let engine = Arc::new(InferenceEngine::new(model, config));
+    let coord = Coordinator::start(
+        Arc::clone(&engine),
+        CoordinatorConfig {
+            workers: get(opts, "workers", 4usize),
+            max_batch: get(opts, "max-batch", 64usize),
+            beam: get(opts, "beam", 10usize),
+            topk: get(opts, "topk", 10usize),
+            ..Default::default()
+        },
+    );
+    // Synthetic load: open-loop arrivals at --rps for --requests queries.
+    let requests = get(opts, "requests", 2_000usize);
+    let rps = get(opts, "rps", 2_000u64);
+    let spec = mscm_xmr::data::synthetic::DatasetSpec {
+        name: "serve-load",
+        dim,
+        num_labels: 1,
+        paper_dim: dim,
+        paper_labels: 1,
+        query_nnz: get(opts, "query-nnz", 12usize),
+        col_nnz: 1,
+        sibling_overlap: 0.5,
+        zipf_theta: 1.05,
+    };
+    let x = mscm_xmr::data::synthetic::synth_queries(&spec, requests, get(opts, "seed", 1u64));
+    eprintln!("serving {requests} requests at {rps} rps ...");
+    let interval = std::time::Duration::from_nanos(1_000_000_000 / rps.max(1));
+    let mut rxs = Vec::with_capacity(requests);
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        let target = t0 + interval * i as u32;
+        if let Some(sleep) = target.checked_duration_since(std::time::Instant::now()) {
+            std::thread::sleep(sleep);
+        }
+        match coord.submit(x.row_owned(i)) {
+            Ok((_, rx)) => rxs.push(rx),
+            Err(e) => eprintln!("request {i}: {e}"),
+        }
+    }
+    for rx in rxs {
+        rx.recv().ok();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = coord.stats();
+    println!(
+        "served {} ok / {} shed in {:.2}s ({:.0} qps)",
+        stats.completed.load(std::sync::atomic::Ordering::Relaxed),
+        stats.shed.load(std::sync::atomic::Ordering::Relaxed),
+        wall,
+        stats.completed.load(std::sync::atomic::Ordering::Relaxed) as f64 / wall
+    );
+    println!("latency: {}", stats.latency.summary());
+    println!("queue:   {}", stats.queue_wait.summary());
+    println!("mean batch: {:.1}", stats.mean_batch());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_xla_smoke(opts: &Opts) -> Result<(), anyhow::Error> {
+    let dir = opts.get("artifacts").cloned().unwrap_or("artifacts".into());
+    let rt = mscm_xmr::runtime::XlaRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    for name in ["matmul_only", "layer_step", "full_inference"] {
+        let path = format!("{dir}/{name}.hlo.txt");
+        let comp = rt.load_hlo_text(&path)?;
+        println!("loaded + compiled {}", comp.source);
+    }
+    println!("xla-smoke OK");
+    Ok(())
+}
+
+fn cmd_bench_table(opts: &Opts) -> Result<(), anyhow::Error> {
+    let branching = get(opts, "branching", 8usize);
+    let b = bench_options(opts);
+    let rows = repro::bench_table(branching, &b);
+    repro::print_table(branching, &rows);
+    if let Some(path) = opts.get("json") {
+        repro::write_report(path, repro::rows_to_json(branching, &rows))?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_fig34(opts: &Opts, online: bool) -> Result<(), anyhow::Error> {
+    let b = bench_options(opts);
+    for branching in [2usize, 8, 32] {
+        let rows = repro::bench_table(branching, &b);
+        repro::print_figure34(branching, &rows, online);
+    }
+    Ok(())
+}
+
+fn cmd_bench_fig5(opts: &Opts) -> Result<(), anyhow::Error> {
+    let b = bench_options(opts);
+    let rows = repro::bench_figure5(&b);
+    repro::print_figure5(&rows);
+    if let Some(path) = opts.get("json") {
+        repro::write_report(path, repro::figure5_to_json(&rows))?;
+    }
+    Ok(())
+}
+
+fn cmd_bench_fig6(opts: &Opts) -> Result<(), anyhow::Error> {
+    let b = bench_options(opts);
+    let threads: Vec<usize> = opts
+        .get("threads")
+        .map(|s| s.split(',').map(|t| t.trim().parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+    let rows = repro::bench_figure6(&b, &threads);
+    repro::print_figure6(&rows);
+    if let Some(path) = opts.get("json") {
+        repro::write_report(path, repro::figure6_to_json(&rows))?;
+    }
+    Ok(())
+}
+
+fn cmd_bench_table4(opts: &Opts) -> Result<(), anyhow::Error> {
+    let spec = EnterpriseSpec {
+        num_labels: get(opts, "labels", 1_000_000usize),
+        dim: get(opts, "dim", 400_000usize),
+        branching: get(opts, "branching", 32usize),
+        col_nnz: get(opts, "col-nnz", 24usize),
+        query_nnz: get(opts, "query-nnz", 12usize),
+        seed: get(opts, "seed", 0xE17E_2021u64),
+    };
+    let mut b = bench_options(opts);
+    b.online_queries = get(opts, "queries", 256usize);
+    let rows = repro::bench_table4(&spec, &b);
+    repro::print_table4(&spec, &rows);
+    if let Some(path) = opts.get("json") {
+        repro::write_report(path, repro::table4_to_json(&spec, &rows))?;
+    }
+    Ok(())
+}
+
+fn cmd_bench_all(opts: &Opts) -> Result<(), anyhow::Error> {
+    let dir = opts
+        .get("json-dir")
+        .cloned()
+        .unwrap_or_else(|| "reports".to_string());
+    std::fs::create_dir_all(&dir)?;
+    let b = bench_options(opts);
+    repro::table5(&b);
+    for branching in [2usize, 8, 32] {
+        let rows = repro::bench_table(branching, &b);
+        repro::print_table(branching, &rows);
+        repro::print_figure34(branching, &rows, false);
+        repro::print_figure34(branching, &rows, true);
+        repro::write_report(
+            &format!("{dir}/table_b{branching}.json"),
+            repro::rows_to_json(branching, &rows),
+        )?;
+    }
+    let f5 = repro::bench_figure5(&b);
+    repro::print_figure5(&f5);
+    repro::write_report(&format!("{dir}/figure5.json"), repro::figure5_to_json(&f5))?;
+    let f6 = repro::bench_figure6(&b, &[1, 2, 4, 8]);
+    repro::print_figure6(&f6);
+    repro::write_report(&format!("{dir}/figure6.json"), repro::figure6_to_json(&f6))?;
+    let spec = EnterpriseSpec {
+        num_labels: get(opts, "labels", 1_000_000usize),
+        dim: get(opts, "dim", 400_000usize),
+        ..Default::default()
+    };
+    let t4 = repro::bench_table4(&spec, &b);
+    repro::print_table4(&spec, &t4);
+    repro::write_report(&format!("{dir}/table4.json"), repro::table4_to_json(&spec, &t4))?;
+    repro::table6(&b);
+    println!("\nall reports in {dir}/");
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Latency metrics: streaming histograms with avg / P50 / P95 / P99,
+//! matching the quantities reported in the paper's Table 4 and §6.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A latency histogram with logarithmic microsecond buckets plus exact
+/// sum/count, cheap enough for the serving hot path.
+///
+/// Buckets cover 1 µs … ~17 s in 4 sub-buckets per octave; quantile error
+/// is bounded by the bucket width (≤ ~19%), and `avg` is exact.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const SUB: u64 = 4; // sub-buckets per octave
+const OCTAVES: u64 = 24; // 2^24 µs ≈ 16.7 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        let n = (OCTAVES * SUB) as usize;
+        Self {
+            buckets: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(us: u64) -> usize {
+        if us < 1 {
+            return 0;
+        }
+        let oct = 63 - us.leading_zeros() as u64; // floor(log2)
+        let oct = oct.min(OCTAVES - 1);
+        let frac = if oct == 0 {
+            0
+        } else {
+            ((us >> (oct.saturating_sub(2))) & (SUB - 1)).min(SUB - 1)
+        };
+        (oct * SUB + frac) as usize
+    }
+
+    /// Upper bound (µs) of a bucket, used when reading quantiles.
+    fn bucket_upper(idx: usize) -> u64 {
+        let oct = (idx as u64) / SUB;
+        let frac = (idx as u64) % SUB;
+        if oct == 0 {
+            return frac + 1;
+        }
+        let base = 1u64 << oct;
+        base + ((frac + 1) * base) / SUB
+    }
+
+    /// Records one observation.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e3
+        }
+    }
+
+    /// Approximate quantile (0..1) in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        let target = ((c as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_upper(i) as f64 / 1e3;
+            }
+        }
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Maximum observed, in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// One-line summary matching Table 4's columns.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} avg={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean_ms(),
+            self.quantile_ms(0.50),
+            self.quantile_ms(0.95),
+            self.quantile_ms(0.99),
+            self.max_ms()
+        )
+    }
+}
+
+/// Exact latency recorder (stores all samples) for offline benchmarks
+/// where Table-4-grade precision matters more than memory.
+#[derive(Debug, Default)]
+pub struct ExactLatencies {
+    samples_us: Mutex<Vec<u64>>,
+}
+
+impl ExactLatencies {
+    /// An empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Records one observation.
+    pub fn record(&self, d: Duration) {
+        self.samples_us.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    /// (mean, p50, p95, p99) in milliseconds.
+    pub fn stats_ms(&self) -> (f64, f64, f64, f64) {
+        let mut s = self.samples_us.lock().unwrap().clone();
+        if s.is_empty() {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        s.sort_unstable();
+        let n = s.len();
+        let pct = |q: f64| s[(((n as f64) * q) as usize).min(n - 1)] as f64 / 1e3;
+        let mean = s.iter().sum::<u64>() as f64 / n as f64 / 1e3;
+        (mean, pct(0.50), pct(0.95), pct(0.99))
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples_us.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_exact() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 3] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.quantile_ms(0.5) * 1e3; // back to µs
+        assert!((400.0..700.0).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile_ms(0.99) * 1e3;
+        assert!((900.0..1300.0).contains(&p99), "p99 {p99}");
+    }
+
+    #[test]
+    fn bucket_monotonicity() {
+        let mut last = 0;
+        for us in [0u64, 1, 2, 3, 5, 9, 17, 100, 1000, 1_000_000] {
+            let b = LatencyHistogram::bucket_index(us);
+            assert!(b >= last, "bucket({us}) = {b} < {last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn exact_latencies_stats() {
+        let e = ExactLatencies::new();
+        for i in 1..=100u64 {
+            e.record(Duration::from_millis(i));
+        }
+        let (mean, p50, p95, p99) = e.stats_ms();
+        assert!((mean - 50.5).abs() < 1e-6);
+        assert_eq!(p50, 51.0);
+        assert_eq!(p95, 96.0);
+        assert_eq!(p99, 100.0);
+    }
+
+    #[test]
+    fn empty_histograms_are_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+        let e = ExactLatencies::new();
+        assert_eq!(e.stats_ms(), (0.0, 0.0, 0.0, 0.0));
+    }
+}

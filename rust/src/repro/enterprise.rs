@@ -1,0 +1,166 @@
+//! Table 4: enterprise-scale semantic product search (paper §6) —
+//! average / P95 / P99 per-query latency at beam 10 and 20 for
+//! binary-search MSCM, hash-map MSCM and the binary-search baseline,
+//! single-threaded. (Dense lookup is excluded in the paper for OOM;
+//! we match its table rows.)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::tables::BenchOptions;
+use crate::data::enterprise::EnterpriseSpec;
+use crate::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use crate::metrics::ExactLatencies;
+use crate::util::Json;
+
+/// One Table-4 row.
+#[derive(Clone, Debug)]
+pub struct Table4Row {
+    /// Beam width (10 / 20).
+    pub beam: usize,
+    /// Engine configuration.
+    pub config: EngineConfig,
+    /// Mean ms/query.
+    pub avg_ms: f64,
+    /// 95th percentile ms/query.
+    pub p95_ms: f64,
+    /// 99th percentile ms/query.
+    pub p99_ms: f64,
+}
+
+/// Runs Table 4 on a synthesized enterprise model.
+pub fn bench_table4(spec: &EnterpriseSpec, opts: &BenchOptions) -> Vec<Table4Row> {
+    eprintln!(
+        "[table4] synthesizing enterprise model: L={} d={} B={} (paper scale / {:.0})",
+        spec.num_labels,
+        spec.dim,
+        spec.branching,
+        spec.scale_factor()
+    );
+    let t = Instant::now();
+    let model = Arc::new(spec.build_model());
+    eprintln!(
+        "[table4] model built in {:.1}s: {}",
+        t.elapsed().as_secs_f64(),
+        model.stats()
+    );
+    let x = spec.build_queries(opts.online_queries.max(256));
+    let queries: Vec<_> = (0..x.rows).map(|i| x.row_owned(i)).collect();
+
+    let configs = [
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::BinarySearch,
+        },
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        },
+        EngineConfig {
+            algo: MatmulAlgo::Baseline,
+            iter: IterationMethod::BinarySearch,
+        },
+    ];
+    let mut rows = Vec::new();
+    for beam in [10usize, 20] {
+        for config in configs {
+            let engine = InferenceEngine::from_arc(Arc::clone(&model), config);
+            let mut ws = engine.workspace();
+            for q in queries.iter().take(8) {
+                std::hint::black_box(engine.predict_with(q, beam, opts.topk, &mut ws));
+            }
+            let lat = ExactLatencies::new();
+            for q in &queries {
+                let t = Instant::now();
+                std::hint::black_box(engine.predict_with(q, beam, opts.topk, &mut ws));
+                lat.record(t.elapsed());
+            }
+            let (avg, _, p95, p99) = lat.stats_ms();
+            eprintln!(
+                "[table4] beam {:<3} {:<22} avg {:.3} p95 {:.3} p99 {:.3} ms/q",
+                beam,
+                config.label(),
+                avg,
+                p95,
+                p99
+            );
+            rows.push(Table4Row {
+                beam,
+                config,
+                avg_ms: avg,
+                p95_ms: p95,
+                p99_ms: p99,
+            });
+        }
+    }
+    rows
+}
+
+/// Prints Table 4 in the paper's layout.
+pub fn print_table4(spec: &EnterpriseSpec, rows: &[Table4Row]) {
+    println!(
+        "\nTable 4 — enterprise-scale search, single thread (L={}, d={}, B={}, scale 1/{:.0} of paper)",
+        spec.num_labels,
+        spec.dim,
+        spec.branching,
+        spec.scale_factor()
+    );
+    println!(
+        "{:<26}{:>16}{:>16}{:>16}",
+        "Iteration Method", "Average (ms/q)", "P95 (ms/q)", "P99 (ms/q)"
+    );
+    for beam in [10usize, 20] {
+        println!("Beam Size: {beam}");
+        for r in rows.iter().filter(|r| r.beam == beam) {
+            println!(
+                "{:<26}{:>16.3}{:>16.3}{:>16.3}",
+                r.config.label(),
+                r.avg_ms,
+                r.p95_ms,
+                r.p99_ms
+            );
+        }
+    }
+    // Headline ratio (paper: 8x+ avg, ~9x P99 at beam 10)
+    let get = |beam, algo, iter| {
+        rows.iter()
+            .find(|r| r.beam == beam && r.config.algo == algo && r.config.iter == iter)
+            .map(|r| (r.avg_ms, r.p99_ms))
+    };
+    if let (Some((ma, mp)), Some((ba, bp))) = (
+        get(10, MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+        get(10, MatmulAlgo::Baseline, IterationMethod::BinarySearch),
+    ) {
+        println!(
+            "\nheadline: binary-search MSCM vs baseline at beam 10 — avg {:.1}x, P99 {:.1}x (paper: 8.2x avg, 9.0x P99)",
+            ba / ma,
+            bp / mp
+        );
+    }
+}
+
+/// JSON payload.
+pub fn table4_to_json(spec: &EnterpriseSpec, rows: &[Table4Row]) -> Json {
+    Json::obj(vec![
+        ("num_labels", Json::Num(spec.num_labels as f64)),
+        ("dim", Json::Num(spec.dim as f64)),
+        ("branching", Json::Num(spec.branching as f64)),
+        ("scale_factor", Json::Num(spec.scale_factor())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("beam", Json::Num(r.beam as f64)),
+                            ("config", Json::Str(r.config.label())),
+                            ("avg_ms", Json::Num(r.avg_ms)),
+                            ("p95_ms", Json::Num(r.p95_ms)),
+                            ("p99_ms", Json::Num(r.p99_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

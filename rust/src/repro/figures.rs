@@ -1,0 +1,232 @@
+//! Figure 5 (hash-MSCM vs NapkinXC, ~10×) and Figure 6 (multi-threaded
+//! scaling of binary/hash × {MSCM, baseline}).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::tables::BenchOptions;
+use crate::data::synthetic::{paper_suite, synth_model, synth_queries};
+use crate::inference::napkinxc::NapkinXcEngine;
+use crate::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use crate::util::Json;
+
+/// One Figure-5 bar pair.
+#[derive(Clone, Debug)]
+pub struct Figure5Row {
+    /// Dataset name.
+    pub dataset: String,
+    /// Our hash-MSCM online ms/query.
+    pub ours_ms: f64,
+    /// NapkinXC-style online ms/query.
+    pub napkinxc_ms: f64,
+}
+
+/// Figure 5: our hash-MSCM engine vs the NapkinXC reimplementation
+/// (both hash-based, online setting, same beam) on every dataset.
+pub fn bench_figure5(opts: &BenchOptions) -> Vec<Figure5Row> {
+    let mut out = Vec::new();
+    for spec in paper_suite(opts.scale)
+        .into_iter()
+        .filter(|s| opts.only.is_empty() || opts.only.iter().any(|n| n == s.name))
+    {
+        eprintln!("[figure5] building {} ...", spec.name);
+        let model = Arc::new(synth_model(&spec, 32, opts.seed));
+        let x = synth_queries(&spec, opts.online_queries, opts.seed);
+        let n = x.rows;
+        let queries: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
+
+        let ours = InferenceEngine::from_arc(
+            Arc::clone(&model),
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::Hash,
+            },
+        );
+        let mut ws = ours.workspace();
+        for q in queries.iter().take(8) {
+            std::hint::black_box(ours.predict_with(q, opts.beam, opts.topk, &mut ws));
+        }
+        let t = Instant::now();
+        for q in &queries {
+            std::hint::black_box(ours.predict_with(q, opts.beam, opts.topk, &mut ws));
+        }
+        let ours_ms = t.elapsed().as_secs_f64() * 1e3 / n as f64;
+
+        let napkin = NapkinXcEngine::new(Arc::clone(&model));
+        for q in queries.iter().take(8) {
+            std::hint::black_box(napkin.predict_beam(q, opts.beam, opts.topk));
+        }
+        let t = Instant::now();
+        for q in &queries {
+            std::hint::black_box(napkin.predict_beam(q, opts.beam, opts.topk));
+        }
+        let napkinxc_ms = t.elapsed().as_secs_f64() * 1e3 / n as f64;
+
+        eprintln!(
+            "[figure5] {:<16} ours {:.3} ms/q  napkinxc {:.3} ms/q  ({:.1}x)",
+            spec.name,
+            ours_ms,
+            napkinxc_ms,
+            napkinxc_ms / ours_ms
+        );
+        out.push(Figure5Row {
+            dataset: spec.name.to_string(),
+            ours_ms,
+            napkinxc_ms,
+        });
+    }
+    out
+}
+
+/// Prints the Figure-5 series.
+pub fn print_figure5(rows: &[Figure5Row]) {
+    println!("\nFigure 5 — hash-MSCM (ours) vs NapkinXC reimplementation, online");
+    println!(
+        "{:<16}{:>14}{:>16}{:>10}",
+        "dataset", "ours ms/q", "napkinxc ms/q", "gain"
+    );
+    for r in rows {
+        println!(
+            "{:<16}{:>14.3}{:>16.3}{:>9.1}x",
+            r.dataset,
+            r.ours_ms,
+            r.napkinxc_ms,
+            r.napkinxc_ms / r.ours_ms
+        );
+    }
+}
+
+/// One Figure-6 measurement.
+#[derive(Clone, Debug)]
+pub struct Figure6Row {
+    /// Dataset name.
+    pub dataset: String,
+    /// Engine configuration measured.
+    pub config: EngineConfig,
+    /// Thread count.
+    pub threads: usize,
+    /// Batch ms per query.
+    pub batch_ms: f64,
+}
+
+/// Figure 6: thread-scaling of batch inference for binary-search and
+/// hash, MSCM and baseline, on the paper's three largest datasets.
+pub fn bench_figure6(opts: &BenchOptions, thread_counts: &[usize]) -> Vec<Figure6Row> {
+    let mut out = Vec::new();
+    let wanted = ["wiki-500k", "amazon-670k", "amazon-3m"];
+    for spec in paper_suite(opts.scale).into_iter().filter(|s| {
+        wanted.contains(&s.name) && (opts.only.is_empty() || opts.only.iter().any(|n| n == s.name))
+    }) {
+        eprintln!("[figure6] building {} ...", spec.name);
+        let model = Arc::new(synth_model(&spec, 32, opts.seed));
+        let x = synth_queries(&spec, opts.batch_queries, opts.seed);
+        for iter in [IterationMethod::BinarySearch, IterationMethod::Hash] {
+            for algo in MatmulAlgo::ALL {
+                let config = EngineConfig { algo, iter };
+                let engine = InferenceEngine::from_arc(Arc::clone(&model), config);
+                for &threads in thread_counts {
+                    // warmup + measure
+                    std::hint::black_box(engine.predict_batch_parallel(
+                        &x,
+                        opts.beam,
+                        opts.topk,
+                        threads,
+                    ));
+                    let t = Instant::now();
+                    std::hint::black_box(engine.predict_batch_parallel(
+                        &x,
+                        opts.beam,
+                        opts.topk,
+                        threads,
+                    ));
+                    let batch_ms = t.elapsed().as_secs_f64() * 1e3 / x.rows as f64;
+                    eprintln!(
+                        "[figure6] {:<14} {:<22} t={:<2} {:.3} ms/q",
+                        spec.name,
+                        config.label(),
+                        threads,
+                        batch_ms
+                    );
+                    out.push(Figure6Row {
+                        dataset: spec.name.to_string(),
+                        config,
+                        threads,
+                        batch_ms,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Prints the Figure-6 series.
+pub fn print_figure6(rows: &[Figure6Row]) {
+    println!("\nFigure 6 — multi-threaded batch inference (ms/query)");
+    let mut datasets: Vec<String> = rows.iter().map(|r| r.dataset.clone()).collect();
+    datasets.dedup();
+    for d in datasets {
+        println!("\n{d}");
+        let mut threads: Vec<usize> = rows
+            .iter()
+            .filter(|r| r.dataset == d)
+            .map(|r| r.threads)
+            .collect();
+        threads.sort_unstable();
+        threads.dedup();
+        print!("{:<26}", "config");
+        for t in &threads {
+            print!("{:>10}", format!("t={t}"));
+        }
+        println!();
+        for iter in [IterationMethod::BinarySearch, IterationMethod::Hash] {
+            for algo in [MatmulAlgo::Mscm, MatmulAlgo::Baseline] {
+                print!("{:<26}", format!("{}{}", iter.label(), algo.label()));
+                for &t in &threads {
+                    if let Some(r) = rows.iter().find(|r| {
+                        r.dataset == d
+                            && r.config.iter == iter
+                            && r.config.algo == algo
+                            && r.threads == t
+                    }) {
+                        print!("{:>10.3}", r.batch_ms);
+                    } else {
+                        print!("{:>10}", "-");
+                    }
+                }
+                println!();
+            }
+        }
+    }
+}
+
+/// JSON report payloads.
+pub fn figure5_to_json(rows: &[Figure5Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("dataset", Json::Str(r.dataset.clone())),
+                    ("ours_ms", Json::Num(r.ours_ms)),
+                    ("napkinxc_ms", Json::Num(r.napkinxc_ms)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// JSON report payloads.
+pub fn figure6_to_json(rows: &[Figure6Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("dataset", Json::Str(r.dataset.clone())),
+                    ("config", Json::Str(r.config.label())),
+                    ("threads", Json::Num(r.threads as f64)),
+                    ("batch_ms", Json::Num(r.batch_ms)),
+                ])
+            })
+            .collect(),
+    )
+}

@@ -1,0 +1,28 @@
+//! The paper-reproduction harness: one entry point per table and figure
+//! of the evaluation section (Tables 1–6, Figures 3–6), each printing the
+//! same rows/series the paper reports and returning structured results
+//! for the JSON reports referenced by EXPERIMENTS.md.
+
+mod enterprise;
+mod figures;
+mod tables;
+
+pub use enterprise::{bench_table4, print_table4, table4_to_json, Table4Row};
+pub use figures::{
+    bench_figure5, bench_figure6, figure5_to_json, figure6_to_json, print_figure5,
+    print_figure6, Figure5Row, Figure6Row,
+};
+pub use tables::{
+    bench_table, build_dataset, print_figure34, print_table, rows_to_json, table5, table6,
+    BenchOptions, TableRow,
+};
+
+use crate::util::Json;
+
+/// Writes a JSON report next to the printed output.
+pub fn write_report(path: &str, payload: Json) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, payload.to_string())
+}

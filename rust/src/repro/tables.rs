@@ -1,0 +1,327 @@
+//! Tables 1–3 (per-query latency, batch + online, 4 iterators ×
+//! {MSCM, baseline}, branching 2/8/32, six datasets), the speedup series
+//! behind Figures 3–4, and Tables 5–6.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::synthetic::{paper_suite, synth_model, synth_queries, DatasetSpec};
+use crate::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use crate::sparse::CsrMatrix;
+use crate::tree::XmrModel;
+use crate::util::Json;
+
+/// Knobs shared by the table/figure benchmarks.
+#[derive(Clone, Debug)]
+pub struct BenchOptions {
+    /// Queries in the batch-mode measurement.
+    pub batch_queries: usize,
+    /// Queries in the online (one-at-a-time) measurement.
+    pub online_queries: usize,
+    /// Beam width (paper's enterprise runs use 10).
+    pub beam: usize,
+    /// Labels returned.
+    pub topk: usize,
+    /// Scale divisor applied to the three large datasets (DESIGN.md §5).
+    pub scale: usize,
+    /// Restrict to these dataset names (empty = all six).
+    pub only: Vec<String>,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        Self {
+            batch_queries: 512,
+            online_queries: 128,
+            beam: 10,
+            topk: 10,
+            scale: 10,
+            only: Vec::new(),
+            seed: 2022,
+        }
+    }
+}
+
+/// One measured cell pair of Tables 1–3.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    /// Dataset name.
+    pub dataset: String,
+    /// `(algo, iter)` pair measured.
+    pub config: EngineConfig,
+    /// Batch-mode ms per query.
+    pub batch_ms: f64,
+    /// Online-mode ms per query.
+    pub online_ms: f64,
+}
+
+fn datasets_for(opts: &BenchOptions) -> Vec<DatasetSpec> {
+    paper_suite(opts.scale)
+        .into_iter()
+        .filter(|s| opts.only.is_empty() || opts.only.iter().any(|n| n == s.name))
+        .collect()
+}
+
+/// Measures batch ms/query for one engine.
+fn measure_batch(engine: &InferenceEngine, x: &CsrMatrix, opts: &BenchOptions) -> f64 {
+    // one warmup pass over a prefix
+    let warm = x.rows.min(32);
+    let xw = x.select_rows(&(0..warm).collect::<Vec<_>>());
+    std::hint::black_box(engine.predict_batch(&xw, opts.beam, opts.topk));
+    let t = Instant::now();
+    std::hint::black_box(engine.predict_batch(x, opts.beam, opts.topk));
+    t.elapsed().as_secs_f64() * 1e3 / x.rows as f64
+}
+
+/// Measures online ms/query for one engine (one query at a time, reusing
+/// the workspace as a server would).
+fn measure_online(engine: &InferenceEngine, x: &CsrMatrix, opts: &BenchOptions) -> f64 {
+    let n = x.rows.min(opts.online_queries);
+    let mut ws = engine.workspace();
+    // warmup
+    for i in 0..n.min(8) {
+        std::hint::black_box(engine.predict_with(&x.row_owned(i), opts.beam, opts.topk, &mut ws));
+    }
+    let rows: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
+    let t = Instant::now();
+    for q in &rows {
+        std::hint::black_box(engine.predict_with(q, opts.beam, opts.topk, &mut ws));
+    }
+    t.elapsed().as_secs_f64() * 1e3 / n as f64
+}
+
+/// Runs the Table-1/2/3 grid for one branching factor.
+pub fn bench_table(branching: usize, opts: &BenchOptions) -> Vec<TableRow> {
+    let mut rows = Vec::new();
+    for spec in datasets_for(opts) {
+        eprintln!("[table B={branching}] building {} ...", spec.name);
+        let model = Arc::new(synth_model(&spec, branching, opts.seed));
+        let xb = synth_queries(&spec, opts.batch_queries, opts.seed);
+        let xo = synth_queries(&spec, opts.online_queries, opts.seed + 1);
+        for config in EngineConfig::all() {
+            let engine = InferenceEngine::from_arc(Arc::clone(&model), config);
+            let batch_ms = measure_batch(&engine, &xb, opts);
+            let online_ms = measure_online(&engine, &xo, opts);
+            eprintln!(
+                "[table B={branching}] {:<28} {:<14} batch {:.3} ms/q  online {:.3} ms/q",
+                spec.name,
+                config.label(),
+                batch_ms,
+                online_ms
+            );
+            rows.push(TableRow {
+                dataset: spec.name.to_string(),
+                config,
+                batch_ms,
+                online_ms,
+            });
+        }
+    }
+    rows
+}
+
+/// Prints a Table-1/2/3-shaped table (datasets as columns).
+pub fn print_table(branching: usize, rows: &[TableRow]) {
+    let datasets: Vec<String> = {
+        let mut d: Vec<String> = rows.iter().map(|r| r.dataset.clone()).collect();
+        d.dedup();
+        d
+    };
+    println!("\nBranching Factor: {branching}");
+    print!("{:<26}", "");
+    for d in &datasets {
+        print!("{d:>16}");
+    }
+    println!();
+    for setting in ["Batch", "Online"] {
+        println!("{setting}");
+        // paper row order: per iterator, MSCM then baseline
+        for iter in IterationMethod::ALL {
+            for algo in [MatmulAlgo::Mscm, MatmulAlgo::Baseline] {
+                let label = format!("{}{}", iter.label(), algo.label());
+                print!("{label:<26}");
+                for d in &datasets {
+                    let r = rows
+                        .iter()
+                        .find(|r| &r.dataset == d && r.config.iter == iter && r.config.algo == algo)
+                        .expect("cell");
+                    let v = if setting == "Batch" {
+                        r.batch_ms
+                    } else {
+                        r.online_ms
+                    };
+                    print!("{:>13.2} ms", v);
+                }
+                println!();
+            }
+        }
+    }
+}
+
+/// Prints the Figure-3 (batch) or Figure-4 (online) speedup series:
+/// baseline time / MSCM time per iterator per dataset.
+pub fn print_figure34(branching: usize, rows: &[TableRow], online: bool) {
+    let figure = if online { "Figure 4 (online)" } else { "Figure 3 (batch)" };
+    println!("\n{figure} — MSCM speedup over non-MSCM baseline, branching {branching}");
+    let datasets: Vec<String> = {
+        let mut d: Vec<String> = rows.iter().map(|r| r.dataset.clone()).collect();
+        d.dedup();
+        d
+    };
+    print!("{:<22}", "iterator");
+    for d in &datasets {
+        print!("{d:>16}");
+    }
+    println!();
+    for iter in IterationMethod::ALL {
+        print!("{:<22}", iter.label());
+        for d in &datasets {
+            let get = |algo| {
+                let r = rows
+                    .iter()
+                    .find(|r| &r.dataset == d && r.config.iter == iter && r.config.algo == algo)
+                    .expect("cell");
+                if online {
+                    r.online_ms
+                } else {
+                    r.batch_ms
+                }
+            };
+            let speedup = get(MatmulAlgo::Baseline) / get(MatmulAlgo::Mscm);
+            print!("{speedup:>15.2}x");
+        }
+        println!();
+    }
+}
+
+/// Serializes table rows for the JSON report.
+pub fn rows_to_json(branching: usize, rows: &[TableRow]) -> Json {
+    Json::obj(vec![
+        ("branching", Json::Num(branching as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("dataset", Json::Str(r.dataset.clone())),
+                            ("config", Json::Str(r.config.label())),
+                            ("batch_ms", Json::Num(r.batch_ms)),
+                            ("online_ms", Json::Num(r.online_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Table 5: dataset statistics — paper scale vs generated scale, plus
+/// measured stats of the actually-generated models.
+pub fn table5(opts: &BenchOptions) {
+    println!(
+        "\nTable 5 — dataset statistics (scale divisor {} on large sets)",
+        opts.scale
+    );
+    println!(
+        "{:<16}{:>12}{:>12}{:>12}{:>12}{:>14}{:>12}",
+        "dataset", "paper d", "paper L", "our d", "our L", "query nnz", "col nnz"
+    );
+    for spec in datasets_for(opts) {
+        println!(
+            "{:<16}{:>12}{:>12}{:>12}{:>12}{:>14}{:>12}",
+            spec.name,
+            spec.paper_dim,
+            spec.paper_labels,
+            spec.dim,
+            spec.num_labels,
+            spec.query_nnz,
+            spec.col_nnz
+        );
+    }
+}
+
+/// Table 6: measured per-iterator time complexity inputs and memory
+/// overhead on one mid-size model.
+pub fn table6(opts: &BenchOptions) {
+    let spec = datasets_for(opts)
+        .into_iter()
+        .find(|s| s.name == "amazoncat-13k")
+        .unwrap_or_else(|| paper_suite(opts.scale)[1].clone());
+    eprintln!("[table6] building {} ...", spec.name);
+    let mut model = synth_model(&spec, 32, opts.seed);
+    let with_maps = model.stats().chunked_bytes;
+    model.drop_row_maps();
+    let plain_chunked = model.stats().chunked_bytes;
+    let csc = model.stats().csc_bytes;
+    model.build_row_maps();
+    let model = Arc::new(model);
+
+    println!("\nTable 6 — per-query complexity and measured memory overhead ({})", spec.name);
+    println!(
+        "{:<20}{:<44}{:>18}",
+        "iterator", "time complexity (paper)", "extra memory"
+    );
+    let rows: Vec<(IterationMethod, &str)> = vec![
+        (
+            IterationMethod::MarchingPointers,
+            "O(nnz_x + nnz_K)",
+        ),
+        (
+            IterationMethod::BinarySearch,
+            "O(min(nnz) * log(max(nnz)))",
+        ),
+        (IterationMethod::Hash, "O(h * nnz_x)"),
+        (IterationMethod::DenseLookup, "O(nnz_x + nnz_K / n)"),
+    ];
+    for (iter, complexity) in rows {
+        let overhead = match iter {
+            IterationMethod::MarchingPointers | IterationMethod::BinarySearch => 0usize,
+            IterationMethod::Hash => with_maps - plain_chunked,
+            IterationMethod::DenseLookup => {
+                let engine = InferenceEngine::from_arc(
+                    Arc::clone(&model),
+                    EngineConfig {
+                        algo: MatmulAlgo::Mscm,
+                        iter: IterationMethod::DenseLookup,
+                    },
+                );
+                engine.workspace().memory_bytes()
+            }
+        };
+        println!("{:<20}{:<44}{:>14} KiB", iter.label(), complexity, overhead / 1024);
+    }
+    // The per-column baseline-hash overhead MSCM amortizes away:
+    let engine = InferenceEngine::from_arc(
+        Arc::clone(&model),
+        EngineConfig {
+            algo: MatmulAlgo::Baseline,
+            iter: IterationMethod::Hash,
+        },
+    );
+    println!(
+        "\n(for contrast) per-column hash side index (NapkinXC scheme): {} KiB",
+        engine.side_index_bytes() / 1024
+    );
+    println!(
+        "model storage: CSC {} KiB, chunked {} KiB (+{:.1}% hash row maps)",
+        csc / 1024,
+        plain_chunked / 1024,
+        100.0 * (with_maps - plain_chunked) as f64 / plain_chunked as f64
+    );
+}
+
+/// Re-exported for the harness consumers that need the raw model/query
+/// builders (bench binaries).
+pub fn build_dataset(
+    name: &str,
+    branching: usize,
+    opts: &BenchOptions,
+) -> Option<(Arc<XmrModel>, CsrMatrix)> {
+    let spec = paper_suite(opts.scale).into_iter().find(|s| s.name == name)?;
+    let model = Arc::new(synth_model(&spec, branching, opts.seed));
+    let x = synth_queries(&spec, opts.batch_queries, opts.seed);
+    Some((model, x))
+}

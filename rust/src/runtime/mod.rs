@@ -1,0 +1,132 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas layer step
+//! (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`) and
+//! executes it from rust.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! Python never runs at serving time: `make artifacts` is a build step,
+//! and this module is plain `dlopen`-free rust over the PJRT C API via
+//! the `xla` crate.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus the executables loaded into it.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled computation ready to execute.
+pub struct LoadedComputation {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path it was loaded from (for logs).
+    pub source: String,
+}
+
+/// A dense f32 tensor crossing the rust↔XLA boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    /// Row-major data.
+    pub data: Vec<f32>,
+    /// Dimensions.
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    /// Creates a tensor, checking volume.
+    pub fn new(data: Vec<f32>, dims: Vec<usize>) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>(), "shape mismatch");
+        Self { data, dims }
+    }
+
+    /// 1-D tensor.
+    pub fn vec1(data: Vec<f32>) -> Self {
+        let n = data.len();
+        Self::new(data, vec![n])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+impl XlaRuntime {
+    /// Creates a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform string (e.g. "cpu"), for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Loads HLO text from `path` and compiles it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedComputation> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(LoadedComputation {
+            exe,
+            source: path.display().to_string(),
+        })
+    }
+}
+
+impl LoadedComputation {
+    /// Executes with dense f32 inputs; returns the flattened tuple of
+    /// f32 outputs (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = result.to_tuple().context("decompose result tuple")?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.shape()?;
+                let dims: Vec<usize> = match &shape {
+                    xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                    _ => anyhow::bail!("nested tuple output unsupported"),
+                };
+                let data = lit.to_vec::<f32>()?;
+                Ok(Tensor::new(data, dims))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.dims, vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn tensor_volume_mismatch_panics() {
+        Tensor::new(vec![1.0], vec![2, 2]);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_artifacts.rs — they
+    // need `make artifacts` to have produced the HLO files first.
+}

@@ -1,0 +1,310 @@
+//! The **column-chunked matrix** — the paper's central data structure
+//! (eq. 7–8).
+//!
+//! A layer weight matrix `W ∈ R^{d x L}` is stored as a horizontal array of
+//! chunks `K^(i)`, one per *parent node* of the tree layer: the chunk's
+//! columns are exactly the sibling nodes sharing that parent. Each chunk is
+//! a vertical sparse array of sparse *row* vectors (eq. 8): only nonzero
+//! rows are stored, and each stored row holds its within-chunk column ids
+//! and values contiguously.
+//!
+//! Two structural facts make this fast (paper §4 items 1–2): the beam mask
+//! activates whole chunks at a time, and sibling columns share similar row
+//! support — so the support intersection `S(x) ∩ S(K)` is walked **once per
+//! chunk** instead of once per column, over memory that is contiguous.
+
+use super::csc::CscMatrix;
+use super::hashmap::U32Map;
+use super::vec::SparseVec;
+
+/// One chunk `K^(i) ∈ R^{d x B}`: the block of sibling columns under one
+/// parent node, stored row-sparse.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    /// Number of columns `B` in this chunk (children of the parent).
+    pub ncols: u32,
+    /// Sorted ids of nonzero rows (the set `S(K)`).
+    pub row_indices: Vec<u32>,
+    /// Offsets into `col_idx`/`values` per stored row; length
+    /// `row_indices.len() + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Within-chunk column of each entry (`0..ncols`).
+    pub col_idx: Vec<u16>,
+    /// Entry values, co-indexed with `col_idx`.
+    pub values: Vec<f32>,
+    /// Optional row-id → row-position map for the hash iteration method.
+    pub row_map: Option<U32Map>,
+}
+
+impl Chunk {
+    /// Number of stored nonzero rows `|S(K)|`.
+    #[inline]
+    pub fn nnz_rows(&self) -> usize {
+        self.row_indices.len()
+    }
+
+    /// Total stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Entries `(within-chunk col, value)` of the stored row at position
+    /// `pos` in `row_indices`.
+    #[inline(always)]
+    pub fn row_entries(&self, pos: usize) -> (&[u16], &[f32]) {
+        let (s, e) = (self.row_ptr[pos] as usize, self.row_ptr[pos + 1] as usize);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+
+    /// Builds (or rebuilds) the hash index used by the hash iterator.
+    pub fn build_row_map(&mut self) {
+        self.row_map = Some(U32Map::from_pairs(
+            self.row_indices
+                .iter()
+                .enumerate()
+                .map(|(p, &r)| (r, p as u32))
+                .collect::<Vec<_>>()
+                .into_iter(),
+        ));
+    }
+
+    /// Approximate resident bytes (hash index included if built).
+    pub fn memory_bytes(&self) -> usize {
+        self.row_indices.len() * 4
+            + self.row_ptr.len() * 4
+            + self.col_idx.len() * 2
+            + self.values.len() * 4
+            + self.row_map.as_ref().map_or(0, |m| m.memory_bytes())
+    }
+}
+
+/// A weight matrix stored as per-parent chunks (eq. 7).
+///
+/// `chunk_offsets` records which contiguous column range each chunk covers:
+/// chunk `c` holds columns `chunk_offsets[c] .. chunk_offsets[c+1]`. Because
+/// chunks coincide with sibling groups, this array *is* the tree topology —
+/// it plays the role of the cluster indicator matrix `C^(l)` (eq. 4).
+#[derive(Clone, Debug)]
+pub struct ChunkedMatrix {
+    /// Number of rows (feature dimension `d`).
+    pub rows: usize,
+    /// Number of columns (`L_l`).
+    pub cols: usize,
+    /// Column offset of each chunk; length `chunks.len() + 1`.
+    pub chunk_offsets: Vec<u32>,
+    /// The chunks, in column order.
+    pub chunks: Vec<Chunk>,
+}
+
+impl ChunkedMatrix {
+    /// Converts a CSC weight matrix into chunked form.
+    ///
+    /// `chunk_offsets` partitions `0..csc.cols` into contiguous sibling
+    /// groups (strictly increasing, first element 0, last `csc.cols`).
+    /// When `with_row_maps` is set, each chunk also gets the hash index
+    /// required by [`crate::inference::IterationMethod::Hash`].
+    pub fn from_csc(csc: &CscMatrix, chunk_offsets: &[u32], with_row_maps: bool) -> Self {
+        assert!(!chunk_offsets.is_empty(), "need at least one chunk offset");
+        assert_eq!(chunk_offsets[0], 0, "chunk offsets must start at 0");
+        assert_eq!(
+            *chunk_offsets.last().unwrap() as usize,
+            csc.cols,
+            "chunk offsets must end at the column count"
+        );
+        let mut chunks = Vec::with_capacity(chunk_offsets.len() - 1);
+        for w in chunk_offsets.windows(2) {
+            let (c0, c1) = (w[0] as usize, w[1] as usize);
+            assert!(c1 > c0, "chunks must be non-empty column ranges");
+            assert!(
+                c1 - c0 <= u16::MAX as usize + 1,
+                "branching factor exceeds u16 within-chunk column index"
+            );
+            // Gather (row, col-in-chunk, value) triples and sort by row
+            // then column — this produces the row-sparse layout directly.
+            let mut triples: Vec<(u32, u16, f32)> = Vec::new();
+            for j in c0..c1 {
+                let col = csc.col(j);
+                let cj = (j - c0) as u16;
+                for (&r, &v) in col.indices.iter().zip(col.values) {
+                    triples.push((r, cj, v));
+                }
+            }
+            triples.sort_unstable_by_key(|&(r, c, _)| (r, c));
+            let mut row_indices = Vec::new();
+            let mut row_ptr = vec![0u32];
+            let mut col_idx = Vec::with_capacity(triples.len());
+            let mut values = Vec::with_capacity(triples.len());
+            for (r, c, v) in triples {
+                if row_indices.last() != Some(&r) {
+                    if !row_indices.is_empty() {
+                        row_ptr.push(col_idx.len() as u32);
+                    }
+                    row_indices.push(r);
+                }
+                col_idx.push(c);
+                values.push(v);
+            }
+            row_ptr.push(col_idx.len() as u32);
+            if row_indices.is_empty() {
+                row_ptr = vec![0]; // length invariant: nnz_rows + 1
+            }
+            let mut chunk = Chunk {
+                ncols: (c1 - c0) as u32,
+                row_indices,
+                row_ptr,
+                col_idx,
+                values,
+                row_map: None,
+            };
+            if with_row_maps {
+                chunk.build_row_map();
+            }
+            chunks.push(chunk);
+        }
+        Self {
+            rows: csc.rows,
+            cols: csc.cols,
+            chunk_offsets: chunk_offsets.to_vec(),
+            chunks,
+        }
+    }
+
+    /// Number of chunks (= number of parent nodes).
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// First column covered by chunk `c`.
+    #[inline]
+    pub fn chunk_start(&self, c: usize) -> usize {
+        self.chunk_offsets[c] as usize
+    }
+
+    /// Number of columns of chunk `c`.
+    #[inline]
+    pub fn chunk_width(&self, c: usize) -> usize {
+        (self.chunk_offsets[c + 1] - self.chunk_offsets[c]) as usize
+    }
+
+    /// Total stored entries.
+    pub fn nnz(&self) -> usize {
+        self.chunks.iter().map(|c| c.nnz()).sum()
+    }
+
+    /// Reconstructs the CSC representation (inverse of [`Self::from_csc`]);
+    /// used by round-trip tests and the model converter.
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut cols: Vec<SparseVec> = vec![SparseVec::new(); self.cols];
+        for (c, chunk) in self.chunks.iter().enumerate() {
+            let base = self.chunk_start(c);
+            for pos in 0..chunk.nnz_rows() {
+                let r = chunk.row_indices[pos];
+                let (cs, vs) = chunk.row_entries(pos);
+                for (&cj, &v) in cs.iter().zip(vs) {
+                    let col = &mut cols[base + cj as usize];
+                    col.indices.push(r);
+                    col.values.push(v);
+                }
+            }
+        }
+        // Entries were appended in ascending row order per column already.
+        CscMatrix::from_cols(cols, self.rows)
+    }
+
+    /// Approximate resident bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.chunk_offsets.len() * 4 + self.chunks.iter().map(|c| c.memory_bytes()).sum::<usize>()
+    }
+
+    /// Builds hash indices on all chunks.
+    pub fn build_row_maps(&mut self) {
+        for c in &mut self.chunks {
+            c.build_row_map();
+        }
+    }
+
+    /// Drops hash indices from all chunks (reclaims the ~40% overhead).
+    pub fn drop_row_maps(&mut self) {
+        for c in &mut self.chunks {
+            c.row_map = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 6x4 matrix, chunks of width 2; sibling columns share support.
+    fn sample_csc() -> CscMatrix {
+        CscMatrix::from_cols(
+            vec![
+                SparseVec::from_pairs(vec![(0, 1.0), (3, 2.0)]),
+                SparseVec::from_pairs(vec![(0, -1.0), (3, 0.5), (5, 1.0)]),
+                SparseVec::from_pairs(vec![(2, 4.0)]),
+                SparseVec::from_pairs(vec![(2, 3.0), (4, 1.0)]),
+            ],
+            6,
+        )
+    }
+
+    #[test]
+    fn from_csc_layout() {
+        let m = ChunkedMatrix::from_csc(&sample_csc(), &[0, 2, 4], false);
+        assert_eq!(m.num_chunks(), 2);
+        let k0 = &m.chunks[0];
+        assert_eq!(k0.row_indices, vec![0, 3, 5]);
+        // row 0 holds cols {0: 1.0, 1: -1.0}
+        let (cs, vs) = k0.row_entries(0);
+        assert_eq!(cs, &[0, 1]);
+        assert_eq!(vs, &[1.0, -1.0]);
+        // row 5 holds col {1: 1.0}
+        let (cs, vs) = k0.row_entries(2);
+        assert_eq!(cs, &[1]);
+        assert_eq!(vs, &[1.0]);
+        let k1 = &m.chunks[1];
+        assert_eq!(k1.row_indices, vec![2, 4]);
+    }
+
+    #[test]
+    fn round_trip_csc() {
+        let csc = sample_csc();
+        let m = ChunkedMatrix::from_csc(&csc, &[0, 2, 4], false);
+        assert_eq!(m.to_csc(), csc);
+    }
+
+    #[test]
+    fn round_trip_uneven_chunks() {
+        let csc = sample_csc();
+        let m = ChunkedMatrix::from_csc(&csc, &[0, 1, 4], true);
+        assert_eq!(m.to_csc(), csc);
+        assert_eq!(m.chunk_width(0), 1);
+        assert_eq!(m.chunk_width(1), 3);
+    }
+
+    #[test]
+    fn row_maps_resolve_positions() {
+        let m = ChunkedMatrix::from_csc(&sample_csc(), &[0, 2, 4], true);
+        let k0 = &m.chunks[0];
+        let map = k0.row_map.as_ref().unwrap();
+        for (p, &r) in k0.row_indices.iter().enumerate() {
+            assert_eq!(map.get(r), Some(p as u32));
+        }
+        assert_eq!(map.get(1), None);
+    }
+
+    #[test]
+    fn empty_chunk_is_representable() {
+        let csc = CscMatrix::from_cols(vec![SparseVec::new(), SparseVec::new()], 4);
+        let m = ChunkedMatrix::from_csc(&csc, &[0, 2], false);
+        assert_eq!(m.chunks[0].nnz_rows(), 0);
+        assert_eq!(m.to_csc(), csc);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk offsets must end")]
+    fn bad_offsets_panic() {
+        ChunkedMatrix::from_csc(&sample_csc(), &[0, 2], false);
+    }
+}

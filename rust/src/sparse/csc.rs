@@ -1,0 +1,133 @@
+//! Compressed sparse column matrices — the vanilla storage for ranker
+//! weight matrices `W^(l)` (one column per tree node) and the baseline
+//! format the paper's MSCM is benchmarked against.
+
+use super::vec::{SparseVec, SparseVecView};
+
+/// CSC matrix with `u32` row indices and `f32` values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CscMatrix {
+    /// Number of rows (feature dimension `d` for weight matrices).
+    pub rows: usize,
+    /// Number of columns (clusters/labels `L_l`).
+    pub cols: usize,
+    /// Column pointer array, length `cols + 1`.
+    pub indptr: Vec<usize>,
+    /// Row indices, sorted ascending within each column.
+    pub indices: Vec<u32>,
+    /// Values co-indexed with `indices`.
+    pub values: Vec<f32>,
+}
+
+impl CscMatrix {
+    /// An empty `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            indptr: vec![0; cols + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Builds from per-column sparse vectors.
+    pub fn from_cols(cols: Vec<SparseVec>, rows: usize) -> Self {
+        let n = cols.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let nnz: usize = cols.iter().map(|c| c.nnz()).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for c in &cols {
+            debug_assert!(c.indices.iter().all(|&i| (i as usize) < rows));
+            indices.extend_from_slice(&c.indices);
+            values.extend_from_slice(&c.values);
+            indptr.push(indices.len());
+        }
+        Self {
+            rows,
+            cols: n,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Borrowed view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> SparseVecView<'_> {
+        let (s, e) = (self.indptr[j], self.indptr[j + 1]);
+        SparseVecView {
+            indices: &self.indices[s..e],
+            values: &self.values[s..e],
+        }
+    }
+
+    /// Owned copy of column `j`.
+    pub fn col_owned(&self, j: usize) -> SparseVec {
+        let v = self.col(j);
+        SparseVec {
+            indices: v.indices.to_vec(),
+            values: v.values.to_vec(),
+        }
+    }
+
+    /// Average nonzeros per column.
+    pub fn avg_col_nnz(&self) -> f64 {
+        if self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.cols as f64
+        }
+    }
+
+    /// Approximate resident bytes of the structure.
+    pub fn memory_bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // columns: [ (0,1.0),(2,3.0) ], [ (1,4.0) ], []
+        CscMatrix::from_cols(
+            vec![
+                SparseVec::from_pairs(vec![(0, 1.0), (2, 3.0)]),
+                SparseVec::from_pairs(vec![(1, 4.0)]),
+                SparseVec::new(),
+            ],
+            3,
+        )
+    }
+
+    #[test]
+    fn col_views() {
+        let m = sample();
+        assert_eq!(m.col(0).indices, &[0, 2]);
+        assert_eq!(m.col(1).values, &[4.0]);
+        assert!(m.col(2).is_empty());
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn avg_col_nnz_counts() {
+        let m = sample();
+        assert!((m.avg_col_nnz() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_accounting_positive() {
+        assert!(sample().memory_bytes() > 0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Compressed sparse row matrices — storage for the query matrix `X`.
+
+use super::csc::CscMatrix;
+use super::vec::{SparseVec, SparseVecView};
+
+/// CSR matrix with `u32` column indices and `f32` values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsrMatrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row pointer array, length `rows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted ascending within each row.
+    pub indices: Vec<u32>,
+    /// Values co-indexed with `indices`.
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// An empty `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            indptr: vec![0; rows + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Builds from per-row sparse vectors.
+    pub fn from_rows(rows: Vec<SparseVec>, cols: usize) -> Self {
+        let n = rows.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let nnz: usize = rows.iter().map(|r| r.nnz()).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for r in &rows {
+            debug_assert!(r.indices.iter().all(|&i| (i as usize) < cols));
+            indices.extend_from_slice(&r.indices);
+            values.extend_from_slice(&r.values);
+            indptr.push(indices.len());
+        }
+        Self {
+            rows: n,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Borrowed view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseVecView<'_> {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        SparseVecView {
+            indices: &self.indices[s..e],
+            values: &self.values[s..e],
+        }
+    }
+
+    /// Owned copy of row `i`.
+    pub fn row_owned(&self, i: usize) -> SparseVec {
+        let v = self.row(i);
+        SparseVec {
+            indices: v.indices.to_vec(),
+            values: v.values.to_vec(),
+        }
+    }
+
+    /// A single-row CSR matrix wrapping one query (online setting).
+    pub fn from_single_row(row: &SparseVec, cols: usize) -> Self {
+        Self::from_rows(vec![row.clone()], cols)
+    }
+
+    /// Selects a subset of rows into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Self {
+        let rows = idx.iter().map(|&i| self.row_owned(i)).collect();
+        Self::from_rows(rows, self.cols)
+    }
+
+    /// Column-major transpose-free conversion to CSC.
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            counts[c + 1] += counts[c];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[k] as usize;
+                let dst = cursor[c];
+                cursor[c] += 1;
+                indices[dst] = r as u32;
+                values[dst] = self.values[k];
+            }
+        }
+        CscMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// L2-normalizes every row in place (standard for TFIDF features).
+    pub fn normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+            let n: f32 = self.values[s..e].iter().map(|v| v * v).sum::<f32>().sqrt();
+            if n > 0.0 {
+                for v in &mut self.values[s..e] {
+                    *v /= n;
+                }
+            }
+        }
+    }
+
+    /// Average nonzeros per row.
+    pub fn avg_row_nnz(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1 0 2], [0 0 0], [3 4 0]]
+        CsrMatrix {
+            rows: 3,
+            cols: 3,
+            indptr: vec![0, 2, 2, 4],
+            indices: vec![0, 2, 0, 1],
+            values: vec![1.0, 2.0, 3.0, 4.0],
+        }
+    }
+
+    #[test]
+    fn row_views() {
+        let m = sample();
+        assert_eq!(m.row(0).indices, &[0, 2]);
+        assert!(m.row(1).is_empty());
+        assert_eq!(m.row(2).values, &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn from_rows_round_trip() {
+        let m = sample();
+        let rows: Vec<SparseVec> = (0..3).map(|i| m.row_owned(i)).collect();
+        assert_eq!(CsrMatrix::from_rows(rows, 3), m);
+    }
+
+    #[test]
+    fn to_csc_matches_dense() {
+        let m = sample();
+        let c = m.to_csc();
+        assert_eq!(c.col(0).indices, &[0, 2]);
+        assert_eq!(c.col(0).values, &[1.0, 3.0]);
+        assert_eq!(c.col(1).indices, &[2]);
+        assert_eq!(c.col(2).indices, &[0]);
+        assert_eq!(c.col(2).values, &[2.0]);
+    }
+
+    #[test]
+    fn normalize_rows_unit() {
+        let mut m = sample();
+        m.normalize_rows();
+        let r = m.row(2);
+        let n: f32 = r.values.iter().map(|v| v * v).sum::<f32>();
+        assert!((n - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.row(0).values, &[3.0, 4.0]);
+        assert_eq!(s.row(1).values, &[1.0, 2.0]);
+    }
+}

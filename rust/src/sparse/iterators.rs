@@ -1,0 +1,239 @@
+//! The four ways to walk the support intersection `S(x) ∩ S(K)` when
+//! computing a sparse-vector × chunk product (paper §4, items 1–4, and
+//! Algorithm 2).
+//!
+//! Every function here computes `z = x K` for one query row `x` and one
+//! chunk `K`, accumulating into a caller-provided dense output of length
+//! `K.ncols` (the caller zeroes it). All four produce *identical* results
+//! — they differ only in how the common nonzero rows are found:
+//!
+//! | method             | per-query complexity                      | extra memory |
+//! |--------------------|-------------------------------------------|--------------|
+//! | marching pointers  | `O(nnz_x + nnz_K)`                        | none         |
+//! | binary search      | `O(min·log(max))`                         | none         |
+//! | hash-map           | `O(h · nnz_x)`                            | `O(c·nnz_K)` |
+//! | dense lookup       | `O(nnz_x + nnz_K / n)` (fill amortized)   | `O(d)`       |
+//!
+//! (Table 6 of the paper.)
+
+use super::chunked::Chunk;
+use super::vec::{lower_bound, SparseVecView};
+
+/// Accumulate `x_val * K[row at pos]` into `out`.
+#[inline(always)]
+fn emit(chunk: &Chunk, pos: usize, x_val: f32, out: &mut [f32]) {
+    let (cols, vals) = chunk.row_entries(pos);
+    for (&c, &v) in cols.iter().zip(vals) {
+        // `c < chunk.ncols == out.len()` by construction; an unchecked
+        // variant was tried in the §Perf pass and showed no measurable
+        // gain (the loop is memory-bound), so safe indexing stays.
+        out[c as usize] += x_val * v;
+    }
+}
+
+/// Item 1 — **marching pointers**: advance two sorted cursors one step at
+/// a time.
+pub fn vec_chunk_marching(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    let rows = &chunk.row_indices;
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < x.indices.len() && b < rows.len() {
+        let (ia, ib) = (x.indices[a], rows[b]);
+        if ia == ib {
+            emit(chunk, b, x.values[a], out);
+            a += 1;
+            b += 1;
+        } else if ia < ib {
+            a += 1;
+        } else {
+            b += 1;
+        }
+    }
+}
+
+/// Item 2 — **binary search**: marching pointers, but the lagging cursor
+/// jumps via `LowerBound` (mirrors baseline Alg. 4).
+pub fn vec_chunk_binary(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    let rows = &chunk.row_indices;
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < x.indices.len() && b < rows.len() {
+        let (ia, ib) = (x.indices[a], rows[b]);
+        if ia == ib {
+            emit(chunk, b, x.values[a], out);
+            a += 1;
+            b += 1;
+        } else if ia < ib {
+            a += lower_bound(&x.indices[a..], ib);
+        } else {
+            b += lower_bound(&rows[b..], ia);
+        }
+    }
+}
+
+/// Item 3 — **hash-map**: iterate the query nonzeros and look each row up
+/// in the chunk's prebuilt row map (one map per chunk — NapkinXC keeps one
+/// per *column*, which is the overhead MSCM removes).
+///
+/// # Panics
+/// If the chunk was built without row maps.
+pub fn vec_chunk_hash(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    let map = chunk
+        .row_map
+        .as_ref()
+        .expect("hash iteration requires chunk row maps (build_row_maps)");
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        if let Some(pos) = map.get(i) {
+            emit(chunk, pos as usize, xv, out);
+        }
+    }
+}
+
+/// Reusable `O(d)` scratch for the dense-lookup method: `pos[row]` holds
+/// `row position + 1` within the currently-loaded chunk, 0 meaning absent.
+/// One instance is recycled across the whole run (per thread) and cleared
+/// by re-walking the chunk's nonzero rows — never by an `O(d)` memset.
+#[derive(Debug)]
+pub struct DenseScratch {
+    pos: Vec<u32>,
+    loaded: bool,
+}
+
+impl DenseScratch {
+    /// Scratch for feature dimension `d`.
+    pub fn new(d: usize) -> Self {
+        Self {
+            pos: vec![0; d],
+            loaded: false,
+        }
+    }
+
+    /// Feature dimension this scratch serves.
+    pub fn dim(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// Loads a chunk's nonzero-row positions (cost `O(nnz_K)` — amortized
+    /// across all queries that hit this chunk when blocks are evaluated in
+    /// chunk order, Alg. 3 line 7).
+    pub fn load(&mut self, chunk: &Chunk) {
+        debug_assert!(!self.loaded, "DenseScratch::load without clear");
+        for (p, &r) in chunk.row_indices.iter().enumerate() {
+            self.pos[r as usize] = p as u32 + 1;
+        }
+        self.loaded = true;
+    }
+
+    /// Clears the previously-loaded chunk.
+    pub fn clear(&mut self, chunk: &Chunk) {
+        for &r in &chunk.row_indices {
+            self.pos[r as usize] = 0;
+        }
+        self.loaded = false;
+    }
+
+    /// Approximate resident bytes (`O(d)` — Table 6).
+    pub fn memory_bytes(&self) -> usize {
+        self.pos.len() * 4
+    }
+}
+
+/// Item 4 — **dense lookup**: like hash, but row positions come from the
+/// dense scratch that [`DenseScratch::load`] filled for this chunk.
+pub fn vec_chunk_dense(
+    x: SparseVecView<'_>,
+    chunk: &Chunk,
+    scratch: &DenseScratch,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    debug_assert!(scratch.loaded, "DenseScratch must be loaded with this chunk");
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        let p = scratch.pos[i as usize];
+        if p != 0 {
+            emit(chunk, (p - 1) as usize, xv, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{ChunkedMatrix, CscMatrix, SparseVec};
+
+    fn chunk_and_query() -> (ChunkedMatrix, SparseVec) {
+        let csc = CscMatrix::from_cols(
+            vec![
+                SparseVec::from_pairs(vec![(0, 1.0), (3, 2.0), (7, 1.0)]),
+                SparseVec::from_pairs(vec![(0, -1.0), (3, 0.5)]),
+                SparseVec::from_pairs(vec![(5, 4.0)]),
+            ],
+            8,
+        );
+        let m = ChunkedMatrix::from_csc(&csc, &[0, 3], true);
+        let x = SparseVec::from_pairs(vec![(0, 2.0), (3, 1.0), (5, -1.0), (6, 9.0)]);
+        (m, x)
+    }
+
+    /// Dense reference: z = x^T K.
+    fn reference(m: &ChunkedMatrix, x: &SparseVec) -> Vec<f32> {
+        let csc = m.to_csc();
+        (0..csc.cols)
+            .map(|j| x.view().dot_marching(csc.col(j)))
+            .collect()
+    }
+
+    #[test]
+    fn all_methods_match_reference() {
+        let (m, x) = chunk_and_query();
+        let chunk = &m.chunks[0];
+        let expect = reference(&m, &x);
+
+        let mut out = vec![0.0; 3];
+        vec_chunk_marching(x.view(), chunk, &mut out);
+        assert_eq!(out, expect);
+
+        out.fill(0.0);
+        vec_chunk_binary(x.view(), chunk, &mut out);
+        assert_eq!(out, expect);
+
+        out.fill(0.0);
+        vec_chunk_hash(x.view(), chunk, &mut out);
+        assert_eq!(out, expect);
+
+        let mut scratch = DenseScratch::new(8);
+        scratch.load(chunk);
+        out.fill(0.0);
+        vec_chunk_dense(x.view(), chunk, &scratch, &mut out);
+        assert_eq!(out, expect);
+        scratch.clear(chunk);
+        assert!(scratch.pos.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn empty_query_yields_zeros() {
+        let (m, _) = chunk_and_query();
+        let chunk = &m.chunks[0];
+        let x = SparseVec::new();
+        let mut out = vec![0.0; 3];
+        vec_chunk_marching(x.view(), chunk, &mut out);
+        vec_chunk_binary(x.view(), chunk, &mut out);
+        vec_chunk_hash(x.view(), chunk, &mut out);
+        assert_eq!(out, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn scratch_reload_cycle() {
+        let (m, x) = chunk_and_query();
+        let chunk = &m.chunks[0];
+        let mut scratch = DenseScratch::new(8);
+        for _ in 0..3 {
+            scratch.load(chunk);
+            let mut out = vec![0.0; 3];
+            vec_chunk_dense(x.view(), chunk, &scratch, &mut out);
+            assert_eq!(out, reference(&m, &x));
+            scratch.clear(chunk);
+        }
+    }
+}

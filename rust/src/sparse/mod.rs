@@ -1,0 +1,29 @@
+//! Sparse-matrix substrate.
+//!
+//! The paper's models are backed by three matrix representations:
+//!
+//! - [`CsrMatrix`] — compressed sparse row; used for the query matrix `X`
+//!   (row-major access to individual queries).
+//! - [`CscMatrix`] — compressed sparse column; the *vanilla* storage for
+//!   ranker weight matrices `W^(l)` (column-major access to rankers) and
+//!   the baseline the paper compares against.
+//! - [`ChunkedMatrix`] — the paper's contribution: `W^(l)` stored as a
+//!   horizontal array of per-parent **chunks** (eq. 7–8), each chunk a
+//!   vertical sparse array of sparse row vectors over the sibling columns.
+//!
+//! [`iterators`] implements the four ways of walking the support
+//! intersection `S(x) ∩ S(K)` (marching pointers, binary search, hash-map,
+//! dense lookup) shared by the baseline and MSCM kernels.
+
+pub mod chunked;
+pub mod csc;
+pub mod csr;
+pub mod hashmap;
+pub mod iterators;
+pub mod vec;
+
+pub use chunked::{Chunk, ChunkedMatrix};
+pub use csc::CscMatrix;
+pub use csr::CsrMatrix;
+pub use hashmap::U32Map;
+pub use vec::{SparseVec, SparseVecView};

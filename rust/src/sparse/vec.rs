@@ -1,0 +1,279 @@
+//! Sparse vectors: owned ([`SparseVec`]) and borrowed ([`SparseVecView`]).
+//!
+//! Indices are `u32` (the paper's feature dimensions top out at d = 4M)
+//! and are kept sorted ascending; values are `f32` to match the memory
+//! budget of enterprise-scale models.
+
+/// An owned sparse vector with sorted, unique indices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    /// Nonzero coordinates, strictly ascending.
+    pub indices: Vec<u32>,
+    /// Values co-indexed with `indices`.
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Creates an empty vector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builds from parallel index/value arrays, sorting by index and
+    /// summing duplicates.
+    pub fn from_pairs(mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let mut indices = Vec::with_capacity(pairs.len());
+        let mut values: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            if let Some(&last) = indices.last() {
+                if last == i {
+                    *values.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            indices.push(i);
+            values.push(v);
+        }
+        Self { indices, values }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Borrowed view.
+    pub fn view(&self) -> SparseVecView<'_> {
+        SparseVecView {
+            indices: &self.indices,
+            values: &self.values,
+        }
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.values.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Scales all values in place.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+
+    /// Normalizes to unit L2 norm (no-op on the zero vector).
+    pub fn normalize(&mut self) {
+        let n = self.norm();
+        if n > 0.0 {
+            self.scale(1.0 / n);
+        }
+    }
+
+    /// Drops entries with `|value| <= threshold` (model pruning).
+    pub fn prune(&mut self, threshold: f32) {
+        let mut w = 0;
+        for r in 0..self.indices.len() {
+            if self.values[r].abs() > threshold {
+                self.indices[w] = self.indices[r];
+                self.values[w] = self.values[r];
+                w += 1;
+            }
+        }
+        self.indices.truncate(w);
+        self.values.truncate(w);
+    }
+
+    /// `self += alpha * other`, merging supports.
+    pub fn axpy(&mut self, alpha: f32, other: SparseVecView<'_>) {
+        let mut out_i = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut out_v = Vec::with_capacity(self.nnz() + other.nnz());
+        let (mut a, mut b) = (0, 0);
+        while a < self.indices.len() || b < other.indices.len() {
+            let ia = self.indices.get(a).copied().unwrap_or(u32::MAX);
+            let ib = other.indices.get(b).copied().unwrap_or(u32::MAX);
+            if ia == ib {
+                out_i.push(ia);
+                out_v.push(self.values[a] + alpha * other.values[b]);
+                a += 1;
+                b += 1;
+            } else if ia < ib {
+                out_i.push(ia);
+                out_v.push(self.values[a]);
+                a += 1;
+            } else {
+                out_i.push(ib);
+                out_v.push(alpha * other.values[b]);
+                b += 1;
+            }
+        }
+        self.indices = out_i;
+        self.values = out_v;
+    }
+}
+
+/// A borrowed sparse vector (e.g. one CSR row or CSC column).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseVecView<'a> {
+    /// Nonzero coordinates, strictly ascending.
+    pub indices: &'a [u32],
+    /// Values co-indexed with `indices`.
+    pub values: &'a [f32],
+}
+
+impl<'a> SparseVecView<'a> {
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True when there are no stored entries.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Dot product via marching pointers (Alg. 4's simplest variant).
+    pub fn dot_marching(&self, other: SparseVecView<'_>) -> f32 {
+        let mut z = 0.0f32;
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.indices.len() && b < other.indices.len() {
+            let (ia, ib) = (self.indices[a], other.indices[b]);
+            if ia == ib {
+                z += self.values[a] * other.values[b];
+                a += 1;
+                b += 1;
+            } else if ia < ib {
+                a += 1;
+            } else {
+                b += 1;
+            }
+        }
+        z
+    }
+
+    /// Dot product via progressive binary search (paper Alg. 4):
+    /// on a mismatch, `LowerBound` jumps the lagging cursor forward.
+    pub fn dot_binary_search(&self, other: SparseVecView<'_>) -> f32 {
+        let mut z = 0.0f32;
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.indices.len() && b < other.indices.len() {
+            let (ia, ib) = (self.indices[a], other.indices[b]);
+            if ia == ib {
+                z += self.values[a] * other.values[b];
+                a += 1;
+                b += 1;
+            } else if ia < ib {
+                a += lower_bound(&self.indices[a..], ib);
+            } else {
+                b += lower_bound(&other.indices[b..], ia);
+            }
+        }
+        z
+    }
+
+    /// Materializes to a dense vector of length `d` (test helper).
+    pub fn to_dense(&self, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0; d];
+        for (&i, &v) in self.indices.iter().zip(self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+/// Index of the first element of `sorted` not less than `key`
+/// (paper's `LowerBound`).
+///
+/// Galloping variant: probe 1, 2, 4, … then binary-search the final
+/// window. In progressive intersection walks the next hit is usually
+/// close to the cursor, so this beats a full `partition_point` over the
+/// remaining slice (§Perf: ~1.5x on the binary-search iterators).
+#[inline]
+pub fn lower_bound(sorted: &[u32], key: u32) -> usize {
+    let n = sorted.len();
+    let mut hi = 1usize;
+    let mut lo = 0usize;
+    while hi < n && sorted[hi] < key {
+        lo = hi;
+        hi <<= 1;
+    }
+    let end = hi.min(n);
+    lo + sorted[lo..end].partition_point(|&x| x < key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(pairs: &[(u32, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    #[test]
+    fn from_pairs_sorts_and_merges() {
+        let v = sv(&[(5, 1.0), (2, 2.0), (5, 3.0)]);
+        assert_eq!(v.indices, vec![2, 5]);
+        assert_eq!(v.values, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_variants_agree() {
+        let a = sv(&[(0, 1.0), (3, 2.0), (7, -1.5), (9, 4.0)]);
+        let b = sv(&[(1, 5.0), (3, 0.5), (9, 2.0), (12, 8.0)]);
+        let expect = 2.0 * 0.5 + 4.0 * 2.0;
+        assert_eq!(a.view().dot_marching(b.view()), expect);
+        assert_eq!(a.view().dot_binary_search(b.view()), expect);
+        assert_eq!(b.view().dot_binary_search(a.view()), expect);
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        let a = sv(&[(0, 1.0)]);
+        let e = SparseVec::new();
+        assert_eq!(a.view().dot_marching(e.view()), 0.0);
+        assert_eq!(a.view().dot_binary_search(e.view()), 0.0);
+    }
+
+    #[test]
+    fn dot_disjoint_is_zero() {
+        let a = sv(&[(0, 1.0), (2, 1.0)]);
+        let b = sv(&[(1, 1.0), (3, 1.0)]);
+        assert_eq!(a.view().dot_marching(b.view()), 0.0);
+        assert_eq!(a.view().dot_binary_search(b.view()), 0.0);
+    }
+
+    #[test]
+    fn axpy_merges_supports() {
+        let mut a = sv(&[(1, 1.0), (4, 2.0)]);
+        let b = sv(&[(0, 3.0), (4, 1.0)]);
+        a.axpy(2.0, b.view());
+        assert_eq!(a.indices, vec![0, 1, 4]);
+        assert_eq!(a.values, vec![6.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut a = sv(&[(0, 3.0), (1, 4.0)]);
+        a.normalize();
+        assert!((a.norm() - 1.0).abs() < 1e-6);
+        let mut z = SparseVec::new();
+        z.normalize(); // must not panic
+    }
+
+    #[test]
+    fn prune_drops_small() {
+        let mut a = sv(&[(0, 0.01), (1, -0.5), (2, 0.2)]);
+        a.prune(0.1);
+        assert_eq!(a.indices, vec![1, 2]);
+    }
+
+    #[test]
+    fn lower_bound_matches_partition() {
+        let xs = [2u32, 4, 4, 8];
+        assert_eq!(lower_bound(&xs, 0), 0);
+        assert_eq!(lower_bound(&xs, 4), 1);
+        assert_eq!(lower_bound(&xs, 5), 3);
+        assert_eq!(lower_bound(&xs, 9), 4);
+    }
+}

@@ -1,0 +1,254 @@
+//! Hierarchical balanced spherical k-means over PIFA label embeddings —
+//! builds the label tree (the clustering `Y_i^(l)` of paper §3.1).
+
+use crate::sparse::SparseVec;
+use crate::util::Rng;
+
+/// The label tree produced by clustering.
+///
+/// Layers are top-down; bottom-layer nodes are singleton labels in
+/// clustered order, with `label_perm[j]` giving the original label id of
+/// bottom column `j`.
+#[derive(Clone, Debug)]
+pub struct ClusterTree {
+    /// Per layer: chunk offsets partitioning that layer's nodes by parent
+    /// (layer 0 has a single chunk under the implicit root).
+    pub layer_offsets: Vec<Vec<u32>>,
+    /// Per layer, per node: sorted original label ids under the node.
+    pub node_labels: Vec<Vec<Vec<u32>>>,
+    /// Bottom-layer column → original label id.
+    pub label_perm: Vec<u32>,
+}
+
+impl ClusterTree {
+    /// Number of layers (= model depth).
+    pub fn depth(&self) -> usize {
+        self.layer_offsets.len()
+    }
+
+    /// Number of nodes in layer `l`.
+    pub fn layer_size(&self, l: usize) -> usize {
+        self.node_labels[l].len()
+    }
+}
+
+/// Splits `members` (label ids) into `k` balanced clusters by spherical
+/// k-means with greedy balanced assignment; returns the clusters in a
+/// deterministic order.
+fn balanced_kmeans(
+    emb: &[SparseVec],
+    members: &[u32],
+    k: usize,
+    dim: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<u32>> {
+    let n = members.len();
+    debug_assert!(k >= 2 && n >= k);
+    let cap = n.div_ceil(k);
+    // init: k distinct random members as centroids
+    let picks = rng.sample_distinct(n, k);
+    let mut centroids: Vec<Vec<f32>> = picks
+        .iter()
+        .map(|&p| emb[members[p as usize] as usize].view().to_dense(dim))
+        .collect();
+    let mut assign = vec![0usize; n];
+    for _round in 0..6 {
+        // score all (member, centroid) pairs
+        let mut scored: Vec<(f32, u32, u16)> = Vec::with_capacity(n * k);
+        for (mi, &m) in members.iter().enumerate() {
+            let e = emb[m as usize].view();
+            for (ci, c) in centroids.iter().enumerate() {
+                let mut s = 0.0f32;
+                for (&i, &v) in e.indices.iter().zip(e.values) {
+                    s += v * c[i as usize];
+                }
+                scored.push((s, mi as u32, ci as u16));
+            }
+        }
+        // greedy balanced assignment: best similarities first
+        scored.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut counts = vec![0usize; k];
+        let mut done = vec![false; n];
+        let mut assigned = 0;
+        for &(_, mi, ci) in &scored {
+            let (mi, ci) = (mi as usize, ci as usize);
+            if !done[mi] && counts[ci] < cap {
+                done[mi] = true;
+                counts[ci] += 1;
+                assign[mi] = ci;
+                assigned += 1;
+                if assigned == n {
+                    break;
+                }
+            }
+        }
+        // recompute centroids (normalized mean of members)
+        for c in &mut centroids {
+            c.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for (mi, &m) in members.iter().enumerate() {
+            let c = &mut centroids[assign[mi]];
+            let e = emb[m as usize].view();
+            for (&i, &v) in e.indices.iter().zip(e.values) {
+                c[i as usize] += v;
+            }
+        }
+        for c in &mut centroids {
+            let norm: f32 = c.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                c.iter_mut().for_each(|v| *v /= norm);
+            }
+        }
+    }
+    let mut out = vec![Vec::new(); k];
+    for (mi, &m) in members.iter().enumerate() {
+        out[assign[mi]].push(m);
+    }
+    out.iter_mut().for_each(|g| g.sort_unstable());
+    out
+}
+
+/// Builds the hierarchical clustering: every group is recursively split
+/// into at most `branching` balanced clusters until all groups are
+/// singletons. Balanced splits keep group sizes within one of each other,
+/// so all leaves land on the same layer (the model's uniform-depth
+/// requirement).
+pub fn hierarchical_kmeans(emb: &[SparseVec], branching: usize, seed: u64) -> ClusterTree {
+    assert!(branching >= 2);
+    let num_labels = emb.len();
+    assert!(num_labels >= 1);
+    let dim = emb
+        .iter()
+        .flat_map(|e| e.indices.iter().map(|&i| i as usize + 1))
+        .max()
+        .unwrap_or(1);
+    let mut rng = Rng::seed_from_u64(seed);
+
+    let mut layer_offsets: Vec<Vec<u32>> = Vec::new();
+    let mut node_labels: Vec<Vec<Vec<u32>>> = Vec::new();
+    // current groups, each = (labels under a node of the previous layer)
+    let mut current: Vec<Vec<u32>> = vec![(0..num_labels as u32).collect()];
+    loop {
+        // split each parent group
+        let mut offsets: Vec<u32> = vec![0];
+        let mut next: Vec<Vec<u32>> = Vec::new();
+        for group in &current {
+            let children: Vec<Vec<u32>> = if group.len() == 1 {
+                vec![group.clone()]
+            } else {
+                let k = branching.min(group.len());
+                balanced_kmeans(emb, group, k, dim, &mut rng)
+                    .into_iter()
+                    .filter(|g| !g.is_empty())
+                    .collect()
+            };
+            for ch in children {
+                next.push(ch);
+            }
+            offsets.push(next.len() as u32);
+        }
+        layer_offsets.push(offsets);
+        node_labels.push(next.clone());
+        let all_single = next.iter().all(|g| g.len() == 1);
+        current = next;
+        if all_single {
+            break;
+        }
+    }
+    let label_perm: Vec<u32> = current.iter().map(|g| g[0]).collect();
+    ClusterTree {
+        layer_offsets,
+        node_labels,
+        label_perm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clustered_embeddings(groups: usize, per: usize, dim: usize) -> Vec<SparseVec> {
+        // group g occupies features [g*8, g*8+4)
+        let mut out = Vec::new();
+        for g in 0..groups {
+            for i in 0..per {
+                let mut v = SparseVec::from_pairs(vec![
+                    ((g * 8) as u32, 1.0),
+                    ((g * 8 + 1 + i % 3) as u32, 0.5),
+                ]);
+                v.normalize();
+                assert!(((g * 8 + 4) as usize) < dim);
+                out.push(v);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tree_structure_invariants() {
+        let emb = clustered_embeddings(8, 4, 80);
+        let t = hierarchical_kmeans(&emb, 4, 1);
+        // bottom layer: singletons, a permutation of labels
+        let mut perm = t.label_perm.clone();
+        perm.sort_unstable();
+        assert_eq!(perm, (0..32).collect::<Vec<u32>>());
+        // offsets chain: layer l offsets has layer_size(l-1)+1 entries
+        for l in 1..t.depth() {
+            assert_eq!(t.layer_offsets[l].len(), t.layer_size(l - 1) + 1);
+            assert_eq!(
+                *t.layer_offsets[l].last().unwrap() as usize,
+                t.layer_size(l)
+            );
+        }
+        // node labels of a parent = union of its children's
+        for l in 1..t.depth() {
+            for p in 0..t.layer_size(l - 1) {
+                let (c0, c1) = (
+                    t.layer_offsets[l][p] as usize,
+                    t.layer_offsets[l][p + 1] as usize,
+                );
+                let mut union: Vec<u32> = (c0..c1)
+                    .flat_map(|c| t.node_labels[l][c].iter().copied())
+                    .collect();
+                union.sort_unstable();
+                assert_eq!(union, t.node_labels[l - 1][p]);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_sizes() {
+        let emb = clustered_embeddings(4, 8, 40);
+        let t = hierarchical_kmeans(&emb, 2, 3);
+        // top layer: two groups of 16
+        assert_eq!(t.layer_size(0), 2);
+        for g in &t.node_labels[0] {
+            assert_eq!(g.len(), 16);
+        }
+    }
+
+    #[test]
+    fn recovers_planted_clusters() {
+        let emb = clustered_embeddings(4, 4, 40);
+        let t = hierarchical_kmeans(&emb, 4, 7);
+        // the 4 top-layer clusters should be exactly the planted groups
+        let mut found = 0;
+        for g in &t.node_labels[0] {
+            let planted: Vec<Vec<u32>> = (0..4)
+                .map(|k| (k * 4..(k + 1) * 4).map(|v| v as u32).collect())
+                .collect();
+            if planted.contains(g) {
+                found += 1;
+            }
+        }
+        assert!(found >= 3, "recovered only {found}/4 planted clusters");
+    }
+
+    #[test]
+    fn single_label_tree() {
+        let emb = vec![SparseVec::from_pairs(vec![(0, 1.0)])];
+        let t = hierarchical_kmeans(&emb, 4, 0);
+        assert_eq!(t.depth(), 1);
+        assert_eq!(t.label_perm, vec![0]);
+    }
+}

@@ -1,0 +1,57 @@
+//! PIFA — Positive Instance Feature Aggregation label embeddings
+//! (paper §5's label representation; see PECOS).
+//!
+//! The embedding of label `l` is the L2-normalized sum of the feature
+//! vectors of all instances positive for `l`.
+
+use crate::sparse::{CsrMatrix, SparseVec};
+
+/// Computes PIFA embeddings: one sparse row per label.
+pub fn pifa_embeddings(
+    features: &CsrMatrix,
+    labels: &[Vec<u32>],
+    num_labels: usize,
+) -> Vec<SparseVec> {
+    // Accumulate per-label via pair collection (sparse, cache-friendly
+    // for the modest corpora the trainer targets).
+    let mut acc: Vec<Vec<(u32, f32)>> = vec![Vec::new(); num_labels];
+    for (i, ls) in labels.iter().enumerate() {
+        let row = features.row(i);
+        for &l in ls {
+            let a = &mut acc[l as usize];
+            a.extend(row.indices.iter().zip(row.values).map(|(&f, &v)| (f, v)));
+        }
+    }
+    acc.into_iter()
+        .map(|pairs| {
+            let mut v = SparseVec::from_pairs(pairs);
+            v.normalize();
+            v
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_positive_instances() {
+        let x = CsrMatrix::from_rows(
+            vec![
+                SparseVec::from_pairs(vec![(0, 1.0)]),
+                SparseVec::from_pairs(vec![(1, 1.0)]),
+                SparseVec::from_pairs(vec![(0, 1.0), (1, 1.0)]),
+            ],
+            3,
+        );
+        let labels = vec![vec![0], vec![1], vec![0, 1]];
+        let e = pifa_embeddings(&x, &labels, 3);
+        // label 0: docs 0,2 → features {0: 2.0, 1: 1.0} normalized
+        assert_eq!(e[0].indices, vec![0, 1]);
+        assert!(e[0].values[0] > e[0].values[1]);
+        assert!((e[0].norm() - 1.0).abs() < 1e-6);
+        // label 2 has no positives → zero vector
+        assert_eq!(e[2].nnz(), 0);
+    }
+}

@@ -1,0 +1,224 @@
+//! One-vs-rest logistic ranker training over the label tree (the
+//! "logistic-like" rankers of paper eq. 1).
+//!
+//! For node `Y_i^(l)` the positives are training instances carrying any
+//! label under the node; the negatives are instances under the *parent*
+//! that are not positives (teacher-forced hard negatives, as in
+//! Parabel/PECOS). Rankers are trained by SGD on the logistic loss with
+//! L2 regularization applied lazily to touched coordinates, then pruned
+//! to sparsity — pruning is what creates the sparse weight matrices MSCM
+//! exploits.
+
+use super::cluster::ClusterTree;
+use crate::inference::sigmoid;
+use crate::sparse::{CscMatrix, CsrMatrix, SparseVec};
+use crate::tree::{Layer, XmrModel};
+use crate::util::Rng;
+
+/// Ranker-training hyperparameters.
+#[derive(Clone, Debug)]
+pub struct RankerParams {
+    /// SGD epochs per node.
+    pub epochs: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// L2 regularization strength.
+    pub l2: f32,
+    /// Magnitude threshold below which weights are pruned.
+    pub prune_threshold: f32,
+    /// Hard cap on nonzeros per column (0 = no cap).
+    pub max_col_nnz: usize,
+}
+
+impl Default for RankerParams {
+    fn default() -> Self {
+        Self {
+            epochs: 6,
+            lr: 0.5,
+            l2: 1e-4,
+            prune_threshold: 0.01,
+            max_col_nnz: 0,
+        }
+    }
+}
+
+/// Trains every layer's rankers and assembles the model.
+pub fn train_rankers(
+    features: &CsrMatrix,
+    labels: &[Vec<u32>],
+    tree: &ClusterTree,
+    params: &RankerParams,
+    seed: u64,
+) -> XmrModel {
+    let dim = features.cols;
+    let n_docs = features.rows;
+    // invert: label -> docs
+    let num_labels = tree.label_perm.len();
+    let mut label_docs: Vec<Vec<u32>> = vec![Vec::new(); num_labels];
+    for (doc, ls) in labels.iter().enumerate() {
+        for &l in ls {
+            if (l as usize) < num_labels {
+                label_docs[l as usize].push(doc as u32);
+            }
+        }
+    }
+
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut layers: Vec<Layer> = Vec::with_capacity(tree.depth());
+    // docs under each node of the previous layer; root = all docs
+    let mut parent_docs: Vec<Vec<u32>> = vec![(0..n_docs as u32).collect()];
+    for l in 0..tree.depth() {
+        let nodes = &tree.node_labels[l];
+        let offsets = &tree.layer_offsets[l];
+        let mut this_docs: Vec<Vec<u32>> = Vec::with_capacity(nodes.len());
+        // gather positives per node
+        for node in nodes {
+            let mut docs: Vec<u32> = node
+                .iter()
+                .flat_map(|&lab| label_docs[lab as usize].iter().copied())
+                .collect();
+            docs.sort_unstable();
+            docs.dedup();
+            this_docs.push(docs);
+        }
+        // train one column per node
+        let mut cols: Vec<SparseVec> = Vec::with_capacity(nodes.len());
+        for p in 0..parent_docs.len() {
+            let (c0, c1) = (offsets[p] as usize, offsets[p + 1] as usize);
+            for j in c0..c1 {
+                let col = train_node(
+                    features,
+                    &this_docs[j],
+                    &parent_docs[p],
+                    dim,
+                    params,
+                    &mut rng,
+                );
+                cols.push(col);
+            }
+        }
+        layers.push(Layer::new(CscMatrix::from_cols(cols, dim), offsets, true));
+        parent_docs = this_docs;
+    }
+    XmrModel::new(dim, layers)
+}
+
+/// Trains one node's logistic ranker.
+fn train_node(
+    features: &CsrMatrix,
+    positives: &[u32],
+    parent_pool: &[u32],
+    dim: usize,
+    params: &RankerParams,
+    rng: &mut Rng,
+) -> SparseVec {
+    // samples: (doc, y)
+    let pos_set: std::collections::HashSet<u32> = positives.iter().copied().collect();
+    let mut samples: Vec<(u32, f32)> = Vec::with_capacity(parent_pool.len());
+    for &d in parent_pool {
+        samples.push((d, if pos_set.contains(&d) { 1.0 } else { 0.0 }));
+    }
+    if samples.is_empty() {
+        return SparseVec::new();
+    }
+    let mut w = vec![0.0f32; dim];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut is_touched = vec![false; dim];
+    for _ in 0..params.epochs {
+        rng.shuffle(&mut samples);
+        for &(d, y) in &samples {
+            let x = features.row(d as usize);
+            let mut a = 0.0f32;
+            for (&i, &v) in x.indices.iter().zip(x.values) {
+                a += w[i as usize] * v;
+            }
+            let g = sigmoid(a) - y;
+            for (&i, &v) in x.indices.iter().zip(x.values) {
+                let iu = i as usize;
+                w[iu] -= params.lr * (g * v + params.l2 * w[iu]);
+                if !is_touched[iu] {
+                    is_touched[iu] = true;
+                    touched.push(i);
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(u32, f32)> = touched
+        .into_iter()
+        .filter(|&i| w[i as usize].abs() > params.prune_threshold)
+        .map(|i| (i, w[i as usize]))
+        .collect();
+    if params.max_col_nnz > 0 && pairs.len() > params.max_col_nnz {
+        pairs.sort_unstable_by(|a, b| b.1.abs().total_cmp(&a.1.abs()));
+        pairs.truncate(params.max_col_nnz);
+    }
+    SparseVec::from_pairs(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::cluster::hierarchical_kmeans;
+    use crate::train::pifa::pifa_embeddings;
+
+    /// Two separable classes on features {0} vs {1}.
+    fn toy() -> (CsrMatrix, Vec<Vec<u32>>) {
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..40 {
+            if i % 2 == 0 {
+                rows.push(SparseVec::from_pairs(vec![(0, 1.0), (2, 0.3)]));
+                labels.push(vec![0u32]);
+            } else {
+                rows.push(SparseVec::from_pairs(vec![(1, 1.0), (3, 0.3)]));
+                labels.push(vec![1u32]);
+            }
+        }
+        (CsrMatrix::from_rows(rows, 4), labels)
+    }
+
+    #[test]
+    fn learns_separable_rankers() {
+        let (x, labels) = toy();
+        let emb = pifa_embeddings(&x, &labels, 2);
+        let tree = hierarchical_kmeans(&emb, 2, 0);
+        let model = train_rankers(&x, &labels, &tree, &RankerParams::default(), 1);
+        assert_eq!(model.num_labels(), 2);
+        // the column for the node containing label 0 must weight
+        // feature 0 positively and feature 1 negatively (or absent)
+        let bottom = model.layers.last().unwrap();
+        let pos0 = tree.label_perm.iter().position(|&l| l == 0).unwrap();
+        let col = bottom.csc.col_owned(pos0);
+        let w0 = col
+            .indices
+            .iter()
+            .position(|&i| i == 0)
+            .map(|p| col.values[p])
+            .unwrap_or(0.0);
+        let w1 = col
+            .indices
+            .iter()
+            .position(|&i| i == 1)
+            .map(|p| col.values[p])
+            .unwrap_or(0.0);
+        assert!(w0 > 0.2, "w0 = {w0}");
+        assert!(w1 <= 0.0, "w1 = {w1}");
+    }
+
+    #[test]
+    fn pruning_caps_nnz() {
+        let (x, labels) = toy();
+        let emb = pifa_embeddings(&x, &labels, 2);
+        let tree = hierarchical_kmeans(&emb, 2, 0);
+        let params = RankerParams {
+            max_col_nnz: 1,
+            ..Default::default()
+        };
+        let model = train_rankers(&x, &labels, &tree, &params, 1);
+        for layer in &model.layers {
+            for j in 0..layer.csc.cols {
+                assert!(layer.csc.col(j).nnz() <= 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! TFIDF featurization of token documents (paper §5's word embedding).
+
+use crate::sparse::{CsrMatrix, SparseVec};
+
+/// A fitted TFIDF vocabulary: smoothed idf per token.
+#[derive(Clone, Debug)]
+pub struct Tfidf {
+    /// Smoothed inverse document frequency per token id.
+    pub idf: Vec<f32>,
+}
+
+impl Tfidf {
+    /// Fits idf over a token-bag corpus with vocabulary size `vocab`.
+    /// Uses the standard smoothed formulation `ln((1+n)/(1+df)) + 1`.
+    pub fn fit(docs: &[Vec<u32>], vocab: usize) -> Self {
+        let mut df = vec![0u32; vocab];
+        let mut seen = vec![u32::MAX; vocab];
+        for (i, doc) in docs.iter().enumerate() {
+            for &t in doc {
+                let t = t as usize;
+                if seen[t] != i as u32 {
+                    seen[t] = i as u32;
+                    df[t] += 1;
+                }
+            }
+        }
+        let n = docs.len() as f32;
+        let idf = df
+            .iter()
+            .map(|&d| ((1.0 + n) / (1.0 + d as f32)).ln() + 1.0)
+            .collect();
+        Self { idf }
+    }
+
+    /// Vocabulary size.
+    pub fn vocab(&self) -> usize {
+        self.idf.len()
+    }
+
+    /// Transforms one document into an L2-normalized tf·idf vector.
+    /// Tokens outside the fitted vocabulary are ignored (a real query
+    /// stream contains unseen terms).
+    pub fn transform_doc(&self, doc: &[u32]) -> SparseVec {
+        let vocab = self.vocab() as u32;
+        let mut pairs: Vec<(u32, f32)> = doc
+            .iter()
+            .filter(|&&t| t < vocab)
+            .map(|&t| (t, 1.0f32))
+            .collect();
+        let mut v = SparseVec::from_pairs(pairs.drain(..).collect());
+        for (i, val) in v.indices.iter().zip(v.values.iter_mut()) {
+            *val *= self.idf[*i as usize];
+        }
+        v.normalize();
+        v
+    }
+
+    /// Transforms a corpus into a CSR feature matrix.
+    pub fn transform(&self, docs: &[Vec<u32>]) -> CsrMatrix {
+        let rows = docs.iter().map(|d| self.transform_doc(d)).collect();
+        CsrMatrix::from_rows(rows, self.vocab())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idf_down_weights_common_tokens() {
+        // token 0 in every doc, token 3 in one doc
+        let docs = vec![vec![0, 1], vec![0, 2], vec![0, 3]];
+        let t = Tfidf::fit(&docs, 5);
+        assert!(t.idf[3] > t.idf[0]);
+        // unseen token has the highest idf
+        assert!(t.idf[4] >= t.idf[3]);
+    }
+
+    #[test]
+    fn transform_counts_and_normalizes() {
+        let docs = vec![vec![1, 1, 2]];
+        let t = Tfidf::fit(&docs, 4);
+        let v = t.transform_doc(&docs[0]);
+        assert_eq!(v.indices, vec![1, 2]);
+        // tf(1) = 2 > tf(2) = 1, same idf → larger weight
+        assert!(v.values[0] > v.values[1]);
+        assert!((v.norm() - 1.0).abs() < 1e-6);
+        let m = t.transform(&docs);
+        assert_eq!(m.rows, 1);
+        assert_eq!(m.cols, 4);
+    }
+
+    #[test]
+    fn empty_doc_is_zero_row() {
+        let t = Tfidf::fit(&[vec![0]], 2);
+        let v = t.transform_doc(&[]);
+        assert_eq!(v.nnz(), 0);
+    }
+
+    #[test]
+    fn out_of_vocabulary_tokens_ignored() {
+        let t = Tfidf::fit(&[vec![0, 1]], 2);
+        let v = t.transform_doc(&[0, 5, 99]);
+        assert_eq!(v.indices, vec![0]);
+        assert!((v.norm() - 1.0).abs() < 1e-6);
+    }
+}

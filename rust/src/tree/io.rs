@@ -1,0 +1,156 @@
+//! Binary model serialization.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  u64  = 0x4d53_434d_584d_5231 ("MSCMXMR1")
+//! dim    u64
+//! layers u64
+//! per layer:
+//!   cols        u64
+//!   num_chunks  u64
+//!   chunk_offsets: (num_chunks+1) x u32
+//!   nnz         u64
+//!   indptr:     (cols+1) x u64
+//!   indices:    nnz x u32
+//!   values:     nnz x f32
+//! ```
+//! Only the CSC payload is stored; the chunked representation (and
+//! optional hash maps) is rebuilt at load time.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::model::{Layer, XmrModel};
+use crate::sparse::CscMatrix;
+
+const MAGIC: u64 = 0x4d53_434d_584d_5231;
+
+fn write_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_u32s(w: &mut impl Write, vs: &[u32]) -> io::Result<()> {
+    for v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32s(r: &mut impl Read, n: usize) -> io::Result<Vec<u32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn write_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
+    for v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Saves a model to `path`.
+pub fn save_model(model: &XmrModel, path: impl AsRef<Path>) -> io::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    write_u64(&mut w, MAGIC)?;
+    write_u64(&mut w, model.dim as u64)?;
+    write_u64(&mut w, model.layers.len() as u64)?;
+    for layer in &model.layers {
+        let csc = &layer.csc;
+        write_u64(&mut w, csc.cols as u64)?;
+        write_u64(&mut w, layer.chunked.num_chunks() as u64)?;
+        write_u32s(&mut w, &layer.chunked.chunk_offsets)?;
+        write_u64(&mut w, csc.nnz() as u64)?;
+        for &p in &csc.indptr {
+            write_u64(&mut w, p as u64)?;
+        }
+        write_u32s(&mut w, &csc.indices)?;
+        write_f32s(&mut w, &csc.values)?;
+    }
+    w.flush()
+}
+
+/// Loads a model from `path`, rebuilding the chunked representation
+/// (with hash row maps when `with_row_maps`).
+pub fn load_model(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<XmrModel> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    if read_u64(&mut r)? != MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "not an MSCM-XMR model file",
+        ));
+    }
+    let dim = read_u64(&mut r)? as usize;
+    let nlayers = read_u64(&mut r)? as usize;
+    let mut layers = Vec::with_capacity(nlayers);
+    for _ in 0..nlayers {
+        let cols = read_u64(&mut r)? as usize;
+        let num_chunks = read_u64(&mut r)? as usize;
+        let chunk_offsets = read_u32s(&mut r, num_chunks + 1)?;
+        let nnz = read_u64(&mut r)? as usize;
+        let mut indptr = Vec::with_capacity(cols + 1);
+        for _ in 0..=cols {
+            indptr.push(read_u64(&mut r)? as usize);
+        }
+        let indices = read_u32s(&mut r, nnz)?;
+        let values = read_f32s(&mut r, nnz)?;
+        let csc = CscMatrix {
+            rows: dim,
+            cols,
+            indptr,
+            indices,
+            values,
+        };
+        layers.push(Layer::new(csc, &chunk_offsets, with_row_maps));
+    }
+    Ok(XmrModel::new(dim, layers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::test_util::tiny_model;
+    use super::*;
+
+    #[test]
+    fn save_load_round_trip() {
+        let m = tiny_model(24, 4, 3, 42);
+        let dir = crate::util::temp_dir("model-io");
+        let path = dir.join("model.bin");
+        save_model(&m, &path).unwrap();
+        let m2 = load_model(&path, true).unwrap();
+        assert_eq!(m2.dim, m.dim);
+        assert_eq!(m2.depth(), m.depth());
+        for (a, b) in m.layers.iter().zip(&m2.layers) {
+            assert_eq!(a.csc, b.csc);
+            assert_eq!(a.chunked.chunk_offsets, b.chunked.chunk_offsets);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn reject_garbage_file() {
+        let dir = crate::util::temp_dir("model-io");
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"not a model at all............").unwrap();
+        assert!(load_model(&path, false).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

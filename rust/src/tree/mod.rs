@@ -1,0 +1,17 @@
+//! The linear XMR tree model (paper §3).
+//!
+//! A model is a stack of layers; layer `l` holds one sparse ranker column
+//! per cluster `Y_i^(l)`, stored both as CSC (the vanilla baseline format)
+//! and as the chunked MSCM format. The chunk boundaries of layer `l+1`
+//! encode the cluster indicator matrix `C^(l)` (eq. 4): the children of
+//! node `j` of layer `l` are exactly the columns of chunk `j` of layer
+//! `l+1`.
+
+mod io;
+mod model;
+
+pub use io::{load_model, save_model};
+pub use model::{Layer, ModelStats, XmrModel};
+
+#[cfg(test)]
+pub(crate) use model::test_util;

@@ -1,0 +1,235 @@
+//! Model structures and invariants.
+
+use crate::sparse::{ChunkedMatrix, CscMatrix};
+
+/// One tree layer: the ranker weight matrix `W^(l) ∈ R^{d x L_l}` in both
+/// storage formats, plus the per-parent chunk partition.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Vanilla CSC storage (the paper's baseline).
+    pub csc: CscMatrix,
+    /// The MSCM chunked storage of the same matrix.
+    pub chunked: ChunkedMatrix,
+}
+
+impl Layer {
+    /// Number of clusters `L_l` in this layer.
+    pub fn num_nodes(&self) -> usize {
+        self.csc.cols
+    }
+
+    /// Builds a layer from CSC weights and the sibling-group partition.
+    pub fn new(csc: CscMatrix, chunk_offsets: &[u32], with_row_maps: bool) -> Self {
+        let chunked = ChunkedMatrix::from_csc(&csc, chunk_offsets, with_row_maps);
+        Self { csc, chunked }
+    }
+
+    /// Column range (child nodes) of parent `j` in this layer.
+    #[inline]
+    pub fn children_of(&self, j: usize) -> std::ops::Range<usize> {
+        self.chunked.chunk_start(j)..self.chunked.chunk_start(j) + self.chunked.chunk_width(j)
+    }
+}
+
+/// A trained linear XMR tree model.
+///
+/// `layers[0]` is the top layer (children of the implicit root, a single
+/// chunk); `layers.last()` has one column per label.
+#[derive(Clone, Debug)]
+pub struct XmrModel {
+    /// Feature dimension `d`.
+    pub dim: usize,
+    /// Layers from top (below root) to bottom (labels).
+    pub layers: Vec<Layer>,
+}
+
+impl XmrModel {
+    /// Builds a model, checking structural invariants:
+    /// - layer 0 has exactly one chunk (the root's children);
+    /// - layer `l` has one chunk per node of layer `l-1`;
+    /// - all weight matrices share the feature dimension `d`.
+    pub fn new(dim: usize, layers: Vec<Layer>) -> Self {
+        assert!(!layers.is_empty(), "model needs at least one layer");
+        assert_eq!(
+            layers[0].chunked.num_chunks(),
+            1,
+            "top layer must be a single chunk under the root"
+        );
+        for l in 1..layers.len() {
+            assert_eq!(
+                layers[l].chunked.num_chunks(),
+                layers[l - 1].num_nodes(),
+                "layer {l} must have one chunk per parent node"
+            );
+        }
+        for (l, layer) in layers.iter().enumerate() {
+            assert_eq!(layer.csc.rows, dim, "layer {l} dim mismatch");
+        }
+        Self { dim, layers }
+    }
+
+    /// Number of labels (leaves).
+    pub fn num_labels(&self) -> usize {
+        self.layers.last().unwrap().num_nodes()
+    }
+
+    /// Tree depth in ranker layers (paper's `depth - 1`: the root carries
+    /// no ranker).
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Builds (or rebuilds) hash row maps on every layer — required before
+    /// using the hash iteration method.
+    pub fn build_row_maps(&mut self) {
+        for l in &mut self.layers {
+            l.chunked.build_row_maps();
+        }
+    }
+
+    /// Drops hash row maps from every layer.
+    pub fn drop_row_maps(&mut self) {
+        for l in &mut self.layers {
+            l.chunked.drop_row_maps();
+        }
+    }
+
+    /// Structural statistics (Table 5 analogue + memory accounting).
+    pub fn stats(&self) -> ModelStats {
+        let last = self.layers.last().unwrap();
+        let total_nnz: usize = self.layers.iter().map(|l| l.csc.nnz()).sum();
+        let max_branching = self
+            .layers
+            .iter()
+            .flat_map(|l| (0..l.chunked.num_chunks()).map(|c| l.chunked.chunk_width(c)))
+            .max()
+            .unwrap_or(0);
+        ModelStats {
+            dim: self.dim,
+            num_labels: last.num_nodes(),
+            depth: self.depth(),
+            total_nnz,
+            avg_label_col_nnz: last.csc.avg_col_nnz(),
+            max_branching,
+            csc_bytes: self.layers.iter().map(|l| l.csc.memory_bytes()).sum(),
+            chunked_bytes: self.layers.iter().map(|l| l.chunked.memory_bytes()).sum(),
+        }
+    }
+}
+
+/// Summary statistics of a model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelStats {
+    /// Feature dimension `d`.
+    pub dim: usize,
+    /// Number of labels `L`.
+    pub num_labels: usize,
+    /// Ranker layers.
+    pub depth: usize,
+    /// Stored weight nonzeros across all layers.
+    pub total_nnz: usize,
+    /// Average nonzeros per label column (bottom layer).
+    pub avg_label_col_nnz: f64,
+    /// Largest sibling-group width.
+    pub max_branching: usize,
+    /// Bytes of the CSC representation.
+    pub csc_bytes: usize,
+    /// Bytes of the chunked representation (incl. hash maps if built).
+    pub chunked_bytes: usize,
+}
+
+impl std::fmt::Display for ModelStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "d={} L={} depth={} nnz={} avg_col_nnz={:.1} max_B={} csc={}B chunked={}B",
+            self.dim,
+            self.num_labels,
+            self.depth,
+            self.total_nnz,
+            self.avg_label_col_nnz,
+            self.max_branching,
+            self.csc_bytes,
+            self.chunked_bytes
+        )
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+    use crate::sparse::SparseVec;
+    use crate::util::Rng;
+
+    /// A small random model: depth layers, branching B, dense-ish columns.
+    pub fn tiny_model(dim: usize, branching: usize, depth: usize, seed: u64) -> XmrModel {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut layers = Vec::new();
+        let mut parents = 1usize;
+        for _ in 0..depth {
+            let cols = parents * branching;
+            let mut colvecs = Vec::with_capacity(cols);
+            for _ in 0..cols {
+                let nnz = rng.gen_range(1..(dim / 2).max(3));
+                let mut pairs = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    pairs.push((rng.gen_range(0..dim) as u32, rng.gen_f32(-1.0, 1.0)));
+                }
+                colvecs.push(SparseVec::from_pairs(pairs));
+            }
+            let csc = crate::sparse::CscMatrix::from_cols(colvecs, dim);
+            let offsets: Vec<u32> = (0..=parents).map(|p| (p * branching) as u32).collect();
+            layers.push(Layer::new(csc, &offsets, true));
+            parents = cols;
+        }
+        XmrModel::new(dim, layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_util::tiny_model;
+    use super::*;
+    use crate::sparse::{CscMatrix, SparseVec};
+
+    #[test]
+    fn tiny_model_invariants() {
+        let m = tiny_model(32, 3, 3, 7);
+        assert_eq!(m.num_labels(), 27);
+        assert_eq!(m.depth(), 3);
+        assert_eq!(m.layers[1].chunked.num_chunks(), 3);
+        assert_eq!(m.layers[2].chunked.num_chunks(), 9);
+        let s = m.stats();
+        assert_eq!(s.num_labels, 27);
+        assert_eq!(s.max_branching, 3);
+        assert!(s.chunked_bytes > 0 && s.csc_bytes > 0);
+    }
+
+    #[test]
+    fn children_ranges_partition_layer() {
+        let m = tiny_model(16, 4, 2, 1);
+        let l1 = &m.layers[1];
+        let mut covered = 0;
+        for p in 0..m.layers[0].num_nodes() {
+            let r = l1.children_of(p);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, l1.num_nodes());
+    }
+
+    #[test]
+    #[should_panic(expected = "one chunk per parent")]
+    fn mismatched_layers_panic() {
+        let dim = 4;
+        let col = || SparseVec::from_pairs(vec![(0, 1.0)]);
+        let l0 = Layer::new(CscMatrix::from_cols(vec![col(), col()], dim), &[0, 2], false);
+        // layer 1 with 3 chunks but layer 0 has 2 nodes
+        let l1 = Layer::new(
+            CscMatrix::from_cols(vec![col(), col(), col()], dim),
+            &[0, 1, 2, 3],
+            false,
+        );
+        XmrModel::new(dim, vec![l0, l1]);
+    }
+}

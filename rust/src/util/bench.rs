@@ -1,0 +1,104 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Wall-clock measurement with warmup, fixed iteration budget and robust
+//! summary statistics; every bench binary and the table/figure
+//! reproduction harness is built on this.
+
+use std::time::Instant;
+
+/// Summary of one benchmark: all times in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    /// Number of measured iterations.
+    pub iters: usize,
+    /// Mean ms per iteration.
+    pub mean_ms: f64,
+    /// Median ms per iteration.
+    pub p50_ms: f64,
+    /// 95th-percentile ms.
+    pub p95_ms: f64,
+    /// 99th-percentile ms.
+    pub p99_ms: f64,
+    /// Minimum ms.
+    pub min_ms: f64,
+}
+
+impl BenchStats {
+    /// Computes stats from raw per-iteration durations (ms).
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+        Self {
+            iters: n,
+            mean_ms: samples.iter().sum::<f64>() / n as f64,
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            min_ms: samples[0],
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:.3} ms  p50 {:.3}  p95 {:.3}  p99 {:.3}  (n={})",
+            self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms, self.iters
+        )
+    }
+}
+
+/// Runs `f` with `warmup` unmeasured iterations, then measures until either
+/// `max_iters` iterations or `budget_ms` of wall time (whichever first,
+/// with at least one measured iteration).
+pub fn bench_ms(warmup: usize, max_iters: usize, budget_ms: f64, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(max_iters.min(4096));
+    let start = Instant::now();
+    for _ in 0..max_iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+        if start.elapsed().as_secs_f64() * 1e3 > budget_ms {
+            break;
+        }
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Prevents the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = BenchStats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.p50_ms, 51.0);
+        assert_eq!(s.p99_ms, 100.0);
+        assert_eq!(s.min_ms, 1.0);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_respects_budget() {
+        let mut n = 0u64;
+        let s = bench_ms(2, 1_000_000, 20.0, || {
+            n += 1;
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(s.iters >= 1);
+        assert!(s.mean_ms > 0.0);
+        assert!(s.iters < 1_000_000);
+    }
+}

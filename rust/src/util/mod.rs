@@ -1,0 +1,38 @@
+//! In-tree utility substrate.
+//!
+//! The build environment is offline with only the `xla` dependency closure
+//! vendored, so the pieces a project would normally pull from crates.io —
+//! a seedable RNG, a JSON emitter, a micro-bench harness, temp-dir
+//! helpers — are implemented here.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use bench::{bench_ms, BenchStats};
+pub use json::Json;
+pub use rng::Rng;
+
+/// Creates a unique temporary directory (tests and artifacts).
+pub fn temp_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("mscm-xmr-{tag}-{pid}-{n}"));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn temp_dirs_are_unique() {
+        let a = super::temp_dir("t");
+        let b = super::temp_dir("t");
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+        std::fs::remove_dir_all(a).ok();
+        std::fs::remove_dir_all(b).ok();
+    }
+}

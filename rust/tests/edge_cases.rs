@@ -1,0 +1,191 @@
+//! Edge-case and failure-injection tests across the public API.
+
+use std::sync::Arc;
+
+use mscm_xmr::data::synthetic::{layer_sizes, synth_model, synth_queries, DatasetSpec};
+use mscm_xmr::inference::napkinxc::NapkinXcEngine;
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::metrics::LatencyHistogram;
+use mscm_xmr::sparse::{ChunkedMatrix, CscMatrix, SparseVec};
+use mscm_xmr::tree::{Layer, XmrModel};
+
+fn small_spec() -> DatasetSpec {
+    DatasetSpec {
+        name: "edge",
+        dim: 500,
+        num_labels: 64,
+        paper_dim: 0,
+        paper_labels: 0,
+        query_nnz: 10,
+        col_nnz: 8,
+        sibling_overlap: 0.5,
+        zipf_theta: 1.0,
+    }
+}
+
+#[test]
+fn beam_larger_than_tree_is_exhaustive() {
+    let spec = small_spec();
+    let model = synth_model(&spec, 4, 1);
+    let engine = InferenceEngine::new(
+        model,
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::BinarySearch,
+        },
+    );
+    let q = synth_queries(&spec, 1, 2).row_owned(0);
+    // beam far beyond any layer width: must return all 64 labels ranked
+    let preds = engine.predict(&q, 10_000, 10_000);
+    assert_eq!(preds.len(), 64);
+    let mut labels: Vec<u32> = preds.iter().map(|p| p.label).collect();
+    labels.sort_unstable();
+    assert_eq!(labels, (0..64).collect::<Vec<u32>>());
+}
+
+#[test]
+fn topk_larger_than_beam_returns_beam() {
+    let spec = small_spec();
+    let model = synth_model(&spec, 4, 3);
+    let engine = InferenceEngine::new(
+        model,
+        EngineConfig {
+            algo: MatmulAlgo::Baseline,
+            iter: IterationMethod::DenseLookup,
+        },
+    );
+    let q = synth_queries(&spec, 1, 4).row_owned(0);
+    let preds = engine.predict(&q, 3, 50);
+    assert_eq!(preds.len(), 3); // beamed to 3 leaves at the bottom
+}
+
+#[test]
+fn single_label_tree_works() {
+    let csc = CscMatrix::from_cols(vec![SparseVec::from_pairs(vec![(0, 1.0)])], 4);
+    let model = XmrModel::new(4, vec![Layer::new(csc, &[0, 1], true)]);
+    for config in EngineConfig::all() {
+        let engine = InferenceEngine::new(model.clone(), config);
+        let preds = engine.predict(&SparseVec::from_pairs(vec![(0, 2.0)]), 5, 5);
+        assert_eq!(preds.len(), 1, "{}", config.label());
+        assert_eq!(preds[0].label, 0);
+    }
+}
+
+#[test]
+fn width_one_chunks_round_trip_and_infer() {
+    // B=2 over 5 labels gives chunk widths {2,1} somewhere in the tree.
+    assert_eq!(layer_sizes(5, 2), vec![2, 3, 5]);
+    let spec = DatasetSpec {
+        num_labels: 5,
+        ..small_spec()
+    };
+    let model = synth_model(&spec, 2, 9);
+    // uneven chunks exist
+    let widths: Vec<usize> = model
+        .layers
+        .iter()
+        .flat_map(|l| (0..l.chunked.num_chunks()).map(|c| l.chunked.chunk_width(c)))
+        .collect();
+    assert!(widths.contains(&1) || widths.contains(&2));
+    let q = synth_queries(&spec, 1, 1).row_owned(0);
+    let mut reference = None;
+    for config in EngineConfig::all() {
+        let engine = InferenceEngine::new(model.clone(), config);
+        let p = engine.predict(&q, 2, 2);
+        match &reference {
+            None => reference = Some(p),
+            Some(r) => assert_eq!(&p, r, "{}", config.label()),
+        }
+    }
+}
+
+#[test]
+fn chunked_matrix_rejects_and_accepts_partitions() {
+    let csc = CscMatrix::from_cols(
+        vec![SparseVec::from_pairs(vec![(0, 1.0)]); 6],
+        4,
+    );
+    // single chunk covering everything
+    let m = ChunkedMatrix::from_csc(&csc, &[0, 6], false);
+    assert_eq!(m.num_chunks(), 1);
+    assert_eq!(m.chunk_width(0), 6);
+    // all-singleton chunks
+    let m = ChunkedMatrix::from_csc(&csc, &[0, 1, 2, 3, 4, 5, 6], true);
+    assert_eq!(m.num_chunks(), 6);
+    assert_eq!(m.to_csc(), csc);
+}
+
+#[test]
+fn napkinxc_memory_overhead_positive() {
+    let spec = small_spec();
+    let model = Arc::new(synth_model(&spec, 8, 5));
+    let napkin = NapkinXcEngine::new(Arc::clone(&model));
+    assert!(napkin.side_index_bytes() > 0);
+    // NapkinXC per-column overhead must exceed MSCM per-chunk hash maps
+    let chunk_map_bytes: usize = model
+        .layers
+        .iter()
+        .flat_map(|l| l.chunked.chunks.iter())
+        .filter_map(|c| c.row_map.as_ref().map(|m| m.memory_bytes()))
+        .sum();
+    assert!(
+        napkin.side_index_bytes() > chunk_map_bytes / 2,
+        "napkin {} vs chunk {}",
+        napkin.side_index_bytes(),
+        chunk_map_bytes
+    );
+}
+
+#[test]
+fn histogram_is_thread_safe() {
+    let h = Arc::new(LatencyHistogram::new());
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let h = Arc::clone(&h);
+            s.spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(std::time::Duration::from_micros(t * 100 + i % 50));
+                }
+            });
+        }
+    });
+    assert_eq!(h.count(), 4000);
+    assert!(h.mean_ms() > 0.0);
+    assert!(h.quantile_ms(0.99) >= h.quantile_ms(0.50));
+}
+
+#[test]
+fn zero_nnz_model_columns_still_rank() {
+    // Columns with no weights at all: activation 0 → σ = 0.5 everywhere.
+    let csc = CscMatrix::from_cols(vec![SparseVec::new(); 4], 8);
+    let model = XmrModel::new(8, vec![Layer::new(csc, &[0, 4], true)]);
+    for config in EngineConfig::all() {
+        let engine = InferenceEngine::new(model.clone(), config);
+        let preds = engine.predict(&SparseVec::from_pairs(vec![(1, 1.0)]), 4, 4);
+        assert_eq!(preds.len(), 4, "{}", config.label());
+        for p in preds {
+            assert_eq!(p.score, 0.5);
+        }
+    }
+}
+
+#[test]
+fn deep_tree_many_layers() {
+    // B=2 over 256 labels → 8 layers; stresses the layer loop.
+    let spec = DatasetSpec {
+        num_labels: 256,
+        ..small_spec()
+    };
+    let model = synth_model(&spec, 2, 3);
+    assert_eq!(model.depth(), 8);
+    let engine = InferenceEngine::new(
+        model,
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        },
+    );
+    let x = synth_queries(&spec, 16, 6);
+    let out = engine.predict_batch(&x, 8, 8);
+    assert!(out.iter().all(|p| p.len() == 8));
+}

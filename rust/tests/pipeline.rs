@@ -1,0 +1,122 @@
+//! Integration: the full model-production pipeline — corpus → TFIDF →
+//! train → save → load → serve through the coordinator — and the
+//! NapkinXC comparator on the same trained model.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mscm_xmr::coordinator::{Coordinator, CoordinatorConfig};
+use mscm_xmr::data::corpus::{Corpus, CorpusSpec};
+use mscm_xmr::data::svmlight::{load_svmlight, save_svmlight, SvmlightData};
+use mscm_xmr::inference::napkinxc::NapkinXcEngine;
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::train::{train_model, RankerParams, Tfidf};
+use mscm_xmr::tree::{load_model, save_model};
+
+#[test]
+fn corpus_to_serving_round_trip() {
+    let spec = CorpusSpec {
+        vocab: 1_500,
+        topics: 32,
+        docs: 800,
+        max_labels: 1,
+        seed: 5,
+        ..Default::default()
+    };
+    let corpus = Corpus::generate(spec.clone());
+    let tfidf = Tfidf::fit(&corpus.docs, spec.vocab);
+    let x = tfidf.transform(&corpus.docs);
+
+    // persist the dataset through the svmlight substrate too
+    let dir = mscm_xmr::util::temp_dir("pipeline");
+    let data_path = dir.join("corpus.svm");
+    save_svmlight(
+        &SvmlightData {
+            features: x.clone(),
+            labels: corpus.labels.clone(),
+            num_labels: spec.topics,
+        },
+        &data_path,
+    )
+    .unwrap();
+    let reloaded = load_svmlight(&data_path).unwrap();
+    assert_eq!(reloaded.features.rows, x.rows);
+
+    let trained = train_model(
+        &reloaded.features,
+        &reloaded.labels,
+        spec.topics,
+        4,
+        &RankerParams::default(),
+        3,
+    );
+    let model_path = dir.join("model.bin");
+    save_model(&trained.model, &model_path).unwrap();
+    let model = load_model(&model_path, true).unwrap();
+    assert_eq!(model.num_labels(), spec.topics);
+
+    // serve through the coordinator and check quality end to end
+    let engine = Arc::new(InferenceEngine::new(
+        model,
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::DenseLookup,
+        },
+    ));
+    let coord = Coordinator::start(
+        Arc::clone(&engine),
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 16,
+            max_batch_delay: Duration::from_micros(200),
+            beam: 6,
+            topk: 3,
+            ..Default::default()
+        },
+    );
+    let mut hits = 0;
+    let probes = 100;
+    for i in 0..probes {
+        let q = tfidf.transform_doc(&corpus.docs[i]);
+        let resp = coord.query_blocking(q).unwrap();
+        let truth = corpus.labels[i][0];
+        if resp
+            .predictions
+            .iter()
+            .any(|p| trained.label_perm[p.label as usize] == truth)
+        {
+            hits += 1;
+        }
+    }
+    coord.shutdown();
+    assert!(hits > probes / 2, "served recall too low: {hits}/{probes}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn napkinxc_agrees_with_engine_on_trained_model() {
+    let spec = CorpusSpec {
+        vocab: 800,
+        topics: 16,
+        docs: 300,
+        seed: 9,
+        ..Default::default()
+    };
+    let corpus = Corpus::generate(spec.clone());
+    let tfidf = Tfidf::fit(&corpus.docs, spec.vocab);
+    let x = tfidf.transform(&corpus.docs);
+    let trained = train_model(&x, &corpus.labels, spec.topics, 4, &RankerParams::default(), 2);
+    let model = Arc::new(trained.model);
+    let ours = InferenceEngine::from_arc(
+        Arc::clone(&model),
+        EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        },
+    );
+    let napkin = NapkinXcEngine::new(Arc::clone(&model));
+    for i in 0..30 {
+        let q = tfidf.transform_doc(&corpus.docs[i]);
+        assert_eq!(ours.predict(&q, 4, 4), napkin.predict_beam(&q, 4, 4), "doc {i}");
+    }
+}

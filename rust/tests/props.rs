@@ -1,0 +1,189 @@
+//! Randomized property tests for the substrate layers (hand-rolled
+//! seeded-case harness; proptest is unavailable offline).
+
+use std::collections::HashMap;
+
+use mscm_xmr::metrics::LatencyHistogram;
+use mscm_xmr::sparse::{CsrMatrix, SparseVec, U32Map};
+use mscm_xmr::util::{Json, Rng};
+
+#[test]
+fn u32map_behaves_like_std_hashmap() {
+    let mut rng = Rng::seed_from_u64(1);
+    for _case in 0..30 {
+        let n = rng.gen_range(0..400);
+        let mut ours = U32Map::with_capacity(n);
+        let mut std_map: HashMap<u32, u32> = HashMap::new();
+        for _ in 0..n {
+            let k = rng.gen_range(0..300) as u32; // collisions likely
+            let v = rng.next_u64() as u32;
+            ours.insert(k, v);
+            std_map.insert(k, v);
+        }
+        assert_eq!(ours.len(), std_map.len());
+        for k in 0..300u32 {
+            assert_eq!(ours.get(k), std_map.get(&k).copied(), "key {k}");
+        }
+        let mut a: Vec<_> = ours.iter().collect();
+        let mut b: Vec<_> = std_map.into_iter().collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.gen_range(0..4) } else { rng.gen_range(0..6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.gen_bool(0.5)),
+        2 => {
+            // integral and fractional values (round-trippable f64s)
+            if rng.gen_bool(0.5) {
+                Json::Num(rng.gen_range(0..1_000_000) as f64 - 500_000.0)
+            } else {
+                Json::Num((rng.gen_range(0..1000) as f64) / 8.0)
+            }
+        }
+        3 => {
+            let len = rng.gen_range(0..12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.gen_range(0..5);
+                    match c {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => 'é',
+                        _ => (b'a' + rng.gen_range(0..26) as u8) as char,
+                    }
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.gen_range(0..5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.gen_range(0..5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn json_round_trips_random_values() {
+    let mut rng = Rng::seed_from_u64(2);
+    for case in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("case {case}: {e} on {s}"));
+        assert_eq!(back, v, "case {case}: {s}");
+    }
+}
+
+#[test]
+fn csr_csc_round_trip_preserves_dense() {
+    let mut rng = Rng::seed_from_u64(3);
+    for _ in 0..40 {
+        let (r, c) = (rng.gen_range(1..30), rng.gen_range(1..30));
+        let rows: Vec<SparseVec> = (0..r)
+            .map(|_| {
+                SparseVec::from_pairs(
+                    (0..rng.gen_range(0..c + 1))
+                        .map(|_| (rng.gen_range(0..c) as u32, rng.gen_f32(-3.0, 3.0)))
+                        .collect(),
+                )
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(rows, c);
+        let csc = m.to_csc();
+        for i in 0..r {
+            for (&j, &v) in m.row(i).indices.iter().zip(m.row(i).values) {
+                let col = csc.col(j as usize);
+                let pos = col.indices.binary_search(&(i as u32)).expect("entry");
+                assert_eq!(col.values[pos], v);
+            }
+        }
+        assert_eq!(m.nnz(), csc.nnz());
+    }
+}
+
+#[test]
+fn model_save_load_identity_random() {
+    let mut rng = Rng::seed_from_u64(4);
+    let dir = mscm_xmr::util::temp_dir("props");
+    for case in 0..6 {
+        let spec = mscm_xmr::data::synthetic::DatasetSpec {
+            name: "props",
+            dim: rng.gen_range(8..200),
+            num_labels: rng.gen_range(2..80),
+            paper_dim: 0,
+            paper_labels: 0,
+            query_nnz: 5,
+            col_nnz: rng.gen_range(1..10),
+            sibling_overlap: rng.gen_f64(),
+            zipf_theta: 1.0,
+        };
+        let model = mscm_xmr::data::synthetic::synth_model(&spec, 2 + case % 5, case as u64);
+        let path = dir.join(format!("m{case}.bin"));
+        mscm_xmr::tree::save_model(&model, &path).unwrap();
+        let loaded = mscm_xmr::tree::load_model(&path, false).unwrap();
+        assert_eq!(loaded.dim, model.dim);
+        for (a, b) in model.layers.iter().zip(&loaded.layers) {
+            assert_eq!(a.csc, b.csc);
+            assert_eq!(a.chunked.chunk_offsets, b.chunked.chunk_offsets);
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn histogram_quantiles_bounded_and_monotone() {
+    let mut rng = Rng::seed_from_u64(5);
+    for _ in 0..10 {
+        let h = LatencyHistogram::new();
+        let n = rng.gen_range(1..2000);
+        let mut max_us = 0u64;
+        for _ in 0..n {
+            let us = rng.gen_range(1..2_000_000) as u64;
+            max_us = max_us.max(us);
+            h.record(std::time::Duration::from_micros(us));
+        }
+        let mut last = 0.0;
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let v = h.quantile_ms(q);
+            assert!(v >= last, "quantiles must be monotone");
+            last = v;
+        }
+        // bucket upper bound can exceed the true max by one bucket width (≤25%)
+        assert!(h.quantile_ms(1.0) <= (max_us as f64 / 1e3) * 1.3 + 0.002);
+        assert!(h.mean_ms() <= max_us as f64 / 1e3);
+    }
+}
+
+#[test]
+fn sparsevec_axpy_matches_dense() {
+    let mut rng = Rng::seed_from_u64(6);
+    for _ in 0..50 {
+        let d = rng.gen_range(1..40);
+        let mk = |rng: &mut Rng| {
+            SparseVec::from_pairs(
+                (0..rng.gen_range(0..d + 1))
+                    .map(|_| (rng.gen_range(0..d) as u32, rng.gen_f32(-2.0, 2.0)))
+                    .collect(),
+            )
+        };
+        let mut a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let alpha = rng.gen_f32(-2.0, 2.0);
+        let mut dense = a.view().to_dense(d);
+        for (i, v) in dense.iter_mut().enumerate() {
+            if let Ok(p) = b.indices.binary_search(&(i as u32)) {
+                *v += alpha * b.values[p];
+            }
+        }
+        a.axpy(alpha, b.view());
+        assert_eq!(a.view().to_dense(d), dense);
+        // support stays sorted + unique
+        assert!(a.indices.windows(2).all(|w| w[0] < w[1]));
+    }
+}

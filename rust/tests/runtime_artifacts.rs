@@ -1,0 +1,99 @@
+//! Integration: the PJRT runtime loads the AOT artifacts produced by
+//! `make artifacts` and its numerics match the native rust math.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built — `make artifacts` is a python build step the pure-cargo flow
+//! may not have run.
+
+use mscm_xmr::inference::sigmoid;
+use mscm_xmr::runtime::{Tensor, XlaRuntime};
+use mscm_xmr::util::{Json, Rng};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn matmul_artifact_matches_rust_math() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = Json::parse(&std::fs::read_to_string(dir.join("meta.json")).unwrap()).unwrap();
+    let geti = |k: &str| meta.get(k).and_then(|v| v.as_f64()).unwrap() as usize;
+    let (n, d, b1) = (geti("n"), geti("d"), geti("b1"));
+
+    let rt = XlaRuntime::cpu().unwrap();
+    let comp = rt.load_hlo_text(dir.join("matmul_only.hlo.txt")).unwrap();
+
+    let mut rng = Rng::seed_from_u64(3);
+    let x = Tensor::new((0..n * d).map(|_| rng.gen_normal() * 0.3).collect(), vec![n, d]);
+    let w = Tensor::new(
+        (0..d * b1).map(|_| rng.gen_normal() * 0.05).collect(),
+        vec![1, d, b1],
+    );
+    // half the queries masked off
+    let mask_vals: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+    let mask = Tensor::new(mask_vals.clone(), vec![n, 1]);
+    let ps = Tensor::new(vec![0.5; n], vec![n, 1]);
+    let out = comp.run(&[x.clone(), w.clone(), mask, ps]).unwrap();
+    assert_eq!(out[0].dims, vec![n, b1]);
+    for i in 0..n {
+        for c in 0..b1 {
+            let mut a = 0.0f32;
+            for k in 0..d {
+                a += x.data[i * d + k] * w.data[k * b1 + c];
+            }
+            let want = if mask_vals[i] > 0.0 { 0.5 * sigmoid(a) } else { 0.0 };
+            let got = out[0].data[i * b1 + c];
+            assert!(
+                (want - got).abs() < 1e-4,
+                "({i},{c}): want {want} got {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    for name in ["matmul_only", "layer_step", "full_inference"] {
+        rt.load_hlo_text(dir.join(format!("{name}.hlo.txt")))
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    }
+}
+
+#[test]
+fn layer_step_beam_is_topb() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = Json::parse(&std::fs::read_to_string(dir.join("meta.json")).unwrap()).unwrap();
+    let geti = |k: &str| meta.get(k).and_then(|v| v.as_f64()).unwrap() as usize;
+    let (n, d, b1, beam) = (geti("n"), geti("d"), geti("b1"), geti("beam"));
+    let rt = XlaRuntime::cpu().unwrap();
+    let comp = rt.load_hlo_text(dir.join("layer_step.hlo.txt")).unwrap();
+    let mut rng = Rng::seed_from_u64(11);
+    let x = Tensor::new((0..n * d).map(|_| rng.gen_normal()).collect(), vec![n, d]);
+    let w = Tensor::new(
+        (0..d * b1).map(|_| rng.gen_normal() * 0.1).collect(),
+        vec![1, d, b1],
+    );
+    let mask = Tensor::new(vec![1.0; n], vec![n, 1]);
+    let ps = Tensor::new(vec![1.0; n], vec![n, 1]);
+    let out = comp.run(&[x.clone(), w.clone(), mask, ps]).unwrap();
+    let (scores, idx) = (&out[0], &out[1]);
+    assert_eq!(scores.dims, vec![n, beam]);
+    for i in 0..n {
+        // descending and within range
+        for k in 1..beam {
+            assert!(scores.data[i * beam + k - 1] >= scores.data[i * beam + k]);
+        }
+        for k in 0..beam {
+            let label = idx.data[i * beam + k] as usize;
+            assert!(label < b1);
+        }
+    }
+}
