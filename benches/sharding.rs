@@ -1,0 +1,109 @@
+//! Scatter-gather overhead benchmark: per-query latency of the sharded
+//! engine versus the single unsharded engine, as a function of shard
+//! count — the number future PRs watch to keep the gather stage cheap.
+//!
+//! `cargo bench --bench sharding [-- --labels 50000 --dim 50000 --queries 512]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mscm_xmr::coordinator::CoordinatorConfig;
+use mscm_xmr::data::enterprise::EnterpriseSpec;
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::shard::{ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine};
+use mscm_xmr::util::bench_ms;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let spec = EnterpriseSpec {
+        num_labels: get("--labels", 50_000),
+        dim: get("--dim", 50_000),
+        ..Default::default()
+    };
+    let n = get("--queries", 512);
+    let beam = get("--beam", 10);
+    let cfg = EngineConfig {
+        algo: MatmulAlgo::Mscm,
+        iter: IterationMethod::Hash,
+    };
+    eprintln!("synthesizing L={} d={} model ...", spec.num_labels, spec.dim);
+    let model = spec.build_model();
+    let x = spec.build_queries(n);
+    let queries: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
+
+    // Unsharded baseline: the floor every shard count is compared to.
+    let single = InferenceEngine::new(model.clone(), cfg);
+    let mut ws = single.workspace();
+    let stats = bench_ms(1, 3, 5_000.0, || {
+        for q in &queries {
+            std::hint::black_box(single.predict_with(q, beam, 10, &mut ws));
+        }
+    });
+    let single_ms = stats.mean_ms / n as f64;
+    println!("unsharded online:            {single_ms:.4} ms/query");
+
+    println!(
+        "{:>6} {:>16} {:>16} {:>12} {:>14} {:>14}",
+        "shards", "online ms/query", "batch ms/query", "overhead", "coord p50 ms", "coord qps"
+    );
+    for s in [1usize, 2, 4, 8] {
+        let sharded = ShardedEngine::from_model(&model, s, cfg);
+
+        // Online scatter-gather, workspace-reusing like the unsharded
+        // baseline above (sequential over shards — the worst case for
+        // gather overhead accounting).
+        let mut wss = sharded.workspaces();
+        let stats = bench_ms(1, 3, 5_000.0, || {
+            for q in &queries {
+                std::hint::black_box(sharded.predict_with(q, beam, 10, &mut wss));
+            }
+        });
+        let online_ms = stats.mean_ms / n as f64;
+
+        // Batch scatter-gather with one thread per shard.
+        let stats = bench_ms(1, 3, 5_000.0, || {
+            std::hint::black_box(sharded.predict_batch(&x, beam, 10, true));
+        });
+        let batch_ms = stats.mean_ms / n as f64;
+
+        // End-to-end through the sharded coordinator at open-loop load.
+        let coord = ShardedCoordinator::start(
+            Arc::new(ShardedEngine::from_model(&model, s, cfg)),
+            ShardedCoordinatorConfig {
+                base: CoordinatorConfig {
+                    workers: 2,
+                    max_batch: 32,
+                    max_batch_delay: Duration::from_micros(300),
+                    beam,
+                    topk: 10,
+                    ..Default::default()
+                },
+                shard_workers: 2,
+            },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = queries
+            .iter()
+            .filter_map(|q| coord.submit(q.clone()).ok().map(|(_, rx)| rx))
+            .collect();
+        let served = rxs.len();
+        for rx in rxs {
+            rx.recv().ok();
+        }
+        let qps = served as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        let p50 = coord.stats().latency.quantile_ms(0.5);
+        coord.shutdown();
+
+        println!(
+            "{s:>6} {online_ms:>16.4} {batch_ms:>16.4} {:>11.2}x {p50:>14.3} {qps:>10.0} qps",
+            online_ms / single_ms.max(1e-9)
+        );
+    }
+}

@@ -1,0 +1,184 @@
+//! Reusable serving-stack building blocks: the dynamic batcher thread and
+//! a generic worker pool.
+//!
+//! Extracted from the single-engine [`super::Coordinator`] so the sharded
+//! scatter-gather coordinator ([`crate::shard::ShardedCoordinator`]) can
+//! reuse the exact same machinery — per-shard fan-out queues, gather
+//! workers and the front batcher are all instances of these two pieces
+//! rather than re-implementations.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Spawns the dynamic-batching thread: blocks for the first item, then
+/// fills the batch until `max_batch` items or `max_delay` since the first
+/// arrival, then forwards the batch. `on_dispatch` observes every batch
+/// size (stats hook). Exits when all senders of `rx` are gone, flushing
+/// any partial batch first.
+pub(crate) fn spawn_batcher<T, F>(
+    name: String,
+    rx: mpsc::Receiver<T>,
+    tx: mpsc::Sender<Vec<T>>,
+    max_batch: usize,
+    max_delay: Duration,
+    on_dispatch: F,
+) -> JoinHandle<()>
+where
+    T: Send + 'static,
+    F: Fn(usize) + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            let dispatch = |batch: Vec<T>| {
+                on_dispatch(batch.len());
+                // Receivers may be gone during shutdown — drop the batch.
+                let _ = tx.send(batch);
+            };
+            loop {
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => return, // all senders dropped → shutdown
+                };
+                let deadline = Instant::now() + max_delay;
+                let mut batch = vec![first];
+                while batch.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            dispatch(batch);
+                            return;
+                        }
+                    }
+                }
+                dispatch(batch);
+            }
+        })
+        .expect("spawn batcher")
+}
+
+/// A pool of worker threads pulling jobs off a shared channel.
+///
+/// Each worker owns private state built by `init` inside the thread (an
+/// inference [`crate::inference::Workspace`] in every current use), so the
+/// hot path never locks anything but the shared receiver.
+pub(crate) struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawns `workers` threads (at least one). Workers exit when every
+    /// sender of the shared channel has been dropped.
+    pub(crate) fn spawn<B, S, I, F>(
+        name: &str,
+        workers: usize,
+        rx: Arc<Mutex<mpsc::Receiver<B>>>,
+        init: I,
+        handler: F,
+    ) -> Self
+    where
+        B: Send + 'static,
+        I: Fn(usize) -> S + Send + Sync + 'static,
+        F: Fn(&mut S, B) + Send + Sync + 'static,
+    {
+        let init = Arc::new(init);
+        let handler = Arc::new(handler);
+        let handles = (0..workers.max(1))
+            .map(|w| {
+                let rx = Arc::clone(&rx);
+                let init = Arc::clone(&init);
+                let handler = Arc::clone(&handler);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{w}"))
+                    .spawn(move || {
+                        let mut state = init(w);
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                match guard.recv() {
+                                    Ok(b) => b,
+                                    Err(_) => return,
+                                }
+                            };
+                            handler(&mut state, job);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { handles }
+    }
+
+    /// Joins every worker (callers drop the senders first).
+    pub(crate) fn join(self) {
+        for h in self.handles {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn batcher_groups_and_flushes_on_disconnect() {
+        let (tx_in, rx_in) = mpsc::channel::<u32>();
+        let (tx_out, rx_out) = mpsc::channel::<Vec<u32>>();
+        let sizes = Arc::new(AtomicUsize::new(0));
+        let sizes2 = Arc::clone(&sizes);
+        let h = spawn_batcher(
+            "test-batcher".into(),
+            rx_in,
+            tx_out,
+            8,
+            Duration::from_millis(20),
+            move |n| {
+                sizes2.fetch_add(n, Ordering::Relaxed);
+            },
+        );
+        for i in 0..20 {
+            tx_in.send(i).unwrap();
+        }
+        drop(tx_in);
+        h.join().unwrap();
+        let mut seen = Vec::new();
+        while let Ok(batch) = rx_out.recv() {
+            assert!(!batch.is_empty() && batch.len() <= 8);
+            seen.extend(batch);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+        assert_eq!(sizes.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn worker_pool_drains_and_joins() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        let rx = Arc::new(Mutex::new(rx));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let sum2 = Arc::clone(&sum);
+        let pool = WorkerPool::spawn(
+            "test-worker",
+            3,
+            rx,
+            |w| w, // per-worker state: its own index
+            move |_state, job: u32| {
+                sum2.fetch_add(job as usize, Ordering::Relaxed);
+            },
+        );
+        for i in 1..=100u32 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        pool.join();
+        assert_eq!(sum.load(Ordering::Relaxed), 5050);
+    }
+}

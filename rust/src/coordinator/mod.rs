@@ -20,9 +20,11 @@
 //! [`SubmitError::Overloaded`] when the system is saturated rather than
 //! queueing unboundedly (availability over latency collapse).
 
+pub(crate) mod batcher;
 mod server;
 
 pub use server::{Coordinator, CoordinatorStats};
+pub(crate) use server::Router;
 
 use crate::inference::Prediction;
 use crate::sparse::SparseVec;

@@ -1,11 +1,13 @@
 //! Coordinator implementation: router queue, dynamic batcher thread,
-//! inference worker pool.
+//! inference worker pool — wired together from the generic pieces in
+//! [`super::batcher`].
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use super::batcher::{spawn_batcher, WorkerPool};
 use super::{CoordinatorConfig, Request, Response, SubmitError};
 use crate::inference::InferenceEngine;
 use crate::metrics::LatencyHistogram;
@@ -40,21 +42,83 @@ impl CoordinatorStats {
     }
 }
 
+/// The submit-side front door shared by both coordinators: a bounded
+/// in-flight counter over an mpsc sender, with shed accounting.
+pub(crate) struct Router {
+    queue: Mutex<mpsc::Sender<Request>>,
+    queue_len: AtomicU64,
+    capacity: u64,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Router {
+    pub(crate) fn new(tx: mpsc::Sender<Request>, capacity: usize) -> Self {
+        Self {
+            queue: Mutex::new(tx),
+            queue_len: AtomicU64::new(0),
+            capacity: capacity as u64,
+            next_id: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Admits a query or fails fast; `stats` records sheds.
+    pub(crate) fn submit(
+        &self,
+        query: SparseVec,
+        stats: &CoordinatorStats,
+    ) -> Result<(u64, mpsc::Receiver<Response>), SubmitError> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::Shutdown);
+        }
+        if self.queue_len.load(Ordering::Relaxed) >= self.capacity {
+            stats.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id,
+            query,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        self.queue_len.fetch_add(1, Ordering::Relaxed);
+        self.queue
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| SubmitError::Shutdown)?;
+        Ok((id, rx))
+    }
+
+    /// One in-flight request finished.
+    pub(crate) fn mark_done(&self) {
+        self.queue_len.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Stops admitting work and disconnects the batcher's input (the
+    /// dangling sender swap wakes its `recv` with `Err`).
+    pub(crate) fn close(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        let (dead_tx, _) = mpsc::channel();
+        *self.queue.lock().unwrap() = dead_tx;
+    }
+}
+
 /// A running serving system (see module docs for the topology).
 pub struct Coordinator {
     inner: Arc<Inner>,
     batcher: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Option<WorkerPool>,
 }
 
 struct Inner {
     engine: Arc<InferenceEngine>,
     config: CoordinatorConfig,
     stats: CoordinatorStats,
-    queue: Mutex<mpsc::Sender<Request>>,
-    queue_len: AtomicU64,
-    next_id: AtomicU64,
-    shutdown: AtomicBool,
+    router: Router,
 }
 
 impl Coordinator {
@@ -67,62 +131,45 @@ impl Coordinator {
             engine,
             config: config.clone(),
             stats: CoordinatorStats::default(),
-            queue: Mutex::new(req_tx),
-            queue_len: AtomicU64::new(0),
-            next_id: AtomicU64::new(0),
-            shutdown: AtomicBool::new(false),
+            router: Router::new(req_tx, config.queue_capacity),
         });
 
         let batcher = {
             let inner = Arc::clone(&inner);
-            std::thread::Builder::new()
-                .name("mscm-batcher".into())
-                .spawn(move || batcher_loop(&inner, req_rx, batch_tx))
-                .expect("spawn batcher")
+            spawn_batcher(
+                "mscm-batcher".into(),
+                req_rx,
+                batch_tx,
+                config.max_batch,
+                config.max_batch_delay,
+                move |n| {
+                    inner.stats.batches.fetch_add(1, Ordering::Relaxed);
+                    inner.stats.batched_queries.fetch_add(n as u64, Ordering::Relaxed);
+                },
+            )
         };
-        let workers = (0..config.workers.max(1))
-            .map(|w| {
-                let inner = Arc::clone(&inner);
-                let rx = Arc::clone(&batch_rx);
-                std::thread::Builder::new()
-                    .name(format!("mscm-worker-{w}"))
-                    .spawn(move || worker_loop(&inner, &rx))
-                    .expect("spawn worker")
-            })
-            .collect();
+        let workers = {
+            let inner = Arc::clone(&inner);
+            let engine = Arc::clone(&inner.engine);
+            WorkerPool::spawn(
+                "mscm-worker",
+                config.workers,
+                batch_rx,
+                move |_w| engine.workspace(),
+                move |ws, batch: Vec<Request>| run_batch(&inner, ws, batch),
+            )
+        };
         Self {
             inner,
             batcher: Some(batcher),
-            workers,
+            workers: Some(workers),
         }
     }
 
     /// Submits a query; the reply arrives on the returned channel.
     /// Fails fast when the router queue is at capacity (backpressure).
     pub fn submit(&self, query: SparseVec) -> Result<(u64, mpsc::Receiver<Response>), SubmitError> {
-        if self.inner.shutdown.load(Ordering::Acquire) {
-            return Err(SubmitError::Shutdown);
-        }
-        if self.inner.queue_len.load(Ordering::Relaxed) >= self.inner.config.queue_capacity as u64 {
-            self.inner.stats.shed.fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::Overloaded);
-        }
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id,
-            query,
-            submitted: Instant::now(),
-            reply: tx,
-        };
-        self.inner.queue_len.fetch_add(1, Ordering::Relaxed);
-        self.inner
-            .queue
-            .lock()
-            .unwrap()
-            .send(req)
-            .map_err(|_| SubmitError::Shutdown)?;
-        Ok((id, rx))
+        self.inner.router.submit(query, &self.inner.stats)
     }
 
     /// Convenience: submit and block for the response.
@@ -136,103 +183,58 @@ impl Coordinator {
         &self.inner.stats
     }
 
+    /// Stops accepting new work without joining the pipeline: subsequent
+    /// [`Coordinator::submit`] calls fail with [`SubmitError::Shutdown`];
+    /// in-flight batches still complete. Call [`Coordinator::shutdown`]
+    /// to drain and join.
+    pub fn stop(&self) {
+        self.inner.router.close();
+    }
+
     /// Stops accepting work, drains in-flight batches, joins all threads.
     pub fn shutdown(mut self) {
-        self.inner.shutdown.store(true, Ordering::Release);
-        // Dropping the sender wakes the batcher's recv with Err.
-        {
-            let (dead_tx, _) = mpsc::channel();
-            *self.inner.queue.lock().unwrap() = dead_tx;
-        }
+        self.stop();
         if let Some(b) = self.batcher.take() {
             b.join().ok();
         }
-        for w in self.workers.drain(..) {
-            w.join().ok();
+        if let Some(w) = self.workers.take() {
+            w.join();
         }
     }
 }
 
-/// Dynamic batching: block for the first request, then fill the batch
-/// until `max_batch` or `max_batch_delay` since the first arrival.
-fn batcher_loop(inner: &Inner, rx: mpsc::Receiver<Request>, tx: mpsc::Sender<Vec<Request>>) {
-    loop {
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped → shutdown
-        };
-        let deadline = Instant::now() + inner.config.max_batch_delay;
-        let mut batch = vec![first];
-        while batch.len() < inner.config.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    dispatch(inner, &tx, batch);
-                    return;
-                }
-            }
-        }
-        dispatch(inner, &tx, batch);
-    }
-}
-
-fn dispatch(inner: &Inner, tx: &mpsc::Sender<Vec<Request>>, batch: Vec<Request>) {
-    inner.stats.batches.fetch_add(1, Ordering::Relaxed);
-    inner
-        .stats
-        .batched_queries
-        .fetch_add(batch.len() as u64, Ordering::Relaxed);
-    // If workers are gone (shutdown), drop the batch.
-    let _ = tx.send(batch);
-}
-
-/// Inference worker: pull a batch, run the engine, reply per request.
-fn worker_loop(inner: &Inner, rx: &Arc<Mutex<mpsc::Receiver<Vec<Request>>>>) {
-    let mut ws = inner.engine.workspace();
+/// Inference worker body: run the engine over a batch, reply per request.
+fn run_batch(inner: &Inner, ws: &mut crate::inference::Workspace, batch: Vec<Request>) {
+    let n = batch.len();
+    let dispatch_time = Instant::now();
     let dim = inner.engine.model().dim;
-    loop {
-        let batch = {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(b) => b,
-                Err(_) => return,
-            }
-        };
-        let n = batch.len();
-        let dispatch_time = Instant::now();
-        let rows: Vec<SparseVec> = batch.iter().map(|r| r.query.clone()).collect();
-        let x = CsrMatrix::from_rows(rows, dim);
-        let mut out: Vec<Vec<crate::inference::Prediction>> = vec![Vec::new(); n];
-        inner.engine.predict_range(
-            &x,
-            0,
-            n,
-            inner.config.beam,
-            inner.config.topk,
-            &mut ws,
-            &mut out,
-        );
-        for (req, preds) in batch.into_iter().zip(out) {
-            let queue_time = dispatch_time.duration_since(req.submitted);
-            let total_time = req.submitted.elapsed();
-            inner.stats.queue_wait.record(queue_time);
-            inner.stats.latency.record(total_time);
-            inner.stats.completed.fetch_add(1, Ordering::Relaxed);
-            inner.queue_len.fetch_sub(1, Ordering::Relaxed);
-            // Receiver may have gone away (client timeout) — fine.
-            let _ = req.reply.send(Response {
-                id: req.id,
-                predictions: preds,
-                queue_time,
-                total_time,
-                batch_size: n,
-            });
-        }
+    let rows: Vec<SparseVec> = batch.iter().map(|r| r.query.clone()).collect();
+    let x = CsrMatrix::from_rows(rows, dim);
+    let mut out: Vec<Vec<crate::inference::Prediction>> = vec![Vec::new(); n];
+    inner.engine.predict_range(
+        &x,
+        0,
+        n,
+        inner.config.beam,
+        inner.config.topk,
+        ws,
+        &mut out,
+    );
+    for (req, preds) in batch.into_iter().zip(out) {
+        let queue_time = dispatch_time.duration_since(req.submitted);
+        let total_time = req.submitted.elapsed();
+        inner.stats.queue_wait.record(queue_time);
+        inner.stats.latency.record(total_time);
+        inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        inner.router.mark_done();
+        // Receiver may have gone away (client timeout) — fine.
+        let _ = req.reply.send(Response {
+            id: req.id,
+            predictions: preds,
+            queue_time,
+            total_time,
+            batch_size: n,
+        });
     }
 }
 
@@ -333,13 +335,57 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_rejects_new_work() {
+    fn overload_is_deterministic_while_batcher_stalls() {
+        // A batcher holding its first request for a long max_batch_delay
+        // (and a max_batch it can never reach) keeps every admitted
+        // request in flight, so exactly `queue_capacity` submissions are
+        // admitted and the next one must shed — no timing dependence.
+        let engine = test_engine();
+        let cap = 6usize;
+        let coord = Coordinator::start(
+            engine,
+            CoordinatorConfig {
+                workers: 1,
+                max_batch: cap + 10,
+                queue_capacity: cap,
+                max_batch_delay: Duration::from_secs(30),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::seed_from_u64(7);
+        let mut rxs = Vec::new();
+        for i in 0..cap {
+            let (_, rx) = coord
+                .submit(rand_query(&mut rng))
+                .unwrap_or_else(|e| panic!("submit {i} under capacity failed: {e}"));
+            rxs.push(rx);
+        }
+        match coord.submit(rand_query(&mut rng)) {
+            Err(SubmitError::Overloaded) => {}
+            other => panic!("expected Overloaded at capacity, got {other:?}"),
+        }
+        assert_eq!(coord.stats().shed.load(Ordering::Relaxed), 1);
+        // Shutdown flushes the batcher's partial batch; every admitted
+        // request still gets its reply.
+        coord.stop();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).expect("reply after stop");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stop_rejects_new_work_with_shutdown_error() {
         let engine = test_engine();
         let coord = Coordinator::start(engine, CoordinatorConfig::default());
         let mut rng = Rng::seed_from_u64(3);
         coord.query_blocking(rand_query(&mut rng)).unwrap();
-        let stats_completed = coord.stats().completed.load(Ordering::Relaxed);
-        assert_eq!(stats_completed, 1);
+        coord.stop();
+        match coord.submit(rand_query(&mut rng)) {
+            Err(SubmitError::Shutdown) => {}
+            other => panic!("expected Shutdown after stop, got {other:?}"),
+        }
+        assert_eq!(coord.stats().completed.load(Ordering::Relaxed), 1);
         coord.shutdown();
     }
 

@@ -95,11 +95,17 @@ impl Workspace {
             + self.out_block.len() * 4
     }
 
-    fn reset_for_batch(&mut self, n: usize) {
+    /// Grows the per-query buffers to hold `n` queries without resetting
+    /// their contents (the sharded layer-step protocol sets beams itself).
+    pub(crate) fn ensure_batch(&mut self, n: usize) {
         if self.cands.len() < n {
             self.cands.resize_with(n, Vec::new);
             self.beams.resize_with(n, Vec::new);
         }
+    }
+
+    fn reset_for_batch(&mut self, n: usize) {
+        self.ensure_batch(n);
         for q in 0..n {
             self.cands[q].clear();
             // Every query starts at the implicit root with score 1
@@ -231,37 +237,13 @@ impl InferenceEngine {
         ws: &mut Workspace,
         out: &mut [Vec<Prediction>],
     ) {
-        assert!(beam >= 1, "beam width must be >= 1");
-        assert!(x.cols == self.model.dim, "query dim mismatch");
         let n = qhi - qlo;
         assert!(out.len() >= n);
-        ws.reset_for_batch(n);
-        let depth = self.model.layers.len();
-        for li in 0..depth {
-            let layer = &self.model.layers[li];
-            for q in 0..n {
-                ws.cands[q].clear();
-            }
-            match self.config.algo {
-                MatmulAlgo::Mscm => {
-                    mscm_layer(layer, x, qlo, n, self.config.iter, ws);
-                }
-                MatmulAlgo::Baseline => {
-                    let col_hash = self.col_hash.as_ref().map(|c| &c[li]);
-                    baseline_layer(layer, x, qlo, n, self.config.iter, col_hash, ws);
-                }
-            }
-            // Beam step (Alg. 1 line 9): keep the top-b children per query.
-            for q in 0..n {
-                let (cands, beams) = (&mut ws.cands[q], &mut ws.beams[q]);
-                select_top(cands, beam, beams);
-            }
-        }
+        self.beam_search(x, qlo, qhi, beam, ws);
         // Gather final predictions: top-k of the bottom beam.
         for q in 0..n {
             let beamed = &mut ws.beams[q];
-            beamed.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
-            beamed.truncate(topk);
+            rank_beam(beamed, topk);
             out[q].clear();
             out[q].extend(
                 beamed
@@ -270,11 +252,73 @@ impl InferenceEngine {
             );
         }
     }
+
+    /// One Alg. 1 layer step without the pruning: expands the parents in
+    /// `ws.beams[q]` (node ids of layer `li - 1`, ascending) through layer
+    /// `li`, leaving every generated candidate `(node, path score)` in
+    /// `ws.cands[q]`. Scores are bitwise identical to the fused loop in
+    /// [`InferenceEngine::predict_range`] — this *is* that loop's body,
+    /// split out so a coordinator can interleave global beam selection
+    /// between layers (exact sharded search).
+    pub(crate) fn expand_layer(
+        &self,
+        li: usize,
+        x: &CsrMatrix,
+        qlo: usize,
+        n: usize,
+        ws: &mut Workspace,
+    ) {
+        assert!(x.cols == self.model.dim, "query dim mismatch");
+        let layer = &self.model.layers[li];
+        for q in 0..n {
+            ws.cands[q].clear();
+        }
+        match self.config.algo {
+            MatmulAlgo::Mscm => {
+                mscm_layer(layer, x, qlo, n, self.config.iter, ws);
+            }
+            MatmulAlgo::Baseline => {
+                let col_hash = self.col_hash.as_ref().map(|c| &c[li]);
+                baseline_layer(layer, x, qlo, n, self.config.iter, col_hash, ws);
+            }
+        }
+    }
+
+    /// The Alg. 1 layer loop: leaves the per-query bottom beams in
+    /// `ws.beams`.
+    fn beam_search(&self, x: &CsrMatrix, qlo: usize, qhi: usize, beam: usize, ws: &mut Workspace) {
+        assert!(beam >= 1, "beam width must be >= 1");
+        let n = qhi - qlo;
+        ws.reset_for_batch(n);
+        for li in 0..self.model.layers.len() {
+            self.expand_layer(li, x, qlo, n, ws);
+            // Beam step (Alg. 1 line 9): keep the top-b children per query.
+            for q in 0..n {
+                let (cands, beams) = (&mut ws.cands[q], &mut ws.beams[q]);
+                select_top(cands, beam, beams);
+            }
+        }
+    }
+}
+
+/// Sorts a bottom beam into final ranking order — `(score desc, label
+/// asc)` — and truncates to `topk`.
+///
+/// Crate-visible so the sharded gather stage ([`crate::shard`]) ranks
+/// with *exactly* this comparator — any drift would break the bitwise
+/// sharded == unsharded property.
+pub(crate) fn rank_beam(beamed: &mut Vec<(u32, f32)>, topk: usize) {
+    beamed.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    beamed.truncate(topk);
 }
 
 /// Selects the `b` highest-scoring candidates (ties broken by ascending
 /// node id for determinism) into `beam`, sorted by ascending node id.
-fn select_top(cands: &mut Vec<(u32, f32)>, b: usize, beam: &mut Vec<(u32, f32)>) {
+///
+/// Crate-visible so the sharded gather stage ([`crate::shard`]) prunes
+/// with *exactly* this comparator — any drift would break the bitwise
+/// sharded == unsharded property.
+pub(crate) fn select_top(cands: &mut Vec<(u32, f32)>, b: usize, beam: &mut Vec<(u32, f32)>) {
     let cmp = |a: &(u32, f32), b: &(u32, f32)| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0));
     if cands.len() > b {
         cands.select_nth_unstable_by(b - 1, cmp);

@@ -2,14 +2,17 @@
 //!
 //! Subcommands (run `repro help` for details):
 //!
-//! - model production: `synth-model`, `train`, `gen-data`, `stats`
-//! - inference: `infer`, `serve`
+//! - model production: `synth-model`, `train`, `gen-data`, `stats`, `shard`
+//! - inference: `infer`, `serve` (single engine, or label-space sharded
+//!   scatter-gather via `--shards N` / `--shards-dir dir/`)
 //! - paper reproduction: `bench table|figure3|figure4|figure5|figure6|
 //!   table4|table5|table6|all`
 //! - runtime: `xla-smoke` (load + execute the AOT artifacts)
 //!
 //! Argument parsing is hand-rolled (`--key value` / `--flag`): the build
 //! environment vendors only the `xla` dependency closure.
+
+#![allow(clippy::too_many_arguments)]
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -22,6 +25,10 @@ use mscm_xmr::data::svmlight::{load_svmlight, save_svmlight, SvmlightData};
 use mscm_xmr::data::synthetic::paper_suite;
 use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
 use mscm_xmr::repro;
+use mscm_xmr::shard::{
+    load_shards, partition, save_shards, ShardedCoordinator, ShardedCoordinatorConfig,
+    ShardedEngine,
+};
 use mscm_xmr::train::{train_model, RankerParams, Tfidf};
 use mscm_xmr::tree::{load_model, save_model};
 use mscm_xmr::util::Json;
@@ -36,6 +43,7 @@ MODEL PRODUCTION
   gen-data      --out corpus.svm [--docs N] [--topics N] [--vocab N]
   train         --data corpus.svm [--branching B] [--out m.bin]
   stats         --model m.bin
+  shard         --model m.bin --shards S --out dir/   (split into S shard files)
 
 INFERENCE
   infer         --model m.bin --queries q.svm [--algo mscm|baseline]
@@ -44,6 +52,8 @@ INFERENCE
                 [--test-frac 0.2]  (train/test split; P@k/R@k/nDCG per beam)
   serve         --model m.bin [--workers N] [--max-batch N] [--rps N]
                 [--requests N] (synthetic load; prints latency stats)
+                [--shards S | --shards-dir dir/] [--shard-workers N]
+                (scatter-gather serving over a label-space partition)
 
 PAPER REPRODUCTION (synthetic suite; see DESIGN.md §5-6)
   bench table    --branching 2|8|32 [--scale 10] [--only d1,d2] [--json f]
@@ -67,25 +77,30 @@ fn main() -> ExitCode {
         return ExitCode::FAILURE;
     }
     let cmd = args[0].clone();
+    // `help` tolerates trailing words (`repro help serve`) and must not
+    // trip the strict flag parser.
+    if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+        print!("{HELP}");
+        return ExitCode::SUCCESS;
+    }
     let (sub, rest) = if cmd == "bench" {
         if args.len() < 2 {
-            eprintln!("bench needs a target (table|figure3|...|all)");
-            return ExitCode::FAILURE;
+            return usage_exit("bench needs a target (table|figure3|...|all)");
         }
         (Some(args[1].clone()), &args[2..])
     } else {
         (None, &args[1..])
     };
-    let opts = parse_kv(rest);
+    let opts = match parse_kv(rest) {
+        Ok(o) => o,
+        Err(e) => return usage_exit(&e),
+    };
     let r = match (cmd.as_str(), sub.as_deref()) {
-        ("help" | "--help" | "-h", _) => {
-            print!("{HELP}");
-            Ok(())
-        }
         ("synth-model", _) => cmd_synth_model(&opts),
         ("gen-data", _) => cmd_gen_data(&opts),
         ("train", _) => cmd_train(&opts),
         ("stats", _) => cmd_stats(&opts),
+        ("shard", _) => cmd_shard(&opts),
         ("infer", _) => cmd_infer(&opts),
         ("eval", _) => cmd_eval(&opts),
         ("serve", _) => cmd_serve(&opts),
@@ -96,37 +111,65 @@ fn main() -> ExitCode {
         ("bench", Some("figure5")) => cmd_bench_fig5(&opts),
         ("bench", Some("figure6")) => cmd_bench_fig6(&opts),
         ("bench", Some("table4")) => cmd_bench_table4(&opts),
-        ("bench", Some("table5")) => {
-            repro::table5(&bench_options(&opts));
-            Ok(())
-        }
-        ("bench", Some("table6")) => {
-            repro::table6(&bench_options(&opts));
-            Ok(())
-        }
+        ("bench", Some("table5")) => bench_options(&opts).map(|b| repro::table5(&b)),
+        ("bench", Some("table6")) => bench_options(&opts).map(|b| repro::table6(&b)),
         ("bench", Some("all")) => cmd_bench_all(&opts),
+        ("bench", Some(target)) => {
+            return usage_exit(&format!("unknown bench target '{target}'"));
+        }
         _ => {
-            eprintln!("unknown command '{cmd}'\n{HELP}");
-            return ExitCode::FAILURE;
+            return usage_exit(&format!("unknown command '{cmd}'"));
         }
     };
     match r {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
+            if let Some(u) = e.downcast_ref::<UsageError>() {
+                return usage_exit(&u.0);
+            }
             eprintln!("error: {e:#}");
             ExitCode::FAILURE
         }
     }
 }
 
+/// A bad command line (unknown subcommand, malformed flag/value): these
+/// print a one-line reason plus the help text and exit non-zero.
+#[derive(Debug)]
+struct UsageError(String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
+
+fn usage(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(UsageError(msg.into()))
+}
+
+fn usage_exit(reason: &str) -> ExitCode {
+    eprintln!("error: {reason}\n");
+    eprint!("{HELP}");
+    ExitCode::FAILURE
+}
+
 type Opts = HashMap<String, String>;
 
-fn parse_kv(args: &[String]) -> Opts {
+/// Parses `--key value` / `--flag` pairs, rejecting stray positional
+/// tokens (a typoed `-flag` or a value without its key would otherwise be
+/// silently ignored).
+fn parse_kv(args: &[String]) -> Result<Opts, String> {
     let mut map = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
+            if key.is_empty() {
+                return Err("empty flag '--'".to_string());
+            }
             if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 map.insert(key.to_string(), args[i + 1].clone());
                 i += 2;
@@ -135,35 +178,60 @@ fn parse_kv(args: &[String]) -> Opts {
                 i += 1;
             }
         } else {
-            i += 1;
+            return Err(format!("unexpected argument '{a}' (flags are --key [value])"));
         }
     }
-    map
+    Ok(map)
 }
 
-fn get<T: std::str::FromStr>(opts: &Opts, key: &str, default: T) -> T
+fn get<T: std::str::FromStr>(opts: &Opts, key: &str, default: T) -> Result<T, anyhow::Error>
 where
     T::Err: std::fmt::Debug,
 {
-    opts.get(key)
-        .map(|v| v.parse().unwrap_or_else(|e| panic!("bad --{key}: {e:?}")))
-        .unwrap_or(default)
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|e| usage(format!("bad --{key} '{v}': {e:?}"))),
+    }
 }
 
-fn bench_options(opts: &Opts) -> repro::BenchOptions {
+/// Parses a comma-separated `--key a,b,c` list.
+fn get_list<T: std::str::FromStr>(
+    opts: &Opts,
+    key: &str,
+    default: Vec<T>,
+) -> Result<Vec<T>, anyhow::Error>
+where
+    T::Err: std::fmt::Debug,
+{
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|e| usage(format!("bad --{key} entry '{s}': {e:?}")))
+            })
+            .collect(),
+    }
+}
+
+fn bench_options(opts: &Opts) -> Result<repro::BenchOptions, anyhow::Error> {
     let mut b = repro::BenchOptions {
-        batch_queries: get(opts, "queries", 512usize),
-        online_queries: get(opts, "online", 128usize),
-        beam: get(opts, "beam", 10usize),
-        topk: get(opts, "topk", 10usize),
-        scale: get(opts, "scale", 10usize),
-        seed: get(opts, "seed", 2022u64),
+        batch_queries: get(opts, "queries", 512usize)?,
+        online_queries: get(opts, "online", 128usize)?,
+        beam: get(opts, "beam", 10usize)?,
+        topk: get(opts, "topk", 10usize)?,
+        scale: get(opts, "scale", 10usize)?,
+        seed: get(opts, "seed", 2022u64)?,
         only: Vec::new(),
     };
     if let Some(only) = opts.get("only") {
         b.only = only.split(',').map(|s| s.trim().to_string()).collect();
     }
-    b
+    Ok(b)
 }
 
 fn engine_config(opts: &Opts) -> Result<EngineConfig, anyhow::Error> {
@@ -171,22 +239,22 @@ fn engine_config(opts: &Opts) -> Result<EngineConfig, anyhow::Error> {
         .get("algo")
         .map(|s| s.parse())
         .transpose()
-        .map_err(anyhow::Error::msg)?
+        .map_err(|e| usage(e))?
         .unwrap_or(MatmulAlgo::Mscm);
     let iter: IterationMethod = opts
         .get("iter")
         .map(|s| s.parse())
         .transpose()
-        .map_err(anyhow::Error::msg)?
+        .map_err(|e| usage(e))?
         .unwrap_or(IterationMethod::Hash);
     Ok(EngineConfig { algo, iter })
 }
 
 fn cmd_synth_model(opts: &Opts) -> Result<(), anyhow::Error> {
-    let branching = get(opts, "branching", 32usize);
-    let seed = get(opts, "seed", 2022u64);
+    let branching = get(opts, "branching", 32usize)?;
+    let seed = get(opts, "seed", 2022u64)?;
     let model = if let Some(name) = opts.get("dataset") {
-        let scale = get(opts, "scale", 10usize);
+        let scale = get(opts, "scale", 10usize)?;
         let spec = paper_suite(scale)
             .into_iter()
             .find(|s| s.name == name.as_str())
@@ -194,11 +262,11 @@ fn cmd_synth_model(opts: &Opts) -> Result<(), anyhow::Error> {
         mscm_xmr::data::synthetic::synth_model(&spec, branching, seed)
     } else {
         let spec = EnterpriseSpec {
-            num_labels: get(opts, "labels", 100_000usize),
-            dim: get(opts, "dim", 100_000usize),
+            num_labels: get(opts, "labels", 100_000usize)?,
+            dim: get(opts, "dim", 100_000usize)?,
             branching,
-            col_nnz: get(opts, "col-nnz", 24usize),
-            query_nnz: get(opts, "query-nnz", 12usize),
+            col_nnz: get(opts, "col-nnz", 24usize)?,
+            query_nnz: get(opts, "query-nnz", 12usize)?,
             seed,
         };
         spec.build_model()
@@ -212,10 +280,10 @@ fn cmd_synth_model(opts: &Opts) -> Result<(), anyhow::Error> {
 
 fn cmd_gen_data(opts: &Opts) -> Result<(), anyhow::Error> {
     let spec = CorpusSpec {
-        vocab: get(opts, "vocab", 5_000usize),
-        topics: get(opts, "topics", 64usize),
-        docs: get(opts, "docs", 2_000usize),
-        seed: get(opts, "seed", 42u64),
+        vocab: get(opts, "vocab", 5_000usize)?,
+        topics: get(opts, "topics", 64usize)?,
+        docs: get(opts, "docs", 2_000usize)?,
+        seed: get(opts, "seed", 42u64)?,
         ..Default::default()
     };
     let corpus = Corpus::generate(spec.clone());
@@ -239,14 +307,14 @@ fn cmd_train(opts: &Opts) -> Result<(), anyhow::Error> {
         .get("data")
         .ok_or_else(|| anyhow::anyhow!("--data required"))?;
     let data = load_svmlight(data_path)?;
-    let branching = get(opts, "branching", 16usize);
+    let branching = get(opts, "branching", 16usize)?;
     let trained = train_model(
         &data.features,
         &data.labels,
         data.num_labels,
         branching,
         &RankerParams::default(),
-        get(opts, "seed", 7u64),
+        get(opts, "seed", 7u64)?,
     );
     println!("trained: {}", trained.model.stats());
     let out = opts.get("out").cloned().unwrap_or("model.bin".into());
@@ -282,6 +350,44 @@ fn cmd_stats(opts: &Opts) -> Result<(), anyhow::Error> {
     Ok(())
 }
 
+/// Splits a model file into `--shards` standalone shard files under
+/// `--out` (canonical `shard-XXX-of-YYY.bin` names, loadable by
+/// `serve --shards-dir`).
+fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
+    let path = opts
+        .get("model")
+        .ok_or_else(|| usage("shard requires --model"))?;
+    let shards = get(opts, "shards", 4usize)?;
+    if shards == 0 {
+        return Err(usage("--shards must be >= 1"));
+    }
+    let out = opts.get("out").cloned().unwrap_or_else(|| "shards".into());
+    let model = load_model(path, false)?;
+    println!("model: {}", model.stats());
+    let parts = partition(&model, shards);
+    if parts.len() != shards {
+        eprintln!(
+            "note: clamped to {} shards (the root has only that many children)",
+            parts.len()
+        );
+    }
+    let paths = save_shards(&parts, &out)?;
+    for (s, p) in parts.iter().zip(&paths) {
+        println!(
+            "shard {}/{}: root children [{}, {}), labels [{}, {}) -> {}",
+            s.spec.shard_id,
+            s.spec.num_shards,
+            s.spec.root_lo,
+            s.spec.root_hi,
+            s.spec.label_offset,
+            s.spec.label_offset + s.spec.num_labels,
+            p.display()
+        );
+    }
+    println!("wrote {} shard files to {out}", paths.len());
+    Ok(())
+}
+
 fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
     let model = load_model(
         opts.get("model")
@@ -295,8 +401,8 @@ fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
     let config = engine_config(opts)?;
     let dim = model.dim;
     let engine = InferenceEngine::new(model, config);
-    let beam = get(opts, "beam", 10usize);
-    let topk = get(opts, "topk", 10usize);
+    let beam = get(opts, "beam", 10usize)?;
+    let topk = get(opts, "topk", 10usize)?;
     let mut ws = engine.workspace();
     for i in 0..queries.features.rows {
         let mut q = queries.features.row_owned(i);
@@ -326,7 +432,7 @@ fn cmd_eval(opts: &Opts) -> Result<(), anyhow::Error> {
         opts.get("data")
             .ok_or_else(|| anyhow::anyhow!("--data required"))?,
     )?;
-    let test_frac: f64 = get(opts, "test-frac", 0.2f64);
+    let test_frac: f64 = get(opts, "test-frac", 0.2f64)?;
     let n = data.features.rows;
     let n_test = ((n as f64 * test_frac) as usize).clamp(1, n - 1);
     let n_train = n - n_test;
@@ -336,15 +442,12 @@ fn cmd_eval(opts: &Opts) -> Result<(), anyhow::Error> {
         &xtrain,
         &data.labels[..n_train],
         data.num_labels,
-        get(opts, "branching", 16usize),
+        get(opts, "branching", 16usize)?,
         &RankerParams::default(),
-        get(opts, "seed", 7u64),
+        get(opts, "seed", 7u64)?,
     );
     println!("trained on {n_train} rows: {}", trained.model.stats());
-    let beams: Vec<usize> = opts
-        .get("beams")
-        .map(|s| s.split(',').map(|b| b.trim().parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![1, 5, 10, 20]);
+    let beams: Vec<usize> = get_list(opts, "beams", vec![1, 5, 10, 20])?;
     let engine = InferenceEngine::new(
         trained.model.clone(),
         EngineConfig {
@@ -366,50 +469,130 @@ fn cmd_eval(opts: &Opts) -> Result<(), anyhow::Error> {
     Ok(())
 }
 
+/// The two serving stacks behind `serve`, driven by one load loop.
+enum Serving {
+    Single(Coordinator),
+    Sharded(ShardedCoordinator),
+}
+
+impl Serving {
+    fn submit(
+        &self,
+        q: mscm_xmr::sparse::SparseVec,
+    ) -> Result<
+        (u64, std::sync::mpsc::Receiver<mscm_xmr::coordinator::Response>),
+        mscm_xmr::coordinator::SubmitError,
+    > {
+        match self {
+            Serving::Single(c) => c.submit(q),
+            Serving::Sharded(c) => c.submit(q),
+        }
+    }
+
+    fn stats(&self) -> &mscm_xmr::coordinator::CoordinatorStats {
+        match self {
+            Serving::Single(c) => c.stats(),
+            Serving::Sharded(c) => c.stats(),
+        }
+    }
+
+    fn shutdown(self) {
+        match self {
+            Serving::Single(c) => c.shutdown(),
+            Serving::Sharded(c) => c.shutdown(),
+        }
+    }
+}
+
 fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
-    // Model: either from file or synthesized on the spot.
-    let model = if let Some(path) = opts.get("model") {
-        load_model(path, true)?
-    } else {
-        let spec = EnterpriseSpec {
-            num_labels: get(opts, "labels", 100_000usize),
-            dim: get(opts, "dim", 100_000usize),
-            ..Default::default()
-        };
-        eprintln!(
-            "no --model; synthesizing enterprise model (L={})",
-            spec.num_labels
-        );
-        spec.build_model()
-    };
-    let dim = model.dim;
     let config = engine_config(opts)?;
-    let engine = Arc::new(InferenceEngine::new(model, config));
-    let coord = Coordinator::start(
-        Arc::clone(&engine),
-        CoordinatorConfig {
-            workers: get(opts, "workers", 4usize),
-            max_batch: get(opts, "max-batch", 64usize),
-            beam: get(opts, "beam", 10usize),
-            topk: get(opts, "topk", 10usize),
-            ..Default::default()
-        },
-    );
+    let base = CoordinatorConfig {
+        workers: get(opts, "workers", 4usize)?,
+        max_batch: get(opts, "max-batch", 64usize)?,
+        beam: get(opts, "beam", 10usize)?,
+        topk: get(opts, "topk", 10usize)?,
+        ..Default::default()
+    };
+    let num_shards = get(opts, "shards", 0usize)?;
+    let shards_dir = opts.get("shards-dir");
+    if num_shards > 0 && shards_dir.is_some() {
+        return Err(usage("--shards and --shards-dir are mutually exclusive"));
+    }
+    if shards_dir.is_some() && opts.contains_key("model") {
+        return Err(usage(
+            "--model and --shards-dir are mutually exclusive (the shard files are the model)",
+        ));
+    }
+
+    // A pre-sharded partition on disk skips model loading entirely.
+    let (dim, coord) = if let Some(dir) = shards_dir {
+        let shards = load_shards(dir, false)?;
+        let engine = Arc::new(ShardedEngine::new(shards, config));
+        eprintln!(
+            "serving {} shards from {dir} (L={}, d={})",
+            engine.num_shards(),
+            engine.num_labels(),
+            engine.dim()
+        );
+        let dim = engine.dim();
+        let coord = ShardedCoordinator::start(
+            engine,
+            ShardedCoordinatorConfig {
+                base,
+                shard_workers: get(opts, "shard-workers", 2usize)?,
+            },
+        );
+        (dim, Serving::Sharded(coord))
+    } else {
+        // Model: either from file or synthesized on the spot. Full-model
+        // hash row maps only pay off unsharded — partition() slices raw
+        // CSC and each shard engine builds its own side indices.
+        let model = if let Some(path) = opts.get("model") {
+            load_model(path, num_shards == 0)?
+        } else {
+            let spec = EnterpriseSpec {
+                num_labels: get(opts, "labels", 100_000usize)?,
+                dim: get(opts, "dim", 100_000usize)?,
+                ..Default::default()
+            };
+            eprintln!(
+                "no --model; synthesizing enterprise model (L={})",
+                spec.num_labels
+            );
+            spec.build_model()
+        };
+        let dim = model.dim;
+        if num_shards > 0 {
+            let engine = Arc::new(ShardedEngine::from_model(&model, num_shards, config));
+            eprintln!("partitioned into {} shards", engine.num_shards());
+            let coord = ShardedCoordinator::start(
+                engine,
+                ShardedCoordinatorConfig {
+                    base,
+                    shard_workers: get(opts, "shard-workers", 2usize)?,
+                },
+            );
+            (dim, Serving::Sharded(coord))
+        } else {
+            let engine = Arc::new(InferenceEngine::new(model, config));
+            (dim, Serving::Single(Coordinator::start(engine, base)))
+        }
+    };
     // Synthetic load: open-loop arrivals at --rps for --requests queries.
-    let requests = get(opts, "requests", 2_000usize);
-    let rps = get(opts, "rps", 2_000u64);
+    let requests = get(opts, "requests", 2_000usize)?;
+    let rps = get(opts, "rps", 2_000u64)?;
     let spec = mscm_xmr::data::synthetic::DatasetSpec {
         name: "serve-load",
         dim,
         num_labels: 1,
         paper_dim: dim,
         paper_labels: 1,
-        query_nnz: get(opts, "query-nnz", 12usize),
+        query_nnz: get(opts, "query-nnz", 12usize)?,
         col_nnz: 1,
         sibling_overlap: 0.5,
         zipf_theta: 1.05,
     };
-    let x = mscm_xmr::data::synthetic::synth_queries(&spec, requests, get(opts, "seed", 1u64));
+    let x = mscm_xmr::data::synthetic::synth_queries(&spec, requests, get(opts, "seed", 1u64)?);
     eprintln!("serving {requests} requests at {rps} rps ...");
     let interval = std::time::Duration::from_nanos(1_000_000_000 / rps.max(1));
     let mut rxs = Vec::with_capacity(requests);
@@ -457,8 +640,8 @@ fn cmd_xla_smoke(opts: &Opts) -> Result<(), anyhow::Error> {
 }
 
 fn cmd_bench_table(opts: &Opts) -> Result<(), anyhow::Error> {
-    let branching = get(opts, "branching", 8usize);
-    let b = bench_options(opts);
+    let branching = get(opts, "branching", 8usize)?;
+    let b = bench_options(opts)?;
     let rows = repro::bench_table(branching, &b);
     repro::print_table(branching, &rows);
     if let Some(path) = opts.get("json") {
@@ -469,7 +652,7 @@ fn cmd_bench_table(opts: &Opts) -> Result<(), anyhow::Error> {
 }
 
 fn cmd_bench_fig34(opts: &Opts, online: bool) -> Result<(), anyhow::Error> {
-    let b = bench_options(opts);
+    let b = bench_options(opts)?;
     for branching in [2usize, 8, 32] {
         let rows = repro::bench_table(branching, &b);
         repro::print_figure34(branching, &rows, online);
@@ -478,7 +661,7 @@ fn cmd_bench_fig34(opts: &Opts, online: bool) -> Result<(), anyhow::Error> {
 }
 
 fn cmd_bench_fig5(opts: &Opts) -> Result<(), anyhow::Error> {
-    let b = bench_options(opts);
+    let b = bench_options(opts)?;
     let rows = repro::bench_figure5(&b);
     repro::print_figure5(&rows);
     if let Some(path) = opts.get("json") {
@@ -488,11 +671,8 @@ fn cmd_bench_fig5(opts: &Opts) -> Result<(), anyhow::Error> {
 }
 
 fn cmd_bench_fig6(opts: &Opts) -> Result<(), anyhow::Error> {
-    let b = bench_options(opts);
-    let threads: Vec<usize> = opts
-        .get("threads")
-        .map(|s| s.split(',').map(|t| t.trim().parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+    let b = bench_options(opts)?;
+    let threads: Vec<usize> = get_list(opts, "threads", vec![1, 2, 4, 8])?;
     let rows = repro::bench_figure6(&b, &threads);
     repro::print_figure6(&rows);
     if let Some(path) = opts.get("json") {
@@ -503,15 +683,15 @@ fn cmd_bench_fig6(opts: &Opts) -> Result<(), anyhow::Error> {
 
 fn cmd_bench_table4(opts: &Opts) -> Result<(), anyhow::Error> {
     let spec = EnterpriseSpec {
-        num_labels: get(opts, "labels", 1_000_000usize),
-        dim: get(opts, "dim", 400_000usize),
-        branching: get(opts, "branching", 32usize),
-        col_nnz: get(opts, "col-nnz", 24usize),
-        query_nnz: get(opts, "query-nnz", 12usize),
-        seed: get(opts, "seed", 0xE17E_2021u64),
+        num_labels: get(opts, "labels", 1_000_000usize)?,
+        dim: get(opts, "dim", 400_000usize)?,
+        branching: get(opts, "branching", 32usize)?,
+        col_nnz: get(opts, "col-nnz", 24usize)?,
+        query_nnz: get(opts, "query-nnz", 12usize)?,
+        seed: get(opts, "seed", 0xE17E_2021u64)?,
     };
-    let mut b = bench_options(opts);
-    b.online_queries = get(opts, "queries", 256usize);
+    let mut b = bench_options(opts)?;
+    b.online_queries = get(opts, "queries", 256usize)?;
     let rows = repro::bench_table4(&spec, &b);
     repro::print_table4(&spec, &rows);
     if let Some(path) = opts.get("json") {
@@ -526,7 +706,7 @@ fn cmd_bench_all(opts: &Opts) -> Result<(), anyhow::Error> {
         .cloned()
         .unwrap_or_else(|| "reports".to_string());
     std::fs::create_dir_all(&dir)?;
-    let b = bench_options(opts);
+    let b = bench_options(opts)?;
     repro::table5(&b);
     for branching in [2usize, 8, 32] {
         let rows = repro::bench_table(branching, &b);
@@ -545,8 +725,8 @@ fn cmd_bench_all(opts: &Opts) -> Result<(), anyhow::Error> {
     repro::print_figure6(&f6);
     repro::write_report(&format!("{dir}/figure6.json"), repro::figure6_to_json(&f6))?;
     let spec = EnterpriseSpec {
-        num_labels: get(opts, "labels", 1_000_000usize),
-        dim: get(opts, "dim", 400_000usize),
+        num_labels: get(opts, "labels", 1_000_000usize)?,
+        dim: get(opts, "dim", 400_000usize)?,
         ..Default::default()
     };
     let t4 = repro::bench_table4(&spec, &b);

@@ -1,0 +1,422 @@
+//! The in-process sharded engine: layer-synchronized exact scatter-gather
+//! (see the [`crate::shard`] module docs for why this reproduces the
+//! unsharded search bit for bit).
+
+use super::partition::{ShardModel, ShardSpec};
+use crate::inference::{
+    rank_beam, select_top, EngineConfig, InferenceEngine, Prediction, Workspace,
+};
+use crate::sparse::{CsrMatrix, SparseVec};
+
+/// One shard hosted by the engine.
+struct ShardUnit {
+    engine: InferenceEngine,
+    spec: ShardSpec,
+    layer_offsets: Vec<u32>,
+}
+
+/// An inference engine over a complete shard partition.
+///
+/// The driver owns the *global* beam: at every layer each shard expands
+/// exactly the surviving beam nodes that live in its column range
+/// ([`InferenceEngine::expand_layer`] behind
+/// [`ShardedEngine::expand_shard_layer`]), the candidates are merged with
+/// their global node ids, and one global `select_top` prunes — the same
+/// computation as the unsharded engine with candidate *generation*
+/// partitioned by shard, hence bit-identical output.
+pub struct ShardedEngine {
+    units: Vec<ShardUnit>,
+    config: EngineConfig,
+    dim: usize,
+    depth: usize,
+    num_labels: usize,
+}
+
+impl ShardedEngine {
+    /// Builds per-shard engines (each constructing whatever side indices
+    /// `config` needs). `shards` must be one complete partition; shards
+    /// may arrive in any order.
+    pub fn new(shards: Vec<ShardModel>, config: EngineConfig) -> Self {
+        assert!(!shards.is_empty(), "need at least one shard");
+        let mut shards = shards;
+        shards.sort_by_key(|s| s.spec.shard_id);
+        let dim = shards[0].model.dim;
+        let depth = shards[0].model.depth();
+        let num_shards = shards[0].spec.num_shards;
+        assert_eq!(
+            shards.len() as u64,
+            num_shards as u64,
+            "incomplete partition: {} of {} shards",
+            shards.len(),
+            num_shards
+        );
+        let mut next_label = 0u64;
+        let mut units = Vec::with_capacity(shards.len());
+        for (i, s) in shards.into_iter().enumerate() {
+            assert_eq!(s.spec.shard_id as usize, i, "duplicate shard id");
+            assert_eq!(s.model.dim, dim, "shard dim mismatch");
+            assert_eq!(s.model.depth(), depth, "shard depth mismatch");
+            assert_eq!(s.spec.label_offset, next_label, "label gap before shard {i}");
+            next_label += s.spec.num_labels;
+            units.push(ShardUnit {
+                engine: InferenceEngine::new(s.model, config),
+                spec: s.spec,
+                layer_offsets: s.layer_offsets,
+            });
+        }
+        Self {
+            units,
+            config,
+            dim,
+            depth,
+            num_labels: next_label as usize,
+        }
+    }
+
+    /// Convenience: partition `model` and build the engine in one step.
+    pub fn from_model(
+        model: &crate::tree::XmrModel,
+        num_shards: usize,
+        config: EngineConfig,
+    ) -> Self {
+        Self::new(super::partition(model, num_shards), config)
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Feature dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Tree depth in ranker layers.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Total labels across shards.
+    pub fn num_labels(&self) -> usize {
+        self.num_labels
+    }
+
+    /// The shared engine configuration.
+    pub fn config(&self) -> EngineConfig {
+        self.config
+    }
+
+    /// The per-shard inference engine (shard workers pull workspaces
+    /// from this).
+    pub fn shard_engine(&self, shard: usize) -> &InferenceEngine {
+        &self.units[shard].engine
+    }
+
+    /// The identity of shard `shard`.
+    pub fn shard_spec(&self, shard: usize) -> ShardSpec {
+        self.units[shard].spec
+    }
+
+    /// Global node-id range `[lo, hi)` that shard `shard` owns at `layer`.
+    pub fn layer_range(&self, shard: usize, layer: usize) -> (u32, u32) {
+        let u = &self.units[shard];
+        let lo = u.layer_offsets[layer];
+        (lo, lo + u.engine.model().layers[layer].num_nodes() as u32)
+    }
+
+    /// Scatter half, one shard × one layer × one batch: installs the
+    /// shard-local `beams` (parents in layer `layer - 1`, local ids
+    /// ascending), expands layer `layer`, and returns the generated
+    /// `(local node, path score)` candidates per query. This is the unit
+    /// the serving coordinator ships to per-shard worker pools.
+    pub fn expand_shard_layer(
+        &self,
+        shard: usize,
+        x: &CsrMatrix,
+        layer: usize,
+        beams: Vec<Vec<(u32, f32)>>,
+        ws: &mut Workspace,
+    ) -> Vec<Vec<(u32, f32)>> {
+        let n = beams.len();
+        let engine = &self.units[shard].engine;
+        ws.ensure_batch(n);
+        for (q, b) in beams.into_iter().enumerate() {
+            ws.beams[q] = b;
+        }
+        engine.expand_layer(layer, x, 0, n, ws);
+        (0..n).map(|q| std::mem::take(&mut ws.cands[q])).collect()
+    }
+
+    /// Gather half, one layer: merges per-shard candidates into global
+    /// ids, prunes with the engine's own comparator, and splits the
+    /// surviving beam back into per-shard local beams for the next layer.
+    /// `global_beams[q]` is left holding the pruned global beam.
+    pub(crate) fn merge_and_split(
+        &self,
+        layer: usize,
+        shard_cands: &[Vec<Vec<(u32, f32)>>],
+        beam: usize,
+        scratch: &mut Vec<(u32, f32)>,
+        global_beams: &mut [Vec<(u32, f32)>],
+        next_local: &mut [Vec<Vec<(u32, f32)>>],
+    ) {
+        let n = global_beams.len();
+        for q in 0..n {
+            scratch.clear();
+            for (s, u) in self.units.iter().enumerate() {
+                let off = u.layer_offsets[layer];
+                for &(node, score) in &shard_cands[s][q] {
+                    scratch.push((node + off, score));
+                }
+            }
+            // Global beam step: exactly InferenceEngine's select_top.
+            select_top(scratch, beam, &mut global_beams[q]);
+            for s in 0..self.units.len() {
+                let (lo, hi) = self.layer_range(s, layer);
+                let local = &mut next_local[s][q];
+                local.clear();
+                local.extend(
+                    global_beams[q]
+                        .iter()
+                        .filter(|&&(node, _)| node >= lo && node < hi)
+                        .map(|&(node, score)| (node - lo, score)),
+                );
+            }
+        }
+    }
+
+    /// Final ranking, identical to [`InferenceEngine::predict_range`]'s
+    /// bottom step (the shared `rank_beam`): sort the last global beam
+    /// and keep the top `topk`.
+    pub(crate) fn finalize(beamed: &mut Vec<(u32, f32)>, topk: usize) -> Vec<Prediction> {
+        rank_beam(beamed, topk);
+        beamed
+            .iter()
+            .map(|&(label, score)| Prediction { label, score })
+            .collect()
+    }
+
+    /// The layer-synchronized protocol driver, shared by the in-process
+    /// paths below and the serving coordinator's gather workers (one
+    /// place owns the exactness-critical sequence). `expand` maps
+    /// `(layer, per-shard local beams)` to per-shard candidates — in
+    /// process it calls [`ShardedEngine::expand_shard_layer`] directly;
+    /// the coordinator ships `LayerJob`s to shard pools. Returning `None`
+    /// aborts (a shard vanished mid-batch during shutdown).
+    pub(crate) fn drive<F>(
+        &self,
+        n: usize,
+        beam: usize,
+        topk: usize,
+        mut expand: F,
+    ) -> Option<Vec<Vec<Prediction>>>
+    where
+        F: FnMut(usize, Vec<Vec<Vec<(u32, f32)>>>) -> Option<Vec<Vec<Vec<(u32, f32)>>>>,
+    {
+        assert!(beam >= 1, "beam width must be >= 1");
+        let s_count = self.units.len();
+        // Per-shard local beams: every shard starts at its own root.
+        let mut local: Vec<Vec<Vec<(u32, f32)>>> =
+            vec![vec![vec![(0u32, 1.0f32)]; n]; s_count];
+        let mut global_beams: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for l in 0..self.depth {
+            let cands = expand(l, std::mem::take(&mut local))?;
+            local = vec![vec![Vec::new(); n]; s_count];
+            self.merge_and_split(l, &cands, beam, &mut scratch, &mut global_beams, &mut local);
+        }
+        Some(
+            global_beams
+                .iter_mut()
+                .map(|b| Self::finalize(b, topk))
+                .collect(),
+        )
+    }
+
+    /// One freshly-sized workspace per shard, for the `_with` entry
+    /// points (serving paths keep these per worker and reuse them).
+    pub fn workspaces(&self) -> Vec<Workspace> {
+        self.units.iter().map(|u| u.engine.workspace()).collect()
+    }
+
+    /// Online scatter-gather for a single query.
+    pub fn predict(&self, x: &SparseVec, beam: usize, topk: usize) -> Vec<Prediction> {
+        let xm = CsrMatrix::from_single_row(x, self.dim);
+        self.predict_batch(&xm, beam, topk, false).pop().unwrap()
+    }
+
+    /// Online scatter-gather reusing caller-held per-shard workspaces
+    /// (alloc-light hot path, mirroring
+    /// [`InferenceEngine::predict_with`]).
+    pub fn predict_with(
+        &self,
+        x: &SparseVec,
+        beam: usize,
+        topk: usize,
+        wss: &mut [Workspace],
+    ) -> Vec<Prediction> {
+        let xm = CsrMatrix::from_single_row(x, self.dim);
+        self.predict_batch_with(&xm, beam, topk, false, wss).pop().unwrap()
+    }
+
+    /// Batch scatter-gather: each layer is expanded by every shard (chunk
+    /// loads amortized across the batch, as in Alg. 3), then one global
+    /// beam selection runs per query. Scatter uses one thread per shard
+    /// when `parallel`.
+    pub fn predict_batch(
+        &self,
+        x: &CsrMatrix,
+        beam: usize,
+        topk: usize,
+        parallel: bool,
+    ) -> Vec<Vec<Prediction>> {
+        let mut wss = self.workspaces();
+        self.predict_batch_with(x, beam, topk, parallel, &mut wss)
+    }
+
+    /// [`ShardedEngine::predict_batch`] with caller-held workspaces
+    /// (`wss[s]` belongs to shard `s`). When `parallel`, each layer round
+    /// scatters on one scoped thread per shard — fine for batches, where
+    /// the `depth × S` spawns amortize across the whole batch; sustained
+    /// serving should use [`super::ShardedCoordinator`]'s persistent
+    /// pools instead.
+    pub fn predict_batch_with(
+        &self,
+        x: &CsrMatrix,
+        beam: usize,
+        topk: usize,
+        parallel: bool,
+        wss: &mut [Workspace],
+    ) -> Vec<Vec<Prediction>> {
+        let n = x.rows;
+        let s_count = self.units.len();
+        assert_eq!(wss.len(), s_count, "need one workspace per shard");
+        self.drive(n, beam, topk, |l, beams_in| {
+            Some(if parallel {
+                let mut out: Vec<Option<Vec<Vec<(u32, f32)>>>> =
+                    (0..s_count).map(|_| None).collect();
+                std::thread::scope(|scope| {
+                    for (((s, beams), ws), slot) in beams_in
+                        .into_iter()
+                        .enumerate()
+                        .zip(wss.iter_mut())
+                        .zip(out.iter_mut())
+                    {
+                        scope.spawn(move || {
+                            *slot = Some(self.expand_shard_layer(s, x, l, beams, ws));
+                        });
+                    }
+                });
+                out.into_iter().map(|o| o.unwrap()).collect()
+            } else {
+                beams_in
+                    .into_iter()
+                    .enumerate()
+                    .zip(wss.iter_mut())
+                    .map(|((s, beams), ws)| self.expand_shard_layer(s, x, l, beams, ws))
+                    .collect()
+            })
+        })
+        .expect("in-process expansion cannot abort")
+    }
+
+    /// Approximate resident bytes of every shard model (chunked form).
+    pub fn memory_bytes(&self) -> usize {
+        self.units
+            .iter()
+            .map(|u| u.engine.model().stats().chunked_bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::{IterationMethod, MatmulAlgo};
+    use crate::tree::test_util::tiny_model;
+    use crate::util::Rng;
+
+    fn rand_query(rng: &mut Rng, dim: usize) -> SparseVec {
+        SparseVec::from_pairs(
+            (0..rng.gen_range(1..dim / 2))
+                .map(|_| (rng.gen_range(0..dim) as u32, rng.gen_f32(-1.0, 1.0)))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn sharded_equals_unsharded_bitwise_tiny() {
+        let m = tiny_model(32, 4, 3, 2024); // 4 root children, 64 labels
+        let mut rng = Rng::seed_from_u64(8);
+        let queries: Vec<SparseVec> = (0..12).map(|_| rand_query(&mut rng, 32)).collect();
+        for cfg in EngineConfig::all() {
+            let reference = InferenceEngine::new(m.clone(), cfg);
+            for s in [1usize, 2, 3, 4] {
+                let sharded = ShardedEngine::from_model(&m, s, cfg);
+                assert_eq!(sharded.num_shards(), s);
+                for (qi, q) in queries.iter().enumerate() {
+                    for beam in [1usize, 2, 5, 64] {
+                        let want = reference.predict(q, beam, 10);
+                        let got = sharded.predict(q, beam, 10);
+                        assert_eq!(got, want, "{} S={s} beam={beam} q={qi}", cfg.label());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_gather_matches_online_gather() {
+        let m = tiny_model(24, 3, 3, 77);
+        let cfg = EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        };
+        let sharded = ShardedEngine::from_model(&m, 3, cfg);
+        let mut rng = Rng::seed_from_u64(4);
+        let rows: Vec<SparseVec> = (0..9).map(|_| rand_query(&mut rng, 24)).collect();
+        let x = CsrMatrix::from_rows(rows.clone(), 24);
+        for parallel in [false, true] {
+            let batch = sharded.predict_batch(&x, 3, 5, parallel);
+            for (i, q) in rows.iter().enumerate() {
+                assert_eq!(batch[i], sharded.predict(q, 3, 5), "parallel={parallel} q={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn beam_narrower_than_shard_count_stays_exact() {
+        // The case the naive per-shard merge gets wrong: with beam 1 only
+        // one shard's subtree may survive each layer; the others must
+        // expand nothing rather than vote their own best leaf in.
+        let m = tiny_model(24, 4, 3, 31);
+        for cfg in EngineConfig::all() {
+            let reference = InferenceEngine::new(m.clone(), cfg);
+            let sharded = ShardedEngine::from_model(&m, 4, cfg);
+            let mut rng = Rng::seed_from_u64(17);
+            for qi in 0..20 {
+                let q = rand_query(&mut rng, 24);
+                assert_eq!(
+                    sharded.predict(&q, 1, 3),
+                    reference.predict(&q, 1, 3),
+                    "{} q={qi}",
+                    cfg.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "incomplete partition")]
+    fn missing_shard_panics() {
+        let m = tiny_model(16, 4, 2, 3);
+        let mut shards = crate::shard::partition(&m, 4);
+        shards.remove(1);
+        let cfg = EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::MarchingPointers,
+        };
+        ShardedEngine::new(shards, cfg);
+    }
+}

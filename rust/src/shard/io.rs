@@ -1,0 +1,219 @@
+//! Shard serialization: a versioned envelope around the [`crate::tree`]
+//! model body.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic         u64  = 0x4d53_434d_584d_5232 ("MSCMXMR2")
+//! shard_id      u64
+//! num_shards    u64
+//! root_lo       u64   global root-child range [root_lo, root_hi)
+//! root_hi       u64
+//! label_offset  u64   global label id of local label 0
+//! num_labels    u64
+//! depth         u64
+//! layer_offsets depth x u32   global column start per layer
+//! model body    (identical to the MSCMXMR1 payload after its magic)
+//! ```
+//! The body is read/written by the same codec as whole models, so format
+//! evolution stays in one place.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use super::partition::{ShardModel, ShardSpec};
+use crate::tree::{read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64};
+
+const SHARD_MAGIC: u64 = 0x4d53_434d_584d_5232;
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Saves one shard to `path`.
+pub fn save_shard(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    write_u64(&mut w, SHARD_MAGIC)?;
+    write_u64(&mut w, shard.spec.shard_id as u64)?;
+    write_u64(&mut w, shard.spec.num_shards as u64)?;
+    write_u64(&mut w, shard.spec.root_lo as u64)?;
+    write_u64(&mut w, shard.spec.root_hi as u64)?;
+    write_u64(&mut w, shard.spec.label_offset)?;
+    write_u64(&mut w, shard.spec.num_labels)?;
+    write_u64(&mut w, shard.layer_offsets.len() as u64)?;
+    write_u32s(&mut w, &shard.layer_offsets)?;
+    write_model_body(&mut w, &shard.model)?;
+    w.flush()
+}
+
+/// Loads one shard from `path` (hash row maps rebuilt when
+/// `with_row_maps`), validating header/body consistency.
+pub fn load_shard(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<ShardModel> {
+    let mut r = BufReader::new(std::fs::File::open(&path)?);
+    if read_u64(&mut r)? != SHARD_MAGIC {
+        return Err(invalid("not an MSCM-XMR shard file"));
+    }
+    let spec = ShardSpec {
+        shard_id: read_u64(&mut r)? as u32,
+        num_shards: read_u64(&mut r)? as u32,
+        root_lo: read_u64(&mut r)? as u32,
+        root_hi: read_u64(&mut r)? as u32,
+        label_offset: read_u64(&mut r)?,
+        num_labels: read_u64(&mut r)?,
+    };
+    let depth = read_u64(&mut r)? as usize;
+    let layer_offsets = read_u32s(&mut r, depth)?;
+    let model = read_model_body(&mut r, with_row_maps)?;
+    if spec.shard_id >= spec.num_shards {
+        return Err(invalid(format!(
+            "shard id {} out of range for {} shards",
+            spec.shard_id, spec.num_shards
+        )));
+    }
+    if spec.root_hi < spec.root_lo {
+        return Err(invalid("shard root-child range is inverted"));
+    }
+    if model.depth() != depth {
+        return Err(invalid("shard header depth disagrees with model body"));
+    }
+    if model.num_labels() as u64 != spec.num_labels {
+        return Err(invalid("shard label count disagrees with model body"));
+    }
+    if layer_offsets.last().copied().unwrap_or(0) as u64 != spec.label_offset {
+        return Err(invalid("shard label offset disagrees with layer offsets"));
+    }
+    if layer_offsets.first().copied().unwrap_or(0) != spec.root_lo {
+        return Err(invalid("shard root offset disagrees with layer offsets"));
+    }
+    if model.layers[0].num_nodes() as u64 != (spec.root_hi - spec.root_lo) as u64 {
+        return Err(invalid("shard root-child range disagrees with model body"));
+    }
+    Ok(ShardModel {
+        spec,
+        layer_offsets,
+        model,
+    })
+}
+
+/// Canonical file name of shard `id` in an `num_shards`-way partition.
+pub fn shard_file_name(dir: impl AsRef<Path>, id: u32, num_shards: u32) -> PathBuf {
+    dir.as_ref().join(format!("shard-{id:03}-of-{num_shards:03}.bin"))
+}
+
+/// Saves every shard of a partition under `dir` (created if missing)
+/// with canonical names; returns the written paths.
+pub fn save_shards(shards: &[ShardModel], dir: impl AsRef<Path>) -> io::Result<Vec<PathBuf>> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::with_capacity(shards.len());
+    for s in shards {
+        let path = shard_file_name(dir, s.spec.shard_id, s.spec.num_shards);
+        save_shard(s, &path)?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+/// Loads a complete partition from `dir`: every `shard-*.bin`, sorted by
+/// shard id, validated to be one consistent, gap-free partition.
+pub fn load_shards(dir: impl AsRef<Path>, with_row_maps: bool) -> io::Result<Vec<ShardModel>> {
+    let dir = dir.as_ref();
+    let mut shards = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("shard-") && name.ends_with(".bin") {
+            shards.push(load_shard(&path, with_row_maps)?);
+        }
+    }
+    if shards.is_empty() {
+        return Err(invalid(format!("no shard-*.bin files in {}", dir.display())));
+    }
+    shards.sort_by_key(|s| s.spec.shard_id);
+    let num_shards = shards[0].spec.num_shards;
+    if shards.len() as u64 != num_shards as u64 {
+        return Err(invalid(format!(
+            "incomplete partition: found {} of {} shards",
+            shards.len(),
+            num_shards
+        )));
+    }
+    let mut next_root = 0u32;
+    let mut next_label = 0u64;
+    // Every layer's column ranges must tile contiguously across shards —
+    // this is what catches shard files mixed from different partitions
+    // (or different trainings) that happen to agree on the root split.
+    let depth = shards[0].model.depth();
+    let mut next_cols = vec![0u32; depth];
+    for (i, s) in shards.iter().enumerate() {
+        if s.spec.shard_id != i as u32 || s.spec.num_shards != num_shards {
+            return Err(invalid("duplicate or mismatched shard ids"));
+        }
+        if s.spec.root_lo != next_root || s.spec.label_offset != next_label {
+            return Err(invalid(format!("shard {i} is not contiguous with its predecessor")));
+        }
+        if s.model.depth() != depth {
+            return Err(invalid(format!("shard {i} depth disagrees with shard 0")));
+        }
+        for (l, nc) in next_cols.iter_mut().enumerate() {
+            if s.layer_offsets[l] != *nc {
+                return Err(invalid(format!(
+                    "shard {i} layer {l} columns are not contiguous with its predecessor"
+                )));
+            }
+            *nc += s.model.layers[l].num_nodes() as u32;
+        }
+        next_root = s.spec.root_hi;
+        next_label += s.spec.num_labels;
+    }
+    Ok(shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::partition::partition;
+    use super::*;
+    use crate::tree::test_util::tiny_model;
+
+    #[test]
+    fn shard_save_load_round_trip() {
+        let m = tiny_model(20, 4, 3, 21);
+        let shards = partition(&m, 3);
+        let dir = crate::util::temp_dir("shard-io");
+        let paths = save_shards(&shards, &dir).unwrap();
+        assert_eq!(paths.len(), 3);
+        let loaded = load_shards(&dir, true).unwrap();
+        assert_eq!(loaded.len(), shards.len());
+        for (a, b) in shards.iter().zip(&loaded) {
+            assert_eq!(a.spec, b.spec);
+            assert_eq!(a.layer_offsets, b.layer_offsets);
+            assert_eq!(a.model.dim, b.model.dim);
+            for (la, lb) in a.model.layers.iter().zip(&b.model.layers) {
+                assert_eq!(la.csc, lb.csc);
+                assert_eq!(la.chunked.chunk_offsets, lb.chunked.chunk_offsets);
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn incomplete_partition_rejected() {
+        let m = tiny_model(16, 4, 2, 5);
+        let shards = partition(&m, 4);
+        let dir = crate::util::temp_dir("shard-io-missing");
+        save_shards(&shards, &dir).unwrap();
+        std::fs::remove_file(shard_file_name(&dir, 2, 4)).unwrap();
+        let err = load_shards(&dir, false).unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn model_file_rejected_as_shard() {
+        let m = tiny_model(16, 2, 2, 5);
+        let dir = crate::util::temp_dir("shard-io-magic");
+        let path = dir.join("model.bin");
+        crate::tree::save_model(&m, &path).unwrap();
+        assert!(load_shard(&path, false).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,70 @@
+//! Label-space sharding: split an XMR tree into shards and serve them
+//! with an **exact** scatter-gather coordinator.
+//!
+//! The paper's §6 deployment (100M products served at 0.88 ms/query)
+//! assumes the whole model is resident on one machine. At fleet scale,
+//! weight residency is the binding constraint, so XR-Linear-style systems
+//! shard the *label space*: the root's children are split into `S`
+//! contiguous subtree groups, each a standalone model a fraction of the
+//! size. This module adds that layer:
+//!
+//! - [`partition`] splits an [`XmrModel`](crate::tree::XmrModel) into
+//!   [`ShardModel`]s — each wraps a self-contained `XmrModel` over a
+//!   contiguous root-child range plus the remap back to global ids.
+//! - [`save_shard`] / [`load_shard`] (+ the `save_shards`/[`load_shards`]
+//!   directory helpers) persist shards in a versioned extension of the
+//!   [`crate::tree`] binary format (magic `MSCMXMR2`, a shard-index
+//!   header, then the ordinary model body).
+//! - [`ShardedEngine`] runs a query against every shard and merges the
+//!   results; [`ShardedCoordinator`] serves it with dynamic batching,
+//!   per-shard worker pools (each worker holding its own
+//!   [`Workspace`](crate::inference::Workspace)) and bounded-queue
+//!   backpressure, reusing [`crate::coordinator`]'s machinery.
+//!
+//! # Why the gather stage is exact
+//!
+//! Eq. 5 path scores are independent across root subtrees, but global
+//! beam search is not: at every layer the unsharded engine keeps the top
+//! `b` candidates across *all* subtrees. Fully independent per-shard beam
+//! searches therefore cannot be merged exactly — a shard's local beam can
+//! be crowded by children of parents the global beam already pruned,
+//! displacing (and so never expanding) a node the global search keeps.
+//!
+//! The coordinator instead runs the **layer-synchronized** protocol: it
+//! owns the global beam, and each round every shard expands exactly the
+//! surviving beam nodes that fall in its column range, returning the
+//! generated `(node, path score)` candidates. The gather stage merges
+//! them under the global node ids and prunes with the engine's own
+//! `select_top` comparator. This performs the unsharded computation
+//! *verbatim* with candidate generation partitioned by shard:
+//!
+//! 1. The candidate set each layer is identical — the union over shards
+//!    of "children of the global beam restricted to the shard" is the
+//!    children of the global beam, because sibling chunks never straddle
+//!    a shard boundary (the partition cuts between root children).
+//! 2. Per-candidate scores are bitwise identical — a shard's columns are
+//!    verbatim slices of the global weight matrices, every iteration
+//!    method accumulates each column's dot product in the same ascending
+//!    feature order, and parent path scores multiply through the same
+//!    chain of f32 operations.
+//! 3. Selection is order-independent — `(score desc, node id asc)` under
+//!    `total_cmp` is a strict total order, so the top-`b` set does not
+//!    depend on the order shards' candidates are merged in.
+//!
+//! The surviving bottom beam, sorted and truncated exactly as the engine
+//! does, equals the unsharded output bit for bit — enforced for
+//! `S ∈ {1, 2, 4, 7}`, both [`MatmulAlgo`](crate::inference::MatmulAlgo)s
+//! and all four iteration methods by the `rust/tests/sharding.rs`
+//! property suite. The cost is `depth` scatter rounds per batch instead
+//! of one; the dynamic batcher amortizes the rounds across every query
+//! in the batch.
+
+mod engine;
+mod io;
+mod partition;
+mod serve;
+
+pub use engine::ShardedEngine;
+pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
+pub use partition::{partition, ShardModel, ShardSpec};
+pub use serve::{ShardedCoordinator, ShardedCoordinatorConfig};

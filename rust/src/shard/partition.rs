@@ -1,0 +1,212 @@
+//! Model partitioning: contiguous root-subtree groups → standalone shard
+//! models plus the remap back to the global id spaces.
+
+use crate::data::synthetic::even_offsets;
+use crate::tree::{Layer, XmrModel};
+
+/// Identity of one shard within a partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// This shard's index in `0..num_shards`.
+    pub shard_id: u32,
+    /// Total shards in the partition.
+    pub num_shards: u32,
+    /// First global root-child owned by this shard.
+    pub root_lo: u32,
+    /// One past the last global root-child owned by this shard.
+    pub root_hi: u32,
+    /// Global label id of this shard's local label 0. Because the
+    /// partition is contiguous, the label remap is the affine map
+    /// `global = local + label_offset`.
+    pub label_offset: u64,
+    /// Labels (leaves) owned by this shard.
+    pub num_labels: u64,
+}
+
+/// A standalone shard: a self-contained [`XmrModel`] over one contiguous
+/// group of root subtrees, plus the per-layer node remap back to the
+/// global model.
+#[derive(Clone, Debug)]
+pub struct ShardModel {
+    /// Shard identity and label remap.
+    pub spec: ShardSpec,
+    /// Global column (node) id of each layer's local node 0; the bottom
+    /// entry equals `spec.label_offset`.
+    pub layer_offsets: Vec<u32>,
+    /// The shard's own tree model (same feature dimension `d`, same
+    /// depth, a contiguous column slice of every layer).
+    pub model: XmrModel,
+}
+
+impl ShardModel {
+    /// Maps a shard-local node of `layer` to its global node id.
+    #[inline]
+    pub fn global_node(&self, layer: usize, local: u32) -> u32 {
+        local + self.layer_offsets[layer]
+    }
+
+    /// Maps a shard-local label to its global label id.
+    #[inline]
+    pub fn global_label(&self, local: u32) -> u32 {
+        local + self.spec.label_offset as u32
+    }
+}
+
+/// Splits `model` into (at most) `num_shards` standalone shard models by
+/// near-even contiguous grouping of the root's children.
+///
+/// Each shard's layer `l` is the verbatim column slice covering the
+/// shard's subtrees — entries are copied bit-for-bit and sibling chunks
+/// never straddle a shard boundary (the cut is between root children), so
+/// per-shard inference scores are bitwise identical to the global model's
+/// (see the [`crate::shard`] module docs for why the gather stage stays
+/// exact under beam search).
+///
+/// When `num_shards` exceeds the number of root children the partition
+/// degrades gracefully to one shard per root child (a shard must own at
+/// least one subtree); the returned vector's length is the effective
+/// shard count.
+pub fn partition(model: &XmrModel, num_shards: usize) -> Vec<ShardModel> {
+    assert!(num_shards >= 1, "need at least one shard");
+    let root_children = model.layers[0].num_nodes();
+    let s = num_shards.min(root_children);
+    let bounds = even_offsets(root_children, s);
+    let mut shards = Vec::with_capacity(s);
+    for i in 0..s {
+        // Node range of the previous layer, driving this layer's chunk
+        // range; starts as the shard's root-child range.
+        let (mut lo, mut hi) = (bounds[i] as usize, bounds[i + 1] as usize);
+        let mut layers = Vec::with_capacity(model.layers.len());
+        let mut layer_offsets = Vec::with_capacity(model.layers.len());
+        for (li, layer) in model.layers.iter().enumerate() {
+            // Column range of this layer owned by the shard: layer 0 is
+            // cut directly at root children; deeper layers follow the
+            // chunk ranges of the previous layer's nodes.
+            let (c0, c1) = if li == 0 {
+                (lo, hi)
+            } else {
+                let offs = &layer.chunked.chunk_offsets;
+                (offs[lo] as usize, offs[hi] as usize)
+            };
+            layer_offsets.push(c0 as u32);
+            let csc = layer.csc.slice_cols(c0, c1);
+            let offsets: Vec<u32> = if li == 0 {
+                // The shard's root children become a single chunk under
+                // its own implicit root.
+                vec![0, (c1 - c0) as u32]
+            } else {
+                layer.chunked.chunk_offsets[lo..=hi]
+                    .iter()
+                    .map(|&o| o - c0 as u32)
+                    .collect()
+            };
+            // Row maps are not built here; engines build whatever side
+            // indices their configuration needs.
+            layers.push(Layer::new(csc, &offsets, false));
+            (lo, hi) = (c0, c1);
+        }
+        // (lo, hi) now bound the bottom layer: the shard's label range.
+        let spec = ShardSpec {
+            shard_id: i as u32,
+            num_shards: s as u32,
+            root_lo: bounds[i],
+            root_hi: bounds[i + 1],
+            label_offset: lo as u64,
+            num_labels: (hi - lo) as u64,
+        };
+        shards.push(ShardModel {
+            spec,
+            layer_offsets,
+            model: XmrModel::new(model.dim, layers),
+        });
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::test_util::tiny_model;
+
+    #[test]
+    fn partition_covers_every_column_once() {
+        let m = tiny_model(24, 4, 3, 9); // 4 root children, 64 labels
+        for s in [1usize, 2, 3, 4, 9] {
+            let shards = partition(&m, s);
+            assert_eq!(shards.len(), s.min(4));
+            assert_eq!(shards[0].spec.num_shards as usize, shards.len());
+            for l in 0..m.depth() {
+                let mut covered = 0u32;
+                for sh in &shards {
+                    assert_eq!(sh.layer_offsets[l], covered, "layer {l} contiguity");
+                    covered += sh.model.layers[l].num_nodes() as u32;
+                }
+                assert_eq!(covered as usize, m.layers[l].num_nodes(), "layer {l} total");
+            }
+            let total_labels: u64 = shards.iter().map(|s| s.spec.num_labels).sum();
+            assert_eq!(total_labels as usize, m.num_labels());
+        }
+    }
+
+    #[test]
+    fn shard_columns_are_verbatim_slices() {
+        let m = tiny_model(16, 3, 3, 4);
+        let shards = partition(&m, 2);
+        for sh in &shards {
+            assert_eq!(sh.model.dim, m.dim);
+            assert_eq!(sh.model.depth(), m.depth());
+            for (l, layer) in sh.model.layers.iter().enumerate() {
+                let off = sh.layer_offsets[l] as usize;
+                for j in 0..layer.num_nodes() {
+                    let local = layer.csc.col(j);
+                    let global = m.layers[l].csc.col(off + j);
+                    assert_eq!(local.indices, global.indices);
+                    assert_eq!(local.values, global.values);
+                }
+            }
+            // label remap round-trips
+            assert_eq!(
+                sh.global_label(0) as u64,
+                sh.spec.label_offset,
+                "label remap base"
+            );
+            assert_eq!(
+                sh.layer_offsets.last().copied().unwrap() as u64,
+                sh.spec.label_offset
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_topology_preserved_per_shard() {
+        let m = tiny_model(16, 4, 3, 12);
+        for sh in partition(&m, 4) {
+            // layer 0 is one chunk; deeper layers one chunk per parent
+            assert_eq!(sh.model.layers[0].chunked.num_chunks(), 1);
+            for l in 1..sh.model.depth() {
+                assert_eq!(
+                    sh.model.layers[l].chunked.num_chunks(),
+                    sh.model.layers[l - 1].num_nodes()
+                );
+                // chunk widths match the global model's chunks
+                let node0 = sh.layer_offsets[l - 1] as usize;
+                for c in 0..sh.model.layers[l].chunked.num_chunks() {
+                    assert_eq!(
+                        sh.model.layers[l].chunked.chunk_width(c),
+                        m.layers[l].chunked.chunk_width(node0 + c)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversharding_clamps_to_root_children() {
+        let m = tiny_model(16, 3, 2, 1); // 3 root children
+        let shards = partition(&m, 100);
+        assert_eq!(shards.len(), 3);
+        for (i, sh) in shards.iter().enumerate() {
+            assert_eq!(sh.spec.root_hi - sh.spec.root_lo, 1, "shard {i}");
+        }
+    }
+}

@@ -1,0 +1,350 @@
+//! The sharded serving system: dynamic batcher → gather workers → per-
+//! shard worker pools, all built from [`crate::coordinator`]'s reusable
+//! pieces.
+//!
+//! ```text
+//! clients ──submit──► router queue ──batcher──► batch queue ──► gather worker 0..G
+//!    ▲                                                         │ layer jobs  ▲ candidates
+//!    │                                     ┌───────────────────┼─────────────┤
+//!    │                                     ▼                   ▼             │
+//!    │                              shard 0 queue   ...   shard S-1 queue    │
+//!    │                              workers (each owns a Workspace) ─────────┘
+//!    └────────────── per-request reply channel ◄── global beam select / top-k
+//! ```
+//!
+//! A gather worker owns a whole batch and drives the layer-synchronized
+//! protocol: for each tree layer it ships every shard a [`LayerJob`]
+//! carrying that shard's slice of the *global* beam, joins the returned
+//! candidates, and runs the global beam selection itself
+//! ([`ShardedEngine::merge_and_split`]). Shards therefore expand exactly
+//! what the unsharded engine would — the output is bit-identical by
+//! construction, at the cost of `depth` scatter rounds per batch (the
+//! batcher amortizes those rounds across every query in the batch).
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::engine::ShardedEngine;
+use crate::coordinator::batcher::{spawn_batcher, WorkerPool};
+use crate::coordinator::{CoordinatorConfig, CoordinatorStats, Request, Response, Router};
+use crate::sparse::{CsrMatrix, SparseVec};
+
+/// Configuration of the sharded serving system.
+#[derive(Clone, Debug)]
+pub struct ShardedCoordinatorConfig {
+    /// Front-door configuration (batching, gather workers = `workers`,
+    /// beam/topk, queue capacity) — identical semantics to the single-
+    /// engine coordinator.
+    pub base: CoordinatorConfig,
+    /// Worker threads *per shard*; each owns a private per-shard
+    /// [`crate::inference::Workspace`].
+    pub shard_workers: usize,
+}
+
+impl Default for ShardedCoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            base: CoordinatorConfig::default(),
+            shard_workers: 1,
+        }
+    }
+}
+
+/// One batch × one layer scatter order to a single shard: expand these
+/// (shard-local) beam parents through `layer` and send back the
+/// candidates.
+struct LayerJob {
+    shard: usize,
+    layer: usize,
+    x: Arc<CsrMatrix>,
+    /// Per-query shard-local beam (node ids of `layer - 1`, ascending).
+    beams: Vec<Vec<(u32, f32)>>,
+    reply: mpsc::Sender<(usize, Vec<Vec<(u32, f32)>>)>,
+}
+
+struct Inner {
+    engine: Arc<ShardedEngine>,
+    config: ShardedCoordinatorConfig,
+    stats: CoordinatorStats,
+    router: Router,
+    /// Scatter fan-out senders, one per shard; cleared at shutdown to
+    /// disconnect the shard pools.
+    shard_txs: Mutex<Vec<mpsc::Sender<LayerJob>>>,
+}
+
+/// A running sharded serving system (see module docs for the topology).
+pub struct ShardedCoordinator {
+    inner: Arc<Inner>,
+    batcher: Option<JoinHandle<()>>,
+    gatherers: Option<WorkerPool>,
+    shard_pools: Vec<WorkerPool>,
+}
+
+impl ShardedCoordinator {
+    /// Starts the batcher, gather workers and one worker pool per shard.
+    pub fn start(engine: Arc<ShardedEngine>, config: ShardedCoordinatorConfig) -> Self {
+        let num_shards = engine.num_shards();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        // Per-shard scatter queues + pools.
+        let mut shard_txs = Vec::with_capacity(num_shards);
+        let mut shard_pools = Vec::with_capacity(num_shards);
+        for s in 0..num_shards {
+            let (tx, rx) = mpsc::channel::<LayerJob>();
+            let rx = Arc::new(Mutex::new(rx));
+            let engine_init = Arc::clone(&engine);
+            let engine_run = Arc::clone(&engine);
+            shard_pools.push(WorkerPool::spawn(
+                &format!("mscm-shard{s}"),
+                config.shard_workers,
+                rx,
+                move |_w| engine_init.shard_engine(s).workspace(),
+                move |ws, job: LayerJob| {
+                    let cands =
+                        engine_run.expand_shard_layer(job.shard, &job.x, job.layer, job.beams, ws);
+                    // Gatherer may have bailed (shutdown) — fine.
+                    let _ = job.reply.send((job.shard, cands));
+                },
+            ));
+            shard_txs.push(tx);
+        }
+
+        let inner = Arc::new(Inner {
+            engine: Arc::clone(&engine),
+            config: config.clone(),
+            stats: CoordinatorStats::default(),
+            router: Router::new(req_tx, config.base.queue_capacity),
+            shard_txs: Mutex::new(shard_txs),
+        });
+
+        let batcher = {
+            let inner = Arc::clone(&inner);
+            spawn_batcher(
+                "mscm-shard-batcher".into(),
+                req_rx,
+                batch_tx,
+                config.base.max_batch,
+                config.base.max_batch_delay,
+                move |n| {
+                    inner.stats.batches.fetch_add(1, Ordering::Relaxed);
+                    inner.stats.batched_queries.fetch_add(n as u64, Ordering::Relaxed);
+                },
+            )
+        };
+        let gatherers = {
+            let inner = Arc::clone(&inner);
+            WorkerPool::spawn(
+                "mscm-gather",
+                config.base.workers,
+                batch_rx,
+                |_w| (),
+                move |_state, batch: Vec<Request>| scatter_gather(&inner, batch),
+            )
+        };
+        Self {
+            inner,
+            batcher: Some(batcher),
+            gatherers: Some(gatherers),
+            shard_pools,
+        }
+    }
+
+    /// Submits a query; the reply arrives on the returned channel. Fails
+    /// fast with [`crate::coordinator::SubmitError::Overloaded`] when the
+    /// bounded router queue is full.
+    pub fn submit(
+        &self,
+        query: SparseVec,
+    ) -> Result<(u64, mpsc::Receiver<Response>), crate::coordinator::SubmitError> {
+        self.inner.router.submit(query, &self.inner.stats)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn query_blocking(
+        &self,
+        query: SparseVec,
+    ) -> Result<Response, crate::coordinator::SubmitError> {
+        let (_, rx) = self.submit(query)?;
+        rx.recv().map_err(|_| crate::coordinator::SubmitError::Shutdown)
+    }
+
+    /// Serving statistics.
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.inner.stats
+    }
+
+    /// The engine being served.
+    pub fn engine(&self) -> &Arc<ShardedEngine> {
+        &self.inner.engine
+    }
+
+    /// Stops accepting new work; in-flight batches still complete.
+    pub fn stop(&self) {
+        self.inner.router.close();
+    }
+
+    /// Stops accepting work, drains in-flight batches, joins every
+    /// thread: batcher, gather workers, then the shard pools.
+    pub fn shutdown(mut self) {
+        self.stop();
+        if let Some(b) = self.batcher.take() {
+            b.join().ok();
+        }
+        if let Some(g) = self.gatherers.take() {
+            g.join();
+        }
+        // Only now disconnect the shard queues: gatherers are done, so no
+        // scatter is in flight.
+        self.inner.shard_txs.lock().unwrap().clear();
+        for p in self.shard_pools.drain(..) {
+            p.join();
+        }
+    }
+}
+
+/// Gather-worker body: drive the layer-synchronized protocol for one
+/// batch (the protocol itself lives in [`ShardedEngine::drive`]; this
+/// closure only ships each round over the shard queues), then reply per
+/// request.
+fn scatter_gather(inner: &Inner, batch: Vec<Request>) {
+    let engine = &inner.engine;
+    let n = batch.len();
+    let num_shards = engine.num_shards();
+    let beam = inner.config.base.beam;
+    let topk = inner.config.base.topk;
+    let dispatch_time = Instant::now();
+
+    let rows: Vec<SparseVec> = batch.iter().map(|r| r.query.clone()).collect();
+    let x = Arc::new(CsrMatrix::from_rows(rows, engine.dim()));
+
+    let results = engine.drive(n, beam, topk, |l, beams_out| {
+        let (tx, rx) = mpsc::channel();
+        {
+            let txs = inner.shard_txs.lock().unwrap();
+            for (stx, (s, beams)) in txs.iter().zip(beams_out.into_iter().enumerate()) {
+                let _ = stx.send(LayerJob {
+                    shard: s,
+                    layer: l,
+                    x: Arc::clone(&x),
+                    beams,
+                    reply: tx.clone(),
+                });
+            }
+        }
+        drop(tx);
+        let mut shard_cands: Vec<Vec<Vec<(u32, f32)>>> = vec![Vec::new(); num_shards];
+        let mut received = 0usize;
+        while let Ok((s, cands)) = rx.recv() {
+            shard_cands[s] = cands;
+            received += 1;
+        }
+        (received == num_shards).then_some(shard_cands)
+    });
+    let Some(results) = results else {
+        // A shard queue disappeared mid-batch (shutdown race): account
+        // the requests and let the dropped reply senders signal the
+        // clients.
+        for _ in 0..n {
+            inner.router.mark_done();
+        }
+        return;
+    };
+
+    for (req, preds) in batch.into_iter().zip(results) {
+        let queue_time = dispatch_time.duration_since(req.submitted);
+        let total_time = req.submitted.elapsed();
+        inner.stats.queue_wait.record(queue_time);
+        inner.stats.latency.record(total_time);
+        inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        inner.router.mark_done();
+        let _ = req.reply.send(Response {
+            id: req.id,
+            predictions: preds,
+            queue_time,
+            total_time,
+            batch_size: n,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+    use crate::tree::test_util::tiny_model;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn rand_query(rng: &mut Rng, dim: usize) -> SparseVec {
+        SparseVec::from_pairs(
+            (0..rng.gen_range(1..12))
+                .map(|_| (rng.gen_range(0..dim) as u32, rng.gen_f32(-1.0, 1.0)))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn sharded_serving_matches_unsharded_engine() {
+        let model = tiny_model(32, 4, 3, 55);
+        let cfg = EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+        };
+        let reference = InferenceEngine::new(model.clone(), cfg);
+        let engine = Arc::new(ShardedEngine::from_model(&model, 4, cfg));
+        let coord = ShardedCoordinator::start(
+            Arc::clone(&engine),
+            ShardedCoordinatorConfig {
+                base: CoordinatorConfig {
+                    workers: 2,
+                    max_batch: 8,
+                    max_batch_delay: Duration::from_micros(200),
+                    beam: 3,
+                    topk: 5,
+                    ..Default::default()
+                },
+                shard_workers: 2,
+            },
+        );
+        let mut rng = Rng::seed_from_u64(6);
+        let mut pending = Vec::new();
+        let mut queries = Vec::new();
+        for _ in 0..120 {
+            let q = rand_query(&mut rng, 32);
+            let (id, rx) = coord.submit(q.clone()).unwrap();
+            pending.push((id, rx));
+            queries.push(q);
+        }
+        for (i, (id, rx)) in pending.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+            assert_eq!(resp.id, id);
+            let direct = reference.predict(&queries[i], 3, 5);
+            assert_eq!(resp.predictions, direct, "query {i}");
+        }
+        assert_eq!(coord.stats().completed.load(Ordering::Relaxed), 120);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stop_then_shutdown_is_clean() {
+        let model = tiny_model(16, 4, 2, 9);
+        let cfg = EngineConfig {
+            algo: MatmulAlgo::Baseline,
+            iter: IterationMethod::MarchingPointers,
+        };
+        let engine = Arc::new(ShardedEngine::from_model(&model, 2, cfg));
+        let coord = ShardedCoordinator::start(engine, ShardedCoordinatorConfig::default());
+        let mut rng = Rng::seed_from_u64(1);
+        coord.query_blocking(rand_query(&mut rng, 16)).unwrap();
+        coord.stop();
+        assert!(matches!(
+            coord.submit(rand_query(&mut rng, 16)),
+            Err(crate::coordinator::SubmitError::Shutdown)
+        ));
+        coord.shutdown();
+    }
+}

@@ -78,6 +78,22 @@ impl CscMatrix {
         }
     }
 
+    /// Extracts the contiguous column range `c0..c1` as a standalone
+    /// matrix (row dimension unchanged, entries copied verbatim — column
+    /// contents are bitwise identical to the source, which is what keeps
+    /// sharded inference exact; see [`crate::shard`]).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> CscMatrix {
+        assert!(c0 <= c1 && c1 <= self.cols, "column slice out of range");
+        let (s, e) = (self.indptr[c0], self.indptr[c1]);
+        CscMatrix {
+            rows: self.rows,
+            cols: c1 - c0,
+            indptr: self.indptr[c0..=c1].iter().map(|&p| p - s).collect(),
+            indices: self.indices[s..e].to_vec(),
+            values: self.values[s..e].to_vec(),
+        }
+    }
+
     /// Average nonzeros per column.
     pub fn avg_col_nnz(&self) -> f64 {
         if self.cols == 0 {
@@ -129,5 +145,19 @@ mod tests {
     #[test]
     fn memory_accounting_positive() {
         assert!(sample().memory_bytes() > 0);
+    }
+
+    #[test]
+    fn slice_cols_copies_ranges_verbatim() {
+        let m = sample();
+        let s = m.slice_cols(1, 3);
+        assert_eq!(s.rows, m.rows);
+        assert_eq!(s.cols, 2);
+        assert_eq!(s.col(0).indices, m.col(1).indices);
+        assert_eq!(s.col(0).values, m.col(1).values);
+        assert!(s.col(1).is_empty());
+        // degenerate slices
+        assert_eq!(m.slice_cols(0, 3).indptr, m.indptr);
+        assert_eq!(m.slice_cols(2, 2).nnz(), 0);
     }
 }

@@ -16,6 +16,12 @@
 //! ```
 //! Only the CSC payload is stored; the chunked representation (and
 //! optional hash maps) is rebuilt at load time.
+//!
+//! The header-less model body (everything after `magic`) is exposed
+//! crate-internally as [`write_model_body`] / [`read_model_body`] so that
+//! versioned envelope formats — currently the shard format of
+//! [`crate::shard`] — can embed a model payload without re-implementing
+//! the layer codec.
 
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -25,66 +31,163 @@ use crate::sparse::CscMatrix;
 
 const MAGIC: u64 = 0x4d53_434d_584d_5231;
 
-fn write_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+pub(crate) fn write_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
 }
 
-fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+pub(crate) fn read_u64(r: &mut impl Read) -> io::Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn write_u32s(w: &mut impl Write, vs: &[u32]) -> io::Result<()> {
-    for v in vs {
-        w.write_all(&v.to_le_bytes())?;
+/// Serialization buffer size: arrays are staged through a bounded scratch
+/// so huge layers never materialize a second full-size byte copy.
+const IO_CHUNK_BYTES: usize = 64 * 1024;
+
+/// A fixed-width scalar with a little-endian byte encoding — the one
+/// place the array codec knows about element types.
+trait LeScalar: Copy {
+    const WIDTH: usize;
+    fn put(self, buf: &mut Vec<u8>);
+    fn take(bytes: &[u8]) -> Self;
+}
+
+impl LeScalar for u32 {
+    const WIDTH: usize = 4;
+    fn put(self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.to_le_bytes());
+    }
+    fn take(bytes: &[u8]) -> Self {
+        u32::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl LeScalar for f32 {
+    const WIDTH: usize = 4;
+    fn put(self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.to_le_bytes());
+    }
+    fn take(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+/// `usize` values travel as `u64` on the wire (the CSC `indptr`).
+impl LeScalar for usize {
+    const WIDTH: usize = 8;
+    fn put(self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&(self as u64).to_le_bytes());
+    }
+    fn take(bytes: &[u8]) -> Self {
+        u64::from_le_bytes(bytes.try_into().unwrap()) as usize
+    }
+}
+
+/// Writes a scalar slice as one little-endian byte stream, staging
+/// through a 64 KiB buffer (one `write_all` per buffer fill, not per
+/// element).
+fn write_scalars<T: LeScalar>(w: &mut impl Write, vs: &[T]) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(IO_CHUNK_BYTES.min(vs.len() * T::WIDTH));
+    for chunk in vs.chunks(IO_CHUNK_BYTES / T::WIDTH) {
+        buf.clear();
+        for &v in chunk {
+            v.put(&mut buf);
+        }
+        w.write_all(&buf)?;
     }
     Ok(())
 }
 
-fn read_u32s(r: &mut impl Read, n: usize) -> io::Result<Vec<u32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+/// Reads `n` scalars written by [`write_scalars`], staging through the
+/// same bounded buffer.
+fn read_scalars<T: LeScalar>(r: &mut impl Read, n: usize) -> io::Result<Vec<T>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = vec![0u8; IO_CHUNK_BYTES.min(n.max(1) * T::WIDTH)];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(buf.len() / T::WIDTH);
+        let bytes = &mut buf[..take * T::WIDTH];
+        r.read_exact(bytes)?;
+        out.extend(bytes.chunks_exact(T::WIDTH).map(T::take));
+        left -= take;
+    }
+    Ok(out)
 }
 
-fn write_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
-    for v in vs {
-        w.write_all(&v.to_le_bytes())?;
+pub(crate) fn write_u32s(w: &mut impl Write, vs: &[u32]) -> io::Result<()> {
+    write_scalars(w, vs)
+}
+
+pub(crate) fn read_u32s(r: &mut impl Read, n: usize) -> io::Result<Vec<u32>> {
+    read_scalars(r, n)
+}
+
+pub(crate) fn write_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
+    write_scalars(w, vs)
+}
+
+pub(crate) fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+    read_scalars(r, n)
+}
+
+pub(crate) fn write_u64s(w: &mut impl Write, vs: &[usize]) -> io::Result<()> {
+    write_scalars(w, vs)
+}
+
+pub(crate) fn read_u64s(r: &mut impl Read, n: usize) -> io::Result<Vec<usize>> {
+    read_scalars(r, n)
+}
+
+/// Writes the header-less model payload (`dim` onward).
+pub(crate) fn write_model_body(w: &mut impl Write, model: &XmrModel) -> io::Result<()> {
+    write_u64(w, model.dim as u64)?;
+    write_u64(w, model.layers.len() as u64)?;
+    for layer in &model.layers {
+        let csc = &layer.csc;
+        write_u64(w, csc.cols as u64)?;
+        write_u64(w, layer.chunked.num_chunks() as u64)?;
+        write_u32s(w, &layer.chunked.chunk_offsets)?;
+        write_u64(w, csc.nnz() as u64)?;
+        write_u64s(w, &csc.indptr)?;
+        write_u32s(w, &csc.indices)?;
+        write_f32s(w, &csc.values)?;
     }
     Ok(())
 }
 
-fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+/// Reads the header-less model payload written by [`write_model_body`],
+/// rebuilding the chunked representation (with hash row maps when
+/// `with_row_maps`).
+pub(crate) fn read_model_body(r: &mut impl Read, with_row_maps: bool) -> io::Result<XmrModel> {
+    let dim = read_u64(r)? as usize;
+    let nlayers = read_u64(r)? as usize;
+    let mut layers = Vec::with_capacity(nlayers);
+    for _ in 0..nlayers {
+        let cols = read_u64(r)? as usize;
+        let num_chunks = read_u64(r)? as usize;
+        let chunk_offsets = read_u32s(r, num_chunks + 1)?;
+        let nnz = read_u64(r)? as usize;
+        let indptr = read_u64s(r, cols + 1)?;
+        let indices = read_u32s(r, nnz)?;
+        let values = read_f32s(r, nnz)?;
+        let csc = CscMatrix {
+            rows: dim,
+            cols,
+            indptr,
+            indices,
+            values,
+        };
+        layers.push(Layer::new(csc, &chunk_offsets, with_row_maps));
+    }
+    Ok(XmrModel::new(dim, layers))
 }
 
 /// Saves a model to `path`.
 pub fn save_model(model: &XmrModel, path: impl AsRef<Path>) -> io::Result<()> {
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     write_u64(&mut w, MAGIC)?;
-    write_u64(&mut w, model.dim as u64)?;
-    write_u64(&mut w, model.layers.len() as u64)?;
-    for layer in &model.layers {
-        let csc = &layer.csc;
-        write_u64(&mut w, csc.cols as u64)?;
-        write_u64(&mut w, layer.chunked.num_chunks() as u64)?;
-        write_u32s(&mut w, &layer.chunked.chunk_offsets)?;
-        write_u64(&mut w, csc.nnz() as u64)?;
-        for &p in &csc.indptr {
-            write_u64(&mut w, p as u64)?;
-        }
-        write_u32s(&mut w, &csc.indices)?;
-        write_f32s(&mut w, &csc.values)?;
-    }
+    write_model_body(&mut w, model)?;
     w.flush()
 }
 
@@ -98,30 +201,7 @@ pub fn load_model(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<Xmr
             "not an MSCM-XMR model file",
         ));
     }
-    let dim = read_u64(&mut r)? as usize;
-    let nlayers = read_u64(&mut r)? as usize;
-    let mut layers = Vec::with_capacity(nlayers);
-    for _ in 0..nlayers {
-        let cols = read_u64(&mut r)? as usize;
-        let num_chunks = read_u64(&mut r)? as usize;
-        let chunk_offsets = read_u32s(&mut r, num_chunks + 1)?;
-        let nnz = read_u64(&mut r)? as usize;
-        let mut indptr = Vec::with_capacity(cols + 1);
-        for _ in 0..=cols {
-            indptr.push(read_u64(&mut r)? as usize);
-        }
-        let indices = read_u32s(&mut r, nnz)?;
-        let values = read_f32s(&mut r, nnz)?;
-        let csc = CscMatrix {
-            rows: dim,
-            cols,
-            indptr,
-            indices,
-            values,
-        };
-        layers.push(Layer::new(csc, &chunk_offsets, with_row_maps));
-    }
-    Ok(XmrModel::new(dim, layers))
+    read_model_body(&mut r, with_row_maps)
 }
 
 #[cfg(test)]
@@ -152,5 +232,24 @@ mod tests {
         std::fs::write(&path, b"not a model at all............").unwrap();
         assert!(load_model(&path, false).is_err());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn scalar_arrays_round_trip_buffered() {
+        // Exercise the chunked staging paths with sizes straddling the
+        // 64 KiB buffer boundary.
+        for n in [0usize, 1, 7, 16 * 1024, 16 * 1024 + 3, 40_000] {
+            let us: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+            let fs: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 7.0).collect();
+            let ps: Vec<usize> = (0..n).map(|i| i * 3).collect();
+            let mut buf = Vec::new();
+            write_u32s(&mut buf, &us).unwrap();
+            write_f32s(&mut buf, &fs).unwrap();
+            write_u64s(&mut buf, &ps).unwrap();
+            let mut r = std::io::Cursor::new(buf);
+            assert_eq!(read_u32s(&mut r, n).unwrap(), us, "n={n}");
+            assert_eq!(read_f32s(&mut r, n).unwrap(), fs, "n={n}");
+            assert_eq!(read_u64s(&mut r, n).unwrap(), ps, "n={n}");
+        }
     }
 }

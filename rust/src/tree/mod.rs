@@ -11,6 +11,7 @@ mod io;
 mod model;
 
 pub use io::{load_model, save_model};
+pub(crate) use io::{read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64};
 pub use model::{Layer, ModelStats, XmrModel};
 
 #[cfg(test)]

@@ -1,0 +1,165 @@
+//! API-compatible **stub** of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the PJRT C API (`xla_extension`); its native
+//! closure is not available in this offline build, so this stub provides
+//! the exact type surface `mscm_xmr::runtime` compiles against while
+//! failing fast at *runtime*: [`PjRtClient::cpu`] returns an error, which
+//! the repository's artifact tests and the `xla-smoke` subcommand already
+//! treat as "runtime unavailable, skip". On a machine with the vendored
+//! XLA closure, point the `xla` path dependency in the workspace
+//! `Cargo.toml` at the real crate instead — no source changes needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's boxed error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (built against the stub xla crate; \
+         point Cargo.toml's `xla` path at the vendored XLA closure to enable it)"
+    ))
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Creating a CPU client always fails in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name for logs.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compiling is unreachable (no client can be constructed).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parsing HLO text always fails in the stub.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation built from a proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wraps a proto (trivially constructible; compilation fails later).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execution is unreachable in the stub.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetching to host is unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host literal (dense tensor).
+pub struct Literal;
+
+impl Literal {
+    /// Builds a rank-1 f32 literal (shape-only stub).
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshaping always fails in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    /// Tuple decomposition is unreachable in the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Shape query is unreachable in the stub.
+    pub fn shape(&self) -> Result<Shape> {
+        Err(unavailable("Literal::shape"))
+    }
+
+    /// Host copy is unreachable in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Literal shapes.
+pub enum Shape {
+    /// Dense array shape.
+    Array(ArrayShape),
+    /// Tuple shape.
+    Tuple,
+}
+
+/// Dense array shape.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not build a client");
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT runtime unavailable"), "{msg}");
+    }
+
+    #[test]
+    fn proto_parse_fails() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
