@@ -9,6 +9,8 @@
 //! 3. **branching factor** — the paper's claim that larger B gives a
 //!    larger MSCM win, isolated on one dataset.
 //!
+//! Emits `BENCH_ablation.json` (override with `--json <path>`).
+//!
 //! `cargo bench --bench ablation`
 
 use std::sync::Arc;
@@ -18,6 +20,7 @@ use mscm_xmr::data::synthetic::{measured_sibling_overlap, synth_model, synth_que
 use mscm_xmr::inference::{
     set_chunk_order_enabled, EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo,
 };
+use mscm_xmr::util::{BenchReport, Json};
 
 fn spec(overlap: f64) -> DatasetSpec {
     DatasetSpec {
@@ -45,6 +48,9 @@ fn batch_ms(engine: &InferenceEngine, x: &mscm_xmr::sparse::CsrMatrix) -> f64 {
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let mut report = BenchReport::new("ablation");
+
     // --- 1. chunk-order evaluation on/off (dense lookup feels it most) ---
     println!("\n[ablation 1] chunk-order evaluation (Alg. 3 l.6-8), B=32 batch");
     let s = spec(0.6);
@@ -70,6 +76,16 @@ fn main() {
             without,
             without / with
         );
+        report.record_extra(
+            "chunk-order",
+            with * 1e6,
+            512,
+            iter.label(),
+            vec![
+                ("without_sort_ns", Json::Num(without * 1e6)),
+                ("speedup_x", Json::Num(without / with)),
+            ],
+        );
     }
 
     // --- 2. sibling-overlap sweep ---
@@ -94,6 +110,16 @@ fn main() {
         println!(
             "  overlap knob {overlap:.1} (measured jaccard {measured:.2}): mscm {mscm:.3} ms/q, baseline {base:.3} ms/q -> {:.2}x",
             base / mscm
+        );
+        report.record_extra(
+            "sibling-overlap",
+            mscm * 1e6,
+            256,
+            "Binary Search MSCM",
+            vec![
+                ("overlap", Json::Num(overlap)),
+                ("baseline_ns", Json::Num(base * 1e6)),
+            ],
         );
     }
 
@@ -133,6 +159,13 @@ fn main() {
             "  unordered {unordered:.3} ms/q   reordered {reordered:.3} ms/q   ({:+.1}% — paper also found no gain)",
             (unordered / reordered - 1.0) * 100.0
         );
+        report.record_extra(
+            "query-reordering",
+            unordered * 1e6,
+            512,
+            "Hash MSCM",
+            vec![("reordered_ns", Json::Num(reordered * 1e6))],
+        );
     }
 
     // --- 3. branching-factor sweep ---
@@ -154,5 +187,17 @@ fn main() {
             &x,
         );
         println!("  B={b:<3} mscm {mscm:.3} ms/q, baseline {base:.3} ms/q -> {:.2}x", base / mscm);
+        report.record_extra(
+            "branching-factor",
+            mscm * 1e6,
+            256,
+            "Binary Search MSCM",
+            vec![
+                ("branching", Json::Num(b as f64)),
+                ("baseline_ns", Json::Num(base * 1e6)),
+            ],
+        );
     }
+
+    report.finish(&args);
 }

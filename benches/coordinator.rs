@@ -1,6 +1,7 @@
 //! Serving-stack benchmark: coordinator throughput and latency versus
 //! direct engine calls — quantifies the L3 overhead (router + batcher +
-//! channels) and the benefit of dynamic batching.
+//! channels) and the benefit of dynamic batching. Emits
+//! `BENCH_coordinator.json` (override with `--json <path>`).
 //!
 //! `cargo bench --bench coordinator`
 
@@ -10,8 +11,10 @@ use std::time::{Duration, Instant};
 use mscm_xmr::coordinator::{Coordinator, CoordinatorConfig};
 use mscm_xmr::data::enterprise::EnterpriseSpec;
 use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::util::{BenchReport, Json};
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
     let spec = EnterpriseSpec {
         num_labels: 100_000,
         dim: 50_000,
@@ -19,15 +22,14 @@ fn main() {
     };
     eprintln!("synthesizing L={} model ...", spec.num_labels);
     let model = Arc::new(spec.build_model());
-    let engine = Arc::new(InferenceEngine::from_arc(
-        Arc::clone(&model),
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        },
-    ));
+    let cfg = EngineConfig {
+        algo: MatmulAlgo::Mscm,
+        iter: IterationMethod::Hash,
+    };
+    let engine = Arc::new(InferenceEngine::from_arc(Arc::clone(&model), cfg));
     let n = 4_000;
     let x = spec.build_queries(n);
+    let mut report = BenchReport::new("coordinator");
 
     // 1. direct engine, single thread (lower bound on service time)
     let mut ws = engine.workspace();
@@ -38,6 +40,7 @@ fn main() {
     }
     let direct_ms = t.elapsed().as_secs_f64() * 1e3 / n as f64;
     println!("direct single-thread: {direct_ms:.3} ms/query");
+    report.record("direct", direct_ms * 1e6, 1, &cfg.label());
 
     // 2. through the coordinator at increasing worker counts
     for workers in [1usize, 2, 4] {
@@ -68,6 +71,18 @@ fn main() {
             s.latency.summary(),
             s.mean_batch()
         );
+        report.record_extra(
+            "coordinator",
+            s.latency.quantile_ms(0.5) * 1e6,
+            32,
+            &cfg.label(),
+            vec![
+                ("workers", Json::Num(workers as f64)),
+                ("qps", Json::Num(n as f64 / wall)),
+                ("mean_batch", Json::Num(s.mean_batch())),
+            ],
+        );
         coord.shutdown();
     }
+    report.finish(&args);
 }

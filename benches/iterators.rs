@@ -1,6 +1,7 @@
 //! Micro-benchmarks of the four support-intersection iteration methods
 //! (paper §4 items 1–4) at the single vector × chunk product level — the
-//! innermost hot path of Algorithm 2.
+//! innermost hot path of Algorithm 2. Emits `BENCH_iterators.json`
+//! (override with `--json <path>`).
 //!
 //! `cargo bench --bench iterators`
 
@@ -8,9 +9,10 @@ use mscm_xmr::data::synthetic::{paper_suite, synth_model, synth_queries};
 use mscm_xmr::sparse::iterators::{
     vec_chunk_binary, vec_chunk_dense, vec_chunk_hash, vec_chunk_marching, DenseScratch,
 };
-use mscm_xmr::util::bench::{bench_ms, black_box};
+use mscm_xmr::util::bench::{bench_ms, black_box, BenchReport};
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
     let spec = &paper_suite(10)[1]; // amazoncat-13k shape
     eprintln!("building {} model (B=32) ...", spec.name);
     let model = synth_model(spec, 32, 1);
@@ -18,6 +20,7 @@ fn main() {
     let layer = model.layers.last().unwrap();
     let chunks = &layer.chunked.chunks;
     let n_chunks = chunks.len();
+    let mut report = BenchReport::new("iterators");
 
     println!("\niterator micro-bench: 64 queries x 32 chunks each, {}", spec.name);
     println!("{:<22}{:>14}{:>16}", "method", "ms/pass", "ns/product");
@@ -47,12 +50,9 @@ fn main() {
                 }
             }
         });
-        println!(
-            "{:<22}{:>14.3}{:>16.1}",
-            method,
-            stats.mean_ms,
-            stats.mean_ms * 1e6 / passes as f64
-        );
+        let ns_per_product = stats.mean_ms * 1e6 / passes as f64;
+        println!("{:<22}{:>14.3}{:>16.1}", method, stats.mean_ms, ns_per_product);
+        report.record(method, ns_per_product, 64, "MSCM vec x chunk");
     }
 
     // baseline per-column dots for contrast (the non-MSCM inner loop)
@@ -68,10 +68,12 @@ fn main() {
         }
         black_box(acc);
     });
+    let ns_per_product = stats.mean_ms * 1e6 / passes as f64;
     println!(
         "{:<22}{:>14.3}{:>16.1}   (per-column, 1 col per 'product')",
-        "baseline binary dot",
-        stats.mean_ms,
-        stats.mean_ms * 1e6 / passes as f64
+        "baseline binary dot", stats.mean_ms, ns_per_product
     );
+    report.record("baseline-binary-dot", ns_per_product, 64, "per-column dot");
+
+    report.finish(&args);
 }

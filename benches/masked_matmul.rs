@@ -1,11 +1,13 @@
 //! End-to-end inference benchmark over the synthetic paper suite — the
 //! `cargo bench` entry point behind Tables 1–3 and Figures 3–4 (the full
 //! sweep with reports is `repro bench all`; this binary runs a reduced
-//! grid sized for CI).
+//! grid sized for CI). Emits `BENCH_masked_matmul.json` (override with
+//! `--json <path>`) with one row per (dataset, config, branching, mode).
 //!
 //! `cargo bench --bench masked_matmul [-- --scale 20 --queries 128]`
 
 use mscm_xmr::repro::{self, BenchOptions};
+use mscm_xmr::util::{BenchReport, Json};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -27,10 +29,29 @@ fn main() {
         ],
         ..Default::default()
     };
+    let mut report = BenchReport::new("masked_matmul");
     for branching in [2usize, 8, 32] {
         let rows = repro::bench_table(branching, &opts);
         repro::print_table(branching, &rows);
         repro::print_figure34(branching, &rows, false);
         repro::print_figure34(branching, &rows, true);
+        for r in &rows {
+            let extra = vec![("branching", Json::Num(branching as f64))];
+            report.record_extra(
+                &format!("{}:batch", r.dataset),
+                r.batch_ms * 1e6,
+                opts.batch_queries,
+                &r.config.label(),
+                extra.clone(),
+            );
+            report.record_extra(
+                &format!("{}:online", r.dataset),
+                r.online_ms * 1e6,
+                1,
+                &r.config.label(),
+                extra,
+            );
+        }
     }
+    report.finish(&args);
 }

@@ -1,6 +1,8 @@
 //! Scatter-gather overhead benchmark: per-query latency of the sharded
 //! engine versus the single unsharded engine, as a function of shard
 //! count — the number future PRs watch to keep the gather stage cheap.
+//! Emits `BENCH_sharding.json` (override with `--json <path>`), including
+//! the per-layer-round overhead the pooled protocol must not regress.
 //!
 //! `cargo bench --bench sharding [-- --labels 50000 --dim 50000 --queries 512]`
 
@@ -10,8 +12,8 @@ use std::time::{Duration, Instant};
 use mscm_xmr::coordinator::CoordinatorConfig;
 use mscm_xmr::data::enterprise::EnterpriseSpec;
 use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
-use mscm_xmr::shard::{ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine};
-use mscm_xmr::util::bench_ms;
+use mscm_xmr::shard::{GatherArena, ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine};
+use mscm_xmr::util::{bench_ms, BenchReport, Json};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -37,9 +39,11 @@ fn main() {
     let model = spec.build_model();
     let x = spec.build_queries(n);
     let queries: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
+    let mut report = BenchReport::new("sharding");
 
     // Unsharded baseline: the floor every shard count is compared to.
     let single = InferenceEngine::new(model.clone(), cfg);
+    let depth = single.model().depth();
     let mut ws = single.workspace();
     let stats = bench_ms(1, 3, 5_000.0, || {
         for q in &queries {
@@ -48,6 +52,7 @@ fn main() {
     });
     let single_ms = stats.mean_ms / n as f64;
     println!("unsharded online:            {single_ms:.4} ms/query");
+    report.record("unsharded-online", single_ms * 1e6, 1, &cfg.label());
 
     println!(
         "{:>6} {:>16} {:>16} {:>12} {:>14} {:>14}",
@@ -56,13 +61,14 @@ fn main() {
     for s in [1usize, 2, 4, 8] {
         let sharded = ShardedEngine::from_model(&model, s, cfg);
 
-        // Online scatter-gather, workspace-reusing like the unsharded
-        // baseline above (sequential over shards — the worst case for
-        // gather overhead accounting).
+        // Online scatter-gather, workspace/arena-reusing like the
+        // unsharded baseline above (sequential over shards — the worst
+        // case for gather overhead accounting).
         let mut wss = sharded.workspaces();
+        let mut arena = GatherArena::new();
         let stats = bench_ms(1, 3, 5_000.0, || {
             for q in &queries {
-                std::hint::black_box(sharded.predict_with(q, beam, 10, &mut wss));
+                std::hint::black_box(sharded.predict_with(q, beam, 10, &mut wss, &mut arena));
             }
         });
         let online_ms = stats.mean_ms / n as f64;
@@ -101,9 +107,38 @@ fn main() {
         let p50 = coord.stats().latency.quantile_ms(0.5);
         coord.shutdown();
 
+        let overhead = online_ms / single_ms.max(1e-9);
+        // The per-layer scatter-gather round cost: what each of the
+        // `depth` synchronization rounds adds over the unsharded search.
+        let per_round_ns = (online_ms - single_ms).max(0.0) * 1e6 / depth as f64;
         println!(
-            "{s:>6} {online_ms:>16.4} {batch_ms:>16.4} {:>11.2}x {p50:>14.3} {qps:>10.0} qps",
-            online_ms / single_ms.max(1e-9)
+            "{s:>6} {online_ms:>16.4} {batch_ms:>16.4} {overhead:>11.2}x {p50:>14.3} {qps:>10.0} qps"
+        );
+        report.record_extra(
+            "sharded-online",
+            online_ms * 1e6,
+            1,
+            &cfg.label(),
+            vec![
+                ("shards", Json::Num(s as f64)),
+                ("overhead_x", Json::Num(overhead)),
+                ("per_round_overhead_ns", Json::Num(per_round_ns)),
+            ],
+        );
+        report.record_extra(
+            "sharded-batch",
+            batch_ms * 1e6,
+            n,
+            &cfg.label(),
+            vec![("shards", Json::Num(s as f64))],
+        );
+        report.record_extra(
+            "sharded-coordinator",
+            p50 * 1e6,
+            32,
+            &cfg.label(),
+            vec![("shards", Json::Num(s as f64)), ("qps", Json::Num(qps))],
         );
     }
+    report.finish(&args);
 }

@@ -155,8 +155,12 @@ impl Coordinator {
                 "mscm-worker",
                 config.workers,
                 batch_rx,
-                move |_w| engine.workspace(),
-                move |ws, batch: Vec<Request>| run_batch(&inner, ws, batch),
+                move |_w| WorkerState {
+                    ws: engine.workspace(),
+                    x: CsrMatrix::default(),
+                    out: Vec::new(),
+                },
+                move |state, batch: Vec<Request>| run_batch(&inner, state, batch),
             )
         };
         Self {
@@ -203,34 +207,50 @@ impl Coordinator {
     }
 }
 
+/// Per-worker pooled state: the inference workspace plus batch-lifetime
+/// buffers (query matrix, result rows) that recycle across batches so
+/// the worker's hot path allocates only what each client must own.
+struct WorkerState {
+    ws: crate::inference::Workspace,
+    x: CsrMatrix,
+    out: Vec<Vec<crate::inference::Prediction>>,
+}
+
 /// Inference worker body: run the engine over a batch, reply per request.
-fn run_batch(inner: &Inner, ws: &mut crate::inference::Workspace, batch: Vec<Request>) {
+fn run_batch(inner: &Inner, state: &mut WorkerState, batch: Vec<Request>) {
     let n = batch.len();
     let dispatch_time = Instant::now();
-    let dim = inner.engine.model().dim;
-    let rows: Vec<SparseVec> = batch.iter().map(|r| r.query.clone()).collect();
-    let x = CsrMatrix::from_rows(rows, dim);
-    let mut out: Vec<Vec<crate::inference::Prediction>> = vec![Vec::new(); n];
+    // Rebuild the pooled query matrix in place — no per-batch row vector
+    // or query clones.
+    state
+        .x
+        .assign_rows(inner.engine.model().dim, batch.iter().map(|req| req.query.view()));
+    if state.out.len() < n {
+        state.out.resize_with(n, Vec::new);
+    }
     inner.engine.predict_range(
-        &x,
+        &state.x,
         0,
         n,
         inner.config.beam,
         inner.config.topk,
-        ws,
-        &mut out,
+        &mut state.ws,
+        &mut state.out,
     );
-    for (req, preds) in batch.into_iter().zip(out) {
+    for (q, req) in batch.into_iter().enumerate() {
         let queue_time = dispatch_time.duration_since(req.submitted);
         let total_time = req.submitted.elapsed();
         inner.stats.queue_wait.record(queue_time);
         inner.stats.latency.record(total_time);
         inner.stats.completed.fetch_add(1, Ordering::Relaxed);
         inner.router.mark_done();
+        // The one unavoidable per-request allocation: the client owns its
+        // ranking, so the taken slot starts empty (capacity 0) and
+        // predict_range refills it fresh next batch.
         // Receiver may have gone away (client timeout) — fine.
         let _ = req.reply.send(Response {
             id: req.id,
-            predictions: preds,
+            predictions: std::mem::take(&mut state.out[q]),
             queue_time,
             total_time,
             batch_size: n,

@@ -15,19 +15,13 @@ use crate::tree::Layer;
 
 /// Builds the per-column row→position hash maps for one layer's CSC weight
 /// matrix (the baseline hash method's side index; its `O(c · nnz)` memory
-/// is what chunking amortizes).
+/// is what chunking amortizes). Each map is pre-sized from its column's
+/// support length (the pair iterator is exact-size off the CSC slices).
 pub(crate) fn build_col_hash(csc: &CscMatrix) -> Vec<U32Map> {
     (0..csc.cols)
         .map(|j| {
             let col = csc.col(j);
-            U32Map::from_pairs(
-                col.indices
-                    .iter()
-                    .enumerate()
-                    .map(|(p, &r)| (r, p as u32))
-                    .collect::<Vec<_>>()
-                    .into_iter(),
-            )
+            U32Map::from_pairs(col.indices.iter().enumerate().map(|(p, &r)| (r, p as u32)))
         })
         .collect()
 }
@@ -57,7 +51,9 @@ fn dot_dense(col: SparseVecView<'_>, dense_x: &[f32]) -> f32 {
 }
 
 /// Computes all layer candidates `(child node, path score)` for local
-/// queries `0..n` (rows `qlo..qlo+n` of `x`), appending into `ws.cands`.
+/// queries `0..n` (rows `qlo..qlo+n` of `x`), writing each query's
+/// candidates into its pre-laid-out slice of the workspace candidate
+/// arena (the caller ran [`Workspace::begin_layer`]).
 pub(crate) fn baseline_layer(
     layer: &Layer,
     x: &CsrMatrix,
@@ -79,27 +75,39 @@ pub(crate) fn baseline_layer(
                 dense_x[i as usize] = v;
             }
         }
-        let beam = std::mem::take(&mut ws.beams[q]);
-        let cands = &mut ws.cands[q];
-        for &(p, ps) in &beam {
-            let start = chunked.chunk_start(p as usize);
-            let width = chunked.chunk_width(p as usize);
-            for j in start..start + width {
-                let col = csc.col(j);
-                let a = match iter {
-                    IterationMethod::MarchingPointers => xq.dot_marching(col),
-                    IterationMethod::BinarySearch => xq.dot_binary_search(col),
-                    IterationMethod::Hash => {
-                        dot_hash(xq, col, &col_hash.expect("per-column hash index")[j])
-                    }
-                    IterationMethod::DenseLookup => {
-                        dot_dense(col, ws.dense_x.as_ref().unwrap())
-                    }
-                };
-                cands.push((j as u32, ps * sigmoid(a)));
+        {
+            // Disjoint field borrows: the beam arena is read while the
+            // candidate arena is written through the query's cursor.
+            let Workspace {
+                beam_entries,
+                beam_offsets,
+                cand_entries,
+                cand_cursor,
+                dense_x,
+                ..
+            } = ws;
+            let mut dst = cand_cursor[q];
+            for &(p, ps) in &beam_entries[beam_offsets[q]..beam_offsets[q + 1]] {
+                let start = chunked.chunk_start(p as usize);
+                let width = chunked.chunk_width(p as usize);
+                for j in start..start + width {
+                    let col = csc.col(j);
+                    let a = match iter {
+                        IterationMethod::MarchingPointers => xq.dot_marching(col),
+                        IterationMethod::BinarySearch => xq.dot_binary_search(col),
+                        IterationMethod::Hash => {
+                            dot_hash(xq, col, &col_hash.expect("per-column hash index")[j])
+                        }
+                        IterationMethod::DenseLookup => {
+                            dot_dense(col, dense_x.as_ref().unwrap())
+                        }
+                    };
+                    cand_entries[dst] = (j as u32, ps * sigmoid(a));
+                    dst += 1;
+                }
             }
+            cand_cursor[q] = dst;
         }
-        ws.beams[q] = beam;
         if iter == IterationMethod::DenseLookup {
             let dense_x = ws.dense_x.as_mut().unwrap();
             for &i in xq.indices {
@@ -153,7 +161,7 @@ mod tests {
             vec![SparseVec::from_pairs(vec![(0, 2.0), (1, -1.0), (3, 4.0)])],
             4,
         );
-        let beams = vec![vec![(0u32, 1.0f32), (1u32, 0.5f32)]];
+        let beam = vec![(0u32, 1.0f32), (1u32, 0.5f32)];
         let maps = build_col_hash(&l.csc);
         let mut results = Vec::new();
         for iter in IterationMethod::ALL {
@@ -164,10 +172,11 @@ mod tests {
                     iter,
                 },
             );
-            ws.cands.resize_with(1, Vec::new);
-            ws.beams = beams.clone();
+            ws.begin_beams(1);
+            ws.push_beam(&beam);
+            ws.begin_layer(&l.chunked, 1);
             baseline_layer(&l, &x, 0, 1, iter, Some(&maps), &mut ws);
-            results.push(ws.cands[0].clone());
+            results.push(ws.cand(0).to_vec());
         }
         for r in &results[1..] {
             assert_eq!(r, &results[0]);

@@ -1,4 +1,35 @@
 //! The beam-search inference engine (paper Algorithm 1).
+//!
+//! # Workspace layout: flat arenas, zero steady-state allocations
+//!
+//! The per-thread [`Workspace`] backs the whole layer loop with **flat
+//! arena buffers** instead of per-query `Vec`s, so the serving hot path
+//! performs no allocator traffic once warm:
+//!
+//! - **Beam arena** — one `Vec<(node, score)>` plus a CSR-style offset
+//!   array: query `q`'s beam is `beam_entries[beam_offsets[q] ..
+//!   beam_offsets[q + 1]]`, node ids ascending. The arena is rebuilt
+//!   (append-only, `clear()` keeps capacity) once per layer by the beam
+//!   selection step, and by [`Workspace::push_beam`] when a sharded
+//!   coordinator installs externally-owned beams.
+//! - **Candidate arena** — same CSR layout. Candidate counts are known
+//!   *before* expansion (each beamed parent contributes exactly its
+//!   sibling-chunk width), so [`Workspace::begin_layer`] prefix-sums the
+//!   per-query extents and expansion writes each query's candidates at a
+//!   per-query cursor. Blocks may therefore be evaluated in chunk order
+//!   (cache-optimal, Alg. 3) while every write still lands in its query's
+//!   contiguous slice.
+//! - **Block list + counting-sort scratch** — the `(chunk, query, parent
+//!   score)` blocks of Alg. 3 and the `O(blocks)` scratch used to order
+//!   them by chunk without a comparison sort (see
+//!   [`crate::inference::mscm`]).
+//! - **Online residents** — a reusable single-row query matrix and an
+//!   output buffer, so [`InferenceEngine::predict_with`] is allocation-
+//!   free after its first (warmup) call. The invariant is enforced by a
+//!   counting-allocator test (`rust/tests/alloc.rs`).
+//!
+//! Buffers only grow; steady-state serving with a bounded batch size and
+//! beam width reaches a fixed point after the first batch.
 
 use std::sync::Arc;
 
@@ -6,7 +37,7 @@ use super::baseline::{baseline_layer, build_col_hash};
 use super::mscm::mscm_layer;
 use super::{IterationMethod, MatmulAlgo};
 use crate::sparse::iterators::DenseScratch;
-use crate::sparse::{CsrMatrix, SparseVec, U32Map};
+use crate::sparse::{ChunkedMatrix, CsrMatrix, SparseVec, U32Map};
 use crate::tree::XmrModel;
 
 /// One retrieved label.
@@ -46,8 +77,9 @@ impl EngineConfig {
     }
 }
 
-/// Per-thread scratch. Buffers are sized for the model once and recycled
-/// across queries/batches so the hot path never allocates.
+/// Per-thread scratch. Buffers are sized for the model/batch once and
+/// recycled across queries and batches so the hot path never allocates
+/// (see the module docs for the arena layout).
 pub struct Workspace {
     /// `O(d)` chunk-row position scratch (MSCM dense lookup).
     pub(crate) dense_pos: Option<DenseScratch>,
@@ -59,16 +91,33 @@ pub struct Workspace {
     pub(crate) out_block: Vec<f32>,
     /// `(chunk, local query, parent score)` blocks of Alg. 3.
     pub(crate) blocks: Vec<(u32, u32, f32)>,
-    /// Per-query candidate `(node, score)` buffers.
-    pub(crate) cands: Vec<Vec<(u32, f32)>>,
-    /// Per-query beams `(node, score)`, node ids ascending.
-    pub(crate) beams: Vec<Vec<(u32, f32)>>,
+    /// Counting-sort scatter target (swapped with `blocks`).
+    pub(crate) blocks_tmp: Vec<(u32, u32, f32)>,
+    /// Counting-sort bucket counts/cursors, sized `O(blocks)`.
+    pub(crate) chunk_counts: Vec<u32>,
+    /// Beam arena: `(node, score)` entries, node ids ascending per query.
+    pub(crate) beam_entries: Vec<(u32, f32)>,
+    /// Beam arena offsets; query `q` owns `beam_offsets[q]..[q + 1]`.
+    pub(crate) beam_offsets: Vec<usize>,
+    /// Candidate arena: `(node, path score)` entries.
+    pub(crate) cand_entries: Vec<(u32, f32)>,
+    /// Candidate arena offsets (prefix sums of the per-query extents).
+    pub(crate) cand_offsets: Vec<usize>,
+    /// Per-query write cursor into `cand_entries` during expansion.
+    pub(crate) cand_cursor: Vec<usize>,
+    /// Batch size the arenas are currently laid out for.
+    pub(crate) batch_n: usize,
+    /// Resident single-row query matrix for online serving.
+    query_row: CsrMatrix,
+    /// Resident prediction output buffer for online serving.
+    out_preds: Vec<Prediction>,
 }
 
 impl Workspace {
     /// Allocates scratch for `model` under `config`. Only the structures
     /// the configuration needs are allocated (this is what Table 6's
-    /// "extra memory overhead" column measures).
+    /// "extra memory overhead" column measures); the arenas start empty
+    /// and grow to their steady-state size on the first batch.
     pub fn new(model: &XmrModel, config: EngineConfig) -> Self {
         let max_b = model.stats().max_branching;
         let dense_pos = (config.algo == MatmulAlgo::Mscm
@@ -83,35 +132,101 @@ impl Workspace {
             dense_x,
             out_block: vec![0.0; max_b],
             blocks: Vec::new(),
-            cands: Vec::new(),
-            beams: Vec::new(),
+            blocks_tmp: Vec::new(),
+            chunk_counts: Vec::new(),
+            beam_entries: Vec::new(),
+            beam_offsets: Vec::new(),
+            cand_entries: Vec::new(),
+            cand_offsets: Vec::new(),
+            cand_cursor: Vec::new(),
+            batch_n: 0,
+            query_row: CsrMatrix::default(),
+            out_preds: Vec::new(),
         }
     }
 
-    /// Approximate resident bytes of the scratch.
+    /// Approximate resident bytes of the scratch (arenas included).
     pub fn memory_bytes(&self) -> usize {
         self.dense_pos.as_ref().map_or(0, |d| d.memory_bytes())
             + self.dense_x.as_ref().map_or(0, |d| d.len() * 4)
             + self.out_block.len() * 4
+            + (self.blocks.capacity() + self.blocks_tmp.capacity()) * 12
+            + self.chunk_counts.capacity() * 4
+            + (self.beam_entries.capacity() + self.cand_entries.capacity()) * 8
+            + (self.beam_offsets.capacity()
+                + self.cand_offsets.capacity()
+                + self.cand_cursor.capacity())
+                * 8
+            + self.query_row.indptr.capacity() * 8
+            + self.query_row.indices.capacity() * 4
+            + self.query_row.values.capacity() * 4
+            + self.out_preds.capacity() * 8
     }
 
-    /// Grows the per-query buffers to hold `n` queries without resetting
-    /// their contents (the sharded layer-step protocol sets beams itself).
-    pub(crate) fn ensure_batch(&mut self, n: usize) {
-        if self.cands.len() < n {
-            self.cands.resize_with(n, Vec::new);
-            self.beams.resize_with(n, Vec::new);
+    /// Starts a fresh beam layout for `n` queries; follow with exactly
+    /// `n` [`Workspace::push_beam`] calls (the sharded layer-step
+    /// protocol installs each shard-local beam slice this way).
+    pub(crate) fn begin_beams(&mut self, n: usize) {
+        self.batch_n = n;
+        self.beam_entries.clear();
+        self.beam_offsets.clear();
+        self.beam_offsets.push(0);
+    }
+
+    /// Appends the next query's beam (node ids ascending).
+    pub(crate) fn push_beam(&mut self, beam: &[(u32, f32)]) {
+        self.beam_entries.extend_from_slice(beam);
+        self.beam_offsets.push(self.beam_entries.len());
+    }
+
+    /// Query `q`'s candidates from the last layer expansion.
+    pub(crate) fn cand(&self, q: usize) -> &[(u32, f32)] {
+        &self.cand_entries[self.cand_offsets[q]..self.cand_offsets[q + 1]]
+    }
+
+    /// Every query starts at the implicit root with score 1 (Alg. 1
+    /// line 3); the root's children are chunk 0 of layer 0.
+    fn reset_for_batch(&mut self, n: usize) {
+        self.begin_beams(n);
+        for _ in 0..n {
+            self.push_beam(&[(0u32, 1.0f32)]);
         }
     }
 
-    fn reset_for_batch(&mut self, n: usize) {
-        self.ensure_batch(n);
+    /// Lays the candidate arena out for one layer expansion: each beamed
+    /// parent contributes exactly its sibling-chunk width, so the
+    /// per-query extents are prefix-summed up front and expansion writes
+    /// through `cand_cursor` with no further bookkeeping.
+    pub(crate) fn begin_layer(&mut self, chunked: &ChunkedMatrix, n: usize) {
+        debug_assert_eq!(n, self.batch_n, "beams not installed for this batch");
+        self.cand_offsets.clear();
+        self.cand_offsets.push(0);
+        self.cand_cursor.clear();
+        let mut total = 0usize;
         for q in 0..n {
-            self.cands[q].clear();
-            // Every query starts at the implicit root with score 1
-            // (Alg. 1 line 3); the root's children are chunk 0 of layer 0.
-            self.beams[q].clear();
-            self.beams[q].push((0u32, 1.0f32));
+            self.cand_cursor.push(total);
+            for &(p, _) in &self.beam_entries[self.beam_offsets[q]..self.beam_offsets[q + 1]] {
+                total += chunked.chunk_width(p as usize);
+            }
+            self.cand_offsets.push(total);
+        }
+        if self.cand_entries.len() < total {
+            self.cand_entries.resize(total, (0, 0.0));
+        }
+    }
+
+    /// Beam step over the whole batch (Alg. 1 line 9): selects the top
+    /// `b` candidates per query out of the candidate arena into a rebuilt
+    /// beam arena. Both arenas only recycle capacity.
+    pub(crate) fn select_beams(&mut self, b: usize) {
+        let n = self.batch_n;
+        self.beam_entries.clear();
+        self.beam_offsets.clear();
+        self.beam_offsets.push(0);
+        for q in 0..n {
+            let (lo, hi) = (self.cand_offsets[q], self.cand_offsets[q + 1]);
+            select_top_into(&mut self.cand_entries[lo..hi], b, &mut self.beam_entries);
+            self.beam_offsets.push(self.beam_entries.len());
         }
     }
 }
@@ -198,22 +313,31 @@ impl InferenceEngine {
     /// for one query under beam width `beam`.
     pub fn predict(&self, x: &SparseVec, beam: usize, topk: usize) -> Vec<Prediction> {
         let mut ws = self.workspace();
-        self.predict_with(x, beam, topk, &mut ws)
+        self.predict_with(x, beam, topk, &mut ws).to_vec()
     }
 
-    /// Online inference with a caller-provided workspace (alloc-free hot
-    /// path for serving).
-    pub fn predict_with(
+    /// Online inference with a caller-provided workspace — the serving
+    /// hot path. The query matrix and the returned ranking both live in
+    /// workspace-resident buffers, so after the first (warmup) call this
+    /// performs **zero allocations** (enforced by `rust/tests/alloc.rs`).
+    /// The returned slice is valid until the workspace is next used.
+    pub fn predict_with<'ws>(
         &self,
         x: &SparseVec,
         beam: usize,
         topk: usize,
-        ws: &mut Workspace,
-    ) -> Vec<Prediction> {
-        let xm = CsrMatrix::from_single_row(x, self.model.dim);
-        let mut out = vec![Vec::new()];
-        self.predict_range(&xm, 0, 1, beam, topk, ws, &mut out);
-        out.pop().unwrap()
+        ws: &'ws mut Workspace,
+    ) -> &'ws [Prediction] {
+        let mut xm = std::mem::take(&mut ws.query_row);
+        xm.reset(self.model.dim);
+        xm.push_row(x.view());
+        self.beam_search(&xm, 0, 1, beam, ws);
+        ws.query_row = xm;
+        // Rank the single bottom beam in place, emit into the resident
+        // output buffer.
+        let (lo, hi) = (ws.beam_offsets[0], ws.beam_offsets[1]);
+        rank_into(&mut ws.beam_entries[lo..hi], topk, &mut ws.out_preds);
+        &ws.out_preds
     }
 
     /// Batch inference: top `topk` labels per row of `x`.
@@ -226,7 +350,8 @@ impl InferenceEngine {
 
     /// Batch inference over rows `qlo..qhi` of `x`, writing into
     /// `out[0..qhi-qlo]`. This is the unit that
-    /// [`InferenceEngine::predict_batch_parallel`] distributes.
+    /// [`InferenceEngine::predict_batch_parallel`] distributes. Reuses
+    /// `out`'s inner buffers, so a pooled caller allocates nothing.
     pub fn predict_range(
         &self,
         x: &CsrMatrix,
@@ -242,21 +367,16 @@ impl InferenceEngine {
         self.beam_search(x, qlo, qhi, beam, ws);
         // Gather final predictions: top-k of the bottom beam.
         for q in 0..n {
-            let beamed = &mut ws.beams[q];
-            rank_beam(beamed, topk);
-            out[q].clear();
-            out[q].extend(
-                beamed
-                    .iter()
-                    .map(|&(label, score)| Prediction { label, score }),
-            );
+            let (lo, hi) = (ws.beam_offsets[q], ws.beam_offsets[q + 1]);
+            rank_into(&mut ws.beam_entries[lo..hi], topk, &mut out[q]);
         }
     }
 
     /// One Alg. 1 layer step without the pruning: expands the parents in
-    /// `ws.beams[q]` (node ids of layer `li - 1`, ascending) through layer
-    /// `li`, leaving every generated candidate `(node, path score)` in
-    /// `ws.cands[q]`. Scores are bitwise identical to the fused loop in
+    /// the workspace beam arena (node ids of layer `li - 1`, ascending)
+    /// through layer `li`, leaving every generated candidate
+    /// `(node, path score)` in the candidate arena ([`Workspace::cand`]).
+    /// Scores are bitwise identical to the fused loop in
     /// [`InferenceEngine::predict_range`] — this *is* that loop's body,
     /// split out so a coordinator can interleave global beam selection
     /// between layers (exact sharded search).
@@ -270,9 +390,7 @@ impl InferenceEngine {
     ) {
         assert!(x.cols == self.model.dim, "query dim mismatch");
         let layer = &self.model.layers[li];
-        for q in 0..n {
-            ws.cands[q].clear();
-        }
+        ws.begin_layer(&layer.chunked, n);
         match self.config.algo {
             MatmulAlgo::Mscm => {
                 mscm_layer(layer, x, qlo, n, self.config.iter, ws);
@@ -282,10 +400,14 @@ impl InferenceEngine {
                 baseline_layer(layer, x, qlo, n, self.config.iter, col_hash, ws);
             }
         }
+        debug_assert!(
+            (0..n).all(|q| ws.cand_cursor[q] == ws.cand_offsets[q + 1]),
+            "layer expansion did not fill every candidate slot"
+        );
     }
 
-    /// The Alg. 1 layer loop: leaves the per-query bottom beams in
-    /// `ws.beams`.
+    /// The Alg. 1 layer loop: leaves the per-query bottom beams in the
+    /// workspace beam arena.
     fn beam_search(&self, x: &CsrMatrix, qlo: usize, qhi: usize, beam: usize, ws: &mut Workspace) {
         assert!(beam >= 1, "beam width must be >= 1");
         let n = qhi - qlo;
@@ -293,42 +415,57 @@ impl InferenceEngine {
         for li in 0..self.model.layers.len() {
             self.expand_layer(li, x, qlo, n, ws);
             // Beam step (Alg. 1 line 9): keep the top-b children per query.
-            for q in 0..n {
-                let (cands, beams) = (&mut ws.cands[q], &mut ws.beams[q]);
-                select_top(cands, beam, beams);
-            }
+            ws.select_beams(beam);
         }
     }
 }
 
-/// Sorts a bottom beam into final ranking order — `(score desc, label
-/// asc)` — and truncates to `topk`.
+/// The ranking comparator — `(score desc, node id asc)` under `total_cmp`
+/// (a strict total order, so selection is merge-order independent).
 ///
-/// Crate-visible so the sharded gather stage ([`crate::shard`]) ranks
-/// with *exactly* this comparator — any drift would break the bitwise
+/// One definition serves every selection/ranking path (fused loop,
+/// sharded gather stage) — any drift would break the bitwise
 /// sharded == unsharded property.
-pub(crate) fn rank_beam(beamed: &mut Vec<(u32, f32)>, topk: usize) {
-    beamed.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
-    beamed.truncate(topk);
+#[inline]
+pub(crate) fn cmp_score_desc(a: &(u32, f32), b: &(u32, f32)) -> std::cmp::Ordering {
+    b.1.total_cmp(&a.1).then(a.0.cmp(&b.0))
+}
+
+/// Ranks one bottom-beam slice in place — `(score desc, label asc)` —
+/// and emits the top `topk` into `out` (cleared first). THE final-
+/// ranking step: shared by the online, batch, and sharded-gather paths
+/// ([`crate::shard`]) so they cannot drift apart.
+pub(crate) fn rank_into(beamed: &mut [(u32, f32)], topk: usize, out: &mut Vec<Prediction>) {
+    beamed.sort_unstable_by(cmp_score_desc);
+    let kept = beamed.len().min(topk);
+    out.clear();
+    out.extend(
+        beamed[..kept]
+            .iter()
+            .map(|&(label, score)| Prediction { label, score }),
+    );
 }
 
 /// Selects the `b` highest-scoring candidates (ties broken by ascending
-/// node id for determinism) into `beam`, sorted by ascending node id.
-///
-/// Crate-visible so the sharded gather stage ([`crate::shard`]) prunes
-/// with *exactly* this comparator — any drift would break the bitwise
-/// sharded == unsharded property.
-pub(crate) fn select_top(cands: &mut Vec<(u32, f32)>, b: usize, beam: &mut Vec<(u32, f32)>) {
-    let cmp = |a: &(u32, f32), b: &(u32, f32)| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0));
+/// node id for determinism) and appends them to `beam`, sorted by
+/// ascending node id. `cands` is used as selection scratch.
+pub(crate) fn select_top_into(cands: &mut [(u32, f32)], b: usize, beam: &mut Vec<(u32, f32)>) {
+    let k = cands.len().min(b);
     if cands.len() > b {
-        cands.select_nth_unstable_by(b - 1, cmp);
-        cands.truncate(b);
+        cands.select_nth_unstable_by(b - 1, cmp_score_desc);
     }
-    beam.clear();
-    beam.extend_from_slice(cands);
+    let sel = &mut cands[..k];
     // Ascending node order keeps downstream chunk access monotonic and the
     // result deterministic regardless of selection internals.
-    beam.sort_unstable_by_key(|e| e.0);
+    sel.sort_unstable_by_key(|e| e.0);
+    beam.extend_from_slice(sel);
+}
+
+/// [`select_top_into`] with a `Vec` destination that is cleared first —
+/// the form the sharded gather stage ([`crate::shard`]) prunes with.
+pub(crate) fn select_top(cands: &mut Vec<(u32, f32)>, b: usize, beam: &mut Vec<(u32, f32)>) {
+    beam.clear();
+    select_top_into(cands.as_mut_slice(), b, beam);
 }
 
 #[cfg(test)]
@@ -458,6 +595,30 @@ mod tests {
             let batch = engine.predict_batch(&xm, 2, 2);
             for (i, r) in rows.iter().enumerate() {
                 assert_eq!(batch[i], engine.predict(r, 2, 2), "{}", cfg.label());
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_stable() {
+        // The same workspace must serve alternating online queries and
+        // batches without cross-talk between the recycled arenas.
+        let m = model();
+        let x0 = SparseVec::from_pairs(vec![(0, 1.0), (4, -2.0)]);
+        let x1 = SparseVec::from_pairs(vec![(2, 0.3), (6, 1.5)]);
+        let xm = CsrMatrix::from_rows(vec![x0.clone(), x1.clone()], 8);
+        for cfg in EngineConfig::all() {
+            let engine = InferenceEngine::new(m.clone(), cfg);
+            let fresh0 = engine.predict(&x0, 3, 3);
+            let fresh1 = engine.predict(&x1, 3, 3);
+            let mut ws = engine.workspace();
+            let mut out = vec![Vec::new(); 2];
+            for _ in 0..3 {
+                assert_eq!(engine.predict_with(&x0, 3, 3, &mut ws), &fresh0[..]);
+                engine.predict_range(&xm, 0, 2, 3, 3, &mut ws, &mut out);
+                assert_eq!(out[0], fresh0, "{}", cfg.label());
+                assert_eq!(out[1], fresh1, "{}", cfg.label());
+                assert_eq!(engine.predict_with(&x1, 3, 3, &mut ws), &fresh1[..]);
             }
         }
     }

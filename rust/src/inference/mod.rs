@@ -16,7 +16,7 @@ pub mod napkinxc;
 mod parallel;
 
 pub use engine::{EngineConfig, InferenceEngine, Prediction, Workspace};
-pub(crate) use engine::{rank_beam, select_top};
+pub(crate) use engine::{rank_into, select_top};
 pub use mscm::set_chunk_order_enabled;
 
 /// How the support intersection `S(x) ∩ S(K)` (or `S(x) ∩ S(w_j)` for the

@@ -6,6 +6,26 @@
 //! one query (Alg. 3 lines 6–8) so a chunk enters cache once; each block
 //! is one sparse-vector × chunk product (Alg. 2) under the configured
 //! iteration method.
+//!
+//! # Chunk ordering is a counting sort, not a comparison sort
+//!
+//! The Alg. 3 block order is `(chunk asc, query asc)`. Blocks are
+//! collected query-major with each query's parents ascending (beams are
+//! kept in ascending node order), and a query beams any parent at most
+//! once — so a **stable** distribution by chunk id reproduces the exact
+//! `(chunk, query)` order: within one chunk's bucket the surviving
+//! relative order is the collection order, which is query order. The
+//! sort is therefore `O(blocks)` instead of `O(blocks log blocks)`, and
+//! the evaluation order — hence every candidate's position and f32
+//! score — is bitwise identical to the previous comparison sort (the
+//! `all_configs_bitwise_identical` and sharded property tests pin this).
+//!
+//! Bucket counts are offset by the smallest chunk id present, so the
+//! scratch is sized by the *span* of touched chunks, not the layer's
+//! chunk count. In the rare degenerate case where a tiny block list
+//! spans a huge chunk range (span > 4·blocks + 64), zeroing the buckets
+//! would dominate and the code falls back to the comparison sort —
+//! producing the identical order either way.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -28,8 +48,69 @@ pub fn set_chunk_order_enabled(enabled: bool) {
     CHUNK_ORDER.store(enabled, Ordering::Relaxed);
 }
 
+/// Orders `ws.blocks` by `(chunk, query)` via a stable counting sort
+/// over the touched chunk-id span (see the module docs for why this is
+/// exact and `O(blocks)`).
+fn sort_blocks_by_chunk(ws: &mut Workspace) {
+    let Workspace {
+        blocks,
+        blocks_tmp,
+        chunk_counts,
+        ..
+    } = ws;
+    let nb = blocks.len();
+    if nb <= 1 {
+        return;
+    }
+    debug_assert!(nb <= u32::MAX as usize, "block count exceeds u32 buckets");
+    let mut lo = u32::MAX;
+    let mut hi = 0u32;
+    for &(c, _, _) in blocks.iter() {
+        lo = lo.min(c);
+        hi = hi.max(c);
+    }
+    let span = (hi - lo) as usize + 1;
+    if span > 4 * nb + 64 {
+        // Degenerate span: bucket zeroing would cost more than comparing.
+        blocks.sort_unstable_by_key(|&(c, q, _)| (c, q));
+        return;
+    }
+    if chunk_counts.len() < span {
+        chunk_counts.resize(span, 0);
+    }
+    let counts = &mut chunk_counts[..span];
+    counts.fill(0);
+    for &(c, _, _) in blocks.iter() {
+        counts[(c - lo) as usize] += 1;
+    }
+    // Prefix-sum the counts into bucket start cursors.
+    let mut sum = 0u32;
+    for c in counts.iter_mut() {
+        let k = *c;
+        *c = sum;
+        sum += k;
+    }
+    // Stable scatter: collection order survives within each bucket. The
+    // scatter writes every slot of [..nb] exactly once (bucket cursors
+    // cover 0..nb bijectively), so only grow — never re-zero — the
+    // target; truncate is O(1) on Copy entries.
+    if blocks_tmp.len() < nb {
+        blocks_tmp.resize(nb, (0, 0, 0.0));
+    } else {
+        blocks_tmp.truncate(nb);
+    }
+    for &b in blocks.iter() {
+        let slot = &mut counts[(b.0 - lo) as usize];
+        blocks_tmp[*slot as usize] = b;
+        *slot += 1;
+    }
+    std::mem::swap(blocks, blocks_tmp);
+}
+
 /// Computes all layer candidates `(child node, path score)` for local
-/// queries `0..n` (rows `qlo..qlo+n` of `x`), appending into `ws.cands`.
+/// queries `0..n` (rows `qlo..qlo+n` of `x`), writing each query's
+/// candidates into its pre-laid-out slice of the workspace candidate
+/// arena (the caller ran [`Workspace::begin_layer`]).
 pub(crate) fn mscm_layer(
     layer: &Layer,
     x: &CsrMatrix,
@@ -38,22 +119,30 @@ pub(crate) fn mscm_layer(
     iter: IterationMethod,
     ws: &mut Workspace,
 ) {
-    // Collect nonzero blocks (Alg. 3 line 5).
-    ws.blocks.clear();
-    for q in 0..n {
-        for &(p, ps) in &ws.beams[q] {
-            ws.blocks.push((p, q as u32, ps));
+    // Collect nonzero blocks (Alg. 3 line 5), query-major.
+    {
+        let Workspace {
+            blocks,
+            beam_entries,
+            beam_offsets,
+            ..
+        } = ws;
+        blocks.clear();
+        for q in 0..n {
+            for &(p, ps) in &beam_entries[beam_offsets[q]..beam_offsets[q + 1]] {
+                blocks.push((p, q as u32, ps));
+            }
         }
     }
     // Chunk-order evaluation (Alg. 3 lines 6–8); skipped in the online
     // setting where it cannot pay off. Queries tie-break for determinism.
     if n > 1 && CHUNK_ORDER.load(Ordering::Relaxed) {
-        ws.blocks.sort_unstable_by_key(|&(c, q, _)| (c, q));
+        sort_blocks_by_chunk(ws);
     }
 
     let chunked = &layer.chunked;
     ws.loaded_chunk = None;
-    // Split borrows: the block list is iterated while cands are appended.
+    // Split borrows: the block list is iterated while the arena is filled.
     let blocks = std::mem::take(&mut ws.blocks);
     for &(p, q, ps) in &blocks {
         let chunk = &chunked.chunks[p as usize];
@@ -81,11 +170,14 @@ pub(crate) fn mscm_layer(
             }
         }
         // Conditional-probability combine (Alg. 1 lines 7–8): σ then
-        // multiply by the parent's path score.
-        let cands = &mut ws.cands[q as usize];
-        for (c, &a) in out.iter().enumerate() {
-            cands.push((base + c as u32, ps * sigmoid(a)));
+        // multiply by the parent's path score, written at the query's
+        // arena cursor.
+        let dst = ws.cand_cursor[q as usize];
+        let cands = &mut ws.cand_entries[dst..dst + width];
+        for (c, (&a, slot)) in out.iter().zip(cands.iter_mut()).enumerate() {
+            *slot = (base + c as u32, ps * sigmoid(a));
         }
+        ws.cand_cursor[q as usize] = dst + width;
     }
     ws.blocks = blocks;
     // Leave the scratch clean for the next layer/batch.
@@ -125,10 +217,13 @@ mod tests {
         let algo = MatmulAlgo::Mscm;
         let mut ws = Workspace::new(&model, EngineConfig { algo, iter });
         let n = beams.len();
-        ws.cands.resize_with(n, Vec::new);
-        ws.beams = beams;
+        ws.begin_beams(n);
+        for b in &beams {
+            ws.push_beam(b);
+        }
+        ws.begin_layer(&l.chunked, n);
         mscm_layer(&l, x, 0, n, iter, &mut ws);
-        ws.cands[..n].to_vec()
+        (0..n).map(|q| ws.cand(q).to_vec()).collect()
     }
 
     #[test]
@@ -154,5 +249,57 @@ mod tests {
             assert_eq!(q1[&2], 0.25 * sigmoid(0.0));
             assert_eq!(q1[&3], 0.25 * sigmoid(1.0));
         }
+    }
+
+    #[test]
+    fn counting_sort_matches_comparison_sort() {
+        // Adversarial block lists: duplicated chunks across queries,
+        // unsorted chunk gaps, single-chunk runs — the counting sort must
+        // reproduce the exact (chunk asc, query asc) comparison order.
+        let cases: Vec<Vec<Vec<u32>>> = vec![
+            vec![vec![0, 3], vec![1, 3], vec![0, 1, 3]],
+            vec![vec![7], vec![7], vec![7]],
+            vec![vec![0], vec![9]],
+            vec![vec![2, 5, 8], vec![0, 8], vec![5]],
+        ];
+        for parents_per_q in cases {
+            let mut ws = dummy_workspace();
+            ws.blocks.clear();
+            let mut expect = Vec::new();
+            for (q, parents) in parents_per_q.iter().enumerate() {
+                for &p in parents {
+                    ws.blocks.push((p, q as u32, (p + q as u32) as f32));
+                    expect.push((p, q as u32, (p + q as u32) as f32));
+                }
+            }
+            expect.sort_by_key(|&(c, q, _)| (c, q));
+            super::sort_blocks_by_chunk(&mut ws);
+            assert_eq!(ws.blocks, expect);
+        }
+    }
+
+    #[test]
+    fn counting_sort_fallback_on_sparse_span() {
+        // A span far wider than the block list takes the comparison-sort
+        // fallback; the order must be the same (chunk, query) order.
+        let mut ws = dummy_workspace();
+        ws.blocks = vec![(1_000_000, 1, 0.5), (3, 0, 0.25), (1_000_000, 0, 0.125)];
+        super::sort_blocks_by_chunk(&mut ws);
+        assert_eq!(
+            ws.blocks,
+            vec![(3, 0, 0.25), (1_000_000, 0, 0.125), (1_000_000, 1, 0.5)]
+        );
+    }
+
+    fn dummy_workspace() -> Workspace {
+        let l = layer();
+        let model = crate::tree::XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], true)]);
+        Workspace::new(
+            &model,
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::MarchingPointers,
+            },
+        )
     }
 }

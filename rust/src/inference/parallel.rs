@@ -6,8 +6,13 @@
 //! path. This mirrors the paper's OpenMP row-chunk distribution; dense
 //! lookup pays an `O(d)` scratch per thread, which is exactly why the
 //! paper finds it uncompetitive when parallelized.
+//!
+//! [`InferenceEngine::predict_batch_parallel_with`] is the pooled form:
+//! the caller owns one workspace per thread and the output buffers, so
+//! sustained parallel-batch serving performs no per-batch allocator
+//! traffic beyond the scoped-thread spawns themselves.
 
-use super::engine::{InferenceEngine, Prediction};
+use super::engine::{InferenceEngine, Prediction, Workspace};
 use crate::sparse::CsrMatrix;
 
 impl InferenceEngine {
@@ -22,36 +27,59 @@ impl InferenceEngine {
     ) -> Vec<Vec<Prediction>> {
         let n = x.rows;
         let threads = threads.max(1).min(n.max(1));
-        if threads <= 1 {
-            return self.predict_batch(x, beam, topk);
-        }
         let mut out: Vec<Vec<Prediction>> = vec![Vec::new(); n];
+        if threads <= 1 {
+            let mut ws = self.workspace();
+            self.predict_range(x, 0, n, beam, topk, &mut ws, &mut out);
+            return out;
+        }
+        let mut workspaces: Vec<Workspace> = (0..threads).map(|_| self.workspace()).collect();
+        self.predict_batch_parallel_with(x, beam, topk, &mut workspaces, &mut out);
+        out
+    }
+
+    /// [`InferenceEngine::predict_batch_parallel`] with caller-owned
+    /// per-thread workspaces and output buffers (one thread per entry of
+    /// `workspaces`): the distribution, scratch and result storage all
+    /// recycle between batches, so a serving loop with a pinned thread
+    /// count allocates nothing per batch.
+    pub fn predict_batch_parallel_with(
+        &self,
+        x: &CsrMatrix,
+        beam: usize,
+        topk: usize,
+        workspaces: &mut [Workspace],
+        out: &mut [Vec<Prediction>],
+    ) {
+        let n = x.rows;
+        assert!(out.len() >= n, "output buffer shorter than the batch");
+        let threads = workspaces.len().min(n.max(1));
+        if threads <= 1 {
+            let ws = workspaces.first_mut().expect("need at least one workspace");
+            self.predict_range(x, 0, n, beam, topk, ws, &mut out[..n]);
+            return;
+        }
         // Contiguous, near-equal ranges.
         let per = n / threads;
         let rem = n % threads;
-        let mut slices: Vec<&mut [Vec<Prediction>]> = Vec::with_capacity(threads);
-        let mut bounds = Vec::with_capacity(threads);
-        {
-            let mut rest = out.as_mut_slice();
+        std::thread::scope(|scope| {
+            let mut rest = &mut out[..n];
+            let mut ws_rest = &mut workspaces[..threads];
             let mut lo = 0usize;
             for t in 0..threads {
                 let len = per + usize::from(t < rem);
                 let (head, tail) = rest.split_at_mut(len);
-                slices.push(head);
-                bounds.push((lo, lo + len));
-                lo += len;
                 rest = tail;
-            }
-        }
-        std::thread::scope(|scope| {
-            for (slice, (qlo, qhi)) in slices.into_iter().zip(bounds) {
+                let (ws_head, ws_tail) = ws_rest.split_at_mut(1);
+                ws_rest = ws_tail;
+                let qlo = lo;
+                lo += len;
+                let ws = &mut ws_head[0];
                 scope.spawn(move || {
-                    let mut ws = self.workspace();
-                    self.predict_range(x, qlo, qhi, beam, topk, &mut ws, slice);
+                    self.predict_range(x, qlo, qlo + len, beam, topk, ws, head);
                 });
             }
         });
-        out
     }
 }
 
@@ -92,6 +120,27 @@ mod tests {
                     assert_eq!(par, serial, "{:?}/{:?} t={}", algo, iter, threads);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn pooled_parallel_buffers_recycle_bitwise() {
+        let model = crate::tree::test_util::tiny_model(24, 3, 3, 13);
+        let engine = InferenceEngine::new(
+            model,
+            EngineConfig {
+                algo: MatmulAlgo::Mscm,
+                iter: IterationMethod::BinarySearch,
+            },
+        );
+        let mut workspaces: Vec<_> = (0..3).map(|_| engine.workspace()).collect();
+        let mut out: Vec<Vec<Prediction>> = vec![Vec::new(); 40];
+        // Alternate batch sizes through the same pooled buffers.
+        for (seed, n) in [(1u64, 31usize), (2, 40), (3, 7), (4, 40)] {
+            let x = random_queries(n, 24, seed);
+            let serial = engine.predict_batch(&x, 3, 3);
+            engine.predict_batch_parallel_with(&x, 3, 3, &mut workspaces, &mut out);
+            assert_eq!(&out[..n], &serial[..], "n={n}");
         }
     }
 

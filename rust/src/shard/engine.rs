@@ -1,10 +1,23 @@
 //! The in-process sharded engine: layer-synchronized exact scatter-gather
 //! (see the [`crate::shard`] module docs for why this reproduces the
 //! unsharded search bit for bit).
+//!
+//! # Pooled round state
+//!
+//! Every layer round moves two buffer families: per-shard local beams out
+//! to the shards and per-shard candidates back. Both live in
+//! [`ShardRound`]s owned by a [`GatherArena`] — the gather stage's
+//! steady-state arena. Rounds *cycle* rather than churn: the serving
+//! coordinator ships each `ShardRound` to its shard pool inside a
+//! `LayerJob` and receives the same buffers back on the reply channel,
+//! so after the first batch at a given size the whole layer-synchronized
+//! protocol performs no allocations (enforced in-process by
+//! `rust/tests/alloc.rs`; across the channel hop only the mpsc node
+//! itself is allocated).
 
 use super::partition::{ShardModel, ShardSpec};
 use crate::inference::{
-    rank_beam, select_top, EngineConfig, InferenceEngine, Prediction, Workspace,
+    rank_into, select_top, EngineConfig, InferenceEngine, Prediction, Workspace,
 };
 use crate::sparse::{CsrMatrix, SparseVec};
 
@@ -13,6 +26,76 @@ struct ShardUnit {
     engine: InferenceEngine,
     spec: ShardSpec,
     layer_offsets: Vec<u32>,
+}
+
+/// One shard's pooled round buffers, cycling gather → shard → gather.
+///
+/// `beams[q]` carries the shard-local slice of the global beam for the
+/// layer being expanded; the shard fills `cands[q]` with the generated
+/// `(local node, path score)` candidates. Only the first `n` entries are
+/// live — the buffers never shrink, so fluctuating batch sizes reuse the
+/// high-water capacity.
+#[derive(Default)]
+pub struct ShardRound {
+    pub(crate) n: usize,
+    pub(crate) beams: Vec<Vec<(u32, f32)>>,
+    pub(crate) cands: Vec<Vec<(u32, f32)>>,
+}
+
+impl ShardRound {
+    fn ensure(&mut self, n: usize) {
+        self.n = n;
+        if self.beams.len() < n {
+            self.beams.resize_with(n, Vec::new);
+        }
+        if self.cands.len() < n {
+            self.cands.resize_with(n, Vec::new);
+        }
+    }
+}
+
+/// The gather stage's reusable arena: per-shard [`ShardRound`]s, the
+/// global beams, the merge scratch and the result buffers. One arena per
+/// gather worker (or per caller thread for the in-process paths); it
+/// reaches its steady-state size after the first batch and never
+/// allocates again at a bounded batch size.
+#[derive(Default)]
+pub struct GatherArena {
+    pub(crate) rounds: Vec<ShardRound>,
+    pub(crate) global_beams: Vec<Vec<(u32, f32)>>,
+    pub(crate) merge: Vec<(u32, f32)>,
+    pub(crate) out: Vec<Vec<Prediction>>,
+    pub(crate) n: usize,
+    /// Resident single-row query matrix for the online path.
+    pub(crate) query_row: CsrMatrix,
+}
+
+impl GatherArena {
+    /// An empty arena; it sizes itself on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, s_count: usize, n: usize) {
+        self.n = n;
+        if self.rounds.len() < s_count {
+            self.rounds.resize_with(s_count, ShardRound::default);
+        }
+        for r in &mut self.rounds[..s_count] {
+            r.ensure(n);
+        }
+        if self.global_beams.len() < n {
+            self.global_beams.resize_with(n, Vec::new);
+        }
+        if self.out.len() < n {
+            self.out.resize_with(n, Vec::new);
+        }
+    }
+
+    /// Per-query results of the last completed drive (`n` rows).
+    pub fn results(&self) -> &[Vec<Prediction>] {
+        &self.out[..self.n]
+    }
 }
 
 /// An inference engine over a complete shard partition.
@@ -126,58 +209,55 @@ impl ShardedEngine {
     }
 
     /// Scatter half, one shard × one layer × one batch: installs the
-    /// shard-local `beams` (parents in layer `layer - 1`, local ids
-    /// ascending), expands layer `layer`, and returns the generated
-    /// `(local node, path score)` candidates per query. This is the unit
-    /// the serving coordinator ships to per-shard worker pools.
+    /// shard-local beams of `round` (parents in layer `layer - 1`, local
+    /// ids ascending) into the workspace arena, expands layer `layer`,
+    /// and refills `round.cands` with the generated `(local node, path
+    /// score)` candidates per query. This is the unit the serving
+    /// coordinator ships to per-shard worker pools; the round's buffers
+    /// travel out and back, so the exchange is allocation-free once warm.
     pub fn expand_shard_layer(
         &self,
         shard: usize,
         x: &CsrMatrix,
         layer: usize,
-        beams: Vec<Vec<(u32, f32)>>,
+        round: &mut ShardRound,
         ws: &mut Workspace,
-    ) -> Vec<Vec<(u32, f32)>> {
-        let n = beams.len();
+    ) {
+        let n = round.n;
         let engine = &self.units[shard].engine;
-        ws.ensure_batch(n);
-        for (q, b) in beams.into_iter().enumerate() {
-            ws.beams[q] = b;
+        ws.begin_beams(n);
+        for b in &round.beams[..n] {
+            ws.push_beam(b);
         }
         engine.expand_layer(layer, x, 0, n, ws);
-        (0..n).map(|q| std::mem::take(&mut ws.cands[q])).collect()
+        for (q, c) in round.cands[..n].iter_mut().enumerate() {
+            c.clear();
+            c.extend_from_slice(ws.cand(q));
+        }
     }
 
     /// Gather half, one layer: merges per-shard candidates into global
     /// ids, prunes with the engine's own comparator, and splits the
     /// surviving beam back into per-shard local beams for the next layer.
-    /// `global_beams[q]` is left holding the pruned global beam.
-    pub(crate) fn merge_and_split(
-        &self,
-        layer: usize,
-        shard_cands: &[Vec<Vec<(u32, f32)>>],
-        beam: usize,
-        scratch: &mut Vec<(u32, f32)>,
-        global_beams: &mut [Vec<(u32, f32)>],
-        next_local: &mut [Vec<Vec<(u32, f32)>>],
-    ) {
-        let n = global_beams.len();
+    /// `arena.global_beams[q]` is left holding the pruned global beam.
+    pub(crate) fn merge_and_split(&self, layer: usize, beam: usize, arena: &mut GatherArena) {
+        let n = arena.n;
         for q in 0..n {
-            scratch.clear();
+            arena.merge.clear();
             for (s, u) in self.units.iter().enumerate() {
                 let off = u.layer_offsets[layer];
-                for &(node, score) in &shard_cands[s][q] {
-                    scratch.push((node + off, score));
+                for &(node, score) in &arena.rounds[s].cands[q] {
+                    arena.merge.push((node + off, score));
                 }
             }
             // Global beam step: exactly InferenceEngine's select_top.
-            select_top(scratch, beam, &mut global_beams[q]);
+            select_top(&mut arena.merge, beam, &mut arena.global_beams[q]);
             for s in 0..self.units.len() {
                 let (lo, hi) = self.layer_range(s, layer);
-                let local = &mut next_local[s][q];
+                let local = &mut arena.rounds[s].beams[q];
                 local.clear();
                 local.extend(
-                    global_beams[q]
+                    arena.global_beams[q]
                         .iter()
                         .filter(|&&(node, _)| node >= lo && node < hi)
                         .map(|&(node, score)| (node - lo, score)),
@@ -186,78 +266,81 @@ impl ShardedEngine {
         }
     }
 
-    /// Final ranking, identical to [`InferenceEngine::predict_range`]'s
-    /// bottom step (the shared `rank_beam`): sort the last global beam
-    /// and keep the top `topk`.
-    pub(crate) fn finalize(beamed: &mut Vec<(u32, f32)>, topk: usize) -> Vec<Prediction> {
-        rank_beam(beamed, topk);
-        beamed
-            .iter()
-            .map(|&(label, score)| Prediction { label, score })
-            .collect()
-    }
-
     /// The layer-synchronized protocol driver, shared by the in-process
     /// paths below and the serving coordinator's gather workers (one
     /// place owns the exactness-critical sequence). `expand` maps
-    /// `(layer, per-shard local beams)` to per-shard candidates — in
-    /// process it calls [`ShardedEngine::expand_shard_layer`] directly;
-    /// the coordinator ships `LayerJob`s to shard pools. Returning `None`
-    /// aborts (a shard vanished mid-batch during shutdown).
+    /// `(layer, per-shard rounds)` to filled `cands` in those rounds —
+    /// in process it calls [`ShardedEngine::expand_shard_layer`]
+    /// directly; the coordinator ships the rounds to shard pools and
+    /// restores them from the replies. Returning `false` aborts (a shard
+    /// vanished mid-batch during shutdown). On success the per-query
+    /// rankings are left in `arena.out` ([`GatherArena::results`]).
     pub(crate) fn drive<F>(
         &self,
         n: usize,
         beam: usize,
         topk: usize,
+        arena: &mut GatherArena,
         mut expand: F,
-    ) -> Option<Vec<Vec<Prediction>>>
+    ) -> bool
     where
-        F: FnMut(usize, Vec<Vec<Vec<(u32, f32)>>>) -> Option<Vec<Vec<Vec<(u32, f32)>>>>,
+        F: FnMut(usize, &mut [ShardRound]) -> bool,
     {
         assert!(beam >= 1, "beam width must be >= 1");
         let s_count = self.units.len();
+        arena.ensure(s_count, n);
         // Per-shard local beams: every shard starts at its own root.
-        let mut local: Vec<Vec<Vec<(u32, f32)>>> =
-            vec![vec![vec![(0u32, 1.0f32)]; n]; s_count];
-        let mut global_beams: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
-        let mut scratch: Vec<(u32, f32)> = Vec::new();
-        for l in 0..self.depth {
-            let cands = expand(l, std::mem::take(&mut local))?;
-            local = vec![vec![Vec::new(); n]; s_count];
-            self.merge_and_split(l, &cands, beam, &mut scratch, &mut global_beams, &mut local);
+        for r in &mut arena.rounds[..s_count] {
+            for q in 0..n {
+                r.beams[q].clear();
+                r.beams[q].push((0u32, 1.0f32));
+            }
         }
-        Some(
-            global_beams
-                .iter_mut()
-                .map(|b| Self::finalize(b, topk))
-                .collect(),
-        )
+        for l in 0..self.depth {
+            if !expand(l, &mut arena.rounds[..s_count]) {
+                return false;
+            }
+            self.merge_and_split(l, beam, arena);
+        }
+        // Final ranking, identical to InferenceEngine::predict_range's
+        // bottom step (the shared rank_into).
+        for q in 0..n {
+            rank_into(&mut arena.global_beams[q], topk, &mut arena.out[q]);
+        }
+        true
     }
 
-    /// One freshly-sized workspace per shard, for the `_with` entry
-    /// points (serving paths keep these per worker and reuse them).
+    /// One freshly-sized workspace per shard, for the `_with`/`_into`
+    /// entry points (serving paths keep these per worker and reuse them).
     pub fn workspaces(&self) -> Vec<Workspace> {
         self.units.iter().map(|u| u.engine.workspace()).collect()
     }
 
     /// Online scatter-gather for a single query.
     pub fn predict(&self, x: &SparseVec, beam: usize, topk: usize) -> Vec<Prediction> {
-        let xm = CsrMatrix::from_single_row(x, self.dim);
-        self.predict_batch(&xm, beam, topk, false).pop().unwrap()
+        let mut wss = self.workspaces();
+        let mut arena = GatherArena::new();
+        self.predict_with(x, beam, topk, &mut wss, &mut arena).to_vec()
     }
 
-    /// Online scatter-gather reusing caller-held per-shard workspaces
-    /// (alloc-light hot path, mirroring
-    /// [`InferenceEngine::predict_with`]).
-    pub fn predict_with(
+    /// Online scatter-gather reusing caller-held per-shard workspaces and
+    /// a gather arena — the alloc-free sharded hot path, mirroring
+    /// [`InferenceEngine::predict_with`]. The returned slice lives in the
+    /// arena and is valid until it is next used.
+    pub fn predict_with<'a>(
         &self,
         x: &SparseVec,
         beam: usize,
         topk: usize,
         wss: &mut [Workspace],
-    ) -> Vec<Prediction> {
-        let xm = CsrMatrix::from_single_row(x, self.dim);
-        self.predict_batch_with(&xm, beam, topk, false, wss).pop().unwrap()
+        arena: &'a mut GatherArena,
+    ) -> &'a [Prediction] {
+        let mut xm = std::mem::take(&mut arena.query_row);
+        xm.reset(self.dim);
+        xm.push_row(x.view());
+        self.predict_batch_into(&xm, beam, topk, false, wss, arena);
+        arena.query_row = xm;
+        &arena.out[0]
     }
 
     /// Batch scatter-gather: each layer is expanded by every shard (chunk
@@ -272,53 +355,45 @@ impl ShardedEngine {
         parallel: bool,
     ) -> Vec<Vec<Prediction>> {
         let mut wss = self.workspaces();
-        self.predict_batch_with(x, beam, topk, parallel, &mut wss)
+        let mut arena = GatherArena::new();
+        self.predict_batch_into(x, beam, topk, parallel, &mut wss, &mut arena);
+        arena.results().to_vec()
     }
 
-    /// [`ShardedEngine::predict_batch`] with caller-held workspaces
-    /// (`wss[s]` belongs to shard `s`). When `parallel`, each layer round
-    /// scatters on one scoped thread per shard — fine for batches, where
-    /// the `depth × S` spawns amortize across the whole batch; sustained
-    /// serving should use [`super::ShardedCoordinator`]'s persistent
-    /// pools instead.
-    pub fn predict_batch_with(
+    /// [`ShardedEngine::predict_batch`] against caller-held workspaces
+    /// (`wss[s]` belongs to shard `s`) and a gather arena; the rankings
+    /// land in [`GatherArena::results`]. When `parallel`, each layer
+    /// round scatters on one scoped thread per shard — fine for batches,
+    /// where the `depth × S` spawns amortize across the whole batch;
+    /// sustained serving should use [`super::ShardedCoordinator`]'s
+    /// persistent pools instead.
+    pub fn predict_batch_into(
         &self,
         x: &CsrMatrix,
         beam: usize,
         topk: usize,
         parallel: bool,
         wss: &mut [Workspace],
-    ) -> Vec<Vec<Prediction>> {
+        arena: &mut GatherArena,
+    ) {
         let n = x.rows;
         let s_count = self.units.len();
         assert_eq!(wss.len(), s_count, "need one workspace per shard");
-        self.drive(n, beam, topk, |l, beams_in| {
-            Some(if parallel {
-                let mut out: Vec<Option<Vec<Vec<(u32, f32)>>>> =
-                    (0..s_count).map(|_| None).collect();
+        let ok = self.drive(n, beam, topk, arena, |l, rounds| {
+            if parallel {
                 std::thread::scope(|scope| {
-                    for (((s, beams), ws), slot) in beams_in
-                        .into_iter()
-                        .enumerate()
-                        .zip(wss.iter_mut())
-                        .zip(out.iter_mut())
-                    {
-                        scope.spawn(move || {
-                            *slot = Some(self.expand_shard_layer(s, x, l, beams, ws));
-                        });
+                    for ((s, r), ws) in rounds.iter_mut().enumerate().zip(wss.iter_mut()) {
+                        scope.spawn(move || self.expand_shard_layer(s, x, l, r, ws));
                     }
                 });
-                out.into_iter().map(|o| o.unwrap()).collect()
             } else {
-                beams_in
-                    .into_iter()
-                    .enumerate()
-                    .zip(wss.iter_mut())
-                    .map(|((s, beams), ws)| self.expand_shard_layer(s, x, l, beams, ws))
-                    .collect()
-            })
-        })
-        .expect("in-process expansion cannot abort")
+                for ((s, r), ws) in rounds.iter_mut().enumerate().zip(wss.iter_mut()) {
+                    self.expand_shard_layer(s, x, l, r, ws);
+                }
+            }
+            true
+        });
+        assert!(ok, "in-process expansion cannot abort");
     }
 
     /// Approximate resident bytes of every shard model (chunked form).
@@ -381,6 +456,43 @@ mod tests {
             let batch = sharded.predict_batch(&x, 3, 5, parallel);
             for (i, q) in rows.iter().enumerate() {
                 assert_eq!(batch[i], sharded.predict(q, 3, 5), "parallel={parallel} q={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_arena_reuse_stays_exact() {
+        // The same workspaces + arena serve alternating online queries
+        // and batches of changing size; recycled rounds must never leak
+        // state between batches.
+        let m = tiny_model(24, 4, 3, 91);
+        let cfg = EngineConfig {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::BinarySearch,
+        };
+        let reference = InferenceEngine::new(m.clone(), cfg);
+        let sharded = ShardedEngine::from_model(&m, 4, cfg);
+        let mut wss = sharded.workspaces();
+        let mut arena = GatherArena::new();
+        let mut rng = Rng::seed_from_u64(3);
+        for round in 0..3 {
+            let q = rand_query(&mut rng, 24);
+            assert_eq!(
+                sharded.predict_with(&q, 3, 5, &mut wss, &mut arena),
+                &reference.predict(&q, 3, 5)[..],
+                "online round {round}"
+            );
+            for n in [5usize, 1, 8] {
+                let rows: Vec<SparseVec> = (0..n).map(|_| rand_query(&mut rng, 24)).collect();
+                let x = CsrMatrix::from_rows(rows.clone(), 24);
+                sharded.predict_batch_into(&x, 3, 5, false, &mut wss, &mut arena);
+                for (i, row) in rows.iter().enumerate() {
+                    assert_eq!(
+                        arena.results()[i],
+                        reference.predict(row, 3, 5),
+                        "round {round} n={n} q={i}"
+                    );
+                }
             }
         }
     }

@@ -57,14 +57,16 @@
 //! and all four iteration methods by the `rust/tests/sharding.rs`
 //! property suite. The cost is `depth` scatter rounds per batch instead
 //! of one; the dynamic batcher amortizes the rounds across every query
-//! in the batch.
+//! in the batch, and every round buffer is pooled ([`GatherArena`] /
+//! [`ShardRound`] cycling gather → shard → gather) so the steady-state
+//! rounds are allocation-free.
 
 mod engine;
 mod io;
 mod partition;
 mod serve;
 
-pub use engine::ShardedEngine;
+pub use engine::{GatherArena, ShardRound, ShardedEngine};
 pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
 pub use partition::{partition, ShardModel, ShardSpec};
 pub use serve::{ShardedCoordinator, ShardedCoordinatorConfig};

@@ -20,13 +20,36 @@
 //! what the unsharded engine would — the output is bit-identical by
 //! construction, at the cost of `depth` scatter rounds per batch (the
 //! batcher amortizes those rounds across every query in the batch).
+//!
+//! # Buffer pooling protocol
+//!
+//! The hot path recycles every batch- and round-lifetime buffer instead
+//! of allocating per round:
+//!
+//! - Each gather worker owns a [`GatherArena`] (global beams, merge
+//!   scratch, result rows) and a pooled query matrix. The batch's
+//!   queries are appended into the pooled `CsrMatrix` in place — no
+//!   per-batch row vector, no query clones.
+//! - The per-shard round buffers ([`ShardRound`]: local beams out,
+//!   candidates back) **cycle through the reply channel**: a `LayerJob`
+//!   moves the shard's round to its pool, the shard worker expands into
+//!   the same buffers, and the reply returns them to the arena for the
+//!   next layer. After the first batch at a given size, the only
+//!   allocations left on a round are the mpsc channel nodes themselves.
+//! - The shared query matrix is an `Arc` that returns to refcount 1 once
+//!   every shard drops its job, so the next batch rebuilds it in place
+//!   (with a fresh allocation only on the rare race where a shard worker
+//!   has not yet dropped its clone).
+//!
+//! `rust/tests/alloc.rs` locks the in-process round to zero allocations
+//! and bounds the full channel round trip.
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::engine::ShardedEngine;
+use super::engine::{GatherArena, ShardRound, ShardedEngine};
 use crate::coordinator::batcher::{spawn_batcher, WorkerPool};
 use crate::coordinator::{CoordinatorConfig, CoordinatorStats, Request, Response, Router};
 use crate::sparse::{CsrMatrix, SparseVec};
@@ -52,16 +75,22 @@ impl Default for ShardedCoordinatorConfig {
     }
 }
 
-/// One batch × one layer scatter order to a single shard: expand these
-/// (shard-local) beam parents through `layer` and send back the
-/// candidates.
+/// One batch × one layer scatter order to a single shard: expand the
+/// (shard-local) beams in `round` through `layer` and send the same
+/// round — candidates filled — back on `reply`. The round's buffers are
+/// on loan from the gather worker's [`GatherArena`].
 struct LayerJob {
     shard: usize,
     layer: usize,
     x: Arc<CsrMatrix>,
-    /// Per-query shard-local beam (node ids of `layer - 1`, ascending).
-    beams: Vec<Vec<(u32, f32)>>,
-    reply: mpsc::Sender<(usize, Vec<Vec<(u32, f32)>>)>,
+    round: ShardRound,
+    reply: mpsc::Sender<(usize, ShardRound)>,
+}
+
+/// Per-gather-worker pooled state (see the module docs).
+struct GatherState {
+    arena: GatherArena,
+    x: Arc<CsrMatrix>,
 }
 
 struct Inner {
@@ -104,10 +133,17 @@ impl ShardedCoordinator {
                 rx,
                 move |_w| engine_init.shard_engine(s).workspace(),
                 move |ws, job: LayerJob| {
-                    let cands =
-                        engine_run.expand_shard_layer(job.shard, &job.x, job.layer, job.beams, ws);
-                    // Gatherer may have bailed (shutdown) — fine.
-                    let _ = job.reply.send((job.shard, cands));
+                    let LayerJob {
+                        shard,
+                        layer,
+                        x,
+                        mut round,
+                        reply,
+                    } = job;
+                    engine_run.expand_shard_layer(shard, &x, layer, &mut round, ws);
+                    // Gatherer may have bailed (shutdown) — fine; the
+                    // loaned buffers die with the channel.
+                    let _ = reply.send((shard, round));
                 },
             ));
             shard_txs.push(tx);
@@ -141,8 +177,11 @@ impl ShardedCoordinator {
                 "mscm-gather",
                 config.base.workers,
                 batch_rx,
-                |_w| (),
-                move |_state, batch: Vec<Request>| scatter_gather(&inner, batch),
+                |_w| GatherState {
+                    arena: GatherArena::new(),
+                    x: Arc::new(CsrMatrix::default()),
+                },
+                move |state, batch: Vec<Request>| scatter_gather(&inner, state, batch),
             )
         };
         Self {
@@ -208,9 +247,9 @@ impl ShardedCoordinator {
 
 /// Gather-worker body: drive the layer-synchronized protocol for one
 /// batch (the protocol itself lives in [`ShardedEngine::drive`]; this
-/// closure only ships each round over the shard queues), then reply per
-/// request.
-fn scatter_gather(inner: &Inner, batch: Vec<Request>) {
+/// closure only ships each round over the shard queues and restores the
+/// loaned buffers from the replies), then reply per request.
+fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
     let engine = &inner.engine;
     let n = batch.len();
     let num_shards = engine.num_shards();
@@ -218,33 +257,45 @@ fn scatter_gather(inner: &Inner, batch: Vec<Request>) {
     let topk = inner.config.base.topk;
     let dispatch_time = Instant::now();
 
-    let rows: Vec<SparseVec> = batch.iter().map(|r| r.query.clone()).collect();
-    let x = Arc::new(CsrMatrix::from_rows(rows, engine.dim()));
+    let GatherState { arena, x } = state;
+    // Rebuild the pooled query matrix in place. The Arc is normally
+    // unique again here — every shard dropped its clone when its last
+    // LayerJob finished — so this is alloc-free; the fallback covers the
+    // race where a shard worker has not yet dropped its handle.
+    if Arc::get_mut(x).is_none() {
+        *x = Arc::new(CsrMatrix::default());
+    }
+    Arc::get_mut(x)
+        .expect("query matrix uniquely held")
+        .assign_rows(engine.dim(), batch.iter().map(|req| req.query.view()));
 
-    let results = engine.drive(n, beam, topk, |l, beams_out| {
+    let ok = engine.drive(n, beam, topk, arena, |l, rounds| {
         let (tx, rx) = mpsc::channel();
         {
             let txs = inner.shard_txs.lock().unwrap();
-            for (stx, (s, beams)) in txs.iter().zip(beams_out.into_iter().enumerate()) {
+            for (s, stx) in txs.iter().enumerate() {
+                let round = std::mem::take(&mut rounds[s]);
+                // A dead shard queue drops the job (and this tx clone)
+                // immediately; the short reply count below aborts the
+                // batch.
                 let _ = stx.send(LayerJob {
                     shard: s,
                     layer: l,
-                    x: Arc::clone(&x),
-                    beams,
+                    x: Arc::clone(x),
+                    round,
                     reply: tx.clone(),
                 });
             }
         }
         drop(tx);
-        let mut shard_cands: Vec<Vec<Vec<(u32, f32)>>> = vec![Vec::new(); num_shards];
         let mut received = 0usize;
-        while let Ok((s, cands)) = rx.recv() {
-            shard_cands[s] = cands;
+        while let Ok((s, round)) = rx.recv() {
+            rounds[s] = round;
             received += 1;
         }
-        (received == num_shards).then_some(shard_cands)
+        received == num_shards
     });
-    let Some(results) = results else {
+    if !ok {
         // A shard queue disappeared mid-batch (shutdown race): account
         // the requests and let the dropped reply senders signal the
         // clients.
@@ -252,9 +303,9 @@ fn scatter_gather(inner: &Inner, batch: Vec<Request>) {
             inner.router.mark_done();
         }
         return;
-    };
+    }
 
-    for (req, preds) in batch.into_iter().zip(results) {
+    for (q, req) in batch.into_iter().enumerate() {
         let queue_time = dispatch_time.duration_since(req.submitted);
         let total_time = req.submitted.elapsed();
         inner.stats.queue_wait.record(queue_time);
@@ -263,7 +314,9 @@ fn scatter_gather(inner: &Inner, batch: Vec<Request>) {
         inner.router.mark_done();
         let _ = req.reply.send(Response {
             id: req.id,
-            predictions: preds,
+            // The one unavoidable per-request allocation: the client owns
+            // its ranking.
+            predictions: arena.results()[q].clone(),
             queue_time,
             total_time,
             batch_size: n,

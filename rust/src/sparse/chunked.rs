@@ -58,14 +58,15 @@ impl Chunk {
     }
 
     /// Builds (or rebuilds) the hash index used by the hash iterator.
+    /// The pair iterator is exact-size straight off `row_indices`, so the
+    /// map is pre-sized from `row_indices.len()` with no intermediate
+    /// collection.
     pub fn build_row_map(&mut self) {
         self.row_map = Some(U32Map::from_pairs(
             self.row_indices
                 .iter()
                 .enumerate()
-                .map(|(p, &r)| (r, p as u32))
-                .collect::<Vec<_>>()
-                .into_iter(),
+                .map(|(p, &r)| (r, p as u32)),
         ));
     }
 

@@ -77,9 +77,43 @@ impl CsrMatrix {
         }
     }
 
-    /// A single-row CSR matrix wrapping one query (online setting).
-    pub fn from_single_row(row: &SparseVec, cols: usize) -> Self {
-        Self::from_rows(vec![row.clone()], cols)
+    /// Resets to an empty `0 x cols` matrix **keeping every buffer's
+    /// capacity** — the in-place builder used by the pooled serving
+    /// paths, which rebuild one query matrix per batch without touching
+    /// the allocator. Follow with [`CsrMatrix::push_row`] per row, or
+    /// use [`CsrMatrix::assign_rows`] for the whole batch.
+    pub fn reset(&mut self, cols: usize) {
+        self.rows = 0;
+        self.cols = cols;
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+    }
+
+    /// Appends one row to a matrix being (re)built via
+    /// [`CsrMatrix::reset`]. Alloc-free once the buffers are warm.
+    pub fn push_row(&mut self, row: SparseVecView<'_>) {
+        debug_assert!(row.indices.iter().all(|&i| (i as usize) < self.cols));
+        self.indices.extend_from_slice(row.indices);
+        self.values.extend_from_slice(row.values);
+        self.indptr.push(self.indices.len());
+        self.rows += 1;
+    }
+
+    /// Rebuilds this matrix in place from row views
+    /// ([`CsrMatrix::reset`] + [`CsrMatrix::push_row`] over `rows`) —
+    /// the one definition of the pooled batch rebuild shared by every
+    /// serving path.
+    pub fn assign_rows<'a>(
+        &mut self,
+        cols: usize,
+        rows: impl IntoIterator<Item = SparseVecView<'a>>,
+    ) {
+        self.reset(cols);
+        for r in rows {
+            self.push_row(r);
+        }
     }
 
     /// Selects a subset of rows into a new matrix.
@@ -190,6 +224,28 @@ mod tests {
         let r = m.row(2);
         let n: f32 = r.values.iter().map(|v| v * v).sum::<f32>();
         assert!((n - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_push_row_rebuilds_in_place() {
+        let m = sample();
+        let mut b = CsrMatrix::default();
+        for _ in 0..2 {
+            // two rebuild rounds: the second must reuse the first's buffers
+            b.reset(3);
+            for i in 0..m.rows {
+                b.push_row(m.row(i));
+            }
+            assert_eq!(b, m);
+        }
+        // rebuilding with fewer rows shrinks the logical matrix
+        b.reset(3);
+        b.push_row(m.row(2));
+        assert_eq!(b.rows, 1);
+        assert_eq!(b.row(0).values, &[3.0, 4.0]);
+        // assign_rows is the same rebuild in one call
+        b.assign_rows(3, (0..m.rows).map(|i| m.row(i)));
+        assert_eq!(b, m);
     }
 
     #[test]

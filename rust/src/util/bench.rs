@@ -2,9 +2,15 @@
 //!
 //! Wall-clock measurement with warmup, fixed iteration budget and robust
 //! summary statistics; every bench binary and the table/figure
-//! reproduction harness is built on this.
+//! reproduction harness is built on this. [`BenchReport`] adds the
+//! machine-readable side: every bench binary appends its measurements to
+//! a report and writes `BENCH_<name>.json` (or the `--json <path>`
+//! override) so the perf trajectory is trackable across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use super::json::Json;
 
 /// Summary of one benchmark: all times in milliseconds.
 #[derive(Clone, Copy, Debug)]
@@ -77,6 +83,106 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable results for one bench binary.
+///
+/// Rows are `(label, ns/op, batch size, config)` plus free-form extra
+/// fields; [`BenchReport::write`] emits
+/// `{"bench": <name>, "results": [...]}` so cross-PR tooling can diff
+/// the perf trajectory without scraping stdout.
+pub struct BenchReport {
+    name: String,
+    entries: Vec<Json>,
+}
+
+impl BenchReport {
+    /// An empty report for bench binary `name`.
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Records one measurement row.
+    pub fn record(&mut self, label: &str, ns_per_op: f64, batch_size: usize, config: &str) {
+        self.record_extra(label, ns_per_op, batch_size, config, Vec::new());
+    }
+
+    /// Records one measurement row with additional fields.
+    pub fn record_extra(
+        &mut self,
+        label: &str,
+        ns_per_op: f64,
+        batch_size: usize,
+        config: &str,
+        extra: Vec<(&str, Json)>,
+    ) {
+        let mut fields = vec![
+            ("label", Json::Str(label.to_string())),
+            ("ns_per_op", Json::Num(ns_per_op)),
+            ("batch_size", Json::Num(batch_size as f64)),
+            ("config", Json::Str(config.to_string())),
+        ];
+        fields.extend(extra);
+        self.entries.push(Json::obj(fields));
+    }
+
+    /// Resolves the output path: the value after a `--json` flag in
+    /// `args`, or `BENCH_<name>.json` in the working directory. A
+    /// `--json` value naming a directory — an existing one, or any path
+    /// with a trailing `/` (created on the spot) — resolves to
+    /// `<dir>/BENCH_<name>.json`: pass a directory when invoking
+    /// `cargo bench` without `--bench` (cargo forwards the trailing args
+    /// to *every* bench binary, and a single file path would make them
+    /// overwrite each other).
+    pub fn path_from_args(name: &str, args: &[String]) -> PathBuf {
+        let default = PathBuf::from(format!("BENCH_{name}.json"));
+        match args.iter().position(|a| a == "--json") {
+            Some(i) => match args.get(i + 1) {
+                Some(p) => {
+                    if p.ends_with('/') || Path::new(p).is_dir() {
+                        let dir = PathBuf::from(p);
+                        std::fs::create_dir_all(&dir).ok();
+                        dir.join(format!("BENCH_{name}.json"))
+                    } else {
+                        PathBuf::from(p)
+                    }
+                }
+                None => {
+                    eprintln!(
+                        "[bench] --json given without a value; writing {}",
+                        default.display()
+                    );
+                    default
+                }
+            },
+            None => default,
+        }
+    }
+
+    /// The shared tail of every bench binary: resolves the output path
+    /// from `args` ([`BenchReport::path_from_args`]) and writes the
+    /// report, logging — not panicking — on failure so a read-only
+    /// working directory never kills a bench run.
+    pub fn finish(&self, args: &[String]) {
+        let path = Self::path_from_args(&self.name, args);
+        if let Err(e) = self.write(&path) {
+            eprintln!("failed to write {}: {e}", path.display());
+        }
+    }
+
+    /// Writes the report; prints the destination so runs are greppable.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let payload = Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("results", Json::Arr(self.entries.clone())),
+        ]);
+        std::fs::write(path, payload.to_string())?;
+        eprintln!("[bench] wrote {} ({} rows)", path.display(), self.entries.len());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +194,59 @@ mod tests {
         assert_eq!(s.p99_ms, 100.0);
         assert_eq!(s.min_ms, 1.0);
         assert!((s.mean_ms - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_round_trips_and_honours_json_flag() {
+        let mut r = BenchReport::new("unit");
+        r.record("row-a", 123.5, 32, "MSCM hash");
+        r.record_extra("row-b", 7.0, 1, "baseline", vec![("shards", Json::Num(4.0))]);
+        let dir = crate::util::temp_dir("bench-report");
+        let path = dir.join("out.json");
+        r.write(&path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit"));
+        let rows = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("ns_per_op").unwrap().as_f64(), Some(123.5));
+        assert_eq!(rows[1].get("shards").unwrap().as_f64(), Some(4.0));
+        std::fs::remove_dir_all(dir).ok();
+
+        let args = vec!["bin".to_string(), "--json".to_string(), "custom.json".to_string()];
+        assert_eq!(
+            BenchReport::path_from_args("unit", &args),
+            std::path::PathBuf::from("custom.json")
+        );
+        assert_eq!(
+            BenchReport::path_from_args("unit", &["bin".to_string()]),
+            std::path::PathBuf::from("BENCH_unit.json")
+        );
+        // a directory value scopes the file per bench (cargo forwards
+        // trailing args to every bench binary)
+        let dir = crate::util::temp_dir("bench-report-dir");
+        let args = vec![
+            "bin".to_string(),
+            "--json".to_string(),
+            dir.to_string_lossy().into_owned(),
+        ];
+        assert_eq!(
+            BenchReport::path_from_args("unit", &args),
+            dir.join("BENCH_unit.json")
+        );
+        // a trailing slash marks a directory even before it exists,
+        // and resolution creates it
+        let sub = dir.join("sub");
+        let args = vec![
+            "bin".to_string(),
+            "--json".to_string(),
+            format!("{}/", sub.display()),
+        ];
+        assert_eq!(
+            BenchReport::path_from_args("unit", &args),
+            sub.join("BENCH_unit.json")
+        );
+        assert!(sub.is_dir());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

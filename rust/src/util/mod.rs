@@ -9,7 +9,7 @@ pub mod bench;
 pub mod json;
 pub mod rng;
 
-pub use bench::{bench_ms, BenchStats};
+pub use bench::{bench_ms, BenchReport, BenchStats};
 pub use json::Json;
 pub use rng::Rng;
 
