@@ -17,9 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use mscm_xmr::data::synthetic::{measured_sibling_overlap, synth_model, synth_queries, DatasetSpec};
-use mscm_xmr::inference::{
-    set_chunk_order_enabled, EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo,
-};
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
 use mscm_xmr::util::{BenchReport, Json};
 
 fn spec(overlap: f64) -> DatasetSpec {
@@ -57,18 +55,22 @@ fn main() {
     let model = Arc::new(synth_model(&s, 32, 9));
     let x = synth_queries(&s, 512, 10);
     for iter in [IterationMethod::DenseLookup, IterationMethod::Hash] {
+        // The switch is per-engine configuration (no process-global
+        // state), so two engines over the same shared model compare the
+        // two evaluation orders safely.
         let engine = InferenceEngine::from_arc(
             Arc::clone(&model),
+            EngineConfig::new(MatmulAlgo::Mscm, iter),
+        );
+        let unordered_engine = InferenceEngine::from_arc(
+            Arc::clone(&model),
             EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter,
+                chunk_order: false,
+                ..EngineConfig::new(MatmulAlgo::Mscm, iter)
             },
         );
-        set_chunk_order_enabled(true);
         let with = batch_ms(&engine, &x);
-        set_chunk_order_enabled(false);
-        let without = batch_ms(&engine, &x);
-        set_chunk_order_enabled(true);
+        let without = batch_ms(&unordered_engine, &x);
         println!(
             "  {:<16} with sort {:.3} ms/q   without {:.3} ms/q   ({:.2}x from chunk order)",
             iter.label(),
@@ -95,10 +97,7 @@ fn main() {
         let model = Arc::new(synth_model(&s, 32, 11));
         let measured = measured_sibling_overlap(&model);
         let x = synth_queries(&s, 256, 12);
-        let cfg = |algo| EngineConfig {
-            algo,
-            iter: IterationMethod::BinarySearch,
-        };
+        let cfg = |algo| EngineConfig::new(algo, IterationMethod::BinarySearch);
         let mscm = batch_ms(
             &InferenceEngine::from_arc(Arc::clone(&model), cfg(MatmulAlgo::Mscm)),
             &x,
@@ -135,10 +134,7 @@ fn main() {
         let x = synth_queries(&s, 512, 16);
         let engine = InferenceEngine::from_arc(
             Arc::clone(&model),
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::Hash,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
         );
         let unordered = batch_ms(&engine, &x);
         // reorder rows by dominant (max |value|) feature id
@@ -174,10 +170,7 @@ fn main() {
     for b in [2usize, 8, 32] {
         let model = Arc::new(synth_model(&s, b, 13));
         let x = synth_queries(&s, 256, 14);
-        let cfg = |algo| EngineConfig {
-            algo,
-            iter: IterationMethod::BinarySearch,
-        };
+        let cfg = |algo| EngineConfig::new(algo, IterationMethod::BinarySearch);
         let mscm = batch_ms(
             &InferenceEngine::from_arc(Arc::clone(&model), cfg(MatmulAlgo::Mscm)),
             &x,

@@ -22,10 +22,7 @@ fn main() {
     };
     eprintln!("synthesizing L={} model ...", spec.num_labels);
     let model = Arc::new(spec.build_model());
-    let cfg = EngineConfig {
-        algo: MatmulAlgo::Mscm,
-        iter: IterationMethod::Hash,
-    };
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
     let engine = Arc::new(InferenceEngine::from_arc(Arc::clone(&model), cfg));
     let n = 4_000;
     let x = spec.build_queries(n);

@@ -1,0 +1,177 @@
+//! Kernel-planner benchmark: `IterationMethod::Auto` versus every fixed
+//! iteration method, batch and online, on a **skewed** tree (wide dense
+//! chunks up top, tiny sparse chunks below — the shape where no single
+//! method wins) and on a **uniform** tree (the planner's sanity floor:
+//! auto must track the best fixed method within noise).
+//!
+//! Also reports each engine's `side_index_bytes` — the planner's memory
+//! claim: auto materializes hash/dense side indexes only where its plan
+//! uses them, so on mixed-density trees it under-spends fixed `hash`.
+//!
+//! Emits `BENCH_planner.json` (override with `--json <path>`).
+//!
+//! `cargo bench --bench planner [-- --labels 30000 --dim 60000 --queries 256]`
+
+use std::sync::Arc;
+
+use mscm_xmr::data::synthetic::{synth_model, synth_model_skewed, synth_queries, DatasetSpec};
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo, PlannerConfig,
+};
+use mscm_xmr::sparse::CsrMatrix;
+use mscm_xmr::tree::XmrModel;
+use mscm_xmr::util::{bench_ms, BenchReport, Json};
+
+fn spec(labels: usize, dim: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "planner",
+        dim,
+        num_labels: labels,
+        paper_dim: 0,
+        paper_labels: 0,
+        query_nnz: 60,
+        col_nnz: 80,
+        sibling_overlap: 0.6,
+        zipf_theta: 1.0,
+    }
+}
+
+struct Measured {
+    label: String,
+    batch_ms: f64,
+    online_ms: f64,
+    side_bytes: usize,
+}
+
+fn measure(model: &Arc<XmrModel>, x: &CsrMatrix, beam: usize, pc: &PlannerConfig) -> Vec<Measured> {
+    let n = x.rows;
+    let queries: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
+    let mut configs: Vec<EngineConfig> = IterationMethod::ALL
+        .into_iter()
+        .map(|iter| EngineConfig::new(MatmulAlgo::Mscm, iter))
+        .collect();
+    configs.push(EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto));
+    let mut rows = Vec::new();
+    for cfg in configs {
+        // Each engine starts from a map-less model copy and builds
+        // exactly what its plan needs, so the side-bytes column reports
+        // honest per-configuration overhead (marching/binary = 0, hash =
+        // full index, auto = only the hash-planned chunks + scratch).
+        let mut base = (**model).clone();
+        base.drop_row_maps();
+        let engine = InferenceEngine::new_with_planner(base, cfg, pc);
+        if cfg.iter == IterationMethod::Auto {
+            eprintln!("auto plan:\n{}", engine.plan().summary());
+        }
+        let stats = bench_ms(1, 3, 4_000.0, || {
+            std::hint::black_box(engine.predict_batch(x, beam, 10));
+        });
+        let batch_ms = stats.mean_ms / n as f64;
+        let mut ws = engine.workspace();
+        let stats = bench_ms(1, 3, 4_000.0, || {
+            for q in &queries {
+                std::hint::black_box(engine.predict_with(q, beam, 10, &mut ws));
+            }
+        });
+        let online_ms = stats.mean_ms / n as f64;
+        rows.push(Measured {
+            label: cfg.label(),
+            batch_ms,
+            online_ms,
+            side_bytes: engine.side_index_bytes(),
+        });
+    }
+    rows
+}
+
+fn report_tree(
+    name: &str,
+    rows: &[Measured],
+    report: &mut BenchReport,
+) {
+    println!("\n[{name}]");
+    println!(
+        "{:<24} {:>14} {:>14} {:>14}",
+        "config", "batch ms/q", "online ms/q", "side KiB"
+    );
+    for r in rows {
+        println!(
+            "{:<24} {:>14.4} {:>14.4} {:>14}",
+            r.label,
+            r.batch_ms,
+            r.online_ms,
+            r.side_bytes / 1024
+        );
+        report.record_extra(
+            name,
+            r.batch_ms * 1e6,
+            0,
+            &r.label,
+            vec![
+                ("online_ns_per_op", Json::Num(r.online_ms * 1e6)),
+                ("side_index_bytes", Json::Num(r.side_bytes as f64)),
+            ],
+        );
+    }
+    // Auto vs the best fixed method (batch): the planner's claim.
+    let auto = rows.last().expect("auto row");
+    let best_fixed = rows[..rows.len() - 1]
+        .iter()
+        .min_by(|a, b| a.batch_ms.total_cmp(&b.batch_ms))
+        .expect("fixed rows");
+    println!(
+        "auto vs best fixed ({}): {:.4} vs {:.4} ms/q batch ({:+.1}%)",
+        best_fixed.label,
+        auto.batch_ms,
+        best_fixed.batch_ms,
+        100.0 * (auto.batch_ms / best_fixed.batch_ms - 1.0)
+    );
+    report.record_extra(
+        &format!("{name}-auto-vs-best"),
+        auto.batch_ms * 1e6,
+        0,
+        &best_fixed.label,
+        vec![(
+            "best_fixed_ns_per_op",
+            Json::Num(best_fixed.batch_ms * 1e6),
+        )],
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let labels = get("--labels", 30_000);
+    let dim = get("--dim", 60_000);
+    let n = get("--queries", 256);
+    let beam = get("--beam", 10);
+    let calibrate = get("--calibrate", 32);
+    let sp = spec(labels, dim);
+    let pc = PlannerConfig {
+        query_nnz_hint: sp.query_nnz,
+        batch_hint: n.clamp(1, 64),
+        calibrate,
+        ..Default::default()
+    };
+    let mut report = BenchReport::new("planner");
+
+    eprintln!("synthesizing skewed tree (L={labels}, d={dim}) ...");
+    let skewed = Arc::new(synth_model_skewed(&sp, 16, 42, 0.8));
+    let x = synth_queries(&sp, n, 7);
+    let rows = measure(&skewed, &x, beam, &pc);
+    report_tree("skewed-tree", &rows, &mut report);
+
+    eprintln!("synthesizing uniform tree (L={labels}, d={dim}) ...");
+    let uniform = Arc::new(synth_model(&sp, 32, 42));
+    let x = synth_queries(&sp, n, 8);
+    let rows = measure(&uniform, &x, beam, &pc);
+    report_tree("uniform-tree", &rows, &mut report);
+
+    report.finish(&args);
+}

@@ -31,10 +31,7 @@ fn main() {
     };
     let n = get("--queries", 512);
     let beam = get("--beam", 10);
-    let cfg = EngineConfig {
-        algo: MatmulAlgo::Mscm,
-        iter: IterationMethod::Hash,
-    };
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
     eprintln!("synthesizing L={} d={} model ...", spec.num_labels, spec.dim);
     let model = spec.build_model();
     let x = spec.build_queries(n);

@@ -134,28 +134,19 @@ fn main() -> anyhow::Result<()> {
 
     let mscm = Arc::new(InferenceEngine::from_arc(
         Arc::clone(&model),
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
     ));
     let (_, mscm_avg, _, mscm_p99, mscm_svc) = run_load("hash MSCM", mscm, &queries, rps, workers);
 
     let bin_mscm = Arc::new(InferenceEngine::from_arc(
         Arc::clone(&model),
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::BinarySearch,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
     ));
     run_load("binary-search MSCM", bin_mscm, &queries, rps, workers);
 
     let baseline = Arc::new(InferenceEngine::from_arc(
         Arc::clone(&model),
-        EngineConfig {
-            algo: MatmulAlgo::Baseline,
-            iter: IterationMethod::BinarySearch,
-        },
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::BinarySearch),
     ));
     let (_, base_avg, _, base_p99, base_svc) =
         run_load("binary-search baseline", baseline, &queries, rps, workers);

@@ -53,10 +53,7 @@ fn main() -> anyhow::Result<()> {
     // for the online setting.
     let engine = InferenceEngine::new(
         trained.model.clone(),
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
     );
 
     // "User queries": short keyword fragments of held-out descriptions.

@@ -56,10 +56,7 @@ fn main() -> anyhow::Result<()> {
     // 4. Serve: dynamic batcher in front, a worker pool per shard, and a
     //    gather stage that owns the global beam, driving every shard
     //    layer by layer — exact by construction.
-    let cfg = EngineConfig {
-        algo: MatmulAlgo::Mscm,
-        iter: IterationMethod::Hash,
-    };
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
     let engine = Arc::new(ShardedEngine::new(loaded, cfg));
     let coord = ShardedCoordinator::start(
         Arc::clone(&engine),

@@ -269,10 +269,7 @@ mod tests {
         let model = crate::tree::test_util::tiny_model(32, 4, 3, 77);
         Arc::new(InferenceEngine::new(
             model,
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::Hash,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
         ))
     }
 

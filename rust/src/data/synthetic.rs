@@ -157,6 +157,34 @@ pub fn even_offsets(n: usize, parents: usize) -> Vec<u32> {
     offsets
 }
 
+/// Contiguous partition of `n` children among `weights.len()` parents
+/// with chunk widths proportional to the weights, every parent getting at
+/// least one child (requires `n >= weights.len()`). Returned as chunk
+/// offsets (length `weights.len() + 1`).
+pub fn weighted_offsets(n: usize, weights: &[f64]) -> Vec<u32> {
+    let parents = weights.len();
+    assert!(parents >= 1 && n >= parents, "need >= 1 child per parent");
+    let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    let mut offsets = Vec::with_capacity(parents + 1);
+    offsets.push(0u32);
+    let mut acc = 0.0f64;
+    for (p, w) in weights.iter().enumerate() {
+        acc += w.max(0.0);
+        let ideal = if total > 0.0 {
+            (acc / total * n as f64).round() as usize
+        } else {
+            (p + 1) * n / parents
+        };
+        let prev = *offsets.last().unwrap() as usize;
+        // Every parent keeps >= 1 child, and enough children remain for
+        // the parents still to be placed.
+        let b = ideal.clamp(prev + 1, n - (parents - 1 - p));
+        offsets.push(b as u32);
+    }
+    *offsets.last_mut().unwrap() = n as u32;
+    offsets
+}
+
 /// Generates a model with the spec's structural statistics.
 ///
 /// Built top-down; each parent's children sample `sibling_overlap` of
@@ -211,6 +239,71 @@ pub fn synth_model(spec: &DatasetSpec, branching: usize, seed: u64) -> XmrModel 
         let csc = CscMatrix::from_cols(cols, spec.dim);
         layers.push(Layer::new(csc, &offsets, true));
         parent_supports = supports;
+    }
+    XmrModel::new(spec.dim, layers)
+}
+
+/// Generates a **deliberately skewed** model: root child `i`'s subtree
+/// carries a geometric weight `skew^i` (0 < `skew` <= 1), and both the
+/// subtree's share of every deeper layer's nodes *and* its column density
+/// scale with that weight — heavy subtrees get wide, dense chunks and
+/// many labels; light subtrees get narrow, sparse chunks and few. This is
+/// the adversarial shape for (a) count-even shard partitions (residency
+/// imbalance) and (b) any single global iteration method (the planner's
+/// per-chunk win).
+pub fn synth_model_skewed(spec: &DatasetSpec, branching: usize, seed: u64, skew: f64) -> XmrModel {
+    assert!(skew > 0.0 && skew <= 1.0, "skew must be in (0, 1]");
+    let mut rng = Rng::seed_from_u64(seed);
+    let zipf = Zipf::new(spec.dim, spec.zipf_theta);
+    let sizes = layer_sizes(spec.num_labels, branching);
+    let mut layers: Vec<Layer> = Vec::with_capacity(sizes.len());
+    let mut parent_supports: Vec<Vec<u32>> = vec![Vec::new()];
+    // Weight of each previous-layer node: the root's children take the
+    // geometric profile, every deeper node inherits its subtree's weight.
+    let mut parent_weights: Vec<f64> = vec![1.0];
+    for (li, &nl) in sizes.iter().enumerate() {
+        let parents = parent_supports.len();
+        let offsets = weighted_offsets(nl, &parent_weights);
+        let depth_boost = 1 << (sizes.len() - 1 - li).min(3);
+        let max_w = parent_weights.iter().cloned().fold(f64::MIN, f64::max);
+        let mut cols: Vec<SparseVec> = Vec::with_capacity(nl);
+        let mut supports: Vec<Vec<u32>> = Vec::with_capacity(nl);
+        let mut weights: Vec<f64> = Vec::with_capacity(nl);
+        for p in 0..parents {
+            let (c0, c1) = (offsets[p] as usize, offsets[p + 1] as usize);
+            let wp = parent_weights[p];
+            // Column density scales 4x between the lightest and heaviest
+            // subtree.
+            let density = 0.25 + 0.75 * (wp / max_w);
+            let col_nnz = ((spec.col_nnz * depth_boost) as f64 * density) as usize;
+            let col_nnz = col_nnz.clamp(2, (spec.dim / 2).max(2));
+            let pool_target = (col_nnz * 2).min(spec.dim);
+            let mut pool: Vec<u32> = parent_supports[p].clone();
+            while pool.len() < pool_target {
+                pool.push(zipf.sample(&mut rng) as u32);
+            }
+            pool.sort_unstable();
+            pool.dedup();
+            for ci in 0..c1 - c0 {
+                let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(col_nnz);
+                for _ in 0..col_nnz {
+                    let f = if rng.gen_bool(spec.sibling_overlap) && !pool.is_empty() {
+                        pool[rng.gen_range(0..pool.len())]
+                    } else {
+                        zipf.sample(&mut rng) as u32
+                    };
+                    pairs.push((f, rng.gen_normal() / (col_nnz as f32).sqrt()));
+                }
+                let col = SparseVec::from_pairs(pairs);
+                supports.push(col.indices.clone());
+                cols.push(col);
+                weights.push(if li == 0 { skew.powi((c0 + ci) as i32) } else { wp });
+            }
+        }
+        let csc = CscMatrix::from_cols(cols, spec.dim);
+        layers.push(Layer::new(csc, &offsets, true));
+        parent_supports = supports;
+        parent_weights = weights;
     }
     XmrModel::new(spec.dim, layers)
 }
@@ -323,6 +416,58 @@ mod tests {
         assert_eq!(o, vec![0, 3, 6, 10]);
         let o = even_offsets(9, 3);
         assert_eq!(o, vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn weighted_offsets_follow_weights_and_cover() {
+        let o = weighted_offsets(12, &[3.0, 1.0]);
+        assert_eq!(o, vec![0, 9, 12]);
+        // every parent keeps at least one child under extreme skew
+        let o = weighted_offsets(4, &[1000.0, 1.0, 1.0, 1.0]);
+        assert_eq!(o, vec![0, 1, 2, 3, 4]);
+        // degenerate all-zero weights fall back to an even split
+        let o = weighted_offsets(6, &[0.0, 0.0, 0.0]);
+        assert_eq!(*o.last().unwrap(), 6);
+        assert!(o.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn skewed_model_is_actually_skewed() {
+        let spec = small_spec();
+        // branching 6 -> layer sizes [5, 28, 167, 1000]: 5 root children
+        let m = synth_model_skewed(&spec, 6, 5, 0.5);
+        assert_eq!(m.num_labels(), spec.num_labels);
+        assert_eq!(m.dim, spec.dim);
+        // Per-root-subtree nnz must decay: first subtree much heavier
+        // than the last (both wider and denser).
+        let r = m.layers[0].num_nodes();
+        assert!(r >= 4, "want several root children, got {r}");
+        let nnz_of = |root: usize| -> usize {
+            let (mut lo, mut hi) = (root, root + 1);
+            let mut total = 0usize;
+            for (li, layer) in m.layers.iter().enumerate() {
+                let (c0, c1) = if li == 0 {
+                    (lo, hi)
+                } else {
+                    let offs = &layer.chunked.chunk_offsets;
+                    (offs[lo] as usize, offs[hi] as usize)
+                };
+                total += layer.csc.indptr[c1] - layer.csc.indptr[c0];
+                (lo, hi) = (c0, c1);
+            }
+            total
+        };
+        let first = nnz_of(0);
+        let last = nnz_of(r - 1);
+        assert!(
+            first as f64 > 3.0 * last as f64,
+            "skew too weak: first={first} last={last}"
+        );
+        // determinism
+        let m2 = synth_model_skewed(&spec, 6, 5, 0.5);
+        for (a, b) in m.layers.iter().zip(&m2.layers) {
+            assert_eq!(a.csc, b.csc);
+        }
     }
 
     #[test]

@@ -10,20 +10,41 @@
 
 use super::engine::Workspace;
 use super::{sigmoid, IterationMethod};
-use crate::sparse::{CscMatrix, CsrMatrix, SparseVecView, U32Map};
+use crate::sparse::{ChunkedMatrix, CscMatrix, CsrMatrix, SparseVecView, U32Map};
 use crate::tree::Layer;
 
-/// Builds the per-column row→position hash maps for one layer's CSC weight
-/// matrix (the baseline hash method's side index; its `O(c · nnz)` memory
-/// is what chunking amortizes). Each map is pre-sized from its column's
-/// support length (the pair iterator is exact-size off the CSC slices).
-pub(crate) fn build_col_hash(csc: &CscMatrix) -> Vec<U32Map> {
-    (0..csc.cols)
-        .map(|j| {
-            let col = csc.col(j);
-            U32Map::from_pairs(col.indices.iter().enumerate().map(|(p, &r)| (r, p as u32)))
-        })
-        .collect()
+/// One column's row→position hash map (the baseline hash method's
+/// side-index unit; its `O(c · nnz)` total memory is what chunking
+/// amortizes). Pre-sized from the column's support length (the pair
+/// iterator is exact-size off the CSC slices).
+fn col_map(csc: &CscMatrix, j: usize) -> U32Map {
+    let col = csc.col(j);
+    U32Map::from_pairs(col.indices.iter().enumerate().map(|(p, &r)| (r, p as u32)))
+}
+
+/// Builds one layer's per-column hash index, plan-driven: live maps only
+/// for columns of hash-planned chunks, 8-byte [`U32Map::empty`]
+/// placeholders elsewhere — the memory the planner saves over the fixed
+/// NapkinXC scheme (a uniform hash plan reproduces it exactly).
+pub(crate) fn build_col_hash_planned(
+    csc: &CscMatrix,
+    chunked: &ChunkedMatrix,
+    methods: &[IterationMethod],
+) -> Vec<U32Map> {
+    debug_assert_eq!(methods.len(), chunked.num_chunks());
+    let mut maps = Vec::with_capacity(csc.cols);
+    for (c, &m) in methods.iter().enumerate() {
+        let (c0, w) = (chunked.chunk_start(c), chunked.chunk_width(c));
+        for j in c0..c0 + w {
+            maps.push(if m == IterationMethod::Hash {
+                col_map(csc, j)
+            } else {
+                U32Map::empty()
+            });
+        }
+    }
+    debug_assert_eq!(maps.len(), csc.cols);
+    maps
 }
 
 /// Dot product via a per-column hash map: iterate the query support,
@@ -54,12 +75,17 @@ fn dot_dense(col: SparseVecView<'_>, dense_x: &[f32]) -> f32 {
 /// queries `0..n` (rows `qlo..qlo+n` of `x`), writing each query's
 /// candidates into its pre-laid-out slice of the workspace candidate
 /// arena (the caller ran [`Workspace::begin_layer`]).
+///
+/// `methods` is the layer's slice of the resolved
+/// [`KernelPlan`](super::plan::KernelPlan), one concrete method per
+/// chunk: every column of a beamed chunk is evaluated with its chunk's
+/// planned method.
 pub(crate) fn baseline_layer(
     layer: &Layer,
     x: &CsrMatrix,
     qlo: usize,
     n: usize,
-    iter: IterationMethod,
+    methods: &[IterationMethod],
     col_hash: Option<&Vec<U32Map>>,
     ws: &mut Workspace,
 ) {
@@ -67,9 +93,16 @@ pub(crate) fn baseline_layer(
     let chunked = &layer.chunked; // only for the children ranges (tree topology)
     for q in 0..n {
         let xq = x.row(qlo + q);
-        // Baseline dense lookup: scatter the query once per query
-        // (amortized over every masked column it touches), clear after.
-        if iter == IterationMethod::DenseLookup {
+        // Baseline dense lookup: scatter the query once per query when
+        // any beamed chunk plans dense (amortized over every masked
+        // column those chunks touch), clear after.
+        let needs_dense = {
+            let (lo, hi) = (ws.beam_offsets[q], ws.beam_offsets[q + 1]);
+            ws.beam_entries[lo..hi]
+                .iter()
+                .any(|&(p, _)| methods[p as usize] == IterationMethod::DenseLookup)
+        };
+        if needs_dense {
             let dense_x = ws.dense_x.as_mut().expect("dense query scatter");
             for (&i, &v) in xq.indices.iter().zip(xq.values) {
                 dense_x[i as usize] = v;
@@ -88,6 +121,7 @@ pub(crate) fn baseline_layer(
             } = ws;
             let mut dst = cand_cursor[q];
             for &(p, ps) in &beam_entries[beam_offsets[q]..beam_offsets[q + 1]] {
+                let iter = methods[p as usize];
                 let start = chunked.chunk_start(p as usize);
                 let width = chunked.chunk_width(p as usize);
                 for j in start..start + width {
@@ -101,6 +135,9 @@ pub(crate) fn baseline_layer(
                         IterationMethod::DenseLookup => {
                             dot_dense(col, dense_x.as_ref().unwrap())
                         }
+                        IterationMethod::Auto => {
+                            unreachable!("plans only hold concrete methods")
+                        }
                     };
                     cand_entries[dst] = (j as u32, ps * sigmoid(a));
                     dst += 1;
@@ -108,7 +145,7 @@ pub(crate) fn baseline_layer(
             }
             cand_cursor[q] = dst;
         }
-        if iter == IterationMethod::DenseLookup {
+        if needs_dense {
             let dense_x = ws.dense_x.as_mut().unwrap();
             for &i in xq.indices {
                 dense_x[i as usize] = 0.0;
@@ -141,10 +178,20 @@ mod tests {
         )
     }
 
+    /// The fixed NapkinXC-style index: every column live (what a uniform
+    /// hash plan materializes).
+    fn full_col_hash(l: &Layer) -> Vec<U32Map> {
+        build_col_hash_planned(
+            &l.csc,
+            &l.chunked,
+            &vec![IterationMethod::Hash; l.chunked.num_chunks()],
+        )
+    }
+
     #[test]
     fn col_hash_resolves_every_entry() {
         let l = layer();
-        let maps = build_col_hash(&l.csc);
+        let maps = full_col_hash(&l);
         for j in 0..l.csc.cols {
             let col = l.csc.col(j);
             for (p, &r) in col.indices.iter().enumerate() {
@@ -162,25 +209,73 @@ mod tests {
             4,
         );
         let beam = vec![(0u32, 1.0f32), (1u32, 0.5f32)];
-        let maps = build_col_hash(&l.csc);
+        let maps = full_col_hash(&l);
         let mut results = Vec::new();
         for iter in IterationMethod::ALL {
-            let mut ws = Workspace::new(
-                &model,
-                EngineConfig {
-                    algo: MatmulAlgo::Baseline,
-                    iter,
-                },
-            );
+            let mut ws = Workspace::new(&model, EngineConfig::new(MatmulAlgo::Baseline, iter));
             ws.begin_beams(1);
             ws.push_beam(&beam);
             ws.begin_layer(&l.chunked, 1);
-            baseline_layer(&l, &x, 0, 1, iter, Some(&maps), &mut ws);
+            let methods = vec![iter; l.chunked.num_chunks()];
+            baseline_layer(&l, &x, 0, 1, &methods, Some(&maps), &mut ws);
             results.push(ws.cand(0).to_vec());
         }
         for r in &results[1..] {
             assert_eq!(r, &results[0]);
         }
         assert_eq!(results[0].len(), 4);
+    }
+
+    #[test]
+    fn planned_col_hash_builds_only_hash_chunk_columns() {
+        let l = layer();
+        let methods = vec![IterationMethod::Hash, IterationMethod::BinarySearch];
+        let maps = build_col_hash_planned(&l.csc, &l.chunked, &methods);
+        assert_eq!(maps.len(), 4);
+        // chunk 0 (cols 0-1) live, chunk 1 (cols 2-3) placeholders
+        for j in 0..2 {
+            let col = l.csc.col(j);
+            assert_eq!(maps[j].len(), col.nnz());
+        }
+        for m in &maps[2..] {
+            assert!(m.is_empty());
+            assert_eq!(m.memory_bytes(), 8);
+        }
+        // a uniform hash plan indexes every column like col_map does
+        for (j, m) in full_col_hash(&l).iter().enumerate() {
+            let direct = col_map(&l.csc, j);
+            assert_eq!(m.memory_bytes(), direct.memory_bytes());
+            assert_eq!(m.len(), direct.len());
+        }
+    }
+
+    #[test]
+    fn mixed_baseline_methods_match_uniform() {
+        let l = layer();
+        let model = XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], false)]);
+        let x = CsrMatrix::from_rows(
+            vec![SparseVec::from_pairs(vec![(0, 2.0), (1, -1.0), (3, 4.0)])],
+            4,
+        );
+        let beam = vec![(0u32, 1.0f32), (1u32, 0.5f32)];
+        let maps = full_col_hash(&l);
+        let run = |methods: &[IterationMethod]| {
+            let mut ws = Workspace::new(
+                &model,
+                EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::DenseLookup),
+            );
+            ws.begin_beams(1);
+            ws.push_beam(&beam);
+            ws.begin_layer(&l.chunked, 1);
+            baseline_layer(&l, &x, 0, 1, methods, Some(&maps), &mut ws);
+            ws.cand(0).to_vec()
+        };
+        let uniform = run(&[IterationMethod::MarchingPointers, IterationMethod::MarchingPointers]);
+        for mix in [
+            [IterationMethod::Hash, IterationMethod::DenseLookup],
+            [IterationMethod::DenseLookup, IterationMethod::BinarySearch],
+        ] {
+            assert_eq!(run(&mix), uniform, "{mix:?}");
+        }
     }
 }

@@ -33,8 +33,9 @@
 
 use std::sync::Arc;
 
-use super::baseline::{baseline_layer, build_col_hash};
+use super::baseline::{baseline_layer, build_col_hash_planned};
 use super::mscm::mscm_layer;
+use super::plan::{KernelPlan, PlannerConfig};
 use super::{IterationMethod, MatmulAlgo};
 use crate::sparse::iterators::DenseScratch;
 use crate::sparse::{ChunkedMatrix, CsrMatrix, SparseVec, U32Map};
@@ -50,22 +51,50 @@ pub struct Prediction {
 }
 
 /// Engine configuration: which masked-matmul algorithm and which support
-/// iteration method evaluate eq. 6.
+/// iteration method evaluate eq. 6. `iter` may be
+/// [`IterationMethod::Auto`], which resolves to a per-chunk
+/// [`KernelPlan`] at engine construction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct EngineConfig {
     /// Baseline (per column) or MSCM (per chunk).
     pub algo: MatmulAlgo,
-    /// Support-intersection iteration method.
+    /// Support-intersection iteration method (or `Auto`).
     pub iter: IterationMethod,
+    /// Evaluate batch blocks in chunk order (Alg. 3 lines 6–8). Always
+    /// on in production; disable only to ablate the cache-reuse win
+    /// (`benches/ablation.rs`). Per-engine, so concurrent engines with
+    /// different settings are safe.
+    pub chunk_order: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            algo: MatmulAlgo::Mscm,
+            iter: IterationMethod::Hash,
+            chunk_order: true,
+        }
+    }
 }
 
 impl EngineConfig {
-    /// All eight `(algo, iter)` combinations, baseline first.
+    /// A production configuration (chunk-order evaluation on).
+    pub fn new(algo: MatmulAlgo, iter: IterationMethod) -> Self {
+        Self {
+            algo,
+            iter,
+            chunk_order: true,
+        }
+    }
+
+    /// All eight fixed `(algo, iter)` combinations, baseline first
+    /// (`Auto` engines are resolved plans over the same kernels, so the
+    /// fixed grid is the exhaustive kernel surface).
     pub fn all() -> Vec<EngineConfig> {
         let mut v = Vec::new();
         for algo in MatmulAlgo::ALL {
             for iter in IterationMethod::ALL {
-                v.push(EngineConfig { algo, iter });
+                v.push(EngineConfig::new(algo, iter));
             }
         }
         v
@@ -114,22 +143,42 @@ pub struct Workspace {
 }
 
 impl Workspace {
-    /// Allocates scratch for `model` under `config`. Only the structures
-    /// the configuration needs are allocated (this is what Table 6's
-    /// "extra memory overhead" column measures); the arenas start empty
-    /// and grow to their steady-state size on the first batch.
+    /// Allocates scratch for `model` under a fixed-method `config` (the
+    /// degenerate uniform plan). `Auto` configurations have no method
+    /// set until a plan is resolved — use
+    /// [`InferenceEngine::workspace`], which allocates per plan.
     pub fn new(model: &XmrModel, config: EngineConfig) -> Self {
+        assert!(
+            config.iter != IterationMethod::Auto,
+            "Auto needs a resolved plan: build the workspace via InferenceEngine::workspace()"
+        );
+        let dense = config.iter == IterationMethod::DenseLookup;
+        Self::with_needs(
+            model,
+            config.algo == MatmulAlgo::Mscm && dense,
+            config.algo == MatmulAlgo::Baseline && dense,
+        )
+    }
+
+    /// Allocates scratch for whatever `plan` needs under `config` — the
+    /// `O(d)` dense structures exist only when some chunk actually plans
+    /// dense lookup (this is what Table 6's "extra memory overhead"
+    /// column measures).
+    pub(crate) fn for_plan(model: &XmrModel, config: EngineConfig, plan: &KernelPlan) -> Self {
+        let dense = plan.uses(IterationMethod::DenseLookup);
+        Self::with_needs(
+            model,
+            config.algo == MatmulAlgo::Mscm && dense,
+            config.algo == MatmulAlgo::Baseline && dense,
+        )
+    }
+
+    fn with_needs(model: &XmrModel, dense_pos: bool, dense_x: bool) -> Self {
         let max_b = model.stats().max_branching;
-        let dense_pos = (config.algo == MatmulAlgo::Mscm
-            && config.iter == IterationMethod::DenseLookup)
-            .then(|| DenseScratch::new(model.dim));
-        let dense_x = (config.algo == MatmulAlgo::Baseline
-            && config.iter == IterationMethod::DenseLookup)
-            .then(|| vec![0.0f32; model.dim]);
         Self {
-            dense_pos,
+            dense_pos: dense_pos.then(|| DenseScratch::new(model.dim)),
             loaded_chunk: None,
-            dense_x,
+            dense_x: dense_x.then(|| vec![0.0f32; model.dim]),
             out_block: vec![0.0; max_b],
             blocks: Vec::new(),
             blocks_tmp: Vec::new(),
@@ -145,22 +194,29 @@ impl Workspace {
         }
     }
 
-    /// Approximate resident bytes of the scratch (arenas included).
+    /// Resident bytes of the scratch: every side structure (dense
+    /// scratch, query scatter) plus the arenas, counted by capacity and
+    /// true element width so the planner's memory claims are measurable
+    /// in one number.
     pub fn memory_bytes(&self) -> usize {
+        fn bytes<T>(cap: usize) -> usize {
+            cap * std::mem::size_of::<T>()
+        }
         self.dense_pos.as_ref().map_or(0, |d| d.memory_bytes())
-            + self.dense_x.as_ref().map_or(0, |d| d.len() * 4)
-            + self.out_block.len() * 4
-            + (self.blocks.capacity() + self.blocks_tmp.capacity()) * 12
-            + self.chunk_counts.capacity() * 4
-            + (self.beam_entries.capacity() + self.cand_entries.capacity()) * 8
-            + (self.beam_offsets.capacity()
-                + self.cand_offsets.capacity()
-                + self.cand_cursor.capacity())
-                * 8
-            + self.query_row.indptr.capacity() * 8
-            + self.query_row.indices.capacity() * 4
-            + self.query_row.values.capacity() * 4
-            + self.out_preds.capacity() * 8
+            + self.dense_x.as_ref().map_or(0, |d| bytes::<f32>(d.capacity()))
+            + bytes::<f32>(self.out_block.capacity())
+            + bytes::<(u32, u32, f32)>(self.blocks.capacity())
+            + bytes::<(u32, u32, f32)>(self.blocks_tmp.capacity())
+            + bytes::<u32>(self.chunk_counts.capacity())
+            + bytes::<(u32, f32)>(self.beam_entries.capacity())
+            + bytes::<usize>(self.beam_offsets.capacity())
+            + bytes::<(u32, f32)>(self.cand_entries.capacity())
+            + bytes::<usize>(self.cand_offsets.capacity())
+            + bytes::<usize>(self.cand_cursor.capacity())
+            + bytes::<usize>(self.query_row.indptr.capacity())
+            + bytes::<u32>(self.query_row.indices.capacity())
+            + bytes::<f32>(self.query_row.values.capacity())
+            + bytes::<Prediction>(self.out_preds.capacity())
     }
 
     /// Starts a fresh beam layout for `n` queries; follow with exactly
@@ -231,7 +287,12 @@ impl Workspace {
     }
 }
 
-/// The inference engine: a model plus an eq.-6 evaluation strategy.
+/// The inference engine: a model, an eq.-6 evaluation strategy and the
+/// resolved per-chunk [`KernelPlan`] that drives it.
+///
+/// Fixed iteration methods resolve to degenerate uniform plans, so the
+/// layer hot loop has exactly one dispatch path regardless of whether the
+/// configuration was fixed or [`IterationMethod::Auto`].
 ///
 /// Engines are cheap to share (`Arc<XmrModel>` inside) and `Sync`; batch
 /// inference can be run on many threads via
@@ -239,46 +300,107 @@ impl Workspace {
 pub struct InferenceEngine {
     model: Arc<XmrModel>,
     config: EngineConfig,
+    /// One concrete method per chunk per layer (shared with sharded
+    /// serving so shard files can carry pre-resolved plans).
+    plan: Arc<KernelPlan>,
     /// Per-layer, per-column row→position maps (baseline hash method —
-    /// NapkinXC's per-column scheme whose memory MSCM amortizes).
+    /// NapkinXC's per-column scheme whose memory MSCM amortizes). Only
+    /// columns of hash-planned chunks carry live maps; the rest hold
+    /// 8-byte [`U32Map::empty`] placeholders.
     pub(crate) col_hash: Option<Vec<Vec<U32Map>>>,
 }
 
 impl InferenceEngine {
     /// Builds an engine, constructing whatever side indices the
-    /// configuration needs (chunk row maps for MSCM hash, per-column maps
-    /// for baseline hash).
-    pub fn new(mut model: XmrModel, config: EngineConfig) -> Self {
-        if config.algo == MatmulAlgo::Mscm && config.iter == IterationMethod::Hash {
-            let missing = model
-                .layers
-                .iter()
-                .any(|l| l.chunked.chunks.iter().any(|c| c.row_map.is_none()));
-            if missing {
-                model.build_row_maps();
-            }
-        }
-        Self::from_arc(Arc::new(model), config)
+    /// configuration needs (chunk row maps for hash-planned MSCM chunks,
+    /// per-column maps for hash-planned baseline chunks). `Auto` resolves
+    /// its plan with the default [`PlannerConfig`].
+    pub fn new(model: XmrModel, config: EngineConfig) -> Self {
+        Self::new_with_planner(model, config, &PlannerConfig::default())
     }
 
-    /// Builds an engine around a shared model. The model must already have
-    /// chunk row maps when `config` is MSCM+Hash.
+    /// [`InferenceEngine::new`] with explicit planner inputs (workload
+    /// hints, calibration budget) — only consulted when `config.iter` is
+    /// `Auto`.
+    pub fn new_with_planner(model: XmrModel, config: EngineConfig, pc: &PlannerConfig) -> Self {
+        let plan = KernelPlan::resolve(&model, config, pc);
+        Self::new_with_plan(model, config, plan)
+    }
+
+    /// Builds an engine around an owned model and a pre-resolved plan
+    /// (e.g. one loaded from a shard file): side indexes are materialized
+    /// exactly where the plan needs them — row maps are built on
+    /// hash-planned chunks, and under `Auto` any resident map on a chunk
+    /// planned away from hash is dropped (the memory the planner saves).
+    pub fn new_with_plan(mut model: XmrModel, config: EngineConfig, plan: KernelPlan) -> Self {
+        assert!(plan.matches(&model), "kernel plan does not fit this model");
+        if config.algo == MatmulAlgo::Mscm {
+            // Fixed configs keep whatever maps the model came with (their
+            // plan never consults them); Auto owns the memory story.
+            let prune = config.iter == IterationMethod::Auto;
+            for (li, layer) in model.layers.iter_mut().enumerate() {
+                let methods = plan.layer_methods(li);
+                for (chunk, &m) in layer.chunked.chunks.iter_mut().zip(methods) {
+                    if m == IterationMethod::Hash {
+                        if chunk.row_map.is_none() {
+                            chunk.build_row_map();
+                        }
+                    } else if prune {
+                        chunk.row_map = None;
+                    }
+                }
+            }
+        }
+        Self::from_parts(Arc::new(model), config, Arc::new(plan))
+    }
+
+    /// Builds an engine around a shared model. The model must already
+    /// carry chunk row maps on every chunk the resolved plan sends to the
+    /// hash kernel (for fixed MSCM+Hash: on every chunk).
     pub fn from_arc(model: Arc<XmrModel>, config: EngineConfig) -> Self {
-        if config.algo == MatmulAlgo::Mscm && config.iter == IterationMethod::Hash {
-            assert!(
-                model
-                    .layers
+        let plan = KernelPlan::resolve(&model, config, &PlannerConfig::default());
+        Self::from_parts(model, config, Arc::new(plan))
+    }
+
+    /// [`InferenceEngine::from_arc`] with a pre-resolved plan.
+    pub fn from_arc_with_plan(
+        model: Arc<XmrModel>,
+        config: EngineConfig,
+        plan: Arc<KernelPlan>,
+    ) -> Self {
+        Self::from_parts(model, config, plan)
+    }
+
+    fn from_parts(model: Arc<XmrModel>, config: EngineConfig, plan: Arc<KernelPlan>) -> Self {
+        assert!(plan.matches(&model), "kernel plan does not fit this model");
+        if config.algo == MatmulAlgo::Mscm {
+            let ok = model.layers.iter().enumerate().all(|(li, l)| {
+                l.chunked
+                    .chunks
                     .iter()
-                    .all(|l| l.chunked.chunks.iter().all(|c| c.row_map.is_some())),
-                "MSCM hash engine requires chunk row maps (XmrModel::build_row_maps)"
+                    .zip(plan.layer_methods(li))
+                    .all(|(c, &m)| m != IterationMethod::Hash || c.row_map.is_some())
+            });
+            assert!(
+                ok,
+                "hash-planned chunks lack row maps (XmrModel::build_row_maps, \
+                 or construct via InferenceEngine::new to build them plan-driven)"
             );
         }
         let col_hash = (config.algo == MatmulAlgo::Baseline
-            && config.iter == IterationMethod::Hash)
-            .then(|| model.layers.iter().map(|l| build_col_hash(&l.csc)).collect());
+            && plan.uses(IterationMethod::Hash))
+        .then(|| {
+            model
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(li, l)| build_col_hash_planned(&l.csc, &l.chunked, plan.layer_methods(li)))
+                .collect()
+        });
         Self {
             model,
             config,
+            plan,
             col_hash,
         }
     }
@@ -293,20 +415,54 @@ impl InferenceEngine {
         self.config
     }
 
-    /// Bytes of side-index overhead beyond the model itself (Table 6's
-    /// "extra memory" column: per-column hash maps for baseline hash).
-    pub fn side_index_bytes(&self) -> usize {
-        self.col_hash.as_ref().map_or(0, |layers| {
-            layers
-                .iter()
-                .flat_map(|maps| maps.iter().map(|m| m.memory_bytes()))
-                .sum()
-        })
+    /// The resolved kernel plan (uniform for fixed methods).
+    pub fn plan(&self) -> &Arc<KernelPlan> {
+        &self.plan
     }
 
-    /// A workspace sized for this engine.
+    /// Bytes of side-index overhead beyond the raw weights — everything
+    /// this engine's *plan requires*, in one number (the measurable
+    /// memory-savings claim):
+    ///
+    /// - chunk row maps on hash-planned MSCM chunks,
+    /// - the baseline's per-column maps, container overhead included,
+    /// - the `O(d)` dense structures each [`Workspace`] will allocate
+    ///   when some chunk plans dense lookup.
+    ///
+    /// Row maps resident on the shared model but *unused* by this
+    /// engine's plan are not counted here — they belong to the model's
+    /// own accounting (`ModelStats::chunked_bytes`); fixed configs keep
+    /// them untouched, and `Auto` over an owned model prunes them. To
+    /// compare configurations fairly, build each engine from a model
+    /// without prebuilt maps (see `benches/planner.rs`) or against the
+    /// analytical baseline [`super::plan::fixed_hash_side_bytes`].
+    pub fn side_index_bytes(&self) -> usize {
+        let mut bytes = 0usize;
+        if self.config.algo == MatmulAlgo::Mscm {
+            for (li, l) in self.model.layers.iter().enumerate() {
+                for (c, &m) in l.chunked.chunks.iter().zip(self.plan.layer_methods(li)) {
+                    if m == IterationMethod::Hash {
+                        bytes += c.row_map.as_ref().map_or(0, |m| m.memory_bytes());
+                    }
+                }
+            }
+        }
+        if let Some(layers) = &self.col_hash {
+            for maps in layers {
+                bytes += maps.capacity() * std::mem::size_of::<U32Map>();
+                bytes += maps.iter().map(|m| m.memory_bytes()).sum::<usize>();
+            }
+        }
+        if self.plan.uses(IterationMethod::DenseLookup) {
+            // dense_pos (MSCM) or dense_x (baseline): 4 bytes × dim.
+            bytes += self.model.dim * 4;
+        }
+        bytes
+    }
+
+    /// A workspace sized for this engine's plan.
     pub fn workspace(&self) -> Workspace {
-        Workspace::new(&self.model, self.config)
+        Workspace::for_plan(&self.model, self.config, &self.plan)
     }
 
     /// Online inference (paper's batch-size-1 setting): top `topk` labels
@@ -390,14 +546,15 @@ impl InferenceEngine {
     ) {
         assert!(x.cols == self.model.dim, "query dim mismatch");
         let layer = &self.model.layers[li];
+        let methods = self.plan.layer_methods(li);
         ws.begin_layer(&layer.chunked, n);
         match self.config.algo {
             MatmulAlgo::Mscm => {
-                mscm_layer(layer, x, qlo, n, self.config.iter, ws);
+                mscm_layer(layer, x, qlo, n, methods, self.config.chunk_order, ws);
             }
             MatmulAlgo::Baseline => {
                 let col_hash = self.col_hash.as_ref().map(|c| &c[li]);
-                baseline_layer(layer, x, qlo, n, self.config.iter, col_hash, ws);
+                baseline_layer(layer, x, qlo, n, methods, col_hash, ws);
             }
         }
         debug_assert!(
@@ -553,10 +710,7 @@ mod tests {
         let x = SparseVec::from_pairs(vec![(1, 0.4), (3, -1.0), (5, 2.0)]);
         let reference = InferenceEngine::new(
             m.clone(),
-            EngineConfig {
-                algo: MatmulAlgo::Baseline,
-                iter: IterationMethod::MarchingPointers,
-            },
+            EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::MarchingPointers),
         )
         .predict(&x, 1, 1);
         for cfg in EngineConfig::all() {
@@ -571,10 +725,7 @@ mod tests {
         let x = SparseVec::from_pairs(vec![(0, 1.0)]);
         let engine = InferenceEngine::new(
             m,
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::BinarySearch,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
         );
         // beam 1 explores only the best top-layer node → 2 leaf candidates
         let preds = engine.predict(&x, 1, 10);
@@ -629,13 +780,124 @@ mod tests {
         let m = model();
         let engine = InferenceEngine::new(
             m,
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::Hash,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
         );
         let preds = engine.predict(&SparseVec::new(), 2, 2);
         assert_eq!(preds.len(), 2);
         assert_eq!(preds[0].score, 0.25);
+    }
+
+    #[test]
+    fn auto_matches_fixed_methods_bitwise() {
+        let m = model();
+        let queries = [
+            SparseVec::from_pairs(vec![(0, 1.0), (1, 0.5), (2, 2.0), (4, 1.0)]),
+            SparseVec::from_pairs(vec![(1, 0.4), (3, -1.0), (5, 2.0)]),
+            SparseVec::new(),
+        ];
+        for algo in MatmulAlgo::ALL {
+            let auto = InferenceEngine::new(m.clone(), EngineConfig::new(algo, IterationMethod::Auto));
+            assert!(auto.plan().matches(&m));
+            for iter in IterationMethod::ALL {
+                let fixed = InferenceEngine::new(m.clone(), EngineConfig::new(algo, iter));
+                for (qi, q) in queries.iter().enumerate() {
+                    assert_eq!(
+                        auto.predict(q, 3, 3),
+                        fixed.predict(q, 3, 3),
+                        "{algo:?}/{iter:?} q={qi}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn side_indexes_follow_the_plan() {
+        // A hand-written mixed plan: only layer 1's second chunk is hash
+        // — the engine must build exactly that row map, and the dense
+        // scratch must not exist when no chunk plans dense.
+        use crate::inference::plan::{KernelPlan, LayerPlan};
+        let mut m = model();
+        m.drop_row_maps();
+        let plan = KernelPlan {
+            layers: vec![
+                LayerPlan { methods: vec![IterationMethod::MarchingPointers] },
+                LayerPlan {
+                    methods: vec![IterationMethod::BinarySearch, IterationMethod::Hash],
+                },
+            ],
+        };
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+        let engine = InferenceEngine::new_with_plan(m.clone(), cfg, plan);
+        let layers = &engine.model().layers;
+        assert!(layers[0].chunked.chunks[0].row_map.is_none());
+        assert!(layers[1].chunked.chunks[0].row_map.is_none());
+        assert!(layers[1].chunked.chunks[1].row_map.is_some());
+        let ws = engine.workspace();
+        assert!(ws.dense_pos.is_none() && ws.dense_x.is_none());
+        // side bytes = exactly the one built row map
+        let map_bytes = layers[1].chunked.chunks[1]
+            .row_map
+            .as_ref()
+            .unwrap()
+            .memory_bytes();
+        assert_eq!(engine.side_index_bytes(), map_bytes);
+        // still bitwise identical to a fixed engine
+        let fixed = InferenceEngine::new(
+            m,
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers),
+        );
+        let q = SparseVec::from_pairs(vec![(0, 1.0), (5, -0.5)]);
+        assert_eq!(engine.predict(&q, 4, 4), fixed.predict(&q, 4, 4));
+    }
+
+    #[test]
+    fn auto_prunes_unneeded_row_maps() {
+        // The seed model carries maps everywhere (with_row_maps = true);
+        // an Auto engine must keep only what its plan hashes, so its side
+        // bytes are at most (and usually strictly below) fixed hash's.
+        let m = model();
+        let hash_engine = InferenceEngine::new(
+            m.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
+        );
+        let auto_engine =
+            InferenceEngine::new(m, EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto));
+        assert!(auto_engine.side_index_bytes() <= hash_engine.side_index_bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "Auto needs a resolved plan")]
+    fn workspace_new_rejects_auto() {
+        let m = model();
+        Workspace::new(&m, EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto));
+    }
+
+    #[test]
+    fn chunk_order_off_is_bitwise_identical() {
+        // The ablation path: disabling Alg. 3 chunk ordering changes the
+        // evaluation order across queries but not any per-entry sum.
+        let m = model();
+        let rows = vec![
+            SparseVec::from_pairs(vec![(0, 1.0), (4, -2.0)]),
+            SparseVec::from_pairs(vec![(2, 0.3)]),
+            SparseVec::from_pairs(vec![(1, 0.7), (6, 0.2)]),
+        ];
+        let xm = CsrMatrix::from_rows(rows, 8);
+        for iter in IterationMethod::ALL {
+            let ordered = InferenceEngine::new(m.clone(), EngineConfig::new(MatmulAlgo::Mscm, iter));
+            let unordered = InferenceEngine::new(
+                m.clone(),
+                EngineConfig {
+                    chunk_order: false,
+                    ..EngineConfig::new(MatmulAlgo::Mscm, iter)
+                },
+            );
+            assert_eq!(
+                ordered.predict_batch(&xm, 2, 2),
+                unordered.predict_batch(&xm, 2, 2),
+                "{iter:?}"
+            );
+        }
     }
 }

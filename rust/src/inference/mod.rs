@@ -1,26 +1,57 @@
 //! Beam-search inference (paper Alg. 1) over XMR tree models, with the
 //! masked sparse matrix product (eq. 6) evaluated either by the vanilla
 //! per-column **baseline** (Alg. 4) or by **MSCM** (Alg. 2–3), each under
-//! any of the four support-intersection iteration methods.
+//! any of the four support-intersection iteration methods — or under a
+//! per-chunk **kernel plan** ([`IterationMethod::Auto`]).
 //!
 //! Every `(algo, iteration)` pair yields *bit-identical* predictions: the
 //! per-output-entry summation order (ascending feature id) is the same in
 //! all code paths, so the paper's "performance boost … is essentially
 //! free" exactness claim holds bitwise here and is enforced by property
 //! tests.
+//!
+//! # The kernel planner (`IterationMethod::Auto`)
+//!
+//! The paper's benchmarks show no iteration method is uniformly fastest:
+//! the winner depends on chunk width, chunk density and query support
+//! size, which vary wildly across the layers of one tree. Because all
+//! four methods are bitwise identical, [`plan::KernelPlan`] picks the
+//! method **per chunk** from an analytical cost model over the chunk's
+//! structural statistics ([`crate::sparse::ChunkStats`]) — optionally
+//! micro-calibrated against the model's own chunks
+//! ([`plan::CostModel::calibrate`]) — with zero accuracy risk: per-chunk
+//! selection only permutes *which kernel* computes each block, never the
+//! per-entry summation order, so `Auto` output is bit-for-bit the fixed
+//! methods' output (property-tested, sharded included).
+//!
+//! Cost shapes (per block, `q` query nnz, `r` stored chunk rows, `n`
+//! blocks amortizing one dense chunk load — Table 6 of the paper):
+//! marching `q + r`; binary `min·log2(max)`; hash `q` probes against the
+//! chunk row map; dense `1.5q` probes + `2r/n` load. Fixed methods are
+//! degenerate uniform plans, so the layer hot loop has exactly one
+//! dispatch path — a slice index into the plan, no allocation
+//! (`rust/tests/alloc.rs` covers `Auto`).
+//!
+//! The plan also drives **side-index materialization**: chunk row maps
+//! exist only on hash-planned chunks, the `O(d)` dense scratch is
+//! allocated only when some chunk plans dense, and the baseline's
+//! per-column maps only materialize under hash-planned chunks.
+//! [`InferenceEngine::side_index_bytes`] reports the total in one number;
+//! on mixed-density models `Auto` is strictly below fixed `hash`.
 
 mod baseline;
 mod engine;
 mod mscm;
 pub mod napkinxc;
 mod parallel;
+pub mod plan;
 
 pub use engine::{EngineConfig, InferenceEngine, Prediction, Workspace};
 pub(crate) use engine::{rank_into, select_top};
-pub use mscm::set_chunk_order_enabled;
+pub use plan::{CostModel, KernelPlan, PlanSummary, PlannerConfig};
 
 /// How the support intersection `S(x) ∩ S(K)` (or `S(x) ∩ S(w_j)` for the
-/// baseline) is iterated — paper §4 items 1–4.
+/// baseline) is iterated — paper §4 items 1–4, plus the planner's `Auto`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum IterationMethod {
     /// Two sorted cursors advanced one step at a time.
@@ -33,16 +64,41 @@ pub enum IterationMethod {
     /// `O(d)` dense scratch: chunk rows scattered once per chunk (MSCM) /
     /// the query scattered once per query (baseline, Parabel/Bonsai).
     DenseLookup,
+    /// Per-chunk cost-model selection among the four methods above,
+    /// resolved to a [`plan::KernelPlan`] at engine construction. Never
+    /// reaches a kernel.
+    Auto,
 }
 
 impl IterationMethod {
-    /// All four methods, in the paper's presentation order.
+    /// The four concrete methods, in the paper's presentation order
+    /// (`Auto` is a planner directive, not a kernel).
     pub const ALL: [IterationMethod; 4] = [
         IterationMethod::MarchingPointers,
         IterationMethod::BinarySearch,
         IterationMethod::Hash,
         IterationMethod::DenseLookup,
     ];
+
+    /// Histogram/serialization index of a concrete method (0..4).
+    ///
+    /// # Panics
+    /// On `Auto`, which never appears in a resolved plan.
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            IterationMethod::MarchingPointers => 0,
+            IterationMethod::BinarySearch => 1,
+            IterationMethod::Hash => 2,
+            IterationMethod::DenseLookup => 3,
+            IterationMethod::Auto => panic!("Auto has no kernel index"),
+        }
+    }
+
+    /// Inverse of [`IterationMethod::index`] (plan deserialization).
+    pub fn from_index(i: usize) -> Option<IterationMethod> {
+        IterationMethod::ALL.get(i).copied()
+    }
 
     /// Short human-readable name matching the paper's tables.
     pub fn label(&self) -> &'static str {
@@ -51,6 +107,18 @@ impl IterationMethod {
             IterationMethod::BinarySearch => "Binary Search",
             IterationMethod::Hash => "Hash",
             IterationMethod::DenseLookup => "Dense Lookup",
+            IterationMethod::Auto => "Auto",
+        }
+    }
+
+    /// Compact name for plan histograms.
+    pub fn short(&self) -> &'static str {
+        match self {
+            IterationMethod::MarchingPointers => "marching",
+            IterationMethod::BinarySearch => "binary",
+            IterationMethod::Hash => "hash",
+            IterationMethod::DenseLookup => "dense",
+            IterationMethod::Auto => "auto",
         }
     }
 }
@@ -64,8 +132,9 @@ impl std::str::FromStr for IterationMethod {
             "binary" | "binary-search" => Ok(IterationMethod::BinarySearch),
             "hash" => Ok(IterationMethod::Hash),
             "dense" | "dense-lookup" => Ok(IterationMethod::DenseLookup),
+            "auto" | "plan" => Ok(IterationMethod::Auto),
             other => Err(format!(
-                "unknown iteration method '{other}' (expected marching|binary|hash|dense)"
+                "unknown iteration method '{other}' (expected marching|binary|hash|dense|auto)"
             )),
         }
     }
@@ -126,7 +195,18 @@ mod tests {
     #[test]
     fn enum_labels() {
         assert_eq!(IterationMethod::Hash.label(), "Hash");
+        assert_eq!(IterationMethod::Auto.label(), "Auto");
         assert_eq!(MatmulAlgo::Mscm.label(), " MSCM");
         assert_eq!(IterationMethod::ALL.len(), 4);
+    }
+
+    #[test]
+    fn method_index_round_trips() {
+        for (i, m) in IterationMethod::ALL.into_iter().enumerate() {
+            assert_eq!(m.index(), i);
+            assert_eq!(IterationMethod::from_index(i), Some(m));
+        }
+        assert_eq!(IterationMethod::from_index(4), None);
+        assert_eq!("auto".parse::<IterationMethod>(), Ok(IterationMethod::Auto));
     }
 }

@@ -27,8 +27,6 @@
 //! would dominate and the code falls back to the comparison sort —
 //! producing the identical order either way.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-
 use super::engine::Workspace;
 use super::{sigmoid, IterationMethod};
 use crate::sparse::iterators::{
@@ -36,17 +34,6 @@ use crate::sparse::iterators::{
 };
 use crate::sparse::CsrMatrix;
 use crate::tree::Layer;
-
-/// Ablation hook (benches/ablation.rs): disables the chunk-order block
-/// sort of Alg. 3 lines 6–8 to measure how much of MSCM's batch win
-/// comes from cache-resident chunk reuse. Always on in production.
-static CHUNK_ORDER: AtomicBool = AtomicBool::new(true);
-
-/// Enables/disables chunk-order evaluation (ablation only; not thread-
-/// safe with concurrent predictions using different settings).
-pub fn set_chunk_order_enabled(enabled: bool) {
-    CHUNK_ORDER.store(enabled, Ordering::Relaxed);
-}
 
 /// Orders `ws.blocks` by `(chunk, query)` via a stable counting sort
 /// over the touched chunk-id span (see the module docs for why this is
@@ -111,12 +98,20 @@ fn sort_blocks_by_chunk(ws: &mut Workspace) {
 /// queries `0..n` (rows `qlo..qlo+n` of `x`), writing each query's
 /// candidates into its pre-laid-out slice of the workspace candidate
 /// arena (the caller ran [`Workspace::begin_layer`]).
+///
+/// `methods` is the layer's slice of the resolved
+/// [`KernelPlan`](super::plan::KernelPlan) — one concrete method per
+/// chunk, indexed by chunk id (a uniform slice for fixed
+/// configurations); the per-block lookup is a plain slice index, so the
+/// hot loop stays allocation-free. `chunk_order` is the per-engine
+/// Alg. 3 block-ordering switch (disabled only by the ablation bench).
 pub(crate) fn mscm_layer(
     layer: &Layer,
     x: &CsrMatrix,
     qlo: usize,
     n: usize,
-    iter: IterationMethod,
+    methods: &[IterationMethod],
+    chunk_order: bool,
     ws: &mut Workspace,
 ) {
     // Collect nonzero blocks (Alg. 3 line 5), query-major.
@@ -136,7 +131,7 @@ pub(crate) fn mscm_layer(
     }
     // Chunk-order evaluation (Alg. 3 lines 6–8); skipped in the online
     // setting where it cannot pay off. Queries tie-break for determinism.
-    if n > 1 && CHUNK_ORDER.load(Ordering::Relaxed) {
+    if n > 1 && chunk_order {
         sort_blocks_by_chunk(ws);
     }
 
@@ -151,7 +146,7 @@ pub(crate) fn mscm_layer(
         let out = &mut ws.out_block[..width];
         out.fill(0.0);
         let xq = x.row(qlo + q as usize);
-        match iter {
+        match methods[p as usize] {
             IterationMethod::MarchingPointers => vec_chunk_marching(xq, chunk, out),
             IterationMethod::BinarySearch => vec_chunk_binary(xq, chunk, out),
             IterationMethod::Hash => vec_chunk_hash(xq, chunk, out),
@@ -168,6 +163,7 @@ pub(crate) fn mscm_layer(
                 }
                 vec_chunk_dense(xq, chunk, ws.dense_pos.as_ref().unwrap(), out);
             }
+            IterationMethod::Auto => unreachable!("plans only hold concrete methods"),
         }
         // Conditional-probability combine (Alg. 1 lines 7–8): σ then
         // multiply by the parent's path score, written at the query's
@@ -214,15 +210,15 @@ mod tests {
     fn run(iter: IterationMethod, beams: Vec<Vec<(u32, f32)>>, x: &CsrMatrix) -> Vec<Vec<(u32, f32)>> {
         let l = layer();
         let model = crate::tree::XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], true)]);
-        let algo = MatmulAlgo::Mscm;
-        let mut ws = Workspace::new(&model, EngineConfig { algo, iter });
+        let mut ws = Workspace::new(&model, EngineConfig::new(MatmulAlgo::Mscm, iter));
         let n = beams.len();
         ws.begin_beams(n);
         for b in &beams {
             ws.push_beam(b);
         }
         ws.begin_layer(&l.chunked, n);
-        mscm_layer(&l, x, 0, n, iter, &mut ws);
+        let methods = vec![iter; l.chunked.num_chunks()];
+        mscm_layer(&l, x, 0, n, &methods, true, &mut ws);
         (0..n).map(|q| ws.cand(q).to_vec()).collect()
     }
 
@@ -296,10 +292,45 @@ mod tests {
         let model = crate::tree::XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], true)]);
         Workspace::new(
             &model,
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::MarchingPointers,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers),
         )
+    }
+
+    #[test]
+    fn mixed_methods_within_one_layer_match_uniform() {
+        // A per-chunk plan mixing all four kernels across the layer's two
+        // chunks must produce the exact candidates of any uniform method.
+        let x = CsrMatrix::from_rows(
+            vec![
+                SparseVec::from_pairs(vec![(0, 1.0), (1, 1.0)]),
+                SparseVec::from_pairs(vec![(2, 1.0), (3, 2.0)]),
+            ],
+            4,
+        );
+        let beams = vec![vec![(0u32, 1.0f32), (1u32, 0.25f32)], vec![(0u32, 0.5f32), (1u32, 0.75f32)]];
+        let uniform = run(IterationMethod::MarchingPointers, beams.clone(), &x);
+        for mix in [
+            [IterationMethod::Hash, IterationMethod::DenseLookup],
+            [IterationMethod::BinarySearch, IterationMethod::Hash],
+            [IterationMethod::DenseLookup, IterationMethod::MarchingPointers],
+        ] {
+            let l = layer();
+            let model =
+                crate::tree::XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], true)]);
+            // dense scratch + row maps: allocate for the union of needs
+            let mut ws = Workspace::new(
+                &model,
+                EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup),
+            );
+            let n = beams.len();
+            ws.begin_beams(n);
+            for b in &beams {
+                ws.push_beam(b);
+            }
+            ws.begin_layer(&l.chunked, n);
+            mscm_layer(&l, &x, 0, n, &mix, true, &mut ws);
+            let got: Vec<Vec<(u32, f32)>> = (0..n).map(|q| ws.cand(q).to_vec()).collect();
+            assert_eq!(got, uniform, "{mix:?}");
+        }
     }
 }

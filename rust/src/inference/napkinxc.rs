@@ -195,10 +195,7 @@ mod tests {
         let model = crate::tree::test_util::tiny_model(24, 3, 3, 21);
         let ours = InferenceEngine::new(
             model.clone(),
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::Hash,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
         );
         let napkin = NapkinXcEngine::new(Arc::new(model));
         for seed in 0..8 {
@@ -217,10 +214,7 @@ mod tests {
         let nlabels = model.num_labels();
         let ours = InferenceEngine::new(
             model.clone(),
-            EngineConfig {
-                algo: MatmulAlgo::Baseline,
-                iter: IterationMethod::MarchingPointers,
-            },
+            EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::MarchingPointers),
         );
         let napkin = NapkinXcEngine::new(Arc::new(model));
         for seed in 0..8 {

@@ -113,7 +113,7 @@ mod tests {
         for algo in MatmulAlgo::ALL {
             for iter in IterationMethod::ALL {
                 let engine =
-                    InferenceEngine::new(model.clone(), EngineConfig { algo, iter });
+                    InferenceEngine::new(model.clone(), EngineConfig::new(algo, iter));
                 let serial = engine.predict_batch(&x, 3, 3);
                 for threads in [2, 4, 7] {
                     let par = engine.predict_batch_parallel(&x, 3, 3, threads);
@@ -128,10 +128,7 @@ mod tests {
         let model = crate::tree::test_util::tiny_model(24, 3, 3, 13);
         let engine = InferenceEngine::new(
             model,
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::BinarySearch,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
         );
         let mut workspaces: Vec<_> = (0..3).map(|_| engine.workspace()).collect();
         let mut out: Vec<Vec<Prediction>> = vec![Vec::new(); 40];
@@ -149,10 +146,7 @@ mod tests {
         let model = crate::tree::test_util::tiny_model(16, 2, 2, 3);
         let engine = InferenceEngine::new(
             model,
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::BinarySearch,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
         );
         let x = random_queries(3, 16, 9);
         let serial = engine.predict_batch(&x, 2, 2);

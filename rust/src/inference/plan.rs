@@ -1,0 +1,638 @@
+//! The per-chunk kernel planner: decides which support-intersection
+//! iteration method evaluates each chunk's masked product.
+//!
+//! The paper benchmarks its four iteration methods (§4 items 1–4) as
+//! *global* choices and finds no uniform winner — the best method depends
+//! on chunk width, chunk density and query support size, all of which
+//! vary wildly across the layers of one tree (upper layers are few, wide
+//! and dense; bottom layers are many, narrow and sparse). Because every
+//! `(algo, iter)` pair in this repo is bitwise identical (pinned by
+//! property tests), the method can be chosen **per chunk** with zero
+//! accuracy risk: [`KernelPlan`] assigns one
+//! [`IterationMethod`](super::IterationMethod) to every chunk of every
+//! layer, and `IterationMethod::Auto` resolves to such a plan at engine
+//! construction.
+//!
+//! # Cost model
+//!
+//! Per block (one query × one chunk product) the paper's complexity terms
+//! are, with `q = nnz(x)`, `r = |S(K)|` (stored chunk rows) and `n` the
+//! number of blocks sharing one chunk load:
+//!
+//! | method    | unit count (shape)            | side index        |
+//! |-----------|-------------------------------|-------------------|
+//! | marching  | `q + r`                       | none              |
+//! | binary    | `min(q,r) · log2(max(q,r))`   | none              |
+//! | hash      | `q`                           | chunk row map     |
+//! | dense     | `1.5q + 2r / n`               | `O(d)` scratch    |
+//!
+//! (The dense probe is weighted 1.5× a marching step: it is a random read
+//! into an `O(d)` array, where marching walks two arrays sequentially.
+//! The `2r/n` term is the load + clear walk amortized over the `n` blocks
+//! sharing the chunk under chunk-order evaluation.)
+//!
+//! [`CostModel`] multiplies each shape by a per-method nanosecond
+//! constant. The defaults are analytical (a hash probe costs a few
+//! dependent loads, a dense probe one, marching one compare per element);
+//! [`CostModel::calibrate`] optionally *fits* the constants by timing
+//! each kernel on a sample of the model's own chunks against synthetic
+//! queries, so the plan adapts to the actual hardware. The emit cost
+//! (writing the intersected entries) is identical across methods and is
+//! therefore omitted from the comparison.
+//!
+//! The planner also drives the **side indexes**: chunk row maps are built
+//! only for chunks planned `Hash`, the `O(d)` dense scratch is allocated
+//! only when some chunk plans `DenseLookup`, and the baseline's
+//! per-column maps only materialize under hash-planned chunks — so `Auto`
+//! strictly under-spends fixed `hash` on memory whenever any chunk plans
+//! away from it ([`crate::inference::InferenceEngine::side_index_bytes`]
+//! reports the total in one number).
+
+use std::time::Instant;
+
+use super::{IterationMethod, MatmulAlgo};
+use crate::sparse::iterators::{
+    vec_chunk_binary, vec_chunk_dense, vec_chunk_hash, vec_chunk_marching, DenseScratch,
+};
+use crate::sparse::{Chunk, SparseVec, U32Map};
+use crate::tree::XmrModel;
+use crate::util::rng::{Rng, Zipf};
+
+/// The four concrete methods in plan/histogram order (never `Auto`).
+const CONCRETE: [IterationMethod; 4] = IterationMethod::ALL;
+
+/// Planner inputs: workload hints and the optional calibration budget.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerConfig {
+    /// Expected nonzeros per query (`nnz(x)` in the cost shapes).
+    pub query_nnz_hint: usize,
+    /// Expected concurrent queries per batch — amortizes the dense-lookup
+    /// chunk load across the blocks that share it under chunk-order
+    /// evaluation (Alg. 3). Use 1 for a strictly online deployment.
+    pub batch_hint: usize,
+    /// Number of synthetic calibration queries; 0 keeps the analytical
+    /// constants ([`CostModel::default`]).
+    pub calibrate: usize,
+    /// Seed for the calibration query stream.
+    pub seed: u64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        Self {
+            query_nnz_hint: 64,
+            batch_hint: 32,
+            calibrate: 0,
+            seed: 0x9A7_F17,
+        }
+    }
+}
+
+/// Per-method nanosecond constants multiplying the module-doc shapes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// Indexed by [`IterationMethod::index`]: marching, binary, hash,
+    /// dense.
+    pub k: [f64; 4],
+}
+
+impl Default for CostModel {
+    /// Analytical constants: one compare-and-advance per element for
+    /// marching, a couple of comparisons per binary-search step, several
+    /// dependent loads per hash probe, one array read per dense probe
+    /// (the dense load/clear walk is carried in the `2r/n` shape).
+    fn default() -> Self {
+        Self {
+            k: [1.0, 2.0, 4.0, 1.0],
+        }
+    }
+}
+
+impl CostModel {
+    /// Unit count of `method` for one block: query support `q`, chunk
+    /// rows `r`, `amort` blocks sharing one dense chunk load.
+    fn units(method: IterationMethod, q: f64, r: f64, amort: f64) -> f64 {
+        match method {
+            IterationMethod::MarchingPointers => q + r,
+            IterationMethod::BinarySearch => q.min(r) * (q.max(r) + 2.0).log2(),
+            IterationMethod::Hash => q,
+            IterationMethod::DenseLookup => 1.5 * q + 2.0 * r / amort.max(1.0),
+            IterationMethod::Auto => unreachable!("Auto is not a kernel"),
+        }
+    }
+
+    /// Predicted nanoseconds for one MSCM block on `chunk`, off its
+    /// build-time [`crate::sparse::ChunkStats`].
+    pub fn block_cost(&self, method: IterationMethod, chunk: &Chunk, pc: &PlannerConfig) -> f64 {
+        let q = pc.query_nnz_hint as f64;
+        let r = chunk.stats().rows as f64;
+        self.k[method.index()] * Self::units(method, q, r, pc.batch_hint as f64)
+    }
+
+    /// Predicted nanoseconds for one baseline block (per-column walks
+    /// over the chunk's `w` columns of average support `e / w`).
+    pub fn baseline_block_cost(
+        &self,
+        method: IterationMethod,
+        chunk: &Chunk,
+        pc: &PlannerConfig,
+    ) -> f64 {
+        let q = pc.query_nnz_hint as f64;
+        let s = chunk.stats();
+        let w = (s.width as f64).max(1.0);
+        let e = s.nnz as f64;
+        let rc = e / w;
+        let k = self.k[method.index()];
+        match method {
+            IterationMethod::MarchingPointers => k * (w * q + e),
+            IterationMethod::BinarySearch => k * w * q.min(rc) * (q.max(rc) + 2.0).log2(),
+            IterationMethod::Hash => k * w * q,
+            // Parabel/Bonsai scheme: the query scatters once per layer
+            // and every masked column reads it — charge the scatter
+            // amortized over a nominal beam of chunks.
+            IterationMethod::DenseLookup => k * (e + 2.0 * q / 8.0),
+            IterationMethod::Auto => unreachable!("Auto is not a kernel"),
+        }
+    }
+
+    /// Cheapest concrete method for one chunk under `algo`.
+    pub fn best_method(
+        &self,
+        algo: MatmulAlgo,
+        chunk: &Chunk,
+        pc: &PlannerConfig,
+    ) -> IterationMethod {
+        let mut best = IterationMethod::MarchingPointers;
+        let mut best_cost = f64::INFINITY;
+        for m in CONCRETE {
+            let c = match algo {
+                MatmulAlgo::Mscm => self.block_cost(m, chunk, pc),
+                MatmulAlgo::Baseline => self.baseline_block_cost(m, chunk, pc),
+            };
+            // Strict `<` keeps the earlier (side-index-free) method on
+            // ties: CONCRETE is ordered marching, binary, hash, dense.
+            if c < best_cost {
+                best_cost = c;
+                best = m;
+            }
+        }
+        best
+    }
+
+    /// Fits the per-method constants by timing each kernel on a sample of
+    /// `model`'s chunks against `n` synthetic queries of
+    /// `pc.query_nnz_hint` nonzeros (Zipf-popular features, like the
+    /// benchmark generators). Returns `self` unchanged when `n == 0` or
+    /// the model has no nonzero chunk to time.
+    pub fn calibrate(mut self, model: &XmrModel, pc: &PlannerConfig) -> Self {
+        let n = pc.calibrate;
+        if n == 0 {
+            return self;
+        }
+        // Sample chunks round-robin across layers so wide top chunks and
+        // narrow bottom chunks both contribute.
+        const MAX_CHUNKS: usize = 32;
+        let mut sample: Vec<&Chunk> = Vec::new();
+        let mut li = 0usize;
+        let mut taken = vec![0usize; model.layers.len()];
+        while sample.len() < MAX_CHUNKS {
+            let layer = &model.layers[li % model.layers.len()];
+            let c = taken[li % model.layers.len()];
+            if c < layer.chunked.num_chunks() {
+                let chunk = &layer.chunked.chunks[c];
+                if chunk.nnz_rows() > 0 {
+                    sample.push(chunk);
+                }
+                taken[li % model.layers.len()] += 1;
+            }
+            li += 1;
+            if li > model.layers.len() * (MAX_CHUNKS + 1) {
+                break;
+            }
+        }
+        if sample.is_empty() {
+            return self;
+        }
+        let mut rng = Rng::seed_from_u64(pc.seed);
+        let zipf = Zipf::new(model.dim, 1.0);
+        let queries: Vec<SparseVec> = (0..n.max(1))
+            .map(|_| {
+                SparseVec::from_pairs(
+                    (0..pc.query_nnz_hint.max(1))
+                        .map(|_| (zipf.sample(&mut rng) as u32, rng.gen_f32(-1.0, 1.0)))
+                        .collect(),
+                )
+            })
+            .collect();
+        // Hash timing needs row maps; time against clones so calibration
+        // never mutates (or depends on) the model's own side indexes.
+        let hashed: Vec<Chunk> = sample
+            .iter()
+            .map(|c| {
+                let mut c = (*c).clone();
+                if c.row_map.is_none() {
+                    c.build_row_map();
+                }
+                c
+            })
+            .collect();
+        let mut scratch = DenseScratch::new(model.dim);
+        let max_w = sample.iter().map(|c| c.ncols as usize).max().unwrap_or(1);
+        let mut out = vec![0.0f32; max_w];
+        for m in CONCRETE {
+            let mut units = 0.0f64;
+            let t = Instant::now();
+            for (s, chunk) in sample.iter().enumerate() {
+                let chunk = if m == IterationMethod::Hash { &hashed[s] } else { *chunk };
+                // One load per chunk, shared by the whole query sample —
+                // mirrors chunk-order evaluation; the `2r/n` shape below
+                // charges the same amortization.
+                if m == IterationMethod::DenseLookup {
+                    scratch.load(chunk);
+                }
+                for x in &queries {
+                    let o = &mut out[..chunk.ncols as usize];
+                    o.fill(0.0);
+                    let xv = x.view();
+                    match m {
+                        IterationMethod::MarchingPointers => vec_chunk_marching(xv, chunk, o),
+                        IterationMethod::BinarySearch => vec_chunk_binary(xv, chunk, o),
+                        IterationMethod::Hash => vec_chunk_hash(xv, chunk, o),
+                        IterationMethod::DenseLookup => vec_chunk_dense(xv, chunk, &scratch, o),
+                        IterationMethod::Auto => unreachable!(),
+                    }
+                    std::hint::black_box(&mut *o);
+                    units += Self::units(
+                        m,
+                        x.nnz() as f64,
+                        chunk.nnz_rows() as f64,
+                        queries.len() as f64,
+                    );
+                }
+                if m == IterationMethod::DenseLookup {
+                    scratch.clear(chunk);
+                }
+            }
+            let ns = t.elapsed().as_nanos() as f64;
+            if units > 0.0 && ns > 0.0 {
+                self.k[m.index()] = ns / units;
+            }
+        }
+        self
+    }
+}
+
+/// One iteration method per chunk of one layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerPlan {
+    /// Indexed by chunk id; never contains `Auto`.
+    pub methods: Vec<IterationMethod>,
+}
+
+/// A resolved kernel plan: one concrete method per chunk per layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelPlan {
+    /// One entry per model layer, top to bottom.
+    pub layers: Vec<LayerPlan>,
+}
+
+impl KernelPlan {
+    /// The degenerate plan a fixed configuration resolves to: `method`
+    /// everywhere. `method` must be concrete.
+    pub fn uniform(model: &XmrModel, method: IterationMethod) -> Self {
+        assert!(
+            method != IterationMethod::Auto,
+            "uniform plans need a concrete method"
+        );
+        Self {
+            layers: model
+                .layers
+                .iter()
+                .map(|l| LayerPlan {
+                    methods: vec![method; l.chunked.num_chunks()],
+                })
+                .collect(),
+        }
+    }
+
+    /// Plans `model` per chunk under `algo` with the (optionally
+    /// calibrated) cost model.
+    pub fn auto(model: &XmrModel, algo: MatmulAlgo, pc: &PlannerConfig) -> Self {
+        let cost = CostModel::default().calibrate(model, pc);
+        Self::auto_with_cost(model, algo, &cost, pc)
+    }
+
+    /// Plans `model` per chunk under an explicit cost model.
+    pub fn auto_with_cost(
+        model: &XmrModel,
+        algo: MatmulAlgo,
+        cost: &CostModel,
+        pc: &PlannerConfig,
+    ) -> Self {
+        Self {
+            layers: model
+                .layers
+                .iter()
+                .map(|l| LayerPlan {
+                    methods: l
+                        .chunked
+                        .chunks
+                        .iter()
+                        .map(|c| cost.best_method(algo, c, pc))
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Resolves a configuration: fixed methods become uniform plans,
+    /// `Auto` runs the planner.
+    pub fn resolve(
+        model: &XmrModel,
+        config: super::EngineConfig,
+        pc: &PlannerConfig,
+    ) -> Self {
+        match config.iter {
+            IterationMethod::Auto => Self::auto(model, config.algo, pc),
+            fixed => Self::uniform(model, fixed),
+        }
+    }
+
+    /// True when the plan's shape matches `model` (one method per chunk
+    /// per layer) and every entry is concrete.
+    pub fn matches(&self, model: &XmrModel) -> bool {
+        self.layers.len() == model.layers.len()
+            && self
+                .layers
+                .iter()
+                .zip(&model.layers)
+                .all(|(p, l)| p.methods.len() == l.chunked.num_chunks())
+            && !self.uses(IterationMethod::Auto)
+    }
+
+    /// Per-chunk methods of layer `li` (the hot-loop lookup — a plain
+    /// slice index, no allocation).
+    #[inline]
+    pub fn layer_methods(&self, li: usize) -> &[IterationMethod] {
+        &self.layers[li].methods
+    }
+
+    /// True when any chunk of any layer plans `method`.
+    pub fn uses(&self, method: IterationMethod) -> bool {
+        self.layers
+            .iter()
+            .any(|l| l.methods.iter().any(|&m| m == method))
+    }
+
+    /// Model-level summary: per-layer and total method histograms.
+    pub fn summary(&self) -> PlanSummary {
+        let per_layer: Vec<[usize; 4]> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut h = [0usize; 4];
+                for m in &l.methods {
+                    h[m.index()] += 1;
+                }
+                h
+            })
+            .collect();
+        let mut total = [0usize; 4];
+        for h in &per_layer {
+            for (t, c) in total.iter_mut().zip(h) {
+                *t += c;
+            }
+        }
+        PlanSummary { per_layer, total }
+    }
+}
+
+/// Side-index bytes the fixed `hash` configuration would materialize for
+/// `model` under `algo`, priced analytically from the build-time chunk
+/// statistics — no map is constructed. [`U32Map`] sizing is deterministic
+/// in the entry count ([`U32Map::capacity_bytes_for`]), so this equals
+/// what a fixed-hash engine's
+/// [`side_index_bytes`](super::InferenceEngine::side_index_bytes) reports
+/// after actually building the index; `plan`-style inspection tooling
+/// uses it to show the planner's savings without paying for the baseline.
+pub fn fixed_hash_side_bytes(model: &XmrModel, algo: MatmulAlgo) -> usize {
+    match algo {
+        // One row map per chunk, sized by the chunk's touched rows.
+        MatmulAlgo::Mscm => model
+            .layers
+            .iter()
+            .map(|l| {
+                (0..l.chunked.num_chunks())
+                    .map(|c| U32Map::capacity_bytes_for(l.chunked.chunk_stats(c).rows))
+                    .sum::<usize>()
+            })
+            .sum(),
+        // One map per column (NapkinXC scheme), plus the container.
+        MatmulAlgo::Baseline => model
+            .layers
+            .iter()
+            .map(|l| {
+                l.csc.cols * std::mem::size_of::<U32Map>()
+                    + (0..l.csc.cols)
+                        .map(|j| U32Map::capacity_bytes_for(l.csc.col(j).nnz()))
+                        .sum::<usize>()
+            })
+            .sum(),
+    }
+}
+
+/// Method histograms of a [`KernelPlan`] (counts indexed by
+/// [`IterationMethod::index`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanSummary {
+    /// Chunk counts per method, one row per layer.
+    pub per_layer: Vec<[usize; 4]>,
+    /// Chunk counts per method over the whole model.
+    pub total: [usize; 4],
+}
+
+impl std::fmt::Display for PlanSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (li, h) in self.per_layer.iter().enumerate() {
+            write!(f, "layer {li}:")?;
+            for (m, &c) in CONCRETE.iter().zip(h) {
+                write!(f, "  {}={}", m.short(), c)?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "total:  ")?;
+        for (m, &c) in CONCRETE.iter().zip(&self.total) {
+            write!(f, "  {}={}", m.short(), c)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{CscMatrix, SparseVec};
+    use crate::tree::test_util::tiny_model;
+    use crate::tree::Layer;
+
+    /// A chunk with `rows` stored rows of one entry each.
+    fn chunk_with_rows(rows: usize, width: usize) -> Chunk {
+        let cols: Vec<SparseVec> = (0..width)
+            .map(|j| {
+                SparseVec::from_pairs(
+                    (0..rows)
+                        .filter(|r| r % width == j % width.max(1))
+                        .map(|r| (r as u32, 1.0))
+                        .collect(),
+                )
+            })
+            .collect();
+        let csc = CscMatrix::from_cols(cols, rows.max(1));
+        crate::sparse::ChunkedMatrix::from_csc(&csc, &[0, width as u32], false).chunks[0].clone()
+    }
+
+    #[test]
+    fn cost_model_picks_dense_for_wide_dense_chunks_in_batch() {
+        let cost = CostModel::default();
+        let pc = PlannerConfig {
+            query_nnz_hint: 64,
+            batch_hint: 32,
+            ..Default::default()
+        };
+        let chunk = chunk_with_rows(2000, 32);
+        assert_eq!(
+            cost.best_method(MatmulAlgo::Mscm, &chunk, &pc),
+            IterationMethod::DenseLookup
+        );
+    }
+
+    #[test]
+    fn cost_model_picks_hash_for_dense_chunks_online() {
+        // With no batch to amortize the O(r) load, dense loses to hash.
+        let cost = CostModel::default();
+        let pc = PlannerConfig {
+            query_nnz_hint: 64,
+            batch_hint: 1,
+            ..Default::default()
+        };
+        let chunk = chunk_with_rows(2000, 32);
+        assert_eq!(
+            cost.best_method(MatmulAlgo::Mscm, &chunk, &pc),
+            IterationMethod::Hash
+        );
+    }
+
+    #[test]
+    fn cost_model_picks_marching_for_tiny_supports() {
+        let cost = CostModel::default();
+        let pc = PlannerConfig {
+            query_nnz_hint: 8,
+            batch_hint: 1,
+            ..Default::default()
+        };
+        let chunk = chunk_with_rows(2, 2);
+        assert_eq!(
+            cost.best_method(MatmulAlgo::Mscm, &chunk, &pc),
+            IterationMethod::MarchingPointers
+        );
+    }
+
+    #[test]
+    fn uniform_plan_matches_and_reports() {
+        let m = tiny_model(16, 3, 3, 1);
+        let plan = KernelPlan::uniform(&m, IterationMethod::BinarySearch);
+        assert!(plan.matches(&m));
+        assert!(plan.uses(IterationMethod::BinarySearch));
+        assert!(!plan.uses(IterationMethod::Hash));
+        let s = plan.summary();
+        let chunks: usize = m.layers.iter().map(|l| l.chunked.num_chunks()).sum();
+        assert_eq!(s.total[IterationMethod::BinarySearch.index()], chunks);
+        assert_eq!(s.per_layer.len(), m.depth());
+    }
+
+    #[test]
+    fn auto_plan_has_one_method_per_chunk() {
+        let m = tiny_model(32, 4, 3, 7);
+        for algo in MatmulAlgo::ALL {
+            let plan = KernelPlan::auto(&m, algo, &PlannerConfig::default());
+            assert!(plan.matches(&m), "{algo:?}");
+            for (li, l) in m.layers.iter().enumerate() {
+                assert_eq!(plan.layer_methods(li).len(), l.chunked.num_chunks());
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_produces_positive_finite_constants() {
+        let m = tiny_model(32, 4, 3, 5);
+        let pc = PlannerConfig {
+            calibrate: 4,
+            query_nnz_hint: 8,
+            ..Default::default()
+        };
+        let cost = CostModel::default().calibrate(&m, &pc);
+        for k in cost.k {
+            assert!(k.is_finite() && k > 0.0, "bad constant {k}");
+        }
+        // a calibrated model still yields a valid plan
+        let plan = KernelPlan::auto_with_cost(&m, MatmulAlgo::Mscm, &cost, &pc);
+        assert!(plan.matches(&m));
+    }
+
+    #[test]
+    fn analytical_hash_baseline_equals_built_engines() {
+        use super::super::{EngineConfig, InferenceEngine};
+        let mut m = tiny_model(24, 4, 3, 13);
+        m.drop_row_maps();
+        for algo in MatmulAlgo::ALL {
+            let engine = InferenceEngine::new(
+                m.clone(),
+                EngineConfig::new(algo, IterationMethod::Hash),
+            );
+            assert_eq!(
+                engine.side_index_bytes(),
+                fixed_hash_side_bytes(&m, algo),
+                "{algo:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_density_model_gets_mixed_plan() {
+        // Build a model whose first layer chunk is wide and dense and
+        // whose bottom chunks are tiny: the plan must not be uniform.
+        let dim = 512;
+        let dense_cols: Vec<SparseVec> = (0..8)
+            .map(|j| {
+                SparseVec::from_pairs((0..400).map(|r| (r as u32, (j + r) as f32 * 0.01)).collect())
+            })
+            .collect();
+        let sparse_cols: Vec<SparseVec> = (0..16)
+            .map(|j| SparseVec::from_pairs(vec![(j as u32, 1.0)]))
+            .collect();
+        let l0 = Layer::new(CscMatrix::from_cols(dense_cols, dim), &[0, 8], false);
+        let offsets: Vec<u32> = (0..=8).map(|p| (p * 2) as u32).collect();
+        let l1 = Layer::new(CscMatrix::from_cols(sparse_cols, dim), &offsets, false);
+        let m = XmrModel::new(dim, vec![l0, l1]);
+        let pc = PlannerConfig {
+            query_nnz_hint: 48,
+            batch_hint: 32,
+            ..Default::default()
+        };
+        let plan = KernelPlan::auto(&m, MatmulAlgo::Mscm, &pc);
+        assert_eq!(
+            plan.layer_methods(0)[0],
+            IterationMethod::DenseLookup,
+            "wide dense chunk should plan dense"
+        );
+        assert!(
+            plan.layer_methods(1)
+                .iter()
+                .all(|&m| m == IterationMethod::BinarySearch),
+            "tiny chunks should plan a side-index-free method: {:?}",
+            plan.layer_methods(1)
+        );
+        // ... which is the point: a mixed plan with no hash-planned chunk.
+        assert!(!plan.uses(IterationMethod::Hash));
+    }
+}

@@ -21,8 +21,12 @@
 //!   synthesizer (§6).
 //! - [`inference`] — Algorithms 1–4: beam-search inference with the
 //!   masked matrix product evaluated by the vanilla per-column baseline or
-//!   by MSCM, each under all four iteration methods; multi-threaded batch
-//!   inference (§6.1); a NapkinXC-style per-column hash comparator (§5.2).
+//!   by MSCM, each under all four iteration methods — or under the
+//!   per-chunk cost-model **kernel planner** (`IterationMethod::Auto`,
+//!   [`inference::plan`]), which picks the best method chunk by chunk
+//!   with bitwise-identical output and plan-driven side indexes;
+//!   multi-threaded batch inference (§6.1); a NapkinXC-style per-column
+//!   hash comparator (§5.2).
 //! - [`metrics`] — streaming latency histograms (avg / P50 / P95 / P99).
 //! - [`coordinator`] — the L3 serving system: request router, dynamic
 //!   batcher, worker pool, backpressure.

@@ -3,8 +3,10 @@
 //! Subcommands (run `repro help` for details):
 //!
 //! - model production: `synth-model`, `train`, `gen-data`, `stats`, `shard`
-//! - inference: `infer`, `serve` (single engine, or label-space sharded
-//!   scatter-gather via `--shards N` / `--shards-dir dir/`)
+//! - inference: `infer`, `plan` (per-chunk kernel-plan inspection),
+//!   `serve` (single engine, or label-space sharded scatter-gather via
+//!   `--shards N` / `--shards-dir dir/`); `--iter auto` enables the
+//!   cost-model kernel planner on any of them
 //! - paper reproduction: `bench table|figure3|figure4|figure5|figure6|
 //!   table4|table5|table6|all`
 //! - runtime: `xla-smoke` (load + execute the AOT artifacts)
@@ -23,7 +25,9 @@ use mscm_xmr::data::corpus::{Corpus, CorpusSpec};
 use mscm_xmr::data::enterprise::EnterpriseSpec;
 use mscm_xmr::data::svmlight::{load_svmlight, save_svmlight, SvmlightData};
 use mscm_xmr::data::synthetic::paper_suite;
-use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo, PlannerConfig,
+};
 use mscm_xmr::repro;
 use mscm_xmr::shard::{
     load_shards, partition, save_shards, ShardedCoordinator, ShardedCoordinatorConfig,
@@ -43,17 +47,28 @@ MODEL PRODUCTION
   gen-data      --out corpus.svm [--docs N] [--topics N] [--vocab N]
   train         --data corpus.svm [--branching B] [--out m.bin]
   stats         --model m.bin
-  shard         --model m.bin --shards S --out dir/   (split into S shard files)
+  shard         --model m.bin --shards S --out dir/   (split into S shard files;
+                cuts balanced by subtree nnz; with --iter auto [--calibrate N]
+                each shard file also stores its resolved kernel plan)
 
 INFERENCE
   infer         --model m.bin --queries q.svm [--algo mscm|baseline]
-                [--iter marching|binary|hash|dense] [--beam 10] [--topk 10]
+                [--iter marching|binary|hash|dense|auto] [--beam 10] [--topk 10]
+  plan          --model m.bin [--algo mscm|baseline] [--calibrate N]
+                [--batch-hint N] [--plan-query-nnz N]
+                (resolve the per-chunk kernel plan; print the per-layer
+                method histogram and side-index memory vs fixed hash)
   eval          --data corpus.svm [--branching B] [--beams 1,5,10,20]
                 [--test-frac 0.2]  (train/test split; P@k/R@k/nDCG per beam)
   serve         --model m.bin [--workers N] [--max-batch N] [--rps N]
                 [--requests N] (synthetic load; prints latency stats)
+                [--iter ...|auto [--calibrate N]]
                 [--shards S | --shards-dir dir/] [--shard-workers N]
                 (scatter-gather serving over a label-space partition)
+
+  --iter auto resolves a per-chunk kernel plan (cost model over chunk
+  stats; --calibrate N times the kernels on N synthetic queries first);
+  predictions are bitwise identical to every fixed method.
 
 PAPER REPRODUCTION (synthetic suite; see DESIGN.md §5-6)
   bench table    --branching 2|8|32 [--scale 10] [--only d1,d2] [--json f]
@@ -101,6 +116,7 @@ fn main() -> ExitCode {
         ("train", _) => cmd_train(&opts),
         ("stats", _) => cmd_stats(&opts),
         ("shard", _) => cmd_shard(&opts),
+        ("plan", _) => cmd_plan(&opts),
         ("infer", _) => cmd_infer(&opts),
         ("eval", _) => cmd_eval(&opts),
         ("serve", _) => cmd_serve(&opts),
@@ -247,7 +263,19 @@ fn engine_config(opts: &Opts) -> Result<EngineConfig, anyhow::Error> {
         .transpose()
         .map_err(|e| usage(e))?
         .unwrap_or(IterationMethod::Hash);
-    Ok(EngineConfig { algo, iter })
+    Ok(EngineConfig::new(algo, iter))
+}
+
+/// Planner knobs shared by `infer`/`serve`/`shard`/`plan`: the
+/// calibration budget and the workload hints the cost model plans for.
+fn planner_config(opts: &Opts) -> Result<PlannerConfig, anyhow::Error> {
+    let d = PlannerConfig::default();
+    Ok(PlannerConfig {
+        calibrate: get(opts, "calibrate", 0usize)?,
+        batch_hint: get(opts, "batch-hint", d.batch_hint)?,
+        query_nnz_hint: get(opts, "plan-query-nnz", d.query_nnz_hint)?,
+        seed: get(opts, "seed", d.seed)?,
+    })
 }
 
 fn cmd_synth_model(opts: &Opts) -> Result<(), anyhow::Error> {
@@ -339,12 +367,23 @@ fn cmd_stats(opts: &Opts) -> Result<(), anyhow::Error> {
     let model = load_model(path, false)?;
     println!("{}", model.stats());
     for (l, layer) in model.layers.iter().enumerate() {
+        // Per-layer chunk structure — the planner's cost-model inputs.
+        let nchunks = layer.chunked.num_chunks();
+        let (mut rows, mut row_len) = (0.0f64, 0.0f64);
+        for c in 0..nchunks {
+            let s = layer.chunked.chunk_stats(c);
+            rows += s.rows as f64;
+            row_len += s.avg_row_len;
+        }
         println!(
-            "layer {l}: nodes={} chunks={} nnz={} avg_col_nnz={:.1}",
+            "layer {l}: nodes={} chunks={} nnz={} avg_col_nnz={:.1} \
+             avg_chunk_rows={:.1} avg_row_len={:.2}",
             layer.num_nodes(),
-            layer.chunked.num_chunks(),
+            nchunks,
             layer.csc.nnz(),
-            layer.csc.avg_col_nnz()
+            layer.csc.avg_col_nnz(),
+            rows / nchunks.max(1) as f64,
+            row_len / nchunks.max(1) as f64
         );
     }
     Ok(())
@@ -364,12 +403,26 @@ fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
     let out = opts.get("out").cloned().unwrap_or_else(|| "shards".into());
     let model = load_model(path, false)?;
     println!("model: {}", model.stats());
-    let parts = partition(&model, shards);
+    let mut parts = partition(&model, shards);
     if parts.len() != shards {
         eprintln!(
             "note: clamped to {} shards (the root has only that many children)",
             parts.len()
         );
+    }
+    // --iter auto: resolve (and optionally calibrate) each shard's
+    // kernel plan now, so the shard files serve without re-planning.
+    let config = engine_config(opts)?;
+    if config.iter == IterationMethod::Auto {
+        let pc = planner_config(opts)?;
+        for p in &mut parts {
+            p.plan_auto(config.algo, &pc);
+            println!(
+                "shard {} plan:\n{}",
+                p.spec.shard_id,
+                p.plan.as_ref().unwrap().1.summary()
+            );
+        }
     }
     let paths = save_shards(&parts, &out)?;
     for (s, p) in parts.iter().zip(&paths) {
@@ -388,6 +441,48 @@ fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
     Ok(())
 }
 
+/// Resolves and prints a model's per-chunk kernel plan: the per-layer
+/// method histogram, and the side-index memory the plan needs versus the
+/// fixed `hash` configuration (the planner's measurable savings).
+fn cmd_plan(opts: &Opts) -> Result<(), anyhow::Error> {
+    let path = opts
+        .get("model")
+        .ok_or_else(|| usage("plan requires --model"))?;
+    let model = load_model(path, false)?;
+    println!("model: {}", model.stats());
+    let config = engine_config(opts)?;
+    let algo = config.algo;
+    let pc = planner_config(opts)?;
+    if pc.calibrate > 0 {
+        eprintln!("calibrating cost model on {} synthetic queries ...", pc.calibrate);
+    }
+    let plan = KernelPlan::auto(&model, algo, &pc);
+    println!(
+        "plan (algo {}, query-nnz hint {}, batch hint {}):",
+        if algo == MatmulAlgo::Mscm { "mscm" } else { "baseline" },
+        pc.query_nnz_hint,
+        pc.batch_hint
+    );
+    println!("{}", plan.summary());
+    // The fixed-hash baseline is priced analytically (U32Map sizing is
+    // deterministic in the entry count) — no second model copy, no
+    // full-size side index built just to print this line.
+    let hash_b = mscm_xmr::inference::plan::fixed_hash_side_bytes(&model, algo);
+    let auto_engine = InferenceEngine::new_with_plan(
+        model,
+        EngineConfig::new(algo, IterationMethod::Auto),
+        plan,
+    );
+    let auto_b = auto_engine.side_index_bytes();
+    println!(
+        "side indexes: auto {} KiB vs fixed hash {} KiB ({:.1}% saved)",
+        auto_b / 1024,
+        hash_b / 1024,
+        100.0 * (1.0 - auto_b as f64 / hash_b.max(1) as f64)
+    );
+    Ok(())
+}
+
 fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
     let model = load_model(
         opts.get("model")
@@ -400,7 +495,7 @@ fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
     )?;
     let config = engine_config(opts)?;
     let dim = model.dim;
-    let engine = InferenceEngine::new(model, config);
+    let engine = InferenceEngine::new_with_planner(model, config, &planner_config(opts)?);
     let beam = get(opts, "beam", 10usize)?;
     let topk = get(opts, "topk", 10usize)?;
     let mut ws = engine.workspace();
@@ -450,10 +545,7 @@ fn cmd_eval(opts: &Opts) -> Result<(), anyhow::Error> {
     let beams: Vec<usize> = get_list(opts, "beams", vec![1, 5, 10, 20])?;
     let engine = InferenceEngine::new(
         trained.model.clone(),
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
     );
     let mut ws = engine.workspace();
     for beam in beams {
@@ -524,16 +616,25 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
         ));
     }
 
+    let pc = planner_config(opts)?;
     // A pre-sharded partition on disk skips model loading entirely.
     let (dim, coord) = if let Some(dir) = shards_dir {
         let shards = load_shards(dir, false)?;
-        let engine = Arc::new(ShardedEngine::new(shards, config));
+        // Shards carrying stored plans serve them verbatim under
+        // --iter auto; the rest plan themselves here.
+        let engine = Arc::new(ShardedEngine::new_with_planner(shards, config, &pc));
         eprintln!(
             "serving {} shards from {dir} (L={}, d={})",
             engine.num_shards(),
             engine.num_labels(),
             engine.dim()
         );
+        if config.iter == IterationMethod::Auto {
+            eprintln!(
+                "planned side indexes: {} KiB across shards",
+                engine.side_index_bytes() / 1024
+            );
+        }
         let dim = engine.dim();
         let coord = ShardedCoordinator::start(
             engine,
@@ -563,8 +664,16 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
         };
         let dim = model.dim;
         if num_shards > 0 {
-            let engine = Arc::new(ShardedEngine::from_model(&model, num_shards, config));
+            let engine = Arc::new(ShardedEngine::from_model_with_planner(
+                &model, num_shards, config, &pc,
+            ));
             eprintln!("partitioned into {} shards", engine.num_shards());
+            if config.iter == IterationMethod::Auto {
+                eprintln!(
+                    "planned side indexes: {} KiB across shards",
+                    engine.side_index_bytes() / 1024
+                );
+            }
             let coord = ShardedCoordinator::start(
                 engine,
                 ShardedCoordinatorConfig {
@@ -574,7 +683,14 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
             );
             (dim, Serving::Sharded(coord))
         } else {
-            let engine = Arc::new(InferenceEngine::new(model, config));
+            let engine = Arc::new(InferenceEngine::new_with_planner(model, config, &pc));
+            if config.iter == IterationMethod::Auto {
+                eprintln!("kernel plan:\n{}", engine.plan().summary());
+                eprintln!(
+                    "planned side indexes: {} KiB",
+                    engine.side_index_bytes() / 1024
+                );
+            }
             (dim, Serving::Single(Coordinator::start(engine, base)))
         }
     };

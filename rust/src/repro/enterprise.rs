@@ -48,18 +48,9 @@ pub fn bench_table4(spec: &EnterpriseSpec, opts: &BenchOptions) -> Vec<Table4Row
     let queries: Vec<_> = (0..x.rows).map(|i| x.row_owned(i)).collect();
 
     let configs = [
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::BinarySearch,
-        },
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        },
-        EngineConfig {
-            algo: MatmulAlgo::Baseline,
-            iter: IterationMethod::BinarySearch,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::BinarySearch),
     ];
     let mut rows = Vec::new();
     for beam in [10usize, 20] {

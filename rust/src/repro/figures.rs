@@ -37,10 +37,7 @@ pub fn bench_figure5(opts: &BenchOptions) -> Vec<Figure5Row> {
 
         let ours = InferenceEngine::from_arc(
             Arc::clone(&model),
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::Hash,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
         );
         let mut ws = ours.workspace();
         for q in queries.iter().take(8) {
@@ -122,7 +119,7 @@ pub fn bench_figure6(opts: &BenchOptions, thread_counts: &[usize]) -> Vec<Figure
         let x = synth_queries(&spec, opts.batch_queries, opts.seed);
         for iter in [IterationMethod::BinarySearch, IterationMethod::Hash] {
             for algo in MatmulAlgo::ALL {
-                let config = EngineConfig { algo, iter };
+                let config = EngineConfig::new(algo, iter);
                 let engine = InferenceEngine::from_arc(Arc::clone(&model), config);
                 for &threads in thread_counts {
                     // warmup + measure

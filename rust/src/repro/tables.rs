@@ -283,23 +283,20 @@ pub fn table6(opts: &BenchOptions) {
             IterationMethod::DenseLookup => {
                 let engine = InferenceEngine::from_arc(
                     Arc::clone(&model),
-                    EngineConfig {
-                        algo: MatmulAlgo::Mscm,
-                        iter: IterationMethod::DenseLookup,
-                    },
+                    EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup),
                 );
                 engine.workspace().memory_bytes()
             }
+            // Auto's overhead is plan-dependent (the whole point of the
+            // planner); Table 6 only tabulates the fixed methods.
+            IterationMethod::Auto => unreachable!("Table 6 rows are fixed methods"),
         };
         println!("{:<20}{:<44}{:>14} KiB", iter.label(), complexity, overhead / 1024);
     }
     // The per-column baseline-hash overhead MSCM amortizes away:
     let engine = InferenceEngine::from_arc(
         Arc::clone(&model),
-        EngineConfig {
-            algo: MatmulAlgo::Baseline,
-            iter: IterationMethod::Hash,
-        },
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::Hash),
     );
     println!(
         "\n(for contrast) per-column hash side index (NapkinXC scheme): {} KiB",

@@ -17,7 +17,8 @@
 
 use super::partition::{ShardModel, ShardSpec};
 use crate::inference::{
-    rank_into, select_top, EngineConfig, InferenceEngine, Prediction, Workspace,
+    rank_into, select_top, EngineConfig, InferenceEngine, IterationMethod, PlannerConfig,
+    Prediction, Workspace,
 };
 use crate::sparse::{CsrMatrix, SparseVec};
 
@@ -117,9 +118,23 @@ pub struct ShardedEngine {
 
 impl ShardedEngine {
     /// Builds per-shard engines (each constructing whatever side indices
-    /// `config` needs). `shards` must be one complete partition; shards
-    /// may arrive in any order.
+    /// its plan needs). `shards` must be one complete partition; shards
+    /// may arrive in any order. Under [`IterationMethod::Auto`], a shard
+    /// carrying a stored plan (shard files persist them) serves it as-is
+    /// — no re-planning, no re-calibration; shards without one plan
+    /// themselves over their own chunks with the default
+    /// [`PlannerConfig`].
     pub fn new(shards: Vec<ShardModel>, config: EngineConfig) -> Self {
+        Self::new_with_planner(shards, config, &PlannerConfig::default())
+    }
+
+    /// [`ShardedEngine::new`] with explicit planner inputs for shards
+    /// that need a fresh plan resolved.
+    pub fn new_with_planner(
+        shards: Vec<ShardModel>,
+        config: EngineConfig,
+        pc: &PlannerConfig,
+    ) -> Self {
         assert!(!shards.is_empty(), "need at least one shard");
         let mut shards = shards;
         shards.sort_by_key(|s| s.spec.shard_id);
@@ -141,8 +156,19 @@ impl ShardedEngine {
             assert_eq!(s.model.depth(), depth, "shard depth mismatch");
             assert_eq!(s.spec.label_offset, next_label, "label gap before shard {i}");
             next_label += s.spec.num_labels;
+            // A stored plan is served only when it was costed for the
+            // serving algo — the cost shapes differ per algo, so an
+            // MSCM-costed plan driving the baseline kernels (or vice
+            // versa) would be systematically mis-planned. Mismatches
+            // fall through to a fresh per-shard resolution.
+            let engine = match (config.iter, s.plan) {
+                (IterationMethod::Auto, Some((algo, plan))) if algo == config.algo => {
+                    InferenceEngine::new_with_plan(s.model, config, plan)
+                }
+                _ => InferenceEngine::new_with_planner(s.model, config, pc),
+            };
             units.push(ShardUnit {
-                engine: InferenceEngine::new(s.model, config),
+                engine,
                 spec: s.spec,
                 layer_offsets: s.layer_offsets,
             });
@@ -163,6 +189,16 @@ impl ShardedEngine {
         config: EngineConfig,
     ) -> Self {
         Self::new(super::partition(model, num_shards), config)
+    }
+
+    /// [`ShardedEngine::from_model`] with explicit planner inputs.
+    pub fn from_model_with_planner(
+        model: &crate::tree::XmrModel,
+        num_shards: usize,
+        config: EngineConfig,
+        pc: &PlannerConfig,
+    ) -> Self {
+        Self::new_with_planner(super::partition(model, num_shards), config, pc)
     }
 
     /// Number of shards.
@@ -403,6 +439,12 @@ impl ShardedEngine {
             .map(|u| u.engine.model().stats().chunked_bytes)
             .sum()
     }
+
+    /// Side-index bytes across all shards, one number
+    /// ([`InferenceEngine::side_index_bytes`] summed).
+    pub fn side_index_bytes(&self) -> usize {
+        self.units.iter().map(|u| u.engine.side_index_bytes()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -444,10 +486,7 @@ mod tests {
     #[test]
     fn batch_gather_matches_online_gather() {
         let m = tiny_model(24, 3, 3, 77);
-        let cfg = EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        };
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
         let sharded = ShardedEngine::from_model(&m, 3, cfg);
         let mut rng = Rng::seed_from_u64(4);
         let rows: Vec<SparseVec> = (0..9).map(|_| rand_query(&mut rng, 24)).collect();
@@ -466,10 +505,7 @@ mod tests {
         // and batches of changing size; recycled rounds must never leak
         // state between batches.
         let m = tiny_model(24, 4, 3, 91);
-        let cfg = EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::BinarySearch,
-        };
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch);
         let reference = InferenceEngine::new(m.clone(), cfg);
         let sharded = ShardedEngine::from_model(&m, 4, cfg);
         let mut wss = sharded.workspaces();
@@ -520,15 +556,39 @@ mod tests {
     }
 
     #[test]
+    fn stored_plans_are_served_verbatim() {
+        // Pre-planned shards must serve their stored plan (no
+        // re-planning) and stay bitwise exact against the unsharded
+        // engine under any fixed method.
+        let m = tiny_model(24, 4, 3, 61);
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+        let mut shards = crate::shard::partition(&m, 3);
+        for s in &mut shards {
+            s.plan_auto(MatmulAlgo::Mscm, &crate::inference::PlannerConfig::default());
+        }
+        let plans: Vec<_> = shards.iter().map(|s| s.plan.clone().unwrap().1).collect();
+        let sharded = ShardedEngine::new(shards, cfg);
+        for (s, want) in plans.iter().enumerate() {
+            assert_eq!(sharded.shard_engine(s).plan().as_ref(), want, "shard {s}");
+        }
+        let reference = InferenceEngine::new(
+            m,
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers),
+        );
+        let mut rng = Rng::seed_from_u64(9);
+        for qi in 0..10 {
+            let q = rand_query(&mut rng, 24);
+            assert_eq!(sharded.predict(&q, 3, 5), reference.predict(&q, 3, 5), "q={qi}");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "incomplete partition")]
     fn missing_shard_panics() {
         let m = tiny_model(16, 4, 2, 3);
         let mut shards = crate::shard::partition(&m, 4);
         shards.remove(1);
-        let cfg = EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::MarchingPointers,
-        };
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers);
         ShardedEngine::new(shards, cfg);
     }
 }

@@ -13,14 +13,23 @@
 //! depth         u64
 //! layer_offsets depth x u32   global column start per layer
 //! model body    (identical to the MSCMXMR1 payload after its magic)
+//! has_plan      u64  (0 = none; 1 = plan costed for MSCM; 2 = plan
+//!                     costed for the baseline algo; absent in
+//!                     pre-planner files — EOF here reads as "no plan")
+//! plan          if has_plan: per layer, num_chunks u64 then
+//!               num_chunks x u32 method codes (IterationMethod::index)
 //! ```
 //! The body is read/written by the same codec as whole models, so format
-//! evolution stays in one place.
+//! evolution stays in one place. The trailing kernel-plan section lets a
+//! planned (and possibly timing-calibrated) model load and serve without
+//! re-planning — plans are per-shard, over the shard's own chunks.
 
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 use super::partition::{ShardModel, ShardSpec};
+use crate::inference::plan::{KernelPlan, LayerPlan};
+use crate::inference::{IterationMethod, MatmulAlgo};
 use crate::tree::{read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64};
 
 const SHARD_MAGIC: u64 = 0x4d53_434d_584d_5232;
@@ -29,7 +38,7 @@ fn invalid(msg: impl Into<String>) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.into())
 }
 
-/// Saves one shard to `path`.
+/// Saves one shard (kernel plan included, when resolved) to `path`.
 pub fn save_shard(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> {
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     write_u64(&mut w, SHARD_MAGIC)?;
@@ -42,7 +51,41 @@ pub fn save_shard(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> 
     write_u64(&mut w, shard.layer_offsets.len() as u64)?;
     write_u32s(&mut w, &shard.layer_offsets)?;
     write_model_body(&mut w, &shard.model)?;
+    match &shard.plan {
+        None => write_u64(&mut w, 0)?,
+        Some((algo, plan)) => {
+            write_u64(
+                &mut w,
+                match algo {
+                    MatmulAlgo::Mscm => 1,
+                    MatmulAlgo::Baseline => 2,
+                },
+            )?;
+            for layer in &plan.layers {
+                write_u64(&mut w, layer.methods.len() as u64)?;
+                let codes: Vec<u32> = layer.methods.iter().map(|m| m.index() as u32).collect();
+                write_u32s(&mut w, &codes)?;
+            }
+        }
+    }
     w.flush()
+}
+
+/// Reads the trailing kernel-plan section (`depth` layer rows).
+fn read_plan(r: &mut impl Read, depth: usize) -> io::Result<KernelPlan> {
+    let mut layers = Vec::with_capacity(depth);
+    for li in 0..depth {
+        let n = read_u64(r)? as usize;
+        let codes = read_u32s(r, n)?;
+        let mut methods = Vec::with_capacity(n);
+        for c in codes {
+            methods.push(IterationMethod::from_index(c as usize).ok_or_else(|| {
+                invalid(format!("layer {li}: unknown iteration-method code {c}"))
+            })?);
+        }
+        layers.push(LayerPlan { methods });
+    }
+    Ok(KernelPlan { layers })
 }
 
 /// Loads one shard from `path` (hash row maps rebuilt when
@@ -63,6 +106,21 @@ pub fn load_shard(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<Sha
     let depth = read_u64(&mut r)? as usize;
     let layer_offsets = read_u32s(&mut r, depth)?;
     let model = read_model_body(&mut r, with_row_maps)?;
+    let plan = match read_u64(&mut r) {
+        // Shard files written before the planner end right after the
+        // model body (same magic): treat them as carrying no plan.
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => None,
+        Err(e) => return Err(e),
+        Ok(0) => None,
+        Ok(1) => Some((MatmulAlgo::Mscm, read_plan(&mut r, depth)?)),
+        Ok(2) => Some((MatmulAlgo::Baseline, read_plan(&mut r, depth)?)),
+        Ok(v) => return Err(invalid(format!("bad plan-presence flag {v}"))),
+    };
+    if let Some((_, p)) = &plan {
+        if !p.matches(&model) {
+            return Err(invalid("stored kernel plan does not fit the model body"));
+        }
+    }
     if spec.shard_id >= spec.num_shards {
         return Err(invalid(format!(
             "shard id {} out of range for {} shards",
@@ -91,6 +149,7 @@ pub fn load_shard(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<Sha
         spec,
         layer_offsets,
         model,
+        plan,
     })
 }
 
@@ -192,6 +251,60 @@ mod tests {
                 assert_eq!(la.chunked.chunk_offsets, lb.chunked.chunk_offsets);
             }
         }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn plan_round_trips_in_envelope() {
+        use crate::inference::PlannerConfig;
+        let m = tiny_model(20, 4, 3, 22);
+        let mut shards = partition(&m, 2);
+        shards[0].plan_auto(MatmulAlgo::Mscm, &PlannerConfig::default());
+        // shard 1 stays unplanned: mixed directories must round-trip too
+        let dir = crate::util::temp_dir("shard-io-plan");
+        save_shards(&shards, &dir).unwrap();
+        let loaded = load_shards(&dir, false).unwrap();
+        assert!(loaded[0].plan.is_some());
+        assert_eq!(loaded[0].plan, shards[0].plan);
+        assert!(loaded[1].plan.is_none());
+        let (algo, plan) = loaded[0].plan.as_ref().unwrap();
+        assert_eq!(*algo, MatmulAlgo::Mscm);
+        assert!(plan.matches(&loaded[0].model));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn baseline_costed_plan_keeps_its_algo_tag() {
+        use crate::inference::PlannerConfig;
+        let m = tiny_model(16, 3, 2, 4);
+        let mut shards = partition(&m, 2);
+        for s in &mut shards {
+            s.plan_auto(MatmulAlgo::Baseline, &PlannerConfig::default());
+        }
+        let dir = crate::util::temp_dir("shard-io-plan-algo");
+        save_shards(&shards, &dir).unwrap();
+        for s in load_shards(&dir, false).unwrap() {
+            assert_eq!(s.plan.as_ref().unwrap().0, MatmulAlgo::Baseline);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn pre_planner_shard_files_still_load() {
+        // A file written before the plan section existed ends right
+        // after the model body; chopping the trailing flag off a fresh
+        // plan-less file reproduces that layout exactly.
+        let m = tiny_model(16, 3, 2, 8);
+        let shards = partition(&m, 2);
+        let dir = crate::util::temp_dir("shard-io-preplan");
+        let path = shard_file_name(&dir, 0, 2);
+        std::fs::create_dir_all(&dir).unwrap();
+        save_shard(&shards[0], &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        let loaded = load_shard(&path, false).unwrap();
+        assert!(loaded.plan.is_none());
+        assert_eq!(loaded.spec, shards[0].spec);
         std::fs::remove_dir_all(dir).ok();
     }
 

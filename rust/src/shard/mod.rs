@@ -10,7 +10,17 @@
 //!
 //! - [`partition`] splits an [`XmrModel`](crate::tree::XmrModel) into
 //!   [`ShardModel`]s — each wraps a self-contained `XmrModel` over a
-//!   contiguous root-child range plus the remap back to global ids.
+//!   contiguous root-child range plus the remap back to global ids. Cuts
+//!   are balanced by per-subtree weight nnz ([`subtree_nnz`]) rather than
+//!   root-child count, so shard residency stays even on skewed trees.
+//!   Each shard optionally carries its own resolved
+//!   [`KernelPlan`](crate::inference::KernelPlan)
+//!   ([`ShardModel::plan_auto`]) — plans are per-shard, computed over the
+//!   shard's own chunks (which survive the label remap verbatim), persist
+//!   inside the shard file tagged with the algo they were costed for,
+//!   and are served as-is under `--iter auto` with the same algo, so a
+//!   calibrated model never re-plans at load (an algo mismatch falls
+//!   back to a fresh resolution).
 //! - [`save_shard`] / [`load_shard`] (+ the `save_shards`/[`load_shards`]
 //!   directory helpers) persist shards in a versioned extension of the
 //!   [`crate::tree`] binary format (magic `MSCMXMR2`, a shard-index
@@ -68,5 +78,5 @@ mod serve;
 
 pub use engine::{GatherArena, ShardRound, ShardedEngine};
 pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
-pub use partition::{partition, ShardModel, ShardSpec};
+pub use partition::{partition, subtree_nnz, ShardModel, ShardSpec};
 pub use serve::{ShardedCoordinator, ShardedCoordinatorConfig};

@@ -1,7 +1,13 @@
 //! Model partitioning: contiguous root-subtree groups → standalone shard
 //! models plus the remap back to the global id spaces.
+//!
+//! Cuts are placed by **per-subtree weight nnz** (the bytes a shard must
+//! keep resident), not by root-child count: on skewed trees a count-even
+//! split can leave one shard holding most of the model. The weighted cut
+//! changes only *where* the contiguous boundaries fall — every exactness
+//! argument of [`crate::shard`] is boundary-agnostic.
 
-use crate::data::synthetic::even_offsets;
+use crate::inference::{KernelPlan, MatmulAlgo, PlannerConfig};
 use crate::tree::{Layer, XmrModel};
 
 /// Identity of one shard within a partition.
@@ -36,6 +42,15 @@ pub struct ShardModel {
     /// The shard's own tree model (same feature dimension `d`, same
     /// depth, a contiguous column slice of every layer).
     pub model: XmrModel,
+    /// Optional pre-resolved kernel plan over this shard's own chunks,
+    /// paired with the masked-matmul algorithm it was costed for (the
+    /// cost shapes differ per algo, so a stored plan is only served
+    /// under the same algo). Serialized with the shard, so a planned
+    /// model loads without re-calibration. Plans are per-shard: the
+    /// chunk structure survives `partition`'s label remap verbatim, so a
+    /// plan computed on the shard is exactly a plan over the global
+    /// chunks it owns.
+    pub plan: Option<(MatmulAlgo, KernelPlan)>,
 }
 
 impl ShardModel {
@@ -50,10 +65,70 @@ impl ShardModel {
     pub fn global_label(&self, local: u32) -> u32 {
         local + self.spec.label_offset as u32
     }
+
+    /// Resolves and stores this shard's kernel plan for `algo` (what
+    /// `shard --iter auto` persists). Planning is a read-only pass over
+    /// the shard's chunk statistics plus the optional timing calibration.
+    pub fn plan_auto(&mut self, algo: MatmulAlgo, pc: &PlannerConfig) {
+        self.plan = Some((algo, KernelPlan::auto(&self.model, algo, pc)));
+    }
+}
+
+/// Weight nnz of each root child's whole subtree (every layer's column
+/// slice under it) — the residency weight the partition balances.
+pub fn subtree_nnz(model: &XmrModel) -> Vec<u64> {
+    let root_children = model.layers[0].num_nodes();
+    (0..root_children)
+        .map(|r| {
+            let (mut lo, mut hi) = (r, r + 1);
+            let mut total = 0u64;
+            for (li, layer) in model.layers.iter().enumerate() {
+                let (c0, c1) = if li == 0 {
+                    (lo, hi)
+                } else {
+                    let offs = &layer.chunked.chunk_offsets;
+                    (offs[lo] as usize, offs[hi] as usize)
+                };
+                total += (layer.csc.indptr[c1] - layer.csc.indptr[c0]) as u64;
+                (lo, hi) = (c0, c1);
+            }
+            total
+        })
+        .collect()
+}
+
+/// Contiguous cuts of `weights.len()` items into `parts` groups with
+/// near-equal weight sums: boundary `p` is the first index where the
+/// cumulative weight reaches `p/parts` of the total, clamped so every
+/// group keeps at least one item.
+fn balanced_cuts(weights: &[u64], parts: usize) -> Vec<u32> {
+    let n = weights.len();
+    let s = parts.min(n).max(1);
+    let total: u128 = weights.iter().map(|&w| w as u128).sum();
+    let mut cum = 0u128;
+    let mut cuts = Vec::with_capacity(s + 1);
+    cuts.push(0u32);
+    let mut i = 0usize;
+    for p in 1..s {
+        let target = total * p as u128 / s as u128;
+        while cum < target && i < n {
+            cum += weights[i] as u128;
+            i += 1;
+        }
+        // >= 1 item per group, on both sides of the cut.
+        let prev = *cuts.last().unwrap() as usize;
+        i = i.clamp(prev + 1, n - (s - p));
+        // Keep `cum` consistent with the clamped boundary.
+        cum = weights[..i].iter().map(|&w| w as u128).sum();
+        cuts.push(i as u32);
+    }
+    cuts.push(n as u32);
+    cuts
 }
 
 /// Splits `model` into (at most) `num_shards` standalone shard models by
-/// near-even contiguous grouping of the root's children.
+/// contiguous grouping of the root's children, **balanced by subtree
+/// weight nnz** so shard residency stays even on skewed trees.
 ///
 /// Each shard's layer `l` is the verbatim column slice covering the
 /// shard's subtrees — entries are copied bit-for-bit and sibling chunks
@@ -70,7 +145,7 @@ pub fn partition(model: &XmrModel, num_shards: usize) -> Vec<ShardModel> {
     assert!(num_shards >= 1, "need at least one shard");
     let root_children = model.layers[0].num_nodes();
     let s = num_shards.min(root_children);
-    let bounds = even_offsets(root_children, s);
+    let bounds = balanced_cuts(&subtree_nnz(model), s);
     let mut shards = Vec::with_capacity(s);
     for i in 0..s {
         // Node range of the previous layer, driving this layer's chunk
@@ -101,7 +176,7 @@ pub fn partition(model: &XmrModel, num_shards: usize) -> Vec<ShardModel> {
                     .collect()
             };
             // Row maps are not built here; engines build whatever side
-            // indices their configuration needs.
+            // indices their plan needs.
             layers.push(Layer::new(csc, &offsets, false));
             (lo, hi) = (c0, c1);
         }
@@ -118,6 +193,7 @@ pub fn partition(model: &XmrModel, num_shards: usize) -> Vec<ShardModel> {
             spec,
             layer_offsets,
             model: XmrModel::new(model.dim, layers),
+            plan: None,
         });
     }
     shards
@@ -126,6 +202,7 @@ pub fn partition(model: &XmrModel, num_shards: usize) -> Vec<ShardModel> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synthetic::{even_offsets, synth_model_skewed, DatasetSpec};
     use crate::tree::test_util::tiny_model;
 
     #[test]
@@ -208,5 +285,62 @@ mod tests {
         for (i, sh) in shards.iter().enumerate() {
             assert_eq!(sh.spec.root_hi - sh.spec.root_lo, 1, "shard {i}");
         }
+    }
+
+    #[test]
+    fn subtree_nnz_sums_to_model_nnz() {
+        let m = tiny_model(24, 4, 3, 33);
+        let w = subtree_nnz(&m);
+        assert_eq!(w.len(), 4);
+        let total: u64 = w.iter().sum();
+        let model_total: u64 = m.layers.iter().map(|l| l.csc.nnz() as u64).sum();
+        assert_eq!(total, model_total);
+    }
+
+    #[test]
+    fn weighted_cuts_balance_residency_on_skewed_trees() {
+        // A geometrically skewed tree: the count-even split must leave a
+        // far worse max/min shard-nnz ratio than the weighted cut.
+        let spec = DatasetSpec {
+            name: "skewed-rebalance",
+            dim: 1_500,
+            num_labels: 4_000,
+            paper_dim: 0,
+            paper_labels: 0,
+            query_nnz: 20,
+            col_nnz: 12,
+            sibling_overlap: 0.6,
+            zipf_theta: 1.0,
+        };
+        let m = synth_model_skewed(&spec, 16, 77, 0.8); // 16 root children
+        let w = subtree_nnz(&m);
+        let r = w.len();
+        assert!(r >= 8, "want many root children, got {r}");
+        let s = 4usize;
+        let group = |bounds: &[u32]| -> Vec<u64> {
+            (0..s)
+                .map(|i| w[bounds[i] as usize..bounds[i + 1] as usize].iter().sum())
+                .collect()
+        };
+        let ratio = |g: &[u64]| -> f64 {
+            let max = *g.iter().max().unwrap() as f64;
+            let min = *g.iter().min().unwrap() as f64;
+            max / min.max(1.0)
+        };
+        let even = ratio(&group(&even_offsets(r, s)));
+        let shards = partition(&m, s);
+        let actual: Vec<u64> = shards
+            .iter()
+            .map(|sh| sh.model.layers.iter().map(|l| l.csc.nnz() as u64).sum())
+            .collect();
+        let weighted = ratio(&actual);
+        assert!(
+            weighted < even * 0.75,
+            "weighted cut must improve balance: weighted {weighted:.2} vs even {even:.2} (w={w:?})"
+        );
+        // the per-shard models really carry the balanced slices
+        let total: u64 = actual.iter().sum();
+        let model_total: u64 = m.layers.iter().map(|l| l.csc.nnz() as u64).sum();
+        assert_eq!(total, model_total);
     }
 }

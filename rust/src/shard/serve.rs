@@ -343,10 +343,7 @@ mod tests {
     #[test]
     fn sharded_serving_matches_unsharded_engine() {
         let model = tiny_model(32, 4, 3, 55);
-        let cfg = EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        };
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
         let reference = InferenceEngine::new(model.clone(), cfg);
         let engine = Arc::new(ShardedEngine::from_model(&model, 4, cfg));
         let coord = ShardedCoordinator::start(
@@ -385,10 +382,7 @@ mod tests {
     #[test]
     fn stop_then_shutdown_is_clean() {
         let model = tiny_model(16, 4, 2, 9);
-        let cfg = EngineConfig {
-            algo: MatmulAlgo::Baseline,
-            iter: IterationMethod::MarchingPointers,
-        };
+        let cfg = EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::MarchingPointers);
         let engine = Arc::new(ShardedEngine::from_model(&model, 2, cfg));
         let coord = ShardedCoordinator::start(engine, ShardedCoordinatorConfig::default());
         let mut rng = Rng::seed_from_u64(1);

@@ -36,6 +36,21 @@ pub struct Chunk {
     pub row_map: Option<U32Map>,
 }
 
+/// Cheap structural statistics of one chunk — the kernel planner's
+/// inputs ([`crate::inference::plan`]). All fields are O(1) reads off the
+/// build-time layout; nothing is recomputed per query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkStats {
+    /// Chunk width `B` (sibling columns).
+    pub width: usize,
+    /// Total stored entries.
+    pub nnz: usize,
+    /// Rows touched `|S(K)|`.
+    pub rows: usize,
+    /// Mean stored entries per touched row (`nnz / rows`, 0 when empty).
+    pub avg_row_len: f64,
+}
+
 impl Chunk {
     /// Number of stored nonzero rows `|S(K)|`.
     #[inline]
@@ -47,6 +62,22 @@ impl Chunk {
     #[inline]
     pub fn nnz(&self) -> usize {
         self.values.len()
+    }
+
+    /// Structural statistics (planner inputs).
+    #[inline]
+    pub fn stats(&self) -> ChunkStats {
+        let rows = self.nnz_rows();
+        ChunkStats {
+            width: self.ncols as usize,
+            nnz: self.nnz(),
+            rows,
+            avg_row_len: if rows == 0 {
+                0.0
+            } else {
+                self.nnz() as f64 / rows as f64
+            },
+        }
     }
 
     /// Entries `(within-chunk col, value)` of the stored row at position
@@ -218,6 +249,12 @@ impl ChunkedMatrix {
         self.chunk_offsets.len() * 4 + self.chunks.iter().map(|c| c.memory_bytes()).sum::<usize>()
     }
 
+    /// Structural statistics of chunk `c` (planner inputs).
+    #[inline]
+    pub fn chunk_stats(&self, c: usize) -> ChunkStats {
+        self.chunks[c].stats()
+    }
+
     /// Builds hash indices on all chunks.
     pub fn build_row_maps(&mut self) {
         for c in &mut self.chunks {
@@ -282,6 +319,24 @@ mod tests {
         assert_eq!(m.to_csc(), csc);
         assert_eq!(m.chunk_width(0), 1);
         assert_eq!(m.chunk_width(1), 3);
+    }
+
+    #[test]
+    fn chunk_stats_reflect_layout() {
+        let m = ChunkedMatrix::from_csc(&sample_csc(), &[0, 2, 4], false);
+        let s0 = m.chunk_stats(0);
+        assert_eq!(s0.width, 2);
+        assert_eq!(s0.nnz, 5);
+        assert_eq!(s0.rows, 3);
+        assert!((s0.avg_row_len - 5.0 / 3.0).abs() < 1e-12);
+        let empty = ChunkedMatrix::from_csc(
+            &CscMatrix::from_cols(vec![SparseVec::new()], 4),
+            &[0, 1],
+            false,
+        );
+        let se = empty.chunk_stats(0);
+        assert_eq!((se.rows, se.nnz), (0, 0));
+        assert_eq!(se.avg_row_len, 0.0);
     }
 
     #[test]

@@ -45,6 +45,26 @@ impl U32Map {
         }
     }
 
+    /// A one-slot always-empty map (8 bytes): the placeholder the
+    /// plan-driven baseline hash index uses for columns whose chunk is
+    /// not hash-planned. Lookups return `None`; inserting trips the
+    /// overfull debug assert — use [`U32Map::with_capacity`] for live
+    /// maps.
+    pub fn empty() -> Self {
+        Self {
+            slots: vec![pack(EMPTY, 0)],
+            mask: 0,
+            len: 0,
+        }
+    }
+
+    /// Bytes a map sized for `n` entries occupies ([`U32Map::with_capacity`]
+    /// sizing) — lets the planner price the fixed-hash side index
+    /// analytically, without constructing a single map.
+    pub fn capacity_bytes_for(n: usize) -> usize {
+        (2 * n.max(2)).next_power_of_two() * 8
+    }
+
     /// Builds a map from `(key, value)` pairs.
     pub fn from_pairs(pairs: impl ExactSizeIterator<Item = (u32, u32)>) -> Self {
         let mut m = Self::with_capacity(pairs.len());
@@ -67,12 +87,19 @@ impl U32Map {
     /// Inserts or overwrites `key -> val`. Keys must not be `u32::MAX`.
     pub fn insert(&mut self, key: u32, val: u32) {
         debug_assert_ne!(key, EMPTY);
-        debug_assert!(self.len * 2 <= self.slots.len(), "U32Map overfull");
         let mut slot = fib_hash(key, self.mask) as usize;
         loop {
             let k = (self.slots[slot] >> 32) as u32;
             if k == EMPTY || k == key {
                 if k == EMPTY {
+                    // <= 50% load after a *new* insert (overwrites are
+                    // always fine) — also rejects inserting into a
+                    // one-slot `empty()` placeholder, whose probe ring
+                    // could otherwise never terminate on a miss.
+                    debug_assert!(
+                        (self.len + 1) * 2 <= self.slots.len(),
+                        "U32Map overfull (placeholder maps reject inserts)"
+                    );
                     self.len += 1;
                 }
                 self.slots[slot] = pack(key, val);
@@ -141,6 +168,20 @@ mod tests {
     }
 
     #[test]
+    fn overwrite_at_full_load_is_legal() {
+        // with_capacity(2) -> 4 slots; two inserts reach the 50% cap.
+        // Overwriting must not trip the new-insert load assert.
+        let mut m = U32Map::with_capacity(2);
+        m.insert(1, 10);
+        m.insert(2, 20);
+        m.insert(1, 11);
+        m.insert(2, 21);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(1), Some(11));
+        assert_eq!(m.get(2), Some(21));
+    }
+
+    #[test]
     fn from_pairs_and_iter() {
         let m = U32Map::from_pairs(vec![(1, 10), (2, 20), (9, 90)].into_iter());
         let mut got: Vec<_> = m.iter().collect();
@@ -166,6 +207,32 @@ mod tests {
         let m = U32Map::with_capacity(0);
         assert_eq!(m.get(1), None);
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn empty_placeholder_is_tiny_and_inert() {
+        let m = U32Map::empty();
+        assert_eq!(m.memory_bytes(), 8);
+        assert!(m.is_empty());
+        for k in [0u32, 1, 7, u32::MAX - 1] {
+            assert_eq!(m.get(k), None);
+        }
+        assert_eq!(m.iter().count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overfull")]
+    #[cfg(debug_assertions)]
+    fn empty_placeholder_rejects_insert() {
+        U32Map::empty().insert(5, 1);
+    }
+
+    #[test]
+    fn capacity_bytes_match_built_maps() {
+        for n in [0usize, 1, 2, 3, 7, 8, 60, 1000] {
+            let m = U32Map::from_pairs((0..n as u32).map(|i| (i * 3 + 1, i)));
+            assert_eq!(m.memory_bytes(), U32Map::capacity_bytes_for(n), "n={n}");
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod hashmap;
 pub mod iterators;
 pub mod vec;
 
-pub use chunked::{Chunk, ChunkedMatrix};
+pub use chunked::{Chunk, ChunkStats, ChunkedMatrix};
 pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use hashmap::U32Map;

@@ -96,10 +96,7 @@ mod tests {
         let perm = trained.label_perm.clone();
         let engine = InferenceEngine::new(
             trained.model,
-            EngineConfig {
-                algo: MatmulAlgo::Mscm,
-                iter: IterationMethod::Hash,
-            },
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
         );
         let mut hits_at_3 = 0;
         for i in train_n..train_n + test_n {

@@ -87,15 +87,20 @@ fn spec() -> DatasetSpec {
 }
 
 /// MSCM × {marching, binary} is the minimum the invariant demands; the
-/// other two MSCM iterators and the baseline ride along since the arenas
-/// are shared code.
+/// other two MSCM iterators, the baseline and the planner's `Auto` ride
+/// along since the arenas are shared code. `Auto` additionally pins that
+/// the per-chunk plan lookup (a slice index into the resolved
+/// `KernelPlan`) never allocates in the hot loop — planning and
+/// side-index construction happen once, at engine build.
 fn zero_alloc_configs() -> Vec<EngineConfig> {
     vec![
-        EngineConfig { algo: MatmulAlgo::Mscm, iter: IterationMethod::MarchingPointers },
-        EngineConfig { algo: MatmulAlgo::Mscm, iter: IterationMethod::BinarySearch },
-        EngineConfig { algo: MatmulAlgo::Mscm, iter: IterationMethod::Hash },
-        EngineConfig { algo: MatmulAlgo::Mscm, iter: IterationMethod::DenseLookup },
-        EngineConfig { algo: MatmulAlgo::Baseline, iter: IterationMethod::MarchingPointers },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::MarchingPointers),
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::Auto),
     ]
 }
 
@@ -147,8 +152,9 @@ fn steady_state_hot_paths_do_not_allocate() {
 
     // --- in-process sharded layer-sync rounds: zero ---
     for cfg in [
-        EngineConfig { algo: MatmulAlgo::Mscm, iter: IterationMethod::MarchingPointers },
-        EngineConfig { algo: MatmulAlgo::Mscm, iter: IterationMethod::BinarySearch },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
     ] {
         let sharded = ShardedEngine::from_model(&model, 4, cfg);
         let mut wss = sharded.workspaces();
@@ -185,7 +191,7 @@ fn steady_state_hot_paths_do_not_allocate() {
     // layer × shard round built fresh nested beam/candidate vectors and
     // the per-batch query rows were cloned — at depth 4 × 4 shards that
     // alone blew well past this bound.
-    let cfg = EngineConfig { algo: MatmulAlgo::Mscm, iter: IterationMethod::BinarySearch };
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch);
     let engine = Arc::new(ShardedEngine::from_model(&model, 4, cfg));
     let coord = ShardedCoordinator::start(
         engine,

@@ -29,10 +29,7 @@ fn beam_larger_than_tree_is_exhaustive() {
     let model = synth_model(&spec, 4, 1);
     let engine = InferenceEngine::new(
         model,
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::BinarySearch,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
     );
     let q = synth_queries(&spec, 1, 2).row_owned(0);
     // beam far beyond any layer width: must return all 64 labels ranked
@@ -49,10 +46,7 @@ fn topk_larger_than_beam_returns_beam() {
     let model = synth_model(&spec, 4, 3);
     let engine = InferenceEngine::new(
         model,
-        EngineConfig {
-            algo: MatmulAlgo::Baseline,
-            iter: IterationMethod::DenseLookup,
-        },
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::DenseLookup),
     );
     let q = synth_queries(&spec, 1, 4).row_owned(0);
     let preds = engine.predict(&q, 3, 50);
@@ -180,10 +174,7 @@ fn deep_tree_many_layers() {
     assert_eq!(model.depth(), 8);
     let engine = InferenceEngine::new(
         model,
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
     );
     let x = synth_queries(&spec, 16, 6);
     let out = engine.predict_batch(&x, 8, 8);

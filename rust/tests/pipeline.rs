@@ -58,10 +58,7 @@ fn corpus_to_serving_round_trip() {
     // serve through the coordinator and check quality end to end
     let engine = Arc::new(InferenceEngine::new(
         model,
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::DenseLookup,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup),
     ));
     let coord = Coordinator::start(
         Arc::clone(&engine),
@@ -109,10 +106,7 @@ fn napkinxc_agrees_with_engine_on_trained_model() {
     let model = Arc::new(trained.model);
     let ours = InferenceEngine::from_arc(
         Arc::clone(&model),
-        EngineConfig {
-            algo: MatmulAlgo::Mscm,
-            iter: IterationMethod::Hash,
-        },
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash),
     );
     let napkin = NapkinXcEngine::new(Arc::clone(&model));
     for i in 0..30 {
