@@ -1,0 +1,142 @@
+//! Transport overhead benchmark: loopback remote scatter-gather versus
+//! the in-process sharded engine, per shard count, with and without
+//! speculative expansion — the numbers that keep the wire protocol's
+//! per-round cost honest. Emits `BENCH_transport.json` (override with
+//! `--json <path>`), including the per-layer-round overhead each
+//! transport adds over the in-process engine and the measured network
+//! rounds per query (speculation should cut them to ceil(depth / 2)).
+//!
+//! `cargo bench --bench transport [-- --labels 20000 --dim 20000 --queries 256]`
+
+use std::sync::atomic::Ordering;
+
+use mscm_xmr::data::enterprise::EnterpriseSpec;
+use mscm_xmr::inference::{EngineConfig, IterationMethod, MatmulAlgo};
+use mscm_xmr::shard::{
+    partition, GatherArena, RemoteConfig, RemoteGather, ShardHost, ShardHostConfig, ShardedEngine,
+};
+use mscm_xmr::util::{bench_ms, BenchReport, Json};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let spec = EnterpriseSpec {
+        num_labels: get("--labels", 20_000),
+        dim: get("--dim", 20_000),
+        ..Default::default()
+    };
+    let n = get("--queries", 256);
+    let beam = get("--beam", 10);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    eprintln!("synthesizing L={} d={} model ...", spec.num_labels, spec.dim);
+    let model = spec.build_model();
+    let x = spec.build_queries(n);
+    let queries: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
+    let mut report = BenchReport::new("transport");
+
+    println!(
+        "{:>6} {:>10} {:>16} {:>14} {:>14} {:>12}",
+        "shards", "transport", "online ms/query", "per-round ns", "rounds/query", "join p50 ms"
+    );
+    for s in [1usize, 2, 4] {
+        // In-process floor: the same layer-synchronized protocol with
+        // function calls instead of TCP rounds.
+        let sharded = ShardedEngine::from_model(&model, s, cfg);
+        let depth = sharded.depth();
+        let mut wss = sharded.workspaces();
+        let mut arena = GatherArena::new();
+        let stats = bench_ms(1, 3, 4_000.0, || {
+            for q in &queries {
+                std::hint::black_box(sharded.predict_with(q, beam, 10, &mut wss, &mut arena));
+            }
+        });
+        let inproc_ms = stats.mean_ms / n as f64;
+        println!("{s:>6} {:>10} {inproc_ms:>16.4} {:>14} {depth:>14} {:>12}", "in-proc", "-", "-");
+        report.record_extra(
+            "inprocess-online",
+            inproc_ms * 1e6,
+            1,
+            &cfg.label(),
+            vec![("shards", Json::Num(s as f64))],
+        );
+
+        // Loopback hosts, one per shard (each serving the identical
+        // partition the in-process engine runs).
+        let mut hosts = Vec::new();
+        let mut groups = Vec::new();
+        for shard in partition(&model, s) {
+            let host = ShardHost::spawn(
+                shard,
+                ShardHostConfig {
+                    engine: cfg,
+                    ..Default::default()
+                },
+                "127.0.0.1:0",
+            )
+            .expect("spawn shard host");
+            groups.push(vec![host.local_addr()]);
+            hosts.push(host);
+        }
+        for speculate in [false, true] {
+            let mut g = RemoteGather::connect_groups(
+                &groups,
+                RemoteConfig {
+                    speculate,
+                    ..Default::default()
+                },
+                None,
+            )
+            .expect("connect");
+            let stats = bench_ms(1, 3, 4_000.0, || {
+                for q in &queries {
+                    std::hint::black_box(g.predict_with(q, beam, 10).expect("remote predict"));
+                }
+            });
+            let remote_ms = stats.mean_ms / n as f64;
+            let st = g.stats();
+            let rounds = st.rounds.load(Ordering::Relaxed) as f64;
+            let saved = st.spec_rounds_saved.load(Ordering::Relaxed) as f64;
+            // Every query processes `depth` layers; `rounds` of them went
+            // over the network, `saved` were assembled from speculation.
+            let rounds_per_query = depth as f64 * rounds / (rounds + saved).max(1.0);
+            // What each *network* round adds over the in-process engine.
+            let per_round_ns = (remote_ms - inproc_ms).max(0.0) * 1e6 / rounds_per_query.max(1.0);
+            let join_p50 = st.scatter.join_wait.quantile_ms(0.5);
+            let label = if speculate { "remote+spec" } else { "remote" };
+            println!(
+                "{s:>6} {label:>10} {remote_ms:>16.4} {per_round_ns:>14.0} \
+                 {rounds_per_query:>14.1} {join_p50:>12.4}"
+            );
+            report.record_extra(
+                if speculate { "remote-online-spec" } else { "remote-online" },
+                remote_ms * 1e6,
+                1,
+                &cfg.label(),
+                vec![
+                    ("shards", Json::Num(s as f64)),
+                    ("overhead_x", Json::Num(remote_ms / inproc_ms.max(1e-9))),
+                    ("per_round_overhead_ns", Json::Num(per_round_ns)),
+                    (
+                        "network_rounds",
+                        Json::Num(st.rounds.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "spec_rounds_saved",
+                        Json::Num(st.spec_rounds_saved.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("join_wait_p50_ms", Json::Num(join_p50)),
+                ],
+            );
+        }
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+    report.finish(&args);
+}

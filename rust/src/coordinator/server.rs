@@ -10,7 +10,7 @@ use std::time::Instant;
 use super::batcher::{spawn_batcher, WorkerPool};
 use super::{CoordinatorConfig, Request, Response, SubmitError};
 use crate::inference::InferenceEngine;
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{LatencyHistogram, ScatterMetrics};
 use crate::sparse::{CsrMatrix, SparseVec};
 
 /// Aggregated serving statistics.
@@ -28,9 +28,22 @@ pub struct CoordinatorStats {
     pub latency: LatencyHistogram,
     /// Queue-wait histogram.
     pub queue_wait: LatencyHistogram,
+    /// Per-shard scatter-round telemetry — `Some` on the sharded
+    /// coordinators (one histogram per shard plus the gather join wait),
+    /// `None` on the single-engine coordinator, which has no rounds.
+    pub scatter: Option<ScatterMetrics>,
 }
 
 impl CoordinatorStats {
+    /// Stats for a sharded serving stack: scatter-round telemetry over
+    /// `num_shards` shards enabled.
+    pub fn with_scatter(num_shards: usize) -> Self {
+        Self {
+            scatter: Some(ScatterMetrics::new(num_shards)),
+            ..Default::default()
+        }
+    }
+
     /// Mean batch size so far.
     pub fn mean_batch(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);

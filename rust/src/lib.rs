@@ -34,7 +34,11 @@
 //!   subtree shards, persists them in a versioned shard format, and
 //!   serves them through an **exact** scatter-gather coordinator (per-
 //!   shard worker pools driven layer-by-layer by a gather stage that
-//!   owns the global beam — bit-identical to unsharded search).
+//!   owns the global beam — bit-identical to unsharded search). The
+//!   [`shard::wire`] / [`shard::remote`] pair carries the same protocol
+//!   across processes: TCP shard hosts, replicated with mid-query
+//!   failover, driven by a remote gather stage whose speculative
+//!   expansion halves the RTT × depth cost.
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   layer step (`artifacts/*.hlo.txt`).
 //!
@@ -62,5 +66,5 @@ pub mod tree;
 pub mod util;
 
 pub use inference::{InferenceEngine, IterationMethod, MatmulAlgo};
-pub use shard::{ShardedCoordinator, ShardedEngine};
+pub use shard::{RemoteShardedCoordinator, ShardHost, ShardedCoordinator, ShardedEngine};
 pub use tree::XmrModel;

@@ -4,9 +4,11 @@
 //!
 //! - model production: `synth-model`, `train`, `gen-data`, `stats`, `shard`
 //! - inference: `infer`, `plan` (per-chunk kernel-plan inspection),
-//!   `serve` (single engine, or label-space sharded scatter-gather via
-//!   `--shards N` / `--shards-dir dir/`); `--iter auto` enables the
-//!   cost-model kernel planner on any of them
+//!   `serve` (single engine, label-space sharded scatter-gather via
+//!   `--shards N` / `--shards-dir dir/`, or cross-process via
+//!   `--remote host:port,...`); `shard-host` (host one shard file over
+//!   TCP for remote serving); `--iter auto` enables the cost-model
+//!   kernel planner on any of them
 //! - paper reproduction: `bench table|figure3|figure4|figure5|figure6|
 //!   table4|table5|table6|all`
 //! - runtime: `xla-smoke` (load + execute the AOT artifacts)
@@ -30,8 +32,9 @@ use mscm_xmr::inference::{
 };
 use mscm_xmr::repro;
 use mscm_xmr::shard::{
-    load_shards, partition, save_shards, ShardedCoordinator, ShardedCoordinatorConfig,
-    ShardedEngine,
+    load_shard, load_shards, partition, save_shards, RemoteConfig, RemoteCoordinatorConfig,
+    RemoteShardedCoordinator, ShardHost, ShardHostConfig, ShardedCoordinator,
+    ShardedCoordinatorConfig, ShardedEngine,
 };
 use mscm_xmr::train::{train_model, RankerParams, Tfidf};
 use mscm_xmr::tree::{load_model, save_model};
@@ -65,6 +68,16 @@ INFERENCE
                 [--iter ...|auto [--calibrate N]]
                 [--shards S | --shards-dir dir/] [--shard-workers N]
                 (scatter-gather serving over a label-space partition)
+                [--remote host:port,host:port,...] (cross-process: drive
+                shard hosts over TCP; replicas of the same shard are
+                grouped automatically by the id each host reports;
+                --no-speculate disables speculative expansion,
+                --round-timeout-ms N sets the per-round failover timeout,
+                0 = wait forever)
+  shard-host    --shard shard-000-of-004.bin [--addr 127.0.0.1:0]
+                [--algo ...] [--iter ...|auto [--calibrate N]]
+                [--no-speculate]  (host one shard over TCP for
+                serve --remote; port 0 picks a free port and prints it)
 
   --iter auto resolves a per-chunk kernel plan (cost model over chunk
   stats; --calibrate N times the kernels on N synthetic queries first);
@@ -116,6 +129,7 @@ fn main() -> ExitCode {
         ("train", _) => cmd_train(&opts),
         ("stats", _) => cmd_stats(&opts),
         ("shard", _) => cmd_shard(&opts),
+        ("shard-host", _) => cmd_shard_host(&opts),
         ("plan", _) => cmd_plan(&opts),
         ("infer", _) => cmd_infer(&opts),
         ("eval", _) => cmd_eval(&opts),
@@ -561,10 +575,11 @@ fn cmd_eval(opts: &Opts) -> Result<(), anyhow::Error> {
     Ok(())
 }
 
-/// The two serving stacks behind `serve`, driven by one load loop.
+/// The three serving stacks behind `serve`, driven by one load loop.
 enum Serving {
     Single(Coordinator),
     Sharded(ShardedCoordinator),
+    Remote(RemoteShardedCoordinator),
 }
 
 impl Serving {
@@ -578,6 +593,7 @@ impl Serving {
         match self {
             Serving::Single(c) => c.submit(q),
             Serving::Sharded(c) => c.submit(q),
+            Serving::Remote(c) => c.submit(q),
         }
     }
 
@@ -585,6 +601,25 @@ impl Serving {
         match self {
             Serving::Single(c) => c.stats(),
             Serving::Sharded(c) => c.stats(),
+            Serving::Remote(c) => c.stats(),
+        }
+    }
+
+    /// Per-shard scatter-round telemetry + transport counters, printed
+    /// after the load loop.
+    fn print_round_telemetry(&self) {
+        match self {
+            Serving::Single(_) => {}
+            Serving::Sharded(c) => {
+                if let Some(sc) = &c.stats().scatter {
+                    println!("scatter rounds:\n{}", sc.summary());
+                }
+            }
+            Serving::Remote(c) => {
+                let rs = c.remote_stats();
+                println!("transport: {}", rs.summary());
+                println!("scatter rounds:\n{}", rs.scatter.summary());
+            }
         }
     }
 
@@ -592,8 +627,60 @@ impl Serving {
         match self {
             Serving::Single(c) => c.shutdown(),
             Serving::Sharded(c) => c.shutdown(),
+            Serving::Remote(c) => c.shutdown(),
         }
     }
+}
+
+/// Parses a comma-separated `host:port` list into socket addresses.
+fn parse_remote_addrs(list: &str) -> Result<Vec<std::net::SocketAddr>, anyhow::Error> {
+    use std::net::ToSocketAddrs;
+    let mut addrs = Vec::new();
+    for part in list.split(',') {
+        let part = part.trim();
+        let mut it = part
+            .to_socket_addrs()
+            .map_err(|e| usage(format!("bad --remote address '{part}': {e}")))?;
+        addrs.push(
+            it.next()
+                .ok_or_else(|| usage(format!("--remote address '{part}' resolved to nothing")))?,
+        );
+    }
+    if addrs.is_empty() {
+        return Err(usage("--remote needs at least one host:port"));
+    }
+    Ok(addrs)
+}
+
+/// Hosts one shard file over TCP (the server half of `serve --remote`).
+/// Runs until killed; `--addr` port 0 asks the OS for a free port, which
+/// is printed once listening.
+fn cmd_shard_host(opts: &Opts) -> Result<(), anyhow::Error> {
+    let path = opts
+        .get("shard")
+        .ok_or_else(|| usage("shard-host requires --shard <shard file>"))?;
+    let addr = opts.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:0".into());
+    let shard = load_shard(path, false)?;
+    let spec = shard.spec;
+    let host = ShardHost::spawn(
+        shard,
+        ShardHostConfig {
+            engine: engine_config(opts)?,
+            planner: planner_config(opts)?,
+            speculate: !opts.contains_key("no-speculate"),
+        },
+        addr.as_str(),
+    )?;
+    println!(
+        "shard {}/{} (labels [{}, {})) listening on {}",
+        spec.shard_id,
+        spec.num_shards,
+        spec.label_offset,
+        spec.label_offset + spec.num_labels,
+        host.local_addr()
+    );
+    host.wait();
+    Ok(())
 }
 
 fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
@@ -607,6 +694,7 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
     };
     let num_shards = get(opts, "shards", 0usize)?;
     let shards_dir = opts.get("shards-dir");
+    let remote = opts.get("remote");
     if num_shards > 0 && shards_dir.is_some() {
         return Err(usage("--shards and --shards-dir are mutually exclusive"));
     }
@@ -615,10 +703,41 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
             "--model and --shards-dir are mutually exclusive (the shard files are the model)",
         ));
     }
+    if remote.is_some() && (num_shards > 0 || shards_dir.is_some() || opts.contains_key("model")) {
+        return Err(usage(
+            "--remote is mutually exclusive with --model/--shards/--shards-dir \
+             (the shard hosts own the model)",
+        ));
+    }
 
     let pc = planner_config(opts)?;
-    // A pre-sharded partition on disk skips model loading entirely.
-    let (dim, coord) = if let Some(dir) = shards_dir {
+    // Cross-process serving: the model lives on the shard hosts; the
+    // addresses are probed and grouped into replica sets by the shard id
+    // each host reports.
+    let (dim, coord) = if let Some(list) = remote {
+        let addrs = parse_remote_addrs(list)?;
+        let rc = RemoteConfig {
+            speculate: !opts.contains_key("no-speculate"),
+            round_timeout: std::time::Duration::from_millis(get(
+                opts,
+                "round-timeout-ms",
+                5_000u64,
+            )?),
+            ..Default::default()
+        };
+        let coord = RemoteShardedCoordinator::start(
+            &addrs,
+            RemoteCoordinatorConfig { base, remote: rc },
+        )?;
+        eprintln!(
+            "serving {} remote shards (L={}, d={}) via {} addresses",
+            coord.num_shards(),
+            coord.num_labels(),
+            coord.dim(),
+            addrs.len()
+        );
+        (coord.dim(), Serving::Remote(coord))
+    } else if let Some(dir) = shards_dir {
         let shards = load_shards(dir, false)?;
         // Shards carrying stored plans serve them verbatim under
         // --iter auto; the rest plan themselves here.
@@ -738,6 +857,7 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
     println!("latency: {}", stats.latency.summary());
     println!("queue:   {}", stats.queue_wait.summary());
     println!("mean batch: {:.1}", stats.mean_batch());
+    coord.print_round_telemetry();
     coord.shutdown();
     Ok(())
 }

@@ -1,5 +1,7 @@
 //! Latency metrics: streaming histograms with avg / P50 / P95 / P99,
-//! matching the quantities reported in the paper's Table 4 and §6.
+//! matching the quantities reported in the paper's Table 4 and §6, plus
+//! the per-shard scatter-round telemetry ([`ScatterMetrics`]) both
+//! sharded gather stages feed.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -124,6 +126,70 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-round scatter-gather telemetry: one latency histogram per shard
+/// plus a **join-wait** histogram — how long the gather join idles
+/// between the first and the last shard reply of a layer round. The
+/// layer-synchronized protocol advances at the pace of the slowest
+/// shard, so the join wait is exactly the latency the ROADMAP's
+/// "gather join waits for the slowest shard" item wants shaved (and the
+/// per-shard histograms show *which* shard to rebalance or re-plan —
+/// the planner feedback loop's serving-side signal).
+///
+/// Recording is lock-free atomic adds, cheap enough for every round of
+/// both the in-process and the remote gather stages.
+#[derive(Debug)]
+pub struct ScatterMetrics {
+    per_shard: Vec<LatencyHistogram>,
+    /// Idle time between the first and last shard reply per round.
+    pub join_wait: LatencyHistogram,
+    /// Completed scatter rounds.
+    pub rounds: AtomicU64,
+}
+
+impl ScatterMetrics {
+    /// Empty telemetry for `num_shards` shards.
+    pub fn new(num_shards: usize) -> Self {
+        Self {
+            per_shard: (0..num_shards).map(|_| LatencyHistogram::new()).collect(),
+            join_wait: LatencyHistogram::new(),
+            rounds: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of shards tracked.
+    pub fn num_shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Records shard `s`'s reply latency for one round (dispatch → reply
+    /// joined).
+    pub fn record_round(&self, s: usize, d: Duration) {
+        self.per_shard[s].record(d);
+    }
+
+    /// Records one completed round's join wait (last reply − first
+    /// reply).
+    pub fn record_join_wait(&self, d: Duration) {
+        self.join_wait.record(d);
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Shard `s`'s round-latency histogram.
+    pub fn shard(&self, s: usize) -> &LatencyHistogram {
+        &self.per_shard[s]
+    }
+
+    /// Multi-line summary: one row per shard plus the join wait.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (s, h) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!("shard {s} rounds: {}\n", h.summary()));
+        }
+        out.push_str(&format!("join wait:      {}", self.join_wait.summary()));
+        out
+    }
+}
+
 /// Exact latency recorder (stores all samples) for offline benchmarks
 /// where Table-4-grade precision matters more than memory.
 #[derive(Debug, Default)]
@@ -208,6 +274,22 @@ mod tests {
         assert_eq!(p50, 51.0);
         assert_eq!(p95, 96.0);
         assert_eq!(p99, 100.0);
+    }
+
+    #[test]
+    fn scatter_metrics_track_per_shard_rounds() {
+        let m = ScatterMetrics::new(3);
+        assert_eq!(m.num_shards(), 3);
+        m.record_round(0, Duration::from_micros(100));
+        m.record_round(1, Duration::from_micros(300));
+        m.record_round(2, Duration::from_micros(900));
+        m.record_join_wait(Duration::from_micros(800));
+        assert_eq!(m.rounds.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shard(1).count(), 1);
+        assert_eq!(m.join_wait.count(), 1);
+        assert!(m.shard(2).mean_ms() > m.shard(0).mean_ms());
+        let s = m.summary();
+        assert!(s.contains("shard 2") && s.contains("join wait"), "{s}");
     }
 
     #[test]

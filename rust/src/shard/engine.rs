@@ -36,15 +36,24 @@ struct ShardUnit {
 /// `(local node, path score)` candidates. Only the first `n` entries are
 /// live — the buffers never shrink, so fluctuating batch sizes reuse the
 /// high-water capacity.
-#[derive(Default)]
+///
+/// Fields are public because the round is also the unit the wire codec
+/// ([`super::wire`]) encodes and decodes in place — remote rounds move
+/// through the exact same pooled buffers as in-process ones.
+#[derive(Debug, Default)]
 pub struct ShardRound {
-    pub(crate) n: usize,
-    pub(crate) beams: Vec<Vec<(u32, f32)>>,
-    pub(crate) cands: Vec<Vec<(u32, f32)>>,
+    /// Live query count; only the first `n` entries of each buffer hold
+    /// this round's data.
+    pub n: usize,
+    /// Per query: the shard-local beam slice (node ids ascending).
+    pub beams: Vec<Vec<(u32, f32)>>,
+    /// Per query: the generated `(local node, path score)` candidates.
+    pub cands: Vec<Vec<(u32, f32)>>,
 }
 
 impl ShardRound {
-    fn ensure(&mut self, n: usize) {
+    /// Grows the per-query buffers to `n` (never shrinks).
+    pub fn ensure(&mut self, n: usize) {
         self.n = n;
         if self.beams.len() < n {
             self.beams.resize_with(n, Vec::new);
@@ -53,6 +62,93 @@ impl ShardRound {
             self.cands.resize_with(n, Vec::new);
         }
     }
+}
+
+/// Expands one layer of one shard engine for every query of `round`:
+/// installs `round.beams` into the workspace arena, runs the engine's
+/// layer step, refills `round.cands`. THE scatter-side kernel shared by
+/// the in-process [`ShardedEngine`], the serving coordinator's shard
+/// pools and the remote [`super::ShardHost`] — one definition, so the
+/// transports cannot drift from the in-process computation.
+pub(crate) fn expand_round(
+    engine: &InferenceEngine,
+    x: &CsrMatrix,
+    layer: usize,
+    round: &mut ShardRound,
+    ws: &mut Workspace,
+) {
+    let n = round.n;
+    ws.begin_beams(n);
+    for b in &round.beams[..n] {
+        ws.push_beam(b);
+    }
+    engine.expand_layer(layer, x, 0, n, ws);
+    for (q, c) in round.cands[..n].iter_mut().enumerate() {
+        c.clear();
+        c.extend_from_slice(ws.cand(q));
+    }
+}
+
+/// Gather half of one layer, shared by the in-process engine and the
+/// remote gather stage: merges every shard's candidates into global node
+/// ids (`range_of(s)` is shard `s`'s global column range `[lo, hi)` at
+/// this layer), prunes with the engine's own `select_top` comparator,
+/// and splits the surviving global beam back into per-shard local beams.
+/// `arena.global_beams[q]` is left holding the pruned global beam.
+pub(crate) fn merge_and_split_layer<F>(
+    s_count: usize,
+    range_of: F,
+    beam: usize,
+    arena: &mut GatherArena,
+) where
+    F: Fn(usize) -> (u32, u32),
+{
+    let n = arena.n;
+    for q in 0..n {
+        arena.merge.clear();
+        for s in 0..s_count {
+            let (lo, _) = range_of(s);
+            for &(node, score) in &arena.rounds[s].cands[q] {
+                arena.merge.push((node + lo, score));
+            }
+        }
+        // Global beam step: exactly InferenceEngine's select_top.
+        select_top(&mut arena.merge, beam, &mut arena.global_beams[q]);
+        for s in 0..s_count {
+            let (lo, hi) = range_of(s);
+            let local = &mut arena.rounds[s].beams[q];
+            local.clear();
+            local.extend(
+                arena.global_beams[q]
+                    .iter()
+                    .filter(|&&(node, _)| node >= lo && node < hi)
+                    .map(|&(node, score)| (node - lo, score)),
+            );
+        }
+    }
+}
+
+/// Builds the serving engine for one shard, honoring a stored kernel
+/// plan: a plan is served verbatim only when it was costed for the
+/// serving algo — the cost shapes differ per algo, so an MSCM-costed
+/// plan driving the baseline kernels (or vice versa) would be
+/// systematically mis-planned. Mismatches fall through to a fresh
+/// per-shard resolution. Shared by [`ShardedEngine`] and the remote
+/// [`super::ShardHost`].
+pub(crate) fn build_shard_engine(
+    s: ShardModel,
+    config: EngineConfig,
+    pc: &PlannerConfig,
+) -> (ShardSpec, Vec<u32>, InferenceEngine) {
+    let spec = s.spec;
+    let layer_offsets = s.layer_offsets;
+    let engine = match (config.iter, s.plan) {
+        (IterationMethod::Auto, Some((algo, plan))) if algo == config.algo => {
+            InferenceEngine::new_with_plan(s.model, config, plan)
+        }
+        _ => InferenceEngine::new_with_planner(s.model, config, pc),
+    };
+    (spec, layer_offsets, engine)
 }
 
 /// The gather stage's reusable arena: per-shard [`ShardRound`]s, the
@@ -96,6 +192,20 @@ impl GatherArena {
     /// Per-query results of the last completed drive (`n` rows).
     pub fn results(&self) -> &[Vec<Prediction>] {
         &self.out[..self.n]
+    }
+
+    /// Sizes the arena for an `s_count`-shard round over `n` queries and
+    /// resets every per-shard beam to the implicit root — the first
+    /// scatter of the layer-synchronized protocol, shared by the
+    /// in-process driver and the remote gather stage.
+    pub(crate) fn begin_rounds(&mut self, s_count: usize, n: usize) {
+        self.ensure(s_count, n);
+        for r in &mut self.rounds[..s_count] {
+            for q in 0..n {
+                r.beams[q].clear();
+                r.beams[q].push((0u32, 1.0f32));
+            }
+        }
     }
 }
 
@@ -156,21 +266,11 @@ impl ShardedEngine {
             assert_eq!(s.model.depth(), depth, "shard depth mismatch");
             assert_eq!(s.spec.label_offset, next_label, "label gap before shard {i}");
             next_label += s.spec.num_labels;
-            // A stored plan is served only when it was costed for the
-            // serving algo — the cost shapes differ per algo, so an
-            // MSCM-costed plan driving the baseline kernels (or vice
-            // versa) would be systematically mis-planned. Mismatches
-            // fall through to a fresh per-shard resolution.
-            let engine = match (config.iter, s.plan) {
-                (IterationMethod::Auto, Some((algo, plan))) if algo == config.algo => {
-                    InferenceEngine::new_with_plan(s.model, config, plan)
-                }
-                _ => InferenceEngine::new_with_planner(s.model, config, pc),
-            };
+            let (spec, layer_offsets, engine) = build_shard_engine(s, config, pc);
             units.push(ShardUnit {
                 engine,
-                spec: s.spec,
-                layer_offsets: s.layer_offsets,
+                spec,
+                layer_offsets,
             });
         }
         Self {
@@ -259,47 +359,13 @@ impl ShardedEngine {
         round: &mut ShardRound,
         ws: &mut Workspace,
     ) {
-        let n = round.n;
-        let engine = &self.units[shard].engine;
-        ws.begin_beams(n);
-        for b in &round.beams[..n] {
-            ws.push_beam(b);
-        }
-        engine.expand_layer(layer, x, 0, n, ws);
-        for (q, c) in round.cands[..n].iter_mut().enumerate() {
-            c.clear();
-            c.extend_from_slice(ws.cand(q));
-        }
+        expand_round(&self.units[shard].engine, x, layer, round, ws);
     }
 
-    /// Gather half, one layer: merges per-shard candidates into global
-    /// ids, prunes with the engine's own comparator, and splits the
-    /// surviving beam back into per-shard local beams for the next layer.
-    /// `arena.global_beams[q]` is left holding the pruned global beam.
+    /// Gather half, one layer: [`merge_and_split_layer`] over this
+    /// engine's shard ranges.
     pub(crate) fn merge_and_split(&self, layer: usize, beam: usize, arena: &mut GatherArena) {
-        let n = arena.n;
-        for q in 0..n {
-            arena.merge.clear();
-            for (s, u) in self.units.iter().enumerate() {
-                let off = u.layer_offsets[layer];
-                for &(node, score) in &arena.rounds[s].cands[q] {
-                    arena.merge.push((node + off, score));
-                }
-            }
-            // Global beam step: exactly InferenceEngine's select_top.
-            select_top(&mut arena.merge, beam, &mut arena.global_beams[q]);
-            for s in 0..self.units.len() {
-                let (lo, hi) = self.layer_range(s, layer);
-                let local = &mut arena.rounds[s].beams[q];
-                local.clear();
-                local.extend(
-                    arena.global_beams[q]
-                        .iter()
-                        .filter(|&&(node, _)| node >= lo && node < hi)
-                        .map(|&(node, score)| (node - lo, score)),
-                );
-            }
-        }
+        merge_and_split_layer(self.units.len(), |s| self.layer_range(s, layer), beam, arena);
     }
 
     /// The layer-synchronized protocol driver, shared by the in-process
@@ -324,14 +390,8 @@ impl ShardedEngine {
     {
         assert!(beam >= 1, "beam width must be >= 1");
         let s_count = self.units.len();
-        arena.ensure(s_count, n);
         // Per-shard local beams: every shard starts at its own root.
-        for r in &mut arena.rounds[..s_count] {
-            for q in 0..n {
-                r.beams[q].clear();
-                r.beams[q].push((0u32, 1.0f32));
-            }
-        }
+        arena.begin_rounds(s_count, n);
         for l in 0..self.depth {
             if !expand(l, &mut arena.rounds[..s_count]) {
                 return false;

@@ -23,6 +23,11 @@
 //! evolution stays in one place. The trailing kernel-plan section lets a
 //! planned (and possibly timing-calibrated) model load and serve without
 //! re-planning — plans are per-shard, over the shard's own chunks.
+//!
+//! A shard file is also the deployment unit of cross-process serving:
+//! `repro shard-host --shard <file>` loads exactly one of these (stored
+//! plan honored) and serves it over the [`super::wire`] protocol to a
+//! [`super::RemoteShardedCoordinator`].
 
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};

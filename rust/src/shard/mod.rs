@@ -70,13 +70,61 @@
 //! in the batch, and every round buffer is pooled ([`GatherArena`] /
 //! [`ShardRound`] cycling gather → shard → gather) so the steady-state
 //! rounds are allocation-free.
+//!
+//! # Cross-process serving: the wire protocol
+//!
+//! The [`wire`] + [`remote`] pair lifts the same protocol across
+//! processes: a [`ShardHost`] loads one shard file and answers layer
+//! rounds over TCP; a [`RemoteGather`] (or the batching
+//! [`RemoteShardedCoordinator`]) drives N hosts with the very same
+//! merge/split/prune code the in-process engine uses, so remote serving
+//! is bitwise identical to unsharded inference (property-tested over
+//! loopback in `rust/tests/remote.rs`).
+//!
+//! Frames are versioned and length-prefixed (see [`wire`] for the exact
+//! layout): a 12-byte header — magic, version (exact match required),
+//! message type, payload length — then the payload. The conversation is
+//! `Hello → ShardInfo` once per connection, then `Expand → Cands` per
+//! layer round; protocol violations are answered with an `Error` frame
+//! and a close. An `Expand` carries the query rows *and* the shard-local
+//! beam slice, so every round is stateless and self-contained.
+//!
+//! # Failover state machine
+//!
+//! Each shard is addressable by one or more replicas; a client pins one
+//! **active** replica per shard and walks this machine per round:
+//!
+//! ```text
+//!            ┌────────────┐ send+recv ok  ┌──────────┐
+//!    ┌──────►│ CONNECTED  ├──────────────►│ DECODED  │ (round done)
+//!    │       └─────┬──────┘               └──────────┘
+//!    │   io error/ │ timeout
+//!    │             ▼
+//!    │       ┌────────────┐   advance to next replica,
+//!    └───────┤ FAILED     ├── reconnect + handshake + re-send the
+//!   retained │ (conn drop)│   retained frame (bounded attempts;
+//!   frame    └────────────┘   rounds are stateless, re-issue is safe)
+//! ```
+//!
+//! Because the encoded `Expand` frame is retained until its reply is
+//! decoded, failover is a byte-identical re-send — a replica killed
+//! mid-query costs one reconnect, never a failed query (demonstrated by
+//! `examples/remote_search.rs` and the failover tests). Speculative
+//! expansion ([`remote`] module docs) additionally halves the number of
+//! network rounds per query without touching exactness.
 
 mod engine;
 mod io;
 mod partition;
+pub mod remote;
 mod serve;
+pub mod wire;
 
 pub use engine::{GatherArena, ShardRound, ShardedEngine};
 pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
 pub use partition::{partition, subtree_nnz, ShardModel, ShardSpec};
+pub use remote::{
+    discover, RemoteConfig, RemoteCoordinatorConfig, RemoteGather, RemoteShardedCoordinator,
+    RemoteStats, ShardHost, ShardHostConfig,
+};
 pub use serve::{ShardedCoordinator, ShardedCoordinatorConfig};

@@ -1,0 +1,1339 @@
+//! Cross-process shard serving: TCP shard hosts, the remote gather
+//! client with replica failover, and the [`RemoteShardedCoordinator`].
+//!
+//! This is the first subsystem that lets the scatter-gather protocol of
+//! [`crate::shard`] span machines: a [`ShardHost`] loads **one**
+//! [`ShardModel`] (stored kernel plan honored) and answers layer rounds
+//! over persistent connections, while a [`RemoteGather`] drives N hosts
+//! exactly like the in-process [`ShardedEngine`] drives its units — the
+//! merge/split/prune code *is* the in-process code
+//! ([`merge_and_split_layer`], [`expand_round`], `select_top`,
+//! `rank_into`), so remote results are bitwise identical to the
+//! unsharded engine by construction (property-tested over loopback).
+//!
+//! # Failover
+//!
+//! Every shard is addressable by ≥ 1 replica. An [`wire::MsgType::Expand`]
+//! frame carries *everything* its round needs (query rows + beam slice),
+//! so rounds are **stateless**: when a round times out or errors on the
+//! active replica mid-query, the client drops that connection, advances
+//! to the next replica, re-sends the identical frame and reads the reply
+//! there — the query never fails, and the re-executed expansion is the
+//! same pure computation. See the failover state machine in the
+//! [`crate::shard`] module docs.
+//!
+//! # Speculative expansion
+//!
+//! The layer-synchronized protocol costs one network round trip per tree
+//! layer (latency = RTT × depth). When speculation is on, a host answers
+//! a layer-`l` round with its candidates **plus** a hint: its *local*
+//! top-`beam` layer-`l` candidates, pre-expanded one layer further. Any
+//! node that survives the *global* beam cut necessarily survives the
+//! shard-local cut (fewer than `beam` candidates beat it globally, so
+//! fewer than `beam` beat it within the shard), so the speculated parent
+//! set always covers the true beam slice — the gather stage assembles
+//! layer `l + 1`'s exact candidates from the hint and skips that round's
+//! network hop entirely. Per-candidate scores depend only on the parent's
+//! `(node, score)` and the query, not on which other parents are beamed,
+//! so assembled candidates are bit-identical to a real round's. Network
+//! rounds per query drop from `depth` to `ceil(depth / 2)`; a host that
+//! declines to speculate (or a malformed hint) falls back to a real
+//! round, never to an approximation.
+
+use std::io::{self, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::engine::{
+    build_shard_engine, expand_round, merge_and_split_layer, GatherArena, ShardRound,
+};
+use super::partition::ShardModel;
+use super::wire::{self, CandsHeader, ExpandHeader, MsgType, SpecRound, WireShardInfo};
+use crate::coordinator::batcher::{spawn_batcher, WorkerPool};
+use crate::coordinator::{
+    CoordinatorConfig, CoordinatorStats, Request, Response, Router, SubmitError,
+};
+use crate::inference::{
+    rank_into, select_top, EngineConfig, InferenceEngine, PlannerConfig, Prediction, Workspace,
+};
+use crate::metrics::ScatterMetrics;
+use crate::sparse::{CsrMatrix, SparseVec, SparseVecView};
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+// =====================================================================
+// Shard host (server side)
+// =====================================================================
+
+/// Shard-host configuration.
+#[derive(Clone, Debug)]
+pub struct ShardHostConfig {
+    /// Engine configuration the shard serves under (a stored kernel plan
+    /// is honored when it matches `engine.algo` under `--iter auto`).
+    pub engine: EngineConfig,
+    /// Planner inputs for shards that need a fresh plan resolved.
+    pub planner: PlannerConfig,
+    /// Answer speculation requests (pre-expand the local top-`beam` of
+    /// each reply one layer further). Costs host CPU per round; saves
+    /// the gather stage every other network round trip.
+    pub speculate: bool,
+}
+
+impl Default for ShardHostConfig {
+    fn default() -> Self {
+        Self {
+            engine: EngineConfig::default(),
+            planner: PlannerConfig::default(),
+            speculate: true,
+        }
+    }
+}
+
+struct HostShared {
+    engine: InferenceEngine,
+    info: WireShardInfo,
+    speculate: bool,
+    stop: Arc<AtomicBool>,
+}
+
+/// Live-connection registry: `(connection id, severable handle)`. Conn
+/// threads unregister themselves on exit so a long-running host does not
+/// accumulate dead fds.
+type ConnRegistry = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+
+/// A running TCP shard host: one loaded shard, one accept loop, one
+/// serving thread per connection (each owning its private
+/// [`Workspace`] and pooled round/codec buffers).
+pub struct ShardHost {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: ConnRegistry,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardHost {
+    /// Builds the shard's engine (stored plan honored, exactly as the
+    /// in-process [`ShardedEngine`] would) and starts listening on
+    /// `addr` (use port 0 for an OS-assigned port;
+    /// [`ShardHost::local_addr`] reports it).
+    pub fn spawn(
+        shard: ShardModel,
+        config: ShardHostConfig,
+        addr: impl ToSocketAddrs,
+    ) -> io::Result<ShardHost> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let (spec, layer_offsets, engine) =
+            build_shard_engine(shard, config.engine, &config.planner);
+        let info = WireShardInfo {
+            shard_id: spec.shard_id,
+            num_shards: spec.num_shards,
+            depth: engine.model().depth() as u32,
+            dim: engine.model().dim as u64,
+            label_offset: spec.label_offset,
+            num_labels: spec.num_labels,
+            layer_offsets,
+            layer_nodes: engine
+                .model()
+                .layers
+                .iter()
+                .map(|l| l.num_nodes() as u32)
+                .collect(),
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: ConnRegistry = Arc::new(Mutex::new(Vec::new()));
+        let shared = Arc::new(HostShared {
+            engine,
+            info,
+            speculate: config.speculate,
+            stop: Arc::clone(&stop),
+        });
+        let conns2 = Arc::clone(&conns);
+        let accept = std::thread::Builder::new()
+            .name(format!("mscm-host-{}", shared.info.shard_id))
+            .spawn(move || accept_loop(listener, shared, conns2))
+            .expect("spawn shard host");
+        Ok(Self {
+            addr,
+            stop,
+            conns,
+            accept: Some(accept),
+        })
+    }
+
+    /// The address the host is listening on.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Hard-stops the host **immediately**: the listener stops accepting
+    /// and every live connection is severed mid-stream — exactly the
+    /// failure the client-side failover must absorb (the failover tests
+    /// and `examples/remote_search.rs` kill a replica this way).
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for (_, c) in self.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        // Unblock the accept loop so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// [`ShardHost::kill`] + join the accept loop.
+    pub fn shutdown(mut self) {
+        self.kill();
+        if let Some(a) = self.accept.take() {
+            a.join().ok();
+        }
+    }
+
+    /// Blocks until the host is killed — the `shard-host` CLI's serve
+    /// loop.
+    pub fn wait(mut self) {
+        if let Some(a) = self.accept.take() {
+            a.join().ok();
+        }
+    }
+}
+
+impl Drop for ShardHost {
+    fn drop(&mut self) {
+        if let Some(a) = self.accept.take() {
+            self.kill();
+            a.join().ok();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<HostShared>, conns: ConnRegistry) {
+    let mut next_id = 0u64;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let _ = stream.set_nodelay(true);
+                let id = next_id;
+                next_id += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().unwrap().push((id, clone));
+                }
+                let sh = Arc::clone(&shared);
+                let reg = Arc::clone(&conns);
+                // Connection threads are detached: they exit when the
+                // peer disconnects or the host is killed (the severed
+                // socket fails their next read), unregistering their fd
+                // so long-running hosts don't leak one per connection.
+                std::thread::Builder::new()
+                    .name(format!("mscm-host{}-conn", sh.info.shard_id))
+                    .spawn(move || {
+                        let _ = serve_conn(&sh, stream);
+                        reg.lock().unwrap().retain(|(cid, _)| *cid != id);
+                    })
+                    .ok();
+            }
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Transient accept failure (e.g. fd pressure): back off
+                // instead of spinning.
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Sends a protocol-error frame (best effort) before the connection
+/// closes.
+fn reply_error(w: &mut TcpStream, tx: &mut Vec<u8>, code: u32, msg: &str) -> io::Result<()> {
+    wire::encode_error(tx, code, msg);
+    w.write_all(tx)
+}
+
+/// One connection's serve loop: handshake, then Expand → Cands until the
+/// peer goes away. All state is connection-private and pooled, so a
+/// steady round stream does no allocator traffic beyond amortized buffer
+/// growth.
+fn serve_conn(sh: &HostShared, stream: TcpStream) -> io::Result<()> {
+    let mut r = BufReader::new(stream.try_clone()?);
+    let mut w = stream;
+    let mut tx: Vec<u8> = Vec::new();
+    let mut rx: Vec<u8> = Vec::new();
+    // Handshake: exactly one Hello, answered with this shard's identity.
+    match wire::read_frame(&mut r, &mut rx) {
+        Ok(MsgType::Hello) => {}
+        Ok(_) => return reply_error(&mut w, &mut tx, wire::ERR_PROTOCOL, "expected Hello"),
+        Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+            return reply_error(&mut w, &mut tx, wire::error_code_for(&e), &e.to_string());
+        }
+        Err(e) => return Err(e),
+    }
+    wire::encode_shard_info(&mut tx, &sh.info);
+    w.write_all(&tx)?;
+
+    let engine = &sh.engine;
+    let dim = engine.model().dim;
+    let depth = engine.model().depth();
+    let mut ws = engine.workspace();
+    let mut x = CsrMatrix::default();
+    let mut round = ShardRound::default();
+    let mut spec = SpecRound::default();
+    let mut spec_round = ShardRound::default();
+    let mut sel: Vec<(u32, f32)> = Vec::new();
+    loop {
+        let ty = match wire::read_frame(&mut r, &mut rx) {
+            Ok(t) => t,
+            // Peer closed the connection (or the host was killed).
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                return reply_error(&mut w, &mut tx, wire::ERR_PROTOCOL, &e.to_string());
+            }
+            Err(e) => return Err(e),
+        };
+        if ty != MsgType::Expand {
+            return reply_error(&mut w, &mut tx, wire::ERR_PROTOCOL, "expected Expand");
+        }
+        let hdr = match wire::decode_expand(&rx, dim, &mut x, &mut round) {
+            Ok(h) => h,
+            Err(e) => return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, &e.to_string()),
+        };
+        let layer = hdr.layer as usize;
+        if layer >= depth {
+            return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, "layer out of range");
+        }
+        // Beam parents index this layer's sibling chunks; bound them here
+        // so a malformed frame can never panic the kernels.
+        let max_parent = engine.model().layers[layer].chunked.num_chunks() as u32;
+        for q in 0..round.n {
+            if round.beams[q].iter().any(|&(p, _)| p >= max_parent) {
+                return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, "beam node out of range");
+            }
+        }
+        expand_round(engine, &x, layer, &mut round, &mut ws);
+        let do_spec = hdr.speculate && sh.speculate && layer + 1 < depth;
+        if do_spec {
+            speculate_next_layer(
+                engine,
+                &x,
+                layer + 1,
+                hdr.beam as usize,
+                &round,
+                &mut spec,
+                &mut spec_round,
+                &mut sel,
+                &mut ws,
+            );
+        }
+        wire::encode_cands(&mut tx, hdr.round_id, hdr.layer, &round, do_spec.then_some(&spec));
+        w.write_all(&tx)?;
+    }
+}
+
+/// Builds the speculation hint for `next_layer`: per query, the shard's
+/// local top-`beam` of the just-computed candidates (by the engine's own
+/// `select_top` comparator — a guaranteed superset of the shard's slice
+/// of the global beam) expanded one layer further through the very same
+/// [`expand_round`] kernel a real round would run.
+fn speculate_next_layer(
+    engine: &InferenceEngine,
+    x: &CsrMatrix,
+    next_layer: usize,
+    beam: usize,
+    round: &ShardRound,
+    spec: &mut SpecRound,
+    spec_round: &mut ShardRound,
+    sel: &mut Vec<(u32, f32)>,
+    ws: &mut Workspace,
+) {
+    let n = round.n;
+    spec.ensure(n);
+    spec_round.ensure(n);
+    let chunked = &engine.model().layers[next_layer].chunked;
+    for q in 0..n {
+        sel.clear();
+        sel.extend_from_slice(&round.cands[q]);
+        // Local beam cut: parents come out sorted by ascending node id.
+        select_top(sel, beam, &mut spec.parents[q]);
+        spec.child_counts[q].clear();
+        spec.child_counts[q].extend(
+            spec.parents[q]
+                .iter()
+                .map(|&(p, _)| chunked.chunk_width(p as usize) as u32),
+        );
+        spec_round.beams[q].clear();
+        spec_round.beams[q].extend_from_slice(&spec.parents[q]);
+    }
+    expand_round(engine, x, next_layer, spec_round, ws);
+    for q in 0..n {
+        spec.children[q].clear();
+        spec.children[q].extend_from_slice(&spec_round.cands[q]);
+    }
+}
+
+// =====================================================================
+// Remote shard (client side): one shard, N replicas, failover
+// =====================================================================
+
+/// Client-side transport configuration.
+#[derive(Clone, Debug)]
+pub struct RemoteConfig {
+    /// Ask hosts for speculative expansion and consume the hints
+    /// (halves the network rounds per query; exactness is unaffected).
+    pub speculate: bool,
+    /// Per-round read/write timeout; an expired round fails over to the
+    /// next replica. `Duration::ZERO` disables the timeout (rounds then
+    /// fail over only on connection errors).
+    pub round_timeout: Duration,
+    /// TCP connect timeout per replica attempt.
+    pub connect_timeout: Duration,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        Self {
+            speculate: true,
+            round_timeout: Duration::from_secs(5),
+            connect_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Transport-level serving statistics, shared by every gather worker of
+/// a remote coordinator.
+#[derive(Debug)]
+pub struct RemoteStats {
+    /// Layer rounds shipped over the network (per batch, not per shard).
+    pub rounds: AtomicU64,
+    /// Layer rounds answered from speculation hints (no network hop).
+    pub spec_rounds_saved: AtomicU64,
+    /// Speculation attempts that fell back to a real round.
+    pub spec_misses: AtomicU64,
+    /// Replica failovers (connection drops, timeouts, reconnects).
+    pub failovers: AtomicU64,
+    /// Batches abandoned because every replica of some shard failed.
+    pub failed_batches: AtomicU64,
+    /// Per-shard round latency + gather join wait. Caveat: a gather
+    /// worker reads replies sequentially in shard order (blocking std
+    /// sockets, one thread), so each shard's recorded latency is its
+    /// *read-completion* time — an upper bound that can absorb
+    /// head-of-line waiting on lower-numbered shards — and the join wait
+    /// is `last − first` in that order. The in-process coordinator's
+    /// channel-based scatter records true arrival order; treat the
+    /// remote histograms as a join-cost bound, not per-shard truth.
+    pub scatter: ScatterMetrics,
+}
+
+impl RemoteStats {
+    fn new(num_shards: usize) -> Self {
+        Self {
+            rounds: AtomicU64::new(0),
+            spec_rounds_saved: AtomicU64::new(0),
+            spec_misses: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            failed_batches: AtomicU64::new(0),
+            scatter: ScatterMetrics::new(num_shards),
+        }
+    }
+
+    /// One-line transport summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "rounds={} spec_saved={} spec_misses={} failovers={} failed_batches={}",
+            self.rounds.load(Ordering::Relaxed),
+            self.spec_rounds_saved.load(Ordering::Relaxed),
+            self.spec_misses.load(Ordering::Relaxed),
+            self.failovers.load(Ordering::Relaxed),
+            self.failed_batches.load(Ordering::Relaxed),
+        )
+    }
+}
+
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: TcpStream,
+}
+
+/// One shard's replica set and active connection, plus the pooled
+/// encode/decode buffers. The retained `tx` frame is what makes failover
+/// trivial: a failed round re-sends the identical bytes elsewhere.
+struct RemoteShard {
+    replicas: Vec<SocketAddr>,
+    active: usize,
+    conn: Option<Conn>,
+    info: WireShardInfo,
+    tx: Vec<u8>,
+    rx: Vec<u8>,
+}
+
+impl RemoteShard {
+    /// Connects and handshakes one replica.
+    fn connect_addr(addr: SocketAddr, cfg: &RemoteConfig) -> io::Result<(Conn, WireShardInfo)> {
+        let stream = TcpStream::connect_timeout(&addr, cfg.connect_timeout)?;
+        stream.set_nodelay(true)?;
+        // ZERO means "no timeout" (std rejects a zero timeout outright).
+        let timeout = (cfg.round_timeout > Duration::ZERO).then_some(cfg.round_timeout);
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+        let w = stream.try_clone()?;
+        let mut conn = Conn {
+            r: BufReader::new(stream),
+            w,
+        };
+        let mut buf = Vec::new();
+        wire::encode_hello(&mut buf);
+        conn.w.write_all(&buf)?;
+        match wire::read_frame(&mut conn.r, &mut buf)? {
+            MsgType::ShardInfo => {
+                let info = wire::decode_shard_info(&buf)?;
+                Ok((conn, info))
+            }
+            MsgType::Error => Err(wire::error_from_frame(&buf)),
+            _ => Err(invalid("handshake: unexpected frame type")),
+        }
+    }
+
+    /// Connects the first reachable replica and pins its identity; later
+    /// reconnects must report the same identity.
+    fn new(replicas: Vec<SocketAddr>, cfg: &RemoteConfig) -> io::Result<Self> {
+        assert!(!replicas.is_empty(), "shard needs at least one replica address");
+        let mut last = invalid("unreachable");
+        for (i, &a) in replicas.iter().enumerate() {
+            match Self::connect_addr(a, cfg) {
+                Ok((conn, info)) => {
+                    return Ok(Self {
+                        replicas,
+                        active: i,
+                        conn: Some(conn),
+                        info,
+                        tx: Vec::new(),
+                        rx: Vec::new(),
+                    });
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    fn ensure_conn(&mut self, cfg: &RemoteConfig) -> io::Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let addr = self.replicas[self.active];
+        let (conn, info) = Self::connect_addr(addr, cfg)?;
+        if info != self.info {
+            return Err(invalid(format!(
+                "replica {addr} reports a different shard identity"
+            )));
+        }
+        self.conn = Some(conn);
+        Ok(())
+    }
+
+    /// Drops the active connection and advances to the next replica.
+    fn fail_over(&mut self, stats: &RemoteStats) {
+        self.conn = None;
+        self.active = (self.active + 1) % self.replicas.len();
+        stats.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Best-effort scatter: write the retained `tx` frame on the active
+    /// connection. Failures are absorbed silently — [`RemoteShard::recv`]
+    /// runs the full failover loop.
+    fn send(&mut self, cfg: &RemoteConfig) {
+        if self.ensure_conn(cfg).is_err() {
+            return;
+        }
+        let conn = self.conn.as_mut().expect("connection just ensured");
+        if conn.w.write_all(&self.tx).is_err() {
+            self.conn = None;
+        }
+    }
+
+    /// Bounded failover loop: (re)connect the active replica, re-send the
+    /// retained frame, read the reply. Rounds are stateless, so re-issue
+    /// is always safe.
+    fn round_trip(&mut self, cfg: &RemoteConfig, stats: &RemoteStats) -> io::Result<MsgType> {
+        let attempts = (2 * self.replicas.len()).max(2);
+        let mut last: Option<io::Error> = None;
+        for _ in 0..attempts {
+            if let Err(e) = self.ensure_conn(cfg) {
+                last = Some(e);
+                self.fail_over(stats);
+                continue;
+            }
+            let conn = self.conn.as_mut().expect("connection just ensured");
+            let res = conn
+                .w
+                .write_all(&self.tx)
+                .and_then(|_| wire::read_frame(&mut conn.r, &mut self.rx));
+            match res {
+                // A decoded Error frame is deterministic — replicas of the
+                // same shard would answer the same; do not fail over.
+                Ok(MsgType::Error) => return Err(wire::error_from_frame(&self.rx)),
+                Ok(ty) => return Ok(ty),
+                Err(e) => {
+                    last = Some(e);
+                    self.fail_over(stats);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| invalid("round failed with no attempt")))
+    }
+
+    /// Reads this round's reply into the pooled `rx` buffer, failing over
+    /// (reconnect + re-send + re-read) as needed.
+    fn recv(&mut self, cfg: &RemoteConfig, stats: &RemoteStats) -> io::Result<MsgType> {
+        if let Some(conn) = self.conn.as_mut() {
+            match wire::read_frame(&mut conn.r, &mut self.rx) {
+                Ok(MsgType::Error) => return Err(wire::error_from_frame(&self.rx)),
+                Ok(ty) => return Ok(ty),
+                Err(_) => self.fail_over(stats),
+            }
+        }
+        self.round_trip(cfg, stats)
+    }
+}
+
+// =====================================================================
+// Remote gather stage
+// =====================================================================
+
+/// Probes every address (connect + handshake), groups them by the shard
+/// id each host reports, and returns the replica groups ordered by shard
+/// id — the discovery step behind `serve --remote a:p,b:p,...` (replicas
+/// need no special syntax; hosts identify themselves).
+pub fn discover(addrs: &[SocketAddr], cfg: &RemoteConfig) -> io::Result<Vec<Vec<SocketAddr>>> {
+    if addrs.is_empty() {
+        return Err(invalid("no shard-host addresses given"));
+    }
+    let mut num_shards: Option<u32> = None;
+    let mut groups: Vec<Vec<SocketAddr>> = Vec::new();
+    for &a in addrs {
+        let (_, info) = RemoteShard::connect_addr(a, cfg)
+            .map_err(|e| io::Error::new(e.kind(), format!("probing {a}: {e}")))?;
+        let s = *num_shards.get_or_insert(info.num_shards);
+        if info.num_shards != s {
+            return Err(invalid(format!(
+                "{a} reports a {}-shard partition, earlier hosts reported {s}",
+                info.num_shards
+            )));
+        }
+        if groups.len() < s as usize {
+            groups.resize_with(s as usize, Vec::new);
+        }
+        groups[info.shard_id as usize].push(a);
+    }
+    let missing: Vec<String> = groups
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| g.is_empty())
+        .map(|(i, _)| i.to_string())
+        .collect();
+    if !missing.is_empty() {
+        return Err(invalid(format!(
+            "incomplete partition: no host for shard(s) {}",
+            missing.join(", ")
+        )));
+    }
+    Ok(groups)
+}
+
+/// The remote gather stage: drives N shard hosts through the
+/// layer-synchronized protocol exactly like the in-process
+/// [`ShardedEngine`] drives its units, with replica failover and
+/// speculative round skipping. One `RemoteGather` per serving thread —
+/// it owns its connections, its [`GatherArena`] and every codec buffer,
+/// so rounds are alloc-bounded once warm.
+pub struct RemoteGather {
+    shards: Vec<RemoteShard>,
+    cfg: RemoteConfig,
+    depth: usize,
+    dim: usize,
+    num_labels: u64,
+    arena: GatherArena,
+    spec: Vec<SpecRound>,
+    spec_ok: Vec<bool>,
+    x: CsrMatrix,
+    round_id: u64,
+    stats: Arc<RemoteStats>,
+}
+
+impl RemoteGather {
+    /// Discovers the partition behind `addrs` and connects every shard.
+    pub fn connect(addrs: &[SocketAddr], cfg: RemoteConfig) -> io::Result<Self> {
+        let groups = discover(addrs, &cfg)?;
+        Self::connect_groups(&groups, cfg, None)
+    }
+
+    /// Connects explicit replica groups (`groups[i]` = addresses of shard
+    /// `i`'s replicas), validating that the hosts form one complete,
+    /// contiguous partition. `stats` shares transport telemetry across
+    /// gather workers; `None` creates a fresh set.
+    pub fn connect_groups(
+        groups: &[Vec<SocketAddr>],
+        cfg: RemoteConfig,
+        stats: Option<Arc<RemoteStats>>,
+    ) -> io::Result<Self> {
+        if groups.is_empty() {
+            return Err(invalid("no shard replica groups"));
+        }
+        let mut shards = Vec::with_capacity(groups.len());
+        for g in groups {
+            shards.push(RemoteShard::new(g.clone(), &cfg)?);
+        }
+        shards.sort_by_key(|s| s.info.shard_id);
+        let (depth, dim, num_labels) = validate_topology(&shards)?;
+        let s_count = shards.len();
+        let stats = stats.unwrap_or_else(|| Arc::new(RemoteStats::new(s_count)));
+        if stats.scatter.num_shards() != s_count {
+            return Err(invalid("shared stats sized for a different shard count"));
+        }
+        Ok(Self {
+            shards,
+            cfg,
+            depth,
+            dim,
+            num_labels,
+            arena: GatherArena::new(),
+            spec: (0..s_count).map(|_| SpecRound::default()).collect(),
+            spec_ok: vec![false; s_count],
+            x: CsrMatrix::default(),
+            round_id: 0,
+            stats,
+        })
+    }
+
+    /// Number of shards in the partition.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Tree depth in ranker layers.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Feature dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total labels across shards.
+    pub fn num_labels(&self) -> u64 {
+        self.num_labels
+    }
+
+    /// Shared transport statistics.
+    pub fn stats(&self) -> &Arc<RemoteStats> {
+        &self.stats
+    }
+
+    /// Per-query results of the last completed batch.
+    pub fn results(&self) -> &[Vec<Prediction>] {
+        self.arena.results()
+    }
+
+    /// Online remote inference for one query; the returned slice lives in
+    /// the gather arena until the next call.
+    pub fn predict_with(
+        &mut self,
+        q: &SparseVec,
+        beam: usize,
+        topk: usize,
+    ) -> io::Result<&[Prediction]> {
+        self.x.reset(self.dim);
+        self.x.push_row(q.view());
+        self.run(1, beam, topk)?;
+        Ok(&self.arena.results()[0])
+    }
+
+    /// Online remote inference, returning an owned ranking.
+    pub fn predict(
+        &mut self,
+        q: &SparseVec,
+        beam: usize,
+        topk: usize,
+    ) -> io::Result<Vec<Prediction>> {
+        self.predict_with(q, beam, topk).map(|p| p.to_vec())
+    }
+
+    /// Batch remote inference; rankings land in [`RemoteGather::results`].
+    pub fn predict_batch_into(
+        &mut self,
+        x: &CsrMatrix,
+        beam: usize,
+        topk: usize,
+    ) -> io::Result<()> {
+        assert_eq!(x.cols, self.dim, "query dim mismatch");
+        self.load_queries(x.cols, (0..x.rows).map(|i| x.row(i)));
+        self.run(x.rows, beam, topk)
+    }
+
+    /// Rebuilds the pooled query matrix in place.
+    pub(crate) fn load_queries<'a>(
+        &mut self,
+        dim: usize,
+        rows: impl IntoIterator<Item = SparseVecView<'a>>,
+    ) {
+        self.x.assign_rows(dim, rows);
+    }
+
+    /// The remote layer-synchronized driver over the queries already
+    /// loaded into the pooled matrix. The per-layer sequence is the
+    /// in-process one — scatter ([`wire`]-shipped [`ShardRound`]s instead
+    /// of channel-shipped ones), merge, global `select_top`, split — so
+    /// the output is bit-identical to [`ShardedEngine`] and therefore to
+    /// the unsharded engine.
+    pub(crate) fn run(&mut self, n: usize, beam: usize, topk: usize) -> io::Result<()> {
+        let r = self.run_rounds(n, beam, topk);
+        if r.is_err() {
+            // A batch that failed mid-join (every replica of some shard
+            // gone, or a desynced reply) can leave unread Cands frames
+            // buffered on the surviving connections. Drop every
+            // connection so the next batch reconnects clean instead of
+            // reading stale replies forever — rounds are stateless, so a
+            // reconnect costs one handshake and nothing else.
+            for sh in &mut self.shards {
+                sh.conn = None;
+            }
+        }
+        r
+    }
+
+    fn run_rounds(&mut self, n: usize, beam: usize, topk: usize) -> io::Result<()> {
+        assert!(beam >= 1, "beam width must be >= 1");
+        assert_eq!(self.x.rows, n, "query matrix not loaded for this batch");
+        let s_count = self.shards.len();
+        self.arena.begin_rounds(s_count, n);
+        let mut l = 0usize;
+        while l < self.depth {
+            let want_spec = self.cfg.speculate && l + 1 < self.depth;
+            self.round_id += 1;
+            let rid = self.round_id;
+            let hdr = ExpandHeader {
+                round_id: rid,
+                layer: l as u32,
+                beam: beam as u32,
+                speculate: want_spec,
+            };
+            // Scatter: encode every shard's slice, write them all before
+            // reading any reply so hosts expand concurrently.
+            for s in 0..s_count {
+                wire::encode_expand(
+                    &mut self.shards[s].tx,
+                    &hdr,
+                    &self.x,
+                    &self.arena.rounds[s].beams,
+                    n,
+                );
+                self.shards[s].send(&self.cfg);
+            }
+            // Join: collect replies in shard order, failing over as
+            // needed; record per-shard latency and the join wait (read-
+            // completion order — see the `RemoteStats::scatter` caveat).
+            let t_round = Instant::now();
+            let mut first_reply = Duration::ZERO;
+            let mut last_reply = Duration::ZERO;
+            for s in 0..s_count {
+                let ty = self.shards[s].recv(&self.cfg, &self.stats)?;
+                if ty != MsgType::Cands {
+                    return Err(invalid(format!("shard {s}: expected Cands, got {ty:?}")));
+                }
+                let ch: CandsHeader = wire::decode_cands(
+                    &self.shards[s].rx,
+                    &mut self.arena.rounds[s],
+                    &mut self.spec[s],
+                )?;
+                if ch.round_id != rid || ch.layer != l as u32 {
+                    return Err(invalid(format!("shard {s}: reply out of sync")));
+                }
+                if self.arena.rounds[s].n != n {
+                    return Err(invalid(format!("shard {s}: reply for a different batch size")));
+                }
+                self.spec_ok[s] = ch.has_spec && self.spec[s].n == n;
+                let elapsed = t_round.elapsed();
+                self.stats.scatter.record_round(s, elapsed);
+                if s == 0 {
+                    first_reply = elapsed;
+                }
+                last_reply = elapsed;
+            }
+            self.stats.scatter.record_join_wait(last_reply.saturating_sub(first_reply));
+            self.stats.rounds.fetch_add(1, Ordering::Relaxed);
+            self.merge_layer(l, beam);
+            l += 1;
+            // Speculative skip: if every host sent a usable hint, the
+            // next layer's exact candidates are already here.
+            if l < self.depth && want_spec {
+                if self.try_assemble_spec(n) {
+                    self.stats.spec_rounds_saved.fetch_add(1, Ordering::Relaxed);
+                    self.merge_layer(l, beam);
+                    l += 1;
+                } else {
+                    self.stats.spec_misses.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        for q in 0..n {
+            rank_into(&mut self.arena.global_beams[q], topk, &mut self.arena.out[q]);
+        }
+        Ok(())
+    }
+
+    /// [`merge_and_split_layer`] over the wire-announced shard ranges.
+    fn merge_layer(&mut self, layer: usize, beam: usize) {
+        let shards = &self.shards;
+        merge_and_split_layer(
+            shards.len(),
+            |s| {
+                let info = &shards[s].info;
+                let lo = info.layer_offsets[layer];
+                (lo, lo + info.layer_nodes[layer])
+            },
+            beam,
+            &mut self.arena,
+        );
+    }
+
+    /// Assembles the next layer's candidates from the speculation hints:
+    /// for each query, walks the **true** local beam (left by the last
+    /// merge) against the speculated parents (both ascending) and copies
+    /// each surviving parent's children — exactly the candidates a real
+    /// round would generate, in the order [`expand_round`] generates
+    /// them. Returns `false` (fall back to a real round) if any shard's
+    /// hint fails to cover its true beam slice.
+    fn try_assemble_spec(&mut self, n: usize) -> bool {
+        let s_count = self.shards.len();
+        if self.spec_ok[..s_count].iter().any(|&ok| !ok) {
+            return false;
+        }
+        for s in 0..s_count {
+            let round = &mut self.arena.rounds[s];
+            let sp = &self.spec[s];
+            for q in 0..n {
+                let beamv = &round.beams[q];
+                let cand = &mut round.cands[q];
+                cand.clear();
+                let parents = &sp.parents[q];
+                let counts = &sp.child_counts[q];
+                let children = &sp.children[q];
+                let mut pi = 0usize; // cursor into parents
+                let mut off = 0usize; // flat child offset of parents[..pi]
+                for &(node, score) in beamv {
+                    while pi < parents.len() && parents[pi].0 < node {
+                        off += counts[pi] as usize;
+                        pi += 1;
+                    }
+                    if pi >= parents.len() || parents[pi].0 != node {
+                        return false; // hint does not cover the true beam
+                    }
+                    debug_assert_eq!(
+                        parents[pi].1.to_bits(),
+                        score.to_bits(),
+                        "speculated parent score diverged"
+                    );
+                    let w = counts[pi] as usize;
+                    if off + w > children.len() {
+                        return false; // malformed hint
+                    }
+                    cand.extend_from_slice(&children[off..off + w]);
+                    off += w;
+                    pi += 1;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Validates that the connected hosts form one complete, gap-free
+/// partition (mirrors `load_shards`' checks): ids `0..S` exactly once,
+/// equal depth/dim, every layer's column ranges tiling contiguously,
+/// labels contiguous. Returns `(depth, dim, total_labels)`.
+fn validate_topology(shards: &[RemoteShard]) -> io::Result<(usize, usize, u64)> {
+    let s_count = shards.len();
+    let num_shards = shards[0].info.num_shards as usize;
+    if num_shards != s_count {
+        return Err(invalid(format!(
+            "incomplete partition: connected {s_count} of {num_shards} shards"
+        )));
+    }
+    let depth = shards[0].info.depth as usize;
+    let dim = shards[0].info.dim as usize;
+    let mut next_cols = vec![0u32; depth];
+    let mut next_label = 0u64;
+    for (i, sh) in shards.iter().enumerate() {
+        let info = &sh.info;
+        if info.shard_id as usize != i || info.num_shards as usize != num_shards {
+            return Err(invalid("duplicate or mismatched shard ids"));
+        }
+        if info.depth as usize != depth {
+            return Err(invalid(format!("shard {i} depth disagrees with shard 0")));
+        }
+        if info.dim as usize != dim {
+            return Err(invalid(format!("shard {i} dim disagrees with shard 0")));
+        }
+        if info.label_offset != next_label {
+            return Err(invalid(format!("shard {i} labels are not contiguous")));
+        }
+        for (l, nc) in next_cols.iter_mut().enumerate() {
+            if info.layer_offsets[l] != *nc {
+                return Err(invalid(format!(
+                    "shard {i} layer {l} columns are not contiguous with its predecessor"
+                )));
+            }
+            *nc += info.layer_nodes[l];
+        }
+        next_label += info.num_labels;
+    }
+    Ok((depth, dim, next_label))
+}
+
+// =====================================================================
+// Remote sharded coordinator
+// =====================================================================
+
+/// Configuration of the remote serving stack.
+#[derive(Clone, Debug, Default)]
+pub struct RemoteCoordinatorConfig {
+    /// Front-door configuration; `base.workers` gather workers each own
+    /// their private connections to every shard.
+    pub base: CoordinatorConfig,
+    /// Transport knobs (speculation, timeouts).
+    pub remote: RemoteConfig,
+}
+
+struct RemoteInner {
+    config: RemoteCoordinatorConfig,
+    stats: CoordinatorStats,
+    remote_stats: Arc<RemoteStats>,
+    router: Router,
+    dim: usize,
+    num_shards: usize,
+    num_labels: u64,
+}
+
+/// The cross-process serving system: the same dynamic batcher and router
+/// as [`super::ShardedCoordinator`], with gather workers that drive
+/// remote shard hosts through [`RemoteGather`] instead of in-process
+/// worker pools. Results are bit-identical; shards live wherever their
+/// hosts do.
+pub struct RemoteShardedCoordinator {
+    inner: Arc<RemoteInner>,
+    batcher: Option<JoinHandle<()>>,
+    gatherers: Option<WorkerPool>,
+}
+
+impl RemoteShardedCoordinator {
+    /// Discovers the partition behind `addrs` and starts serving.
+    pub fn start(addrs: &[SocketAddr], config: RemoteCoordinatorConfig) -> io::Result<Self> {
+        let groups = discover(addrs, &config.remote)?;
+        Self::start_groups(&groups, config)
+    }
+
+    /// Starts serving against explicit replica groups. Every gather
+    /// worker connects to every shard up front, so a dead host fails
+    /// loudly here rather than on the first query.
+    pub fn start_groups(
+        groups: &[Vec<SocketAddr>],
+        config: RemoteCoordinatorConfig,
+    ) -> io::Result<Self> {
+        let workers = config.base.workers.max(1);
+        let mut gathers = Vec::with_capacity(workers);
+        let first = RemoteGather::connect_groups(groups, config.remote.clone(), None)?;
+        let remote_stats = Arc::clone(first.stats());
+        let dim = first.dim();
+        let num_shards = first.num_shards();
+        let num_labels = first.num_labels();
+        gathers.push(first);
+        for _ in 1..workers {
+            gathers.push(RemoteGather::connect_groups(
+                groups,
+                config.remote.clone(),
+                Some(Arc::clone(&remote_stats)),
+            )?);
+        }
+
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let inner = Arc::new(RemoteInner {
+            stats: CoordinatorStats::default(),
+            remote_stats,
+            router: Router::new(req_tx, config.base.queue_capacity),
+            dim,
+            num_shards,
+            num_labels,
+            config: config.clone(),
+        });
+        let batcher = {
+            let inner = Arc::clone(&inner);
+            spawn_batcher(
+                "mscm-remote-batcher".into(),
+                req_rx,
+                batch_tx,
+                config.base.max_batch,
+                config.base.max_batch_delay,
+                move |n| {
+                    inner.stats.batches.fetch_add(1, Ordering::Relaxed);
+                    inner.stats.batched_queries.fetch_add(n as u64, Ordering::Relaxed);
+                },
+            )
+        };
+        let gatherers = {
+            let inner = Arc::clone(&inner);
+            let slots: Arc<Mutex<Vec<Option<RemoteGather>>>> =
+                Arc::new(Mutex::new(gathers.into_iter().map(Some).collect()));
+            WorkerPool::spawn(
+                "mscm-remote-gather",
+                workers,
+                batch_rx,
+                move |w| slots.lock().unwrap()[w].take().expect("gather slot taken twice"),
+                move |g, batch: Vec<Request>| remote_batch(&inner, g, batch),
+            )
+        };
+        Ok(Self {
+            inner,
+            batcher: Some(batcher),
+            gatherers: Some(gatherers),
+        })
+    }
+
+    /// Submits a query; the reply arrives on the returned channel.
+    pub fn submit(&self, query: SparseVec) -> Result<(u64, mpsc::Receiver<Response>), SubmitError> {
+        self.inner.router.submit(query, &self.inner.stats)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn query_blocking(&self, query: SparseVec) -> Result<Response, SubmitError> {
+        let (_, rx) = self.submit(query)?;
+        rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    /// Serving statistics (front-door view).
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.inner.stats
+    }
+
+    /// Transport statistics (rounds, speculation, failover, per-shard
+    /// round latency).
+    pub fn remote_stats(&self) -> &Arc<RemoteStats> {
+        &self.inner.remote_stats
+    }
+
+    /// Feature dimension `d` announced by the hosts.
+    pub fn dim(&self) -> usize {
+        self.inner.dim
+    }
+
+    /// Number of remote shards.
+    pub fn num_shards(&self) -> usize {
+        self.inner.num_shards
+    }
+
+    /// Total labels across shards.
+    pub fn num_labels(&self) -> u64 {
+        self.inner.num_labels
+    }
+
+    /// Stops accepting new work; in-flight batches still complete.
+    pub fn stop(&self) {
+        self.inner.router.close();
+    }
+
+    /// Stops accepting work, drains in-flight batches, joins every
+    /// thread. Host connections close as the gather workers drop.
+    pub fn shutdown(mut self) {
+        self.stop();
+        if let Some(b) = self.batcher.take() {
+            b.join().ok();
+        }
+        if let Some(g) = self.gatherers.take() {
+            g.join();
+        }
+    }
+}
+
+/// Remote gather-worker body: one batch through [`RemoteGather::run`],
+/// then reply per request — the mirror of the in-process coordinator's
+/// `scatter_gather`.
+fn remote_batch(inner: &RemoteInner, g: &mut RemoteGather, batch: Vec<Request>) {
+    let n = batch.len();
+    let dispatch_time = Instant::now();
+    g.load_queries(inner.dim, batch.iter().map(|req| req.query.view()));
+    if g.run(n, inner.config.base.beam, inner.config.base.topk).is_err() {
+        // Every replica of some shard is gone: abandon the batch — the
+        // dropped reply senders signal the clients.
+        inner.remote_stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+        for _ in 0..n {
+            inner.router.mark_done();
+        }
+        return;
+    }
+    for (q, req) in batch.into_iter().enumerate() {
+        let queue_time = dispatch_time.duration_since(req.submitted);
+        let total_time = req.submitted.elapsed();
+        inner.stats.queue_wait.record(queue_time);
+        inner.stats.latency.record(total_time);
+        inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        inner.router.mark_done();
+        let _ = req.reply.send(Response {
+            id: req.id,
+            predictions: g.results()[q].clone(),
+            queue_time,
+            total_time,
+            batch_size: n,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::{IterationMethod, MatmulAlgo};
+    use crate::shard::partition;
+    use crate::tree::test_util::tiny_model;
+    use crate::util::Rng;
+
+    fn rand_query(rng: &mut Rng, dim: usize) -> SparseVec {
+        SparseVec::from_pairs(
+            (0..rng.gen_range(1..dim / 2))
+                .map(|_| (rng.gen_range(0..dim) as u32, rng.gen_f32(-1.0, 1.0)))
+                .collect(),
+        )
+    }
+
+    fn spawn_partition(
+        model: &crate::tree::XmrModel,
+        s: usize,
+        cfg: EngineConfig,
+        speculate: bool,
+    ) -> (Vec<ShardHost>, Vec<Vec<SocketAddr>>) {
+        let mut hosts = Vec::new();
+        let mut groups = Vec::new();
+        for shard in partition(model, s) {
+            let host = ShardHost::spawn(
+                shard,
+                ShardHostConfig {
+                    engine: cfg,
+                    speculate,
+                    ..Default::default()
+                },
+                "127.0.0.1:0",
+            )
+            .expect("spawn host");
+            groups.push(vec![host.local_addr()]);
+            hosts.push(host);
+        }
+        (hosts, groups)
+    }
+
+    #[test]
+    fn remote_gather_matches_unsharded_engine() {
+        let m = tiny_model(32, 4, 3, 4097);
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+        let reference = InferenceEngine::new(m.clone(), cfg);
+        for speculate in [false, true] {
+            let (hosts, groups) = spawn_partition(&m, 3, cfg, speculate);
+            let mut g = RemoteGather::connect_groups(
+                &groups,
+                RemoteConfig {
+                    speculate,
+                    ..Default::default()
+                },
+                None,
+            )
+            .expect("connect");
+            assert_eq!(g.num_shards(), 3);
+            assert_eq!(g.dim(), 32);
+            let mut rng = Rng::seed_from_u64(11);
+            for qi in 0..10 {
+                let q = rand_query(&mut rng, 32);
+                for beam in [1usize, 3, 8] {
+                    assert_eq!(
+                        g.predict(&q, beam, 5).expect("predict"),
+                        reference.predict(&q, beam, 5),
+                        "speculate={speculate} beam={beam} q={qi}"
+                    );
+                }
+            }
+            for h in hosts {
+                h.shutdown();
+            }
+        }
+    }
+
+    #[test]
+    fn speculation_halves_network_rounds() {
+        let m = tiny_model(24, 3, 3, 5); // depth 3
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers);
+        let (hosts, groups) = spawn_partition(&m, 2, cfg, true);
+        let mut g = RemoteGather::connect_groups(&groups, RemoteConfig::default(), None).unwrap();
+        let depth = g.depth();
+        assert_eq!(depth, 3);
+        let mut rng = Rng::seed_from_u64(2);
+        let queries = 6u64;
+        for _ in 0..queries {
+            g.predict(&rand_query(&mut rng, 24), 4, 5).unwrap();
+        }
+        let st = g.stats();
+        // depth 3 → rounds 0 and 2 ship, round 1 is assembled from hints.
+        assert_eq!(st.rounds.load(Ordering::Relaxed), queries * depth.div_ceil(2) as u64);
+        assert_eq!(st.spec_rounds_saved.load(Ordering::Relaxed), queries * (depth / 2) as u64);
+        assert_eq!(st.spec_misses.load(Ordering::Relaxed), 0);
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+
+    #[test]
+    fn host_that_declines_speculation_falls_back_to_real_rounds() {
+        let m = tiny_model(24, 3, 3, 6);
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch);
+        let reference = InferenceEngine::new(m.clone(), cfg);
+        // Hosts refuse to speculate; the client asks anyway.
+        let (hosts, groups) = spawn_partition(&m, 2, cfg, false);
+        let mut g = RemoteGather::connect_groups(&groups, RemoteConfig::default(), None).unwrap();
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..5 {
+            let q = rand_query(&mut rng, 24);
+            assert_eq!(g.predict(&q, 3, 5).unwrap(), reference.predict(&q, 3, 5));
+        }
+        let st = g.stats();
+        assert_eq!(st.spec_rounds_saved.load(Ordering::Relaxed), 0);
+        assert!(st.spec_misses.load(Ordering::Relaxed) > 0);
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+
+    #[test]
+    fn discovery_groups_replicas_by_reported_shard_id() {
+        let m = tiny_model(24, 3, 2, 9);
+        let shards = partition(&m, 2);
+        let cfg = ShardHostConfig::default();
+        let h0a = ShardHost::spawn(shards[0].clone(), cfg.clone(), "127.0.0.1:0").unwrap();
+        let h0b = ShardHost::spawn(shards[0].clone(), cfg.clone(), "127.0.0.1:0").unwrap();
+        let h1 = ShardHost::spawn(shards[1].clone(), cfg, "127.0.0.1:0").unwrap();
+        // Deliberately interleaved address order.
+        let addrs = vec![h1.local_addr(), h0a.local_addr(), h0b.local_addr()];
+        let groups = discover(&addrs, &RemoteConfig::default()).expect("discover");
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], vec![h0a.local_addr(), h0b.local_addr()]);
+        assert_eq!(groups[1], vec![h1.local_addr()]);
+        // A missing shard is rejected.
+        let err = discover(&[h1.local_addr()], &RemoteConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+        h0a.shutdown();
+        h0b.shutdown();
+        h1.shutdown();
+    }
+}

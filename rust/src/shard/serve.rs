@@ -47,7 +47,7 @@
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::engine::{GatherArena, ShardRound, ShardedEngine};
 use crate::coordinator::batcher::{spawn_batcher, WorkerPool};
@@ -152,7 +152,7 @@ impl ShardedCoordinator {
         let inner = Arc::new(Inner {
             engine: Arc::clone(&engine),
             config: config.clone(),
-            stats: CoordinatorStats::default(),
+            stats: CoordinatorStats::with_scatter(num_shards),
             router: Router::new(req_tx, config.base.queue_capacity),
             shard_txs: Mutex::new(shard_txs),
         });
@@ -271,6 +271,7 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
 
     let ok = engine.drive(n, beam, topk, arena, |l, rounds| {
         let (tx, rx) = mpsc::channel();
+        let t_round = Instant::now();
         {
             let txs = inner.shard_txs.lock().unwrap();
             for (s, stx) in txs.iter().enumerate() {
@@ -289,9 +290,25 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
         }
         drop(tx);
         let mut received = 0usize;
+        // Round telemetry: per-shard reply latency plus the join wait
+        // (last reply − first reply — the idle time the slowest shard
+        // costs the gather join).
+        let mut first_reply = Duration::ZERO;
+        let mut last_reply = Duration::ZERO;
         while let Ok((s, round)) = rx.recv() {
+            let elapsed = t_round.elapsed();
+            if let Some(sc) = &inner.stats.scatter {
+                sc.record_round(s, elapsed);
+            }
+            if received == 0 {
+                first_reply = elapsed;
+            }
+            last_reply = elapsed;
             rounds[s] = round;
             received += 1;
+        }
+        if let Some(sc) = &inner.stats.scatter {
+            sc.record_join_wait(last_reply.saturating_sub(first_reply));
         }
         received == num_shards
     });
@@ -376,6 +393,16 @@ mod tests {
             assert_eq!(resp.predictions, direct, "query {i}");
         }
         assert_eq!(coord.stats().completed.load(Ordering::Relaxed), 120);
+        // Scatter telemetry: every shard's round histogram and the join
+        // wait saw every layer round of every batch.
+        let sc = coord.stats().scatter.as_ref().expect("sharded stats carry scatter telemetry");
+        assert_eq!(sc.num_shards(), 4);
+        let rounds = sc.rounds.load(Ordering::Relaxed);
+        assert!(rounds > 0, "no scatter rounds recorded");
+        for s in 0..4 {
+            assert_eq!(sc.shard(s).count(), rounds, "shard {s} missed rounds");
+        }
+        assert_eq!(sc.join_wait.count(), rounds);
         coord.shutdown();
     }
 

@@ -1,0 +1,666 @@
+//! The shard wire protocol: versioned, length-prefixed binary frames for
+//! the layer-synchronized scatter-gather rounds between a gather stage
+//! and remote shard hosts.
+//!
+//! # Framing
+//!
+//! Every message is one frame (all integers little-endian):
+//!
+//! ```text
+//! magic        u32  = 0x4d58_5750 ("PWXM" on the wire)
+//! version      u16  = WIRE_VERSION (exact match required)
+//! msg_type     u16  (MsgType)
+//! payload_len  u32  (bytes after this header; capped at MAX_FRAME)
+//! payload      payload_len bytes
+//! ```
+//!
+//! [`read_frame`] validates magic, version and length before touching the
+//! payload; a version mismatch is a hard error (the peer replies with an
+//! [`MsgType::Error`] frame and closes). Truncated headers or payloads
+//! surface as `UnexpectedEof`; structural violations inside a payload
+//! (list lengths past the frame end, trailing bytes, out-of-range ids)
+//! surface as `InvalidData`.
+//!
+//! # Messages
+//!
+//! | type        | direction     | payload |
+//! |-------------|---------------|---------|
+//! | `Hello`     | client → host | empty (version rides in the header) |
+//! | `ShardInfo` | host → client | shard identity + per-layer topology |
+//! | `Expand`    | client → host | one layer round: queries + beam slices |
+//! | `Cands`     | host → client | per-query candidates (+ speculation) |
+//! | `Error`     | host → client | code + message, then the host closes |
+//!
+//! An `Expand` carries *everything* the round needs — the query rows and
+//! the shard-local beam slice — so rounds are stateless: a round that
+//! times out on one replica re-issues byte-identically to the next
+//! ([`super::remote`]'s failover).
+//!
+//! # Pooling
+//!
+//! Encoders write whole frames into a caller-held `Vec<u8>` (cleared, so
+//! capacity is recycled); decoders fill the caller's pooled
+//! [`ShardRound`] / [`SpecRound`] / `CsrMatrix` buffers in place. After
+//! warmup at a bounded batch size the codec performs no allocations
+//! beyond amortized buffer growth.
+
+use std::io::{self, Read};
+
+use super::engine::ShardRound;
+use crate::sparse::CsrMatrix;
+
+/// Frame magic ("MXWP" as a little-endian u32).
+pub const WIRE_MAGIC: u32 = 0x4d58_5750;
+/// Protocol version; peers must match exactly.
+pub const WIRE_VERSION: u16 = 1;
+/// Frame header length in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Maximum accepted payload (guards against garbage length fields).
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Error code: the peer speaks a different protocol version.
+pub const ERR_VERSION: u32 = 1;
+/// Error code: malformed or out-of-range frame contents.
+pub const ERR_MALFORMED: u32 = 2;
+/// Error code: frame type not valid in the current protocol state.
+pub const ERR_PROTOCOL: u32 = 3;
+
+/// Frame types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgType {
+    /// Client handshake (empty payload).
+    Hello,
+    /// Host handshake reply: shard identity + topology.
+    ShardInfo,
+    /// One scatter round: beam slices (+ queries) for one layer.
+    Expand,
+    /// Round reply: per-query candidates, optionally with speculation.
+    Cands,
+    /// Protocol failure; the sender closes after this frame.
+    Error,
+}
+
+impl MsgType {
+    fn code(self) -> u16 {
+        match self {
+            MsgType::Hello => 1,
+            MsgType::ShardInfo => 2,
+            MsgType::Expand => 3,
+            MsgType::Cands => 4,
+            MsgType::Error => 5,
+        }
+    }
+
+    fn from_code(c: u16) -> Option<MsgType> {
+        Some(match c {
+            1 => MsgType::Hello,
+            2 => MsgType::ShardInfo,
+            3 => MsgType::Expand,
+            4 => MsgType::Cands,
+            5 => MsgType::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// Shard identity + topology, as announced in the handshake — everything
+/// the gather stage needs to merge this shard's candidates into global
+/// node ids and split the global beam back ([`super::RemoteGather`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireShardInfo {
+    /// Shard index in `0..num_shards`.
+    pub shard_id: u32,
+    /// Total shards in the partition.
+    pub num_shards: u32,
+    /// Tree depth in ranker layers.
+    pub depth: u32,
+    /// Feature dimension `d`.
+    pub dim: u64,
+    /// Global label id of local label 0.
+    pub label_offset: u64,
+    /// Labels owned by this shard.
+    pub num_labels: u64,
+    /// Global column id of each layer's local node 0.
+    pub layer_offsets: Vec<u32>,
+    /// Local node count per layer.
+    pub layer_nodes: Vec<u32>,
+}
+
+/// Header of an [`MsgType::Expand`] round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpandHeader {
+    /// Client-chosen round id, echoed in the reply (desync detector).
+    pub round_id: u64,
+    /// Layer being expanded.
+    pub layer: u32,
+    /// Global beam width (also the speculation width).
+    pub beam: u32,
+    /// Ask the host to piggyback its local top-`beam` expansion of the
+    /// *next* layer onto the reply.
+    pub speculate: bool,
+}
+
+/// Header of an [`MsgType::Cands`] reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CandsHeader {
+    /// Echo of the request's round id.
+    pub round_id: u64,
+    /// Echo of the expanded layer.
+    pub layer: u32,
+    /// The reply carries a speculation section.
+    pub has_spec: bool,
+}
+
+/// A host's speculative expansion of one layer, pooled like
+/// [`ShardRound`]: for each query, the shard-local top-`beam` candidates
+/// of the *previous* layer (`parents`, node ids ascending) and, flattened
+/// in parent order, every child candidate those parents generate
+/// (`children`, `child_counts[p]` entries per parent).
+///
+/// Because the true local beam slice of the global beam is always a
+/// subset of the shard's local top-`beam` (anything that survives the
+/// global cut survives the shard-local cut a fortiori), the gather stage
+/// can assemble the next layer's exact candidates from this hint and skip
+/// the network round entirely — see [`super::remote`].
+#[derive(Debug, Default)]
+pub struct SpecRound {
+    /// Live query count; only the first `n` entries of each buffer hold
+    /// this round's data.
+    pub n: usize,
+    /// Per query: speculated parents (local node ids ascending).
+    pub parents: Vec<Vec<(u32, f32)>>,
+    /// Per query: children generated per parent (sibling-chunk widths).
+    pub child_counts: Vec<Vec<u32>>,
+    /// Per query: flattened `(local node, path score)` children.
+    pub children: Vec<Vec<(u32, f32)>>,
+}
+
+impl SpecRound {
+    /// Grows the per-query buffers to `n` (never shrinks — high-water
+    /// capacity is the pooling contract).
+    pub fn ensure(&mut self, n: usize) {
+        self.n = n;
+        if self.parents.len() < n {
+            self.parents.resize_with(n, Vec::new);
+        }
+        if self.child_counts.len() < n {
+            self.child_counts.resize_with(n, Vec::new);
+        }
+        if self.children.len() < n {
+            self.children.resize_with(n, Vec::new);
+        }
+    }
+}
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Stable marker embedded in version-mismatch errors; classification
+/// happens via [`error_code_for`], never by peers matching free text.
+const VERSION_MSG: &str = "protocol version mismatch";
+
+/// Maps a frame-reading error to the [`MsgType::Error`] code a host
+/// should reply with — the single place tying error construction to
+/// wire codes, so rewording messages cannot silently change the code a
+/// peer receives.
+pub fn error_code_for(e: &io::Error) -> u32 {
+    if e.to_string().contains(VERSION_MSG) {
+        ERR_VERSION
+    } else {
+        ERR_PROTOCOL
+    }
+}
+
+// ---------------------------------------------------------------------
+// primitive writers
+// ---------------------------------------------------------------------
+
+#[inline]
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_pairs(buf: &mut Vec<u8>, pairs: &[(u32, f32)]) {
+    for &(a, b) in pairs {
+        put_u32(buf, a);
+        put_f32(buf, b);
+    }
+}
+
+/// Starts a frame: header with a length placeholder.
+fn begin_frame(buf: &mut Vec<u8>, ty: MsgType) {
+    buf.clear();
+    put_u32(buf, WIRE_MAGIC);
+    put_u16(buf, WIRE_VERSION);
+    put_u16(buf, ty.code());
+    put_u32(buf, 0); // payload length backpatched by end_frame
+}
+
+/// Backpatches the payload length.
+fn end_frame(buf: &mut Vec<u8>) {
+    let len = buf.len() - HEADER_LEN;
+    debug_assert!(len <= MAX_FRAME, "frame over MAX_FRAME");
+    buf[8..12].copy_from_slice(&(len as u32).to_le_bytes());
+}
+
+// ---------------------------------------------------------------------
+// primitive reader
+// ---------------------------------------------------------------------
+
+/// Bounds-checked payload cursor; every read fails loudly on truncation.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            return Err(invalid("truncated payload"));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Checks `n` more bytes exist without consuming them — used before
+    /// list reads so a garbage length field fails fast instead of
+    /// looping.
+    fn need(&self, n: usize) -> io::Result<()> {
+        if self.b.len() - self.pos < n {
+            return Err(invalid("truncated payload (list length past frame end)"));
+        }
+        Ok(())
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32(&mut self) -> io::Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn pairs_into(&mut self, count: usize, out: &mut Vec<(u32, f32)>) -> io::Result<()> {
+        self.need(count * 8)?;
+        out.clear();
+        out.reserve(count);
+        for _ in 0..count {
+            let a = self.u32()?;
+            let b = self.f32()?;
+            out.push((a, b));
+        }
+        Ok(())
+    }
+
+    fn u32s_into(&mut self, count: usize, out: &mut Vec<u32>) -> io::Result<()> {
+        self.need(count * 4)?;
+        out.clear();
+        out.reserve(count);
+        for _ in 0..count {
+            out.push(self.u32()?);
+        }
+        Ok(())
+    }
+
+    /// Payloads must be consumed exactly — trailing bytes mean the peer
+    /// and we disagree about the message layout.
+    fn done(&self) -> io::Result<()> {
+        if self.pos != self.b.len() {
+            return Err(invalid("trailing bytes in frame payload"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// frame IO
+// ---------------------------------------------------------------------
+
+/// Reads one frame: validates the header, fills `payload` (pooled; only
+/// its capacity is recycled) and returns the message type. A closed
+/// stream surfaces as `UnexpectedEof`; bad magic, an unknown type, an
+/// oversized length or a **version mismatch** surface as `InvalidData`.
+pub fn read_frame(r: &mut impl Read, payload: &mut Vec<u8>) -> io::Result<MsgType> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr)?;
+    let magic = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    if magic != WIRE_MAGIC {
+        return Err(invalid(format!("bad wire magic {magic:#010x}")));
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != WIRE_VERSION {
+        return Err(invalid(format!(
+            "{VERSION_MSG}: peer v{version}, ours v{WIRE_VERSION}"
+        )));
+    }
+    let ty = u16::from_le_bytes([hdr[6], hdr[7]]);
+    let ty = MsgType::from_code(ty).ok_or_else(|| invalid(format!("unknown frame type {ty}")))?;
+    let len = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]) as usize;
+    if len > MAX_FRAME {
+        return Err(invalid(format!("frame of {len} bytes exceeds MAX_FRAME")));
+    }
+    payload.clear();
+    payload.resize(len, 0);
+    r.read_exact(payload)?;
+    Ok(ty)
+}
+
+// ---------------------------------------------------------------------
+// message encoders / decoders
+// ---------------------------------------------------------------------
+
+/// Encodes the client handshake.
+pub fn encode_hello(buf: &mut Vec<u8>) {
+    begin_frame(buf, MsgType::Hello);
+    end_frame(buf);
+}
+
+/// Encodes the host's handshake reply.
+pub fn encode_shard_info(buf: &mut Vec<u8>, info: &WireShardInfo) {
+    debug_assert_eq!(info.layer_offsets.len(), info.depth as usize);
+    debug_assert_eq!(info.layer_nodes.len(), info.depth as usize);
+    begin_frame(buf, MsgType::ShardInfo);
+    put_u32(buf, info.shard_id);
+    put_u32(buf, info.num_shards);
+    put_u32(buf, info.depth);
+    put_u64(buf, info.dim);
+    put_u64(buf, info.label_offset);
+    put_u64(buf, info.num_labels);
+    for &o in &info.layer_offsets {
+        put_u32(buf, o);
+    }
+    for &c in &info.layer_nodes {
+        put_u32(buf, c);
+    }
+    end_frame(buf);
+}
+
+/// Decodes a [`MsgType::ShardInfo`] payload.
+pub fn decode_shard_info(payload: &[u8]) -> io::Result<WireShardInfo> {
+    let mut rd = Rd::new(payload);
+    let shard_id = rd.u32()?;
+    let num_shards = rd.u32()?;
+    let depth = rd.u32()?;
+    let dim = rd.u64()?;
+    let label_offset = rd.u64()?;
+    let num_labels = rd.u64()?;
+    if num_shards == 0 || shard_id >= num_shards {
+        return Err(invalid("shard id out of range"));
+    }
+    if depth == 0 || depth as usize > 1 << 16 {
+        return Err(invalid("implausible shard depth"));
+    }
+    let mut layer_offsets = Vec::new();
+    rd.u32s_into(depth as usize, &mut layer_offsets)?;
+    let mut layer_nodes = Vec::new();
+    rd.u32s_into(depth as usize, &mut layer_nodes)?;
+    rd.done()?;
+    Ok(WireShardInfo {
+        shard_id,
+        num_shards,
+        depth,
+        dim,
+        label_offset,
+        num_labels,
+        layer_offsets,
+        layer_nodes,
+    })
+}
+
+/// Encodes one scatter round: the query rows (`x.rows == n`) and each
+/// query's shard-local beam slice (`beams[q]`, node ids ascending).
+pub fn encode_expand(
+    buf: &mut Vec<u8>,
+    hdr: &ExpandHeader,
+    x: &CsrMatrix,
+    beams: &[Vec<(u32, f32)>],
+    n: usize,
+) {
+    debug_assert_eq!(x.rows, n, "query matrix disagrees with batch size");
+    debug_assert!(beams.len() >= n);
+    begin_frame(buf, MsgType::Expand);
+    put_u64(buf, hdr.round_id);
+    put_u32(buf, hdr.layer);
+    put_u32(buf, hdr.beam);
+    put_u32(buf, hdr.speculate as u32);
+    put_u32(buf, n as u32);
+    for q in 0..n {
+        let row = x.row(q);
+        put_u32(buf, row.indices.len() as u32);
+        for &i in row.indices {
+            put_u32(buf, i);
+        }
+        for &v in row.values {
+            put_f32(buf, v);
+        }
+    }
+    for b in &beams[..n] {
+        put_u32(buf, b.len() as u32);
+        put_pairs(buf, b);
+    }
+    end_frame(buf);
+}
+
+/// Decodes an [`MsgType::Expand`] payload into the host's pooled query
+/// matrix and round buffers (`round.beams` filled, `round.cands` left to
+/// the expansion). Validates feature ids against `dim` and requires
+/// monotone query indices / strictly ascending beam node ids, so a
+/// malformed frame can never reach the kernels.
+pub fn decode_expand(
+    payload: &[u8],
+    dim: usize,
+    x: &mut CsrMatrix,
+    round: &mut ShardRound,
+) -> io::Result<ExpandHeader> {
+    let mut rd = Rd::new(payload);
+    let round_id = rd.u64()?;
+    let layer = rd.u32()?;
+    let beam = rd.u32()?;
+    let speculate = match rd.u32()? {
+        0 => false,
+        1 => true,
+        v => return Err(invalid(format!("bad speculate flag {v}"))),
+    };
+    let n = rd.u32()? as usize;
+    if n == 0 {
+        return Err(invalid("empty round (n = 0)"));
+    }
+    if beam == 0 {
+        return Err(invalid("beam width must be >= 1"));
+    }
+    x.reset(dim);
+    for _ in 0..n {
+        let nnz = rd.u32()? as usize;
+        rd.need(nnz * 8)?;
+        let mut prev: Option<u32> = None;
+        for _ in 0..nnz {
+            let idx = rd.u32()?;
+            if idx as usize >= dim {
+                return Err(invalid(format!("query feature {idx} out of range (dim {dim})")));
+            }
+            if prev.is_some_and(|p| idx < p) {
+                return Err(invalid("query feature ids not ascending"));
+            }
+            prev = Some(idx);
+            x.indices.push(idx);
+        }
+        for _ in 0..nnz {
+            let v = rd.f32()?;
+            x.values.push(v);
+        }
+        x.indptr.push(x.indices.len());
+        x.rows += 1;
+    }
+    round.ensure(n);
+    for q in 0..n {
+        let len = rd.u32()? as usize;
+        rd.pairs_into(len, &mut round.beams[q])?;
+        let mut prev: Option<u32> = None;
+        for &(node, _) in &round.beams[q] {
+            if prev.is_some_and(|p| node <= p) {
+                return Err(invalid("beam node ids not strictly ascending"));
+            }
+            prev = Some(node);
+        }
+    }
+    rd.done()?;
+    Ok(ExpandHeader {
+        round_id,
+        layer,
+        beam,
+        speculate,
+    })
+}
+
+/// Encodes a round reply from the host's pooled buffers: per-query
+/// candidates out of `round.cands`, plus the speculation section when
+/// `spec` is given.
+pub fn encode_cands(
+    buf: &mut Vec<u8>,
+    round_id: u64,
+    layer: u32,
+    round: &ShardRound,
+    spec: Option<&SpecRound>,
+) {
+    let n = round.n;
+    begin_frame(buf, MsgType::Cands);
+    put_u64(buf, round_id);
+    put_u32(buf, layer);
+    put_u32(buf, spec.is_some() as u32);
+    put_u32(buf, n as u32);
+    for c in &round.cands[..n] {
+        put_u32(buf, c.len() as u32);
+        put_pairs(buf, c);
+    }
+    if let Some(sp) = spec {
+        debug_assert_eq!(sp.n, n, "speculation batch size disagrees with reply");
+        for q in 0..n {
+            let parents = &sp.parents[q];
+            let counts = &sp.child_counts[q];
+            debug_assert_eq!(parents.len(), counts.len());
+            put_u32(buf, parents.len() as u32);
+            put_pairs(buf, parents);
+            for &c in counts {
+                put_u32(buf, c);
+            }
+            debug_assert_eq!(
+                counts.iter().map(|&c| c as usize).sum::<usize>(),
+                sp.children[q].len(),
+                "speculated children disagree with per-parent counts"
+            );
+            put_pairs(buf, &sp.children[q]);
+        }
+    }
+    end_frame(buf);
+}
+
+/// Decodes an [`MsgType::Cands`] payload into the gather stage's pooled
+/// round (`round.cands`; `round.beams` untouched) and, when present, the
+/// speculation buffers.
+pub fn decode_cands(
+    payload: &[u8],
+    round: &mut ShardRound,
+    spec: &mut SpecRound,
+) -> io::Result<CandsHeader> {
+    let mut rd = Rd::new(payload);
+    let round_id = rd.u64()?;
+    let layer = rd.u32()?;
+    let has_spec = match rd.u32()? {
+        0 => false,
+        1 => true,
+        v => return Err(invalid(format!("bad speculation flag {v}"))),
+    };
+    let n = rd.u32()? as usize;
+    if n == 0 {
+        return Err(invalid("empty reply (n = 0)"));
+    }
+    round.ensure(n);
+    for q in 0..n {
+        let len = rd.u32()? as usize;
+        rd.pairs_into(len, &mut round.cands[q])?;
+    }
+    if has_spec {
+        spec.ensure(n);
+        for q in 0..n {
+            let p = rd.u32()? as usize;
+            rd.pairs_into(p, &mut spec.parents[q])?;
+            rd.u32s_into(p, &mut spec.child_counts[q])?;
+            let total: usize = spec.child_counts[q].iter().map(|&c| c as usize).sum();
+            rd.pairs_into(total, &mut spec.children[q])?;
+            let mut prev: Option<u32> = None;
+            for &(node, _) in &spec.parents[q] {
+                if prev.is_some_and(|pn| node <= pn) {
+                    return Err(invalid("speculated parents not strictly ascending"));
+                }
+                prev = Some(node);
+            }
+        }
+    } else {
+        spec.n = 0;
+    }
+    rd.done()?;
+    Ok(CandsHeader {
+        round_id,
+        layer,
+        has_spec,
+    })
+}
+
+/// Encodes a protocol-error reply.
+pub fn encode_error(buf: &mut Vec<u8>, code: u32, msg: &str) {
+    begin_frame(buf, MsgType::Error);
+    put_u32(buf, code);
+    let bytes = msg.as_bytes();
+    put_u32(buf, bytes.len() as u32);
+    buf.extend_from_slice(bytes);
+    end_frame(buf);
+}
+
+/// Decodes an [`MsgType::Error`] payload.
+pub fn decode_error(payload: &[u8]) -> io::Result<(u32, String)> {
+    let mut rd = Rd::new(payload);
+    let code = rd.u32()?;
+    let len = rd.u32()? as usize;
+    let bytes = rd.take(len)?;
+    rd.done()?;
+    let msg = String::from_utf8_lossy(bytes).into_owned();
+    Ok((code, msg))
+}
+
+/// Turns a received [`MsgType::Error`] payload into an `io::Error`.
+pub fn error_from_frame(payload: &[u8]) -> io::Error {
+    match decode_error(payload) {
+        Ok((code, msg)) => invalid(format!("shard host error {code}: {msg}")),
+        Err(e) => e,
+    }
+}

@@ -1,0 +1,349 @@
+//! Loopback property tests for cross-process shard serving
+//! (`mscm_xmr::shard::remote`): remote scatter-gather over 127.0.0.1 is
+//! **bitwise identical** to the unsharded engine for S ∈ {1, 2, 4}, both
+//! masked-matmul algorithms, `--iter auto` and fixed methods, with and
+//! without speculative expansion — and replica failover absorbs a host
+//! killed mid-stream with zero failed queries.
+
+#![allow(clippy::type_complexity)]
+
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use mscm_xmr::coordinator::CoordinatorConfig;
+use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::shard::{
+    load_shard, partition, save_shards, shard_file_name, RemoteConfig, RemoteCoordinatorConfig,
+    RemoteGather, RemoteShardedCoordinator, ShardHost, ShardHostConfig,
+};
+use mscm_xmr::tree::XmrModel;
+
+fn spec(dim: usize, labels: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "remote-prop",
+        dim,
+        num_labels: labels,
+        paper_dim: dim,
+        paper_labels: 0,
+        query_nnz: 10,
+        col_nnz: 6,
+        sibling_overlap: 0.6,
+        zipf_theta: 1.0,
+    }
+}
+
+/// Spawns one loopback host per shard of an `s`-way partition; returns
+/// the hosts plus their single-replica groups.
+fn spawn_hosts(
+    model: &XmrModel,
+    s: usize,
+    cfg: EngineConfig,
+) -> (Vec<ShardHost>, Vec<Vec<SocketAddr>>) {
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(model, s) {
+        let host = ShardHost::spawn(
+            shard,
+            ShardHostConfig {
+                engine: cfg,
+                ..Default::default()
+            },
+            "127.0.0.1:0",
+        )
+        .expect("spawn shard host");
+        groups.push(vec![host.local_addr()]);
+        hosts.push(host);
+    }
+    (hosts, groups)
+}
+
+/// The acceptance property: remote sharded serving over loopback equals
+/// the unsharded `InferenceEngine` bit for bit, for S ∈ {1, 2, 4} × both
+/// algos × (`--iter auto` + a fixed method) × speculation {off, on}.
+#[test]
+fn remote_serving_is_bitwise_identical_to_unsharded() {
+    let sp = spec(120, 512);
+    let model = synth_model(&sp, 8, 0xCAFE);
+    let queries = synth_queries(&sp, 6, 0x5EED);
+    let configs = [
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::Auto),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::Hash),
+    ];
+    for cfg in configs {
+        let reference = InferenceEngine::new(model.clone(), cfg);
+        for s in [1usize, 2, 4] {
+            let (hosts, groups) = spawn_hosts(&model, s, cfg);
+            for speculate in [false, true] {
+                let mut g = RemoteGather::connect_groups(
+                    &groups,
+                    RemoteConfig {
+                        speculate,
+                        ..Default::default()
+                    },
+                    None,
+                )
+                .expect("connect remote partition");
+                assert_eq!(g.num_shards(), s);
+                for qi in 0..queries.rows {
+                    let q = queries.row_owned(qi);
+                    for beam in [1usize, 3, 10] {
+                        let want = reference.predict(&q, beam, 10);
+                        let got = g.predict(&q, beam, 10).expect("remote predict");
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} S={s} spec={speculate} beam={beam} q={qi}",
+                            cfg.label()
+                        );
+                    }
+                }
+            }
+            for h in hosts {
+                h.shutdown();
+            }
+        }
+    }
+}
+
+#[test]
+fn remote_batch_matches_remote_online() {
+    let sp = spec(80, 256);
+    let model = synth_model(&sp, 4, 0xBA7C);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let (hosts, groups) = spawn_hosts(&model, 3, cfg);
+    let mut g = RemoteGather::connect_groups(&groups, RemoteConfig::default(), None).unwrap();
+    let x = synth_queries(&sp, 9, 4242);
+    g.predict_batch_into(&x, 5, 5).expect("remote batch");
+    let batch: Vec<Vec<_>> = g.results().to_vec();
+    assert_eq!(batch.len(), 9);
+    for (i, want) in batch.iter().enumerate() {
+        let got = g.predict(&x.row_owned(i), 5, 5).unwrap();
+        assert_eq!(&got, want, "q={i}");
+    }
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// Shard files written with stored kernel plans serve those plans
+/// verbatim when hosted remotely (the `shard --iter auto` → `shard-host`
+/// deployment path), staying exact against the unsharded engine.
+#[test]
+fn shard_files_with_stored_plans_serve_remotely() {
+    let sp = spec(80, 256);
+    let model = synth_model(&sp, 4, 0x91A7);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+    let reference = InferenceEngine::new(model.clone(), cfg);
+    let mut shards = partition(&model, 3);
+    for sh in &mut shards {
+        sh.plan_auto(MatmulAlgo::Mscm, &Default::default());
+    }
+    let dir = mscm_xmr::util::temp_dir("remote-stored-plan");
+    save_shards(&shards, &dir).unwrap();
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for id in 0..3u32 {
+        let shard = load_shard(shard_file_name(&dir, id, 3), false).unwrap();
+        assert!(shard.plan.is_some(), "shard {id} lost its stored plan");
+        let host = ShardHost::spawn(
+            shard,
+            ShardHostConfig {
+                engine: cfg,
+                ..Default::default()
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        groups.push(vec![host.local_addr()]);
+        hosts.push(host);
+    }
+    let mut g = RemoteGather::connect_groups(&groups, RemoteConfig::default(), None).unwrap();
+    let queries = synth_queries(&sp, 8, 77);
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        assert_eq!(g.predict(&q, 5, 5).unwrap(), reference.predict(&q, 5, 5), "q={qi}");
+    }
+    for h in hosts {
+        h.shutdown();
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Replica failover at the gather level: every shard has two replicas;
+/// one replica of shard 0 is killed mid-query-stream and every
+/// subsequent query still returns the exact ranking.
+#[test]
+fn gather_failover_absorbs_a_replica_killed_mid_stream() {
+    let sp = spec(80, 256);
+    let model = synth_model(&sp, 4, 0xDEAD);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers);
+    let reference = InferenceEngine::new(model.clone(), cfg);
+    let shards = partition(&model, 2);
+    let host_cfg = ShardHostConfig {
+        engine: cfg,
+        ..Default::default()
+    };
+    let mut primaries = Vec::new();
+    let mut groups = Vec::new();
+    let mut backups = Vec::new();
+    for shard in shards {
+        let a = ShardHost::spawn(shard.clone(), host_cfg.clone(), "127.0.0.1:0").unwrap();
+        let b = ShardHost::spawn(shard, host_cfg.clone(), "127.0.0.1:0").unwrap();
+        groups.push(vec![a.local_addr(), b.local_addr()]);
+        primaries.push(a);
+        backups.push(b);
+    }
+    let rc = RemoteConfig {
+        round_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+    let mut g = RemoteGather::connect_groups(&groups, rc, None).unwrap();
+    let queries = synth_queries(&sp, 30, 31337);
+    for qi in 0..queries.rows {
+        if qi == 10 {
+            // Sever shard 0's active replica while the stream is live.
+            primaries[0].kill();
+        }
+        let q = queries.row_owned(qi);
+        assert_eq!(
+            g.predict(&q, 5, 5).expect("query must survive the kill"),
+            reference.predict(&q, 5, 5),
+            "q={qi}"
+        );
+    }
+    assert!(
+        g.stats().failovers.load(Ordering::Relaxed) >= 1,
+        "killing the active replica must trigger a failover"
+    );
+    for h in primaries.into_iter().chain(backups) {
+        h.shutdown();
+    }
+}
+
+/// The acceptance failover property, end to end through the batching
+/// coordinator: with 2 replicas per shard, killing one replica mid-batch
+/// yields **zero failed queries** and rankings identical to the
+/// unsharded engine.
+#[test]
+fn coordinator_failover_has_zero_failed_queries() {
+    let sp = spec(80, 256);
+    let model = synth_model(&sp, 4, 0xFA11);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let reference = InferenceEngine::new(model.clone(), cfg);
+    let host_cfg = ShardHostConfig {
+        engine: cfg,
+        ..Default::default()
+    };
+    let mut primaries = Vec::new();
+    let mut backups = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(&model, 2) {
+        let a = ShardHost::spawn(shard.clone(), host_cfg.clone(), "127.0.0.1:0").unwrap();
+        let b = ShardHost::spawn(shard, host_cfg.clone(), "127.0.0.1:0").unwrap();
+        groups.push(vec![a.local_addr(), b.local_addr()]);
+        primaries.push(a);
+        backups.push(b);
+    }
+    let coord = RemoteShardedCoordinator::start_groups(
+        &groups,
+        RemoteCoordinatorConfig {
+            base: CoordinatorConfig {
+                workers: 2,
+                max_batch: 8,
+                max_batch_delay: Duration::from_micros(300),
+                beam: 5,
+                topk: 5,
+                ..Default::default()
+            },
+            remote: RemoteConfig {
+                round_timeout: Duration::from_secs(2),
+                ..Default::default()
+            },
+        },
+    )
+    .expect("start remote coordinator");
+    assert_eq!(coord.num_shards(), 2);
+
+    let queries = synth_queries(&sp, 80, 2718);
+    let mut pending = Vec::new();
+    for i in 0..40 {
+        let q = queries.row_owned(i);
+        pending.push((i, coord.submit(q).expect("submit").1));
+    }
+    // Drain a few replies so batches are demonstrably in flight, then
+    // kill shard 0's first replica and keep the stream going.
+    for (i, rx) in pending.drain(..10) {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+        assert_eq!(resp.predictions, reference.predict(&queries.row_owned(i), 5, 5), "q={i}");
+    }
+    primaries[0].kill();
+    for i in 40..queries.rows {
+        let q = queries.row_owned(i);
+        pending.push((i, coord.submit(q).expect("submit after kill").1));
+    }
+    for (i, rx) in pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("query {i} failed after replica kill: {e}"));
+        assert_eq!(
+            resp.predictions,
+            reference.predict(&queries.row_owned(i), 5, 5),
+            "q={i}"
+        );
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.completed.load(Ordering::Relaxed), 80, "every query must complete");
+    let rs = coord.remote_stats();
+    assert_eq!(rs.failed_batches.load(Ordering::Relaxed), 0, "no batch may fail");
+    assert!(rs.failovers.load(Ordering::Relaxed) >= 1, "the kill must be absorbed by failover");
+    // Round telemetry covered every shard.
+    assert!(rs.scatter.rounds.load(Ordering::Relaxed) > 0);
+    assert!(rs.scatter.shard(0).count() > 0 && rs.scatter.shard(1).count() > 0);
+    coord.shutdown();
+    for h in primaries.into_iter().chain(backups) {
+        h.shutdown();
+    }
+}
+
+/// A host answers a version-mismatched or malformed handshake with an
+/// `Error` frame (so old clients get a diagnosis, not a hang) and closes.
+#[test]
+fn host_rejects_bad_handshakes_with_error_frames() {
+    use mscm_xmr::shard::wire;
+    use std::io::Write;
+
+    let sp = spec(64, 81);
+    let model = synth_model(&sp, 3, 0xB0B0);
+    let (hosts, groups) = spawn_hosts(&model, 1, EngineConfig::default());
+
+    // Wrong protocol version in the Hello header.
+    let mut buf = Vec::new();
+    wire::encode_hello(&mut buf);
+    buf[4..6].copy_from_slice(&(wire::WIRE_VERSION + 7).to_le_bytes());
+    let mut stream = std::net::TcpStream::connect(groups[0][0]).unwrap();
+    stream.write_all(&buf).unwrap();
+    let mut r = std::io::BufReader::new(stream);
+    let mut payload = Vec::new();
+    assert_eq!(wire::read_frame(&mut r, &mut payload).unwrap(), wire::MsgType::Error);
+    let (code, msg) = wire::decode_error(&payload).unwrap();
+    assert_eq!(code, wire::ERR_VERSION);
+    assert!(msg.contains("version"), "{msg}");
+
+    // A non-Hello first frame is a protocol violation.
+    let mut stream = std::net::TcpStream::connect(groups[0][0]).unwrap();
+    wire::encode_error(&mut buf, 0, "i speak first");
+    stream.write_all(&buf).unwrap();
+    let mut r = std::io::BufReader::new(stream);
+    assert_eq!(wire::read_frame(&mut r, &mut payload).unwrap(), wire::MsgType::Error);
+    let (code, msg) = wire::decode_error(&payload).unwrap();
+    assert_eq!(code, wire::ERR_PROTOCOL);
+    assert!(msg.contains("Hello"), "{msg}");
+
+    for h in hosts {
+        h.shutdown();
+    }
+}
