@@ -33,7 +33,7 @@ fn main() {
             for qi in 0..64 {
                 let q = x.row(qi);
                 for c in 0..32 {
-                    let chunk = &chunks[(qi * 37 + c * 131) % n_chunks];
+                    let chunk = chunks[(qi * 37 + c * 131) % n_chunks].view();
                     let o = &mut out[..chunk.ncols as usize];
                     o.fill(0.0);
                     match method {

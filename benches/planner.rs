@@ -4,9 +4,11 @@
 //! method wins) and on a **uniform** tree (the planner's sanity floor:
 //! auto must track the best fixed method within noise).
 //!
-//! Also reports each engine's `side_index_bytes` — the planner's memory
-//! claim: auto materializes hash/dense side indexes only where its plan
-//! uses them, so on mixed-density trees it under-spends fixed `hash`.
+//! Also reports each engine's `side_index_bytes` and `weight_bytes`, and
+//! a **layout ablation**: the auto plan once with planner-driven chunk
+//! storage (DenseRows/Merged) and once pinned to the seed CSC layout
+//! (`PlannerConfig::storage` off) — the memory/latency delta the storage
+//! lever buys on top of kernel selection.
 //!
 //! Emits `BENCH_planner.json` (override with `--json <path>`).
 //!
@@ -41,66 +43,86 @@ struct Measured {
     batch_ms: f64,
     online_ms: f64,
     side_bytes: usize,
+    weight_bytes: usize,
 }
 
-fn measure(model: &Arc<XmrModel>, x: &CsrMatrix, beam: usize, pc: &PlannerConfig) -> Vec<Measured> {
+/// Builds one engine from a map-less model copy (so the side/weight-bytes
+/// columns report honest per-configuration overhead) and measures it.
+fn measure_one(
+    model: &Arc<XmrModel>,
+    x: &CsrMatrix,
+    beam: usize,
+    cfg: EngineConfig,
+    pc: &PlannerConfig,
+    label: String,
+) -> Measured {
     let n = x.rows;
     let queries: Vec<_> = (0..n).map(|i| x.row_owned(i)).collect();
-    let mut configs: Vec<EngineConfig> = IterationMethod::ALL
-        .into_iter()
-        .map(|iter| EngineConfig::new(MatmulAlgo::Mscm, iter))
-        .collect();
-    configs.push(EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto));
-    let mut rows = Vec::new();
-    for cfg in configs {
-        // Each engine starts from a map-less model copy and builds
-        // exactly what its plan needs, so the side-bytes column reports
-        // honest per-configuration overhead (marching/binary = 0, hash =
-        // full index, auto = only the hash-planned chunks + scratch).
-        let mut base = (**model).clone();
-        base.drop_row_maps();
-        let engine = InferenceEngine::new_with_planner(base, cfg, pc);
-        if cfg.iter == IterationMethod::Auto {
-            eprintln!("auto plan:\n{}", engine.plan().summary());
-        }
-        let stats = bench_ms(1, 3, 4_000.0, || {
-            std::hint::black_box(engine.predict_batch(x, beam, 10));
-        });
-        let batch_ms = stats.mean_ms / n as f64;
-        let mut ws = engine.workspace();
-        let stats = bench_ms(1, 3, 4_000.0, || {
-            for q in &queries {
-                std::hint::black_box(engine.predict_with(q, beam, 10, &mut ws));
-            }
-        });
-        let online_ms = stats.mean_ms / n as f64;
-        rows.push(Measured {
-            label: cfg.label(),
-            batch_ms,
-            online_ms,
-            side_bytes: engine.side_index_bytes(),
-        });
+    let mut base = (**model).clone();
+    base.drop_row_maps();
+    let engine = InferenceEngine::new_with_planner(base, cfg, pc);
+    if cfg.iter == IterationMethod::Auto {
+        eprintln!("{label} plan:\n{}", engine.plan().summary());
     }
+    let stats = bench_ms(1, 3, 4_000.0, || {
+        std::hint::black_box(engine.predict_batch(x, beam, 10));
+    });
+    let batch_ms = stats.mean_ms / n as f64;
+    let mut ws = engine.workspace();
+    let stats = bench_ms(1, 3, 4_000.0, || {
+        for q in &queries {
+            std::hint::black_box(engine.predict_with(q, beam, 10, &mut ws));
+        }
+    });
+    Measured {
+        label,
+        batch_ms,
+        online_ms: stats.mean_ms / n as f64,
+        side_bytes: engine.side_index_bytes(),
+        weight_bytes: engine.weight_bytes(),
+    }
+}
+
+/// The fixed four, then the auto plan pinned to the CSC layout, then the
+/// full auto plan (layouts on) — always last, so `report_tree` can
+/// anchor its comparisons.
+fn measure(model: &Arc<XmrModel>, x: &CsrMatrix, beam: usize, pc: &PlannerConfig) -> Vec<Measured> {
+    let mut rows = Vec::new();
+    for iter in IterationMethod::ALL {
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, iter);
+        rows.push(measure_one(model, x, beam, cfg, pc, cfg.label()));
+    }
+    let auto_cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+    let no_layout = PlannerConfig {
+        storage: false,
+        ..*pc
+    };
+    rows.push(measure_one(
+        model,
+        x,
+        beam,
+        auto_cfg,
+        &no_layout,
+        "Auto MSCM (csc layout)".into(),
+    ));
+    rows.push(measure_one(model, x, beam, auto_cfg, pc, auto_cfg.label()));
     rows
 }
 
-fn report_tree(
-    name: &str,
-    rows: &[Measured],
-    report: &mut BenchReport,
-) {
+fn report_tree(name: &str, rows: &[Measured], report: &mut BenchReport) {
     println!("\n[{name}]");
     println!(
-        "{:<24} {:>14} {:>14} {:>14}",
-        "config", "batch ms/q", "online ms/q", "side KiB"
+        "{:<24} {:>14} {:>14} {:>12} {:>12}",
+        "config", "batch ms/q", "online ms/q", "side KiB", "weight KiB"
     );
     for r in rows {
         println!(
-            "{:<24} {:>14.4} {:>14.4} {:>14}",
+            "{:<24} {:>14.4} {:>14.4} {:>12} {:>12}",
             r.label,
             r.batch_ms,
             r.online_ms,
-            r.side_bytes / 1024
+            r.side_bytes / 1024,
+            r.weight_bytes / 1024
         );
         report.record_extra(
             name,
@@ -110,12 +132,15 @@ fn report_tree(
             vec![
                 ("online_ns_per_op", Json::Num(r.online_ms * 1e6)),
                 ("side_index_bytes", Json::Num(r.side_bytes as f64)),
+                ("weight_bytes", Json::Num(r.weight_bytes as f64)),
             ],
         );
     }
-    // Auto vs the best fixed method (batch): the planner's claim.
+    // Auto vs the best fixed method (batch): the planner's claim. The
+    // two auto rows sit at the tail; fixed methods are everything else.
     let auto = rows.last().expect("auto row");
-    let best_fixed = rows[..rows.len() - 1]
+    let auto_csc = &rows[rows.len() - 2];
+    let best_fixed = rows[..rows.len() - 2]
         .iter()
         .min_by(|a, b| a.batch_ms.total_cmp(&b.batch_ms))
         .expect("fixed rows");
@@ -126,6 +151,15 @@ fn report_tree(
         best_fixed.batch_ms,
         100.0 * (auto.batch_ms / best_fixed.batch_ms - 1.0)
     );
+    println!(
+        "layout ablation: planned layouts {:.4} ms/q, {} KiB weights vs \
+         csc-only {:.4} ms/q, {} KiB ({:+.1}% bytes)",
+        auto.batch_ms,
+        auto.weight_bytes / 1024,
+        auto_csc.batch_ms,
+        auto_csc.weight_bytes / 1024,
+        100.0 * (auto.weight_bytes as f64 / auto_csc.weight_bytes.max(1) as f64 - 1.0)
+    );
     report.record_extra(
         &format!("{name}-auto-vs-best"),
         auto.batch_ms * 1e6,
@@ -135,6 +169,25 @@ fn report_tree(
             "best_fixed_ns_per_op",
             Json::Num(best_fixed.batch_ms * 1e6),
         )],
+    );
+    report.record_extra(
+        &format!("{name}-layout-ablation"),
+        auto.batch_ms * 1e6,
+        0,
+        "planned layouts vs csc-only",
+        vec![
+            ("csc_only_ns_per_op", Json::Num(auto_csc.batch_ms * 1e6)),
+            ("weight_bytes", Json::Num(auto.weight_bytes as f64)),
+            (
+                "csc_only_weight_bytes",
+                Json::Num(auto_csc.weight_bytes as f64),
+            ),
+            ("side_index_bytes", Json::Num(auto.side_bytes as f64)),
+            (
+                "csc_only_side_index_bytes",
+                Json::Num(auto_csc.side_bytes as f64),
+            ),
+        ],
     );
 }
 

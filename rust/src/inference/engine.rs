@@ -38,7 +38,7 @@ use super::mscm::mscm_layer;
 use super::plan::{KernelPlan, PlannerConfig};
 use super::{IterationMethod, MatmulAlgo};
 use crate::sparse::iterators::DenseScratch;
-use crate::sparse::{ChunkedMatrix, CsrMatrix, SparseVec, U32Map};
+use crate::sparse::{ChunkStorage, ChunkedMatrix, CsrMatrix, SparseVec, U32Map};
 use crate::tree::XmrModel;
 
 /// One retrieved label.
@@ -163,13 +163,14 @@ impl Workspace {
     /// Allocates scratch for whatever `plan` needs under `config` — the
     /// `O(d)` dense structures exist only when some chunk actually plans
     /// dense lookup (this is what Table 6's "extra memory overhead"
-    /// column measures).
+    /// column measures). A chunk stored as
+    /// [`ChunkStorage::DenseRows`] is its own position array, so it
+    /// needs no scratch at all.
     pub(crate) fn for_plan(model: &XmrModel, config: EngineConfig, plan: &KernelPlan) -> Self {
-        let dense = plan.uses(IterationMethod::DenseLookup);
         Self::with_needs(
             model,
-            config.algo == MatmulAlgo::Mscm && dense,
-            config.algo == MatmulAlgo::Baseline && dense,
+            config.algo == MatmulAlgo::Mscm && plan.needs_dense_scratch(),
+            config.algo == MatmulAlgo::Baseline && plan.uses(IterationMethod::DenseLookup),
         )
     }
 
@@ -328,20 +329,27 @@ impl InferenceEngine {
     }
 
     /// Builds an engine around an owned model and a pre-resolved plan
-    /// (e.g. one loaded from a shard file): side indexes are materialized
-    /// exactly where the plan needs them — row maps are built on
-    /// hash-planned chunks, and under `Auto` any resident map on a chunk
-    /// planned away from hash is dropped (the memory the planner saves).
+    /// (e.g. one loaded from a shard file): the plan's **storage
+    /// layouts** are applied to the chunked weights (models are built
+    /// all-`Csc`; this is the one place layouts materialize), and side
+    /// indexes exist exactly where the plan needs them — row maps are
+    /// built on hash-planned `Csc` chunks, and under `Auto` any resident
+    /// map on a chunk planned away from hash is dropped (the memory the
+    /// planner saves).
     pub fn new_with_plan(mut model: XmrModel, config: EngineConfig, plan: KernelPlan) -> Self {
         assert!(plan.matches(&model), "kernel plan does not fit this model");
+        for (li, layer) in model.layers.iter_mut().enumerate() {
+            layer.chunked.apply_layout(plan.layer_storage(li));
+        }
         if config.algo == MatmulAlgo::Mscm {
             // Fixed configs keep whatever maps the model came with (their
-            // plan never consults them); Auto owns the memory story.
+            // plan never consults them); Auto owns the memory story. The
+            // non-Csc layouts already dropped theirs in apply_layout.
             let prune = config.iter == IterationMethod::Auto;
             for (li, layer) in model.layers.iter_mut().enumerate() {
                 let methods = plan.layer_methods(li);
                 for (chunk, &m) in layer.chunked.chunks.iter_mut().zip(methods) {
-                    if m == IterationMethod::Hash {
+                    if m == IterationMethod::Hash && chunk.storage == ChunkStorage::Csc {
                         if chunk.row_map.is_none() {
                             chunk.build_row_map();
                         }
@@ -356,9 +364,15 @@ impl InferenceEngine {
 
     /// Builds an engine around a shared model. The model must already
     /// carry chunk row maps on every chunk the resolved plan sends to the
-    /// hash kernel (for fixed MSCM+Hash: on every chunk).
+    /// hash kernel (for fixed MSCM+Hash: on every chunk). A shared model
+    /// cannot be re-laid out, so `Auto` resolves kernels only and keeps
+    /// the model's seed `Csc` layout ([`PlannerConfig::storage`] off).
     pub fn from_arc(model: Arc<XmrModel>, config: EngineConfig) -> Self {
-        let plan = KernelPlan::resolve(&model, config, &PlannerConfig::default());
+        let pc = PlannerConfig {
+            storage: false,
+            ..PlannerConfig::default()
+        };
+        let plan = KernelPlan::resolve(&model, config, &pc);
         Self::from_parts(model, config, Arc::new(plan))
     }
 
@@ -373,13 +387,29 @@ impl InferenceEngine {
 
     fn from_parts(model: Arc<XmrModel>, config: EngineConfig, plan: Arc<KernelPlan>) -> Self {
         assert!(plan.matches(&model), "kernel plan does not fit this model");
+        let laid_out = model.layers.iter().enumerate().all(|(li, l)| {
+            l.chunked
+                .chunks
+                .iter()
+                .zip(plan.layer_storage(li))
+                .all(|(c, &s)| c.storage == s)
+        });
+        assert!(
+            laid_out,
+            "model chunk storage does not match the plan's layouts \
+             (apply them by constructing via InferenceEngine::new_with_plan)"
+        );
         if config.algo == MatmulAlgo::Mscm {
             let ok = model.layers.iter().enumerate().all(|(li, l)| {
                 l.chunked
                     .chunks
                     .iter()
                     .zip(plan.layer_methods(li))
-                    .all(|(c, &m)| m != IterationMethod::Hash || c.row_map.is_some())
+                    .all(|(c, &m)| {
+                        m != IterationMethod::Hash
+                            || c.storage != ChunkStorage::Csc
+                            || c.row_map.is_some()
+                    })
             });
             assert!(
                 ok,
@@ -453,11 +483,30 @@ impl InferenceEngine {
                 bytes += maps.iter().map(|m| m.memory_bytes()).sum::<usize>();
             }
         }
-        if self.plan.uses(IterationMethod::DenseLookup) {
-            // dense_pos (MSCM) or dense_x (baseline): 4 bytes × dim.
+        // dense_pos (MSCM) or dense_x (baseline): 4 bytes × dim. Chunks
+        // stored DenseRows carry their own position array in row_ptr
+        // (weight bytes, not side-index bytes) and need neither.
+        let needs_dense = match self.config.algo {
+            MatmulAlgo::Mscm => self.plan.needs_dense_scratch(),
+            MatmulAlgo::Baseline => self.plan.uses(IterationMethod::DenseLookup),
+        };
+        if needs_dense {
             bytes += self.model.dim * 4;
         }
         bytes
+    }
+
+    /// Bytes of the chunked weight payload under this engine's applied
+    /// storage layouts (side indexes excluded — see
+    /// [`InferenceEngine::side_index_bytes`]). On a plan that re-lays
+    /// dense chunks as [`ChunkStorage::DenseRows`] this is strictly
+    /// below the all-`Csc` equivalent: the row-index arrays are gone.
+    pub fn weight_bytes(&self) -> usize {
+        self.model
+            .layers
+            .iter()
+            .map(|l| l.chunked.weight_bytes())
+            .sum()
     }
 
     /// A workspace sized for this engine's plan.
@@ -821,9 +870,13 @@ mod tests {
         m.drop_row_maps();
         let plan = KernelPlan {
             layers: vec![
-                LayerPlan { methods: vec![IterationMethod::MarchingPointers] },
+                LayerPlan {
+                    methods: vec![IterationMethod::MarchingPointers],
+                    storage: vec![ChunkStorage::Csc],
+                },
                 LayerPlan {
                     methods: vec![IterationMethod::BinarySearch, IterationMethod::Hash],
+                    storage: vec![ChunkStorage::Csc, ChunkStorage::Csc],
                 },
             ],
         };
@@ -871,6 +924,69 @@ mod tests {
     fn workspace_new_rejects_auto() {
         let m = model();
         Workspace::new(&m, EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto));
+    }
+
+    #[test]
+    fn forced_layouts_stay_bitwise_identical() {
+        // Every uniform storage layout, driven through new_with_plan,
+        // must reproduce the seed all-Csc engine bit for bit — for both
+        // algos and a mix of methods (the broad grid lives in
+        // rust/tests/layout.rs; this is the in-crate smoke version).
+        use crate::inference::plan::KernelPlan;
+        let m = model();
+        let queries = [
+            SparseVec::from_pairs(vec![(0, 1.0), (1, 0.5), (2, 2.0), (4, 1.0)]),
+            SparseVec::from_pairs(vec![(1, 0.4), (3, -1.0), (5, 2.0)]),
+            SparseVec::new(),
+        ];
+        let reference = InferenceEngine::new(
+            m.clone(),
+            EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::MarchingPointers),
+        );
+        for algo in MatmulAlgo::ALL {
+            for iter in IterationMethod::ALL {
+                for storage in ChunkStorage::ALL {
+                    let plan =
+                        KernelPlan::uniform(&m, iter).with_uniform_storage(storage);
+                    let engine = InferenceEngine::new_with_plan(
+                        m.clone(),
+                        EngineConfig::new(algo, iter),
+                        plan,
+                    );
+                    for (qi, q) in queries.iter().enumerate() {
+                        assert_eq!(
+                            engine.predict(q, 3, 3),
+                            reference.predict(q, 3, 3),
+                            "{algo:?}/{iter:?}/{storage:?} q={qi}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_rows_layout_needs_no_scratch() {
+        use crate::inference::plan::KernelPlan;
+        let m = model();
+        let csc_engine = InferenceEngine::new_with_plan(
+            m.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup),
+            KernelPlan::uniform(&m, IterationMethod::DenseLookup),
+        );
+        let dr_engine = InferenceEngine::new_with_plan(
+            m.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup),
+            KernelPlan::uniform(&m, IterationMethod::DenseLookup)
+                .with_uniform_storage(ChunkStorage::DenseRows),
+        );
+        // Csc + DenseLookup pays the O(d) scratch; DenseRows does not.
+        let ws = csc_engine.workspace();
+        assert!(ws.dense_pos.is_some());
+        let ws = dr_engine.workspace();
+        assert!(ws.dense_pos.is_none());
+        assert_eq!(csc_engine.side_index_bytes(), m.dim * 4);
+        assert_eq!(dr_engine.side_index_bytes(), 0);
     }
 
     #[test]

@@ -32,12 +32,25 @@
 //! dispatch path — a slice index into the plan, no allocation
 //! (`rust/tests/alloc.rs` covers `Auto`).
 //!
+//! The plan also picks each chunk's **weight storage layout**
+//! ([`crate::sparse::ChunkStorage`]): dense-planned chunks whose rows
+//! cover most of `d` re-lay as `DenseRows` (direct row-id-indexed
+//! pointers — no `row_indices`, no row map, no scratch), and runs of
+//! tiny marching/binary-planned sibling chunks coalesce into a shared
+//! `Merged` store. Layouts are applied once, at engine construction
+//! ([`InferenceEngine::new_with_plan`]), and persist in the `MSCMXMR3`
+//! shard envelope; every layout is bitwise identical to the seed `Csc`
+//! path (see the [`crate::sparse`] module docs and
+//! `rust/tests/layout.rs`).
+//!
 //! The plan also drives **side-index materialization**: chunk row maps
-//! exist only on hash-planned chunks, the `O(d)` dense scratch is
-//! allocated only when some chunk plans dense, and the baseline's
-//! per-column maps only materialize under hash-planned chunks.
-//! [`InferenceEngine::side_index_bytes`] reports the total in one number;
-//! on mixed-density models `Auto` is strictly below fixed `hash`.
+//! exist only on hash-planned `Csc` chunks, the `O(d)` dense scratch is
+//! allocated only when some chunk plans dense without the `DenseRows`
+//! layout, and the baseline's per-column maps only materialize under
+//! hash-planned chunks. [`InferenceEngine::side_index_bytes`] reports
+//! the total in one number (and [`InferenceEngine::weight_bytes`] the
+//! layout-applied payload); on mixed-density models `Auto` is strictly
+//! below fixed `hash`.
 
 mod baseline;
 mod engine;

@@ -30,9 +30,9 @@
 use super::engine::Workspace;
 use super::{sigmoid, IterationMethod};
 use crate::sparse::iterators::{
-    vec_chunk_binary, vec_chunk_dense, vec_chunk_hash, vec_chunk_marching,
+    vec_chunk_binary, vec_chunk_dense, vec_chunk_dense_rows, vec_chunk_hash, vec_chunk_marching,
 };
-use crate::sparse::CsrMatrix;
+use crate::sparse::{ChunkStorage, ChunkView, CsrMatrix};
 use crate::tree::Layer;
 
 /// Orders `ws.blocks` by `(chunk, query)` via a stable counting sort
@@ -139,31 +139,54 @@ pub(crate) fn mscm_layer(
     ws.loaded_chunk = None;
     // Split borrows: the block list is iterated while the arena is filled.
     let blocks = std::mem::take(&mut ws.blocks);
+    // Blocks are chunk-sorted (Alg. 3), so the layout-resolved view is
+    // reused across every block sharing a chunk — one storage dispatch
+    // per chunk run, not per block.
+    let mut cached: Option<(u32, ChunkView<'_>)> = None;
     for &(p, q, ps) in &blocks {
-        let chunk = &chunked.chunks[p as usize];
+        let chunk = match cached {
+            Some((cp, view)) if cp == p => view,
+            _ => {
+                let view = chunked.view(p as usize);
+                cached = Some((p, view));
+                view
+            }
+        };
         let base = chunked.chunk_start(p as usize) as u32;
         let width = chunk.ncols as usize;
         let out = &mut ws.out_block[..width];
         out.fill(0.0);
         let xq = x.row(qlo + q as usize);
-        match methods[p as usize] {
-            IterationMethod::MarchingPointers => vec_chunk_marching(xq, chunk, out),
-            IterationMethod::BinarySearch => vec_chunk_binary(xq, chunk, out),
-            IterationMethod::Hash => vec_chunk_hash(xq, chunk, out),
-            IterationMethod::DenseLookup => {
-                // Load the chunk's rows into the dense scratch once per
-                // chunk — amortized across all queries hitting it.
-                if ws.loaded_chunk != Some(p) {
-                    let scratch = ws.dense_pos.as_mut().expect("dense scratch");
-                    if let Some(prev) = ws.loaded_chunk {
-                        scratch.clear(&chunked.chunks[prev as usize]);
-                    }
-                    scratch.load(chunk);
-                    ws.loaded_chunk = Some(p);
+        if chunk.storage == ChunkStorage::DenseRows {
+            // The layout bakes the row-position array into the chunk's
+            // own row_ptr: every method degenerates to the same direct
+            // probe (bitwise identical), with no scratch to load.
+            vec_chunk_dense_rows(xq, chunk, out);
+        } else {
+            match methods[p as usize] {
+                IterationMethod::MarchingPointers => vec_chunk_marching(xq, chunk, out),
+                IterationMethod::BinarySearch => vec_chunk_binary(xq, chunk, out),
+                // Merged sub-chunks keep no row map; binary search is
+                // their designated (bitwise-identical) stand-in.
+                IterationMethod::Hash if chunk.storage == ChunkStorage::Merged => {
+                    vec_chunk_binary(xq, chunk, out)
                 }
-                vec_chunk_dense(xq, chunk, ws.dense_pos.as_ref().unwrap(), out);
+                IterationMethod::Hash => vec_chunk_hash(xq, chunk, out),
+                IterationMethod::DenseLookup => {
+                    // Load the chunk's rows into the dense scratch once
+                    // per chunk — amortized across all queries hitting it.
+                    if ws.loaded_chunk != Some(p) {
+                        let scratch = ws.dense_pos.as_mut().expect("dense scratch");
+                        if let Some(prev) = ws.loaded_chunk {
+                            scratch.clear(chunked.view(prev as usize));
+                        }
+                        scratch.load(chunk);
+                        ws.loaded_chunk = Some(p);
+                    }
+                    vec_chunk_dense(xq, chunk, ws.dense_pos.as_ref().unwrap(), out);
+                }
+                IterationMethod::Auto => unreachable!("plans only hold concrete methods"),
             }
-            IterationMethod::Auto => unreachable!("plans only hold concrete methods"),
         }
         // Conditional-probability combine (Alg. 1 lines 7–8): σ then
         // multiply by the parent's path score, written at the query's
@@ -179,7 +202,7 @@ pub(crate) fn mscm_layer(
     // Leave the scratch clean for the next layer/batch.
     if let Some(prev) = ws.loaded_chunk.take() {
         if let Some(scratch) = ws.dense_pos.as_mut() {
-            scratch.clear(&chunked.chunks[prev as usize]);
+            scratch.clear(chunked.view(prev as usize));
         }
     }
 }
@@ -331,6 +354,54 @@ mod tests {
             mscm_layer(&l, &x, 0, n, &mix, true, &mut ws);
             let got: Vec<Vec<(u32, f32)>> = (0..n).map(|q| ws.cand(q).to_vec()).collect();
             assert_eq!(got, uniform, "{mix:?}");
+        }
+    }
+
+    #[test]
+    fn mixed_layouts_within_one_layer_match_csc() {
+        // DenseRows and Merged chunks interleaved with Csc in one layer
+        // must produce the exact candidates of the all-Csc layout, under
+        // every method (DenseLookup exercises the scratch on the
+        // non-DenseRows chunks).
+        use crate::sparse::ChunkStorage;
+        let x = CsrMatrix::from_rows(
+            vec![
+                SparseVec::from_pairs(vec![(0, 1.0), (1, 1.0)]),
+                SparseVec::from_pairs(vec![(2, 1.0), (3, 2.0)]),
+            ],
+            4,
+        );
+        let beams = vec![
+            vec![(0u32, 1.0f32), (1u32, 0.25f32)],
+            vec![(0u32, 0.5f32), (1u32, 0.75f32)],
+        ];
+        let uniform = run(IterationMethod::MarchingPointers, beams.clone(), &x);
+        for layout in [
+            [ChunkStorage::DenseRows, ChunkStorage::Csc],
+            [ChunkStorage::Merged, ChunkStorage::Merged],
+            [ChunkStorage::DenseRows, ChunkStorage::Merged],
+        ] {
+            for iter in IterationMethod::ALL {
+                let mut l = layer();
+                l.chunked.apply_layout(&layout);
+                let model =
+                    crate::tree::XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], true)]);
+                // dense scratch + row maps: allocate for the union of needs
+                let mut ws = Workspace::new(
+                    &model,
+                    EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup),
+                );
+                let n = beams.len();
+                ws.begin_beams(n);
+                for b in &beams {
+                    ws.push_beam(b);
+                }
+                ws.begin_layer(&l.chunked, n);
+                let methods = vec![iter; l.chunked.num_chunks()];
+                mscm_layer(&l, &x, 0, n, &methods, true, &mut ws);
+                let got: Vec<Vec<(u32, f32)>> = (0..n).map(|q| ws.cand(q).to_vec()).collect();
+                assert_eq!(got, uniform, "{layout:?}/{iter:?}");
+            }
         }
     }
 }

@@ -1,5 +1,7 @@
 //! The per-chunk kernel planner: decides which support-intersection
-//! iteration method evaluates each chunk's masked product.
+//! iteration method evaluates each chunk's masked product — and which
+//! physical **storage layout** ([`ChunkStorage`]) holds the chunk's
+//! weights.
 //!
 //! The paper benchmarks its four iteration methods (§4 items 1–4) as
 //! *global* choices and finds no uniform winner — the best method depends
@@ -40,13 +42,36 @@
 //! (writing the intersected entries) is identical across methods and is
 //! therefore omitted from the comparison.
 //!
+//! # Storage layout terms
+//!
+//! The same statistics drive per-chunk **layout** selection
+//! ([`CostModel::plan_layer_storage`]), with per-layout byte + time
+//! terms, calibration-aware through the fitted constants:
+//!
+//! - [`ChunkStorage::DenseRows`] — picked when its row-pointer array is
+//!   *strictly smaller* than the row-sparse index (`4(d+1) < 8r + 4`,
+//!   i.e. the chunk's rows cover over half the feature dimension) and
+//!   the direct probe (`1.5q` dense-probe units, no load/clear term) is
+//!   no slower than the planned kernel. The chunk then needs no
+//!   `row_indices`, no hash row map and no `O(d)` scratch.
+//! - [`ChunkStorage::Merged`] — picked for **runs of ≥ 2 adjacent**
+//!   marching/binary-planned chunks below the tiny-chunk thresholds
+//!   ([`MERGE_MAX_NNZ`], [`MERGE_MAX_WIDTH`]): per-chunk `Vec` overhead
+//!   dominates such chunks, and coalescing them puts sibling chunks that
+//!   are beam-activated together contiguous in memory. A singleton
+//!   candidate gains nothing and stays `Csc`.
+//! - Everything else stays [`ChunkStorage::Csc`].
+//!
 //! The planner also drives the **side indexes**: chunk row maps are built
-//! only for chunks planned `Hash`, the `O(d)` dense scratch is allocated
-//! only when some chunk plans `DenseLookup`, and the baseline's
-//! per-column maps only materialize under hash-planned chunks — so `Auto`
-//! strictly under-spends fixed `hash` on memory whenever any chunk plans
-//! away from it ([`crate::inference::InferenceEngine::side_index_bytes`]
-//! reports the total in one number).
+//! only for `Csc` chunks planned `Hash`, the `O(d)` dense scratch is
+//! allocated only when some chunk plans `DenseLookup` *without* the
+//! `DenseRows` layout, and the baseline's per-column maps only
+//! materialize under hash-planned chunks — so `Auto` strictly
+//! under-spends fixed `hash` on memory whenever any chunk plans away
+//! from it ([`crate::inference::InferenceEngine::side_index_bytes`]
+//! reports the total in one number, and
+//! [`crate::inference::InferenceEngine::weight_bytes`] the layout-applied
+//! weight payload).
 
 use std::time::Instant;
 
@@ -54,12 +79,18 @@ use super::{IterationMethod, MatmulAlgo};
 use crate::sparse::iterators::{
     vec_chunk_binary, vec_chunk_dense, vec_chunk_hash, vec_chunk_marching, DenseScratch,
 };
-use crate::sparse::{Chunk, SparseVec, U32Map};
+use crate::sparse::{Chunk, ChunkStats, ChunkStorage, SparseVec, U32Map};
 use crate::tree::XmrModel;
 use crate::util::rng::{Rng, Zipf};
 
 /// The four concrete methods in plan/histogram order (never `Auto`).
 const CONCRETE: [IterationMethod; 4] = IterationMethod::ALL;
+
+/// Largest stored-entry count of a [`ChunkStorage::Merged`] candidate.
+pub const MERGE_MAX_NNZ: usize = 32;
+
+/// Largest sibling width of a [`ChunkStorage::Merged`] candidate.
+pub const MERGE_MAX_WIDTH: usize = 8;
 
 /// Planner inputs: workload hints and the optional calibration budget.
 #[derive(Clone, Copy, Debug)]
@@ -75,6 +106,12 @@ pub struct PlannerConfig {
     pub calibrate: usize,
     /// Seed for the calibration query stream.
     pub seed: u64,
+    /// Let the plan pick per-chunk weight storage (`DenseRows`/`Merged`)
+    /// in addition to kernels. Engines built around *shared* models
+    /// ([`crate::inference::InferenceEngine::from_arc`]) plan with this
+    /// off — re-laying storage needs an owned model; the flag also
+    /// drives the layout-ablation rows of `benches/planner.rs`.
+    pub storage: bool,
 }
 
 impl Default for PlannerConfig {
@@ -84,6 +121,7 @@ impl Default for PlannerConfig {
             batch_hint: 32,
             calibrate: 0,
             seed: 0x9A7_F17,
+            storage: true,
         }
     }
 }
@@ -121,11 +159,16 @@ impl CostModel {
         }
     }
 
-    /// Predicted nanoseconds for one MSCM block on `chunk`, off its
-    /// build-time [`crate::sparse::ChunkStats`].
-    pub fn block_cost(&self, method: IterationMethod, chunk: &Chunk, pc: &PlannerConfig) -> f64 {
+    /// Predicted nanoseconds for one MSCM block on a chunk with
+    /// build-time statistics `stats`.
+    pub fn block_cost(
+        &self,
+        method: IterationMethod,
+        stats: &ChunkStats,
+        pc: &PlannerConfig,
+    ) -> f64 {
         let q = pc.query_nnz_hint as f64;
-        let r = chunk.stats().rows as f64;
+        let r = stats.rows as f64;
         self.k[method.index()] * Self::units(method, q, r, pc.batch_hint as f64)
     }
 
@@ -134,13 +177,12 @@ impl CostModel {
     pub fn baseline_block_cost(
         &self,
         method: IterationMethod,
-        chunk: &Chunk,
+        stats: &ChunkStats,
         pc: &PlannerConfig,
     ) -> f64 {
         let q = pc.query_nnz_hint as f64;
-        let s = chunk.stats();
-        let w = (s.width as f64).max(1.0);
-        let e = s.nnz as f64;
+        let w = (stats.width as f64).max(1.0);
+        let e = stats.nnz as f64;
         let rc = e / w;
         let k = self.k[method.index()];
         match method {
@@ -155,19 +197,26 @@ impl CostModel {
         }
     }
 
+    /// Predicted nanoseconds of one [`ChunkStorage::DenseRows`] block:
+    /// `1.5q` dense-probe units — the layout bakes the position array
+    /// into `row_ptr`, so the `2r/n` load/clear term disappears.
+    pub fn dense_rows_block_cost(&self, pc: &PlannerConfig) -> f64 {
+        self.k[IterationMethod::DenseLookup.index()] * 1.5 * pc.query_nnz_hint as f64
+    }
+
     /// Cheapest concrete method for one chunk under `algo`.
     pub fn best_method(
         &self,
         algo: MatmulAlgo,
-        chunk: &Chunk,
+        stats: &ChunkStats,
         pc: &PlannerConfig,
     ) -> IterationMethod {
         let mut best = IterationMethod::MarchingPointers;
         let mut best_cost = f64::INFINITY;
         for m in CONCRETE {
             let c = match algo {
-                MatmulAlgo::Mscm => self.block_cost(m, chunk, pc),
-                MatmulAlgo::Baseline => self.baseline_block_cost(m, chunk, pc),
+                MatmulAlgo::Mscm => self.block_cost(m, stats, pc),
+                MatmulAlgo::Baseline => self.baseline_block_cost(m, stats, pc),
             };
             // Strict `<` keeps the earlier (side-index-free) method on
             // ties: CONCRETE is ordered marching, binary, hash, dense.
@@ -177,6 +226,67 @@ impl CostModel {
             }
         }
         best
+    }
+
+    /// Picks one layer's per-chunk storage layouts (see the module docs
+    /// for the byte + time terms), adjusting `methods` in place where a
+    /// layout implies its kernel (`DenseRows` → direct probe, recorded
+    /// as `DenseLookup`). `dim` is the feature dimension `d`.
+    pub fn plan_layer_storage(
+        &self,
+        algo: MatmulAlgo,
+        stats: &[ChunkStats],
+        methods: &mut [IterationMethod],
+        dim: usize,
+        pc: &PlannerConfig,
+    ) -> Vec<ChunkStorage> {
+        let n = methods.len();
+        let mut storage = vec![ChunkStorage::Csc; n];
+        if algo == MatmulAlgo::Baseline {
+            // The baseline evaluates per column off the CSC arrays; a
+            // chunk layout change would alter nothing it reads, so it
+            // keeps the seed layout.
+            return storage;
+        }
+        for c in 0..n {
+            let s = &stats[c];
+            // DenseRows: strictly fewer weight bytes (4(d+1) pointer
+            // entries versus 8r+4 of row-sparse indexing — the row map
+            // it also drops is pure extra savings) and a probe no slower
+            // than the planned kernel.
+            if 4 * (dim + 1) < 8 * s.rows + 4
+                && self.dense_rows_block_cost(pc) <= self.block_cost(methods[c], s, pc)
+            {
+                storage[c] = ChunkStorage::DenseRows;
+                methods[c] = IterationMethod::DenseLookup;
+                continue;
+            }
+            if matches!(
+                methods[c],
+                IterationMethod::MarchingPointers | IterationMethod::BinarySearch
+            ) && s.nnz <= MERGE_MAX_NNZ
+                && s.width <= MERGE_MAX_WIDTH
+            {
+                storage[c] = ChunkStorage::Merged;
+            }
+        }
+        // A merged run of one chunk saves nothing: revert singletons.
+        let mut i = 0;
+        while i < n {
+            if storage[i] == ChunkStorage::Merged {
+                let mut j = i;
+                while j < n && storage[j] == ChunkStorage::Merged {
+                    j += 1;
+                }
+                if j - i < 2 {
+                    storage[i] = ChunkStorage::Csc;
+                }
+                i = j;
+            } else {
+                i += 1;
+            }
+        }
+        storage
     }
 
     /// Fits the per-method constants by timing each kernel on a sample of
@@ -200,7 +310,7 @@ impl CostModel {
             let c = taken[li % model.layers.len()];
             if c < layer.chunked.num_chunks() {
                 let chunk = &layer.chunked.chunks[c];
-                if chunk.nnz_rows() > 0 {
+                if chunk.storage == ChunkStorage::Csc && chunk.nnz_rows() > 0 {
                     sample.push(chunk);
                 }
                 taken[li % model.layers.len()] += 1;
@@ -244,21 +354,22 @@ impl CostModel {
             let t = Instant::now();
             for (s, chunk) in sample.iter().enumerate() {
                 let chunk = if m == IterationMethod::Hash { &hashed[s] } else { *chunk };
+                let cv = chunk.view();
                 // One load per chunk, shared by the whole query sample —
                 // mirrors chunk-order evaluation; the `2r/n` shape below
                 // charges the same amortization.
                 if m == IterationMethod::DenseLookup {
-                    scratch.load(chunk);
+                    scratch.load(cv);
                 }
                 for x in &queries {
                     let o = &mut out[..chunk.ncols as usize];
                     o.fill(0.0);
                     let xv = x.view();
                     match m {
-                        IterationMethod::MarchingPointers => vec_chunk_marching(xv, chunk, o),
-                        IterationMethod::BinarySearch => vec_chunk_binary(xv, chunk, o),
-                        IterationMethod::Hash => vec_chunk_hash(xv, chunk, o),
-                        IterationMethod::DenseLookup => vec_chunk_dense(xv, chunk, &scratch, o),
+                        IterationMethod::MarchingPointers => vec_chunk_marching(xv, cv, o),
+                        IterationMethod::BinarySearch => vec_chunk_binary(xv, cv, o),
+                        IterationMethod::Hash => vec_chunk_hash(xv, cv, o),
+                        IterationMethod::DenseLookup => vec_chunk_dense(xv, cv, &scratch, o),
                         IterationMethod::Auto => unreachable!(),
                     }
                     std::hint::black_box(&mut *o);
@@ -270,7 +381,7 @@ impl CostModel {
                     );
                 }
                 if m == IterationMethod::DenseLookup {
-                    scratch.clear(chunk);
+                    scratch.clear(cv);
                 }
             }
             let ns = t.elapsed().as_nanos() as f64;
@@ -282,14 +393,17 @@ impl CostModel {
     }
 }
 
-/// One iteration method per chunk of one layer.
+/// One iteration method + storage layout per chunk of one layer.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LayerPlan {
     /// Indexed by chunk id; never contains `Auto`.
     pub methods: Vec<IterationMethod>,
+    /// Physical weight layout per chunk, co-indexed with `methods`.
+    pub storage: Vec<ChunkStorage>,
 }
 
-/// A resolved kernel plan: one concrete method per chunk per layer.
+/// A resolved kernel plan: one concrete method and one storage layout
+/// per chunk per layer.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct KernelPlan {
     /// One entry per model layer, top to bottom.
@@ -298,7 +412,8 @@ pub struct KernelPlan {
 
 impl KernelPlan {
     /// The degenerate plan a fixed configuration resolves to: `method`
-    /// everywhere. `method` must be concrete.
+    /// everywhere, seed `Csc` storage everywhere. `method` must be
+    /// concrete.
     pub fn uniform(model: &XmrModel, method: IterationMethod) -> Self {
         assert!(
             method != IterationMethod::Auto,
@@ -310,9 +425,20 @@ impl KernelPlan {
                 .iter()
                 .map(|l| LayerPlan {
                     methods: vec![method; l.chunked.num_chunks()],
+                    storage: vec![ChunkStorage::Csc; l.chunked.num_chunks()],
                 })
                 .collect(),
         }
+    }
+
+    /// Forces `storage` on every chunk of every layer (test/ablation
+    /// harnesses pin layouts this way; the planner itself mixes them
+    /// per chunk).
+    pub fn with_uniform_storage(mut self, storage: ChunkStorage) -> Self {
+        for l in &mut self.layers {
+            l.storage = vec![storage; l.methods.len()];
+        }
+        self
     }
 
     /// Plans `model` per chunk under `algo` with the (optionally
@@ -333,13 +459,20 @@ impl KernelPlan {
             layers: model
                 .layers
                 .iter()
-                .map(|l| LayerPlan {
-                    methods: l
-                        .chunked
-                        .chunks
+                .map(|l| {
+                    let stats: Vec<ChunkStats> = (0..l.chunked.num_chunks())
+                        .map(|c| l.chunked.chunk_stats(c))
+                        .collect();
+                    let mut methods: Vec<IterationMethod> = stats
                         .iter()
-                        .map(|c| cost.best_method(algo, c, pc))
-                        .collect(),
+                        .map(|s| cost.best_method(algo, s, pc))
+                        .collect();
+                    let storage = if pc.storage {
+                        cost.plan_layer_storage(algo, &stats, &mut methods, model.dim, pc)
+                    } else {
+                        vec![ChunkStorage::Csc; methods.len()]
+                    };
+                    LayerPlan { methods, storage }
                 })
                 .collect(),
         }
@@ -358,15 +491,18 @@ impl KernelPlan {
         }
     }
 
-    /// True when the plan's shape matches `model` (one method per chunk
-    /// per layer) and every entry is concrete.
+    /// True when the plan's shape matches `model` (one method + one
+    /// layout per chunk per layer) and every entry is concrete.
     pub fn matches(&self, model: &XmrModel) -> bool {
         self.layers.len() == model.layers.len()
             && self
                 .layers
                 .iter()
                 .zip(&model.layers)
-                .all(|(p, l)| p.methods.len() == l.chunked.num_chunks())
+                .all(|(p, l)| {
+                    p.methods.len() == l.chunked.num_chunks()
+                        && p.storage.len() == p.methods.len()
+                })
             && !self.uses(IterationMethod::Auto)
     }
 
@@ -377,6 +513,12 @@ impl KernelPlan {
         &self.layers[li].methods
     }
 
+    /// Per-chunk storage layouts of layer `li`.
+    #[inline]
+    pub fn layer_storage(&self, li: usize) -> &[ChunkStorage] {
+        &self.layers[li].storage
+    }
+
     /// True when any chunk of any layer plans `method`.
     pub fn uses(&self, method: IterationMethod) -> bool {
         self.layers
@@ -384,7 +526,29 @@ impl KernelPlan {
             .any(|l| l.methods.iter().any(|&m| m == method))
     }
 
-    /// Model-level summary: per-layer and total method histograms.
+    /// True when any chunk of any layer uses `storage`.
+    pub fn uses_storage(&self, storage: ChunkStorage) -> bool {
+        self.layers
+            .iter()
+            .any(|l| l.storage.iter().any(|&s| s == storage))
+    }
+
+    /// True when the plan needs the `O(d)` dense scratch: some chunk
+    /// plans `DenseLookup` *without* the `DenseRows` layout (that layout
+    /// is its own position array).
+    pub fn needs_dense_scratch(&self) -> bool {
+        self.layers.iter().any(|l| {
+            l.methods
+                .iter()
+                .zip(&l.storage)
+                .any(|(&m, &s)| {
+                    m == IterationMethod::DenseLookup && s != ChunkStorage::DenseRows
+                })
+        })
+    }
+
+    /// Model-level summary: per-layer and total method histograms plus
+    /// the storage-layout histogram.
     pub fn summary(&self) -> PlanSummary {
         let per_layer: Vec<[usize; 4]> = self
             .layers
@@ -403,7 +567,17 @@ impl KernelPlan {
                 *t += c;
             }
         }
-        PlanSummary { per_layer, total }
+        let mut storage_total = [0usize; 3];
+        for l in &self.layers {
+            for s in &l.storage {
+                storage_total[s.index()] += 1;
+            }
+        }
+        PlanSummary {
+            per_layer,
+            total,
+            storage_total,
+        }
     }
 }
 
@@ -441,14 +615,17 @@ pub fn fixed_hash_side_bytes(model: &XmrModel, algo: MatmulAlgo) -> usize {
     }
 }
 
-/// Method histograms of a [`KernelPlan`] (counts indexed by
-/// [`IterationMethod::index`]).
+/// Method + layout histograms of a [`KernelPlan`] (method counts indexed
+/// by [`IterationMethod::index`], layout counts by
+/// [`ChunkStorage::index`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlanSummary {
     /// Chunk counts per method, one row per layer.
     pub per_layer: Vec<[usize; 4]>,
     /// Chunk counts per method over the whole model.
     pub total: [usize; 4],
+    /// Chunk counts per storage layout over the whole model.
+    pub storage_total: [usize; 3],
 }
 
 impl std::fmt::Display for PlanSummary {
@@ -463,6 +640,11 @@ impl std::fmt::Display for PlanSummary {
         write!(f, "total:  ")?;
         for (m, &c) in CONCRETE.iter().zip(&self.total) {
             write!(f, "  {}={}", m.short(), c)?;
+        }
+        writeln!(f)?;
+        write!(f, "layouts:")?;
+        for (s, &c) in ChunkStorage::ALL.iter().zip(&self.storage_total) {
+            write!(f, "  {}={}", s.short(), c)?;
         }
         Ok(())
     }
@@ -501,7 +683,7 @@ mod tests {
         };
         let chunk = chunk_with_rows(2000, 32);
         assert_eq!(
-            cost.best_method(MatmulAlgo::Mscm, &chunk, &pc),
+            cost.best_method(MatmulAlgo::Mscm, &chunk.stats(), &pc),
             IterationMethod::DenseLookup
         );
     }
@@ -517,7 +699,7 @@ mod tests {
         };
         let chunk = chunk_with_rows(2000, 32);
         assert_eq!(
-            cost.best_method(MatmulAlgo::Mscm, &chunk, &pc),
+            cost.best_method(MatmulAlgo::Mscm, &chunk.stats(), &pc),
             IterationMethod::Hash
         );
     }
@@ -532,9 +714,65 @@ mod tests {
         };
         let chunk = chunk_with_rows(2, 2);
         assert_eq!(
-            cost.best_method(MatmulAlgo::Mscm, &chunk, &pc),
+            cost.best_method(MatmulAlgo::Mscm, &chunk.stats(), &pc),
             IterationMethod::MarchingPointers
         );
+    }
+
+    #[test]
+    fn storage_pass_picks_dense_rows_when_rows_cover_the_dim() {
+        // rows == d: the direct row-pointer array is strictly smaller
+        // than row-sparse indexing, and the probe beats the hash/dense
+        // kernels — the chunk re-lays as DenseRows with the probe kernel.
+        let cost = CostModel::default();
+        let pc = PlannerConfig {
+            query_nnz_hint: 64,
+            batch_hint: 1,
+            ..Default::default()
+        };
+        let stats = [chunk_with_rows(2000, 32).stats()];
+        let mut methods = [cost.best_method(MatmulAlgo::Mscm, &stats[0], &pc)];
+        let storage =
+            cost.plan_layer_storage(MatmulAlgo::Mscm, &stats, &mut methods, 2000, &pc);
+        assert_eq!(storage, vec![ChunkStorage::DenseRows]);
+        assert_eq!(methods[0], IterationMethod::DenseLookup);
+        // ... but not when the chunk's rows are a sliver of a huge d.
+        let mut methods = [IterationMethod::Hash];
+        let storage =
+            cost.plan_layer_storage(MatmulAlgo::Mscm, &stats, &mut methods, 1_000_000, &pc);
+        assert_eq!(storage, vec![ChunkStorage::Csc]);
+        assert_eq!(methods[0], IterationMethod::Hash);
+    }
+
+    #[test]
+    fn storage_pass_merges_runs_of_tiny_chunks_only() {
+        let cost = CostModel::default();
+        let pc = PlannerConfig {
+            query_nnz_hint: 8,
+            batch_hint: 1,
+            ..Default::default()
+        };
+        let tiny = chunk_with_rows(2, 2).stats();
+        let big = chunk_with_rows(400, 4).stats();
+        // tiny tiny big tiny big: only the leading pair merges.
+        let stats = [tiny, tiny, big, tiny, big];
+        let mut methods = [IterationMethod::MarchingPointers; 5];
+        let storage = cost.plan_layer_storage(MatmulAlgo::Mscm, &stats, &mut methods, 400, &pc);
+        assert_eq!(storage[0], ChunkStorage::Merged);
+        assert_eq!(storage[1], ChunkStorage::Merged);
+        assert_eq!(storage[3], ChunkStorage::Csc, "singleton run reverts");
+        assert_ne!(storage[2], ChunkStorage::Merged);
+    }
+
+    #[test]
+    fn baseline_storage_stays_csc() {
+        let cost = CostModel::default();
+        let pc = PlannerConfig::default();
+        let stats = [chunk_with_rows(2000, 32).stats(), chunk_with_rows(2, 2).stats()];
+        let mut methods = [IterationMethod::Hash, IterationMethod::MarchingPointers];
+        let storage =
+            cost.plan_layer_storage(MatmulAlgo::Baseline, &stats, &mut methods, 2000, &pc);
+        assert!(storage.iter().all(|&s| s == ChunkStorage::Csc));
     }
 
     #[test]
@@ -544,9 +782,12 @@ mod tests {
         assert!(plan.matches(&m));
         assert!(plan.uses(IterationMethod::BinarySearch));
         assert!(!plan.uses(IterationMethod::Hash));
+        assert!(!plan.uses_storage(ChunkStorage::DenseRows));
+        assert!(!plan.uses_storage(ChunkStorage::Merged));
         let s = plan.summary();
         let chunks: usize = m.layers.iter().map(|l| l.chunked.num_chunks()).sum();
         assert_eq!(s.total[IterationMethod::BinarySearch.index()], chunks);
+        assert_eq!(s.storage_total[ChunkStorage::Csc.index()], chunks);
         assert_eq!(s.per_layer.len(), m.depth());
     }
 
@@ -558,8 +799,21 @@ mod tests {
             assert!(plan.matches(&m), "{algo:?}");
             for (li, l) in m.layers.iter().enumerate() {
                 assert_eq!(plan.layer_methods(li).len(), l.chunked.num_chunks());
+                assert_eq!(plan.layer_storage(li).len(), l.chunked.num_chunks());
             }
         }
+    }
+
+    #[test]
+    fn storage_flag_off_keeps_every_chunk_csc() {
+        let m = tiny_model(32, 4, 3, 7);
+        let pc = PlannerConfig {
+            storage: false,
+            ..Default::default()
+        };
+        let plan = KernelPlan::auto(&m, MatmulAlgo::Mscm, &pc);
+        assert!(!plan.uses_storage(ChunkStorage::DenseRows));
+        assert!(!plan.uses_storage(ChunkStorage::Merged));
     }
 
     #[test]
@@ -625,6 +879,11 @@ mod tests {
             IterationMethod::DenseLookup,
             "wide dense chunk should plan dense"
         );
+        assert_eq!(
+            plan.layer_storage(0)[0],
+            ChunkStorage::DenseRows,
+            "rows cover > d/2, so the layout should drop the row index"
+        );
         assert!(
             plan.layer_methods(1)
                 .iter()
@@ -632,7 +891,15 @@ mod tests {
             "tiny chunks should plan a side-index-free method: {:?}",
             plan.layer_methods(1)
         );
+        assert!(
+            plan.layer_storage(1)
+                .iter()
+                .all(|&s| s == ChunkStorage::Merged),
+            "the run of tiny chunks should coalesce: {:?}",
+            plan.layer_storage(1)
+        );
         // ... which is the point: a mixed plan with no hash-planned chunk.
         assert!(!plan.uses(IterationMethod::Hash));
+        assert!(!plan.needs_dense_scratch(), "DenseRows needs no scratch");
     }
 }

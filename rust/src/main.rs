@@ -58,9 +58,11 @@ INFERENCE
   infer         --model m.bin --queries q.svm [--algo mscm|baseline]
                 [--iter marching|binary|hash|dense|auto] [--beam 10] [--topk 10]
   plan          --model m.bin [--algo mscm|baseline] [--calibrate N]
-                [--batch-hint N] [--plan-query-nnz N]
+                [--batch-hint N] [--plan-query-nnz N] [--no-layout]
                 (resolve the per-chunk kernel plan; print the per-layer
-                method histogram and side-index memory vs fixed hash)
+                method histogram, the storage-layout histogram, and the
+                side-index + weight memory vs the fixed hash / all-CSC
+                baselines)
   eval          --data corpus.svm [--branching B] [--beams 1,5,10,20]
                 [--test-frac 0.2]  (train/test split; P@k/R@k/nDCG per beam)
   serve         --model m.bin [--workers N] [--max-batch N] [--rps N]
@@ -80,7 +82,9 @@ INFERENCE
                 serve --remote; port 0 picks a free port and prints it)
 
   --iter auto resolves a per-chunk kernel plan (cost model over chunk
-  stats; --calibrate N times the kernels on N synthetic queries first);
+  stats; --calibrate N times the kernels on N synthetic queries first)
+  that also picks each chunk's weight storage layout (CSC, dense-rows,
+  merged; --no-layout keeps the seed CSC layout everywhere);
   predictions are bitwise identical to every fixed method.
 
 PAPER REPRODUCTION (synthetic suite; see DESIGN.md §5-6)
@@ -289,6 +293,9 @@ fn planner_config(opts: &Opts) -> Result<PlannerConfig, anyhow::Error> {
         batch_hint: get(opts, "batch-hint", d.batch_hint)?,
         query_nnz_hint: get(opts, "plan-query-nnz", d.query_nnz_hint)?,
         seed: get(opts, "seed", d.seed)?,
+        // --no-layout pins every chunk to the seed CSC layout (plan
+        // ablation; also what shared-model engines do implicitly).
+        storage: !opts.contains_key("no-layout"),
     })
 }
 
@@ -482,6 +489,7 @@ fn cmd_plan(opts: &Opts) -> Result<(), anyhow::Error> {
     // deterministic in the entry count) — no second model copy, no
     // full-size side index built just to print this line.
     let hash_b = mscm_xmr::inference::plan::fixed_hash_side_bytes(&model, algo);
+    let csc_w: usize = model.layers.iter().map(|l| l.chunked.weight_bytes()).sum();
     let auto_engine = InferenceEngine::new_with_plan(
         model,
         EngineConfig::new(algo, IterationMethod::Auto),
@@ -493,6 +501,13 @@ fn cmd_plan(opts: &Opts) -> Result<(), anyhow::Error> {
         auto_b / 1024,
         hash_b / 1024,
         100.0 * (1.0 - auto_b as f64 / hash_b.max(1) as f64)
+    );
+    let auto_w = auto_engine.weight_bytes();
+    println!(
+        "weights: planned layout {} KiB vs all-CSC {} KiB ({:+.1}%)",
+        auto_w / 1024,
+        csc_w / 1024,
+        100.0 * (auto_w as f64 / csc_w.max(1) as f64 - 1.0)
     );
     Ok(())
 }
@@ -750,8 +765,9 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
         );
         if config.iter == IterationMethod::Auto {
             eprintln!(
-                "planned side indexes: {} KiB across shards",
-                engine.side_index_bytes() / 1024
+                "planned side indexes: {} KiB across shards, weights {} KiB (stored layouts)",
+                engine.side_index_bytes() / 1024,
+                engine.weight_bytes() / 1024
             );
         }
         let dim = engine.dim();
@@ -789,8 +805,9 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
             eprintln!("partitioned into {} shards", engine.num_shards());
             if config.iter == IterationMethod::Auto {
                 eprintln!(
-                    "planned side indexes: {} KiB across shards",
-                    engine.side_index_bytes() / 1024
+                    "planned side indexes: {} KiB across shards, weights {} KiB (planned layouts)",
+                    engine.side_index_bytes() / 1024,
+                    engine.weight_bytes() / 1024
                 );
             }
             let coord = ShardedCoordinator::start(
@@ -806,8 +823,9 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
             if config.iter == IterationMethod::Auto {
                 eprintln!("kernel plan:\n{}", engine.plan().summary());
                 eprintln!(
-                    "planned side indexes: {} KiB",
-                    engine.side_index_bytes() / 1024
+                    "planned side indexes: {} KiB, weights {} KiB (planned layouts)",
+                    engine.side_index_bytes() / 1024,
+                    engine.weight_bytes() / 1024
                 );
             }
             (dim, Serving::Single(Coordinator::start(engine, base)))

@@ -505,6 +505,12 @@ impl ShardedEngine {
     pub fn side_index_bytes(&self) -> usize {
         self.units.iter().map(|u| u.engine.side_index_bytes()).sum()
     }
+
+    /// Chunked weight-payload bytes across all shards under the applied
+    /// storage layouts ([`InferenceEngine::weight_bytes`] summed).
+    pub fn weight_bytes(&self) -> usize {
+        self.units.iter().map(|u| u.engine.weight_bytes()).sum()
+    }
 }
 
 #[cfg(test)]

@@ -1,9 +1,9 @@
 //! Shard serialization: a versioned envelope around the [`crate::tree`]
 //! model body.
 //!
-//! Format (little-endian):
+//! Current format (`MSCMXMR3`, little-endian):
 //! ```text
-//! magic         u64  = 0x4d53_434d_584d_5232 ("MSCMXMR2")
+//! magic         u64  = 0x4d53_434d_584d_5233 ("MSCMXMR3")
 //! shard_id      u64
 //! num_shards    u64
 //! root_lo       u64   global root-child range [root_lo, root_hi)
@@ -14,15 +14,26 @@
 //! layer_offsets depth x u32   global column start per layer
 //! model body    (identical to the MSCMXMR1 payload after its magic)
 //! has_plan      u64  (0 = none; 1 = plan costed for MSCM; 2 = plan
-//!                     costed for the baseline algo; absent in
-//!                     pre-planner files — EOF here reads as "no plan")
+//!                     costed for the baseline algo; mandatory — a
+//!                     truncated V3 file is rejected)
 //! plan          if has_plan: per layer, num_chunks u64 then
 //!               num_chunks x u32 method codes (IterationMethod::index)
+//!               then num_chunks x u32 storage codes
+//!               (ChunkStorage::index)
+//! (end)         trailing bytes are rejected
 //! ```
 //! The body is read/written by the same codec as whole models, so format
 //! evolution stays in one place. The trailing kernel-plan section lets a
 //! planned (and possibly timing-calibrated) model load and serve without
-//! re-planning — plans are per-shard, over the shard's own chunks.
+//! re-planning — plans are per-shard, over the shard's own chunks, and
+//! since `MSCMXMR3` they carry the per-chunk **storage layout**
+//! ([`ChunkStorage`]) the engine applies at construction.
+//!
+//! Legacy `MSCMXMR2` files (magic `…5232`) still load: their plan
+//! section has no storage codes (every chunk reads as
+//! [`ChunkStorage::Csc`]), and pre-planner files that end right after
+//! the model body read as plan-less. Both legacy leniencies are V2-only;
+//! V3 parsing is strict (fuzzed in `rust/tests/format.rs`).
 //!
 //! A shard file is also the deployment unit of cross-process serving:
 //! `repro shard-host --shard <file>` loads exactly one of these (stored
@@ -35,9 +46,13 @@ use std::path::{Path, PathBuf};
 use super::partition::{ShardModel, ShardSpec};
 use crate::inference::plan::{KernelPlan, LayerPlan};
 use crate::inference::{IterationMethod, MatmulAlgo};
+use crate::sparse::ChunkStorage;
 use crate::tree::{read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64};
 
-const SHARD_MAGIC: u64 = 0x4d53_434d_584d_5232;
+/// Current envelope magic ("MSCMXMR3").
+const SHARD_MAGIC: u64 = 0x4d53_434d_584d_5233;
+/// Legacy envelope magic ("MSCMXMR2") — storage-less plans, still loaded.
+const SHARD_MAGIC_V2: u64 = 0x4d53_434d_584d_5232;
 
 fn invalid(msg: impl Into<String>) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.into())
@@ -70,14 +85,18 @@ pub fn save_shard(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> 
                 write_u64(&mut w, layer.methods.len() as u64)?;
                 let codes: Vec<u32> = layer.methods.iter().map(|m| m.index() as u32).collect();
                 write_u32s(&mut w, &codes)?;
+                let codes: Vec<u32> = layer.storage.iter().map(|s| s.index() as u32).collect();
+                write_u32s(&mut w, &codes)?;
             }
         }
     }
     w.flush()
 }
 
-/// Reads the trailing kernel-plan section (`depth` layer rows).
-fn read_plan(r: &mut impl Read, depth: usize) -> io::Result<KernelPlan> {
+/// Reads the trailing kernel-plan section (`depth` layer rows). V3 rows
+/// carry method + storage codes; legacy V2 rows carry methods only and
+/// read as all-[`ChunkStorage::Csc`].
+fn read_plan(r: &mut impl Read, depth: usize, with_storage: bool) -> io::Result<KernelPlan> {
     let mut layers = Vec::with_capacity(depth);
     for li in 0..depth {
         let n = read_u64(r)? as usize;
@@ -88,7 +107,19 @@ fn read_plan(r: &mut impl Read, depth: usize) -> io::Result<KernelPlan> {
                 invalid(format!("layer {li}: unknown iteration-method code {c}"))
             })?);
         }
-        layers.push(LayerPlan { methods });
+        let storage = if with_storage {
+            let codes = read_u32s(r, n)?;
+            let mut storage = Vec::with_capacity(n);
+            for c in codes {
+                storage.push(ChunkStorage::from_index(c as usize).ok_or_else(|| {
+                    invalid(format!("layer {li}: unknown storage-layout code {c}"))
+                })?);
+            }
+            storage
+        } else {
+            vec![ChunkStorage::Csc; n]
+        };
+        layers.push(LayerPlan { methods, storage });
     }
     Ok(KernelPlan { layers })
 }
@@ -97,9 +128,11 @@ fn read_plan(r: &mut impl Read, depth: usize) -> io::Result<KernelPlan> {
 /// `with_row_maps`), validating header/body consistency.
 pub fn load_shard(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<ShardModel> {
     let mut r = BufReader::new(std::fs::File::open(&path)?);
-    if read_u64(&mut r)? != SHARD_MAGIC {
-        return Err(invalid("not an MSCM-XMR shard file"));
-    }
+    let legacy = match read_u64(&mut r)? {
+        SHARD_MAGIC => false,
+        SHARD_MAGIC_V2 => true,
+        _ => return Err(invalid("not an MSCM-XMR shard file")),
+    };
     let spec = ShardSpec {
         shard_id: read_u64(&mut r)? as u32,
         num_shards: read_u64(&mut r)? as u32,
@@ -112,15 +145,23 @@ pub fn load_shard(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<Sha
     let layer_offsets = read_u32s(&mut r, depth)?;
     let model = read_model_body(&mut r, with_row_maps)?;
     let plan = match read_u64(&mut r) {
-        // Shard files written before the planner end right after the
-        // model body (same magic): treat them as carrying no plan.
-        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => None,
+        // V2 shard files written before the planner end right after the
+        // model body (same magic): treat them as carrying no plan. A V3
+        // file always writes the flag, so EOF there is corruption.
+        Err(e) if legacy && e.kind() == io::ErrorKind::UnexpectedEof => None,
         Err(e) => return Err(e),
         Ok(0) => None,
-        Ok(1) => Some((MatmulAlgo::Mscm, read_plan(&mut r, depth)?)),
-        Ok(2) => Some((MatmulAlgo::Baseline, read_plan(&mut r, depth)?)),
+        Ok(1) => Some((MatmulAlgo::Mscm, read_plan(&mut r, depth, !legacy)?)),
+        Ok(2) => Some((MatmulAlgo::Baseline, read_plan(&mut r, depth, !legacy)?)),
         Ok(v) => return Err(invalid(format!("bad plan-presence flag {v}"))),
     };
+    if !legacy {
+        // Strict V3 parse: the plan section is the end of the file.
+        let mut probe = [0u8; 1];
+        if r.read(&mut probe)? != 0 {
+            return Err(invalid("trailing bytes after the shard payload"));
+        }
+    }
     if let Some((_, p)) = &plan {
         if !p.matches(&model) {
             return Err(invalid("stored kernel plan does not fit the model body"));
@@ -295,21 +336,94 @@ mod tests {
     }
 
     #[test]
-    fn pre_planner_shard_files_still_load() {
-        // A file written before the plan section existed ends right
-        // after the model body; chopping the trailing flag off a fresh
-        // plan-less file reproduces that layout exactly.
+    fn pre_planner_v2_shard_files_still_load() {
+        // A V2 file written before the plan section existed ends right
+        // after the model body; patching the magic down to V2 and
+        // chopping the trailing flag off a fresh plan-less file
+        // reproduces that layout exactly.
         let m = tiny_model(16, 3, 2, 8);
         let shards = partition(&m, 2);
         let dir = crate::util::temp_dir("shard-io-preplan");
         let path = shard_file_name(&dir, 0, 2);
         std::fs::create_dir_all(&dir).unwrap();
         save_shard(&shards[0], &path).unwrap();
-        let full = std::fs::read(&path).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        full[0] = 0x32; // LE magic: "…MXR3" -> "…MXR2"
         std::fs::write(&path, &full[..full.len() - 8]).unwrap();
         let loaded = load_shard(&path, false).unwrap();
         assert!(loaded.plan.is_none());
         assert_eq!(loaded.spec, shards[0].spec);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_v3_shard_file_is_rejected() {
+        // V3 always writes the plan-presence flag; a file cut at the end
+        // of the model body is corruption, not a pre-planner file.
+        let m = tiny_model(16, 3, 2, 8);
+        let shards = partition(&m, 2);
+        let dir = crate::util::temp_dir("shard-io-trunc");
+        let path = shard_file_name(&dir, 0, 2);
+        std::fs::create_dir_all(&dir).unwrap();
+        save_shard(&shards[0], &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        assert!(load_shard(&path, false).is_err());
+        // ... and so are trailing bytes after a complete payload.
+        let mut padded = full.clone();
+        padded.push(0);
+        std::fs::write(&path, &padded).unwrap();
+        assert!(load_shard(&path, false).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn storage_layouts_round_trip_in_envelope() {
+        use crate::inference::{IterationMethod, KernelPlan};
+        let m = tiny_model(20, 4, 3, 23);
+        let mut shards = partition(&m, 2);
+        // A hand-mixed layout: merged run up top, dense rows at the
+        // bottom — exercises every storage code in one file.
+        for sh in &mut shards {
+            let mut plan = KernelPlan::uniform(&sh.model, IterationMethod::BinarySearch);
+            for l in &mut plan.layers {
+                let n = l.storage.len();
+                if n >= 2 {
+                    l.storage[0] = ChunkStorage::Merged;
+                    l.storage[1] = ChunkStorage::Merged;
+                }
+                if n >= 3 {
+                    l.storage[n - 1] = ChunkStorage::DenseRows;
+                }
+            }
+            sh.plan = Some((MatmulAlgo::Mscm, plan));
+        }
+        let dir = crate::util::temp_dir("shard-io-layouts");
+        save_shards(&shards, &dir).unwrap();
+        let loaded = load_shards(&dir, false).unwrap();
+        for (a, b) in shards.iter().zip(&loaded) {
+            assert_eq!(a.plan, b.plan, "shard {}", a.spec.shard_id);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_storage_code_is_rejected() {
+        use crate::inference::PlannerConfig;
+        let m = tiny_model(16, 3, 2, 4);
+        let mut shards = partition(&m, 2);
+        shards[0].plan_auto(MatmulAlgo::Mscm, &PlannerConfig::default());
+        let dir = crate::util::temp_dir("shard-io-badcode");
+        let path = shard_file_name(&dir, 0, 2);
+        std::fs::create_dir_all(&dir).unwrap();
+        save_shard(&shards[0], &path).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        // The file tail is the bottom layer's storage codes (u32 LE).
+        let n = full.len();
+        full[n - 4] = 0xEE;
+        std::fs::write(&path, &full).unwrap();
+        let err = load_shard(&path, false).unwrap_err();
+        assert!(err.to_string().contains("storage-layout"), "{err}");
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -23,8 +23,11 @@
 //!   back to a fresh resolution).
 //! - [`save_shard`] / [`load_shard`] (+ the `save_shards`/[`load_shards`]
 //!   directory helpers) persist shards in a versioned extension of the
-//!   [`crate::tree`] binary format (magic `MSCMXMR2`, a shard-index
-//!   header, then the ordinary model body).
+//!   [`crate::tree`] binary format (magic `MSCMXMR3`, a shard-index
+//!   header, the ordinary model body, then the plan section carrying
+//!   each chunk's method *and* storage layout
+//!   ([`crate::sparse::ChunkStorage`]); legacy `MSCMXMR2` files load as
+//!   all-CSC).
 //! - [`ShardedEngine`] runs a query against every shard and merges the
 //!   results; [`ShardedCoordinator`] serves it with dynamic batching,
 //!   per-shard worker pools (each worker holding its own

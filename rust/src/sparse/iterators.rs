@@ -1,11 +1,14 @@
 //! The four ways to walk the support intersection `S(x) ∩ S(K)` when
 //! computing a sparse-vector × chunk product (paper §4, items 1–4, and
-//! Algorithm 2).
+//! Algorithm 2), plus the direct-probe kernel of the
+//! [`ChunkStorage::DenseRows`] layout.
 //!
 //! Every function here computes `z = x K` for one query row `x` and one
-//! chunk `K`, accumulating into a caller-provided dense output of length
-//! `K.ncols` (the caller zeroes it). All four produce *identical* results
-//! — they differ only in how the common nonzero rows are found:
+//! chunk *view* `K` ([`ChunkView`] — the layout-resolved interface of
+//! [`crate::sparse::ChunkedMatrix::view`]), accumulating into a
+//! caller-provided dense output of length `K.ncols` (the caller zeroes
+//! it). All produce *identical* results — they differ only in how the
+//! common nonzero rows are found:
 //!
 //! | method             | per-query complexity                      | extra memory |
 //! |--------------------|-------------------------------------------|--------------|
@@ -13,15 +16,24 @@
 //! | binary search      | `O(min·log(max))`                         | none         |
 //! | hash-map           | `O(h · nnz_x)`                            | `O(c·nnz_K)` |
 //! | dense lookup       | `O(nnz_x + nnz_K / n)` (fill amortized)   | `O(d)`       |
+//! | dense-rows probe   | `O(nnz_x)`                                | none (layout)|
 //!
-//! (Table 6 of the paper.)
+//! (Table 6 of the paper; the last row is the layout-level variant where
+//! the `O(d)` position array is baked into the chunk's own `row_ptr`, so
+//! no scratch, no load and no clear exist at all.)
+//!
+//! The marching/binary/hash kernels require a layout with stored
+//! `row_indices` (`Csc` or `Merged`); `DenseRows` chunks are always
+//! evaluated by [`vec_chunk_dense_rows`], whatever method the plan named
+//! — the probe *is* that layout's hash/dense/marching walk, and all
+//! kernels are bitwise identical anyway.
 
-use super::chunked::Chunk;
+use super::chunked::{ChunkStorage, ChunkView};
 use super::vec::{lower_bound, SparseVecView};
 
 /// Accumulate `x_val * K[row at pos]` into `out`.
 #[inline(always)]
-fn emit(chunk: &Chunk, pos: usize, x_val: f32, out: &mut [f32]) {
+fn emit(chunk: &ChunkView<'_>, pos: usize, x_val: f32, out: &mut [f32]) {
     let (cols, vals) = chunk.row_entries(pos);
     for (&c, &v) in cols.iter().zip(vals) {
         // `c < chunk.ncols == out.len()` by construction; an unchecked
@@ -33,14 +45,15 @@ fn emit(chunk: &Chunk, pos: usize, x_val: f32, out: &mut [f32]) {
 
 /// Item 1 — **marching pointers**: advance two sorted cursors one step at
 /// a time.
-pub fn vec_chunk_marching(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
+pub fn vec_chunk_marching(x: SparseVecView<'_>, chunk: ChunkView<'_>, out: &mut [f32]) {
     debug_assert_eq!(out.len(), chunk.ncols as usize);
-    let rows = &chunk.row_indices;
+    debug_assert!(chunk.storage != ChunkStorage::DenseRows);
+    let rows = chunk.row_indices;
     let (mut a, mut b) = (0usize, 0usize);
     while a < x.indices.len() && b < rows.len() {
         let (ia, ib) = (x.indices[a], rows[b]);
         if ia == ib {
-            emit(chunk, b, x.values[a], out);
+            emit(&chunk, b, x.values[a], out);
             a += 1;
             b += 1;
         } else if ia < ib {
@@ -53,14 +66,15 @@ pub fn vec_chunk_marching(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) 
 
 /// Item 2 — **binary search**: marching pointers, but the lagging cursor
 /// jumps via `LowerBound` (mirrors baseline Alg. 4).
-pub fn vec_chunk_binary(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
+pub fn vec_chunk_binary(x: SparseVecView<'_>, chunk: ChunkView<'_>, out: &mut [f32]) {
     debug_assert_eq!(out.len(), chunk.ncols as usize);
-    let rows = &chunk.row_indices;
+    debug_assert!(chunk.storage != ChunkStorage::DenseRows);
+    let rows = chunk.row_indices;
     let (mut a, mut b) = (0usize, 0usize);
     while a < x.indices.len() && b < rows.len() {
         let (ia, ib) = (x.indices[a], rows[b]);
         if ia == ib {
-            emit(chunk, b, x.values[a], out);
+            emit(&chunk, b, x.values[a], out);
             a += 1;
             b += 1;
         } else if ia < ib {
@@ -76,16 +90,15 @@ pub fn vec_chunk_binary(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
 /// per *column*, which is the overhead MSCM removes).
 ///
 /// # Panics
-/// If the chunk was built without row maps.
-pub fn vec_chunk_hash(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
+/// If the chunk carries no row map (only `Csc` chunks can).
+pub fn vec_chunk_hash(x: SparseVecView<'_>, chunk: ChunkView<'_>, out: &mut [f32]) {
     debug_assert_eq!(out.len(), chunk.ncols as usize);
     let map = chunk
         .row_map
-        .as_ref()
         .expect("hash iteration requires chunk row maps (build_row_maps)");
     for (&i, &xv) in x.indices.iter().zip(x.values) {
         if let Some(pos) = map.get(i) {
-            emit(chunk, pos as usize, xv, out);
+            emit(&chunk, pos as usize, xv, out);
         }
     }
 }
@@ -94,6 +107,9 @@ pub fn vec_chunk_hash(x: SparseVecView<'_>, chunk: &Chunk, out: &mut [f32]) {
 /// `row position + 1` within the currently-loaded chunk, 0 meaning absent.
 /// One instance is recycled across the whole run (per thread) and cleared
 /// by re-walking the chunk's nonzero rows — never by an `O(d)` memset.
+///
+/// Only `Csc`/`Merged` chunks are ever loaded: a `DenseRows` chunk *is*
+/// its own position array ([`vec_chunk_dense_rows`]).
 #[derive(Debug)]
 pub struct DenseScratch {
     pos: Vec<u32>,
@@ -117,7 +133,7 @@ impl DenseScratch {
     /// Loads a chunk's nonzero-row positions (cost `O(nnz_K)` — amortized
     /// across all queries that hit this chunk when blocks are evaluated in
     /// chunk order, Alg. 3 line 7).
-    pub fn load(&mut self, chunk: &Chunk) {
+    pub fn load(&mut self, chunk: ChunkView<'_>) {
         debug_assert!(!self.loaded, "DenseScratch::load without clear");
         for (p, &r) in chunk.row_indices.iter().enumerate() {
             self.pos[r as usize] = p as u32 + 1;
@@ -126,8 +142,8 @@ impl DenseScratch {
     }
 
     /// Clears the previously-loaded chunk.
-    pub fn clear(&mut self, chunk: &Chunk) {
-        for &r in &chunk.row_indices {
+    pub fn clear(&mut self, chunk: ChunkView<'_>) {
+        for &r in chunk.row_indices {
             self.pos[r as usize] = 0;
         }
         self.loaded = false;
@@ -143,7 +159,7 @@ impl DenseScratch {
 /// dense scratch that [`DenseScratch::load`] filled for this chunk.
 pub fn vec_chunk_dense(
     x: SparseVecView<'_>,
-    chunk: &Chunk,
+    chunk: ChunkView<'_>,
     scratch: &DenseScratch,
     out: &mut [f32],
 ) {
@@ -152,8 +168,21 @@ pub fn vec_chunk_dense(
     for (&i, &xv) in x.indices.iter().zip(x.values) {
         let p = scratch.pos[i as usize];
         if p != 0 {
-            emit(chunk, (p - 1) as usize, xv, out);
+            emit(&chunk, (p - 1) as usize, xv, out);
         }
+    }
+}
+
+/// The [`ChunkStorage::DenseRows`] kernel: the chunk's `row_ptr` is
+/// indexed directly by row id, so each query nonzero is one probe —
+/// no scratch, no load, no clear. Per output entry the accumulation
+/// order is ascending row id, exactly as in every other kernel, so the
+/// result is bitwise identical.
+pub fn vec_chunk_dense_rows(x: SparseVecView<'_>, chunk: ChunkView<'_>, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    debug_assert_eq!(chunk.storage, ChunkStorage::DenseRows);
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        emit(&chunk, i as usize, xv, out);
     }
 }
 
@@ -187,7 +216,7 @@ mod tests {
     #[test]
     fn all_methods_match_reference() {
         let (m, x) = chunk_and_query();
-        let chunk = &m.chunks[0];
+        let chunk = m.view(0);
         let expect = reference(&m, &x);
 
         let mut out = vec![0.0; 3];
@@ -212,9 +241,38 @@ mod tests {
     }
 
     #[test]
+    fn dense_rows_and_merged_layouts_match_reference() {
+        use crate::sparse::ChunkStorage;
+        let (m, x) = chunk_and_query();
+        let expect = reference(&m, &x);
+
+        let mut dr = m.clone();
+        dr.apply_layout(&[ChunkStorage::DenseRows]);
+        let mut out = vec![0.0; 3];
+        vec_chunk_dense_rows(x.view(), dr.view(0), &mut out);
+        assert_eq!(out, expect);
+
+        let mut mg = m.clone();
+        mg.apply_layout(&[ChunkStorage::Merged]);
+        let v = mg.view(0);
+        out.fill(0.0);
+        vec_chunk_marching(x.view(), v, &mut out);
+        assert_eq!(out, expect);
+        out.fill(0.0);
+        vec_chunk_binary(x.view(), v, &mut out);
+        assert_eq!(out, expect);
+        let mut scratch = DenseScratch::new(8);
+        scratch.load(v);
+        out.fill(0.0);
+        vec_chunk_dense(x.view(), v, &scratch, &mut out);
+        assert_eq!(out, expect);
+        scratch.clear(v);
+    }
+
+    #[test]
     fn empty_query_yields_zeros() {
         let (m, _) = chunk_and_query();
-        let chunk = &m.chunks[0];
+        let chunk = m.view(0);
         let x = SparseVec::new();
         let mut out = vec![0.0; 3];
         vec_chunk_marching(x.view(), chunk, &mut out);
@@ -226,7 +284,7 @@ mod tests {
     #[test]
     fn scratch_reload_cycle() {
         let (m, x) = chunk_and_query();
-        let chunk = &m.chunks[0];
+        let chunk = m.view(0);
         let mut scratch = DenseScratch::new(8);
         for _ in 0..3 {
             scratch.load(chunk);

@@ -14,6 +14,37 @@
 //! [`iterators`] implements the four ways of walking the support
 //! intersection `S(x) ∩ S(K)` (marching pointers, binary search, hash-map,
 //! dense lookup) shared by the baseline and MSCM kernels.
+//!
+//! # Per-chunk weight layouts ([`ChunkStorage`])
+//!
+//! Each chunk of a [`ChunkedMatrix`] additionally carries one of three
+//! physical *storage layouts*, chosen by the kernel planner
+//! ([`crate::inference::plan`]) from the same per-chunk cost model that
+//! picks the kernels (extended with per-layout byte + probe-time terms,
+//! timing-calibration aware):
+//!
+//! - **`Csc`** — the seed row-sparse layout: sorted `row_indices` plus a
+//!   `row_ptr` slice per stored row. Always valid; the only layout that
+//!   can carry a hash row map. Picked whenever nothing cheaper applies.
+//! - **`DenseRows`** — `row_ptr` indexed directly by row id (`d + 1`
+//!   entries): `row_indices`, the hash row map and the `O(d)` dense
+//!   scratch all disappear, and a support probe is a single array read.
+//!   Picked for chunks whose stored rows cover more than half the
+//!   feature dimension (the byte crossover) when the probe is no slower
+//!   than the planned kernel — dense top-of-tree chunks.
+//! - **`Merged`** — runs of ≥ 2 adjacent tiny sibling chunks coalesce
+//!   their arrays into the layer's shared
+//!   [`MergedStore`](chunked::MergedStore) with a sub-chunk span table,
+//!   shrinking per-chunk `Vec` overhead and putting chunks that are
+//!   beam-activated together contiguous in memory. Picked for
+//!   marching/binary-planned chunks below the tiny-chunk thresholds.
+//!
+//! Every layout stores the exact same entries in the exact same per-row
+//! order, so all layouts are **bitwise identical** to `Csc` under every
+//! kernel and algorithm — enforced by the seeded property harness in
+//! `rust/tests/layout.rs`. Kernels consume layout-resolved
+//! [`ChunkView`]s; engines apply a plan's layout at construction via
+//! [`ChunkedMatrix::apply_layout`] (models are always *built* all-`Csc`).
 
 pub mod chunked;
 pub mod csc;
@@ -22,7 +53,7 @@ pub mod hashmap;
 pub mod iterators;
 pub mod vec;
 
-pub use chunked::{Chunk, ChunkStats, ChunkedMatrix};
+pub use chunked::{Chunk, ChunkStats, ChunkStorage, ChunkView, ChunkedMatrix};
 pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use hashmap::U32Map;

@@ -31,12 +31,12 @@ use std::time::Duration;
 use mscm_xmr::coordinator::CoordinatorConfig;
 use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
 use mscm_xmr::inference::{
-    EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo, Prediction,
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo, Prediction,
 };
 use mscm_xmr::shard::{
     GatherArena, ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
 };
-use mscm_xmr::sparse::SparseVec;
+use mscm_xmr::sparse::{ChunkStorage, SparseVec};
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
@@ -148,6 +148,39 @@ fn steady_state_hot_paths_do_not_allocate() {
             "batch predict_range allocated {delta}x after warmup ({})",
             cfg.label()
         );
+    }
+
+    // --- forced DenseRows / Merged weight layouts: the same zero bar.
+    // DenseRows runs the direct-probe kernel (no scratch to load);
+    // Merged runs every kernel through store-backed views — neither may
+    // touch the allocator once warm. ---
+    for storage in [ChunkStorage::DenseRows, ChunkStorage::Merged] {
+        for iter in [
+            IterationMethod::MarchingPointers,
+            IterationMethod::DenseLookup,
+        ] {
+            let cfg = EngineConfig::new(MatmulAlgo::Mscm, iter);
+            let plan = KernelPlan::uniform(&model, iter).with_uniform_storage(storage);
+            let engine = InferenceEngine::new_with_plan(model.clone(), cfg, plan);
+            let mut ws = engine.workspace();
+            let mut out: Vec<Vec<Prediction>> = vec![Vec::new(); x.rows];
+            for _ in 0..2 {
+                for q in &queries {
+                    std::hint::black_box(engine.predict_with(q, 10, 5, &mut ws));
+                }
+                engine.predict_range(&x, 0, x.rows, 10, 5, &mut ws, &mut out);
+            }
+            let before = allocs();
+            for q in &queries {
+                std::hint::black_box(engine.predict_with(q, 10, 5, &mut ws));
+            }
+            engine.predict_range(&x, 0, x.rows, 10, 5, &mut ws, &mut out);
+            let delta = allocs() - before;
+            assert_eq!(
+                delta, 0,
+                "{storage:?}/{iter:?} hot path allocated {delta}x after warmup"
+            );
+        }
     }
 
     // --- in-process sharded layer-sync rounds: zero ---

@@ -1,0 +1,269 @@
+//! Shared seeded property-test harness.
+//!
+//! Every integration property suite (`exactness.rs`, `planner.rs`,
+//! `sharding.rs`, `layout.rs`, `format.rs`, `remote.rs`) draws its
+//! randomized models and queries from the one [`ModelGen`] here instead
+//! of hand-rolled per-file synthetic setups, so the tricky shapes —
+//! skewed and uniform depth, mixed-density chunks, all-empty chunks,
+//! width-1 layers, explicit zero weights, empty queries — are exercised
+//! by *all* of them.
+//!
+//! Seeding: the base seed comes from the `MSCM_TEST_SEED` env var when
+//! set (CI runs the suites once with the fixed default and once with a
+//! job-randomized seed) and is **printed on failure** by [`run_cases`],
+//! so any failing case replays with
+//! `MSCM_TEST_SEED=<seed> cargo test -q --test <suite>`.
+
+#![allow(dead_code)]
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+use mscm_xmr::data::synthetic::{synth_model_skewed, DatasetSpec};
+use mscm_xmr::sparse::{CscMatrix, CsrMatrix, SparseVec};
+use mscm_xmr::tree::{Layer, XmrModel};
+use mscm_xmr::util::Rng;
+
+/// The fixed default base seed (CI job 1; local runs).
+pub const DEFAULT_SEED: u64 = 0x5EED_CA5E;
+
+/// Base seed: `MSCM_TEST_SEED` when set, else [`DEFAULT_SEED`].
+pub fn base_seed() -> u64 {
+    match std::env::var("MSCM_TEST_SEED") {
+        Ok(s) => s
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("MSCM_TEST_SEED must be a u64, got '{s}': {e}")),
+        Err(_) => DEFAULT_SEED,
+    }
+}
+
+/// One generated property case: a random tree model plus a matching
+/// random query batch.
+pub struct GenCase {
+    /// The seed this exact case regenerates from.
+    pub seed: u64,
+    /// Compact shape description for failure messages.
+    pub shape: String,
+    pub model: XmrModel,
+    pub queries: CsrMatrix,
+}
+
+impl GenCase {
+    /// The batch queries as owned rows (for the online paths).
+    pub fn query_rows(&self) -> Vec<SparseVec> {
+        (0..self.queries.rows)
+            .map(|i| self.queries.row_owned(i))
+            .collect()
+    }
+}
+
+/// Seeded generator of randomized tree models and query batches.
+pub struct ModelGen {
+    rng: Rng,
+    /// Soft cap on a layer's node count (bounds label blow-up so wide
+    /// grids over many cases stay fast).
+    pub max_parents: usize,
+}
+
+impl ModelGen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::seed_from_u64(seed),
+            max_parents: 400,
+        }
+    }
+
+    /// A randomized model: random dim/depth, per-chunk width classes
+    /// (width-1 layers included), per-chunk density classes from
+    /// all-empty through dense-rows territory, occasional explicit zero
+    /// weights, and per-layer randomized row-map presence.
+    pub fn model(&mut self) -> (XmrModel, String) {
+        let rng = &mut self.rng;
+        let dim = rng.gen_range(12..160);
+        let depth = rng.gen_range(1..5);
+        let mut layers: Vec<Layer> = Vec::new();
+        let mut parents = 1usize;
+        for _ in 0..depth {
+            // Degenerate shape: some layers are all width-1 chunks.
+            let width_one_layer = rng.gen_bool(0.15);
+            let mut offsets = vec![0u32];
+            let mut cols: Vec<SparseVec> = Vec::new();
+            for _ in 0..parents {
+                let width = if width_one_layer || cols.len() >= self.max_parents {
+                    1
+                } else {
+                    match rng.gen_range(0..8) {
+                        0 => 1,
+                        1..=4 => rng.gen_range(2..5),
+                        _ => rng.gen_range(4..9),
+                    }
+                };
+                // One density class per chunk, so whole chunks can be
+                // empty, tiny (merge territory) or dense (DenseRows
+                // territory).
+                let class = rng.gen_range(0..10);
+                for _ in 0..width {
+                    let nnz = match class {
+                        0 => 0,
+                        1..=2 => rng.gen_range(1..3),
+                        3..=7 => rng.gen_range(1..(dim / 4).max(2)),
+                        _ => rng.gen_range(dim * 2 / 3..dim),
+                    };
+                    let mut pairs = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        let f = rng.gen_range(0..dim) as u32;
+                        // Explicit stored zeros must stay inert.
+                        let v = if rng.gen_bool(0.05) {
+                            0.0
+                        } else {
+                            rng.gen_f32(-1.5, 1.5)
+                        };
+                        pairs.push((f, v));
+                    }
+                    cols.push(SparseVec::from_pairs(pairs));
+                }
+                offsets.push(cols.len() as u32);
+            }
+            let with_maps = rng.gen_bool(0.5);
+            layers.push(Layer::new(
+                CscMatrix::from_cols(cols, dim),
+                &offsets,
+                with_maps,
+            ));
+            parents = layers.last().unwrap().num_nodes();
+        }
+        let model = XmrModel::new(dim, layers);
+        let shape = format!(
+            "dim={} depth={} labels={}",
+            model.dim,
+            model.depth(),
+            model.num_labels()
+        );
+        (model, shape)
+    }
+
+    /// A randomized query batch over feature dimension `dim` (empty
+    /// queries included).
+    pub fn queries(&mut self, dim: usize, n: usize) -> CsrMatrix {
+        let rng = &mut self.rng;
+        let rows: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                if rng.gen_bool(0.1) {
+                    return SparseVec::new();
+                }
+                let nnz = rng.gen_range(1..(dim / 2).max(2));
+                SparseVec::from_pairs(
+                    (0..nnz)
+                        .map(|_| (rng.gen_range(0..dim) as u32, rng.gen_f32(-1.5, 1.5)))
+                        .collect(),
+                )
+            })
+            .collect();
+        CsrMatrix::from_rows(rows, dim)
+    }
+
+    /// A random CSC matrix plus a valid random chunk partition of its
+    /// columns (for matrix-level round-trip properties).
+    pub fn matrix(&mut self) -> (CscMatrix, Vec<u32>) {
+        let rng = &mut self.rng;
+        let rows = rng.gen_range(1..80);
+        let cols = rng.gen_range(1..60);
+        let colvecs: Vec<SparseVec> = (0..cols)
+            .map(|_| {
+                let nnz = rng.gen_range(0..rows.min(20) + 1);
+                SparseVec::from_pairs(
+                    (0..nnz)
+                        .map(|_| (rng.gen_range(0..rows) as u32, rng.gen_f32(-2.0, 2.0)))
+                        .collect(),
+                )
+            })
+            .collect();
+        let csc = CscMatrix::from_cols(colvecs, rows);
+        let mut offsets = vec![0u32];
+        while (*offsets.last().unwrap() as usize) < cols {
+            let last = *offsets.last().unwrap() as usize;
+            let step = rng.gen_range(1..(cols - last).min(9) + 1);
+            offsets.push((last + step) as u32);
+        }
+        (csc, offsets)
+    }
+
+    /// Uniform draw from a half-open range (exposed so callers share the
+    /// case's seed stream instead of hatching their own RNGs).
+    pub fn pick(&mut self, r: std::ops::Range<usize>) -> usize {
+        self.rng.gen_range(r)
+    }
+}
+
+/// Generates case `i` under `base`: a decorrelated per-case seed, the
+/// model and a query batch drawn from the same stream. `max_parents`
+/// bounds layer width (grids that build many engines per case pass a
+/// small cap).
+pub fn gen_case_capped(base: u64, i: u64, max_parents: usize) -> GenCase {
+    let seed = base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut g = ModelGen::new(seed);
+    g.max_parents = max_parents;
+    let (model, shape) = g.model();
+    let n = g.pick(1..9);
+    let queries = g.queries(model.dim, n);
+    GenCase {
+        seed,
+        shape,
+        model,
+        queries,
+    }
+}
+
+/// [`gen_case_capped`] at the default size cap.
+pub fn gen_case(base: u64, i: u64) -> GenCase {
+    gen_case_capped(base, i, 400)
+}
+
+/// Runs `cases` generated property cases. If the closure panics, the
+/// base seed and the failing case are printed first so the failure
+/// replays exactly via `MSCM_TEST_SEED`.
+pub fn run_cases(cases: u64, f: impl Fn(u64, &GenCase)) {
+    run_cases_capped(cases, 400, f)
+}
+
+/// [`run_cases`] with a custom layer-width cap (smaller models for
+/// wide configuration grids).
+pub fn run_cases_capped(cases: u64, max_parents: usize, f: impl Fn(u64, &GenCase)) {
+    let base = base_seed();
+    for i in 0..cases {
+        let case = gen_case_capped(base, i, max_parents);
+        let result = catch_unwind(AssertUnwindSafe(|| f(i, &case)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property case {i} FAILED (shape {}): replay with \
+                 MSCM_TEST_SEED={base} (case seed {:#x})",
+                case.shape, case.seed
+            );
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// The shared fixed-shape dataset spec the suites previously each
+/// duplicated (used where a *specific* structure is needed rather than a
+/// randomized one).
+pub fn dataset_spec(name: &'static str, dim: usize, labels: usize) -> DatasetSpec {
+    DatasetSpec {
+        name,
+        dim,
+        num_labels: labels,
+        paper_dim: dim,
+        paper_labels: 0,
+        query_nnz: 12,
+        col_nnz: 8,
+        sibling_overlap: 0.6,
+        zipf_theta: 1.0,
+    }
+}
+
+/// Mixed-density skewed tree: wide dense chunks up top, tiny sparse ones
+/// below — the shape where the planner actually mixes methods (and
+/// layouts).
+pub fn skewed_model(dim: usize, labels: usize, roots: usize, seed: u64) -> XmrModel {
+    synth_model_skewed(&dataset_spec("skewed-prop", dim, labels), roots, seed, 0.6)
+}

@@ -2,90 +2,81 @@
 //! `(algo, iteration)` engine configuration — and every thread count —
 //! produces **bit-identical** predictions on arbitrary models/queries.
 //!
-//! Hand-rolled property harness (seeded generators + many cases; the
-//! offline vendor set has no proptest): each case synthesizes a random
-//! tree model and query batch and cross-checks all 8 configurations.
+//! All randomized models/queries come from the shared seeded harness in
+//! `tests/common` (`MSCM_TEST_SEED` overrides the base seed; failures
+//! print it for replay) — the same generator every other property suite
+//! uses, so skewed/uniform depth, mixed-density chunks, empty chunks,
+//! width-1 layers and zero-weight rows are all in scope here too.
 
-use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
-use mscm_xmr::inference::{EngineConfig, InferenceEngine};
-use mscm_xmr::util::Rng;
+mod common;
+
 use std::sync::Arc;
 
-fn random_spec(rng: &mut Rng, case: u64) -> (DatasetSpec, usize) {
-    let dim = rng.gen_range(16..600);
-    let spec = DatasetSpec {
-        name: "prop",
-        dim,
-        num_labels: rng.gen_range(8..400),
-        paper_dim: dim,
-        paper_labels: 0,
-        query_nnz: rng.gen_range(1..40),
-        col_nnz: rng.gen_range(1..24),
-        sibling_overlap: rng.gen_f64(),
-        zipf_theta: 0.7 + rng.gen_f64(),
-    };
-    let branching = [2usize, 3, 8, 32][(case % 4) as usize];
-    (spec, branching)
-}
+use mscm_xmr::inference::{EngineConfig, InferenceEngine};
+use mscm_xmr::sparse::ChunkedMatrix;
 
 #[test]
 fn all_configs_identical_on_random_models() {
-    let mut rng = Rng::seed_from_u64(0xC0FFEE);
-    for case in 0..25u64 {
-        let (spec, branching) = random_spec(&mut rng, case);
-        let model = Arc::new(synth_model(&spec, branching, case));
-        let x = synth_queries(&spec, 12, case ^ 0x55);
-        let beam = 1 + (case as usize % 7);
-        let topk = 1 + (case as usize % 5);
+    common::run_cases(25, |case_id, case| {
+        // from_arc cannot build side indexes on a shared model, so the
+        // hash configurations need the maps present up front.
+        let mut m = case.model.clone();
+        m.build_row_maps();
+        let model = Arc::new(m);
+        let beam = 1 + (case_id as usize % 7);
+        let topk = 1 + (case_id as usize % 5);
         let mut reference: Option<Vec<Vec<mscm_xmr::inference::Prediction>>> = None;
         for config in EngineConfig::all() {
             let engine = InferenceEngine::from_arc(Arc::clone(&model), config);
-            let got = engine.predict_batch(&x, beam, topk);
+            let got = engine.predict_batch(&case.queries, beam, topk);
             match &reference {
                 None => reference = Some(got),
                 Some(r) => assert_eq!(
                     &got,
                     r,
-                    "case {case}: {} diverged (B={branching}, beam={beam})",
-                    config.label()
+                    "{} diverged ({}, beam={beam})",
+                    config.label(),
+                    case.shape
                 ),
             }
         }
-    }
+    });
 }
 
 #[test]
 fn parallel_identical_on_random_models() {
-    let mut rng = Rng::seed_from_u64(0xBEEF);
-    for case in 0..10u64 {
-        let (spec, branching) = random_spec(&mut rng, case);
-        let model = Arc::new(synth_model(&spec, branching, case + 1000));
-        let x = synth_queries(&spec, 33, case);
+    common::run_cases(10, |_, case| {
+        // from_arc cannot build side indexes on a shared model, so the
+        // hash configurations need the maps present up front.
+        let mut m = case.model.clone();
+        m.build_row_maps();
+        let model = Arc::new(m);
         for config in EngineConfig::all() {
             let engine = InferenceEngine::from_arc(Arc::clone(&model), config);
-            let serial = engine.predict_batch(&x, 4, 4);
+            let serial = engine.predict_batch(&case.queries, 4, 4);
             for threads in [2usize, 5] {
-                let par = engine.predict_batch_parallel(&x, 4, 4, threads);
-                assert_eq!(par, serial, "case {case}: {} t={threads}", config.label());
+                let par = engine.predict_batch_parallel(&case.queries, 4, 4, threads);
+                assert_eq!(par, serial, "{} t={threads} ({})", config.label(), case.shape);
             }
         }
-    }
+    });
 }
 
 #[test]
 fn beam_invariants_hold() {
     // Beams never exceed b; predictions are sorted desc; scores in (0,1].
-    let mut rng = Rng::seed_from_u64(0xF00D);
-    for case in 0..15u64 {
-        let (spec, branching) = random_spec(&mut rng, case);
-        let model = Arc::new(synth_model(&spec, branching, case + 77));
-        let x = synth_queries(&spec, 8, case);
+    common::run_cases(15, |case_id, case| {
+        // from_arc cannot build side indexes on a shared model, so the
+        // hash configurations need the maps present up front.
+        let mut m = case.model.clone();
+        m.build_row_maps();
+        let model = Arc::new(m);
         let engine = InferenceEngine::from_arc(
             Arc::clone(&model),
-            EngineConfig::all()[(case % 8) as usize],
+            EngineConfig::all()[(case_id % 8) as usize],
         );
         for beam in [1usize, 3, 10] {
-            for preds in engine.predict_batch(&x, beam, beam) {
+            for preds in engine.predict_batch(&case.queries, beam, beam) {
                 assert!(preds.len() <= beam);
                 assert!(!preds.is_empty());
                 for w in preds.windows(2) {
@@ -100,36 +91,29 @@ fn beam_invariants_hold() {
                 }
             }
         }
-    }
+    });
 }
 
 #[test]
 fn chunked_round_trips_on_random_matrices() {
-    // ChunkedMatrix::from_csc ∘ to_csc == identity for random partitions.
-    use mscm_xmr::sparse::{ChunkedMatrix, CscMatrix, SparseVec};
-    let mut rng = Rng::seed_from_u64(0xDA7A);
-    for _ in 0..50 {
-        let rows = rng.gen_range(1..80);
-        let cols = rng.gen_range(1..60);
-        let colvecs: Vec<SparseVec> = (0..cols)
-            .map(|_| {
-                let nnz = rng.gen_range(0..rows.min(20) + 1);
-                SparseVec::from_pairs(
-                    (0..nnz)
-                        .map(|_| (rng.gen_range(0..rows) as u32, rng.gen_f32(-2.0, 2.0)))
-                        .collect(),
-                )
-            })
+    // ChunkedMatrix::from_csc ∘ to_csc == identity for random partitions
+    // — under the seed layout and under random per-chunk storage layouts.
+    use mscm_xmr::sparse::ChunkStorage;
+    let base = common::base_seed();
+    let mut g = common::ModelGen::new(base ^ 0xDA7A);
+    for case in 0..50 {
+        let (csc, offsets) = g.matrix();
+        let with_maps = g.pick(0..2) == 0;
+        let mut chunked = ChunkedMatrix::from_csc(&csc, &offsets, with_maps);
+        assert_eq!(chunked.to_csc(), csc, "case {case} (seed base {base:#x})");
+        let layout: Vec<ChunkStorage> = (0..chunked.num_chunks())
+            .map(|_| ChunkStorage::ALL[g.pick(0..3)])
             .collect();
-        let csc = CscMatrix::from_cols(colvecs, rows);
-        // random partition of columns into chunks
-        let mut offsets = vec![0u32];
-        while (*offsets.last().unwrap() as usize) < cols {
-            let last = *offsets.last().unwrap() as usize;
-            let step = rng.gen_range(1..(cols - last).min(9) + 1);
-            offsets.push((last + step) as u32);
-        }
-        let chunked = ChunkedMatrix::from_csc(&csc, &offsets, rng.gen_bool(0.5));
-        assert_eq!(chunked.to_csc(), csc);
+        chunked.apply_layout(&layout);
+        assert_eq!(
+            chunked.to_csc(),
+            csc,
+            "case {case} layout {layout:?} (seed base {base:#x})"
+        );
     }
 }

@@ -1,0 +1,274 @@
+//! Fuzz/robustness tests for the `MSCMXMR3` shard envelope (the
+//! `tests/wire.rs` treatment, applied to the on-disk format):
+//!
+//! - every truncated prefix of a valid V3 file is rejected,
+//! - corrupted magic / plan flags / method codes / storage codes and
+//!   trailing garbage are rejected,
+//! - legacy `MSCMXMR2` files still load — plan-less pre-planner files
+//!   and method-only plan sections both read as all-`Csc` — and serve
+//!   exactly,
+//! - save/load round-trips preserve plans for every storage layout and
+//!   the loaded shards serve bitwise-identically.
+//!
+//! The model under test comes from the shared seeded harness
+//! (`tests/common`; `MSCM_TEST_SEED` replayable).
+
+mod common;
+
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo,
+};
+use mscm_xmr::shard::{load_shard, partition, save_shard, shard_file_name, ShardedEngine};
+use mscm_xmr::sparse::ChunkStorage;
+
+/// A deliberately *small* fixed-shape model (the prefix fuzz below is
+/// quadratic in the file size) whose shards carry plans exercising
+/// every storage code, saved to disk; returns (dir, paths, shards,
+/// model). Randomized via the harness base seed.
+fn fuzz_model() -> mscm_xmr::XmrModel {
+    mscm_xmr::data::synthetic::synth_model(
+        &common::dataset_spec("fmt-prop", 24, 18),
+        3,
+        common::base_seed(),
+    )
+}
+
+fn fuzz_queries(dim: usize) -> Vec<mscm_xmr::sparse::SparseVec> {
+    let mut g = common::ModelGen::new(common::base_seed() ^ 0xF0F0);
+    let q = g.queries(dim, 6);
+    (0..q.rows).map(|i| q.row_owned(i)).collect()
+}
+
+fn saved_partition(
+    tag: &str,
+) -> (
+    std::path::PathBuf,
+    Vec<std::path::PathBuf>,
+    Vec<mscm_xmr::shard::ShardModel>,
+    mscm_xmr::XmrModel,
+) {
+    let model = fuzz_model();
+    let mut shards = partition(&model, 2);
+    for sh in &mut shards {
+        let mut plan = KernelPlan::uniform(&sh.model, IterationMethod::BinarySearch);
+        // Hand-mix the layouts so every storage code appears on disk.
+        for l in &mut plan.layers {
+            let n = l.storage.len();
+            if n >= 2 {
+                l.storage[0] = ChunkStorage::Merged;
+                l.storage[1] = ChunkStorage::Merged;
+            }
+            if n >= 1 {
+                l.storage[n - 1] = ChunkStorage::DenseRows;
+            }
+        }
+        sh.plan = Some((MatmulAlgo::Mscm, plan));
+    }
+    let dir = mscm_xmr::util::temp_dir(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut paths = Vec::new();
+    for sh in &shards {
+        let p = shard_file_name(&dir, sh.spec.shard_id, sh.spec.num_shards);
+        save_shard(sh, &p).unwrap();
+        paths.push(p);
+    }
+    (dir, paths, shards, model)
+}
+
+#[test]
+fn every_truncated_prefix_is_rejected() {
+    let (dir, paths, _, _) = saved_partition("fmt-prefix");
+    let bytes = std::fs::read(&paths[0]).unwrap();
+    let scratch = dir.join("prefix.bin");
+    // The full file parses; every strict prefix must be rejected (a V3
+    // file has no optional tail — even the plan flag is mandatory).
+    assert!(load_shard(&paths[0], false).is_ok());
+    for len in 0..bytes.len() {
+        std::fs::write(&scratch, &bytes[..len]).unwrap();
+        assert!(
+            load_shard(&scratch, false).is_err(),
+            "prefix of {len}/{} bytes parsed",
+            bytes.len()
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupted_tags_and_versions_are_rejected() {
+    let (dir, paths, shards, _) = saved_partition("fmt-corrupt");
+    let bytes = std::fs::read(&paths[0]).unwrap();
+    let scratch = dir.join("corrupt.bin");
+    let check_err = |mutated: Vec<u8>, what: &str| {
+        std::fs::write(&scratch, &mutated).unwrap();
+        assert!(load_shard(&scratch, false).is_err(), "{what} accepted");
+    };
+
+    // Unknown future version and the raw model magic are both rejected.
+    let mut v4 = bytes.clone();
+    v4[0] = 0x34; // "…MXR4"
+    check_err(v4, "future version magic");
+    let mut v1 = bytes.clone();
+    v1[0] = 0x31; // the MSCMXMR1 model magic
+    check_err(v1, "model-file magic");
+
+    // Trailing garbage after a complete V3 payload.
+    let mut padded = bytes.clone();
+    padded.push(0xAB);
+    check_err(padded, "trailing byte");
+
+    // The last 4 bytes are the bottom layer's final storage code; an
+    // unknown layout tag must be rejected.
+    let mut bad_storage = bytes.clone();
+    let n = bad_storage.len();
+    bad_storage[n - 4] = 0xEE;
+    check_err(bad_storage, "unknown storage code");
+
+    // ... and an unknown method code likewise. The bottom layer's plan
+    // row is `count u64 | methods | storages`, so the first method code
+    // sits 8 * num_chunks before the storage codes.
+    let chunks_bottom = shards[0]
+        .model
+        .layers
+        .last()
+        .unwrap()
+        .chunked
+        .num_chunks();
+    let mut bad_method = bytes.clone();
+    let mpos = n - 8 * chunks_bottom;
+    bad_method[mpos] = 0xC8;
+    check_err(bad_method, "unknown method code");
+
+    // A nonsense plan-presence flag. The flag sits right before the
+    // first layer's plan row; locate it by re-encoding the plan section
+    // length: total plan bytes = 8 (flag) + per layer (8 + 8n).
+    let plan_bytes: usize = 8
+        + shards[0]
+            .model
+            .layers
+            .iter()
+            .map(|l| 8 + 8 * l.chunked.num_chunks())
+            .sum::<usize>();
+    let mut bad_flag = bytes.clone();
+    bad_flag[n - plan_bytes] = 9;
+    check_err(bad_flag, "bad plan flag");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Rewrites a V3 file's bytes as the legacy V2 layout: magic patched
+/// down, and the plan section re-encoded without storage codes (or
+/// dropped entirely for the pre-planner shape).
+fn as_v2(bytes: &[u8], shard: &mscm_xmr::shard::ShardModel, with_plan: bool) -> Vec<u8> {
+    let plan_bytes: usize = 8
+        + shard
+            .model
+            .layers
+            .iter()
+            .map(|l| 8 + 8 * l.chunked.num_chunks())
+            .sum::<usize>();
+    let mut out = bytes[..bytes.len() - plan_bytes].to_vec();
+    out[0] = 0x32; // "…MXR3" -> "…MXR2"
+    if with_plan {
+        let (algo, plan) = shard.plan.as_ref().unwrap();
+        out.extend_from_slice(
+            &(match algo {
+                MatmulAlgo::Mscm => 1u64,
+                MatmulAlgo::Baseline => 2u64,
+            })
+            .to_le_bytes(),
+        );
+        for l in &plan.layers {
+            out.extend_from_slice(&(l.methods.len() as u64).to_le_bytes());
+            for m in &l.methods {
+                out.extend_from_slice(&(m.index() as u32).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn legacy_v2_files_load_as_csc_and_serve_exactly() {
+    let (dir, paths, shards, model) = saved_partition("fmt-v2");
+    let mut loaded = Vec::new();
+    for (path, shard) in paths.iter().zip(&shards) {
+        let bytes = std::fs::read(path).unwrap();
+
+        // Pre-planner V2: ends at the model body; loads plan-less.
+        let v2_path = dir.join("v2.bin");
+        std::fs::write(&v2_path, as_v2(&bytes, shard, false)).unwrap();
+        let preplanner = load_shard(&v2_path, false).unwrap();
+        assert!(preplanner.plan.is_none());
+        assert_eq!(preplanner.spec, shard.spec);
+
+        // Planned V2: method codes only; every chunk reads as Csc.
+        std::fs::write(&v2_path, as_v2(&bytes, shard, true)).unwrap();
+        let planned = load_shard(&v2_path, false).unwrap();
+        let (algo, plan) = planned.plan.as_ref().expect("stored V2 plan");
+        assert_eq!(*algo, MatmulAlgo::Mscm);
+        assert_eq!(
+            plan.layers.iter().map(|l| l.methods.clone()).collect::<Vec<_>>(),
+            shard
+                .plan
+                .as_ref()
+                .unwrap()
+                .1
+                .layers
+                .iter()
+                .map(|l| l.methods.clone())
+                .collect::<Vec<_>>()
+        );
+        assert!(
+            !plan.uses_storage(ChunkStorage::DenseRows)
+                && !plan.uses_storage(ChunkStorage::Merged),
+            "V2 plans must read as all-Csc"
+        );
+        loaded.push(planned);
+    }
+    // The V2-loaded partition still serves bitwise-identically.
+    let reference = InferenceEngine::new(
+        model,
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers),
+    );
+    let sharded = ShardedEngine::new(
+        loaded,
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+    );
+    for (qi, q) in fuzz_queries(reference.model().dim).iter().enumerate() {
+        assert_eq!(
+            sharded.predict(q, 4, 5),
+            reference.predict(q, 4, 5),
+            "q={qi}"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn round_trip_preserves_every_layout_and_serves() {
+    let (dir, paths, shards, model) = saved_partition("fmt-roundtrip");
+    let mut loaded = Vec::new();
+    for (path, shard) in paths.iter().zip(&shards) {
+        let l = load_shard(path, false).unwrap();
+        assert_eq!(l.spec, shard.spec);
+        assert_eq!(l.plan, shard.plan, "plan (layouts included) round-trips");
+        loaded.push(l);
+    }
+    let reference = InferenceEngine::new(
+        model,
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+    );
+    let sharded = ShardedEngine::new(
+        loaded,
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+    );
+    for (qi, q) in fuzz_queries(reference.model().dim).iter().enumerate() {
+        assert_eq!(
+            sharded.predict(q, 4, 5),
+            reference.predict(q, 4, 5),
+            "q={qi}"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

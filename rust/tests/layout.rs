@@ -1,0 +1,225 @@
+//! Property tests for plan-driven weight storage: every
+//! [`ChunkStorage`] layout — uniform or mixed per chunk — is **bitwise
+//! identical** to the seed all-`Csc` path, for both masked-matmul
+//! algorithms, every iteration method (`Auto` included), online and
+//! batch, unsharded and sharded (S ∈ {1, 4}; the remote-loopback leg
+//! lives in `tests/remote.rs`), over ≥ 16 seeds of the shared
+//! `tests/common` model generator (`MSCM_TEST_SEED` replayable).
+//!
+//! Plus the memory claims: a dense-planned chunk stored `DenseRows`
+//! carries strictly fewer weight bytes than its CSC equivalent, and
+//! engines actually apply their plan's layouts.
+
+mod common;
+
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo, PlannerConfig,
+};
+use mscm_xmr::shard::{partition, ShardedEngine};
+use mscm_xmr::sparse::{ChunkStorage, CscMatrix, SparseVec};
+use mscm_xmr::tree::{Layer, XmrModel};
+
+/// Acceptance floor: the layout grid runs over at least this many seeds.
+const SEEDS: u64 = 16;
+
+/// The method axis of the grid: the four kernels plus the planner.
+const METHODS: [IterationMethod; 5] = [
+    IterationMethod::MarchingPointers,
+    IterationMethod::BinarySearch,
+    IterationMethod::Hash,
+    IterationMethod::DenseLookup,
+    IterationMethod::Auto,
+];
+
+fn reference(model: &XmrModel) -> InferenceEngine {
+    InferenceEngine::new(
+        model.clone(),
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::MarchingPointers),
+    )
+}
+
+#[test]
+fn every_layout_is_bitwise_identical_unsharded() {
+    common::run_cases_capped(SEEDS, 120, |_, case| {
+        let reference = reference(&case.model);
+        let rows = case.query_rows();
+        for algo in MatmulAlgo::ALL {
+            for iter in METHODS {
+                for storage in ChunkStorage::ALL {
+                    let cfg = EngineConfig::new(algo, iter);
+                    let plan = KernelPlan::resolve(&case.model, cfg, &PlannerConfig::default())
+                        .with_uniform_storage(storage);
+                    let engine =
+                        InferenceEngine::new_with_plan(case.model.clone(), cfg, plan);
+                    for beam in [1usize, 4] {
+                        assert_eq!(
+                            engine.predict_batch(&case.queries, beam, 5),
+                            reference.predict_batch(&case.queries, beam, 5),
+                            "batch {algo:?}/{iter:?}/{storage:?} beam={beam} ({})",
+                            case.shape
+                        );
+                        let mut ws = engine.workspace();
+                        for (qi, q) in rows.iter().enumerate() {
+                            assert_eq!(
+                                engine.predict_with(q, beam, 5, &mut ws),
+                                &reference.predict(q, beam, 5)[..],
+                                "online {algo:?}/{iter:?}/{storage:?} beam={beam} q={qi} ({})",
+                                case.shape
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn random_mixed_layouts_stay_exact() {
+    common::run_cases_capped(SEEDS, 120, |_, case| {
+        let reference = reference(&case.model);
+        let mut g = common::ModelGen::new(case.seed ^ 0xD00D_1A0);
+        for algo in MatmulAlgo::ALL {
+            // Random method AND random layout per chunk — the fully
+            // mixed dispatch surface.
+            let mut plan = KernelPlan::uniform(&case.model, IterationMethod::MarchingPointers);
+            for l in &mut plan.layers {
+                for m in &mut l.methods {
+                    *m = IterationMethod::ALL[g.pick(0..4)];
+                }
+                for s in &mut l.storage {
+                    *s = ChunkStorage::ALL[g.pick(0..3)];
+                }
+            }
+            let cfg = EngineConfig::new(algo, IterationMethod::Auto);
+            let engine = InferenceEngine::new_with_plan(case.model.clone(), cfg, plan);
+            assert_eq!(
+                engine.predict_batch(&case.queries, 4, 5),
+                reference.predict_batch(&case.queries, 4, 5),
+                "{algo:?} ({})",
+                case.shape
+            );
+        }
+    });
+}
+
+#[test]
+fn sharded_layouts_are_bitwise_identical() {
+    common::run_cases_capped(SEEDS, 100, |case_id, case| {
+        let reference = reference(&case.model);
+        let rows = case.query_rows();
+        for algo in MatmulAlgo::ALL {
+            for s_count in [1usize, 4] {
+                for storage in ChunkStorage::ALL {
+                    // One method per (case, storage) cell keeps the grid
+                    // bounded while covering all methods across seeds.
+                    let iter =
+                        IterationMethod::ALL[(case_id as usize + storage.index()) % 4];
+                    let mut shards = partition(&case.model, s_count);
+                    for sh in &mut shards {
+                        let plan = KernelPlan::uniform(&sh.model, iter)
+                            .with_uniform_storage(storage);
+                        sh.plan = Some((algo, plan));
+                    }
+                    let sharded = ShardedEngine::new(
+                        shards,
+                        EngineConfig::new(algo, IterationMethod::Auto),
+                    );
+                    let batch = sharded.predict_batch(&case.queries, 3, 5, false);
+                    let want = reference.predict_batch(&case.queries, 3, 5);
+                    assert_eq!(
+                        batch,
+                        want,
+                        "batch {algo:?}/{iter:?}/{storage:?} S={s_count} ({})",
+                        case.shape
+                    );
+                    for (qi, q) in rows.iter().enumerate() {
+                        assert_eq!(
+                            sharded.predict(q, 3, 5),
+                            reference.predict(q, 3, 5),
+                            "online {algo:?}/{iter:?}/{storage:?} S={s_count} q={qi} ({})",
+                            case.shape
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn engines_apply_their_plans_layouts() {
+    common::run_cases_capped(4, 120, |_, case| {
+        let engine = InferenceEngine::new(
+            case.model.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+        );
+        let plan = engine.plan().clone();
+        for (li, layer) in engine.model().layers.iter().enumerate() {
+            for (c, chunk) in layer.chunked.chunks.iter().enumerate() {
+                assert_eq!(
+                    chunk.storage,
+                    plan.layer_storage(li)[c],
+                    "layer {li} chunk {c} ({})",
+                    case.shape
+                );
+            }
+        }
+    });
+}
+
+/// The pinned memory claim: a dense-planned chunk stored `DenseRows` is
+/// strictly below its CSC equivalent — no `row_indices`, no row map.
+#[test]
+fn dense_planned_chunk_weight_bytes_strictly_below_csc() {
+    let dim = 64usize;
+    // One chunk of 4 sibling columns touching every row: exactly the
+    // shape the planner re-lays as DenseRows.
+    let cols: Vec<SparseVec> = (0..4)
+        .map(|j| {
+            SparseVec::from_pairs(
+                (0..dim)
+                    .map(|r| (r as u32, (r + j + 1) as f32 * 0.01))
+                    .collect(),
+            )
+        })
+        .collect();
+    let model = XmrModel::new(
+        dim,
+        vec![Layer::new(CscMatrix::from_cols(cols, dim), &[0, 4], true)],
+    );
+    // The cost model itself picks DenseRows for this chunk.
+    let plan = KernelPlan::auto(&model, MatmulAlgo::Mscm, &PlannerConfig::default());
+    assert_eq!(plan.layer_storage(0)[0], ChunkStorage::DenseRows);
+
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::DenseLookup);
+    let csc = InferenceEngine::new_with_plan(
+        model.clone(),
+        cfg,
+        KernelPlan::uniform(&model, IterationMethod::DenseLookup),
+    );
+    let dense = InferenceEngine::new_with_plan(
+        model.clone(),
+        cfg,
+        KernelPlan::uniform(&model, IterationMethod::DenseLookup)
+            .with_uniform_storage(ChunkStorage::DenseRows),
+    );
+    assert!(
+        dense.weight_bytes() < csc.weight_bytes(),
+        "DenseRows {} must be strictly below CSC {}",
+        dense.weight_bytes(),
+        csc.weight_bytes()
+    );
+    // Per chunk, and the row-index structures are really gone.
+    let dr_layer = &dense.model().layers[0].chunked;
+    let csc_layer = &csc.model().layers[0].chunked;
+    assert!(dr_layer.chunk_weight_bytes(0) < csc_layer.chunk_weight_bytes(0));
+    assert!(dr_layer.chunks[0].row_indices.is_empty());
+    assert!(dr_layer.chunks[0].row_map.is_none());
+    // A fixed-hash engine on the same model additionally pays the row
+    // map; the DenseRows engine pays no side index at all.
+    assert_eq!(dense.side_index_bytes(), 0);
+    // And the layouts agree on the answers.
+    let q = SparseVec::from_pairs(vec![(0, 1.0), (13, -0.5), (63, 2.0)]);
+    assert_eq!(dense.predict(&q, 4, 4), csc.predict(&q, 4, 4));
+}

@@ -1,136 +1,129 @@
 //! Property tests for the per-chunk kernel planner's central claims:
 //!
-//! 1. **Exactness** — `IterationMethod::Auto` is bitwise identical to
-//!    every fixed method, for both masked-matmul algorithms, online and
-//!    batch, unsharded and sharded (S ∈ {1, 4}), with and without timing
-//!    calibration. Per-chunk selection only changes *which kernel*
-//!    computes each block, never any per-entry summation order.
+//! 1. **Exactness** — `IterationMethod::Auto` (kernel *and* storage
+//!    selection) is bitwise identical to every fixed method, for both
+//!    masked-matmul algorithms, online and batch, unsharded and sharded
+//!    (S ∈ {1, 4}), with and without timing calibration — over the
+//!    shared seeded model generator (`tests/common`, `MSCM_TEST_SEED`
+//!    replayable).
 //! 2. **Memory** — side indexes are materialized only for chunks whose
 //!    planned kernel needs them: on a mixed-density model the auto
 //!    engine's `side_index_bytes` is strictly below fixed `hash`'s.
-//! 3. **Persistence** — plans survive the `MSCMXMR2` shard envelope and
-//!    are served verbatim (no re-planning at load).
+//! 3. **Persistence** — plans (layouts included) survive the `MSCMXMR3`
+//!    shard envelope and are served verbatim (no re-planning at load).
 
-use mscm_xmr::data::synthetic::{
-    synth_model, synth_model_skewed, synth_queries, DatasetSpec,
-};
+mod common;
+
+use mscm_xmr::data::synthetic::synth_queries;
 use mscm_xmr::inference::{
     EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo, PlannerConfig,
 };
 use mscm_xmr::shard::{load_shards, partition, save_shards, ShardedEngine};
 
-fn spec(dim: usize, labels: usize) -> DatasetSpec {
-    DatasetSpec {
-        name: "planner-prop",
-        dim,
-        num_labels: labels,
-        paper_dim: dim,
-        paper_labels: 0,
-        query_nnz: 12,
-        col_nnz: 8,
-        sibling_overlap: 0.6,
-        zipf_theta: 1.0,
-    }
-}
-
-/// Mixed-density skewed tree: wide dense chunks up top, tiny sparse ones
-/// below — the shape where the planner actually mixes methods.
+/// Mixed-density skewed tree: the shape where the planner actually mixes
+/// methods and layouts.
 fn skewed_model() -> mscm_xmr::XmrModel {
-    synth_model_skewed(&spec(96, 300), 8, 0xBEEF, 0.6)
+    common::skewed_model(96, 300, 8, 0xBEEF)
 }
 
 #[test]
 fn auto_is_bitwise_identical_to_every_fixed_method() {
-    let model = skewed_model();
-    let sp = spec(96, 300);
-    let queries = synth_queries(&sp, 10, 0x5EED);
-    let rows: Vec<_> = (0..queries.rows).map(|i| queries.row_owned(i)).collect();
-    for algo in MatmulAlgo::ALL {
-        let auto = InferenceEngine::new(
-            model.clone(),
-            EngineConfig::new(algo, IterationMethod::Auto),
-        );
-        for iter in IterationMethod::ALL {
-            let fixed = InferenceEngine::new(model.clone(), EngineConfig::new(algo, iter));
-            for beam in [1usize, 3, 10] {
-                // batch (chunk-order path active, n > 1)
-                assert_eq!(
-                    auto.predict_batch(&queries, beam, 5),
-                    fixed.predict_batch(&queries, beam, 5),
-                    "batch {algo:?}/{iter:?} beam={beam}"
-                );
-                // online, workspace reused like a server
-                let mut ws = auto.workspace();
-                for (qi, q) in rows.iter().enumerate() {
+    common::run_cases(8, |_, case| {
+        let rows = case.query_rows();
+        for algo in MatmulAlgo::ALL {
+            let auto = InferenceEngine::new(
+                case.model.clone(),
+                EngineConfig::new(algo, IterationMethod::Auto),
+            );
+            for iter in IterationMethod::ALL {
+                let fixed =
+                    InferenceEngine::new(case.model.clone(), EngineConfig::new(algo, iter));
+                for beam in [1usize, 3, 10] {
+                    // batch (chunk-order path active when n > 1)
                     assert_eq!(
-                        auto.predict_with(q, beam, 5, &mut ws),
-                        &fixed.predict(q, beam, 5)[..],
-                        "online {algo:?}/{iter:?} beam={beam} q={qi}"
+                        auto.predict_batch(&case.queries, beam, 5),
+                        fixed.predict_batch(&case.queries, beam, 5),
+                        "batch {algo:?}/{iter:?} beam={beam} ({})",
+                        case.shape
                     );
+                    // online, workspace reused like a server
+                    let mut ws = auto.workspace();
+                    for (qi, q) in rows.iter().enumerate() {
+                        assert_eq!(
+                            auto.predict_with(q, beam, 5, &mut ws),
+                            &fixed.predict(q, beam, 5)[..],
+                            "online {algo:?}/{iter:?} beam={beam} q={qi} ({})",
+                            case.shape
+                        );
+                    }
                 }
             }
         }
-    }
+    });
 }
 
 #[test]
 fn sharded_auto_is_bitwise_identical() {
-    let model = skewed_model();
-    let sp = spec(96, 300);
-    let queries = synth_queries(&sp, 8, 0xABCD);
-    for algo in MatmulAlgo::ALL {
-        let reference = InferenceEngine::new(
-            model.clone(),
-            EngineConfig::new(algo, IterationMethod::MarchingPointers),
-        );
-        for s in [1usize, 4] {
-            let sharded =
-                ShardedEngine::from_model(&model, s, EngineConfig::new(algo, IterationMethod::Auto));
-            for beam in [1usize, 3, 10] {
-                // online
-                for qi in 0..queries.rows {
-                    let q = queries.row_owned(qi);
-                    assert_eq!(
-                        sharded.predict(&q, beam, 5),
-                        reference.predict(&q, beam, 5),
-                        "online {algo:?} S={s} beam={beam} q={qi}"
-                    );
+    common::run_cases(6, |_, case| {
+        let rows = case.query_rows();
+        for algo in MatmulAlgo::ALL {
+            let reference = InferenceEngine::new(
+                case.model.clone(),
+                EngineConfig::new(algo, IterationMethod::MarchingPointers),
+            );
+            for s in [1usize, 4] {
+                let sharded = ShardedEngine::from_model(
+                    &case.model,
+                    s,
+                    EngineConfig::new(algo, IterationMethod::Auto),
+                );
+                for beam in [1usize, 3, 10] {
+                    // online
+                    for (qi, q) in rows.iter().enumerate() {
+                        assert_eq!(
+                            sharded.predict(q, beam, 5),
+                            reference.predict(q, beam, 5),
+                            "online {algo:?} S={s} beam={beam} q={qi} ({})",
+                            case.shape
+                        );
+                    }
+                    // batch scatter-gather
+                    let batch = sharded.predict_batch(&case.queries, beam, 5, false);
+                    let want = reference.predict_batch(&case.queries, beam, 5);
+                    assert_eq!(batch, want, "batch {algo:?} S={s} beam={beam} ({})", case.shape);
                 }
-                // batch scatter-gather
-                let batch = sharded.predict_batch(&queries, beam, 5, false);
-                let want = reference.predict_batch(&queries, beam, 5);
-                assert_eq!(batch, want, "batch {algo:?} S={s} beam={beam}");
             }
         }
-    }
+    });
 }
 
 #[test]
 fn calibrated_plans_stay_exact() {
     // Calibration fits timing constants, so the *plan* may differ run to
     // run — predictions must not.
-    let model = skewed_model();
-    let sp = spec(96, 300);
-    let queries = synth_queries(&sp, 6, 0xF00D);
-    let pc = PlannerConfig {
-        calibrate: 6,
-        query_nnz_hint: sp.query_nnz,
-        batch_hint: 8,
-        ..Default::default()
-    };
-    let auto = InferenceEngine::new_with_planner(
-        model.clone(),
-        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
-        &pc,
-    );
-    let fixed = InferenceEngine::new(
-        model,
-        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
-    );
-    assert_eq!(
-        auto.predict_batch(&queries, 5, 5),
-        fixed.predict_batch(&queries, 5, 5)
-    );
+    common::run_cases(4, |_, case| {
+        let pc = PlannerConfig {
+            calibrate: 6,
+            query_nnz_hint: 12,
+            batch_hint: 8,
+            ..Default::default()
+        };
+        let auto = InferenceEngine::new_with_planner(
+            case.model.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+            &pc,
+        );
+        let fixed = InferenceEngine::new(
+            case.model.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+        );
+        assert_eq!(
+            auto.predict_batch(&case.queries, 5, 5),
+            fixed.predict_batch(&case.queries, 5, 5),
+            "{}",
+            case.shape
+        );
+    });
 }
 
 #[test]
@@ -175,7 +168,7 @@ fn auto_side_indexes_are_strictly_below_fixed_hash() {
 #[test]
 fn plans_round_trip_through_the_shard_envelope_and_serve() {
     let model = skewed_model();
-    let sp = spec(96, 300);
+    let sp = common::dataset_spec("planner-prop", 96, 300);
     let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
     let mut shards = partition(&model, 3);
     let pc = PlannerConfig {
@@ -194,7 +187,8 @@ fn plans_round_trip_through_the_shard_envelope_and_serve() {
         assert_eq!(*algo, MatmulAlgo::Mscm, "shard {}", s.spec.shard_id);
         assert_eq!(plan, want, "shard {}", s.spec.shard_id);
     }
-    // The engine serves the stored plans verbatim and stays exact.
+    // The engine serves the stored plans verbatim (stored storage
+    // layouts applied) and stays exact.
     let sharded = ShardedEngine::new(loaded, cfg);
     for (s, want) in plans.iter().enumerate() {
         assert_eq!(sharded.shard_engine(s).plan().as_ref(), want, "shard {s}");
@@ -213,30 +207,34 @@ fn plans_round_trip_through_the_shard_envelope_and_serve() {
 
 #[test]
 fn planner_hints_change_plans_but_never_results() {
-    // Online-tuned and batch-tuned plans may disagree per chunk; both
-    // must produce the one true answer.
-    let model = synth_model(&spec(64, 200), 4, 11);
-    let sp = spec(64, 200);
-    let queries = synth_queries(&sp, 6, 21);
-    let online_pc = PlannerConfig {
-        batch_hint: 1,
-        query_nnz_hint: 100,
-        ..Default::default()
-    };
-    let batch_pc = PlannerConfig {
-        batch_hint: 64,
-        query_nnz_hint: 8,
-        ..Default::default()
-    };
-    let a = InferenceEngine::new_with_planner(
-        model.clone(),
-        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
-        &online_pc,
-    );
-    let b = InferenceEngine::new_with_planner(
-        model,
-        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
-        &batch_pc,
-    );
-    assert_eq!(a.predict_batch(&queries, 5, 5), b.predict_batch(&queries, 5, 5));
+    // Online-tuned and batch-tuned plans may disagree per chunk (and per
+    // layout); both must produce the one true answer.
+    common::run_cases(4, |_, case| {
+        let online_pc = PlannerConfig {
+            batch_hint: 1,
+            query_nnz_hint: 100,
+            ..Default::default()
+        };
+        let batch_pc = PlannerConfig {
+            batch_hint: 64,
+            query_nnz_hint: 8,
+            ..Default::default()
+        };
+        let a = InferenceEngine::new_with_planner(
+            case.model.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+            &online_pc,
+        );
+        let b = InferenceEngine::new_with_planner(
+            case.model.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+            &batch_pc,
+        );
+        assert_eq!(
+            a.predict_batch(&case.queries, 5, 5),
+            b.predict_batch(&case.queries, 5, 5),
+            "{}",
+            case.shape
+        );
+    });
 }

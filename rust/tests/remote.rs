@@ -7,6 +7,8 @@
 
 #![allow(clippy::type_complexity)]
 
+mod common;
+
 use std::net::SocketAddr;
 use std::sync::atomic::Ordering;
 use std::time::Duration;
@@ -171,6 +173,70 @@ fn shard_files_with_stored_plans_serve_remotely() {
         h.shutdown();
     }
     std::fs::remove_dir_all(dir).ok();
+}
+
+/// Stored **storage layouts** (the `MSCMXMR3` envelope) are honored by
+/// remote hosting: shard files whose plans force `DenseRows` / `Merged`
+/// weight layouts serve over loopback bitwise identical to the
+/// unsharded all-CSC engine — the remote-loopback leg of the
+/// layout-exactness property (`tests/layout.rs` covers the in-process
+/// legs), driven by the same seeded `tests/common` model generator
+/// (`MSCM_TEST_SEED` replayable).
+#[test]
+fn shard_files_with_stored_layouts_serve_remotely() {
+    use mscm_xmr::inference::KernelPlan;
+    use mscm_xmr::sparse::ChunkStorage;
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+    common::run_cases_capped(3, 80, |_, case| {
+        let reference = InferenceEngine::new(
+            case.model.clone(),
+            EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers),
+        );
+        let rows = case.query_rows();
+        for storage in [ChunkStorage::DenseRows, ChunkStorage::Merged] {
+            let mut shards = partition(&case.model, 2);
+            let s_count = shards.len() as u32;
+            for sh in &mut shards {
+                let plan = KernelPlan::uniform(&sh.model, IterationMethod::BinarySearch)
+                    .with_uniform_storage(storage);
+                sh.plan = Some((MatmulAlgo::Mscm, plan));
+            }
+            let dir = mscm_xmr::util::temp_dir(&format!("remote-layouts-{}", storage.short()));
+            save_shards(&shards, &dir).unwrap();
+            let mut hosts = Vec::new();
+            let mut groups = Vec::new();
+            for id in 0..s_count {
+                let shard = load_shard(shard_file_name(&dir, id, s_count), false).unwrap();
+                let (_, plan) = shard.plan.as_ref().expect("stored layout plan");
+                assert!(plan.uses_storage(storage), "shard {id} lost its layouts");
+                let host = ShardHost::spawn(
+                    shard,
+                    ShardHostConfig {
+                        engine: cfg,
+                        ..Default::default()
+                    },
+                    "127.0.0.1:0",
+                )
+                .unwrap();
+                groups.push(vec![host.local_addr()]);
+                hosts.push(host);
+            }
+            let mut g =
+                RemoteGather::connect_groups(&groups, RemoteConfig::default(), None).unwrap();
+            for (qi, q) in rows.iter().enumerate() {
+                assert_eq!(
+                    g.predict(q, 5, 5).unwrap(),
+                    reference.predict(q, 5, 5),
+                    "{storage:?} q={qi} ({})",
+                    case.shape
+                );
+            }
+            for h in hosts {
+                h.shutdown();
+            }
+            std::fs::remove_dir_all(dir).ok();
+        }
+    });
 }
 
 /// Replica failover at the gather level: every shard has two replicas;

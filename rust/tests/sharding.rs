@@ -3,12 +3,19 @@
 //! unsharded engine bit for bit, for every shard count S ∈ {1, 2, 4, 7},
 //! both masked-matmul algorithms and all four iteration methods, across
 //! beam widths from greedy (1) to exhaustive.
+//!
+//! Randomized models/queries come from the shared seeded harness in
+//! `tests/common` (`MSCM_TEST_SEED` replayable); models with few root
+//! children exercise the clamp-to-root-children partition path
+//! automatically.
+
+mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use mscm_xmr::coordinator::CoordinatorConfig;
-use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
+use mscm_xmr::data::synthetic::synth_queries;
 use mscm_xmr::inference::{EngineConfig, InferenceEngine};
 use mscm_xmr::shard::{
     load_shards, partition, save_shards, ShardedCoordinator, ShardedCoordinatorConfig,
@@ -17,102 +24,94 @@ use mscm_xmr::shard::{
 use mscm_xmr::sparse::SparseVec;
 use mscm_xmr::util::Rng;
 
-fn spec(dim: usize, labels: usize) -> DatasetSpec {
-    DatasetSpec {
-        name: "shard-prop",
-        dim,
-        num_labels: labels,
-        paper_dim: dim,
-        paper_labels: 0,
-        query_nnz: 10,
-        col_nnz: 6,
-        sibling_overlap: 0.6,
-        zipf_theta: 1.0,
-    }
-}
-
-/// Model shapes: (spec, branching). The first has 8 root children (so
-/// S = 7 is a genuine uneven partition), the second only 3 (so S = 7
-/// exercises the clamp-to-root-children path).
-fn model_cases() -> Vec<(DatasetSpec, usize, u64)> {
-    vec![
-        (spec(120, 512), 8, 0xA11CE),
-        (spec(64, 81), 3, 0xB0B),
-    ]
-}
-
 #[test]
 fn sharded_topk_is_bitwise_identical_to_unsharded() {
-    for (sp, branching, seed) in model_cases() {
-        let model = synth_model(&sp, branching, seed);
-        let queries = synth_queries(&sp, 8, seed ^ 0x5EED);
-        for cfg in EngineConfig::all() {
-            let reference = InferenceEngine::new(model.clone(), cfg);
+    common::run_cases(6, |case_id, case| {
+        // The full config grid alternates per case to bound runtime;
+        // every configuration is covered across the default 6 cases.
+        for (ci, cfg) in EngineConfig::all().into_iter().enumerate() {
+            if (ci + case_id as usize) % 2 == 1 {
+                continue;
+            }
+            let reference = InferenceEngine::new(case.model.clone(), cfg);
+            let rows = case.query_rows();
             for s in [1usize, 2, 4, 7] {
-                let sharded = ShardedEngine::from_model(&model, s, cfg);
+                let sharded = ShardedEngine::from_model(&case.model, s, cfg);
                 for beam in [1usize, 3, 10, 100] {
-                    for qi in 0..queries.rows {
-                        let q = queries.row_owned(qi);
-                        let want = reference.predict(&q, beam, 10);
-                        let got = sharded.predict(&q, beam, 10);
+                    for (qi, q) in rows.iter().enumerate() {
+                        let want = reference.predict(q, beam, 10);
+                        let got = sharded.predict(q, beam, 10);
                         assert_eq!(
                             got,
                             want,
                             "{} S={s} beam={beam} q={qi} ({})",
                             cfg.label(),
-                            sp.name
+                            case.shape
                         );
                     }
                 }
             }
         }
-    }
+    });
 }
 
 #[test]
 fn empty_and_degenerate_queries_stay_exact() {
-    let (sp, branching, seed) = model_cases().remove(0);
-    let model = synth_model(&sp, branching, seed);
-    for cfg in EngineConfig::all() {
-        let reference = InferenceEngine::new(model.clone(), cfg);
-        let sharded = ShardedEngine::from_model(&model, 4, cfg);
-        // all-zero query: every activation is sigma(0)
-        let empty = SparseVec::new();
-        assert_eq!(sharded.predict(&empty, 5, 5), reference.predict(&empty, 5, 5));
-        // single-feature queries
-        for f in [0u32, 7, 100] {
-            let q = SparseVec::from_pairs(vec![(f, 1.5)]);
+    common::run_cases(4, |_, case| {
+        for cfg in EngineConfig::all() {
+            let reference = InferenceEngine::new(case.model.clone(), cfg);
+            let sharded = ShardedEngine::from_model(&case.model, 4, cfg);
+            // all-zero query: every activation is sigma(0)
+            let empty = SparseVec::new();
             assert_eq!(
-                sharded.predict(&q, 2, 3),
-                reference.predict(&q, 2, 3),
-                "{} f={f}",
-                cfg.label()
+                sharded.predict(&empty, 5, 5),
+                reference.predict(&empty, 5, 5),
+                "{} ({})",
+                cfg.label(),
+                case.shape
             );
+            // single-feature queries (the last one beyond most supports)
+            for f in [0u32, 7, (case.model.dim - 1) as u32] {
+                let q = SparseVec::from_pairs(vec![(f, 1.5)]);
+                assert_eq!(
+                    sharded.predict(&q, 2, 3),
+                    reference.predict(&q, 2, 3),
+                    "{} f={f} ({})",
+                    cfg.label(),
+                    case.shape
+                );
+            }
         }
-    }
+    });
 }
 
 #[test]
 fn disk_round_trip_preserves_exactness() {
-    let (sp, branching, seed) = model_cases().remove(0);
-    let model = synth_model(&sp, branching, seed);
-    let cfg = EngineConfig::all()[5]; // MSCM + binary search
-    let reference = InferenceEngine::new(model.clone(), cfg);
-    let dir = mscm_xmr::util::temp_dir("shard-prop-io");
-    save_shards(&partition(&model, 4), &dir).unwrap();
-    let sharded = ShardedEngine::new(load_shards(&dir, false).unwrap(), cfg);
-    let queries = synth_queries(&sp, 6, 99);
-    for qi in 0..queries.rows {
-        let q = queries.row_owned(qi);
-        assert_eq!(sharded.predict(&q, 5, 5), reference.predict(&q, 5, 5), "q={qi}");
-    }
-    std::fs::remove_dir_all(dir).ok();
+    common::run_cases(3, |case_id, case| {
+        let cfg = EngineConfig::all()[5]; // MSCM + binary search
+        let reference = InferenceEngine::new(case.model.clone(), cfg);
+        let dir = mscm_xmr::util::temp_dir(&format!("shard-prop-io-{case_id}"));
+        save_shards(&partition(&case.model, 4), &dir).unwrap();
+        let sharded = ShardedEngine::new(load_shards(&dir, false).unwrap(), cfg);
+        let rows = case.query_rows();
+        for (qi, q) in rows.iter().enumerate() {
+            assert_eq!(
+                sharded.predict(q, 5, 5),
+                reference.predict(q, 5, 5),
+                "q={qi} ({})",
+                case.shape
+            );
+        }
+        std::fs::remove_dir_all(dir).ok();
+    });
 }
 
 #[test]
 fn sharded_coordinator_serves_exact_results() {
-    let (sp, branching, seed) = model_cases().remove(0);
-    let model = synth_model(&sp, branching, seed);
+    // Fixed-shape model (the coordinator path wants a steady stream of
+    // non-trivial queries, not a degenerate random case).
+    let sp = common::dataset_spec("shard-prop", 120, 512);
+    let model = mscm_xmr::data::synthetic::synth_model(&sp, 8, 0xA11CE);
     let cfg = EngineConfig::all()[6]; // MSCM + hash
     let reference = InferenceEngine::new(model.clone(), cfg);
     let engine = Arc::new(ShardedEngine::from_model(&model, 4, cfg));
