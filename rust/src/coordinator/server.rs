@@ -10,7 +10,7 @@ use std::time::Instant;
 use super::batcher::{spawn_batcher, WorkerPool};
 use super::{CoordinatorConfig, Request, Response, SubmitError};
 use crate::inference::InferenceEngine;
-use crate::metrics::{LatencyHistogram, ScatterMetrics};
+use crate::metrics::{LatencyHistogram, ScatterMetrics, Snapshot};
 use crate::sparse::{CsrMatrix, SparseVec};
 
 /// Aggregated serving statistics.
@@ -52,6 +52,36 @@ impl CoordinatorStats {
         } else {
             self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
         }
+    }
+
+    /// Adds the front-door counters and histograms to `snap` under the
+    /// `coordinator.` namespace (scatter telemetry under `scatter.` when
+    /// present). Diff two snapshots for windowed serving stats.
+    pub fn snapshot_into(&self, snap: &mut Snapshot) {
+        let counters = [
+            ("coordinator.completed", &self.completed),
+            ("coordinator.shed", &self.shed),
+            ("coordinator.batches", &self.batches),
+            ("coordinator.batched_queries", &self.batched_queries),
+        ];
+        for (name, c) in counters {
+            snap.counters.insert(name.to_string(), c.load(Ordering::Relaxed));
+        }
+        snap.gauges.insert("coordinator.mean_batch".to_string(), self.mean_batch());
+        snap.histograms
+            .insert("coordinator.latency".to_string(), self.latency.snapshot());
+        snap.histograms
+            .insert("coordinator.queue_wait".to_string(), self.queue_wait.snapshot());
+        if let Some(sc) = &self.scatter {
+            sc.snapshot_into(snap, "scatter");
+        }
+    }
+
+    /// Point-in-time [`Snapshot`] of the serving statistics.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        self.snapshot_into(&mut snap);
+        snap
     }
 }
 
@@ -198,6 +228,17 @@ impl Coordinator {
     /// Serving statistics.
     pub fn stats(&self) -> &CoordinatorStats {
         &self.inner.stats
+    }
+
+    /// Point-in-time [`Snapshot`] of the serving stats plus, when the
+    /// engine was built [`InferenceEngine::with_metrics`], its per-layer
+    /// telemetry under the `engine.` prefix.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = self.inner.stats.snapshot();
+        if let Some(m) = self.inner.engine.metrics() {
+            m.export_into(&mut snap, "engine.");
+        }
+        snap
     }
 
     /// Stops accepting new work without joining the pipeline: subsequent

@@ -7,6 +7,11 @@
 //! supports, hash keeps a **per-column** row→position map (NapkinXC's
 //! scheme), and dense lookup scatters the *query* into an `O(d)` dense
 //! array once per query (Parabel/Bonsai's scheme).
+//!
+//! Like the MSCM kernels, this module carries no timing hooks of its
+//! own: [`crate::metrics::EngineMetrics`] measures the whole layer
+//! expansion around the engine's dispatch, so baseline and MSCM timings
+//! are directly comparable and the per-column loops stay clock-free.
 
 use super::engine::Workspace;
 use super::{sigmoid, IterationMethod};

@@ -32,11 +32,13 @@
 //! beam width reaches a fixed point after the first batch.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::baseline::{baseline_layer, build_col_hash_planned};
 use super::mscm::mscm_layer;
-use super::plan::{KernelPlan, PlannerConfig};
+use super::plan::{CostModel, KernelPlan, PlannerConfig};
 use super::{IterationMethod, MatmulAlgo};
+use crate::metrics::{EngineMetrics, LayerTrace, QueryTrace};
 use crate::sparse::iterators::DenseScratch;
 use crate::sparse::{ChunkStorage, ChunkedMatrix, CsrMatrix, SparseVec, U32Map};
 use crate::tree::XmrModel;
@@ -309,6 +311,10 @@ pub struct InferenceEngine {
     /// columns of hash-planned chunks carry live maps; the rest hold
     /// 8-byte [`U32Map::empty`] placeholders.
     pub(crate) col_hash: Option<Vec<Vec<U32Map>>>,
+    /// Per-layer timing / plan-drift telemetry, enabled by
+    /// [`InferenceEngine::with_metrics`]. `None` (the default) keeps the
+    /// hot path untouched: one branch per layer slice, no timers.
+    metrics: Option<Arc<EngineMetrics>>,
 }
 
 impl InferenceEngine {
@@ -432,7 +438,39 @@ impl InferenceEngine {
             config,
             plan,
             col_hash,
+            metrics: None,
         }
+    }
+
+    /// Enables per-layer engine telemetry ([`EngineMetrics`]): every
+    /// layer slice records its wall time and per-chunk-class block
+    /// counts, joined at enable time against the default
+    /// [`CostModel`]'s predictions (the drift report ROADMAP item 5
+    /// recalibrates from). Costs one `Instant` pair plus a bounded set
+    /// of relaxed atomic adds per layer slice and **zero** steady-state
+    /// allocations (`rust/tests/alloc.rs`).
+    pub fn with_metrics(self) -> Self {
+        self.with_metrics_costed(&CostModel::default(), &PlannerConfig::default())
+    }
+
+    /// [`InferenceEngine::with_metrics`] with an explicit cost model and
+    /// planner inputs, so a calibrated model's predictions can be the
+    /// drift baseline instead of the defaults.
+    pub fn with_metrics_costed(mut self, cost: &CostModel, pc: &PlannerConfig) -> Self {
+        self.metrics = Some(Arc::new(EngineMetrics::for_plan(
+            &self.model,
+            self.config.algo,
+            &self.plan,
+            cost,
+            pc,
+        )));
+        self
+    }
+
+    /// The engine's telemetry, if [`InferenceEngine::with_metrics`]
+    /// enabled it.
+    pub fn metrics(&self) -> Option<&Arc<EngineMetrics>> {
+        self.metrics.as_ref()
     }
 
     /// The underlying model.
@@ -597,6 +635,10 @@ impl InferenceEngine {
         let layer = &self.model.layers[li];
         let methods = self.plan.layer_methods(li);
         ws.begin_layer(&layer.chunked, n);
+        // One Instant pair around the whole layer slice — kernels are
+        // timed as a unit, attribution to chunk classes comes from the
+        // beam arena (exact: one block per beamed parent).
+        let timer = self.metrics.as_ref().map(|_| Instant::now());
         match self.config.algo {
             MatmulAlgo::Mscm => {
                 mscm_layer(layer, x, qlo, n, methods, self.config.chunk_order, ws);
@@ -606,10 +648,73 @@ impl InferenceEngine {
                 baseline_layer(layer, x, qlo, n, methods, col_hash, ws);
             }
         }
+        if let (Some(m), Some(t)) = (self.metrics.as_ref(), timer) {
+            let parents = &ws.beam_entries[ws.beam_offsets[0]..ws.beam_offsets[n]];
+            m.record_layer(li, t.elapsed().as_nanos() as u64, parents);
+        }
         debug_assert!(
             (0..n).all(|q| ws.cand_cursor[q] == ws.cand_offsets[q + 1]),
             "layer expansion did not fill every candidate slot"
         );
+    }
+
+    /// Online inference with a full per-stage trace — the cold path
+    /// behind `infer --trace` and `serve --trace-sample`. Steps the
+    /// Alg. 1 loop layer by layer with an `Instant` pair per stage and
+    /// records beam width, candidate counts, and the kernel/storage mix
+    /// of every expanded chunk. Results are bitwise identical to
+    /// [`InferenceEngine::predict`]; the hot paths carry none of these
+    /// hooks (see [`crate::metrics::QueryTrace`] for the JSON schema).
+    pub fn predict_traced(
+        &self,
+        x: &SparseVec,
+        beam: usize,
+        topk: usize,
+    ) -> (Vec<Prediction>, QueryTrace) {
+        assert!(beam >= 1, "beam width must be >= 1");
+        let mut ws = self.workspace();
+        let mut xm = CsrMatrix::default();
+        xm.reset(self.model.dim);
+        xm.push_row(x.view());
+        let t_total = Instant::now();
+        ws.reset_for_batch(1);
+        let mut layers = Vec::with_capacity(self.model.layers.len());
+        for li in 0..self.model.layers.len() {
+            let mut lt = LayerTrace {
+                layer: li,
+                ..LayerTrace::default()
+            };
+            let parents = &ws.beam_entries[ws.beam_offsets[0]..ws.beam_offsets[1]];
+            lt.beam_width = parents.len();
+            let methods = self.plan.layer_methods(li);
+            let storage = self.plan.layer_storage(li);
+            for &(p, _) in parents {
+                lt.method_blocks[methods[p as usize].index()] += 1;
+                lt.storage_blocks[storage[p as usize].index()] += 1;
+            }
+            let t = Instant::now();
+            self.expand_layer(li, &xm, 0, 1, &mut ws);
+            lt.expand_ns = t.elapsed().as_nanos() as u64;
+            lt.candidates = ws.cand(0).len();
+            let t = Instant::now();
+            ws.select_beams(beam);
+            lt.select_ns = t.elapsed().as_nanos() as u64;
+            layers.push(lt);
+        }
+        let t_rank = Instant::now();
+        let (lo, hi) = (ws.beam_offsets[0], ws.beam_offsets[1]);
+        let mut out = Vec::new();
+        rank_into(&mut ws.beam_entries[lo..hi], topk, &mut out);
+        let rank_ns = t_rank.elapsed().as_nanos() as u64;
+        let trace = QueryTrace {
+            query_nnz: x.nnz(),
+            beam,
+            topk,
+            total_ns: t_total.elapsed().as_nanos() as u64,
+            rank_ns,
+            layers,
+        };
+        (out, trace)
     }
 
     /// The Alg. 1 layer loop: leaves the per-query bottom beams in the
@@ -987,6 +1092,38 @@ mod tests {
         assert!(ws.dense_pos.is_none());
         assert_eq!(csc_engine.side_index_bytes(), m.dim * 4);
         assert_eq!(dr_engine.side_index_bytes(), 0);
+    }
+
+    #[test]
+    fn metrics_and_tracing_are_bitwise_invisible() {
+        // Enabling telemetry or taking the traced path must not change a
+        // single bit of any prediction — and a real run must populate
+        // both sides of the drift join.
+        let m = model();
+        let queries = [
+            SparseVec::from_pairs(vec![(0, 1.0), (1, 0.5), (2, 2.0), (4, 1.0)]),
+            SparseVec::from_pairs(vec![(1, 0.4), (3, -1.0), (5, 2.0)]),
+            SparseVec::new(),
+        ];
+        for cfg in EngineConfig::all() {
+            let plain = InferenceEngine::new(m.clone(), cfg);
+            let metered = InferenceEngine::new(m.clone(), cfg).with_metrics();
+            for q in &queries {
+                let expect = plain.predict(q, 3, 3);
+                assert_eq!(metered.predict(q, 3, 3), expect, "{}", cfg.label());
+                let (preds, trace) = metered.predict_traced(q, 3, 3);
+                assert_eq!(preds, expect, "traced {}", cfg.label());
+                assert_eq!(trace.layers.len(), m.layers.len());
+                assert_eq!(trace.query_nnz, q.nnz());
+                assert!(trace.layers.iter().all(|l| l.beam_width >= 1));
+            }
+            let metrics = metered.metrics().expect("metrics enabled");
+            assert!(metrics.total_ns() > 0);
+            let drift = metrics.plan_drift();
+            assert!(!drift.layers.is_empty() && !drift.cells.is_empty());
+            assert!(drift.total_measured_ns() > 0, "{}", cfg.label());
+            assert!(drift.total_predicted_ns() > 0, "{}", cfg.label());
+        }
     }
 
     #[test]

@@ -26,6 +26,16 @@
 //! spans a huge chunk range (span > 4·blocks + 64), zeroing the buckets
 //! would dominate and the code falls back to the comparison sort —
 //! producing the identical order either way.
+//!
+//! # Observability boundary
+//!
+//! This module carries **no** timing hooks: the engine's
+//! [`crate::metrics::EngineMetrics`] times each layer expansion as a
+//! unit — a single `Instant` pair around the `expand_layer` dispatch —
+//! and attributes the elapsed ns to the touched `(method, storage)`
+//! chunk classes from the plan. Keeping the kernel inner loops free of
+//! per-block clocks preserves both bitwise-identical evaluation order
+//! and the zero-allocation hot path (`rust/tests/alloc.rs`).
 
 use super::engine::Workspace;
 use super::{sigmoid, IterationMethod};

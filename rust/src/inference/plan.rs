@@ -204,6 +204,27 @@ impl CostModel {
         self.k[IterationMethod::DenseLookup.index()] * 1.5 * pc.query_nnz_hint as f64
     }
 
+    /// Predicted nanoseconds of one block under its *planned*
+    /// `(algo, method, storage)` — the single dispatch the drift
+    /// telemetry ([`crate::metrics::PlanDrift`]) joins measurements
+    /// against, mirroring how the kernels actually run: a
+    /// [`ChunkStorage::DenseRows`] chunk bypasses method dispatch into
+    /// the direct probe, every other layout runs `method`'s shape.
+    pub fn planned_block_cost(
+        &self,
+        algo: MatmulAlgo,
+        method: IterationMethod,
+        storage: ChunkStorage,
+        stats: &ChunkStats,
+        pc: &PlannerConfig,
+    ) -> f64 {
+        match (algo, storage) {
+            (MatmulAlgo::Mscm, ChunkStorage::DenseRows) => self.dense_rows_block_cost(pc),
+            (MatmulAlgo::Mscm, _) => self.block_cost(method, stats, pc),
+            (MatmulAlgo::Baseline, _) => self.baseline_block_cost(method, stats, pc),
+        }
+    }
+
     /// Cheapest concrete method for one chunk under `algo`.
     pub fn best_method(
         &self,

@@ -27,7 +27,14 @@
 //!   with bitwise-identical output and plan-driven side indexes;
 //!   multi-threaded batch inference (§6.1); a NapkinXC-style per-column
 //!   hash comparator (§5.2).
-//! - [`metrics`] — streaming latency histograms (avg / P50 / P95 / P99).
+//! - [`metrics`] — the observability layer: a registry of named
+//!   lock-free counters / gauges / streaming latency histograms (avg /
+//!   P50 / P95 / P99) with diffable point-in-time [`metrics::Snapshot`]s
+//!   (text / Prometheus / JSON rendering), per-layer per-chunk-class
+//!   engine telemetry joined against the kernel planner's cost model
+//!   ([`metrics::PlanDrift`]), and opt-in per-query traces
+//!   ([`metrics::QueryTrace`]). Snapshots travel across processes in the
+//!   shard protocol's `Stats` frame and feed the `metrics` CLI.
 //! - [`coordinator`] — the L3 serving system: request router, dynamic
 //!   batcher, worker pool, backpressure.
 //! - [`shard`] — label-space sharding: partitions a model into root-

@@ -9,6 +9,11 @@
 //!   `--remote host:port,...`); `shard-host` (host one shard file over
 //!   TCP for remote serving); `--iter auto` enables the cost-model
 //!   kernel planner on any of them
+//! - observability: `metrics` (poll a live shard host's stats over the
+//!   wire `Stats` frame, once or as windowed diffs); `infer --trace`
+//!   (per-query layer traces + the plan-drift join); `serve
+//!   --metrics-addr/--stats-interval/--trace-sample` (live exposition,
+//!   periodic windowed stats, sampled request traces)
 //! - paper reproduction: `bench table|figure3|figure4|figure5|figure6|
 //!   table4|table5|table6|all`
 //! - runtime: `xla-smoke` (load + execute the AOT artifacts)
@@ -31,10 +36,11 @@ use mscm_xmr::inference::{
     EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo, PlannerConfig,
 };
 use mscm_xmr::repro;
+use mscm_xmr::metrics::Snapshot;
 use mscm_xmr::shard::{
-    load_shard, load_shards, partition, save_shards, RemoteConfig, RemoteCoordinatorConfig,
-    RemoteShardedCoordinator, ShardHost, ShardHostConfig, ShardedCoordinator,
-    ShardedCoordinatorConfig, ShardedEngine,
+    load_shard, load_shards, partition, poll_stats, save_shards, RemoteConfig,
+    RemoteCoordinatorConfig, RemoteShardedCoordinator, ShardHost, ShardHostConfig,
+    ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
 };
 use mscm_xmr::train::{train_model, RankerParams, Tfidf};
 use mscm_xmr::tree::{load_model, save_model};
@@ -57,6 +63,9 @@ MODEL PRODUCTION
 INFERENCE
   infer         --model m.bin --queries q.svm [--algo mscm|baseline]
                 [--iter marching|binary|hash|dense|auto] [--beam 10] [--topk 10]
+                [--trace out.json] (write per-query layer traces — beam
+                width, candidates, blocks per kernel/storage, expand and
+                select ns — and print the plan-drift join afterwards)
   plan          --model m.bin [--algo mscm|baseline] [--calibrate N]
                 [--batch-hint N] [--plan-query-nnz N] [--no-layout]
                 (resolve the per-chunk kernel plan; print the per-layer
@@ -76,10 +85,22 @@ INFERENCE
                 --no-speculate disables speculative expansion,
                 --round-timeout-ms N sets the per-round failover timeout,
                 0 = wait forever)
+                [--metrics-addr H:P] (TCP exposition: each connection
+                gets one Prometheus-style snapshot, then close)
+                [--stats-interval S] (one-line windowed stats every S
+                seconds) [--trace-sample N [--trace out.json]] (sample
+                every Nth request into a trace file; the final metrics
+                snapshot is appended)
   shard-host    --shard shard-000-of-004.bin [--addr 127.0.0.1:0]
                 [--algo ...] [--iter ...|auto [--calibrate N]]
-                [--no-speculate]  (host one shard over TCP for
-                serve --remote; port 0 picks a free port and prints it)
+                [--no-speculate] [--no-metrics]  (host one shard over TCP
+                for serve --remote; port 0 picks a free port and prints
+                it; answers the wire Stats poll unless --no-metrics)
+  metrics       --addr host:port [--format text|prom|json]
+                [--interval S [--count N]]  (poll a live shard host's
+                stats over the wire Stats frame; with --interval, print
+                windowed diffs of successive snapshots — N windows then
+                exit, 0 = forever)
 
   --iter auto resolves a per-chunk kernel plan (cost model over chunk
   stats; --calibrate N times the kernels on N synthetic queries first)
@@ -136,6 +157,7 @@ fn main() -> ExitCode {
         ("shard-host", _) => cmd_shard_host(&opts),
         ("plan", _) => cmd_plan(&opts),
         ("infer", _) => cmd_infer(&opts),
+        ("metrics", _) => cmd_metrics(&opts),
         ("eval", _) => cmd_eval(&opts),
         ("serve", _) => cmd_serve(&opts),
         ("xla-smoke", _) => cmd_xla_smoke(&opts),
@@ -524,10 +546,20 @@ fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
     )?;
     let config = engine_config(opts)?;
     let dim = model.dim;
-    let engine = InferenceEngine::new_with_planner(model, config, &planner_config(opts)?);
+    let pc = planner_config(opts)?;
+    let trace_path = opts.get("trace").cloned();
+    let engine = InferenceEngine::new_with_planner(model, config, &pc);
+    // --trace also enables the engine telemetry so the run ends with a
+    // plan-drift join (measured vs cost-model-predicted ns per class).
+    let engine = if trace_path.is_some() {
+        engine.with_metrics_costed(&mscm_xmr::inference::CostModel::default(), &pc)
+    } else {
+        engine
+    };
     let beam = get(opts, "beam", 10usize)?;
     let topk = get(opts, "topk", 10usize)?;
     let mut ws = engine.workspace();
+    let mut traces = Vec::new();
     for i in 0..queries.features.rows {
         let mut q = queries.features.row_owned(i);
         // drop features beyond the model's dimension
@@ -539,14 +571,67 @@ fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
             .map(|(&f, &v)| (f, v))
             .collect();
         q = mscm_xmr::sparse::SparseVec::from_pairs(keep);
-        let preds = engine.predict_with(&q, beam, topk, &mut ws);
+        let preds = if trace_path.is_some() {
+            let (preds, trace) = engine.predict_traced(&q, beam, topk);
+            traces.push(trace.to_json());
+            preds
+        } else {
+            engine.predict_with(&q, beam, topk, &mut ws)
+        };
         let formatted: Vec<String> = preds
             .iter()
             .map(|p| format!("{}:{:.4}", p.label, p.score))
             .collect();
         println!("query {i}: {}", formatted.join(" "));
     }
+    if let Some(path) = trace_path {
+        let n = traces.len();
+        std::fs::write(&path, Json::Arr(traces).to_string())?;
+        eprintln!("wrote {n} query traces to {path}");
+        if let Some(m) = engine.metrics() {
+            eprint!("{}", m.plan_drift().summary());
+        }
+    }
     Ok(())
+}
+
+/// Polls a live serving process (any `shard-host` answering the wire
+/// `Stats` frame) and prints its metrics snapshot — once, or as windowed
+/// diffs with `--interval`.
+fn cmd_metrics(opts: &Opts) -> Result<(), anyhow::Error> {
+    let addr = parse_remote_addrs(
+        opts.get("addr")
+            .ok_or_else(|| usage("metrics requires --addr host:port"))?,
+    )?[0];
+    let format = opts.get("format").cloned().unwrap_or_else(|| "text".into());
+    if !matches!(format.as_str(), "text" | "prom" | "json") {
+        return Err(usage(format!("bad --format '{format}' (text|prom|json)")));
+    }
+    let render = |snap: &Snapshot| match format.as_str() {
+        "prom" => snap.render_prometheus(),
+        "json" => format!("{}\n", snap.to_json()),
+        _ => snap.render_text(),
+    };
+    let interval = get(opts, "interval", 0u64)?;
+    let count = get(opts, "count", 0usize)?;
+    let rc = RemoteConfig::default();
+    let mut last = poll_stats(addr, &rc)?;
+    if interval == 0 {
+        print!("{}", render(&last));
+        return Ok(());
+    }
+    let mut windows = 0usize;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(interval));
+        let snap = poll_stats(addr, &rc)?;
+        println!("--- window {interval}s @ {addr} ---");
+        print!("{}", render(&snap.diff(&last)));
+        last = snap;
+        windows += 1;
+        if count > 0 && windows >= count {
+            return Ok(());
+        }
+    }
 }
 
 /// Train/test split evaluation: quantifies the beam-width ↔ accuracy
@@ -620,6 +705,17 @@ impl Serving {
         }
     }
 
+    /// Full metrics snapshot — front-door stats plus engine telemetry
+    /// (and scatter/transport telemetry on the sharded stacks) — feeding
+    /// `--metrics-addr` exposition and `--stats-interval` diffs.
+    fn snapshot(&self) -> Snapshot {
+        match self {
+            Serving::Single(c) => c.snapshot(),
+            Serving::Sharded(c) => c.snapshot(),
+            Serving::Remote(c) => c.snapshot(),
+        }
+    }
+
     /// Per-shard scatter-round telemetry + transport counters, printed
     /// after the load loop.
     fn print_round_telemetry(&self) {
@@ -683,6 +779,7 @@ fn cmd_shard_host(opts: &Opts) -> Result<(), anyhow::Error> {
             engine: engine_config(opts)?,
             planner: planner_config(opts)?,
             speculate: !opts.contains_key("no-speculate"),
+            metrics: !opts.contains_key("no-metrics"),
         },
         addr.as_str(),
     )?;
@@ -726,6 +823,11 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
     }
 
     let pc = planner_config(opts)?;
+    // Any observability flag turns on the in-process engine telemetry
+    // (remote shard hosts record their own — see shard-host --no-metrics).
+    let observe = opts.contains_key("metrics-addr")
+        || opts.contains_key("stats-interval")
+        || opts.contains_key("trace-sample");
     // Cross-process serving: the model lives on the shard hosts; the
     // addresses are probed and grouped into replica sets by the shard id
     // each host reports.
@@ -756,7 +858,8 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
         let shards = load_shards(dir, false)?;
         // Shards carrying stored plans serve them verbatim under
         // --iter auto; the rest plan themselves here.
-        let engine = Arc::new(ShardedEngine::new_with_planner(shards, config, &pc));
+        let engine = ShardedEngine::new_with_planner(shards, config, &pc);
+        let engine = Arc::new(if observe { engine.with_metrics() } else { engine });
         eprintln!(
             "serving {} shards from {dir} (L={}, d={})",
             engine.num_shards(),
@@ -799,9 +902,8 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
         };
         let dim = model.dim;
         if num_shards > 0 {
-            let engine = Arc::new(ShardedEngine::from_model_with_planner(
-                &model, num_shards, config, &pc,
-            ));
+            let engine = ShardedEngine::from_model_with_planner(&model, num_shards, config, &pc);
+            let engine = Arc::new(if observe { engine.with_metrics() } else { engine });
             eprintln!("partitioned into {} shards", engine.num_shards());
             if config.iter == IterationMethod::Auto {
                 eprintln!(
@@ -819,7 +921,8 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
             );
             (dim, Serving::Sharded(coord))
         } else {
-            let engine = Arc::new(InferenceEngine::new_with_planner(model, config, &pc));
+            let engine = InferenceEngine::new_with_planner(model, config, &pc);
+            let engine = Arc::new(if observe { engine.with_metrics() } else { engine });
             if config.iter == IterationMethod::Auto {
                 eprintln!("kernel plan:\n{}", engine.plan().summary());
                 eprintln!(
@@ -846,22 +949,78 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
         zipf_theta: 1.05,
     };
     let x = mscm_xmr::data::synthetic::synth_queries(&spec, requests, get(opts, "seed", 1u64)?);
+    // --metrics-addr: an accept thread hands connections to this load
+    // loop (which owns `coord`); each connection gets one Prometheus
+    // snapshot and is closed — pollable with nc/curl between requests.
+    let metrics_rx = match opts.get("metrics-addr") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr.as_str())
+                .map_err(|e| anyhow::anyhow!("--metrics-addr {addr}: {e}"))?;
+            eprintln!("metrics exposition on {}", listener.local_addr()?);
+            let (tx, rx) = std::sync::mpsc::channel::<std::net::TcpStream>();
+            std::thread::Builder::new()
+                .name("mscm-metrics-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming().flatten() {
+                        if tx.send(conn).is_err() {
+                            break;
+                        }
+                    }
+                })?;
+            Some(rx)
+        }
+        None => None,
+    };
+    let stats_every = get(opts, "stats-interval", 0u64)?;
+    let trace_sample = get(opts, "trace-sample", 0usize)?;
     eprintln!("serving {requests} requests at {rps} rps ...");
     let interval = std::time::Duration::from_nanos(1_000_000_000 / rps.max(1));
     let mut rxs = Vec::with_capacity(requests);
     let t0 = std::time::Instant::now();
+    let mut last_stats = (t0, coord.snapshot());
     for i in 0..requests {
         let target = t0 + interval * i as u32;
         if let Some(sleep) = target.checked_duration_since(std::time::Instant::now()) {
             std::thread::sleep(sleep);
         }
         match coord.submit(x.row_owned(i)) {
-            Ok((_, rx)) => rxs.push(rx),
+            Ok((_, rx)) => rxs.push((i, rx)),
             Err(e) => eprintln!("request {i}: {e}"),
         }
+        if let Some(mrx) = &metrics_rx {
+            while let Ok(mut conn) = mrx.try_recv() {
+                use std::io::Write as _;
+                let _ = conn.write_all(coord.snapshot().render_prometheus().as_bytes());
+            }
+        }
+        if stats_every > 0 && last_stats.0.elapsed().as_secs() >= stats_every {
+            let snap = coord.snapshot();
+            let w = snap.diff(&last_stats.1);
+            eprintln!(
+                "[stats {}s] completed={} shed={} latency {}",
+                stats_every,
+                w.counters.get("coordinator.completed").copied().unwrap_or(0),
+                w.counters.get("coordinator.shed").copied().unwrap_or(0),
+                w.histograms
+                    .get("coordinator.latency")
+                    .map(|h| h.summary())
+                    .unwrap_or_default()
+            );
+            last_stats = (std::time::Instant::now(), snap);
+        }
     }
-    for rx in rxs {
-        rx.recv().ok();
+    let mut sampled = Vec::new();
+    for (i, rx) in rxs {
+        if let Ok(resp) = rx.recv() {
+            if trace_sample > 0 && i % trace_sample == 0 {
+                sampled.push(Json::obj(vec![
+                    ("request", Json::Num(i as f64)),
+                    ("queue_us", Json::Num(resp.queue_time.as_micros() as f64)),
+                    ("total_us", Json::Num(resp.total_time.as_micros() as f64)),
+                    ("batch_size", Json::Num(resp.batch_size as f64)),
+                ]));
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = coord.stats();
@@ -876,6 +1035,17 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
     println!("queue:   {}", stats.queue_wait.summary());
     println!("mean batch: {:.1}", stats.mean_batch());
     coord.print_round_telemetry();
+    if trace_sample > 0 {
+        let out = opts.get("trace").cloned().unwrap_or_else(|| "traces.json".into());
+        let n = sampled.len();
+        let doc = Json::obj(vec![
+            ("sample_every", Json::Num(trace_sample as f64)),
+            ("sampled", Json::Arr(sampled)),
+            ("snapshot", coord.snapshot().to_json()),
+        ]);
+        std::fs::write(&out, doc.to_string())?;
+        println!("wrote {n} sampled traces (+ final snapshot) to {out}");
+    }
     coord.shutdown();
     Ok(())
 }

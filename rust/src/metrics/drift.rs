@@ -1,0 +1,407 @@
+//! Engine-level timing telemetry and the plan-drift join.
+//!
+//! [`EngineMetrics`] is the serving-side half of the planner feedback
+//! loop (ROADMAP item 5): it measures what the layer kernels actually
+//! cost and accumulates, side by side, what the engine's resolved
+//! [`KernelPlan`] *predicted* those same blocks would cost under the
+//! [`CostModel`]. [`PlanDrift`] joins the two into per-layer and
+//! per-chunk-class rows whose measured/predicted ratio is the
+//! recalibration signal: a class drifting far from 1.0 means the cost
+//! constants `k` mispredict that kernel on this machine.
+//!
+//! # Recording contract
+//!
+//! The hot path pays exactly one `Instant` pair per layer slice (one
+//! call to [`crate::inference::InferenceEngine::expand_layer`]) plus a
+//! walk over the already-resident beam parents accumulating into two
+//! stack arrays, flushed as at most `4 × 3` relaxed atomic adds. No
+//! locks, no allocations — `rust/tests/alloc.rs` pins the zero-alloc
+//! invariant with metrics enabled on the online, batch and sharded
+//! paths. Block attribution is exact, not sampled: every beamed parent
+//! is one block of its chunk's `(method, storage)` class, and the
+//! predicted cost of *those* chunks (precomputed per chunk at enable
+//! time) is what accumulates, so the join compares identical workloads.
+//!
+//! Layer wall time is measured once per slice rather than per class;
+//! [`DriftLayer`] therefore carries the measured ns exactly, while
+//! [`DriftCell`] rows carry exact block counts and predicted ns per
+//! class. On mixed-class layers the per-class measured share is not
+//! directly observable without per-chunk timers (which would break the
+//! single-Instant-pair budget); the layer-level ratio plus the class
+//! composition is what the recalibration loop consumes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::inference::{CostModel, IterationMethod, KernelPlan, MatmulAlgo, PlannerConfig};
+use crate::sparse::ChunkStorage;
+use crate::tree::XmrModel;
+use crate::util::Json;
+
+use super::Snapshot;
+
+/// Chunk classes: 4 concrete methods × 3 storage layouts.
+const CLASSES: usize = 12;
+
+#[inline]
+fn class_of(method: IterationMethod, storage: ChunkStorage) -> usize {
+    method.index() * 3 + storage.index()
+}
+
+fn class_parts(class: usize) -> (IterationMethod, ChunkStorage) {
+    (
+        IterationMethod::from_index(class / 3).expect("class method in range"),
+        ChunkStorage::from_index(class % 3).expect("class storage in range"),
+    )
+}
+
+/// Per-layer accumulators plus the immutable per-chunk attribution
+/// tables built once at enable time.
+struct LayerMetrics {
+    /// Measured wall time of every slice of this layer, ns.
+    ns: AtomicU64,
+    /// Layer slices expanded (one per `expand_layer` call).
+    calls: AtomicU64,
+    /// Blocks expanded per chunk class.
+    blocks: [AtomicU64; CLASSES],
+    /// Predicted ns accumulated per chunk class (the cost model's
+    /// per-block prediction summed over the actual blocks touched).
+    pred_ns: [AtomicU64; CLASSES],
+    /// Chunk id → chunk class, from the resolved plan.
+    chunk_class: Vec<u8>,
+    /// Chunk id → predicted ns per block, scaled to integer ns.
+    chunk_pred_ns: Vec<u64>,
+}
+
+/// Lock-free per-engine timing telemetry, attached with
+/// [`crate::inference::InferenceEngine::with_metrics`]. See the module
+/// docs for the recording contract and [`EngineMetrics::plan_drift`] for
+/// the join.
+pub struct EngineMetrics {
+    layers: Vec<LayerMetrics>,
+}
+
+impl EngineMetrics {
+    /// Builds the attribution tables for `model` under its resolved
+    /// `plan`: each chunk's class and its predicted per-block cost under
+    /// `cost`/`pc` — the prediction side of the drift join, frozen at
+    /// enable time so the hot path only indexes.
+    pub(crate) fn for_plan(
+        model: &XmrModel,
+        algo: MatmulAlgo,
+        plan: &KernelPlan,
+        cost: &CostModel,
+        pc: &PlannerConfig,
+    ) -> Self {
+        let layers = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, layer)| {
+                let methods = plan.layer_methods(li);
+                let storage = plan.layer_storage(li);
+                let nc = layer.chunked.num_chunks();
+                let mut chunk_class = Vec::with_capacity(nc);
+                let mut chunk_pred_ns = Vec::with_capacity(nc);
+                for c in 0..nc {
+                    let stats = layer.chunked.chunk_stats(c);
+                    chunk_class.push(class_of(methods[c], storage[c]) as u8);
+                    let pred = cost.planned_block_cost(algo, methods[c], storage[c], &stats, pc);
+                    chunk_pred_ns.push(pred.max(0.0).round() as u64);
+                }
+                LayerMetrics {
+                    ns: AtomicU64::new(0),
+                    calls: AtomicU64::new(0),
+                    blocks: std::array::from_fn(|_| AtomicU64::new(0)),
+                    pred_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+                    chunk_class,
+                    chunk_pred_ns,
+                }
+            })
+            .collect();
+        Self { layers }
+    }
+
+    /// Hot-path record: one completed slice of layer `li` that took `ns`
+    /// and expanded the beam parents in `parents` (flat `(chunk id,
+    /// score)` entries across the slice's queries). Stack accumulation,
+    /// then at most `2 × CLASSES` relaxed atomic adds.
+    #[inline]
+    pub(crate) fn record_layer(&self, li: usize, ns: u64, parents: &[(u32, f32)]) {
+        let lm = &self.layers[li];
+        lm.ns.fetch_add(ns, Ordering::Relaxed);
+        lm.calls.fetch_add(1, Ordering::Relaxed);
+        let mut blocks = [0u64; CLASSES];
+        let mut pred = [0u64; CLASSES];
+        for &(p, _) in parents {
+            let c = lm.chunk_class[p as usize] as usize;
+            blocks[c] += 1;
+            pred[c] += lm.chunk_pred_ns[p as usize];
+        }
+        for c in 0..CLASSES {
+            if blocks[c] != 0 {
+                lm.blocks[c].fetch_add(blocks[c], Ordering::Relaxed);
+                lm.pred_ns[c].fetch_add(pred[c], Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Number of layers instrumented.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total measured expansion time across all layers, ns.
+    pub fn total_ns(&self) -> u64 {
+        self.layers.iter().map(|l| l.ns.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Joins the measurements against the plan's predictions — the
+    /// [`PlanDrift`] report ROADMAP item 5's recalibration consumes.
+    pub fn plan_drift(&self) -> PlanDrift {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        let mut cells = Vec::new();
+        for (li, lm) in self.layers.iter().enumerate() {
+            let mut predicted_ns = 0u64;
+            for class in 0..CLASSES {
+                let blocks = lm.blocks[class].load(Ordering::Relaxed);
+                if blocks == 0 {
+                    continue;
+                }
+                let pred = lm.pred_ns[class].load(Ordering::Relaxed);
+                predicted_ns += pred;
+                let (method, storage) = class_parts(class);
+                cells.push(DriftCell {
+                    layer: li,
+                    method,
+                    storage,
+                    blocks,
+                    predicted_ns: pred,
+                });
+            }
+            layers.push(DriftLayer {
+                layer: li,
+                calls: lm.calls.load(Ordering::Relaxed),
+                measured_ns: lm.ns.load(Ordering::Relaxed),
+                predicted_ns,
+            });
+        }
+        PlanDrift { layers, cells }
+    }
+
+    /// Copies the raw accumulators into `snap` under `prefix` (e.g.
+    /// `engine.`): `{prefix}layer{li}.ns` / `.calls` per layer and
+    /// `{prefix}layer{li}.{method}.{storage}.blocks` / `.pred_ns` per
+    /// touched chunk class — the form the `Stats` wire frame exports.
+    pub fn export_into(&self, snap: &mut Snapshot, prefix: &str) {
+        for (li, lm) in self.layers.iter().enumerate() {
+            snap.counters.insert(
+                format!("{prefix}layer{li}.ns"),
+                lm.ns.load(Ordering::Relaxed),
+            );
+            snap.counters.insert(
+                format!("{prefix}layer{li}.calls"),
+                lm.calls.load(Ordering::Relaxed),
+            );
+            for class in 0..CLASSES {
+                let blocks = lm.blocks[class].load(Ordering::Relaxed);
+                if blocks == 0 {
+                    continue;
+                }
+                let (method, storage) = class_parts(class);
+                let key = format!("{prefix}layer{li}.{}.{}", method.short(), storage.short());
+                snap.counters.insert(format!("{key}.blocks"), blocks);
+                snap.counters.insert(
+                    format!("{key}.pred_ns"),
+                    lm.pred_ns[class].load(Ordering::Relaxed),
+                );
+            }
+        }
+    }
+}
+
+/// One layer's row of the drift join: measured wall time vs the cost
+/// model's prediction for the same blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DriftLayer {
+    /// Layer index.
+    pub layer: usize,
+    /// Layer slices expanded.
+    pub calls: u64,
+    /// Measured expansion wall time, ns.
+    pub measured_ns: u64,
+    /// Cost-model prediction for the same blocks, ns.
+    pub predicted_ns: u64,
+}
+
+impl DriftLayer {
+    /// Measured / predicted; 0.0 when nothing was predicted.
+    pub fn ratio(&self) -> f64 {
+        if self.predicted_ns == 0 {
+            0.0
+        } else {
+            self.measured_ns as f64 / self.predicted_ns as f64
+        }
+    }
+}
+
+/// One chunk-class row of the drift join: how many blocks of a
+/// `(layer, method, storage)` class ran and what the cost model said
+/// they would cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DriftCell {
+    /// Layer index.
+    pub layer: usize,
+    /// Planned iteration method of the class.
+    pub method: IterationMethod,
+    /// Planned storage layout of the class.
+    pub storage: ChunkStorage,
+    /// Blocks expanded.
+    pub blocks: u64,
+    /// Cost-model prediction for those blocks, ns.
+    pub predicted_ns: u64,
+}
+
+/// The measured-vs-predicted join ([`EngineMetrics::plan_drift`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanDrift {
+    /// Per-layer measured/predicted rows.
+    pub layers: Vec<DriftLayer>,
+    /// Per-chunk-class composition rows (zero-block classes omitted).
+    pub cells: Vec<DriftCell>,
+}
+
+impl PlanDrift {
+    /// Total measured ns across layers.
+    pub fn total_measured_ns(&self) -> u64 {
+        self.layers.iter().map(|l| l.measured_ns).sum()
+    }
+
+    /// Total predicted ns across layers.
+    pub fn total_predicted_ns(&self) -> u64 {
+        self.layers.iter().map(|l| l.predicted_ns).sum()
+    }
+
+    /// Overall measured / predicted ratio — the global recalibration
+    /// scale; 0.0 when nothing was recorded.
+    pub fn ratio(&self) -> f64 {
+        let p = self.total_predicted_ns();
+        if p == 0 {
+            0.0
+        } else {
+            self.total_measured_ns() as f64 / p as f64
+        }
+    }
+
+    /// Human-readable report: one row per layer with its ratio, then
+    /// the class composition.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "plan drift: measured {} ns vs predicted {} ns (ratio {:.3})\n",
+            self.total_measured_ns(),
+            self.total_predicted_ns(),
+            self.ratio()
+        ));
+        for l in &self.layers {
+            out.push_str(&format!(
+                "  layer {}: calls={} measured={}ns predicted={}ns ratio={:.3}\n",
+                l.layer, l.calls, l.measured_ns, l.predicted_ns, l.ratio()
+            ));
+        }
+        for c in &self.cells {
+            out.push_str(&format!(
+                "    layer {} {}/{}: blocks={} predicted={}ns\n",
+                c.layer,
+                c.method.short(),
+                c.storage.short(),
+                c.blocks,
+                c.predicted_ns
+            ));
+        }
+        out
+    }
+
+    /// JSON encoding: `{"layers": [...], "cells": [...]}` with the
+    /// field names of [`DriftLayer`] / [`DriftCell`] plus per-row
+    /// ratios.
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("layer", Json::Num(l.layer as f64)),
+                    ("calls", Json::Num(l.calls as f64)),
+                    ("measured_ns", Json::Num(l.measured_ns as f64)),
+                    ("predicted_ns", Json::Num(l.predicted_ns as f64)),
+                    ("ratio", Json::Num(l.ratio())),
+                ])
+            })
+            .collect();
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("layer", Json::Num(c.layer as f64)),
+                    ("method", Json::Str(c.method.short().to_string())),
+                    ("storage", Json::Str(c.storage.short().to_string())),
+                    ("blocks", Json::Num(c.blocks as f64)),
+                    ("predicted_ns", Json::Num(c.predicted_ns as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("measured_ns", Json::Num(self.total_measured_ns() as f64)),
+            ("predicted_ns", Json::Num(self.total_predicted_ns() as f64)),
+            ("ratio", Json::Num(self.ratio())),
+            ("layers", Json::Arr(layers)),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_round_trips() {
+        for m in IterationMethod::ALL {
+            for s in ChunkStorage::ALL {
+                let c = class_of(m, s);
+                assert!(c < CLASSES);
+                assert_eq!(class_parts(c), (m, s));
+            }
+        }
+    }
+
+    #[test]
+    fn drift_ratio_math() {
+        let d = PlanDrift {
+            layers: vec![
+                DriftLayer {
+                    layer: 0,
+                    calls: 2,
+                    measured_ns: 300,
+                    predicted_ns: 100,
+                },
+                DriftLayer {
+                    layer: 1,
+                    calls: 2,
+                    measured_ns: 100,
+                    predicted_ns: 100,
+                },
+            ],
+            cells: vec![],
+        };
+        assert_eq!(d.total_measured_ns(), 400);
+        assert_eq!(d.total_predicted_ns(), 200);
+        assert!((d.ratio() - 2.0).abs() < 1e-12);
+        assert!((d.layers[0].ratio() - 3.0).abs() < 1e-12);
+        let j = d.to_json();
+        assert_eq!(j.get("ratio").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("layers").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(PlanDrift::default().ratio(), 0.0);
+    }
+}

@@ -1,11 +1,68 @@
-//! Latency metrics: streaming histograms with avg / P50 / P95 / P99,
-//! matching the quantities reported in the paper's Table 4 and §6, plus
-//! the per-shard scatter-round telemetry ([`ScatterMetrics`]) both
-//! sharded gather stages feed.
+//! Serving observability: streaming latency histograms, a named-metric
+//! [`Registry`] with point-in-time [`Snapshot`]s, and the engine-level
+//! plan-drift telemetry that closes the planner loop.
+//!
+//! # Histograms
+//!
+//! [`LatencyHistogram`] is the shared recording primitive: logarithmic
+//! microsecond buckets (4 sub-buckets per octave, 1 µs … ~16.7 s) plus
+//! exact count/sum/max — the quantities of the paper's Table 4 —
+//! recorded with lock-free atomic adds cheap enough for every request.
+//! [`ScatterMetrics`] layers per-shard round latencies and the gather
+//! **join wait** on top; both sharded gather stages (in-process and
+//! remote) feed it.
+//!
+//! # Registry, snapshots, diffing
+//!
+//! A [`Registry`] names lock-free counters, gauges and histograms.
+//! Handles ([`Counter`], [`Gauge`], `Arc<LatencyHistogram>`) are
+//! resolved once — registration takes a lock and may allocate; recording
+//! through a handle is a plain atomic op, so hot paths stay
+//! allocation-free (pinned by `rust/tests/alloc.rs`). [`Registry::snapshot`]
+//! captures a point-in-time [`Snapshot`]; [`Snapshot::diff`] subtracts an
+//! earlier one for *windowed* stats (`serve --stats-interval` prints
+//! these), so a long-running server is observable without restart-to-
+//! reset. Snapshots render as human text ([`Snapshot::render_text`]),
+//! Prometheus-style exposition ([`Snapshot::render_prometheus`], served
+//! by `serve --metrics-addr`) and JSON ([`Snapshot::to_json`] /
+//! [`Snapshot::from_json`]), and travel between processes in the shard
+//! wire protocol's `Stats` frame (see [`crate::shard`] docs).
+//!
+//! # Engine telemetry and plan drift
+//!
+//! [`EngineMetrics`] times every layer expansion with a single `Instant`
+//! pair per layer slice and attributes the touched blocks to their
+//! `(IterationMethod, ChunkStorage)` chunk class, accumulating alongside
+//! the **predicted** cost of the same blocks under the engine's
+//! [`crate::inference::CostModel`]. [`PlanDrift`] joins the two: per
+//! layer and per chunk class, measured ns vs predicted ns. The
+//! measured/predicted ratio is exactly the scale factor ROADMAP item 5's
+//! online recalibration needs — a drift ratio far from 1.0 on some class
+//! means the cost constants `k` mispredict that kernel on this machine
+//! and the planner should recalibrate ([`CostModel::calibrate`]) or
+//! re-plan. See [`EngineMetrics`] for the recording contract.
+//!
+//! # Query traces
+//!
+//! [`QueryTrace`] (emitted by `infer --trace out.json`, sampled by
+//! `serve --trace-sample N`) is the opt-in per-query view: beam width,
+//! chunks touched, kernel/storage mix and expand/select ns per layer,
+//! plus ranking time. The JSON schema is documented on [`QueryTrace`].
+//!
+//! [`CostModel::calibrate`]: crate::inference::CostModel::calibrate
 
+mod drift;
+mod trace;
+
+pub use drift::{DriftCell, DriftLayer, EngineMetrics, PlanDrift};
+pub use trace::{LayerTrace, QueryTrace};
+
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::util::Json;
 
 /// A latency histogram with logarithmic microsecond buckets plus exact
 /// sum/count, cheap enough for the serving hot path.
@@ -41,6 +98,21 @@ impl LatencyHistogram {
         }
     }
 
+    /// Maps a µs value to its bucket index.
+    ///
+    /// The low octaves are intentionally **uneven**: sub-bucket
+    /// resolution only exists once an octave spans at least `SUB`
+    /// integer values. Octave 0 (`us ∈ {0, 1}`) collapses to index 0,
+    /// and octave 1 (`us ∈ {2, 3}`) carries a single fractional bit so
+    /// only its upper two sub-buckets (indices 6–7) are reachable —
+    /// indices 1–5 are never produced. Rather than special-casing these
+    /// octaves, the consistency contract is pinned by the
+    /// `bucket_bounds_bracket_every_value` property test below: indices
+    /// are monotone in `us`, `bucket_upper(bucket_index(us)) >= us`, and
+    /// each bucket's value range is contiguous. Values at or above the
+    /// 2^24 µs ceiling fold into the last octave by their low bits;
+    /// count/sum/max stay exact there and quantiles past the ceiling
+    /// fall back to `max_us`.
     fn bucket_index(us: u64) -> usize {
         if us < 1 {
             return 0;
@@ -124,6 +196,421 @@ impl LatencyHistogram {
             self.max_ms()
         )
     }
+
+    /// Point-in-time copy of every bucket plus the exact count/sum/max.
+    /// Snapshots are plain data: diffable, serializable, and readable
+    /// with the same mean/quantile math as the live histogram.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one [`LatencyHistogram`]: the full bucket
+/// vector plus exact count/sum/max. Two snapshots of the same histogram
+/// subtract ([`HistogramSnapshot::diff`]) into the window between them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts (`OCTAVES * SUB` entries).
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Exact sum of all observations, µs.
+    pub sum_us: u64,
+    /// Maximum observation, µs.
+    pub max_us: u64,
+}
+
+impl HistogramSnapshot {
+    /// The window between `earlier` and `self`: per-bucket and
+    /// count/sum subtraction (saturating, so a reset or mismatched pair
+    /// degrades to zeros instead of wrapping). `max_us` stays the
+    /// all-time maximum — a windowed max is not recoverable from two
+    /// cumulative snapshots.
+    pub fn diff(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| b.saturating_sub(earlier.buckets.get(i).copied().unwrap_or(0)))
+            .collect();
+        HistogramSnapshot {
+            buckets,
+            count: self.count.saturating_sub(earlier.count),
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+            max_us: self.max_us,
+        }
+    }
+
+    /// Exact mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64 / 1e3
+        }
+    }
+
+    /// Approximate quantile (0..1) in milliseconds — the same walk as
+    /// [`LatencyHistogram::quantile_ms`].
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                return LatencyHistogram::bucket_upper(i) as f64 / 1e3;
+            }
+        }
+        self.max_us as f64 / 1e3
+    }
+
+    /// Maximum observed, in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        self.max_us as f64 / 1e3
+    }
+
+    /// One-line summary matching [`LatencyHistogram::summary`].
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} avg={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count,
+            self.mean_ms(),
+            self.quantile_ms(0.50),
+            self.quantile_ms(0.95),
+            self.quantile_ms(0.99),
+            self.max_ms()
+        )
+    }
+}
+
+/// A named monotone counter handle. Cloning shares the underlying
+/// atomic; recording is a single relaxed `fetch_add` — no lock, no
+/// allocation.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Adds one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Adds `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A named gauge handle (an `f64` stored as bits in one atomic).
+/// Cloning shares the underlying atomic; `set` is a single relaxed
+/// store.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Replaces the value.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A registry of named lock-free metrics.
+///
+/// Registration (`counter` / `gauge` / `histogram`) is get-or-create:
+/// it takes the registry lock and may allocate, so resolve handles once
+/// at setup. Recording through a resolved handle never touches the
+/// registry again. [`Registry::snapshot`] walks the name table under the
+/// lock and copies every value into a [`Snapshot`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicU64>>,
+    histograms: BTreeMap<String, Arc<LatencyHistogram>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The counter named `name`, created at zero on first use.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = self.inner.lock().unwrap();
+        let a = inner
+            .counters
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)));
+        Counter(Arc::clone(a))
+    }
+
+    /// The gauge named `name`, created at 0.0 on first use.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = self.inner.lock().unwrap();
+        let a = inner
+            .gauges
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0f64.to_bits())));
+        Gauge(Arc::clone(a))
+    }
+
+    /// The histogram named `name`, created empty on first use.
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        let mut inner = self.inner.lock().unwrap();
+        let h = inner
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(LatencyHistogram::new()));
+        Arc::clone(h)
+    }
+
+    /// Adopts an externally owned histogram under `name`, so structures
+    /// that already record into their own `Arc<LatencyHistogram>` export
+    /// through the registry without double recording.
+    pub fn register_histogram(&self, name: &str, h: Arc<LatencyHistogram>) {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .insert(name.to_string(), h);
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap();
+        Snapshot {
+            counters: inner
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            gauges: inner
+                .gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), f64::from_bits(v.load(Ordering::Relaxed))))
+                .collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Registry`] (or any composed stats
+/// source): named counter values, gauge values and histogram snapshots.
+/// Plain data — diffable, renderable, JSON round-trippable, and carried
+/// across processes by the shard wire protocol's `Stats` frame.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    /// Monotone counters by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauges by name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histograms by name.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl Snapshot {
+    /// The window between `earlier` and `self`: counters and histograms
+    /// subtract (saturating); gauges keep their latest value (a gauge is
+    /// a level, not a flow). Names present only in `self` pass through —
+    /// a metric registered mid-window diffs against zero.
+    pub fn diff(&self, earlier: &Snapshot) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(k, &v)| {
+                    (
+                        k.clone(),
+                        v.saturating_sub(earlier.counters.get(k).copied().unwrap_or(0)),
+                    )
+                })
+                .collect(),
+            gauges: self.gauges.clone(),
+            histograms: self
+                .histograms
+                .iter()
+                .map(|(k, v)| {
+                    let base = earlier.histograms.get(k);
+                    let d = match base {
+                        Some(b) => v.diff(b),
+                        None => v.clone(),
+                    };
+                    (k.clone(), d)
+                })
+                .collect(),
+        }
+    }
+
+    /// Human-readable multi-line rendering: one `name = value` line per
+    /// counter/gauge, one summary line per histogram.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} = {v:.3}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!("{k}: {}\n", h.summary()));
+        }
+        out
+    }
+
+    /// Prometheus-style text exposition: `mscm_<name> <value>` lines,
+    /// with histogram count/sum/max/quantiles flattened to suffixed
+    /// series. Metric names are sanitized to `[a-zA-Z0-9_]`.
+    pub fn render_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        }
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("mscm_{} {v}\n", sanitize(k)));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("mscm_{} {v}\n", sanitize(k)));
+        }
+        for (k, h) in &self.histograms {
+            let k = sanitize(k);
+            out.push_str(&format!("mscm_{k}_count {}\n", h.count));
+            out.push_str(&format!("mscm_{k}_sum_us {}\n", h.sum_us));
+            out.push_str(&format!("mscm_{k}_max_us {}\n", h.max_us));
+            out.push_str(&format!("mscm_{k}_p50_ms {}\n", h.quantile_ms(0.50)));
+            out.push_str(&format!("mscm_{k}_p95_ms {}\n", h.quantile_ms(0.95)));
+            out.push_str(&format!("mscm_{k}_p99_ms {}\n", h.quantile_ms(0.99)));
+        }
+        out
+    }
+
+    /// JSON encoding (counters, gauges, histograms with their raw
+    /// buckets). Counter values ride as JSON numbers, exact below 2^53 —
+    /// far beyond any real counter here.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum_us", Json::Num(h.sum_us as f64)),
+                            ("max_us", Json::Num(h.max_us as f64)),
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    h.buckets.iter().map(|&b| Json::Num(b as f64)).collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+
+    /// Inverse of [`Snapshot::to_json`].
+    pub fn from_json(v: &Json) -> Result<Snapshot, String> {
+        fn num(v: &Json, what: &str) -> Result<f64, String> {
+            v.as_f64().ok_or_else(|| format!("{what} is not a number"))
+        }
+        fn obj<'a>(
+            v: &'a Json,
+            key: &str,
+        ) -> Result<&'a BTreeMap<String, Json>, String> {
+            match v.get(key) {
+                Some(Json::Obj(m)) => Ok(m),
+                _ => Err(format!("missing object field '{key}'")),
+            }
+        }
+        let mut snap = Snapshot::default();
+        for (k, v) in obj(v, "counters")? {
+            snap.counters.insert(k.clone(), num(v, k)? as u64);
+        }
+        for (k, v) in obj(v, "gauges")? {
+            snap.gauges.insert(k.clone(), num(v, k)?);
+        }
+        for (k, v) in obj(v, "histograms")? {
+            let buckets = v
+                .get("buckets")
+                .and_then(|b| b.as_arr())
+                .ok_or_else(|| format!("histogram '{k}' missing buckets"))?
+                .iter()
+                .map(|b| num(b, "bucket").map(|f| f as u64))
+                .collect::<Result<Vec<u64>, String>>()?;
+            snap.histograms.insert(
+                k.clone(),
+                HistogramSnapshot {
+                    buckets,
+                    count: num(v.get("count").ok_or("histogram missing count")?, "count")?
+                        as u64,
+                    sum_us: num(
+                        v.get("sum_us").ok_or("histogram missing sum_us")?,
+                        "sum_us",
+                    )? as u64,
+                    max_us: num(
+                        v.get("max_us").ok_or("histogram missing max_us")?,
+                        "max_us",
+                    )? as u64,
+                },
+            );
+        }
+        Ok(snap)
+    }
 }
 
 /// Per-round scatter-gather telemetry: one latency histogram per shard
@@ -187,6 +674,24 @@ impl ScatterMetrics {
         }
         out.push_str(&format!("join wait:      {}", self.join_wait.summary()));
         out
+    }
+
+    /// Copies this telemetry into `snap` under `prefix`: a
+    /// `{prefix}.rounds` counter, one `{prefix}.shard{s}.round`
+    /// histogram per shard, and `{prefix}.join_wait` — the bridge from
+    /// the accumulate-forever recorders into the snapshot/diff
+    /// machinery.
+    pub fn snapshot_into(&self, snap: &mut Snapshot, prefix: &str) {
+        snap.counters.insert(
+            format!("{prefix}.rounds"),
+            self.rounds.load(Ordering::Relaxed),
+        );
+        for (s, h) in self.per_shard.iter().enumerate() {
+            snap.histograms
+                .insert(format!("{prefix}.shard{s}.round"), h.snapshot());
+        }
+        snap.histograms
+            .insert(format!("{prefix}.join_wait"), self.join_wait.snapshot());
     }
 }
 
@@ -299,5 +804,166 @@ mod tests {
         assert_eq!(h.quantile_ms(0.99), 0.0);
         let e = ExactLatencies::new();
         assert_eq!(e.stats_ms(), (0.0, 0.0, 0.0, 0.0));
+    }
+
+    /// Satellite property: for every value below the 2^24 µs ceiling the
+    /// bucket mapping is monotone, the bucket's upper bound covers the
+    /// value, and each bucket's value range is contiguous (so the
+    /// bucket's own minimum is the implied lower bound, `<= us` by
+    /// construction). Exhaustive over the uneven low octaves, octave
+    /// boundaries and a seeded log-uniform sweep above.
+    #[test]
+    fn bucket_bounds_bracket_every_value() {
+        let ceiling = 1u64 << OCTAVES; // 2^24 µs
+        let check = |us: u64, last: &mut usize| {
+            let i = LatencyHistogram::bucket_index(us);
+            assert!(i >= *last, "bucket_index({us}) = {i} < {last}");
+            *last = i;
+            assert!(
+                LatencyHistogram::bucket_upper(i) >= us,
+                "bucket_upper({i}) = {} < us {us}",
+                LatencyHistogram::bucket_upper(i)
+            );
+            i
+        };
+        // Exhaustive low range: covers octave 0/1's dead sub-buckets.
+        let mut last = 0usize;
+        let mut min_of_bucket = vec![u64::MAX; (OCTAVES * SUB) as usize];
+        let mut max_of_bucket = vec![0u64; (OCTAVES * SUB) as usize];
+        for us in 0..=65_536u64 {
+            let i = check(us, &mut last);
+            min_of_bucket[i] = min_of_bucket[i].min(us);
+            max_of_bucket[i] = max_of_bucket[i].max(us);
+        }
+        // Contiguity: monotone mapping means a bucket's [min, max] range
+        // has no holes; the bucket's own minimum is its implied lower
+        // bound and is <= every value the bucket received.
+        for i in 0..min_of_bucket.len() {
+            if min_of_bucket[i] == u64::MAX {
+                continue;
+            }
+            for j in i + 1..min_of_bucket.len() {
+                if min_of_bucket[j] != u64::MAX {
+                    assert!(
+                        max_of_bucket[i] < min_of_bucket[j],
+                        "buckets {i} and {j} overlap"
+                    );
+                    break;
+                }
+            }
+        }
+        // Octave boundaries up to the ceiling.
+        let mut last = 0usize;
+        let mut prev = 0u64;
+        for oct in 1..OCTAVES {
+            for us in [(1u64 << oct) - 1, 1u64 << oct, (1u64 << oct) + 1] {
+                if us < prev || us >= ceiling {
+                    continue;
+                }
+                prev = us;
+                check(us, &mut last);
+            }
+        }
+        // Seeded log-uniform sweep: random pairs stay ordered.
+        let mut rng = crate::util::Rng::seed_from_u64(0xB0C4E7);
+        for _ in 0..5_000 {
+            let ea = rng.gen_range(0..24) as u64;
+            let eb = rng.gen_range(0..24) as u64;
+            let a = ((1u64 << ea) + rng.gen_range(0..(1usize << ea)) as u64).min(ceiling - 1);
+            let b = ((1u64 << eb) + rng.gen_range(0..(1usize << eb)) as u64).min(ceiling - 1);
+            let (lo, hi) = (a.min(b), a.max(b));
+            let mut last = LatencyHistogram::bucket_index(lo);
+            check(hi, &mut last);
+        }
+    }
+
+    #[test]
+    fn snapshot_diff_is_the_window() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let s1 = h.snapshot();
+        assert_eq!(s1.count, 100);
+        assert_eq!(s1.summary(), h.summary());
+        for i in 1..=50u64 {
+            h.record(Duration::from_millis(i));
+        }
+        let s2 = h.snapshot();
+        let w = s2.diff(&s1);
+        // The window holds exactly the 50 millisecond-scale records.
+        assert_eq!(w.count, 50);
+        assert_eq!(w.sum_us, (1..=50u64).map(|i| i * 1000).sum::<u64>());
+        assert!(w.mean_ms() > 10.0, "window mean {}", w.mean_ms());
+        assert!(w.quantile_ms(0.5) > 1.0);
+        // Empty window: diff against itself.
+        let z = s2.diff(&s2);
+        assert_eq!(z.count, 0);
+        assert!(z.buckets.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn registry_snapshot_diff_and_render() {
+        let reg = Registry::new();
+        let c = reg.counter("served");
+        let g = reg.gauge("queue_depth");
+        let h = reg.histogram("latency");
+        c.add(5);
+        g.set(2.5);
+        h.record(Duration::from_micros(300));
+        let s1 = reg.snapshot();
+        assert_eq!(s1.counters["served"], 5);
+        assert_eq!(s1.gauges["queue_depth"], 2.5);
+        assert_eq!(s1.histograms["latency"].count, 1);
+        // Handles are shared: a second lookup sees the same atomic.
+        reg.counter("served").add(2);
+        assert_eq!(c.get(), 7);
+        g.set(1.0);
+        h.record(Duration::from_micros(700));
+        let s2 = reg.snapshot();
+        let w = s2.diff(&s1);
+        assert_eq!(w.counters["served"], 2);
+        assert_eq!(w.gauges["queue_depth"], 1.0); // gauges keep latest
+        assert_eq!(w.histograms["latency"].count, 1);
+        let text = s2.render_text();
+        assert!(text.contains("served = 7"), "{text}");
+        assert!(text.contains("latency: n=2"), "{text}");
+        let prom = s2.render_prometheus();
+        assert!(prom.contains("mscm_served 7"), "{prom}");
+        assert!(prom.contains("mscm_latency_count 2"), "{prom}");
+        assert!(prom.contains("mscm_queue_depth 1"), "{prom}");
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let reg = Registry::new();
+        reg.counter("a.b").add(42);
+        reg.gauge("g").set(-1.25);
+        reg.histogram("h").record(Duration::from_micros(123));
+        let snap = reg.snapshot();
+        let j = snap.to_json();
+        let back = Snapshot::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        // Structural violations are rejected, not defaulted.
+        assert!(Snapshot::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(Snapshot::from_json(
+            &Json::parse(r#"{"counters":{},"gauges":{},"histograms":{"x":{"count":1}}}"#)
+                .unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scatter_metrics_snapshot_into_registry_namespace() {
+        let m = ScatterMetrics::new(2);
+        m.record_round(0, Duration::from_micros(100));
+        m.record_round(1, Duration::from_micros(200));
+        m.record_join_wait(Duration::from_micros(100));
+        let mut snap = Snapshot::default();
+        m.snapshot_into(&mut snap, "scatter");
+        assert_eq!(snap.counters["scatter.rounds"], 1);
+        assert_eq!(snap.histograms["scatter.shard0.round"].count, 1);
+        assert_eq!(snap.histograms["scatter.shard1.round"].count, 1);
+        assert_eq!(snap.histograms["scatter.join_wait"].count, 1);
     }
 }

@@ -1,0 +1,173 @@
+//! Opt-in per-query tracing — the structured record behind
+//! `infer --trace out.json` and the sampled `serve --trace-sample N`.
+//!
+//! A [`QueryTrace`] is produced by
+//! [`crate::inference::InferenceEngine::predict_traced`], a separate
+//! cold path that steps the beam search layer by layer with extra
+//! timers and bookkeeping. The hot paths carry **no** tracing hooks at
+//! all, so the disabled path costs nothing (pinned by
+//! `rust/tests/alloc.rs`).
+//!
+//! # JSON schema
+//!
+//! ```text
+//! {
+//!   "query_nnz": int,        // nonzeros of the query vector
+//!   "beam": int, "topk": int,
+//!   "total_ns": int,         // whole search, expand + select + rank
+//!   "rank_ns": int,          // final top-k ranking
+//!   "layers": [{
+//!     "layer": int,
+//!     "beam_width": int,     // surviving parents expanded (= chunks touched)
+//!     "candidates": int,     // children generated before the beam cut
+//!     "expand_ns": int,      // masked-matmul expansion of this layer
+//!     "select_ns": int,      // global beam selection
+//!     "methods": {"marching"|"binary"|"hash"|"dense": blocks, ...},
+//!     "storages": {"csc"|"dense-rows"|"merged": blocks, ...}
+//!   }, ...]
+//! }
+//! ```
+//!
+//! On the sharded serving paths, `serve --trace-sample N` wraps sampled
+//! requests in an outer object carrying queue/total ns and batch size
+//! plus a windowed stats diff (gather/wire/join live in the
+//! `scatter.*` / `remote.scatter.*` histograms there) — see the serve
+//! command docs in `main.rs`.
+
+use crate::util::Json;
+
+/// One layer's slice of a traced query.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerTrace {
+    /// Layer index.
+    pub layer: usize,
+    /// Surviving parents expanded — each is one sibling chunk touched.
+    pub beam_width: usize,
+    /// Children generated before the beam cut.
+    pub candidates: usize,
+    /// Expansion wall time, ns.
+    pub expand_ns: u64,
+    /// Beam-selection wall time, ns.
+    pub select_ns: u64,
+    /// Blocks per iteration method, indexed by
+    /// [`crate::inference::IterationMethod::index`].
+    pub method_blocks: [u64; 4],
+    /// Blocks per storage layout, indexed by
+    /// [`crate::sparse::ChunkStorage::index`].
+    pub storage_blocks: [u64; 3],
+}
+
+/// A full per-query trace ([`crate::inference::InferenceEngine::predict_traced`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QueryTrace {
+    /// Nonzeros of the query vector.
+    pub query_nnz: usize,
+    /// Beam width searched.
+    pub beam: usize,
+    /// Ranking depth requested.
+    pub topk: usize,
+    /// Whole-search wall time, ns.
+    pub total_ns: u64,
+    /// Final ranking wall time, ns.
+    pub rank_ns: u64,
+    /// Per-layer slices.
+    pub layers: Vec<LayerTrace>,
+}
+
+impl QueryTrace {
+    /// JSON encoding (schema in the module docs). Zero-block method /
+    /// storage entries are omitted.
+    pub fn to_json(&self) -> Json {
+        use crate::inference::IterationMethod;
+        use crate::sparse::ChunkStorage;
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let methods = Json::Obj(
+                    IterationMethod::ALL
+                        .iter()
+                        .filter(|m| l.method_blocks[m.index()] != 0)
+                        .map(|m| {
+                            (
+                                m.short().to_string(),
+                                Json::Num(l.method_blocks[m.index()] as f64),
+                            )
+                        })
+                        .collect(),
+                );
+                let storages = Json::Obj(
+                    ChunkStorage::ALL
+                        .iter()
+                        .filter(|s| l.storage_blocks[s.index()] != 0)
+                        .map(|s| {
+                            (
+                                s.short().to_string(),
+                                Json::Num(l.storage_blocks[s.index()] as f64),
+                            )
+                        })
+                        .collect(),
+                );
+                Json::obj(vec![
+                    ("layer", Json::Num(l.layer as f64)),
+                    ("beam_width", Json::Num(l.beam_width as f64)),
+                    ("candidates", Json::Num(l.candidates as f64)),
+                    ("expand_ns", Json::Num(l.expand_ns as f64)),
+                    ("select_ns", Json::Num(l.select_ns as f64)),
+                    ("methods", methods),
+                    ("storages", storages),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("query_nnz", Json::Num(self.query_nnz as f64)),
+            ("beam", Json::Num(self.beam as f64)),
+            ("topk", Json::Num(self.topk as f64)),
+            ("total_ns", Json::Num(self.total_ns as f64)),
+            ("rank_ns", Json::Num(self.rank_ns as f64)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_json_has_schema_fields() {
+        let t = QueryTrace {
+            query_nnz: 8,
+            beam: 10,
+            topk: 5,
+            total_ns: 1000,
+            rank_ns: 50,
+            layers: vec![LayerTrace {
+                layer: 0,
+                beam_width: 1,
+                candidates: 4,
+                expand_ns: 700,
+                select_ns: 20,
+                method_blocks: [0, 0, 1, 0],
+                storage_blocks: [1, 0, 0],
+            }],
+        };
+        let j = t.to_json();
+        assert_eq!(j.get("beam").unwrap().as_f64(), Some(10.0));
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 1);
+        let l0 = &layers[0];
+        assert_eq!(l0.get("beam_width").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            l0.get("methods").unwrap().get("hash").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert!(l0.get("methods").unwrap().get("dense").is_none());
+        assert_eq!(
+            l0.get("storages").unwrap().get("csc").unwrap().as_f64(),
+            Some(1.0)
+        );
+        // Round-trips through the strict parser.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

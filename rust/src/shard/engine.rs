@@ -15,11 +15,14 @@
 //! `rust/tests/alloc.rs`; across the channel hop only the mpsc node
 //! itself is allocated).
 
+use std::sync::Arc;
+
 use super::partition::{ShardModel, ShardSpec};
 use crate::inference::{
     rank_into, select_top, EngineConfig, InferenceEngine, IterationMethod, PlannerConfig,
     Prediction, Workspace,
 };
+use crate::metrics::EngineMetrics;
 use crate::sparse::{CsrMatrix, SparseVec};
 
 /// One shard hosted by the engine.
@@ -330,6 +333,26 @@ impl ShardedEngine {
     /// from this).
     pub fn shard_engine(&self, shard: usize) -> &InferenceEngine {
         &self.units[shard].engine
+    }
+
+    /// Enables per-layer engine telemetry on every shard unit (see
+    /// [`InferenceEngine::with_metrics`]); read back per shard via
+    /// [`ShardedEngine::shard_metrics`].
+    pub fn with_metrics(mut self) -> Self {
+        self.units = self
+            .units
+            .into_iter()
+            .map(|mut u| {
+                u.engine = u.engine.with_metrics();
+                u
+            })
+            .collect();
+        self
+    }
+
+    /// Shard `shard`'s engine telemetry, if enabled.
+    pub fn shard_metrics(&self, shard: usize) -> Option<&Arc<EngineMetrics>> {
+        self.units[shard].engine.metrics()
     }
 
     /// The identity of shard `shard`.

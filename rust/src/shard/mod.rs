@@ -92,6 +92,25 @@
 //! and a close. An `Expand` carries the query rows *and* the shard-local
 //! beam slice, so every round is stateless and self-contained.
 //!
+//! # Live stats over the wire
+//!
+//! Protocol v2 adds a `Stats` frame: an **empty-payload** `Stats` is a
+//! poll request, answered with a `Stats` frame carrying the host's full
+//! metrics [`Snapshot`](crate::metrics::Snapshot) — named counters
+//! (connections, expand frames, stats polls), plus the shard engine's
+//! per-layer / per-chunk-class telemetry under the `engine.` prefix when
+//! the host runs with [`ShardHostConfig::metrics`] enabled (the
+//! default). Polls are valid any time after the handshake and leave
+//! round state untouched, so a monitor can share a connection with live
+//! traffic or ride a dedicated one. [`poll_stats`] is the one-call
+//! client: connect, handshake, poll, decode. The `metrics` CLI
+//! subcommand wraps it with text/Prometheus/JSON rendering and
+//! windowed diffing ([`Snapshot::diff`](crate::metrics::Snapshot::diff)).
+//! The frame layout and its strict-parse caps are documented in
+//! [`wire`]; `rust/tests/metrics.rs` fuzzes every truncation prefix and
+//! pins that a live host keeps serving bitwise-identical results while
+//! being polled.
+//!
 //! # Failover state machine
 //!
 //! Each shard is addressable by one or more replicas; a client pins one
@@ -127,7 +146,7 @@ pub use engine::{GatherArena, ShardRound, ShardedEngine};
 pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
 pub use partition::{partition, subtree_nnz, ShardModel, ShardSpec};
 pub use remote::{
-    discover, RemoteConfig, RemoteCoordinatorConfig, RemoteGather, RemoteShardedCoordinator,
-    RemoteStats, ShardHost, ShardHostConfig,
+    discover, poll_stats, RemoteConfig, RemoteCoordinatorConfig, RemoteGather,
+    RemoteShardedCoordinator, RemoteStats, ShardHost, ShardHostConfig,
 };
 pub use serve::{ShardedCoordinator, ShardedCoordinatorConfig};

@@ -59,7 +59,7 @@ use crate::coordinator::{
 use crate::inference::{
     rank_into, select_top, EngineConfig, InferenceEngine, PlannerConfig, Prediction, Workspace,
 };
-use crate::metrics::ScatterMetrics;
+use crate::metrics::{Registry, ScatterMetrics, Snapshot};
 use crate::sparse::{CsrMatrix, SparseVec, SparseVecView};
 
 fn invalid(msg: impl Into<String>) -> io::Error {
@@ -82,6 +82,12 @@ pub struct ShardHostConfig {
     /// each reply one layer further). Costs host CPU per round; saves
     /// the gather stage every other network round trip.
     pub speculate: bool,
+    /// Record per-layer engine telemetry
+    /// ([`InferenceEngine::with_metrics`]) and answer
+    /// [`wire::MsgType::Stats`] polls with it. On by default: the cost is
+    /// one timer pair per layer round and zero steady-state allocations
+    /// (`rust/tests/alloc.rs`).
+    pub metrics: bool,
 }
 
 impl Default for ShardHostConfig {
@@ -90,6 +96,7 @@ impl Default for ShardHostConfig {
             engine: EngineConfig::default(),
             planner: PlannerConfig::default(),
             speculate: true,
+            metrics: true,
         }
     }
 }
@@ -99,6 +106,23 @@ struct HostShared {
     info: WireShardInfo,
     speculate: bool,
     stop: Arc<AtomicBool>,
+    /// Host-level counters (connections, frames served); engine telemetry
+    /// is merged in per poll by [`HostShared::snapshot`].
+    registry: Registry,
+}
+
+impl HostShared {
+    /// Point-in-time view of everything this host measures: the host
+    /// registry plus, when enabled, the engine's per-layer telemetry
+    /// under the `engine.` prefix — the payload of a
+    /// [`wire::MsgType::Stats`] reply.
+    fn snapshot(&self) -> Snapshot {
+        let mut snap = self.registry.snapshot();
+        if let Some(m) = self.engine.metrics() {
+            m.export_into(&mut snap, "engine.");
+        }
+        snap
+    }
 }
 
 /// Live-connection registry: `(connection id, severable handle)`. Conn
@@ -130,6 +154,11 @@ impl ShardHost {
         let addr = listener.local_addr()?;
         let (spec, layer_offsets, engine) =
             build_shard_engine(shard, config.engine, &config.planner);
+        let engine = if config.metrics {
+            engine.with_metrics()
+        } else {
+            engine
+        };
         let info = WireShardInfo {
             shard_id: spec.shard_id,
             num_shards: spec.num_shards,
@@ -152,6 +181,7 @@ impl ShardHost {
             info,
             speculate: config.speculate,
             stop: Arc::clone(&stop),
+            registry: Registry::new(),
         });
         let conns2 = Arc::clone(&conns);
         let accept = std::thread::Builder::new()
@@ -277,6 +307,11 @@ fn serve_conn(sh: &HostShared, stream: TcpStream) -> io::Result<()> {
     }
     wire::encode_shard_info(&mut tx, &sh.info);
     w.write_all(&tx)?;
+    // Handles resolved once per connection — the serve loop below only
+    // bumps atomics.
+    sh.registry.counter("host.connections").inc();
+    let expand_frames = sh.registry.counter("host.expand_frames");
+    let stats_polls = sh.registry.counter("host.stats_polls");
 
     let engine = &sh.engine;
     let dim = engine.model().dim;
@@ -297,9 +332,25 @@ fn serve_conn(sh: &HostShared, stream: TcpStream) -> io::Result<()> {
             }
             Err(e) => return Err(e),
         };
-        if ty != MsgType::Expand {
-            return reply_error(&mut w, &mut tx, wire::ERR_PROTOCOL, "expected Expand");
+        match ty {
+            MsgType::Expand => {}
+            // A metrics poll: reply with the registry snapshot and keep
+            // serving — polls leave all round state untouched, so a
+            // monitor may share the connection with live traffic.
+            MsgType::Stats => {
+                if let Err(e) = wire::decode_stats_poll(&rx) {
+                    return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, &e.to_string());
+                }
+                stats_polls.inc();
+                wire::encode_stats(&mut tx, &sh.snapshot());
+                w.write_all(&tx)?;
+                continue;
+            }
+            _ => {
+                return reply_error(&mut w, &mut tx, wire::ERR_PROTOCOL, "expected Expand or Stats");
+            }
         }
+        expand_frames.inc();
         let hdr = match wire::decode_expand(&rx, dim, &mut x, &mut round) {
             Ok(h) => h,
             Err(e) => return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, &e.to_string()),
@@ -452,6 +503,29 @@ impl RemoteStats {
             self.failovers.load(Ordering::Relaxed),
             self.failed_batches.load(Ordering::Relaxed),
         )
+    }
+
+    /// Adds the transport counters and scatter histograms to `snap`
+    /// under the `remote.` namespace.
+    pub fn snapshot_into(&self, snap: &mut Snapshot) {
+        let counters = [
+            ("remote.rounds", &self.rounds),
+            ("remote.spec_rounds_saved", &self.spec_rounds_saved),
+            ("remote.spec_misses", &self.spec_misses),
+            ("remote.failovers", &self.failovers),
+            ("remote.failed_batches", &self.failed_batches),
+        ];
+        for (name, c) in counters {
+            snap.counters.insert(name.to_string(), c.load(Ordering::Relaxed));
+        }
+        self.scatter.snapshot_into(snap, "remote.scatter");
+    }
+
+    /// Point-in-time [`Snapshot`] of the transport statistics.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        self.snapshot_into(&mut snap);
+        snap
     }
 }
 
@@ -646,6 +720,22 @@ pub fn discover(addrs: &[SocketAddr], cfg: &RemoteConfig) -> io::Result<Vec<Vec<
     Ok(groups)
 }
 
+/// Polls one shard host's live metrics over a fresh connection
+/// (handshake + one [`wire::MsgType::Stats`] round) — the `metrics` CLI
+/// subcommand's transport. Needs no partition: any single host answers
+/// for itself.
+pub fn poll_stats(addr: SocketAddr, cfg: &RemoteConfig) -> io::Result<Snapshot> {
+    let (mut conn, _) = RemoteShard::connect_addr(addr, cfg)?;
+    let mut buf = Vec::new();
+    wire::encode_stats_poll(&mut buf);
+    conn.w.write_all(&buf)?;
+    match wire::read_frame(&mut conn.r, &mut buf)? {
+        MsgType::Stats => wire::decode_stats(&buf),
+        MsgType::Error => Err(wire::error_from_frame(&buf)),
+        ty => Err(invalid(format!("expected Stats, got {ty:?}"))),
+    }
+}
+
 /// The remote gather stage: drives N shard hosts through the
 /// layer-synchronized protocol exactly like the in-process
 /// [`ShardedEngine`] drives its units, with replica failover and
@@ -734,6 +824,19 @@ impl RemoteGather {
     /// Shared transport statistics.
     pub fn stats(&self) -> &Arc<RemoteStats> {
         &self.stats
+    }
+
+    /// Polls shard `shard`'s live metrics over the
+    /// [`wire::MsgType::Stats`] frame, with the same failover the rounds
+    /// use. The reply carries the host's registry plus its engine
+    /// telemetry under the `engine.` prefix.
+    pub fn poll_shard_stats(&mut self, shard: usize) -> io::Result<Snapshot> {
+        let sh = &mut self.shards[shard];
+        wire::encode_stats_poll(&mut sh.tx);
+        match sh.round_trip(&self.cfg, &self.stats)? {
+            MsgType::Stats => wire::decode_stats(&sh.rx),
+            ty => Err(invalid(format!("shard {shard}: expected Stats, got {ty:?}"))),
+        }
     }
 
     /// Per-query results of the last completed batch.
@@ -1127,6 +1230,15 @@ impl RemoteShardedCoordinator {
     /// round latency).
     pub fn remote_stats(&self) -> &Arc<RemoteStats> {
         &self.inner.remote_stats
+    }
+
+    /// Point-in-time [`Snapshot`] joining the front-door coordinator
+    /// stats with the transport counters — diff two of these for
+    /// windowed serving stats.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = self.inner.stats.snapshot();
+        self.inner.remote_stats.snapshot_into(&mut snap);
+        snap
     }
 
     /// Feature dimension `d` announced by the hosts.

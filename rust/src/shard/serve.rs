@@ -216,6 +216,20 @@ impl ShardedCoordinator {
         &self.inner.stats
     }
 
+    /// Point-in-time [`crate::metrics::Snapshot`] of the serving stats
+    /// (scatter telemetry included) plus, when the sharded engine was
+    /// built [`ShardedEngine::with_metrics`], each shard's per-layer
+    /// telemetry under the `shard{s}.engine.` prefix.
+    pub fn snapshot(&self) -> crate::metrics::Snapshot {
+        let mut snap = self.inner.stats.snapshot();
+        for s in 0..self.inner.engine.num_shards() {
+            if let Some(m) = self.inner.engine.shard_metrics(s) {
+                m.export_into(&mut snap, &format!("shard{s}.engine."));
+            }
+        }
+        snap
+    }
+
     /// The engine being served.
     pub fn engine(&self) -> &Arc<ShardedEngine> {
         &self.inner.engine

@@ -29,7 +29,25 @@
 //! | `ShardInfo` | host → client | shard identity + per-layer topology |
 //! | `Expand`    | client → host | one layer round: queries + beam slices |
 //! | `Cands`     | host → client | per-query candidates (+ speculation) |
+//! | `Stats`     | both          | empty = poll request; reply = snapshot (v2) |
 //! | `Error`     | host → client | code + message, then the host closes |
+//!
+//! A `Stats` frame with an **empty** payload is a poll: the host replies
+//! with a `Stats` frame carrying a serialized [`crate::metrics::Snapshot`]
+//! of its registry (engine telemetry included) —
+//!
+//! ```text
+//! u32 n_counters   n × { str name; u64 value }
+//! u32 n_gauges     n × { str name; u64 f64_bits }
+//! u32 n_histograms n × { str name; u64 count; u64 sum_us; u64 max_us;
+//!                        u32 n_buckets; n_buckets × u64 }
+//! str = u32 len + that many UTF-8 bytes
+//! ```
+//!
+//! decoded as strictly as every other frame (list lengths pre-checked,
+//! names bounded, UTF-8 validated, no trailing bytes). Polls are valid at
+//! any point after the handshake and leave round state untouched, so a
+//! monitor can share a connection with live traffic.
 //!
 //! An `Expand` carries *everything* the round needs — the query rows and
 //! the shard-local beam slice — so rounds are stateless: a round that
@@ -47,12 +65,14 @@
 use std::io::{self, Read};
 
 use super::engine::ShardRound;
+use crate::metrics::{HistogramSnapshot, Snapshot};
 use crate::sparse::CsrMatrix;
 
 /// Frame magic ("MXWP" as a little-endian u32).
 pub const WIRE_MAGIC: u32 = 0x4d58_5750;
-/// Protocol version; peers must match exactly.
-pub const WIRE_VERSION: u16 = 1;
+/// Protocol version; peers must match exactly. v2 added the `Stats`
+/// poll/reply frame.
+pub const WIRE_VERSION: u16 = 2;
 /// Frame header length in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Maximum accepted payload (guards against garbage length fields).
@@ -76,6 +96,8 @@ pub enum MsgType {
     Expand,
     /// Round reply: per-query candidates, optionally with speculation.
     Cands,
+    /// Metrics poll (empty payload) or its snapshot reply.
+    Stats,
     /// Protocol failure; the sender closes after this frame.
     Error,
 }
@@ -88,6 +110,7 @@ impl MsgType {
             MsgType::Expand => 3,
             MsgType::Cands => 4,
             MsgType::Error => 5,
+            MsgType::Stats => 6,
         }
     }
 
@@ -98,6 +121,7 @@ impl MsgType {
             3 => MsgType::Expand,
             4 => MsgType::Cands,
             5 => MsgType::Error,
+            6 => MsgType::Stats,
             _ => return None,
         })
     }
@@ -663,4 +687,132 @@ pub fn error_from_frame(payload: &[u8]) -> io::Error {
         Ok((code, msg)) => invalid(format!("shard host error {code}: {msg}")),
         Err(e) => e,
     }
+}
+
+/// Most series a [`MsgType::Stats`] reply may carry per kind — far above
+/// any real registry, low enough that a garbage count fails fast.
+const MAX_STATS_SERIES: usize = 65_536;
+/// Longest accepted metric name.
+const MAX_STATS_NAME: usize = 256;
+/// Most histogram buckets (the in-crate histogram has 96).
+const MAX_STATS_BUCKETS: usize = 4_096;
+
+fn put_name(buf: &mut Vec<u8>, name: &str) {
+    debug_assert!(name.len() <= MAX_STATS_NAME, "metric name over wire cap");
+    let bytes = name.as_bytes();
+    put_u32(buf, bytes.len() as u32);
+    buf.extend_from_slice(bytes);
+}
+
+impl<'a> Rd<'a> {
+    fn name(&mut self) -> io::Result<String> {
+        let len = self.u32()? as usize;
+        if len > MAX_STATS_NAME {
+            return Err(invalid(format!("metric name of {len} bytes too long")));
+        }
+        let bytes = self.take(len)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_owned)
+            .map_err(|_| invalid("metric name is not UTF-8"))
+    }
+
+    fn series_count(&mut self) -> io::Result<usize> {
+        let n = self.u32()? as usize;
+        if n > MAX_STATS_SERIES {
+            return Err(invalid(format!("{n} stats series exceeds wire cap")));
+        }
+        Ok(n)
+    }
+}
+
+/// Encodes a metrics poll: a [`MsgType::Stats`] frame with an empty
+/// payload.
+pub fn encode_stats_poll(buf: &mut Vec<u8>) {
+    begin_frame(buf, MsgType::Stats);
+    end_frame(buf);
+}
+
+/// Validates a [`MsgType::Stats`] poll payload (must be empty — a
+/// non-empty payload at the host means the peer sent a snapshot where a
+/// poll belongs).
+pub fn decode_stats_poll(payload: &[u8]) -> io::Result<()> {
+    if !payload.is_empty() {
+        return Err(invalid("stats poll must have an empty payload"));
+    }
+    Ok(())
+}
+
+/// Encodes a host's snapshot reply (layout in the module docs).
+pub fn encode_stats(buf: &mut Vec<u8>, snap: &Snapshot) {
+    begin_frame(buf, MsgType::Stats);
+    put_u32(buf, snap.counters.len() as u32);
+    for (name, &v) in &snap.counters {
+        put_name(buf, name);
+        put_u64(buf, v);
+    }
+    put_u32(buf, snap.gauges.len() as u32);
+    for (name, &v) in &snap.gauges {
+        put_name(buf, name);
+        put_u64(buf, v.to_bits());
+    }
+    put_u32(buf, snap.histograms.len() as u32);
+    for (name, h) in &snap.histograms {
+        put_name(buf, name);
+        put_u64(buf, h.count);
+        put_u64(buf, h.sum_us);
+        put_u64(buf, h.max_us);
+        put_u32(buf, h.buckets.len() as u32);
+        for &b in &h.buckets {
+            put_u64(buf, b);
+        }
+    }
+    end_frame(buf);
+}
+
+/// Decodes a [`MsgType::Stats`] snapshot reply.
+pub fn decode_stats(payload: &[u8]) -> io::Result<Snapshot> {
+    let mut rd = Rd::new(payload);
+    let mut snap = Snapshot::default();
+    let nc = rd.series_count()?;
+    rd.need(nc * 12)?;
+    for _ in 0..nc {
+        let name = rd.name()?;
+        let v = rd.u64()?;
+        snap.counters.insert(name, v);
+    }
+    let ng = rd.series_count()?;
+    rd.need(ng * 12)?;
+    for _ in 0..ng {
+        let name = rd.name()?;
+        let v = f64::from_bits(rd.u64()?);
+        snap.gauges.insert(name, v);
+    }
+    let nh = rd.series_count()?;
+    rd.need(nh * 32)?;
+    for _ in 0..nh {
+        let name = rd.name()?;
+        let count = rd.u64()?;
+        let sum_us = rd.u64()?;
+        let max_us = rd.u64()?;
+        let nb = rd.u32()? as usize;
+        if nb > MAX_STATS_BUCKETS {
+            return Err(invalid(format!("{nb} histogram buckets exceeds wire cap")));
+        }
+        rd.need(nb * 8)?;
+        let mut buckets = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            buckets.push(rd.u64()?);
+        }
+        snap.histograms.insert(
+            name,
+            HistogramSnapshot {
+                buckets,
+                count,
+                sum_us,
+                max_us,
+            },
+        );
+    }
+    rd.done()?;
+    Ok(snap)
 }

@@ -87,19 +87,58 @@ pub fn black_box<T>(x: T) -> T {
 ///
 /// Rows are `(label, ns/op, batch size, config)` plus free-form extra
 /// fields; [`BenchReport::write`] emits
-/// `{"bench": <name>, "results": [...]}` so cross-PR tooling can diff
-/// the perf trajectory without scraping stdout.
+/// `{"bench": <name>, "meta": {...}, "results": [...]}` so cross-PR
+/// tooling can diff the perf trajectory without scraping stdout. The
+/// `meta` object captures the run environment — git sha, hardware
+/// thread count — plus any caller-set keys ([`BenchReport::set_meta`],
+/// e.g. the engine/planner config under measurement), so two reports
+/// are comparable without reconstructing how they were produced.
+/// [`BenchReport::validate`] is the schema contract both sides agree
+/// on, pinned by the round-trip test below.
 pub struct BenchReport {
     name: String,
+    meta: Vec<(String, Json)>,
     entries: Vec<Json>,
 }
 
+/// The commit the binary was built from: `git rev-parse HEAD` in the
+/// working directory at run time, `"unknown"` outside a git checkout.
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 impl BenchReport {
-    /// An empty report for bench binary `name`.
+    /// An empty report for bench binary `name`, with the run metadata
+    /// (git sha, hardware thread count) captured immediately.
     pub fn new(name: &str) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
         Self {
             name: name.to_string(),
+            meta: vec![
+                ("git_sha".to_string(), Json::Str(git_sha())),
+                ("threads".to_string(), Json::Num(threads as f64)),
+            ],
             entries: Vec::new(),
+        }
+    }
+
+    /// Sets (or replaces) one run-metadata key — e.g. the engine/planner
+    /// configuration the whole report was measured under.
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        if let Some(slot) = self.meta.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.meta.push((key.to_string(), value));
         }
     }
 
@@ -175,10 +214,57 @@ impl BenchReport {
     pub fn write(&self, path: &Path) -> std::io::Result<()> {
         let payload = Json::obj(vec![
             ("bench", Json::Str(self.name.clone())),
+            ("meta", Json::Obj(self.meta.iter().cloned().collect())),
             ("results", Json::Arr(self.entries.clone())),
         ]);
+        debug_assert!(
+            Self::validate(&payload).is_ok(),
+            "emitted report violates its own schema: {:?}",
+            Self::validate(&payload)
+        );
         std::fs::write(path, payload.to_string())?;
         eprintln!("[bench] wrote {} ({} rows)", path.display(), self.entries.len());
+        Ok(())
+    }
+
+    /// Schema sanity for an emitted report: `bench` is a string, `meta`
+    /// carries `git_sha` (string) and `threads` (number ≥ 1), and every
+    /// `results` row has the four required fields with the right types.
+    /// Consumers (cross-PR diff tooling) can call this before trusting a
+    /// file; [`BenchReport::write`] checks it in debug builds.
+    pub fn validate(report: &Json) -> Result<(), String> {
+        report
+            .get("bench")
+            .and_then(|b| b.as_str())
+            .ok_or("missing string field 'bench'")?;
+        let meta = report.get("meta").ok_or("missing 'meta' object")?;
+        meta.get("git_sha")
+            .and_then(|s| s.as_str())
+            .ok_or("meta missing string 'git_sha'")?;
+        let threads = meta
+            .get("threads")
+            .and_then(|t| t.as_f64())
+            .ok_or("meta missing numeric 'threads'")?;
+        if threads < 1.0 {
+            return Err(format!("meta.threads {threads} < 1"));
+        }
+        let rows = report
+            .get("results")
+            .and_then(|r| r.as_arr())
+            .ok_or("missing array field 'results'")?;
+        for (i, row) in rows.iter().enumerate() {
+            row.get("label")
+                .and_then(|v| v.as_str())
+                .ok_or(format!("row {i}: missing string 'label'"))?;
+            row.get("config")
+                .and_then(|v| v.as_str())
+                .ok_or(format!("row {i}: missing string 'config'"))?;
+            for key in ["ns_per_op", "batch_size"] {
+                row.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or(format!("row {i}: missing numeric '{key}'"))?;
+            }
+        }
         Ok(())
     }
 }
@@ -199,6 +285,7 @@ mod tests {
     #[test]
     fn report_round_trips_and_honours_json_flag() {
         let mut r = BenchReport::new("unit");
+        r.set_meta("engine", Json::Str("mscm/auto".to_string()));
         r.record("row-a", 123.5, 32, "MSCM hash");
         r.record_extra("row-b", 7.0, 1, "baseline", vec![("shards", Json::Num(4.0))]);
         let dir = crate::util::temp_dir("bench-report");
@@ -206,10 +293,23 @@ mod tests {
         r.write(&path).unwrap();
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit"));
+        // Every emitted report satisfies the schema contract.
+        BenchReport::validate(&parsed).unwrap();
+        let meta = parsed.get("meta").unwrap();
+        assert!(meta.get("git_sha").unwrap().as_str().is_some());
+        assert!(meta.get("threads").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(meta.get("engine").unwrap().as_str(), Some("mscm/auto"));
         let rows = parsed.get("results").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].get("ns_per_op").unwrap().as_f64(), Some(123.5));
         assert_eq!(rows[1].get("shards").unwrap().as_f64(), Some(4.0));
+        // Structural violations are rejected with a reason.
+        assert!(BenchReport::validate(&Json::parse("{}").unwrap()).is_err());
+        assert!(BenchReport::validate(
+            &Json::parse(r#"{"bench":"x","meta":{"git_sha":"s","threads":4},"results":[{}]}"#)
+                .unwrap()
+        )
+        .is_err());
         std::fs::remove_dir_all(dir).ok();
 
         let args = vec!["bin".to_string(), "--json".to_string(), "custom.json".to_string()];

@@ -11,7 +11,11 @@
 //!   (exercises the counting-sort chunk ordering, `n > 1`),
 //! - the in-process sharded layer-sync rounds
 //!   (`ShardedEngine::predict_with` / `predict_batch_into` against a
-//!   pooled `GatherArena`).
+//!   pooled `GatherArena`),
+//! - all of the above with engine telemetry enabled (`with_metrics`):
+//!   the per-layer timing + plan-drift attribution must be free of
+//!   steady-state allocations, and the disabled trace path has no hook
+//!   on the hot path at all.
 //!
 //! The full coordinator round trip (`query_blocking`) cannot be zero —
 //! each request inherently allocates its reply channel, queue nodes and
@@ -215,6 +219,68 @@ fn steady_state_hot_paths_do_not_allocate() {
             batch_delta, 0,
             "sharded batch rounds allocated {batch_delta}x after warmup ({})",
             cfg.label()
+        );
+    }
+
+    // --- metrics enabled: observability must not bend the zero bar ---
+    // `EngineMetrics::record_layer` is one `Instant` pair per layer
+    // slice plus stack accumulation flushed as relaxed atomic adds; the
+    // attribution tables are frozen at `with_metrics` time. Per-query
+    // tracing (`predict_traced`) is a separate opt-in cold path — with
+    // tracing disabled there is no hook on the hot path at all, so the
+    // metered runs below are the entire observability surface to bound.
+    {
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+        let engine = InferenceEngine::new(model.clone(), cfg).with_metrics();
+        let mut ws = engine.workspace();
+        let mut out: Vec<Vec<Prediction>> = vec![Vec::new(); x.rows];
+        for _ in 0..2 {
+            for q in &queries {
+                std::hint::black_box(engine.predict_with(q, 10, 5, &mut ws));
+            }
+            engine.predict_range(&x, 0, x.rows, 10, 5, &mut ws, &mut out);
+        }
+        let before = allocs();
+        for q in &queries {
+            std::hint::black_box(engine.predict_with(q, 10, 5, &mut ws));
+        }
+        engine.predict_range(&x, 0, x.rows, 10, 5, &mut ws, &mut out);
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "metered engine hot path allocated {delta}x after warmup"
+        );
+        // The telemetry actually recorded through the measured window.
+        let m = engine.metrics().expect("metrics attached");
+        assert!(m.total_ns() > 0, "metered run recorded no layer time");
+        let drift = m.plan_drift();
+        assert!(
+            drift.cells.iter().any(|c| c.blocks > 0),
+            "drift join saw no blocks"
+        );
+
+        let sharded = ShardedEngine::from_model(&model, 4, cfg).with_metrics();
+        let mut wss = sharded.workspaces();
+        let mut arena = GatherArena::new();
+        for _ in 0..2 {
+            for q in &queries {
+                std::hint::black_box(sharded.predict_with(q, 10, 5, &mut wss, &mut arena));
+            }
+            sharded.predict_batch_into(&x, 10, 5, false, &mut wss, &mut arena);
+        }
+        let before = allocs();
+        for q in &queries {
+            std::hint::black_box(sharded.predict_with(q, 10, 5, &mut wss, &mut arena));
+        }
+        sharded.predict_batch_into(&x, 10, 5, false, &mut wss, &mut arena);
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "metered sharded rounds allocated {delta}x after warmup"
+        );
+        assert!(
+            (0..4).all(|s| sharded.shard_metrics(s).is_some_and(|m| m.total_ns() > 0)),
+            "a metered shard recorded no layer time"
         );
     }
 

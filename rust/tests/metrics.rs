@@ -1,0 +1,274 @@
+//! Integration tests for the serving observability layer: the engine
+//! drift join measures real work without disturbing results, the wire
+//! `Stats` frame round-trips and rejects every truncation prefix (like
+//! the other frames in `tests/wire.rs`), and a **live** `ShardHost` on
+//! loopback answers stats polls mid-traffic while its serving results
+//! stay bitwise identical to the unsharded reference engine.
+
+use std::io::{Cursor, Write};
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::metrics::{Registry, ScatterMetrics, Snapshot};
+use mscm_xmr::shard::wire::{self, MsgType};
+use mscm_xmr::shard::{
+    partition, poll_stats, RemoteConfig, RemoteGather, ShardHost, ShardHostConfig,
+};
+use mscm_xmr::tree::XmrModel;
+
+fn spec(dim: usize, labels: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "metrics-prop",
+        dim,
+        num_labels: labels,
+        paper_dim: dim,
+        paper_labels: 0,
+        query_nnz: 10,
+        col_nnz: 6,
+        sibling_overlap: 0.6,
+        zipf_theta: 1.0,
+    }
+}
+
+/// One frame's bytes → (type, payload) through the real reader.
+fn frame_payload(bytes: &[u8]) -> std::io::Result<(MsgType, Vec<u8>)> {
+    let mut payload = Vec::new();
+    let ty = wire::read_frame(&mut Cursor::new(bytes), &mut payload)?;
+    Ok((ty, payload))
+}
+
+/// Spawns one loopback host per shard of an `s`-way partition with the
+/// given host config; returns the hosts plus single-replica groups.
+fn spawn_hosts(
+    model: &XmrModel,
+    s: usize,
+    config: ShardHostConfig,
+) -> (Vec<ShardHost>, Vec<Vec<SocketAddr>>) {
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(model, s) {
+        let host =
+            ShardHost::spawn(shard, config.clone(), "127.0.0.1:0").expect("spawn shard host");
+        groups.push(vec![host.local_addr()]);
+        hosts.push(host);
+    }
+    (hosts, groups)
+}
+
+/// The acceptance property for the drift join: a metered engine serves
+/// bitwise-identical predictions, and after a live run the join carries
+/// measured ns *and* cost-model-predicted ns for every touched class.
+#[test]
+fn drift_join_from_a_live_run_measures_and_predicts() {
+    let sp = spec(96, 256);
+    let model = synth_model(&sp, 4, 0xD81F7);
+    let queries = synth_queries(&sp, 12, 0x5EED);
+    for cfg in [
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto),
+        EngineConfig::new(MatmulAlgo::Baseline, IterationMethod::Hash),
+    ] {
+        let plain = InferenceEngine::new(model.clone(), cfg);
+        let metered = InferenceEngine::new(model.clone(), cfg).with_metrics();
+        let mut ws = metered.workspace();
+        for qi in 0..queries.rows {
+            let q = queries.row_owned(qi);
+            assert_eq!(
+                metered.predict_with(&q, 8, 5, &mut ws),
+                plain.predict(&q, 8, 5),
+                "{} q={qi}: metrics changed results",
+                cfg.label()
+            );
+        }
+        let m = metered.metrics().expect("metrics attached");
+        let drift = m.plan_drift();
+        assert_eq!(drift.layers.len(), m.depth());
+        assert!(drift.total_measured_ns() > 0, "no measured time recorded");
+        assert!(drift.total_predicted_ns() > 0, "no predicted cost joined");
+        assert!(drift.ratio() > 0.0);
+        assert!(!drift.cells.is_empty() && drift.cells.iter().all(|c| c.blocks > 0));
+        // Every layer actually expanded once per query.
+        for l in &drift.layers {
+            assert_eq!(l.calls, queries.rows as u64, "layer {}", l.layer);
+        }
+        let j = drift.to_json();
+        assert_eq!(
+            j.get("layers").unwrap().as_arr().unwrap().len(),
+            drift.layers.len()
+        );
+        assert!(drift.summary().contains("plan drift"));
+        // The raw accumulators export under a namespace prefix.
+        let mut snap = Snapshot::default();
+        m.export_into(&mut snap, "engine.");
+        assert!(snap.counters.get("engine.layer0.ns").copied().unwrap_or(0) > 0);
+        assert_eq!(
+            snap.counters["engine.layer0.calls"],
+            queries.rows as u64
+        );
+    }
+}
+
+#[test]
+fn stats_frames_round_trip_and_reject_every_truncation() {
+    // A representative snapshot: counters, a gauge, a direct histogram
+    // and scatter telemetry bridged in under a prefix.
+    let reg = Registry::new();
+    reg.counter("host.expand_frames").add(42);
+    reg.counter("remote.rounds").add(7);
+    reg.gauge("coordinator.mean_batch").set(3.25);
+    let h = reg.histogram("latency");
+    h.record(Duration::from_micros(250));
+    h.record(Duration::from_millis(3));
+    let sc = ScatterMetrics::new(2);
+    sc.record_round(0, Duration::from_micros(90));
+    sc.record_round(1, Duration::from_micros(410));
+    sc.record_join_wait(Duration::from_micros(320));
+    let mut snap = reg.snapshot();
+    sc.snapshot_into(&mut snap, "scatter");
+
+    let mut buf = Vec::new();
+    wire::encode_stats(&mut buf, &snap);
+    let (ty, payload) = frame_payload(&buf).expect("valid frame");
+    assert_eq!(ty, MsgType::Stats);
+    let back = wire::decode_stats(&payload).expect("decode");
+    assert_eq!(back, snap, "snapshot round trip");
+
+    // Poll frames carry an empty payload by contract.
+    let mut poll = Vec::new();
+    wire::encode_stats_poll(&mut poll);
+    let (ty, p) = frame_payload(&poll).unwrap();
+    assert_eq!(ty, MsgType::Stats);
+    assert!(p.is_empty());
+    wire::decode_stats_poll(&p).expect("empty poll accepted");
+    assert!(wire::decode_stats_poll(&payload).is_err());
+
+    // Every strict prefix of the frame fails at the reader...
+    for cut in 0..buf.len() {
+        let err = frame_payload(&buf[..cut]).expect_err(&format!("prefix of {cut} bytes"));
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut {cut}");
+    }
+    // ...and every strict payload prefix fails structurally (clean
+    // error, no panic, no partial acceptance).
+    for cut in 0..payload.len() {
+        let err = wire::decode_stats(&payload[..cut])
+            .expect_err(&format!("payload prefix of {cut} bytes"));
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "cut {cut}");
+    }
+    // Trailing garbage after a well-formed payload is rejected too.
+    let mut trailing = payload.clone();
+    trailing.push(0);
+    assert!(wire::decode_stats(&trailing).is_err());
+}
+
+/// The acceptance property for live export: a running `ShardHost` is
+/// pollable over the `Stats` frame mid-traffic — on the same connection
+/// the rounds ride on — and serving results stay bitwise identical to
+/// the unsharded reference the whole time.
+#[test]
+fn live_host_answers_stats_polls_while_serving_bitwise_results() {
+    let sp = spec(96, 256);
+    let model = synth_model(&sp, 4, 0x11FE);
+    let queries = synth_queries(&sp, 8, 0xBEEF);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+    let reference = InferenceEngine::new(model.clone(), cfg);
+    let (hosts, groups) = spawn_hosts(
+        &model,
+        2,
+        ShardHostConfig {
+            engine: cfg,
+            ..Default::default() // metrics on by default
+        },
+    );
+    let mut g = RemoteGather::connect_groups(&groups, RemoteConfig::default(), None)
+        .expect("connect remote partition");
+    let mut last_expands = 0u64;
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        let want = reference.predict(&q, 6, 5);
+        let got = g.predict(&q, 6, 5).expect("remote predict");
+        assert_eq!(got, want, "q={qi}: results diverged while polling");
+        let snap = g.poll_shard_stats(0).expect("mid-traffic stats poll");
+        let expands = snap.counters["host.expand_frames"];
+        assert!(
+            expands > last_expands,
+            "q={qi}: expand counter did not advance ({expands} <= {last_expands})"
+        );
+        last_expands = expands;
+        assert!(snap.counters["host.stats_polls"] >= 1);
+        // The engine telemetry travels the wire under the engine. prefix.
+        assert!(snap.counters.contains_key("engine.layer0.ns"));
+        assert!(
+            snap.counters
+                .iter()
+                .any(|(k, &v)| k.starts_with("engine.layer") && k.ends_with(".ns") && v > 0),
+            "q={qi}: no layer recorded time on shard 0"
+        );
+    }
+    // The one-call client path: fresh connection, handshake, poll.
+    let snap = poll_stats(groups[1][0], &RemoteConfig::default()).expect("poll_stats");
+    assert!(snap.counters.contains_key("host.connections"));
+    assert!(snap.counters.keys().any(|k| k.starts_with("engine.layer")));
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// `metrics: false` keeps a host pollable (operational counters only)
+/// but exports no engine series — the opt-out leaves the hot path with
+/// no telemetry attached at all.
+#[test]
+fn metrics_disabled_host_polls_without_engine_series() {
+    let sp = spec(64, 81);
+    let model = synth_model(&sp, 3, 0xB0B1);
+    let (hosts, groups) = spawn_hosts(
+        &model,
+        1,
+        ShardHostConfig {
+            metrics: false,
+            ..Default::default()
+        },
+    );
+    let snap = poll_stats(groups[0][0], &RemoteConfig::default()).expect("poll");
+    assert!(snap.counters.contains_key("host.connections"));
+    assert!(
+        snap.counters.keys().all(|k| !k.starts_with("engine.")),
+        "engine series exported with metrics disabled"
+    );
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// A `Stats` frame with a non-empty payload is not a valid poll: the
+/// host answers with a malformed-frame `Error` instead of guessing.
+#[test]
+fn malformed_stats_poll_answered_with_error_frame() {
+    let sp = spec(64, 81);
+    let model = synth_model(&sp, 3, 0xB0B2);
+    let (hosts, groups) = spawn_hosts(&model, 1, ShardHostConfig::default());
+
+    let mut stream = std::net::TcpStream::connect(groups[0][0]).unwrap();
+    let mut r = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut buf = Vec::new();
+    let mut payload = Vec::new();
+    wire::encode_hello(&mut buf);
+    stream.write_all(&buf).unwrap();
+    assert_eq!(
+        wire::read_frame(&mut r, &mut payload).unwrap(),
+        MsgType::ShardInfo
+    );
+    // A full snapshot body where the empty poll belongs.
+    wire::encode_stats(&mut buf, &Snapshot::default());
+    stream.write_all(&buf).unwrap();
+    assert_eq!(
+        wire::read_frame(&mut r, &mut payload).unwrap(),
+        MsgType::Error
+    );
+    let (code, msg) = wire::decode_error(&payload).unwrap();
+    assert_eq!(code, wire::ERR_MALFORMED);
+    assert!(msg.contains("empty"), "{msg}");
+    for h in hosts {
+        h.shutdown();
+    }
+}
