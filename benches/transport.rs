@@ -9,11 +9,13 @@
 //! `cargo bench --bench transport [-- --labels 20000 --dim 20000 --queries 256]`
 
 use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
 use mscm_xmr::data::enterprise::EnterpriseSpec;
 use mscm_xmr::inference::{EngineConfig, IterationMethod, MatmulAlgo};
 use mscm_xmr::shard::{
-    partition, GatherArena, RemoteConfig, RemoteGather, ShardHost, ShardHostConfig, ShardedEngine,
+    partition, FaultPlan, GatherArena, RemoteConfig, RemoteGather, ShardHost, ShardHostConfig,
+    ShardedEngine,
 };
 use mscm_xmr::util::{bench_ms, BenchReport, Json};
 
@@ -136,6 +138,143 @@ fn main() {
         }
         for h in hosts {
             h.shutdown();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Failover recovery: 2 replicas of a 1-shard partition, kill one
+    // mid-stream, and time the first query that actually absorbs the
+    // dead replica (timeout + reconnect + byte-identical re-send) — the
+    // serving cost of losing a replica.
+    // ------------------------------------------------------------------
+    {
+        let host_cfg = ShardHostConfig {
+            engine: cfg,
+            ..Default::default()
+        };
+        let shards = partition(&model, 1);
+        let a = ShardHost::spawn(shards[0].clone(), host_cfg.clone(), "127.0.0.1:0").unwrap();
+        let b = ShardHost::spawn(
+            shards.into_iter().next().unwrap(),
+            host_cfg.clone(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut g = RemoteGather::connect_groups(
+            &[vec![a.local_addr(), b.local_addr()]],
+            RemoteConfig {
+                round_timeout: Duration::from_millis(200),
+                ..Default::default()
+            },
+            None,
+        )
+        .expect("connect replicated shard");
+        for q in queries.iter().take(8) {
+            g.predict_with(q, beam, 10).expect("warm");
+        }
+        a.kill();
+        let before = g.stats().failovers.load(Ordering::Relaxed);
+        let mut recovery_ms = 0.0f64;
+        for q in &queries {
+            let t0 = Instant::now();
+            g.predict_with(q, beam, 10).expect("query must survive the kill");
+            if g.stats().failovers.load(Ordering::Relaxed) > before {
+                // This is the query whose round hit the dead replica and
+                // failed over: its latency is time-to-first-good-reply.
+                recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+                break;
+            }
+        }
+        println!("failover: time-to-first-good-reply after replica kill = {recovery_ms:.3} ms");
+        report.record_extra(
+            "failover-first-good-reply",
+            recovery_ms * 1e6,
+            1,
+            &cfg.label(),
+            vec![("shards", Json::Num(1.0)), ("replicas", Json::Num(2.0))],
+        );
+        b.shutdown();
+    }
+
+    // ------------------------------------------------------------------
+    // Hedged vs unhedged tail latency under an injected slow replica:
+    // one replica is frozen mid-stream (connected but mute — the
+    // pathological slow replica); unhedged, every round that lands on it
+    // eats the full round timeout before failing over; hedged, the read
+    // is abandoned at the shard's observed p99 and re-issued. Results
+    // are bit-identical either way — only the tail moves.
+    // ------------------------------------------------------------------
+    {
+        let host_cfg = ShardHostConfig {
+            engine: cfg,
+            ..Default::default()
+        };
+        let round_timeout = Duration::from_millis(100);
+        println!(
+            "{:>10} {:>12} {:>12} {:>10}",
+            "hedging", "p99 ms", "mean ms", "hedges"
+        );
+        for hedge in [false, true] {
+            let shards = partition(&model, 1);
+            // The pause/resume latch rides a no-op fault plan.
+            let a = ShardHost::with_faults(
+                shards[0].clone(),
+                host_cfg.clone(),
+                "127.0.0.1:0",
+                FaultPlan::default(),
+            )
+            .unwrap();
+            let b = ShardHost::spawn(
+                shards.into_iter().next().unwrap(),
+                host_cfg.clone(),
+                "127.0.0.1:0",
+            )
+            .unwrap();
+            let mut g = RemoteGather::connect_groups(
+                &[vec![a.local_addr(), b.local_addr()]],
+                RemoteConfig {
+                    round_timeout,
+                    hedge,
+                    ..Default::default()
+                },
+                None,
+            )
+            .expect("connect replicated shard");
+            // Warm the round histogram past the hedge activation floor.
+            let mut qi = 0usize;
+            while g.stats().scatter.shard(0).count() < 80 {
+                g.predict_with(&queries[qi % queries.len()], beam, 10).expect("warm");
+                qi += 1;
+            }
+            a.pause();
+            let mut lat_ms: Vec<f64> = Vec::with_capacity(queries.len());
+            for q in &queries {
+                let t0 = Instant::now();
+                g.predict_with(q, beam, 10).expect("query under a mute replica");
+                lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            a.resume();
+            lat_ms.sort_by(f64::total_cmp);
+            let idx = ((lat_ms.len() as f64 * 0.99).ceil() as usize).max(1) - 1;
+            let p99 = lat_ms[idx.min(lat_ms.len() - 1)];
+            let mean = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+            let hedges = g.stats().hedges.load(Ordering::Relaxed);
+            let label = if hedge { "hedged" } else { "unhedged" };
+            println!("{label:>10} {p99:>12.3} {mean:>12.3} {hedges:>10}");
+            report.record_extra(
+                if hedge { "slow-replica-hedged" } else { "slow-replica-unhedged" },
+                p99 * 1e6,
+                1,
+                &cfg.label(),
+                vec![
+                    ("p99_ms", Json::Num(p99)),
+                    ("mean_ms", Json::Num(mean)),
+                    ("hedges", Json::Num(hedges as f64)),
+                    ("round_timeout_ms", Json::Num(round_timeout.as_secs_f64() * 1e3)),
+                ],
+            );
+            a.shutdown();
+            b.shutdown();
         }
     }
     report.finish(&args);

@@ -84,6 +84,11 @@ pub struct Response {
     pub total_time: Duration,
     /// Size of the batch this query rode in.
     pub batch_size: usize,
+    /// Served from a degraded (partial-shard) remote partition: the
+    /// ranking covers only the live shards' label ranges. Always `false`
+    /// on in-process coordinators and in the default exact-or-fail
+    /// remote mode; only `--allow-partial` serving can set it.
+    pub degraded: bool,
 }
 
 /// Submission failure modes.

@@ -308,6 +308,7 @@ fn run_batch(inner: &Inner, state: &mut WorkerState, batch: Vec<Request>) {
             queue_time,
             total_time,
             batch_size: n,
+            degraded: false,
         });
     }
 }

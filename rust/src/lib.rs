@@ -45,7 +45,14 @@
 //!   [`shard::wire`] / [`shard::remote`] pair carries the same protocol
 //!   across processes: TCP shard hosts, replicated with mid-query
 //!   failover, driven by a remote gather stage whose speculative
-//!   expansion halves the RTT × depth cost.
+//!   expansion halves the RTT × depth cost. The transport is
+//!   chaos-hardened: per-replica health with a half-open circuit
+//!   breaker (healthy → suspect → ejected → probation), round-robin
+//!   replica rotation, per-batch deadline budgets, observed-p99 hedged
+//!   retries, and an opt-in degraded mode (`--allow-partial`) that
+//!   serves live shards with an explicit `degraded` response flag when
+//!   a shard is fully down — all under seeded, replayable fault
+//!   injection ([`shard::fault`], `rust/tests/chaos.rs`).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   layer step (`artifacts/*.hlo.txt`).
 //!

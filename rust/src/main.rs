@@ -38,7 +38,7 @@ use mscm_xmr::inference::{
 use mscm_xmr::repro;
 use mscm_xmr::metrics::Snapshot;
 use mscm_xmr::shard::{
-    load_shard, load_shards, partition, poll_stats, save_shards, RemoteConfig,
+    load_shard, load_shards, partition, poll_stats, save_shards, FaultPlan, RemoteConfig,
     RemoteCoordinatorConfig, RemoteShardedCoordinator, ShardHost, ShardHostConfig,
     ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
 };
@@ -84,7 +84,12 @@ INFERENCE
                 grouped automatically by the id each host reports;
                 --no-speculate disables speculative expansion,
                 --round-timeout-ms N sets the per-round failover timeout,
-                0 = wait forever)
+                0 = wait forever; --deadline-ms N caps a whole batch's
+                retries/backoff, 0 = no budget; --hedge re-issues a round
+                on the next replica once the first read exceeds the
+                shard's observed p99; --allow-partial serves live shards
+                when a shard's replicas are all down, flagging the
+                response degraded instead of failing the batch)
                 [--metrics-addr H:P] (TCP exposition: each connection
                 gets one Prometheus-style snapshot, then close)
                 [--stats-interval S] (one-line windowed stats every S
@@ -96,6 +101,12 @@ INFERENCE
                 [--no-speculate] [--no-metrics]  (host one shard over TCP
                 for serve --remote; port 0 picks a free port and prints
                 it; answers the wire Stats poll unless --no-metrics)
+                chaos flags (deterministic fault injection, for drills —
+                see shard::fault): [--fault-seed N] [--fault-refuse P]
+                [--fault-drop-after N] [--fault-delay-ms N]
+                [--fault-corrupt P] [--fault-truncate P]
+                [--fault-stutter-ms N]  (P = per-connection probability
+                in [0,1]; any flag arms the injector)
   metrics       --addr host:port [--format text|prom|json]
                 [--interval S [--count N]]  (poll a live shard host's
                 stats over the wire Stats frame; with --interval, print
@@ -773,16 +784,43 @@ fn cmd_shard_host(opts: &Opts) -> Result<(), anyhow::Error> {
     let addr = opts.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:0".into());
     let shard = load_shard(path, false)?;
     let spec = shard.spec;
-    let host = ShardHost::spawn(
-        shard,
-        ShardHostConfig {
-            engine: engine_config(opts)?,
-            planner: planner_config(opts)?,
-            speculate: !opts.contains_key("no-speculate"),
-            metrics: !opts.contains_key("no-metrics"),
-        },
-        addr.as_str(),
-    )?;
+    let config = ShardHostConfig {
+        engine: engine_config(opts)?,
+        planner: planner_config(opts)?,
+        speculate: !opts.contains_key("no-speculate"),
+        metrics: !opts.contains_key("no-metrics"),
+    };
+    // Any --fault-* flag arms the deterministic injector (chaos drills).
+    let fault_keys = [
+        "fault-seed",
+        "fault-refuse",
+        "fault-drop-after",
+        "fault-delay-ms",
+        "fault-corrupt",
+        "fault-truncate",
+        "fault-stutter-ms",
+    ];
+    let host = if fault_keys.iter().any(|k| opts.contains_key(*k)) {
+        let mut plan = FaultPlan {
+            seed: get(opts, "fault-seed", FaultPlan::default().seed)?,
+            refuse_connect: get(opts, "fault-refuse", 0.0f64)?,
+            delay_replies: std::time::Duration::from_millis(get(opts, "fault-delay-ms", 0u64)?),
+            corrupt_frame: get(opts, "fault-corrupt", 0.0f64)?,
+            truncate_frame: get(opts, "fault-truncate", 0.0f64)?,
+            ..Default::default()
+        };
+        if opts.contains_key("fault-drop-after") {
+            plan.drop_after_frames = Some(get(opts, "fault-drop-after", 0u32)?);
+        }
+        let stutter = get(opts, "fault-stutter-ms", 0u64)?;
+        if stutter > 0 {
+            plan.stutter = Some(std::time::Duration::from_millis(stutter));
+        }
+        eprintln!("fault injection armed: {plan:?}");
+        ShardHost::with_faults(shard, config, addr.as_str(), plan)?
+    } else {
+        ShardHost::spawn(shard, config, addr.as_str())?
+    };
     println!(
         "shard {}/{} (labels [{}, {})) listening on {}",
         spec.shard_id,
@@ -840,6 +878,9 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
                 "round-timeout-ms",
                 5_000u64,
             )?),
+            deadline: std::time::Duration::from_millis(get(opts, "deadline-ms", 0u64)?),
+            hedge: opts.contains_key("hedge"),
+            allow_partial: opts.contains_key("allow-partial"),
             ..Default::default()
         };
         let coord = RemoteShardedCoordinator::start(

@@ -179,6 +179,15 @@ impl LatencyHistogram {
         self.max_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
+    /// [`LatencyHistogram::quantile_ms`] gated on a minimum sample
+    /// count: `None` until the histogram holds `min_count` observations.
+    /// Consumers that turn a quantile into a decision threshold (the
+    /// remote transport's hedged reads) use this so a cold histogram
+    /// can't produce a garbage cutoff.
+    pub fn quantile_ms_if(&self, q: f64, min_count: u64) -> Option<f64> {
+        (self.count() >= min_count).then(|| self.quantile_ms(q))
+    }
+
     /// Maximum observed, in milliseconds.
     pub fn max_ms(&self) -> f64 {
         self.max_us.load(Ordering::Relaxed) as f64 / 1e3

@@ -65,6 +65,18 @@ impl ShardRound {
             self.cands.resize_with(n, Vec::new);
         }
     }
+
+    /// Resets the round to `n` live queries with no beam and no
+    /// candidates — the (empty) contribution a dead shard makes to a
+    /// degraded merge, and the shape that keeps later layers from
+    /// reading stale buffers left by the shard's last successful round.
+    pub fn clear_round(&mut self, n: usize) {
+        self.ensure(n);
+        for q in 0..n {
+            self.beams[q].clear();
+            self.cands[q].clear();
+        }
+    }
 }
 
 /// Expands one layer of one shard engine for every query of `round`:

@@ -1,0 +1,339 @@
+//! Deterministic, seeded fault injection for the cross-process serving
+//! stack.
+//!
+//! Chaos testing a networked system is only useful if a failure found
+//! under chaos can be replayed. Everything here is therefore driven by
+//! one seed: a [`FaultPlan`] holds the *probabilities and shapes* of the
+//! faults, and [`FaultPlan::schedule`] expands it into a concrete
+//! [`ConnSchedule`] for the n-th accepted connection using the same
+//! splitmix-style stream derivation as the seeded property harness
+//! (`rust/tests/common`), so `MSCM_TEST_SEED=<seed>` reproduces the
+//! exact same fault sequence — same connections refused, same frame
+//! ordinals corrupted, same delays.
+//!
+//! Two halves:
+//!
+//! - **Host side** ([`ShardHost::with_faults`](super::ShardHost::with_faults)):
+//!   every reply frame the host writes passes through a per-connection
+//!   [`ConnFaultSession`], which can delay it, stutter it (write it in
+//!   two chunks with a gap — the slow-loris case), truncate it
+//!   mid-frame, corrupt its header, or sever the connection after N
+//!   replies. A [`FaultInjector`] also carries a process-wide
+//!   `pause`/`resume` latch modelling the dead-but-connected host: the
+//!   socket stays open but no bytes ever come back.
+//! - **Client side** ([`RemoteConfig::faults`](super::RemoteConfig)):
+//!   the gather transport consults the injector when opening
+//!   connections (seeded connect refusal) and before sends (fixed
+//!   delay), exercising the reconnect/backoff path without any host
+//!   cooperation.
+//!
+//! ### Why corruption targets the frame *header* only
+//!
+//! The wire protocol has no payload checksum: a flipped byte inside a
+//! `Cands` payload would decode into different-but-valid scores and
+//! silently break the bitwise-exactness contract the whole shard layer
+//! is built on. A flipped byte in the fixed 12-byte header (magic /
+//! version / type / length) is *always* detected by
+//! [`wire::read_frame`](super::wire) and surfaces as a clean
+//! `InvalidData` error, which the client treats like any other replica
+//! failure: drop the connection and fail over. Injecting only
+//! detectable corruption keeps the chaos suite's strongest assertion —
+//! "every non-degraded result is bitwise identical to the unsharded
+//! oracle" — meaningful under corruption faults.
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Stream-splitting constant shared with the seeded test harness: the
+/// i-th connection draws from `seed ^ i * GOLDEN`, so schedules are
+/// independent per connection but fully determined by `(seed, i)`.
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A seeded description of the faults to inject. All faults default to
+/// off; a default plan is a no-op even when installed.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Base seed for every per-connection schedule. Tests derive this
+    /// from `MSCM_TEST_SEED` so failures replay.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that a connection is refused outright
+    /// (host side: accepted then immediately closed, which the client
+    /// observes as EOF during the handshake; client side: the connect
+    /// attempt errors before touching the network).
+    pub refuse_connect: f64,
+    /// Sever the connection after this many reply frames have been
+    /// written (`None` = never). The handshake `ShardInfo` reply counts.
+    pub drop_after_frames: Option<u32>,
+    /// Fixed delay inserted before every reply frame (host) or request
+    /// frame (client). `Duration::ZERO` = off.
+    pub delay_replies: Duration,
+    /// Probability that one reply frame of a connection has a header
+    /// byte flipped (detectable corruption; see module docs).
+    pub corrupt_frame: f64,
+    /// Probability that one reply frame of a connection is truncated
+    /// mid-frame, after which the connection is severed.
+    pub truncate_frame: f64,
+    /// Write every reply frame in two chunks separated by this gap
+    /// (slow-loris). `None` = off.
+    pub stutter: Option<Duration>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0x5EED_CA5E,
+            refuse_connect: 0.0,
+            drop_after_frames: None,
+            delay_replies: Duration::ZERO,
+            corrupt_frame: 0.0,
+            truncate_frame: 0.0,
+            stutter: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Expands the plan into the concrete schedule for connection
+    /// ordinal `conn_id`. Pure: the same `(plan, conn_id)` always
+    /// yields the same schedule, which is what makes chaos runs
+    /// replayable from a single logged seed.
+    pub fn schedule(&self, conn_id: u64) -> ConnSchedule {
+        let mut rng = Rng::seed_from_u64(self.seed ^ conn_id.wrapping_mul(GOLDEN));
+        let refuse = self.refuse_connect > 0.0 && rng.gen_bool(self.refuse_connect);
+        let corrupt_at = (self.corrupt_frame > 0.0 && rng.gen_bool(self.corrupt_frame))
+            .then(|| rng.gen_below(8) as u32);
+        let truncate_at = (self.truncate_frame > 0.0 && rng.gen_bool(self.truncate_frame))
+            .then(|| rng.gen_below(8) as u32);
+        ConnSchedule {
+            refuse,
+            drop_after: self.drop_after_frames,
+            delay: self.delay_replies,
+            corrupt_at,
+            truncate_at,
+            stutter: self.stutter,
+        }
+    }
+}
+
+/// The concrete faults one connection will experience, expanded from a
+/// [`FaultPlan`] by [`FaultPlan::schedule`]. Frame ordinals are 0-based
+/// over the reply frames written on that connection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConnSchedule {
+    /// Close the connection before serving anything.
+    pub refuse: bool,
+    /// Sever after this many reply frames.
+    pub drop_after: Option<u32>,
+    /// Delay before every reply frame.
+    pub delay: Duration,
+    /// Reply ordinal whose header byte is flipped (then keep serving).
+    pub corrupt_at: Option<u32>,
+    /// Reply ordinal truncated mid-frame (then sever).
+    pub truncate_at: Option<u32>,
+    /// Two-chunk slow-loris gap applied to every reply frame.
+    pub stutter: Option<Duration>,
+}
+
+/// Shared runtime state for an installed [`FaultPlan`]: hands out
+/// per-connection ordinals (host accepts and client connect attempts
+/// draw from separate counters so both sides stay deterministic) and
+/// carries the `pause`/`resume` latch.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    paused: AtomicBool,
+    host_conns: AtomicU64,
+    client_attempts: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<Self> {
+        Arc::new(FaultInjector {
+            plan,
+            paused: AtomicBool::new(false),
+            host_conns: AtomicU64::new(0),
+            client_attempts: AtomicU64::new(0),
+        })
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Freeze the host: connections stay open but every pending and
+    /// future reply stalls until [`resume`](Self::resume). Models the
+    /// dead-but-connected host that motivates deadline budgets.
+    pub fn pause(&self) {
+        self.paused.store(true, Ordering::SeqCst);
+    }
+
+    pub fn resume(&self) {
+        self.paused.store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.paused.load(Ordering::SeqCst)
+    }
+
+    /// Next host-side connection ordinal (one per accepted connection).
+    pub(crate) fn next_host_conn(&self) -> u64 {
+        self.host_conns.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Client side: should this connect attempt be refused? Each
+    /// attempt consumes one ordinal from the client stream, so a retry
+    /// can succeed where the first attempt was refused — exactly the
+    /// transient-connect-failure shape the backoff path handles.
+    pub(crate) fn client_connect_refused(&self) -> bool {
+        let i = self.client_attempts.fetch_add(1, Ordering::SeqCst);
+        self.plan.schedule(i).refuse
+    }
+
+    /// Fixed delay the client inserts before request frames.
+    pub(crate) fn client_send_delay(&self) -> Duration {
+        self.plan.delay_replies
+    }
+}
+
+/// Per-connection host-side fault state: the schedule plus how many
+/// reply frames have been written so far. Owned by the connection's
+/// serving thread; all writes to the peer go through
+/// [`write_reply`](Self::write_reply).
+pub(crate) struct ConnFaultSession {
+    inj: Arc<FaultInjector>,
+    sched: ConnSchedule,
+    stop: Arc<AtomicBool>,
+    replies: u32,
+}
+
+impl ConnFaultSession {
+    pub(crate) fn new(inj: Arc<FaultInjector>, conn_id: u64, stop: Arc<AtomicBool>) -> Self {
+        let sched = inj.plan().schedule(conn_id);
+        ConnFaultSession {
+            inj,
+            sched,
+            stop,
+            replies: 0,
+        }
+    }
+
+    /// Whether this connection should be refused outright.
+    pub(crate) fn refuse(&self) -> bool {
+        self.sched.refuse
+    }
+
+    /// Writes one reply frame, applying the schedule. `Ok(true)` means
+    /// keep serving; `Ok(false)` means the schedule severed the
+    /// connection (drop-after / truncation) and the caller should stop.
+    pub(crate) fn write_reply(&mut self, w: &mut TcpStream, frame: &[u8]) -> io::Result<bool> {
+        let i = self.replies;
+        self.replies += 1;
+
+        // Pause latch: stall, don't fail — the peer sees a connected
+        // socket that never produces bytes. Host shutdown breaks the
+        // stall so a paused host can still be killed cleanly.
+        while self.inj.is_paused() && !self.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        if let Some(n) = self.sched.drop_after {
+            if i >= n {
+                return Ok(false);
+            }
+        }
+        if !self.sched.delay.is_zero() {
+            std::thread::sleep(self.sched.delay);
+        }
+        if self.sched.truncate_at == Some(i) && frame.len() > 1 {
+            // A strict prefix, never the whole frame: the peer must see
+            // an interrupted frame, not a clean short read.
+            let cut = (frame.len() / 2).max(1);
+            w.write_all(&frame[..cut])?;
+            let _ = w.flush();
+            return Ok(false);
+        }
+        if self.sched.corrupt_at == Some(i) {
+            // Header-only corruption — always detectable (module docs).
+            let mut buf = frame.to_vec();
+            buf[0] ^= 0xFF;
+            w.write_all(&buf)?;
+            return Ok(true);
+        }
+        if let Some(gap) = self.sched.stutter {
+            if frame.len() > 1 {
+                let cut = frame.len() / 2;
+                w.write_all(&frame[..cut])?;
+                w.flush()?;
+                std::thread::sleep(gap);
+                w.write_all(&frame[cut..])?;
+                return Ok(true);
+            }
+        }
+        w.write_all(frame)?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_per_connection() {
+        let plan = FaultPlan {
+            seed: 42,
+            refuse_connect: 0.3,
+            corrupt_frame: 0.5,
+            truncate_frame: 0.5,
+            drop_after_frames: Some(7),
+            delay_replies: Duration::from_millis(3),
+            stutter: Some(Duration::from_millis(1)),
+        };
+        for conn in 0..64u64 {
+            assert_eq!(plan.schedule(conn), plan.schedule(conn));
+        }
+        // Different connections see different draws somewhere in a
+        // modest window (overwhelmingly likely at these probabilities).
+        let distinct = (0..64u64)
+            .map(|c| plan.schedule(c))
+            .collect::<Vec<_>>()
+            .windows(2)
+            .any(|w| w[0] != w[1]);
+        assert!(distinct, "all 64 connection schedules identical");
+    }
+
+    #[test]
+    fn default_plan_is_a_no_op() {
+        let plan = FaultPlan::default();
+        for conn in 0..16u64 {
+            let s = plan.schedule(conn);
+            assert!(!s.refuse);
+            assert_eq!(s.drop_after, None);
+            assert_eq!(s.corrupt_at, None);
+            assert_eq!(s.truncate_at, None);
+            assert_eq!(s.stutter, None);
+            assert!(s.delay.is_zero());
+        }
+    }
+
+    #[test]
+    fn seed_changes_the_schedule_stream() {
+        let a = FaultPlan {
+            seed: 1,
+            refuse_connect: 0.5,
+            ..FaultPlan::default()
+        };
+        let b = FaultPlan {
+            seed: 2,
+            ..a.clone()
+        };
+        let sa: Vec<bool> = (0..128).map(|c| a.schedule(c).refuse).collect();
+        let sb: Vec<bool> = (0..128).map(|c| b.schedule(c).refuse).collect();
+        assert_ne!(sa, sb, "independent seeds produced identical refusal streams");
+    }
+}

@@ -111,31 +111,74 @@
 //! pins that a live host keeps serving bitwise-identical results while
 //! being polled.
 //!
-//! # Failover state machine
+//! # Failover and replica health
 //!
-//! Each shard is addressable by one or more replicas; a client pins one
-//! **active** replica per shard and walks this machine per round:
+//! Each shard is addressable by one or more replicas. Every replica
+//! carries its own health record — consecutive-failure count, EWMA round
+//! latency, circuit-breaker cooldown — and walks this machine:
 //!
 //! ```text
-//!            ┌────────────┐ send+recv ok  ┌──────────┐
-//!    ┌──────►│ CONNECTED  ├──────────────►│ DECODED  │ (round done)
-//!    │       └─────┬──────┘               └──────────┘
-//!    │   io error/ │ timeout
-//!    │             ▼
-//!    │       ┌────────────┐   advance to next replica,
-//!    └───────┤ FAILED     ├── reconnect + handshake + re-send the
-//!   retained │ (conn drop)│   retained frame (bounded attempts;
-//!   frame    └────────────┘   rounds are stateless, re-issue is safe)
+//!                     success (resets failure count)
+//!          ┌───────────────────────────────────────────────┐
+//!          ▼                                               │
+//!    ┌──────────┐  round fails   ┌─────────┐  fails reach  │
+//!    │ HEALTHY  ├───────────────►│ SUSPECT ├── threshold ──┤
+//!    └────┬─────┘                └────┬────┘               │
+//!         │ rotates round-robin       │ still selectable   │
+//!         │ with its peers            ▼                    │
+//!         │                     ┌──────────┐ cooldown  ┌───┴───────┐
+//!         │                     │ EJECTED  ├── ends ──►│ PROBATION │
+//!         │                     └────▲─────┘           └───┬───────┘
+//!         │   circuit open: no       │   one more failure: │
+//!         │   traffic, cooldown      └── re-ejected with a ┘
+//!         │   doubles per ejection       doubled cooldown
 //! ```
 //!
-//! Because the encoded `Expand` frame is retained until its reply is
-//! decoded, failover is a byte-identical re-send — a replica killed
-//! mid-query costs one reconnect, never a failed query (demonstrated by
-//! `examples/remote_search.rs` and the failover tests). Speculative
-//! expansion ([`remote`] module docs) additionally halves the number of
-//! network rounds per query without touching exactness.
+//! Per round, the client sends on the **active** replica and on any io
+//! error or timeout drops that connection, records the failure, advances
+//! round-robin to the next selectable replica (skipping open circuits),
+//! and re-sends the retained `Expand` frame there — bounded attempts,
+//! capped exponential backoff with seeded jitter between full cycles.
+//! Because the encoded frame is retained until its reply is decoded,
+//! failover is a byte-identical re-send — a replica killed mid-query
+//! costs one reconnect, never a failed query (demonstrated by
+//! `examples/remote_search.rs`, the failover tests and the
+//! `rust/tests/chaos.rs` suite).
+//!
+//! **Hedging fast path** ([`RemoteConfig::hedge`](remote::RemoteConfig)):
+//! once a shard's round histogram is warm, the first reply read is
+//! bounded by the shard's observed p99 — a slower reply is abandoned and
+//! the round re-issued on the next healthy replica. First valid reply
+//! wins; replies are deterministic, so hedging trades tail latency for
+//! duplicated work without ever changing results.
+//!
+//! **Deadline budgets** ([`RemoteConfig::deadline`](remote::RemoteConfig)):
+//! a per-batch budget caps every round read, reconnect and backoff sleep;
+//! when it runs out the batch fails with `TimedOut` rather than retrying
+//! further, so no batch outlives its budget.
+//!
+//! **Degraded-mode contract**
+//! ([`RemoteConfig::allow_partial`](remote::RemoteConfig)): by default a
+//! shard whose replicas are *all* down fails the batch (exact-or-fail).
+//! With `--allow-partial`, the batch instead completes over the live
+//! shards: the dead shard contributes no candidates, the response is
+//! explicitly flagged `degraded`, and `remote.degraded_batches` counts
+//! it. A degraded ranking is exactly the beam search over the live
+//! shards' label subspace — deterministic and bitwise equal to serving
+//! that sub-partition alone — never a silently wrong full-space answer.
+//! Deadline expiry still fails the batch even under `--allow-partial`.
+//!
+//! All of the above is chaos-tested: [`fault`] injects seeded,
+//! replayable fault schedules (refused connects, dropped/delayed/
+//! truncated/corrupted/stuttered replies, paused hosts) into
+//! [`ShardHost`] and the client transport, and `rust/tests/chaos.rs`
+//! pins exactness, deadline bounds, ejection/rejoin and the degraded
+//! contract under them. Speculative expansion ([`remote`] module docs)
+//! additionally halves the number of network rounds per query without
+//! touching exactness.
 
 mod engine;
+pub mod fault;
 mod io;
 mod partition;
 pub mod remote;
@@ -143,10 +186,11 @@ mod serve;
 pub mod wire;
 
 pub use engine::{GatherArena, ShardRound, ShardedEngine};
+pub use fault::{ConnSchedule, FaultInjector, FaultPlan};
 pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
 pub use partition::{partition, subtree_nnz, ShardModel, ShardSpec};
 pub use remote::{
     discover, poll_stats, RemoteConfig, RemoteCoordinatorConfig, RemoteGather,
-    RemoteShardedCoordinator, RemoteStats, ShardHost, ShardHostConfig,
+    RemoteShardedCoordinator, RemoteStats, ReplicaPhase, ShardHost, ShardHostConfig,
 };
 pub use serve::{ShardedCoordinator, ShardedCoordinatorConfig};

@@ -22,6 +22,24 @@
 //! same pure computation. See the failover state machine in the
 //! [`crate::shard`] module docs.
 //!
+//! # Replica health, deadlines, degradation
+//!
+//! Replica choice is health-driven: every replica carries a
+//! consecutive-failure count, an EWMA of its successful round latency,
+//! and a half-open circuit breaker — healthy replicas rotate
+//! round-robin per batch, ejected replicas sit out an exponentially
+//! growing (seeded-jitter) cooldown and rejoin through a probation
+//! probe. A batch may carry a deadline budget
+//! ([`RemoteConfig::deadline`]) threaded through every round, reconnect
+//! and backoff sleep, so no batch outlives it. [`RemoteConfig::hedge`]
+//! re-issues a round on the next healthy replica once the active one
+//! exceeds the shard's observed p99 (replies are deterministic, so
+//! hedging cannot change results), and [`RemoteConfig::allow_partial`]
+//! serves a batch from the live shards — flagged `degraded` on the
+//! response — instead of failing it when every replica of a shard is
+//! down. The seeded chaos machinery that tests all of this lives in
+//! [`crate::shard::fault`].
+//!
 //! # Speculative expansion
 //!
 //! The layer-synchronized protocol costs one network round trip per tree
@@ -50,6 +68,7 @@ use std::time::{Duration, Instant};
 use super::engine::{
     build_shard_engine, expand_round, merge_and_split_layer, GatherArena, ShardRound,
 };
+use super::fault::{ConnFaultSession, FaultInjector, FaultPlan};
 use super::partition::ShardModel;
 use super::wire::{self, CandsHeader, ExpandHeader, MsgType, SpecRound, WireShardInfo};
 use crate::coordinator::batcher::{spawn_batcher, WorkerPool};
@@ -61,6 +80,7 @@ use crate::inference::{
 };
 use crate::metrics::{Registry, ScatterMetrics, Snapshot};
 use crate::sparse::{CsrMatrix, SparseVec, SparseVecView};
+use crate::util::Rng;
 
 fn invalid(msg: impl Into<String>) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.into())
@@ -109,6 +129,9 @@ struct HostShared {
     /// Host-level counters (connections, frames served); engine telemetry
     /// is merged in per poll by [`HostShared::snapshot`].
     registry: Registry,
+    /// Installed fault plan ([`ShardHost::with_faults`]); `None` on
+    /// production hosts — the serve path then writes directly.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl HostShared {
@@ -138,6 +161,7 @@ pub struct ShardHost {
     stop: Arc<AtomicBool>,
     conns: ConnRegistry,
     accept: Option<JoinHandle<()>>,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl ShardHost {
@@ -149,6 +173,30 @@ impl ShardHost {
         shard: ShardModel,
         config: ShardHostConfig,
         addr: impl ToSocketAddrs,
+    ) -> io::Result<ShardHost> {
+        Self::spawn_inner(shard, config, addr, None)
+    }
+
+    /// [`ShardHost::spawn`] with a seeded [`FaultPlan`] installed: every
+    /// accepted connection draws a deterministic fault schedule from the
+    /// plan (refused connects, dropped/delayed/stuttered/truncated/
+    /// corrupted replies), and the host can be frozen mid-stream with
+    /// [`ShardHost::pause`] / [`ShardHost::resume`]. The chaos suite's
+    /// (and the `shard-host` CLI's `--fault-*` flags') entry point.
+    pub fn with_faults(
+        shard: ShardModel,
+        config: ShardHostConfig,
+        addr: impl ToSocketAddrs,
+        plan: FaultPlan,
+    ) -> io::Result<ShardHost> {
+        Self::spawn_inner(shard, config, addr, Some(FaultInjector::new(plan)))
+    }
+
+    fn spawn_inner(
+        shard: ShardModel,
+        config: ShardHostConfig,
+        addr: impl ToSocketAddrs,
+        faults: Option<Arc<FaultInjector>>,
     ) -> io::Result<ShardHost> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
@@ -182,6 +230,7 @@ impl ShardHost {
             speculate: config.speculate,
             stop: Arc::clone(&stop),
             registry: Registry::new(),
+            faults: faults.clone(),
         });
         let conns2 = Arc::clone(&conns);
         let accept = std::thread::Builder::new()
@@ -193,12 +242,34 @@ impl ShardHost {
             stop,
             conns,
             accept: Some(accept),
+            faults,
         })
     }
 
     /// The address the host is listening on.
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Freezes every reply mid-stream (dead-but-connected host): sockets
+    /// stay open, no bytes come back until [`ShardHost::resume`]. No-op
+    /// on hosts spawned without faults.
+    pub fn pause(&self) {
+        if let Some(f) = &self.faults {
+            f.pause();
+        }
+    }
+
+    /// Releases a [`ShardHost::pause`] freeze.
+    pub fn resume(&self) {
+        if let Some(f) = &self.faults {
+            f.resume();
+        }
+    }
+
+    /// The installed fault injector, if this host was spawned with one.
+    pub fn fault_injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.faults.as_ref()
     }
 
     /// Hard-stops the host **immediately**: the listener stops accepting
@@ -249,6 +320,15 @@ fn accept_loop(listener: TcpListener, shared: Arc<HostShared>, conns: ConnRegist
                     return;
                 }
                 let _ = stream.set_nodelay(true);
+                let faults = shared.faults.as_ref().map(|f| {
+                    ConnFaultSession::new(Arc::clone(f), f.next_host_conn(), Arc::clone(&shared.stop))
+                });
+                if faults.as_ref().is_some_and(|f| f.refuse()) {
+                    // Seeded connect refusal: the peer sees an accepted
+                    // socket that closes before any handshake reply.
+                    let _ = stream.shutdown(Shutdown::Both);
+                    continue;
+                }
                 let id = next_id;
                 next_id += 1;
                 if let Ok(clone) = stream.try_clone() {
@@ -263,7 +343,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<HostShared>, conns: ConnRegist
                 std::thread::Builder::new()
                     .name(format!("mscm-host{}-conn", sh.info.shard_id))
                     .spawn(move || {
-                        let _ = serve_conn(&sh, stream);
+                        let _ = serve_conn(&sh, stream, faults);
                         reg.lock().unwrap().retain(|(cid, _)| *cid != id);
                     })
                     .ok();
@@ -287,11 +367,30 @@ fn reply_error(w: &mut TcpStream, tx: &mut Vec<u8>, code: u32, msg: &str) -> io:
     w.write_all(tx)
 }
 
+/// Routes one host reply frame through the connection's fault session
+/// when one is installed. `Ok(false)` means the schedule severed the
+/// connection and the serve loop should stop.
+fn host_write(
+    w: &mut TcpStream,
+    frame: &[u8],
+    faults: &mut Option<ConnFaultSession>,
+) -> io::Result<bool> {
+    match faults {
+        Some(f) => f.write_reply(w, frame),
+        None => w.write_all(frame).map(|()| true),
+    }
+}
+
 /// One connection's serve loop: handshake, then Expand → Cands until the
 /// peer goes away. All state is connection-private and pooled, so a
 /// steady round stream does no allocator traffic beyond amortized buffer
-/// growth.
-fn serve_conn(sh: &HostShared, stream: TcpStream) -> io::Result<()> {
+/// growth. Every reply passes through `faults` when the host carries a
+/// [`FaultPlan`].
+fn serve_conn(
+    sh: &HostShared,
+    stream: TcpStream,
+    mut faults: Option<ConnFaultSession>,
+) -> io::Result<()> {
     let mut r = BufReader::new(stream.try_clone()?);
     let mut w = stream;
     let mut tx: Vec<u8> = Vec::new();
@@ -306,7 +405,9 @@ fn serve_conn(sh: &HostShared, stream: TcpStream) -> io::Result<()> {
         Err(e) => return Err(e),
     }
     wire::encode_shard_info(&mut tx, &sh.info);
-    w.write_all(&tx)?;
+    if !host_write(&mut w, &tx, &mut faults)? {
+        return Ok(());
+    }
     // Handles resolved once per connection — the serve loop below only
     // bumps atomics.
     sh.registry.counter("host.connections").inc();
@@ -343,7 +444,9 @@ fn serve_conn(sh: &HostShared, stream: TcpStream) -> io::Result<()> {
                 }
                 stats_polls.inc();
                 wire::encode_stats(&mut tx, &sh.snapshot());
-                w.write_all(&tx)?;
+                if !host_write(&mut w, &tx, &mut faults)? {
+                    return Ok(());
+                }
                 continue;
             }
             _ => {
@@ -383,7 +486,9 @@ fn serve_conn(sh: &HostShared, stream: TcpStream) -> io::Result<()> {
             );
         }
         wire::encode_cands(&mut tx, hdr.round_id, hdr.layer, &round, do_spec.then_some(&spec));
-        w.write_all(&tx)?;
+        if !host_write(&mut w, &tx, &mut faults)? {
+            return Ok(());
+        }
     }
 }
 
@@ -442,8 +547,42 @@ pub struct RemoteConfig {
     /// next replica. `Duration::ZERO` disables the timeout (rounds then
     /// fail over only on connection errors).
     pub round_timeout: Duration,
-    /// TCP connect timeout per replica attempt.
+    /// TCP connect timeout per replica attempt. Also bounds the
+    /// handshake round, so an accept-then-hang host can stall a probe
+    /// (or [`discover`]) for at most this long.
     pub connect_timeout: Duration,
+    /// Per-batch deadline budget, threaded through every round read,
+    /// reconnect and backoff sleep of the batch: once spent, the batch
+    /// fails with `TimedOut` instead of retrying further.
+    /// `Duration::ZERO` disables the budget.
+    pub deadline: Duration,
+    /// Hedge slow rounds: once a shard's round histogram is warm, a
+    /// reply slower than the shard's observed p99 is abandoned and the
+    /// round re-issued on the next healthy replica (first valid reply
+    /// wins; replies are deterministic, so results cannot change).
+    pub hedge: bool,
+    /// When every replica of a shard is down, degrade the batch to the
+    /// live shards (response flagged `degraded`, `remote.degraded_batches`
+    /// bumped) instead of failing it. Off by default: exact-or-fail.
+    pub allow_partial: bool,
+    /// Consecutive failures after which a replica's circuit opens.
+    pub eject_after: u32,
+    /// Base cooldown of an ejected replica; doubles per consecutive
+    /// ejection (seeded jitter) up to [`RemoteConfig::eject_cooldown_cap`].
+    pub eject_cooldown: Duration,
+    /// Upper bound on the ejection cooldown.
+    pub eject_cooldown_cap: Duration,
+    /// Base reconnect backoff once a full replica cycle has failed;
+    /// doubles per cycle (seeded jitter) up to [`RemoteConfig::backoff_cap`].
+    pub backoff_base: Duration,
+    /// Upper bound on the reconnect backoff.
+    pub backoff_cap: Duration,
+    /// Seed for the backoff/cooldown jitter streams — chaos runs replay
+    /// exactly under one seed (`MSCM_TEST_SEED` convention).
+    pub seed: u64,
+    /// Client-transport fault injection (seeded connect refusal, send
+    /// delay); test machinery, `None` in production.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for RemoteConfig {
@@ -452,7 +591,33 @@ impl Default for RemoteConfig {
             speculate: true,
             round_timeout: Duration::from_secs(5),
             connect_timeout: Duration::from_secs(2),
+            deadline: Duration::ZERO,
+            hedge: false,
+            allow_partial: false,
+            eject_after: 3,
+            eject_cooldown: Duration::from_millis(100),
+            eject_cooldown_cap: Duration::from_secs(2),
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(200),
+            seed: 0x5EED_CA5E,
+            faults: None,
         }
+    }
+}
+
+/// `Duration::ZERO`-means-disabled, as an `Option`.
+fn nonzero(d: Duration) -> Option<Duration> {
+    (d > Duration::ZERO).then_some(d)
+}
+
+/// Socket timeout for one round: the configured round timeout capped by
+/// what remains of the batch deadline (`None` = unbounded).
+fn effective_timeout(round_timeout: Duration, deadline: Option<Instant>) -> Option<Duration> {
+    let rem = deadline.map(|d| d.saturating_duration_since(Instant::now()));
+    match (nonzero(round_timeout), rem) {
+        (Some(b), Some(r)) => Some(b.min(r)),
+        (Some(b), None) => Some(b),
+        (None, r) => r,
     }
 }
 
@@ -468,8 +633,17 @@ pub struct RemoteStats {
     pub spec_misses: AtomicU64,
     /// Replica failovers (connection drops, timeouts, reconnects).
     pub failovers: AtomicU64,
+    /// Rounds hedged to a second replica because the active one
+    /// exceeded the shard's observed p99 ([`RemoteConfig::hedge`]).
+    pub hedges: AtomicU64,
+    /// Circuit-breaker ejections (a replica put on cooldown after
+    /// [`RemoteConfig::eject_after`] consecutive failures).
+    pub ejections: AtomicU64,
     /// Batches abandoned because every replica of some shard failed.
     pub failed_batches: AtomicU64,
+    /// Batches served from the live shards only
+    /// ([`RemoteConfig::allow_partial`]) with some shard down.
+    pub degraded_batches: AtomicU64,
     /// Per-shard round latency + gather join wait. Caveat: a gather
     /// worker reads replies sequentially in shard order (blocking std
     /// sockets, one thread), so each shard's recorded latency is its
@@ -488,7 +662,10 @@ impl RemoteStats {
             spec_rounds_saved: AtomicU64::new(0),
             spec_misses: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            ejections: AtomicU64::new(0),
             failed_batches: AtomicU64::new(0),
+            degraded_batches: AtomicU64::new(0),
             scatter: ScatterMetrics::new(num_shards),
         }
     }
@@ -496,12 +673,16 @@ impl RemoteStats {
     /// One-line transport summary.
     pub fn summary(&self) -> String {
         format!(
-            "rounds={} spec_saved={} spec_misses={} failovers={} failed_batches={}",
+            "rounds={} spec_saved={} spec_misses={} failovers={} hedges={} ejections={} \
+             failed_batches={} degraded_batches={}",
             self.rounds.load(Ordering::Relaxed),
             self.spec_rounds_saved.load(Ordering::Relaxed),
             self.spec_misses.load(Ordering::Relaxed),
             self.failovers.load(Ordering::Relaxed),
+            self.hedges.load(Ordering::Relaxed),
+            self.ejections.load(Ordering::Relaxed),
             self.failed_batches.load(Ordering::Relaxed),
+            self.degraded_batches.load(Ordering::Relaxed),
         )
     }
 
@@ -513,7 +694,10 @@ impl RemoteStats {
             ("remote.spec_rounds_saved", &self.spec_rounds_saved),
             ("remote.spec_misses", &self.spec_misses),
             ("remote.failovers", &self.failovers),
+            ("remote.hedges", &self.hedges),
+            ("remote.ejections", &self.ejections),
             ("remote.failed_batches", &self.failed_batches),
+            ("remote.degraded_batches", &self.degraded_batches),
         ];
         for (name, c) in counters {
             snap.counters.insert(name.to_string(), c.load(Ordering::Relaxed));
@@ -534,38 +718,194 @@ struct Conn {
     w: TcpStream,
 }
 
-/// One shard's replica set and active connection, plus the pooled
-/// encode/decode buffers. The retained `tx` frame is what makes failover
-/// trivial: a failed round re-sends the identical bytes elsewhere.
-struct RemoteShard {
-    replicas: Vec<SocketAddr>,
-    active: usize,
+impl Conn {
+    /// (Re)arms the socket timeouts. `w` is a `try_clone` of the stream
+    /// inside `r` — one fd — so arming through `w` bounds both
+    /// directions, including reads through the `BufReader`.
+    fn set_timeouts(&self, t: Option<Duration>) -> io::Result<()> {
+        // Clamp away zero: std rejects a zero timeout, and a deadline
+        // with under 1ms left should surface as TimedOut, not EINVAL.
+        let t = t.map(|d| d.max(Duration::from_millis(1)));
+        self.w.set_read_timeout(t)?;
+        self.w.set_write_timeout(t)
+    }
+}
+
+/// Externally visible health phase of one replica — the circuit-breaker
+/// state machine drawn in the [`crate::shard`] module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaPhase {
+    /// No outstanding failures; serves in the round-robin rotation.
+    Healthy,
+    /// Recent failures below the ejection threshold; still selectable.
+    Suspect,
+    /// Circuit open: sits out its cooldown and receives no traffic.
+    Ejected,
+    /// Cooldown elapsed: selectable again, but one more failure
+    /// re-ejects immediately (the half-open probe).
+    Probation,
+}
+
+/// Per-replica health record: consecutive-failure count, circuit-breaker
+/// cooldown, EWMA round latency, and the lazily (re)opened connection.
+struct ReplicaState {
+    addr: SocketAddr,
     conn: Option<Conn>,
+    /// Consecutive failures since the last success.
+    fails: u32,
+    /// Consecutive ejections — the cooldown doubles with each.
+    ejections: u32,
+    /// While in the future, the circuit is open; once elapsed, the
+    /// replica is on probation until a success or failure resolves it.
+    ejected_until: Option<Instant>,
+    /// EWMA of successful round latency in ms (0 until the first
+    /// sample) — the per-replica slowness signal next to the per-shard
+    /// scatter histograms.
+    ewma_ms: f64,
+}
+
+impl ReplicaState {
+    fn new(addr: SocketAddr) -> Self {
+        Self {
+            addr,
+            conn: None,
+            fails: 0,
+            ejections: 0,
+            ejected_until: None,
+            ewma_ms: 0.0,
+        }
+    }
+
+    fn phase(&self, now: Instant) -> ReplicaPhase {
+        match self.ejected_until {
+            Some(t) if t > now => ReplicaPhase::Ejected,
+            Some(_) => ReplicaPhase::Probation,
+            None if self.fails == 0 => ReplicaPhase::Healthy,
+            None => ReplicaPhase::Suspect,
+        }
+    }
+
+    fn selectable(&self, now: Instant) -> bool {
+        self.phase(now) != ReplicaPhase::Ejected
+    }
+
+    /// A successful round closes the circuit entirely (a probation probe
+    /// that succeeds rejoins here) and feeds the latency EWMA.
+    fn on_success(&mut self, elapsed: Duration) {
+        self.fails = 0;
+        self.ejections = 0;
+        self.ejected_until = None;
+        let ms = elapsed.as_secs_f64() * 1e3;
+        self.ewma_ms = if self.ewma_ms == 0.0 {
+            ms
+        } else {
+            0.8 * self.ewma_ms + 0.2 * ms
+        };
+    }
+
+    /// Records a failure; opens the circuit once `cfg.eject_after`
+    /// consecutive failures accumulate. A probation failure re-ejects
+    /// immediately (the count never reset), with a doubled cooldown up
+    /// to the cap; seeded jitter keeps replicas ejected together from
+    /// probing in lockstep.
+    fn on_failure(&mut self, cfg: &RemoteConfig, rng: &mut Rng, stats: &RemoteStats, now: Instant) {
+        self.fails = self.fails.saturating_add(1);
+        if self.fails >= cfg.eject_after.max(1) {
+            let shift = self.ejections.min(5);
+            self.ejections = self.ejections.saturating_add(1);
+            let base = cfg.eject_cooldown.max(Duration::from_millis(1));
+            let cd = base
+                .saturating_mul(1u32 << shift)
+                .min(cfg.eject_cooldown_cap.max(base));
+            self.ejected_until = Some(now + cd.mul_f64(0.5 + 0.5 * rng.gen_f64()));
+            stats.ejections.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Builds the terminal failover error: names what failed, how many
+/// attempts were burned, and the last replica tried.
+fn exhausted_error(attempts: usize, last: &Option<(SocketAddr, io::Error)>) -> io::Error {
+    match last {
+        Some((addr, e)) => io::Error::new(
+            e.kind(),
+            format!("shard round failed after {attempts} attempt(s); last replica {addr}: {e}"),
+        ),
+        None => invalid(format!(
+            "shard round failed after {attempts} attempt(s) with no replica reachable"
+        )),
+    }
+}
+
+/// Deadline-exhaustion variant of [`exhausted_error`]; always `TimedOut`.
+fn deadline_error(attempts: usize, last: &Option<(SocketAddr, io::Error)>) -> io::Error {
+    let detail = match last {
+        Some((addr, e)) => format!(
+            "batch deadline exhausted after {attempts} failover attempt(s); last replica {addr}: {e}"
+        ),
+        None => format!("batch deadline exhausted after {attempts} failover attempt(s)"),
+    };
+    io::Error::new(io::ErrorKind::TimedOut, detail)
+}
+
+/// One shard's replica set (per-replica health + connection), plus the
+/// pooled encode/decode buffers. The retained `tx` frame is what makes
+/// failover and hedging trivial: a failed or abandoned round re-sends
+/// the identical bytes elsewhere.
+struct RemoteShard {
+    replicas: Vec<ReplicaState>,
+    active: usize,
     info: WireShardInfo,
     tx: Vec<u8>,
     rx: Vec<u8>,
+    /// Jitter stream for backoff sleeps and ejection cooldowns, seeded
+    /// per shard from [`RemoteConfig::seed`] so chaos runs replay.
+    rng: Rng,
 }
 
 impl RemoteShard {
-    /// Connects and handshakes one replica.
-    fn connect_addr(addr: SocketAddr, cfg: &RemoteConfig) -> io::Result<(Conn, WireShardInfo)> {
-        let stream = TcpStream::connect_timeout(&addr, cfg.connect_timeout)?;
+    /// Connects and handshakes one replica, optionally under an extra
+    /// time budget (what remains of a batch deadline). The connect
+    /// timeout also bounds the handshake reads, so an accept-then-hang
+    /// host cannot stall a probe beyond it; the socket is re-armed with
+    /// the round timeout before being returned.
+    fn connect_with(
+        addr: SocketAddr,
+        cfg: &RemoteConfig,
+        budget: Option<Duration>,
+    ) -> io::Result<(Conn, WireShardInfo)> {
+        if let Some(f) = &cfg.faults {
+            if f.client_connect_refused() {
+                return Err(io::Error::new(
+                    io::ErrorKind::ConnectionRefused,
+                    format!("fault injection refused connect to {addr}"),
+                ));
+            }
+        }
+        let ct = match (nonzero(cfg.connect_timeout), budget) {
+            (Some(c), Some(b)) => Some(c.min(b)),
+            (Some(c), None) => Some(c),
+            (None, b) => b,
+        };
+        let stream = match ct {
+            Some(t) => TcpStream::connect_timeout(&addr, t.max(Duration::from_millis(1)))?,
+            None => TcpStream::connect(addr)?,
+        };
         stream.set_nodelay(true)?;
-        // ZERO means "no timeout" (std rejects a zero timeout outright).
-        let timeout = (cfg.round_timeout > Duration::ZERO).then_some(cfg.round_timeout);
-        stream.set_read_timeout(timeout)?;
-        stream.set_write_timeout(timeout)?;
         let w = stream.try_clone()?;
         let mut conn = Conn {
             r: BufReader::new(stream),
             w,
         };
+        conn.set_timeouts(ct)?;
         let mut buf = Vec::new();
         wire::encode_hello(&mut buf);
         conn.w.write_all(&buf)?;
         match wire::read_frame(&mut conn.r, &mut buf)? {
             MsgType::ShardInfo => {
                 let info = wire::decode_shard_info(&buf)?;
+                // Steady-state rounds run under the round timeout.
+                conn.set_timeouts(nonzero(cfg.round_timeout))?;
                 Ok((conn, info))
             }
             MsgType::Error => Err(wire::error_from_frame(&buf)),
@@ -573,106 +913,278 @@ impl RemoteShard {
         }
     }
 
+    /// Connects and handshakes one replica ([`discover`] / [`poll_stats`]
+    /// probe path).
+    fn connect_addr(addr: SocketAddr, cfg: &RemoteConfig) -> io::Result<(Conn, WireShardInfo)> {
+        Self::connect_with(addr, cfg, None)
+    }
+
     /// Connects the first reachable replica and pins its identity; later
-    /// reconnects must report the same identity.
-    fn new(replicas: Vec<SocketAddr>, cfg: &RemoteConfig) -> io::Result<Self> {
-        assert!(!replicas.is_empty(), "shard needs at least one replica address");
-        let mut last = invalid("unreachable");
-        for (i, &a) in replicas.iter().enumerate() {
+    /// reconnects must report the same identity. The error names the
+    /// last address tried.
+    fn new(addrs: Vec<SocketAddr>, cfg: &RemoteConfig) -> io::Result<Self> {
+        assert!(!addrs.is_empty(), "shard needs at least one replica address");
+        let mut last: Option<io::Error> = None;
+        for (i, &a) in addrs.iter().enumerate() {
             match Self::connect_addr(a, cfg) {
                 Ok((conn, info)) => {
+                    let mut replicas: Vec<ReplicaState> =
+                        addrs.iter().map(|&r| ReplicaState::new(r)).collect();
+                    replicas[i].conn = Some(conn);
+                    let rng = Rng::seed_from_u64(
+                        cfg.seed
+                            ^ (info.shard_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
                     return Ok(Self {
                         replicas,
                         active: i,
-                        conn: Some(conn),
                         info,
                         tx: Vec::new(),
                         rx: Vec::new(),
+                        rng,
                     });
                 }
-                Err(e) => last = e,
+                Err(e) => last = Some(io::Error::new(e.kind(), format!("replica {a}: {e}"))),
             }
         }
-        Err(last)
+        Err(last.expect("replica list is non-empty"))
     }
 
-    fn ensure_conn(&mut self, cfg: &RemoteConfig) -> io::Result<()> {
-        if self.conn.is_some() {
+    fn active_addr(&self) -> SocketAddr {
+        self.replicas[self.active].addr
+    }
+
+    fn drop_conns(&mut self) {
+        for r in &mut self.replicas {
+            r.conn = None;
+        }
+    }
+
+    /// Moves the active slot to the next selectable replica in
+    /// round-robin order. When every circuit is open, settles on the
+    /// replica whose cooldown ends soonest and returns the wait until
+    /// that probation probe is due.
+    fn advance(&mut self, now: Instant) -> Option<Duration> {
+        let len = self.replicas.len();
+        for k in 1..=len {
+            let i = (self.active + k) % len;
+            if self.replicas[i].selectable(now) {
+                self.active = i;
+                return None;
+            }
+        }
+        let (i, until) = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i, r.ejected_until.unwrap_or(now)))
+            .min_by_key(|&(_, t)| t)
+            .expect("replica list is non-empty");
+        self.active = i;
+        Some(until.saturating_duration_since(now))
+    }
+
+    /// Per-batch rotation: healthy replicas share load round-robin
+    /// instead of pinning whichever connected first.
+    fn rotate(&mut self, now: Instant) {
+        if self.replicas.len() > 1 {
+            self.advance(now);
+        }
+    }
+
+    /// Ensures the active replica has a live, identity-checked
+    /// connection, spending at most the remaining deadline on it.
+    fn ensure_conn(&mut self, cfg: &RemoteConfig, deadline: Option<Instant>) -> io::Result<()> {
+        if self.replicas[self.active].conn.is_some() {
             return Ok(());
         }
-        let addr = self.replicas[self.active];
-        let (conn, info) = Self::connect_addr(addr, cfg)?;
+        let addr = self.active_addr();
+        let budget = deadline.map(|d| d.saturating_duration_since(Instant::now()));
+        let (conn, info) = Self::connect_with(addr, cfg, budget)?;
         if info != self.info {
             return Err(invalid(format!(
                 "replica {addr} reports a different shard identity"
             )));
         }
-        self.conn = Some(conn);
+        self.replicas[self.active].conn = Some(conn);
         Ok(())
     }
 
-    /// Drops the active connection and advances to the next replica.
-    fn fail_over(&mut self, stats: &RemoteStats) {
-        self.conn = None;
-        self.active = (self.active + 1) % self.replicas.len();
+    /// Records a failure on the active replica (possibly opening its
+    /// circuit), drops its connection, and advances to the next
+    /// selectable replica. Returns the cooldown wait when every circuit
+    /// is open.
+    fn fail_over(&mut self, cfg: &RemoteConfig, stats: &RemoteStats) -> Option<Duration> {
+        let now = Instant::now();
+        {
+            let Self {
+                replicas,
+                rng,
+                active,
+                ..
+            } = self;
+            let r = &mut replicas[*active];
+            r.conn = None;
+            r.on_failure(cfg, rng, stats, now);
+        }
         stats.failovers.fetch_add(1, Ordering::Relaxed);
+        self.advance(now)
     }
 
     /// Best-effort scatter: write the retained `tx` frame on the active
     /// connection. Failures are absorbed silently — [`RemoteShard::recv`]
     /// runs the full failover loop.
-    fn send(&mut self, cfg: &RemoteConfig) {
-        if self.ensure_conn(cfg).is_err() {
+    fn send(&mut self, cfg: &RemoteConfig, deadline: Option<Instant>) {
+        if self.ensure_conn(cfg, deadline).is_err() {
             return;
         }
-        let conn = self.conn.as_mut().expect("connection just ensured");
+        if let Some(f) = &cfg.faults {
+            let d = f.client_send_delay();
+            if !d.is_zero() {
+                std::thread::sleep(d);
+            }
+        }
+        let conn = self.replicas[self.active]
+            .conn
+            .as_mut()
+            .expect("connection just ensured");
         if conn.w.write_all(&self.tx).is_err() {
-            self.conn = None;
+            self.replicas[self.active].conn = None;
         }
     }
 
-    /// Bounded failover loop: (re)connect the active replica, re-send the
-    /// retained frame, read the reply. Rounds are stateless, so re-issue
-    /// is always safe.
-    fn round_trip(&mut self, cfg: &RemoteConfig, stats: &RemoteStats) -> io::Result<MsgType> {
-        let attempts = (2 * self.replicas.len()).max(2);
-        let mut last: Option<io::Error> = None;
-        for _ in 0..attempts {
-            if let Err(e) = self.ensure_conn(cfg) {
-                last = Some(e);
-                self.fail_over(stats);
-                continue;
+    /// One attempt on the active replica: (re)connect, arm the effective
+    /// timeout (round timeout capped by the deadline remainder), re-send
+    /// the retained frame, read the reply. Success resets the replica's
+    /// failure count and feeds its latency EWMA.
+    fn try_round(&mut self, cfg: &RemoteConfig, deadline: Option<Instant>) -> io::Result<MsgType> {
+        self.ensure_conn(cfg, deadline)?;
+        if let Some(f) = &cfg.faults {
+            let d = f.client_send_delay();
+            if !d.is_zero() {
+                std::thread::sleep(d);
             }
-            let conn = self.conn.as_mut().expect("connection just ensured");
-            let res = conn
-                .w
-                .write_all(&self.tx)
-                .and_then(|_| wire::read_frame(&mut conn.r, &mut self.rx));
-            match res {
-                // A decoded Error frame is deterministic — replicas of the
-                // same shard would answer the same; do not fail over.
+        }
+        let t0 = Instant::now();
+        let ty = {
+            let active = self.active;
+            let Self {
+                replicas, rx, tx, ..
+            } = self;
+            let conn = replicas[active]
+                .conn
+                .as_mut()
+                .expect("connection just ensured");
+            conn.set_timeouts(effective_timeout(cfg.round_timeout, deadline))?;
+            conn.w.write_all(tx)?;
+            wire::read_frame(&mut conn.r, rx)?
+        };
+        self.replicas[self.active].on_success(t0.elapsed());
+        Ok(ty)
+    }
+
+    /// Bounded failover loop with deadline budget and backoff: try the
+    /// active replica, record failures, advance round-robin past open
+    /// circuits, sleep a capped exponential backoff (seeded jitter)
+    /// after each full replica cycle — or wait out the soonest cooldown
+    /// when every circuit is open — and give up when the attempt budget
+    /// or the batch deadline runs out. Rounds are stateless, so re-issue
+    /// is always safe.
+    fn round_trip(
+        &mut self,
+        cfg: &RemoteConfig,
+        stats: &RemoteStats,
+        deadline: Option<Instant>,
+    ) -> io::Result<MsgType> {
+        let len = self.replicas.len();
+        let max_attempts = (2 * len).max(2);
+        let mut last: Option<(SocketAddr, io::Error)> = None;
+        let mut backoff = cfg.backoff_base.max(Duration::from_micros(100));
+        let mut attempts = 0usize;
+        while attempts < max_attempts {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Err(deadline_error(attempts, &last));
+            }
+            attempts += 1;
+            let addr = self.active_addr();
+            match self.try_round(cfg, deadline) {
+                // A decoded Error frame is deterministic — replicas of
+                // the same shard would answer the same; do not fail over.
                 Ok(MsgType::Error) => return Err(wire::error_from_frame(&self.rx)),
                 Ok(ty) => return Ok(ty),
                 Err(e) => {
-                    last = Some(e);
-                    self.fail_over(stats);
+                    last = Some((addr, e));
+                    let all_ejected = self.fail_over(cfg, stats);
+                    let mut pause = match all_ejected {
+                        Some(wait) => wait.min(cfg.eject_cooldown_cap.max(cfg.eject_cooldown)),
+                        None if attempts % len == 0 => {
+                            let p = backoff.mul_f64(0.5 + 0.5 * self.rng.gen_f64());
+                            backoff = (backoff * 2).min(cfg.backoff_cap.max(backoff));
+                            p
+                        }
+                        None => Duration::ZERO,
+                    };
+                    if let Some(d) = deadline {
+                        pause = pause.min(d.saturating_duration_since(Instant::now()));
+                    }
+                    if !pause.is_zero() {
+                        std::thread::sleep(pause);
+                    }
                 }
             }
         }
-        Err(last.unwrap_or_else(|| invalid("round failed with no attempt")))
+        Err(exhausted_error(attempts, &last))
     }
 
-    /// Reads this round's reply into the pooled `rx` buffer, failing over
-    /// (reconnect + re-send + re-read) as needed.
-    fn recv(&mut self, cfg: &RemoteConfig, stats: &RemoteStats) -> io::Result<MsgType> {
-        if let Some(conn) = self.conn.as_mut() {
-            match wire::read_frame(&mut conn.r, &mut self.rx) {
+    /// Reads this round's reply into the pooled `rx` buffer, failing
+    /// over (reconnect + re-send + re-read) as needed. `hedge_after`
+    /// bounds the first read to the shard's observed-p99 budget: a
+    /// reply slower than that abandons the connection and re-issues the
+    /// round on the next healthy replica — the sequential form of a
+    /// hedged request. First valid reply wins, and replies are
+    /// deterministic, so hedging cannot change results.
+    fn recv(
+        &mut self,
+        cfg: &RemoteConfig,
+        stats: &RemoteStats,
+        deadline: Option<Instant>,
+        hedge_after: Option<Duration>,
+    ) -> io::Result<MsgType> {
+        if self.replicas[self.active].conn.is_some() {
+            let base = effective_timeout(cfg.round_timeout, deadline);
+            let (first, hedged) = match (hedge_after, base) {
+                (Some(h), Some(b)) => (Some(h.min(b)), h < b),
+                (Some(h), None) => (Some(h), true),
+                (None, b) => (b, false),
+            };
+            let t0 = Instant::now();
+            let read = {
+                let active = self.active;
+                let Self { replicas, rx, .. } = self;
+                let conn = replicas[active].conn.as_mut().expect("conn checked above");
+                conn.set_timeouts(first)
+                    .and_then(|()| wire::read_frame(&mut conn.r, rx))
+            };
+            match read {
                 Ok(MsgType::Error) => return Err(wire::error_from_frame(&self.rx)),
-                Ok(ty) => return Ok(ty),
-                Err(_) => self.fail_over(stats),
+                Ok(ty) => {
+                    self.replicas[self.active].on_success(t0.elapsed());
+                    return Ok(ty);
+                }
+                Err(e) => {
+                    // A timeout mid-frame leaves the stream desynced and
+                    // any read error poisons it: drop the connection
+                    // either way and re-issue elsewhere.
+                    if hedged
+                        && matches!(e.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock)
+                    {
+                        stats.hedges.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.fail_over(cfg, stats);
+                }
             }
         }
-        self.round_trip(cfg, stats)
+        self.round_trip(cfg, stats, deadline)
     }
 }
 
@@ -751,10 +1263,17 @@ pub struct RemoteGather {
     arena: GatherArena,
     spec: Vec<SpecRound>,
     spec_ok: Vec<bool>,
+    /// Shards marked down for the current batch
+    /// ([`RemoteConfig::allow_partial`]); reset at every batch start.
+    dead: Vec<bool>,
     x: CsrMatrix,
     round_id: u64,
     stats: Arc<RemoteStats>,
 }
+
+/// Hedge only once a shard's round histogram holds this many samples —
+/// a cold p99 is noise, and a noise threshold would hedge every round.
+const HEDGE_MIN_SAMPLES: u64 = 64;
 
 impl RemoteGather {
     /// Discovers the partition behind `addrs` and connects every shard.
@@ -795,6 +1314,7 @@ impl RemoteGather {
             arena: GatherArena::new(),
             spec: (0..s_count).map(|_| SpecRound::default()).collect(),
             spec_ok: vec![false; s_count],
+            dead: vec![false; s_count],
             x: CsrMatrix::default(),
             round_id: 0,
             stats,
@@ -833,10 +1353,39 @@ impl RemoteGather {
     pub fn poll_shard_stats(&mut self, shard: usize) -> io::Result<Snapshot> {
         let sh = &mut self.shards[shard];
         wire::encode_stats_poll(&mut sh.tx);
-        match sh.round_trip(&self.cfg, &self.stats)? {
+        match sh.round_trip(&self.cfg, &self.stats, None)? {
             MsgType::Stats => wire::decode_stats(&sh.rx),
             ty => Err(invalid(format!("shard {shard}: expected Stats, got {ty:?}"))),
         }
+    }
+
+    /// Health phases of shard `shard`'s replicas: `(address, phase,
+    /// EWMA round-latency ms — 0 until the first sample)`. Operator
+    /// observability; the chaos suite asserts ejection and rejoin
+    /// through it.
+    pub fn replica_phases(&self, shard: usize) -> Vec<(SocketAddr, ReplicaPhase, f64)> {
+        let now = Instant::now();
+        self.shards[shard]
+            .replicas
+            .iter()
+            .map(|r| (r.addr, r.phase(now), r.ewma_ms))
+            .collect()
+    }
+
+    /// `true` when the last completed batch was served degraded (some
+    /// shard down under [`RemoteConfig::allow_partial`]).
+    pub fn last_batch_degraded(&self) -> bool {
+        self.dead.iter().any(|&d| d)
+    }
+
+    /// Shard ids that were down for the last completed batch (empty =
+    /// full fidelity).
+    pub fn degraded_shards(&self) -> Vec<u32> {
+        self.dead
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &d)| d.then_some(i as u32))
+            .collect()
     }
 
     /// Per-query results of the last completed batch.
@@ -896,28 +1445,114 @@ impl RemoteGather {
     /// the output is bit-identical to [`ShardedEngine`] and therefore to
     /// the unsharded engine.
     pub(crate) fn run(&mut self, n: usize, beam: usize, topk: usize) -> io::Result<()> {
-        let r = self.run_rounds(n, beam, topk);
-        if r.is_err() {
-            // A batch that failed mid-join (every replica of some shard
-            // gone, or a desynced reply) can leave unread Cands frames
-            // buffered on the surviving connections. Drop every
-            // connection so the next batch reconnects clean instead of
-            // reading stale replies forever — rounds are stateless, so a
-            // reconnect costs one handshake and nothing else.
-            for sh in &mut self.shards {
-                sh.conn = None;
+        let deadline = nonzero(self.cfg.deadline).map(|d| Instant::now() + d);
+        let r = self.run_rounds(n, beam, topk, deadline);
+        match &r {
+            Ok(()) => {
+                if self.last_batch_degraded() {
+                    self.stats.degraded_batches.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                // A batch that failed mid-join (every replica of some
+                // shard gone, deadline spent, or a desynced reply) can
+                // leave unread Cands frames buffered on the surviving
+                // connections. Drop every connection so the next batch
+                // reconnects clean instead of reading stale replies
+                // forever — rounds are stateless, so a reconnect costs
+                // one handshake and nothing else.
+                for sh in &mut self.shards {
+                    sh.drop_conns();
+                }
             }
         }
         r
     }
 
-    fn run_rounds(&mut self, n: usize, beam: usize, topk: usize) -> io::Result<()> {
+    /// The hedge threshold for shard `s`'s next reply: its observed p99
+    /// round latency, once the histogram is warm and only when a second
+    /// replica exists to hedge to. `None` disables hedging for the read.
+    fn hedge_after(&self, s: usize) -> Option<Duration> {
+        if !self.cfg.hedge || self.shards[s].replicas.len() < 2 {
+            return None;
+        }
+        self.stats
+            .scatter
+            .shard(s)
+            .quantile_ms_if(0.99, HEDGE_MIN_SAMPLES)
+            .map(|p99| Duration::from_secs_f64(p99.max(1.0) / 1e3))
+            .filter(|h| match nonzero(self.cfg.round_timeout) {
+                Some(rt) => *h < rt,
+                None => true,
+            })
+    }
+
+    /// One shard's contribution to the current join: read the reply
+    /// (with failover and hedging), decode it into the shard's round
+    /// slot, validate the echo.
+    fn join_shard(
+        &mut self,
+        s: usize,
+        rid: u64,
+        layer: u32,
+        n: usize,
+        deadline: Option<Instant>,
+    ) -> io::Result<()> {
+        let hedge_after = self.hedge_after(s);
+        let ty = self.shards[s].recv(&self.cfg, &self.stats, deadline, hedge_after)?;
+        if ty != MsgType::Cands {
+            return Err(invalid(format!("shard {s}: expected Cands, got {ty:?}")));
+        }
+        let ch: CandsHeader = wire::decode_cands(
+            &self.shards[s].rx,
+            &mut self.arena.rounds[s],
+            &mut self.spec[s],
+        )?;
+        if ch.round_id != rid || ch.layer != layer {
+            return Err(invalid(format!("shard {s}: reply out of sync")));
+        }
+        if self.arena.rounds[s].n != n {
+            return Err(invalid(format!("shard {s}: reply for a different batch size")));
+        }
+        self.spec_ok[s] = ch.has_spec && self.spec[s].n == n;
+        Ok(())
+    }
+
+    /// Marks shard `s` down for the rest of the batch: its round slot is
+    /// cleared to "n queries, no candidates" so the merge sees an empty
+    /// contribution, its speculation hint is void, and its connections
+    /// are dropped (any buffered reply is stale).
+    fn mark_dead(&mut self, s: usize, n: usize) {
+        self.dead[s] = true;
+        self.spec_ok[s] = false;
+        self.arena.rounds[s].clear_round(n);
+        self.shards[s].drop_conns();
+    }
+
+    fn run_rounds(
+        &mut self,
+        n: usize,
+        beam: usize,
+        topk: usize,
+        deadline: Option<Instant>,
+    ) -> io::Result<()> {
         assert!(beam >= 1, "beam width must be >= 1");
         assert_eq!(self.x.rows, n, "query matrix not loaded for this batch");
         let s_count = self.shards.len();
         self.arena.begin_rounds(s_count, n);
+        self.dead.iter_mut().for_each(|d| *d = false);
+        let now = Instant::now();
+        for sh in &mut self.shards {
+            sh.rotate(now);
+        }
         let mut l = 0usize;
         while l < self.depth {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    format!("batch deadline exhausted before layer {l}"),
+                ));
+            }
             let want_spec = self.cfg.speculate && l + 1 < self.depth;
             self.round_id += 1;
             let rid = self.round_id;
@@ -927,9 +1562,12 @@ impl RemoteGather {
                 beam: beam as u32,
                 speculate: want_spec,
             };
-            // Scatter: encode every shard's slice, write them all before
-            // reading any reply so hosts expand concurrently.
+            // Scatter: encode every live shard's slice, write them all
+            // before reading any reply so hosts expand concurrently.
             for s in 0..s_count {
+                if self.dead[s] {
+                    continue;
+                }
                 wire::encode_expand(
                     &mut self.shards[s].tx,
                     &hdr,
@@ -937,44 +1575,46 @@ impl RemoteGather {
                     &self.arena.rounds[s].beams,
                     n,
                 );
-                self.shards[s].send(&self.cfg);
+                self.shards[s].send(&self.cfg, deadline);
             }
             // Join: collect replies in shard order, failing over as
             // needed; record per-shard latency and the join wait (read-
             // completion order — see the `RemoteStats::scatter` caveat).
             let t_round = Instant::now();
-            let mut first_reply = Duration::ZERO;
+            let mut first_reply: Option<Duration> = None;
             let mut last_reply = Duration::ZERO;
             for s in 0..s_count {
-                let ty = self.shards[s].recv(&self.cfg, &self.stats)?;
-                if ty != MsgType::Cands {
-                    return Err(invalid(format!("shard {s}: expected Cands, got {ty:?}")));
+                if self.dead[s] {
+                    continue;
                 }
-                let ch: CandsHeader = wire::decode_cands(
-                    &self.shards[s].rx,
-                    &mut self.arena.rounds[s],
-                    &mut self.spec[s],
-                )?;
-                if ch.round_id != rid || ch.layer != l as u32 {
-                    return Err(invalid(format!("shard {s}: reply out of sync")));
+                if let Err(e) = self.join_shard(s, rid, l as u32, n, deadline) {
+                    // Deadline expiry always fails the batch — a partial
+                    // result must not cost more than the budget either.
+                    let budget_gone = deadline.is_some_and(|d| Instant::now() >= d);
+                    if self.cfg.allow_partial && !budget_gone {
+                        self.mark_dead(s, n);
+                        continue;
+                    }
+                    return Err(e);
                 }
-                if self.arena.rounds[s].n != n {
-                    return Err(invalid(format!("shard {s}: reply for a different batch size")));
-                }
-                self.spec_ok[s] = ch.has_spec && self.spec[s].n == n;
                 let elapsed = t_round.elapsed();
                 self.stats.scatter.record_round(s, elapsed);
-                if s == 0 {
-                    first_reply = elapsed;
-                }
+                first_reply.get_or_insert(elapsed);
                 last_reply = elapsed;
             }
-            self.stats.scatter.record_join_wait(last_reply.saturating_sub(first_reply));
+            if self.dead.iter().all(|&d| d) {
+                return Err(invalid("every shard of the partition is down"));
+            }
+            if let Some(first) = first_reply {
+                self.stats.scatter.record_join_wait(last_reply.saturating_sub(first));
+            }
             self.stats.rounds.fetch_add(1, Ordering::Relaxed);
             self.merge_layer(l, beam);
             l += 1;
             // Speculative skip: if every host sent a usable hint, the
-            // next layer's exact candidates are already here.
+            // next layer's exact candidates are already here. (A dead
+            // shard voids its hint, so degraded batches take real
+            // rounds — which skip the dead shard — from then on.)
             if l < self.depth && want_spec {
                 if self.try_assemble_spec(n) {
                     self.stats.spec_rounds_saved.fetch_add(1, Ordering::Relaxed);
@@ -1290,6 +1930,10 @@ fn remote_batch(inner: &RemoteInner, g: &mut RemoteGather, batch: Vec<Request>) 
         }
         return;
     }
+    // Under allow-partial, a batch that lost a shard still answers —
+    // explicitly flagged so callers can tell full fidelity from
+    // partial coverage.
+    let degraded = g.last_batch_degraded();
     for (q, req) in batch.into_iter().enumerate() {
         let queue_time = dispatch_time.duration_since(req.submitted);
         let total_time = req.submitted.elapsed();
@@ -1303,6 +1947,7 @@ fn remote_batch(inner: &RemoteInner, g: &mut RemoteGather, batch: Vec<Request>) 
             queue_time,
             total_time,
             batch_size: n,
+            degraded,
         });
     }
 }

@@ -351,6 +351,8 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
             queue_time,
             total_time,
             batch_size: n,
+            // In-process shards cannot be partially down.
+            degraded: false,
         });
     }
 }

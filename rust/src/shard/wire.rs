@@ -54,6 +54,19 @@
 //! times out on one replica re-issues byte-identically to the next
 //! ([`super::remote`]'s failover).
 //!
+//! # Partial writes and corruption
+//!
+//! [`read_frame`] blocks until the full header and payload arrive, so a
+//! peer that writes a frame in several chunks (slow-loris) either
+//! completes — parsed like any other frame — or hits the reader's socket
+//! timeout, which the client treats as a replica failure: the stream is
+//! mid-frame and unrecoverable, so the connection is dropped and the
+//! round re-issued elsewhere, never parsed as truncation garbage
+//! (`rust/tests/wire.rs` and the chaos suite pin this). Note there is no
+//! payload checksum: the protocol detects *framing* damage (bad magic /
+//! version / type / length), not flipped payload bytes — which is why
+//! the seeded corruption in [`super::fault`] targets the header only.
+//!
 //! # Pooling
 //!
 //! Encoders write whole frames into a caller-held `Vec<u8>` (cleared, so

@@ -1,0 +1,591 @@
+//! Chaos suite for the cross-process serving stack
+//! (`mscm_xmr::shard::{fault, remote}`): seeded, replayable fault
+//! injection against live loopback shard hosts. The properties pinned
+//! here are the transport's robustness contract:
+//!
+//! - every **non-degraded** response is bitwise identical to the
+//!   unsharded oracle, no matter which faults fired;
+//! - no batch outlives its deadline budget;
+//! - a replica that dies is ejected by the circuit breaker and, once
+//!   restarted on the same address, rejoins and serves again;
+//! - `allow_partial` flags exactly the down shards and degrades to the
+//!   live shards' exact sub-ranking, while the default mode stays
+//!   exact-or-fail (and two-replica failover still loses zero queries);
+//! - slow-loris and paused ("dead-but-connected") hosts are absorbed by
+//!   timeouts/hedging, never decoded into garbage.
+//!
+//! All fault schedules derive from `MSCM_TEST_SEED` (see
+//! `tests/common`), so a CI failure replays exactly.
+
+mod common;
+
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use mscm_xmr::coordinator::CoordinatorConfig;
+use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::shard::{
+    partition, poll_stats, FaultPlan, RemoteConfig, RemoteCoordinatorConfig, RemoteGather,
+    RemoteShardedCoordinator, ReplicaPhase, ShardHost, ShardHostConfig,
+};
+use mscm_xmr::tree::XmrModel;
+
+fn spec(dim: usize, labels: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "chaos-prop",
+        dim,
+        num_labels: labels,
+        paper_dim: dim,
+        paper_labels: 0,
+        query_nnz: 10,
+        col_nnz: 6,
+        sibling_overlap: 0.6,
+        zipf_theta: 1.0,
+    }
+}
+
+fn host_cfg(engine: EngineConfig) -> ShardHostConfig {
+    ShardHostConfig {
+        engine,
+        ..Default::default()
+    }
+}
+
+/// Spawns a faulty primary + healthy backup per shard; returns
+/// `(primaries, backups, groups)`.
+fn spawn_faulty_partition(
+    model: &XmrModel,
+    s: usize,
+    engine: EngineConfig,
+    plan: &FaultPlan,
+) -> (Vec<ShardHost>, Vec<ShardHost>, Vec<Vec<SocketAddr>>) {
+    let mut primaries = Vec::new();
+    let mut backups = Vec::new();
+    let mut groups = Vec::new();
+    for (i, shard) in partition(model, s).into_iter().enumerate() {
+        let mut plan = plan.clone();
+        plan.seed ^= (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let a = ShardHost::with_faults(shard.clone(), host_cfg(engine), "127.0.0.1:0", plan)
+            .expect("spawn faulty host");
+        let b = ShardHost::spawn(shard, host_cfg(engine), "127.0.0.1:0").expect("spawn backup");
+        groups.push(vec![a.local_addr(), b.local_addr()]);
+        primaries.push(a);
+        backups.push(b);
+    }
+    (primaries, backups, groups)
+}
+
+/// Tentpole exactness property: with one replica per shard running a
+/// hostile fault schedule (dropped, delayed, corrupted and truncated
+/// replies) and a healthy backup, every query over the chaotic stream
+/// returns the oracle ranking bit for bit — corruption is always
+/// detected (header-only injection; see `shard::fault` docs), never
+/// decoded into a wrong answer.
+#[test]
+fn faulty_replicas_never_break_bitwise_exactness() {
+    let sp = spec(96, 256);
+    let model = synth_model(&sp, 5, 0xC4A0);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let reference = InferenceEngine::new(model.clone(), engine);
+    let plan = FaultPlan {
+        seed: common::base_seed(),
+        drop_after_frames: Some(3),
+        delay_replies: Duration::from_millis(2),
+        corrupt_frame: 0.5,
+        truncate_frame: 0.4,
+        ..Default::default()
+    };
+    let (primaries, backups, groups) = spawn_faulty_partition(&model, 2, engine, &plan);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            round_timeout: Duration::from_secs(2),
+            ..Default::default()
+        },
+        None,
+    )
+    .expect("connect through the faulty partition");
+    let queries = synth_queries(&sp, 30, 0xFEED);
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        assert_eq!(
+            g.predict(&q, 5, 5).expect("query must survive the fault schedule"),
+            reference.predict(&q, 5, 5),
+            "q={qi} (replay with MSCM_TEST_SEED={})",
+            common::base_seed()
+        );
+    }
+    assert!(
+        g.stats().failovers.load(Ordering::Relaxed) >= 1,
+        "a drop-after-3-frames schedule must force failovers"
+    );
+    for h in primaries.into_iter().chain(backups) {
+        h.shutdown();
+    }
+}
+
+/// Deadline budgets: a paused host (socket open, no bytes ever coming
+/// back — the shape a plain connection error never produces) must fail
+/// the batch within the budget, not hang for the full round timeout.
+/// After `resume`, the very next query is exact again.
+#[test]
+fn deadline_bounds_batches_against_a_paused_host() {
+    let sp = spec(64, 128);
+    let model = synth_model(&sp, 4, 0xDEAD);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers);
+    let reference = InferenceEngine::new(model.clone(), engine);
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(&model, 2) {
+        // Default plan = no faults; spawning through `with_faults` is
+        // what installs the pause/resume latch.
+        let h = ShardHost::with_faults(shard, host_cfg(engine), "127.0.0.1:0", FaultPlan::default())
+            .unwrap();
+        groups.push(vec![h.local_addr()]);
+        hosts.push(h);
+    }
+    let deadline = Duration::from_millis(300);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            // The round timeout is deliberately far larger than the
+            // deadline: only the budget can be what bounds the batch.
+            round_timeout: Duration::from_secs(30),
+            deadline,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let queries = synth_queries(&sp, 4, 0x0B5E);
+    let q0 = queries.row_owned(0);
+    assert_eq!(g.predict(&q0, 5, 5).unwrap(), reference.predict(&q0, 5, 5));
+
+    hosts[0].pause();
+    let t0 = Instant::now();
+    let err = g.predict(&q0, 5, 5).expect_err("a paused shard must fail the batch");
+    let elapsed = t0.elapsed();
+    assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+    assert!(
+        elapsed < deadline * 8,
+        "batch outlived its deadline: {elapsed:?} vs budget {deadline:?}"
+    );
+
+    hosts[0].resume();
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        assert_eq!(
+            g.predict(&q, 5, 5).expect("resumed host must serve again"),
+            reference.predict(&q, 5, 5),
+            "q={qi} after resume"
+        );
+    }
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// Degraded mode: killing every replica of shard 1 fails the default
+/// (exact-or-fail) gather but lets an `allow_partial` gather answer from
+/// shard 0 alone — flagged, counted, and bitwise equal to serving shard
+/// 0's sub-model by itself.
+#[test]
+fn allow_partial_flags_exactly_the_down_shards() {
+    let sp = spec(96, 256);
+    let model = synth_model(&sp, 5, 0x9A57);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let reference = InferenceEngine::new(model.clone(), engine);
+    let shards = partition(&model, 2);
+    // Shard 0's model is self-contained over label range [0, cut), so
+    // the degraded oracle is just that sub-model served alone.
+    let sub_oracle = InferenceEngine::new(shards[0].model.clone(), engine);
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in shards {
+        let h = ShardHost::spawn(shard, host_cfg(engine), "127.0.0.1:0").unwrap();
+        groups.push(vec![h.local_addr()]);
+        hosts.push(h);
+    }
+    let rc = RemoteConfig {
+        round_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let mut g_default = RemoteGather::connect_groups(&groups, rc.clone(), None).unwrap();
+    let mut g_partial = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            allow_partial: true,
+            ..rc
+        },
+        None,
+    )
+    .unwrap();
+    let queries = synth_queries(&sp, 8, 0x1DEA);
+    // Full fidelity while everything is up: no degraded flag.
+    let q0 = queries.row_owned(0);
+    assert_eq!(g_partial.predict(&q0, 5, 5).unwrap(), reference.predict(&q0, 5, 5));
+    assert!(!g_partial.last_batch_degraded());
+    assert!(g_partial.degraded_shards().is_empty());
+
+    hosts.remove(1).shutdown();
+
+    // Default mode: exact-or-fail.
+    g_default
+        .predict(&q0, 5, 5)
+        .expect_err("default mode must fail the batch when a shard is fully down");
+
+    // allow_partial: the exact ranking over the live label subspace.
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        let got = g_partial.predict(&q, 5, 5).expect("degraded batch must answer");
+        assert_eq!(got, sub_oracle.predict(&q, 5, 5), "q={qi} degraded ranking");
+        assert!(g_partial.last_batch_degraded(), "q={qi} must be flagged degraded");
+        assert_eq!(g_partial.degraded_shards(), vec![1u32], "q={qi}");
+    }
+    assert!(
+        g_partial.stats().degraded_batches.load(Ordering::Relaxed) >= queries.rows as u64,
+        "every degraded batch must be counted"
+    );
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// End-to-end degraded serving through the batching coordinator: after a
+/// shard dies, `--allow-partial` responses arrive with `degraded = true`
+/// and the live shard's exact sub-ranking — zero failed batches.
+#[test]
+fn coordinator_marks_degraded_responses() {
+    let sp = spec(80, 192);
+    let model = synth_model(&sp, 4, 0xC0DE);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch);
+    let reference = InferenceEngine::new(model.clone(), engine);
+    let shards = partition(&model, 2);
+    let sub_oracle = InferenceEngine::new(shards[0].model.clone(), engine);
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in shards {
+        let h = ShardHost::spawn(shard, host_cfg(engine), "127.0.0.1:0").unwrap();
+        groups.push(vec![h.local_addr()]);
+        hosts.push(h);
+    }
+    let coord = RemoteShardedCoordinator::start_groups(
+        &groups,
+        RemoteCoordinatorConfig {
+            base: CoordinatorConfig {
+                workers: 1,
+                max_batch: 4,
+                max_batch_delay: Duration::from_micros(200),
+                beam: 5,
+                topk: 5,
+                ..Default::default()
+            },
+            remote: RemoteConfig {
+                round_timeout: Duration::from_millis(500),
+                allow_partial: true,
+                ..Default::default()
+            },
+        },
+    )
+    .expect("start degradable coordinator");
+    let queries = synth_queries(&sp, 20, 0xAB1E);
+    // Wave 1 (all shards up): full-fidelity responses, not flagged.
+    for i in 0..10 {
+        let q = queries.row_owned(i);
+        let resp = coord.query_blocking(q.clone()).expect("reply");
+        assert!(!resp.degraded, "q={i} wrongly flagged degraded");
+        assert_eq!(resp.predictions, reference.predict(&q, 5, 5), "q={i}");
+    }
+    hosts.remove(1).shutdown();
+    // Wave 2 (shard 1 gone): degraded responses, never failures.
+    for i in 10..queries.rows {
+        let q = queries.row_owned(i);
+        let resp = coord.query_blocking(q.clone()).expect("degraded reply must arrive");
+        assert!(resp.degraded, "q={i} must be flagged degraded");
+        assert_eq!(resp.predictions, sub_oracle.predict(&q, 5, 5), "q={i}");
+    }
+    let rs = coord.remote_stats();
+    assert_eq!(rs.failed_batches.load(Ordering::Relaxed), 0, "no batch may fail");
+    assert!(rs.degraded_batches.load(Ordering::Relaxed) >= 1);
+    assert_eq!(coord.stats().completed.load(Ordering::Relaxed), queries.rows as u64);
+    coord.shutdown();
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// Circuit breaker + rejoin: a killed replica is ejected after repeated
+/// failures; a host restarted on the *same address* is probed once its
+/// cooldown lapses, rejoins as healthy, and demonstrably serves rounds
+/// again (its expand-frame counter moves).
+#[test]
+fn killed_then_restarted_replica_rejoins_and_serves() {
+    let sp = spec(64, 96);
+    let model = synth_model(&sp, 3, 0x4E10);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers);
+    let reference = InferenceEngine::new(model.clone(), engine);
+    let shards = partition(&model, 1);
+    let shard0 = shards[0].clone();
+    let a = ShardHost::spawn(shard0.clone(), host_cfg(engine), "127.0.0.1:0").unwrap();
+    let b = ShardHost::spawn(shards.into_iter().next().unwrap(), host_cfg(engine), "127.0.0.1:0")
+        .unwrap();
+    let addr_a = a.local_addr();
+    let groups = vec![vec![addr_a, b.local_addr()]];
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            round_timeout: Duration::from_millis(500),
+            eject_after: 2,
+            eject_cooldown: Duration::from_millis(50),
+            eject_cooldown_cap: Duration::from_millis(200),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let queries = synth_queries(&sp, 40, 0x9E77);
+    let q = |i: usize| queries.row_owned(i);
+    assert_eq!(g.predict(&q(0), 5, 5).unwrap(), reference.predict(&q(0), 5, 5));
+
+    a.shutdown();
+    // Keep the stream going: every query stays exact on the backup, and
+    // the repeated failures open A's circuit.
+    for i in 0..20 {
+        assert_eq!(
+            g.predict(&q(i), 5, 5).expect("backup must absorb the kill"),
+            reference.predict(&q(i), 5, 5),
+            "q={i} while A is down"
+        );
+    }
+    assert!(
+        g.stats().ejections.load(Ordering::Relaxed) >= 1,
+        "a dead replica must be ejected by the circuit breaker"
+    );
+    let phase_a = |g: &RemoteGather| {
+        g.replica_phases(0)
+            .into_iter()
+            .find(|(addr, _, _)| *addr == addr_a)
+            .expect("replica A must stay in the health table")
+    };
+    assert_ne!(phase_a(&g).1, ReplicaPhase::Healthy, "a dead replica cannot be healthy");
+
+    // Restart on the same address (retry: the OS may briefly hold it).
+    let mut restarted = None;
+    for _ in 0..100 {
+        match ShardHost::spawn(shard0.clone(), host_cfg(engine), addr_a) {
+            Ok(h) => {
+                restarted = Some(h);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+    let restarted = restarted.expect("rebind the killed replica's address");
+    // Let every cooldown lapse so A is on probation, then drive traffic:
+    // rotation reaches A, the probe succeeds, A rejoins.
+    std::thread::sleep(Duration::from_millis(600));
+    for i in 20..queries.rows {
+        assert_eq!(
+            g.predict(&q(i), 5, 5).expect("rejoin traffic"),
+            reference.predict(&q(i), 5, 5),
+            "q={i} after restart"
+        );
+    }
+    let (_, phase, ewma_ms) = phase_a(&g);
+    assert_eq!(phase, ReplicaPhase::Healthy, "restarted replica must rejoin");
+    assert!(ewma_ms > 0.0, "rejoined replica must have served (EWMA untouched)");
+    let snap = poll_stats(addr_a, &RemoteConfig::default()).expect("poll restarted host");
+    assert!(
+        snap.counters.get("host.expand_frames").copied().unwrap_or(0) > 0,
+        "restarted host never served an Expand round"
+    );
+    b.shutdown();
+    restarted.shutdown();
+}
+
+/// Slow-loris replies (every frame written in two chunks around a gap):
+/// with a generous round timeout the reader simply blocks through the
+/// gap — exact results, zero failovers. With a round timeout shorter
+/// than the gap, the mid-frame timeout is treated as a replica failure
+/// (connection dropped, round re-issued on the backup) — still exact,
+/// never truncation garbage.
+#[test]
+fn slow_loris_hosts_are_absorbed_without_garbage() {
+    let sp = spec(64, 128);
+    let model = synth_model(&sp, 4, 0x510E);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let reference = InferenceEngine::new(model.clone(), engine);
+
+    // Leg 1: every reply of every shard stutters; timeout far above the
+    // gap. The stream must be indistinguishable from a slow-but-correct
+    // host.
+    let stutter = FaultPlan {
+        seed: common::base_seed(),
+        stutter: Some(Duration::from_millis(40)),
+        ..Default::default()
+    };
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(&model, 2) {
+        let h =
+            ShardHost::with_faults(shard, host_cfg(engine), "127.0.0.1:0", stutter.clone()).unwrap();
+        groups.push(vec![h.local_addr()]);
+        hosts.push(h);
+    }
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            round_timeout: Duration::from_secs(5),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let queries = synth_queries(&sp, 5, 0x70AD);
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        assert_eq!(g.predict(&q, 5, 5).unwrap(), reference.predict(&q, 5, 5), "q={qi}");
+    }
+    assert_eq!(
+        g.stats().failovers.load(Ordering::Relaxed),
+        0,
+        "a patient reader must ride out the stutter without failing over"
+    );
+    drop(g);
+    for h in hosts {
+        h.shutdown();
+    }
+
+    // Leg 2: the gap exceeds the round timeout, so every read on the
+    // slow replica dies mid-frame; the healthy backup must carry the
+    // stream bit-exactly.
+    let slow = FaultPlan {
+        seed: common::base_seed() ^ 1,
+        stutter: Some(Duration::from_millis(150)),
+        ..Default::default()
+    };
+    let (primaries, backups, groups) = spawn_faulty_partition(&model, 1, engine, &slow);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            round_timeout: Duration::from_millis(50),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        assert_eq!(
+            g.predict(&q, 5, 5).expect("backup must carry the slow-loris stream"),
+            reference.predict(&q, 5, 5),
+            "q={qi} under mid-frame timeouts"
+        );
+    }
+    assert!(g.stats().failovers.load(Ordering::Relaxed) >= 1);
+    for h in primaries.into_iter().chain(backups) {
+        h.shutdown();
+    }
+}
+
+/// Hedged retries: once the shard's round histogram is warm, a reply
+/// slower than the observed p99 is abandoned for the backup replica.
+/// With one replica paused (connected but mute) and a 30 s round
+/// timeout, only hedging can keep the stream fast — and it must not
+/// change a single bit of the results.
+#[test]
+fn hedging_reroutes_slow_replies_without_changing_results() {
+    let sp = spec(64, 96);
+    let model = synth_model(&sp, 3, 0x4ED6);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let reference = InferenceEngine::new(model.clone(), engine);
+    let shards = partition(&model, 1);
+    let a = ShardHost::with_faults(
+        shards[0].clone(),
+        host_cfg(engine),
+        "127.0.0.1:0",
+        FaultPlan::default(),
+    )
+    .unwrap();
+    let b = ShardHost::spawn(shards.into_iter().next().unwrap(), host_cfg(engine), "127.0.0.1:0")
+        .unwrap();
+    let groups = vec![vec![a.local_addr(), b.local_addr()]];
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            round_timeout: Duration::from_secs(30),
+            hedge: true,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let queries = synth_queries(&sp, 120, 0x4ED9);
+    // Warm the shard's round histogram past the hedge activation floor.
+    let mut qi = 0usize;
+    while g.stats().scatter.shard(0).count() < 64 {
+        let q = queries.row_owned(qi % queries.rows);
+        assert_eq!(g.predict(&q, 5, 5).unwrap(), reference.predict(&q, 5, 5));
+        qi += 1;
+        assert!(qi < 500, "histogram never warmed");
+    }
+    a.pause();
+    let t0 = Instant::now();
+    for i in 0..10 {
+        let q = queries.row_owned(i);
+        assert_eq!(
+            g.predict(&q, 5, 5).expect("hedged query"),
+            reference.predict(&q, 5, 5),
+            "q={i} under hedging"
+        );
+    }
+    let elapsed = t0.elapsed();
+    a.resume();
+    assert!(
+        g.stats().hedges.load(Ordering::Relaxed) >= 1,
+        "a mute active replica must trigger at least one hedge"
+    );
+    // Without hedging every round on the paused replica would stall for
+    // the 30 s round timeout; hedged, the whole stream finishes fast.
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "hedging failed to bound tail latency: {elapsed:?}"
+    );
+    a.shutdown();
+    b.shutdown();
+}
+
+/// Satellite: the terminal failover error is diagnosable — it names the
+/// attempt count and the last replica address tried, instead of the old
+/// bare "round failed with no attempt".
+#[test]
+fn terminal_failover_error_names_attempts_and_replica() {
+    let sp = spec(64, 96);
+    let model = synth_model(&sp, 3, 0x7E4D);
+    let engine = EngineConfig::default();
+    let shards = partition(&model, 1);
+    let h = ShardHost::spawn(shards.into_iter().next().unwrap(), host_cfg(engine), "127.0.0.1:0")
+        .unwrap();
+    let addr = h.local_addr();
+    let mut g = RemoteGather::connect_groups(
+        &[vec![addr]],
+        RemoteConfig {
+            round_timeout: Duration::from_millis(200),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let queries = synth_queries(&sp, 1, 0x7E4E);
+    let q = queries.row_owned(0);
+    h.shutdown();
+    let err = g.predict(&q, 5, 5).expect_err("dead partition must fail");
+    let msg = err.to_string();
+    assert!(msg.contains("attempt"), "error must count attempts: {msg}");
+    assert!(
+        msg.contains(&addr.to_string()),
+        "error must name the last replica tried ({addr}): {msg}"
+    );
+}

@@ -321,3 +321,59 @@ fn reader_consumes_exactly_one_frame_from_a_stream() {
     );
     let _ = HEADER_LEN; // layout constant is part of the public contract
 }
+
+#[test]
+fn slow_loris_frame_either_completes_or_times_out_cleanly() {
+    // A frame delivered in two chunks with a gap (the slow-loris shape).
+    // The reader must block through the gap and return the intact frame
+    // when untimed; under a read timeout shorter than the gap it must
+    // surface a timeout-kind error — never InvalidData (which would mean
+    // the reader mistook a partial frame for a malformed one) and never
+    // a short "successful" read.
+    use std::io::{BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    let mut frame = Vec::new();
+    encode_error(&mut frame, 9, "sent in two chunks");
+    let cut = frame.len() / 2;
+
+    for (timeout, gap) in [
+        (None, Duration::from_millis(150)),
+        (Some(Duration::from_millis(40)), Duration::from_millis(400)),
+    ] {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let frame2 = frame.clone();
+        let writer = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&frame2[..cut]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(gap);
+            // The timed leg's peer may already be gone; that's fine.
+            let _ = s.write_all(&frame2[cut..]);
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(timeout).unwrap();
+        let mut r = BufReader::new(stream);
+        let mut payload = Vec::new();
+        match timeout {
+            None => {
+                assert_eq!(read_frame(&mut r, &mut payload).unwrap(), MsgType::Error);
+                assert_eq!(decode_error(&payload).unwrap().1, "sent in two chunks");
+            }
+            Some(_) => {
+                let err = read_frame(&mut r, &mut payload).unwrap_err();
+                assert!(
+                    matches!(
+                        err.kind(),
+                        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                    ),
+                    "expected a timeout kind, got {:?}: {err}",
+                    err.kind()
+                );
+            }
+        }
+        writer.join().unwrap();
+    }
+}
