@@ -1,0 +1,320 @@
+//! Scalar vs SIMD kernel tiers at the single vector × chunk product
+//! level — the dispatch the planner's tier pass prices. Measures every
+//! tiered kernel on the shapes the tiers were built for (tiny chunks,
+//! wide chunks, dense-rows probes, merged spans) plus an end-to-end
+//! auto-planned engine against the same plan pinned to the scalar tier.
+//! Emits `BENCH_kernels.json` (override with `--json <path>`).
+//!
+//! `cargo bench --bench kernels` — append `-- --quick` for the CI-sized
+//! run (smaller model, tighter time budget, same rows).
+//!
+//! On hardware without a vector unit (or under `MSCM_FORCE_SCALAR=1`)
+//! the `*_simd` rows measure the scalar fallback, so the speedup column
+//! reads ~1.0 — the report's `meta.simd` field says which case ran.
+
+use mscm_xmr::data::synthetic::{paper_suite, synth_model, synth_queries};
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, KernelTier, MatmulAlgo,
+    PlannerConfig,
+};
+use mscm_xmr::sparse::iterators::{
+    vec_chunk_binary, vec_chunk_binary_simd, vec_chunk_dense, vec_chunk_dense_rows,
+    vec_chunk_dense_rows_simd, vec_chunk_dense_simd, vec_chunk_hash, vec_chunk_hash_simd,
+    vec_chunk_marching, vec_chunk_marching_simd, DenseScratch,
+};
+use mscm_xmr::sparse::{ChunkStorage, ChunkedMatrix, CscMatrix, SimdLevel, SparseVec};
+use mscm_xmr::util::bench::{bench_ms, black_box, BenchReport};
+use mscm_xmr::util::Json;
+
+const DIM: usize = 4096;
+
+/// `nchunks` chunks of `width` columns, each column carrying `per_col`
+/// entries on a deterministic stride — wide `per_col` makes the chunk's
+/// row union cover most of the dimension (the DenseRows regime), tiny
+/// `per_col` makes merged-eligible slivers.
+fn chunk_matrix(nchunks: usize, width: usize, per_col: usize) -> ChunkedMatrix {
+    let cols: Vec<SparseVec> = (0..nchunks * width)
+        .map(|j| {
+            let stride = (DIM / per_col).max(1);
+            SparseVec::from_pairs(
+                (0..per_col)
+                    .map(|k| ((k * stride + j % stride) as u32, 0.25 + (j + k) as f32 * 1e-3))
+                    .collect(),
+            )
+        })
+        .collect();
+    let csc = CscMatrix::from_cols(cols, DIM);
+    let offsets: Vec<u32> = (0..=nchunks).map(|c| (c * width) as u32).collect();
+    ChunkedMatrix::from_csc(&csc, &offsets, true)
+}
+
+/// `n` queries of `nnz` sorted nonzeros spread across the dimension.
+fn queries(n: usize, nnz: usize) -> Vec<SparseVec> {
+    (0..n)
+        .map(|q| {
+            let stride = (DIM / nnz).max(1);
+            SparseVec::from_pairs(
+                (0..nnz)
+                    .map(|i| ((i * stride + q % stride) as u32, 1.0 - (i as f32) * 1e-3))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_pair(
+    report: &mut BenchReport,
+    shape: &str,
+    kernel: &str,
+    budget_ms: f64,
+    products: usize,
+    level: SimdLevel,
+    mut scalar: impl FnMut(),
+    mut simd: impl FnMut(),
+) {
+    let s = bench_ms(2, 50, budget_ms, &mut scalar);
+    let v = bench_ms(2, 50, budget_ms, &mut simd);
+    let s_ns = s.mean_ms * 1e6 / products as f64;
+    let v_ns = v.mean_ms * 1e6 / products as f64;
+    println!(
+        "{:<26}{:>12.1}{:>12.1}{:>10.2}x",
+        format!("{shape}/{kernel}"),
+        s_ns,
+        v_ns,
+        s_ns / v_ns.max(1e-9)
+    );
+    report.record(
+        &format!("{shape}/{kernel}/scalar"),
+        s_ns,
+        products,
+        "scalar tier",
+    );
+    report.record(
+        &format!("{shape}/{kernel}/simd"),
+        v_ns,
+        products,
+        &format!("simd tier ({})", level.label()),
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let level = SimdLevel::detect();
+    let budget = if quick { 150.0 } else { 1_500.0 };
+    let nq = if quick { 16 } else { 64 };
+    let q_nnz = 64;
+
+    let mut report = BenchReport::new("kernels");
+    report.set_meta("simd", Json::Str(level.label().to_string()));
+    report.set_meta("quick", Json::Str(quick.to_string()));
+    println!("kernel tiers on {} ({} queries x chunk sweep)", level.label(), nq);
+    println!("{:<26}{:>12}{:>12}{:>10}", "shape/kernel", "scalar ns", "simd ns", "speedup");
+
+    let x = queries(nq, q_nnz);
+
+    // Tiny chunks: a handful of rows, merged-eligible widths — the
+    // regime the tier pass keeps scalar (SIMD setup can't amortize).
+    let tiny = chunk_matrix(if quick { 64 } else { 256 }, 4, 2);
+    let ntiny = tiny.num_chunks();
+    let mut out = vec![0.0f32; 64];
+    for (kernel, is_binary) in [("marching", false), ("binary", true)] {
+        run_pair(
+            &mut report,
+            "tiny",
+            kernel,
+            budget,
+            nq * ntiny,
+            level,
+            || {
+                for q in &x {
+                    for c in 0..ntiny {
+                        let cv = tiny.view(c);
+                        let o = &mut out[..cv.ncols as usize];
+                        o.fill(0.0);
+                        if is_binary {
+                            vec_chunk_binary(q.view(), cv, o);
+                        } else {
+                            vec_chunk_marching(q.view(), cv, o);
+                        }
+                        black_box(&o[0]);
+                    }
+                }
+            },
+            || {
+                for q in &x {
+                    for c in 0..ntiny {
+                        let cv = tiny.view(c);
+                        let o = &mut out[..cv.ncols as usize];
+                        o.fill(0.0);
+                        if is_binary {
+                            vec_chunk_binary_simd(q.view(), cv, o, level);
+                        } else {
+                            vec_chunk_marching_simd(q.view(), cv, o, level);
+                        }
+                        black_box(&o[0]);
+                    }
+                }
+            },
+        );
+    }
+
+    // Wide chunks: many stored rows, row maps resident — the hash and
+    // dense kernels' regime, and the shapes with emit runs long enough
+    // for the lanes to matter.
+    let wide = chunk_matrix(if quick { 2 } else { 8 }, 64, 256);
+    let nwide = wide.num_chunks();
+    let mut scratch = DenseScratch::new(DIM);
+    for kernel in ["marching", "hash", "dense"] {
+        run_pair(
+            &mut report,
+            "wide",
+            kernel,
+            budget,
+            nq * nwide,
+            level,
+            || {
+                for c in 0..nwide {
+                    let cv = wide.view(c);
+                    if kernel == "dense" {
+                        scratch.load(cv);
+                    }
+                    for q in &x {
+                        let o = &mut out[..cv.ncols as usize];
+                        o.fill(0.0);
+                        match kernel {
+                            "marching" => vec_chunk_marching(q.view(), cv, o),
+                            "hash" => vec_chunk_hash(q.view(), cv, o),
+                            _ => vec_chunk_dense(q.view(), cv, &scratch, o),
+                        }
+                        black_box(&o[0]);
+                    }
+                    if kernel == "dense" {
+                        scratch.clear(cv);
+                    }
+                }
+            },
+            || {
+                for c in 0..nwide {
+                    let cv = wide.view(c);
+                    if kernel == "dense" {
+                        scratch.load(cv);
+                    }
+                    for q in &x {
+                        let o = &mut out[..cv.ncols as usize];
+                        o.fill(0.0);
+                        match kernel {
+                            "marching" => vec_chunk_marching_simd(q.view(), cv, o, level),
+                            "hash" => vec_chunk_hash_simd(q.view(), cv, o, level),
+                            _ => vec_chunk_dense_simd(q.view(), cv, &scratch, o, level),
+                        }
+                        black_box(&o[0]);
+                    }
+                    if kernel == "dense" {
+                        scratch.clear(cv);
+                    }
+                }
+            },
+        );
+    }
+
+    // DenseRows layout: the direct row-pointer probe — the 8-wide
+    // row_ptr gather is the SIMD tier's biggest single win.
+    let mut dr = chunk_matrix(if quick { 2 } else { 8 }, 64, 256);
+    dr.apply_layout(&vec![ChunkStorage::DenseRows; dr.num_chunks()]);
+    let ndr = dr.num_chunks();
+    run_pair(
+        &mut report,
+        "dense-rows",
+        "probe",
+        budget,
+        nq * ndr,
+        level,
+        || {
+            for c in 0..ndr {
+                let cv = dr.view(c);
+                for q in &x {
+                    let o = &mut out[..cv.ncols as usize];
+                    o.fill(0.0);
+                    vec_chunk_dense_rows(q.view(), cv, o);
+                    black_box(&o[0]);
+                }
+            }
+        },
+        || {
+            for c in 0..ndr {
+                let cv = dr.view(c);
+                for q in &x {
+                    let o = &mut out[..cv.ncols as usize];
+                    o.fill(0.0);
+                    vec_chunk_dense_rows_simd(q.view(), cv, o, level);
+                    black_box(&o[0]);
+                }
+            }
+        },
+    );
+
+    // Merged spans: the tiny chunks coalesced — same walks, contiguous
+    // arrays (the locality the mscm layer pass groups for).
+    let mut merged = chunk_matrix(if quick { 64 } else { 256 }, 4, 2);
+    merged.apply_layout(&vec![ChunkStorage::Merged; merged.num_chunks()]);
+    let nm = merged.num_chunks();
+    run_pair(
+        &mut report,
+        "merged",
+        "binary",
+        budget,
+        nq * nm,
+        level,
+        || {
+            for q in &x {
+                for c in 0..nm {
+                    let cv = merged.view(c);
+                    let o = &mut out[..cv.ncols as usize];
+                    o.fill(0.0);
+                    vec_chunk_binary(q.view(), cv, o);
+                    black_box(&o[0]);
+                }
+            }
+        },
+        || {
+            for q in &x {
+                for c in 0..nm {
+                    let cv = merged.view(c);
+                    let o = &mut out[..cv.ncols as usize];
+                    o.fill(0.0);
+                    vec_chunk_binary_simd(q.view(), cv, o, level);
+                    black_box(&o[0]);
+                }
+            }
+        },
+    );
+
+    // End to end: the auto plan as resolved (tiers included) against the
+    // same plan pinned to the scalar tier — the planner's whole-engine
+    // tier win, and the guard that auto never loses to its scalar self.
+    let spec = &paper_suite(if quick { 40 } else { 10 })[1];
+    eprintln!("building {} model (B=32) for the end-to-end rows ...", spec.name);
+    let model = synth_model(spec, 32, 1);
+    let xm = synth_queries(spec, nq, 2);
+    let pc = PlannerConfig::default();
+    let plan = KernelPlan::auto(&model, MatmulAlgo::Mscm, &pc);
+    let scalar_plan = plan.clone().with_uniform_tier(KernelTier::Scalar);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+    let auto = InferenceEngine::new_with_plan(model.clone(), cfg, plan);
+    let scalar = InferenceEngine::new_with_plan(model, cfg, scalar_plan);
+    for (label, engine) in [("auto-plan", &auto), ("auto-plan-scalar-tier", &scalar)] {
+        let mut ws = engine.workspace();
+        let mut preds = vec![Vec::new(); nq];
+        let stats = bench_ms(2, 50, budget, || {
+            engine.predict_range(&xm, 0, nq, 10, 10, &mut ws, &mut preds);
+            black_box(&preds[0]);
+        });
+        let ns = stats.mean_ms * 1e6 / nq as f64;
+        println!("{:<26}{:>12.1} ns/query", format!("e2e/{label}"), ns);
+        report.record(&format!("e2e/{label}"), ns, nq, "predict_range beam=10");
+    }
+
+    report.finish(&args);
+}

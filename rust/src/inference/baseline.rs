@@ -12,6 +12,18 @@
 //! own: [`crate::metrics::EngineMetrics`] measures the whole layer
 //! expansion around the engine's dispatch, so baseline and MSCM timings
 //! are directly comparable and the per-column loops stay clock-free.
+//!
+//! # Why the baseline has no SIMD tier
+//!
+//! The MSCM kernels vectorize across *independent output rows* (see
+//! [`crate::sparse::simd`]), which keeps every output's accumulation
+//! order untouched. The per-column dot products here have the opposite
+//! shape: one serial `f32` accumulator per column, so the only thing a
+//! vector unit could speed up is the reduction itself — and any lane-wise
+//! partial-summing reorders the additions and breaks the bitwise
+//! equivalence between configurations. The planner therefore pins every
+//! baseline block to [`crate::inference::KernelTier::Scalar`], and this
+//! module stays tier-free by construction.
 
 use super::engine::Workspace;
 use super::{sigmoid, IterationMethod};

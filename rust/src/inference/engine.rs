@@ -37,10 +37,10 @@ use std::time::Instant;
 use super::baseline::{baseline_layer, build_col_hash_planned};
 use super::mscm::mscm_layer;
 use super::plan::{CostModel, KernelPlan, PlannerConfig};
-use super::{IterationMethod, MatmulAlgo};
+use super::{IterationMethod, KernelTier, MatmulAlgo};
 use crate::metrics::{EngineMetrics, LayerTrace, QueryTrace};
 use crate::sparse::iterators::DenseScratch;
-use crate::sparse::{ChunkStorage, ChunkedMatrix, CsrMatrix, SparseVec, U32Map};
+use crate::sparse::{ChunkStorage, ChunkedMatrix, CsrMatrix, SimdLevel, SparseVec, U32Map};
 use crate::tree::XmrModel;
 
 /// One retrieved label.
@@ -315,6 +315,11 @@ pub struct InferenceEngine {
     /// [`InferenceEngine::with_metrics`]. `None` (the default) keeps the
     /// hot path untouched: one branch per layer slice, no timers.
     metrics: Option<Arc<EngineMetrics>>,
+    /// SIMD capability detected once at construction. The *effective*
+    /// tier of a block is the plan's tier gated by this level: on scalar
+    /// hardware (or under `MSCM_FORCE_SCALAR=1`) SIMD-planned blocks run
+    /// the scalar kernels, bit for bit identically.
+    simd: SimdLevel,
 }
 
 impl InferenceEngine {
@@ -439,6 +444,7 @@ impl InferenceEngine {
             plan,
             col_hash,
             metrics: None,
+            simd: SimdLevel::detect(),
         }
     }
 
@@ -461,6 +467,7 @@ impl InferenceEngine {
             &self.model,
             self.config.algo,
             &self.plan,
+            self.simd,
             cost,
             pc,
         )));
@@ -486,6 +493,11 @@ impl InferenceEngine {
     /// The resolved kernel plan (uniform for fixed methods).
     pub fn plan(&self) -> &Arc<KernelPlan> {
         &self.plan
+    }
+
+    /// The SIMD capability this engine detected at construction.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
     }
 
     /// Bytes of side-index overhead beyond the raw weights — everything
@@ -641,7 +653,17 @@ impl InferenceEngine {
         let timer = self.metrics.as_ref().map(|_| Instant::now());
         match self.config.algo {
             MatmulAlgo::Mscm => {
-                mscm_layer(layer, x, qlo, n, methods, self.config.chunk_order, ws);
+                mscm_layer(
+                    layer,
+                    x,
+                    qlo,
+                    n,
+                    methods,
+                    self.plan.layer_tiers(li),
+                    self.config.chunk_order,
+                    self.simd,
+                    ws,
+                );
             }
             MatmulAlgo::Baseline => {
                 let col_hash = self.col_hash.as_ref().map(|c| &c[li]);
@@ -688,9 +710,17 @@ impl InferenceEngine {
             lt.beam_width = parents.len();
             let methods = self.plan.layer_methods(li);
             let storage = self.plan.layer_storage(li);
+            let tiers = self.plan.layer_tiers(li);
             for &(p, _) in parents {
                 lt.method_blocks[methods[p as usize].index()] += 1;
                 lt.storage_blocks[storage[p as usize].index()] += 1;
+                // Effective tier: the plan's tier gated by the hardware.
+                let t = if self.simd.is_vector() {
+                    tiers[p as usize]
+                } else {
+                    KernelTier::Scalar
+                };
+                lt.tier_blocks[t.index()] += 1;
             }
             let t = Instant::now();
             self.expand_layer(li, &xm, 0, 1, &mut ws);
@@ -978,10 +1008,12 @@ mod tests {
                 LayerPlan {
                     methods: vec![IterationMethod::MarchingPointers],
                     storage: vec![ChunkStorage::Csc],
+                    tiers: vec![KernelTier::Scalar],
                 },
                 LayerPlan {
                     methods: vec![IterationMethod::BinarySearch, IterationMethod::Hash],
                     storage: vec![ChunkStorage::Csc, ChunkStorage::Csc],
+                    tiers: vec![KernelTier::Simd, KernelTier::Scalar],
                 },
             ],
         };

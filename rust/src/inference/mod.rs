@@ -51,6 +51,32 @@
 //! the total in one number (and [`InferenceEngine::weight_bytes`] the
 //! layout-applied payload); on mixed-density models `Auto` is strictly
 //! below fixed `hash`.
+//!
+//! # The SIMD kernel tier ([`KernelTier`])
+//!
+//! Orthogonally to *which* intersection method runs, each chunk carries a
+//! kernel **tier**: [`KernelTier::Scalar`] (the seed loops, always
+//! available, the exactness oracle) or [`KernelTier::Simd`] (the
+//! vectorized variants in [`crate::sparse::simd`] — AVX2 on `x86_64`,
+//! NEON on `aarch64`). The hardware level is detected **once, at engine
+//! construction** ([`crate::sparse::simd::SimdLevel::detect`], overridden
+//! to scalar by `MSCM_FORCE_SCALAR=1`), and the *effective* tier of a
+//! block is `planned tier ∧ detected level`: a SIMD-planned shard file
+//! serves unchanged on hardware without the instructions, silently
+//! running the scalar oracle.
+//!
+//! Vectorization is **across independent output rows only** — gathered
+//! `row_ptr`/scratch probes whose hits are emitted in ascending lane
+//! order, and non-fused `mul`+`add` over runs of *consecutive* output
+//! columns, where each output lane receives exactly the one
+//! multiply-add it would get from the scalar loop. No FMA, no horizontal
+//! reductions, no per-entry reassociation: every `(algo, iteration,
+//! layout, tier)` combination stays bit-identical (pinned by
+//! `rust/tests/simd.rs` over the seeded harness, remainder lanes
+//! included). [`plan::CostModel`] carries per-method SIMD constants
+//! (`--calibrate` fits them on the real chunks) so `Auto` plans the
+//! vector tier only on chunks wide or dense enough to amortize the
+//! setup — tiny supports stay scalar.
 
 mod baseline;
 mod engine;
@@ -153,6 +179,59 @@ impl std::str::FromStr for IterationMethod {
     }
 }
 
+/// Which kernel *tier* evaluates a chunk's blocks: the scalar seed loops
+/// or their runtime-dispatched SIMD variants ([`crate::sparse::simd`]).
+///
+/// The tier is planned per chunk (like the method and the storage
+/// layout) and is purely a speed choice: both tiers are bitwise
+/// identical, and a plan's `Simd` entries degrade to `Scalar` at run
+/// time when the hardware level detected at engine construction has no
+/// vector instructions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    /// The portable scalar kernels — always available, and the exactness
+    /// oracle the SIMD tier is property-tested against.
+    Scalar,
+    /// Vectorized probe/emit variants (AVX2 / NEON), dispatched only
+    /// when [`crate::sparse::simd::SimdLevel::detect`] reports support.
+    Simd,
+}
+
+impl KernelTier {
+    /// Both tiers, scalar first.
+    pub const ALL: [KernelTier; 2] = [KernelTier::Scalar, KernelTier::Simd];
+
+    /// Histogram/serialization index (0..2).
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            KernelTier::Scalar => 0,
+            KernelTier::Simd => 1,
+        }
+    }
+
+    /// Inverse of [`KernelTier::index`].
+    pub fn from_index(i: usize) -> Option<KernelTier> {
+        KernelTier::ALL.get(i).copied()
+    }
+
+    /// Human-readable name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "Scalar",
+            KernelTier::Simd => "SIMD",
+        }
+    }
+
+    /// Compact name for plan histograms and metric keys.
+    pub fn short(&self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Simd => "simd",
+        }
+    }
+}
+
 /// Which masked-matmul algorithm evaluates eq. 6.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MatmulAlgo {
@@ -221,5 +300,16 @@ mod tests {
         }
         assert_eq!(IterationMethod::from_index(4), None);
         assert_eq!("auto".parse::<IterationMethod>(), Ok(IterationMethod::Auto));
+    }
+
+    #[test]
+    fn tier_index_round_trips() {
+        for (i, t) in KernelTier::ALL.into_iter().enumerate() {
+            assert_eq!(t.index(), i);
+            assert_eq!(KernelTier::from_index(i), Some(t));
+        }
+        assert_eq!(KernelTier::from_index(2), None);
+        assert_eq!(KernelTier::Simd.short(), "simd");
+        assert_eq!(KernelTier::Scalar.label(), "Scalar");
     }
 }

@@ -27,6 +27,22 @@
 //! would dominate and the code falls back to the comparison sort —
 //! producing the identical order either way.
 //!
+//! # Merged-span locality pass
+//!
+//! Chunk order is the right granularity for `Csc`/`DenseRows` chunks —
+//! each chunk is its own memory region — but sub-chunks of one
+//! [`MergedStore`](crate::sparse::chunked::MergedStore) span share a
+//! *single contiguous* region, and `(chunk asc, query asc)` order walks
+//! that region once per sub-chunk, re-streaming it from the top for
+//! every query each time. [`group_merged_spans`] therefore re-orders
+//! each sorted block segment that stays inside one merged span to
+//! `(query asc, chunk asc)`: every query then makes one streaming pass
+//! over the span's store memory. This is safe for exactness because
+//! cross-block evaluation order is free — each block accumulates into
+//! its own candidate slice, per-block summation order is untouched — the
+//! very invariant the `chunk_order_off_is_bitwise_identical` engine test
+//! pins.
+//!
 //! # Observability boundary
 //!
 //! This module carries **no** timing hooks: the engine's
@@ -38,11 +54,13 @@
 //! and the zero-allocation hot path (`rust/tests/alloc.rs`).
 
 use super::engine::Workspace;
-use super::{sigmoid, IterationMethod};
+use super::{sigmoid, IterationMethod, KernelTier};
 use crate::sparse::iterators::{
-    vec_chunk_binary, vec_chunk_dense, vec_chunk_dense_rows, vec_chunk_hash, vec_chunk_marching,
+    vec_chunk_binary, vec_chunk_binary_simd, vec_chunk_dense, vec_chunk_dense_rows,
+    vec_chunk_dense_rows_simd, vec_chunk_dense_simd, vec_chunk_hash, vec_chunk_hash_simd,
+    vec_chunk_marching, vec_chunk_marching_simd,
 };
-use crate::sparse::{ChunkStorage, ChunkView, CsrMatrix};
+use crate::sparse::{Chunk, ChunkStorage, ChunkView, CsrMatrix, SimdLevel};
 use crate::tree::Layer;
 
 /// Orders `ws.blocks` by `(chunk, query)` via a stable counting sort
@@ -104,24 +122,75 @@ fn sort_blocks_by_chunk(ws: &mut Workspace) {
     std::mem::swap(blocks, blocks_tmp);
 }
 
+/// The merged-span locality pass (module docs): within each maximal
+/// segment of chunk-sorted blocks whose chunks all live in **one**
+/// `MergedStore` span, re-orders to `(query asc, chunk asc)` so every
+/// query streams the span's contiguous store memory once. Segments
+/// touching a single sub-chunk are left alone (nothing to group), as is
+/// every non-merged chunk.
+///
+/// A sub-chunk's span is identified without any side table: slots are
+/// assigned consecutively within a run by `apply_layout`, so
+/// `chunk_id - merged_slot` is the id of the span's first chunk — a
+/// per-span fingerprint.
+///
+/// In-place and allocation-free (`sort_unstable` on the segment slice);
+/// the `(q, c)` keys are unique per block, so the unstable sort is
+/// deterministic.
+fn group_merged_spans(blocks: &mut [(u32, u32, f32)], chunks: &[Chunk]) {
+    let nb = blocks.len();
+    let mut i = 0;
+    while i < nb {
+        let c = blocks[i].0 as usize;
+        if chunks[c].storage != ChunkStorage::Merged {
+            i += 1;
+            continue;
+        }
+        let span = c - chunks[c].merged_slot as usize;
+        let mut j = i + 1;
+        let mut multi = false;
+        while j < nb {
+            let cj = blocks[j].0 as usize;
+            if chunks[cj].storage != ChunkStorage::Merged
+                || cj - chunks[cj].merged_slot as usize != span
+            {
+                break;
+            }
+            multi |= cj != c;
+            j += 1;
+        }
+        if multi {
+            blocks[i..j].sort_unstable_by_key(|&(c, q, _)| (q, c));
+        }
+        i = j;
+    }
+}
+
 /// Computes all layer candidates `(child node, path score)` for local
 /// queries `0..n` (rows `qlo..qlo+n` of `x`), writing each query's
 /// candidates into its pre-laid-out slice of the workspace candidate
 /// arena (the caller ran [`Workspace::begin_layer`]).
 ///
-/// `methods` is the layer's slice of the resolved
-/// [`KernelPlan`](super::plan::KernelPlan) — one concrete method per
-/// chunk, indexed by chunk id (a uniform slice for fixed
+/// `methods` and `tiers` are the layer's slices of the resolved
+/// [`KernelPlan`](super::plan::KernelPlan) — one concrete method and one
+/// kernel tier per chunk, indexed by chunk id (uniform slices for fixed
 /// configurations); the per-block lookup is a plain slice index, so the
-/// hot loop stays allocation-free. `chunk_order` is the per-engine
-/// Alg. 3 block-ordering switch (disabled only by the ablation bench).
+/// hot loop stays allocation-free. `level` is the hardware SIMD level
+/// the engine detected at construction: the *effective* tier of a block
+/// is `planned ∧ detected`, so SIMD-planned chunks silently run the
+/// (bitwise-identical) scalar kernels on plain hardware. `chunk_order`
+/// is the per-engine Alg. 3 block-ordering switch (disabled only by the
+/// ablation bench).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn mscm_layer(
     layer: &Layer,
     x: &CsrMatrix,
     qlo: usize,
     n: usize,
     methods: &[IterationMethod],
+    tiers: &[KernelTier],
     chunk_order: bool,
+    level: SimdLevel,
     ws: &mut Workspace,
 ) {
     // Collect nonzero blocks (Alg. 3 line 5), query-major.
@@ -143,6 +212,7 @@ pub(crate) fn mscm_layer(
     // setting where it cannot pay off. Queries tie-break for determinism.
     if n > 1 && chunk_order {
         sort_blocks_by_chunk(ws);
+        group_merged_spans(&mut ws.blocks, &layer.chunked.chunks);
     }
 
     let chunked = &layer.chunked;
@@ -167,35 +237,58 @@ pub(crate) fn mscm_layer(
         let out = &mut ws.out_block[..width];
         out.fill(0.0);
         let xq = x.row(qlo + q as usize);
+        // Effective tier: planned ∧ detected. Both tiers are bitwise
+        // identical, so this is purely a speed dispatch.
+        let simd = level.is_vector() && tiers[p as usize] == KernelTier::Simd;
         if chunk.storage == ChunkStorage::DenseRows {
             // The layout bakes the row-position array into the chunk's
             // own row_ptr: every method degenerates to the same direct
             // probe (bitwise identical), with no scratch to load.
-            vec_chunk_dense_rows(xq, chunk, out);
+            if simd {
+                vec_chunk_dense_rows_simd(xq, chunk, out, level);
+            } else {
+                vec_chunk_dense_rows(xq, chunk, out);
+            }
         } else {
-            match methods[p as usize] {
-                IterationMethod::MarchingPointers => vec_chunk_marching(xq, chunk, out),
-                IterationMethod::BinarySearch => vec_chunk_binary(xq, chunk, out),
+            let m = methods[p as usize];
+            if m == IterationMethod::DenseLookup {
+                // Load the chunk's rows into the dense scratch once
+                // per chunk — amortized across all queries hitting it.
+                if ws.loaded_chunk != Some(p) {
+                    let scratch = ws.dense_pos.as_mut().expect("dense scratch");
+                    if let Some(prev) = ws.loaded_chunk {
+                        scratch.clear(chunked.view(prev as usize));
+                    }
+                    scratch.load(chunk);
+                    ws.loaded_chunk = Some(p);
+                }
+            }
+            match (m, simd) {
+                (IterationMethod::MarchingPointers, false) => vec_chunk_marching(xq, chunk, out),
+                (IterationMethod::MarchingPointers, true) => {
+                    vec_chunk_marching_simd(xq, chunk, out, level)
+                }
+                (IterationMethod::BinarySearch, false) => vec_chunk_binary(xq, chunk, out),
+                (IterationMethod::BinarySearch, true) => {
+                    vec_chunk_binary_simd(xq, chunk, out, level)
+                }
                 // Merged sub-chunks keep no row map; binary search is
                 // their designated (bitwise-identical) stand-in.
-                IterationMethod::Hash if chunk.storage == ChunkStorage::Merged => {
+                (IterationMethod::Hash, false) if chunk.storage == ChunkStorage::Merged => {
                     vec_chunk_binary(xq, chunk, out)
                 }
-                IterationMethod::Hash => vec_chunk_hash(xq, chunk, out),
-                IterationMethod::DenseLookup => {
-                    // Load the chunk's rows into the dense scratch once
-                    // per chunk — amortized across all queries hitting it.
-                    if ws.loaded_chunk != Some(p) {
-                        let scratch = ws.dense_pos.as_mut().expect("dense scratch");
-                        if let Some(prev) = ws.loaded_chunk {
-                            scratch.clear(chunked.view(prev as usize));
-                        }
-                        scratch.load(chunk);
-                        ws.loaded_chunk = Some(p);
-                    }
-                    vec_chunk_dense(xq, chunk, ws.dense_pos.as_ref().unwrap(), out);
+                (IterationMethod::Hash, true) if chunk.storage == ChunkStorage::Merged => {
+                    vec_chunk_binary_simd(xq, chunk, out, level)
                 }
-                IterationMethod::Auto => unreachable!("plans only hold concrete methods"),
+                (IterationMethod::Hash, false) => vec_chunk_hash(xq, chunk, out),
+                (IterationMethod::Hash, true) => vec_chunk_hash_simd(xq, chunk, out, level),
+                (IterationMethod::DenseLookup, false) => {
+                    vec_chunk_dense(xq, chunk, ws.dense_pos.as_ref().unwrap(), out)
+                }
+                (IterationMethod::DenseLookup, true) => {
+                    vec_chunk_dense_simd(xq, chunk, ws.dense_pos.as_ref().unwrap(), out, level)
+                }
+                (IterationMethod::Auto, _) => unreachable!("plans only hold concrete methods"),
             }
         }
         // Conditional-probability combine (Alg. 1 lines 7–8): σ then
@@ -251,7 +344,18 @@ mod tests {
         }
         ws.begin_layer(&l.chunked, n);
         let methods = vec![iter; l.chunked.num_chunks()];
-        mscm_layer(&l, x, 0, n, &methods, true, &mut ws);
+        let tiers = vec![KernelTier::Scalar; l.chunked.num_chunks()];
+        mscm_layer(
+            &l,
+            x,
+            0,
+            n,
+            &methods,
+            &tiers,
+            true,
+            SimdLevel::detect(),
+            &mut ws,
+        );
         (0..n).map(|q| ws.cand(q).to_vec()).collect()
     }
 
@@ -320,6 +424,49 @@ mod tests {
         );
     }
 
+    #[test]
+    fn merged_spans_group_by_query_csc_untouched() {
+        // Four 2-col chunks; the first three coalesce into one merged
+        // span, the last stays Csc. After the (chunk, query) counting
+        // sort, the locality pass must re-sort the merged span's segment
+        // to (query, chunk) — gathering each query's sub-chunk blocks
+        // adjacently — while leaving the Csc segment in chunk order.
+        use crate::sparse::{ChunkStorage, ChunkedMatrix};
+        let cols: Vec<SparseVec> = (0..8)
+            .map(|c| SparseVec::from_pairs(vec![(c as u32 % 4, 1.0 + c as f32)]))
+            .collect();
+        let csc = CscMatrix::from_cols(cols, 4);
+        let mut chunked = ChunkedMatrix::from_csc(&csc, &[0, 2, 4, 6, 8], false);
+        chunked.apply_layout(&[
+            ChunkStorage::Merged,
+            ChunkStorage::Merged,
+            ChunkStorage::Merged,
+            ChunkStorage::Csc,
+        ]);
+        let mut blocks = vec![
+            (0u32, 0u32, 0.5f32),
+            (0, 1, 0.25),
+            (1, 0, 0.125),
+            (1, 2, 0.0625),
+            (2, 1, 0.75),
+            (3, 0, 0.375),
+            (3, 1, 0.1875),
+        ];
+        super::group_merged_spans(&mut blocks, &chunked.chunks);
+        assert_eq!(
+            blocks,
+            vec![
+                (0, 0, 0.5),
+                (1, 0, 0.125),
+                (0, 1, 0.25),
+                (2, 1, 0.75),
+                (1, 2, 0.0625),
+                (3, 0, 0.375),
+                (3, 1, 0.1875),
+            ]
+        );
+    }
+
     fn dummy_workspace() -> Workspace {
         let l = layer();
         let model = crate::tree::XmrModel::new(4, vec![Layer::new(l.csc.clone(), &[0, 4], true)]);
@@ -361,7 +508,18 @@ mod tests {
                 ws.push_beam(b);
             }
             ws.begin_layer(&l.chunked, n);
-            mscm_layer(&l, &x, 0, n, &mix, true, &mut ws);
+            let tiers = vec![KernelTier::Scalar; mix.len()];
+            mscm_layer(
+                &l,
+                &x,
+                0,
+                n,
+                &mix,
+                &tiers,
+                true,
+                SimdLevel::detect(),
+                &mut ws,
+            );
             let got: Vec<Vec<(u32, f32)>> = (0..n).map(|q| ws.cand(q).to_vec()).collect();
             assert_eq!(got, uniform, "{mix:?}");
         }
@@ -408,7 +566,21 @@ mod tests {
                 }
                 ws.begin_layer(&l.chunked, n);
                 let methods = vec![iter; l.chunked.num_chunks()];
-                mscm_layer(&l, &x, 0, n, &methods, true, &mut ws);
+                // Force-SIMD tiers: on scalar hardware they degrade to
+                // the scalar kernels, on SIMD hardware they must still
+                // be bitwise identical — either way `got == uniform`.
+                let tiers = vec![KernelTier::Simd; l.chunked.num_chunks()];
+                mscm_layer(
+                    &l,
+                    &x,
+                    0,
+                    n,
+                    &methods,
+                    &tiers,
+                    true,
+                    SimdLevel::detect(),
+                    &mut ws,
+                );
                 let got: Vec<Vec<(u32, f32)>> = (0..n).map(|q| ws.cand(q).to_vec()).collect();
                 assert_eq!(got, uniform, "{layout:?}/{iter:?}");
             }

@@ -75,11 +75,13 @@
 
 use std::time::Instant;
 
-use super::{IterationMethod, MatmulAlgo};
+use super::{IterationMethod, KernelTier, MatmulAlgo};
 use crate::sparse::iterators::{
-    vec_chunk_binary, vec_chunk_dense, vec_chunk_hash, vec_chunk_marching, DenseScratch,
+    vec_chunk_binary, vec_chunk_binary_simd, vec_chunk_dense, vec_chunk_dense_simd,
+    vec_chunk_hash, vec_chunk_hash_simd, vec_chunk_marching, vec_chunk_marching_simd,
+    DenseScratch,
 };
-use crate::sparse::{Chunk, ChunkStats, ChunkStorage, SparseVec, U32Map};
+use crate::sparse::{Chunk, ChunkStats, ChunkStorage, SimdLevel, SparseVec, U32Map};
 use crate::tree::XmrModel;
 use crate::util::rng::{Rng, Zipf};
 
@@ -91,6 +93,12 @@ pub const MERGE_MAX_NNZ: usize = 32;
 
 /// Largest sibling width of a [`ChunkStorage::Merged`] candidate.
 pub const MERGE_MAX_WIDTH: usize = 8;
+
+/// Fixed per-block overhead (ns) charged to the SIMD tier: lane setup,
+/// the masked remainder, and the run-detection branches. Keeps tiny
+/// chunks — where a whole block is a handful of scalar steps — on the
+/// scalar tier even though the per-unit SIMD constant is lower.
+pub const SIMD_SETUP_NS: f64 = 16.0;
 
 /// Planner inputs: workload hints and the optional calibration budget.
 #[derive(Clone, Copy, Debug)]
@@ -126,22 +134,32 @@ impl Default for PlannerConfig {
     }
 }
 
-/// Per-method nanosecond constants multiplying the module-doc shapes.
+/// Per-method nanosecond constants multiplying the module-doc shapes,
+/// one set per kernel tier.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostModel {
-    /// Indexed by [`IterationMethod::index`]: marching, binary, hash,
-    /// dense.
+    /// Scalar tier, indexed by [`IterationMethod::index`]: marching,
+    /// binary, hash, dense.
     pub k: [f64; 4],
+    /// SIMD tier, same indexing. A SIMD block is additionally charged
+    /// the flat [`SIMD_SETUP_NS`], so `k_simd[m] < k[m]` does *not* mean
+    /// SIMD always wins — only on blocks with enough units to amortize
+    /// the setup.
+    pub k_simd: [f64; 4],
 }
 
 impl Default for CostModel {
     /// Analytical constants: one compare-and-advance per element for
     /// marching, a couple of comparisons per binary-search step, several
     /// dependent loads per hash probe, one array read per dense probe
-    /// (the dense load/clear walk is carried in the `2r/n` shape).
+    /// (the dense load/clear walk is carried in the `2r/n` shape). The
+    /// SIMD constants reflect what the lanes actually parallelize: the
+    /// serial intersection walks gain only their emit loops (modest),
+    /// the probe kernels gain 8-wide gathers (larger).
     fn default() -> Self {
         Self {
             k: [1.0, 2.0, 4.0, 1.0],
+            k_simd: [0.85, 1.9, 3.2, 0.5],
         }
     }
 }
@@ -204,25 +222,91 @@ impl CostModel {
         self.k[IterationMethod::DenseLookup.index()] * 1.5 * pc.query_nnz_hint as f64
     }
 
+    /// SIMD-tier price of one MSCM block: the per-unit SIMD constant
+    /// plus the flat [`SIMD_SETUP_NS`].
+    pub fn block_cost_simd(
+        &self,
+        method: IterationMethod,
+        stats: &ChunkStats,
+        pc: &PlannerConfig,
+    ) -> f64 {
+        let q = pc.query_nnz_hint as f64;
+        let r = stats.rows as f64;
+        self.k_simd[method.index()] * Self::units(method, q, r, pc.batch_hint as f64)
+            + SIMD_SETUP_NS
+    }
+
+    /// SIMD-tier price of one [`ChunkStorage::DenseRows`] block (the
+    /// 8-wide `row_ptr` gather probe).
+    pub fn dense_rows_block_cost_simd(&self, pc: &PlannerConfig) -> f64 {
+        self.k_simd[IterationMethod::DenseLookup.index()] * 1.5 * pc.query_nnz_hint as f64
+            + SIMD_SETUP_NS
+    }
+
     /// Predicted nanoseconds of one block under its *planned*
-    /// `(algo, method, storage)` — the single dispatch the drift
+    /// `(algo, method, storage, tier)` — the single dispatch the drift
     /// telemetry ([`crate::metrics::PlanDrift`]) joins measurements
     /// against, mirroring how the kernels actually run: a
     /// [`ChunkStorage::DenseRows`] chunk bypasses method dispatch into
-    /// the direct probe, every other layout runs `method`'s shape.
+    /// the direct probe, every other layout runs `method`'s shape, and
+    /// the SIMD tier swaps in the vector constants + setup overhead.
+    /// The baseline has no SIMD tier (per-column dots keep a single
+    /// serial accumulator — see `inference::baseline`), so its price
+    /// ignores `tier`.
     pub fn planned_block_cost(
         &self,
         algo: MatmulAlgo,
         method: IterationMethod,
         storage: ChunkStorage,
+        tier: KernelTier,
         stats: &ChunkStats,
         pc: &PlannerConfig,
     ) -> f64 {
-        match (algo, storage) {
-            (MatmulAlgo::Mscm, ChunkStorage::DenseRows) => self.dense_rows_block_cost(pc),
-            (MatmulAlgo::Mscm, _) => self.block_cost(method, stats, pc),
-            (MatmulAlgo::Baseline, _) => self.baseline_block_cost(method, stats, pc),
+        match (algo, storage, tier) {
+            (MatmulAlgo::Mscm, ChunkStorage::DenseRows, KernelTier::Scalar) => {
+                self.dense_rows_block_cost(pc)
+            }
+            (MatmulAlgo::Mscm, ChunkStorage::DenseRows, KernelTier::Simd) => {
+                self.dense_rows_block_cost_simd(pc)
+            }
+            (MatmulAlgo::Mscm, _, KernelTier::Scalar) => self.block_cost(method, stats, pc),
+            (MatmulAlgo::Mscm, _, KernelTier::Simd) => self.block_cost_simd(method, stats, pc),
+            (MatmulAlgo::Baseline, _, _) => self.baseline_block_cost(method, stats, pc),
         }
+    }
+
+    /// Picks one layer's per-chunk kernel tiers: SIMD exactly where its
+    /// predicted block price (vector constants + setup) beats scalar,
+    /// and only when `level` has vector kernels at all. The baseline
+    /// stays scalar everywhere.
+    pub fn plan_layer_tiers(
+        &self,
+        algo: MatmulAlgo,
+        stats: &[ChunkStats],
+        methods: &[IterationMethod],
+        storage: &[ChunkStorage],
+        level: SimdLevel,
+        pc: &PlannerConfig,
+    ) -> Vec<KernelTier> {
+        if algo == MatmulAlgo::Baseline || !level.is_vector() {
+            return vec![KernelTier::Scalar; methods.len()];
+        }
+        methods
+            .iter()
+            .zip(storage)
+            .zip(stats)
+            .map(|((&m, &s), st)| {
+                let scalar =
+                    self.planned_block_cost(algo, m, s, KernelTier::Scalar, st, pc);
+                let simd = self.planned_block_cost(algo, m, s, KernelTier::Simd, st, pc);
+                // Strict `<`: ties keep the scalar oracle.
+                if simd < scalar {
+                    KernelTier::Simd
+                } else {
+                    KernelTier::Scalar
+                }
+            })
+            .collect()
     }
 
     /// Cheapest concrete method for one chunk under `algo`.
@@ -370,57 +454,89 @@ impl CostModel {
         let mut scratch = DenseScratch::new(model.dim);
         let max_w = sample.iter().map(|c| c.ncols as usize).max().unwrap_or(1);
         let mut out = vec![0.0f32; max_w];
-        for m in CONCRETE {
-            let mut units = 0.0f64;
-            let t = Instant::now();
-            for (s, chunk) in sample.iter().enumerate() {
-                let chunk = if m == IterationMethod::Hash { &hashed[s] } else { *chunk };
-                let cv = chunk.view();
-                // One load per chunk, shared by the whole query sample —
-                // mirrors chunk-order evaluation; the `2r/n` shape below
-                // charges the same amortization.
-                if m == IterationMethod::DenseLookup {
-                    scratch.load(cv);
-                }
-                for x in &queries {
-                    let o = &mut out[..chunk.ncols as usize];
-                    o.fill(0.0);
-                    let xv = x.view();
-                    match m {
-                        IterationMethod::MarchingPointers => vec_chunk_marching(xv, cv, o),
-                        IterationMethod::BinarySearch => vec_chunk_binary(xv, cv, o),
-                        IterationMethod::Hash => vec_chunk_hash(xv, cv, o),
-                        IterationMethod::DenseLookup => vec_chunk_dense(xv, cv, &scratch, o),
-                        IterationMethod::Auto => unreachable!(),
+        // Pass 1 fits the scalar constants; pass 2 (SIMD hardware only)
+        // fits the vector constants by timing the `_simd` kernels on the
+        // same chunks and queries — apples to apples.
+        let mut tiers = vec![None];
+        let level = SimdLevel::detect();
+        if level.is_vector() {
+            tiers.push(Some(level));
+        }
+        for tier in tiers {
+            for m in CONCRETE {
+                let mut units = 0.0f64;
+                let t = Instant::now();
+                for (s, chunk) in sample.iter().enumerate() {
+                    let chunk = if m == IterationMethod::Hash { &hashed[s] } else { *chunk };
+                    let cv = chunk.view();
+                    // One load per chunk, shared by the whole query sample —
+                    // mirrors chunk-order evaluation; the `2r/n` shape below
+                    // charges the same amortization.
+                    if m == IterationMethod::DenseLookup {
+                        scratch.load(cv);
                     }
-                    std::hint::black_box(&mut *o);
-                    units += Self::units(
-                        m,
-                        x.nnz() as f64,
-                        chunk.nnz_rows() as f64,
-                        queries.len() as f64,
-                    );
+                    for x in &queries {
+                        let o = &mut out[..chunk.ncols as usize];
+                        o.fill(0.0);
+                        let xv = x.view();
+                        match (m, tier) {
+                            (IterationMethod::MarchingPointers, None) => {
+                                vec_chunk_marching(xv, cv, o)
+                            }
+                            (IterationMethod::BinarySearch, None) => vec_chunk_binary(xv, cv, o),
+                            (IterationMethod::Hash, None) => vec_chunk_hash(xv, cv, o),
+                            (IterationMethod::DenseLookup, None) => {
+                                vec_chunk_dense(xv, cv, &scratch, o)
+                            }
+                            (IterationMethod::MarchingPointers, Some(lv)) => {
+                                vec_chunk_marching_simd(xv, cv, o, lv)
+                            }
+                            (IterationMethod::BinarySearch, Some(lv)) => {
+                                vec_chunk_binary_simd(xv, cv, o, lv)
+                            }
+                            (IterationMethod::Hash, Some(lv)) => vec_chunk_hash_simd(xv, cv, o, lv),
+                            (IterationMethod::DenseLookup, Some(lv)) => {
+                                vec_chunk_dense_simd(xv, cv, &scratch, o, lv)
+                            }
+                            (IterationMethod::Auto, _) => unreachable!(),
+                        }
+                        std::hint::black_box(&mut *o);
+                        units += Self::units(
+                            m,
+                            x.nnz() as f64,
+                            chunk.nnz_rows() as f64,
+                            queries.len() as f64,
+                        );
+                    }
+                    if m == IterationMethod::DenseLookup {
+                        scratch.clear(cv);
+                    }
                 }
-                if m == IterationMethod::DenseLookup {
-                    scratch.clear(cv);
+                let ns = t.elapsed().as_nanos() as f64;
+                if units > 0.0 && ns > 0.0 {
+                    match tier {
+                        None => self.k[m.index()] = ns / units,
+                        Some(_) => self.k_simd[m.index()] = ns / units,
+                    }
                 }
-            }
-            let ns = t.elapsed().as_nanos() as f64;
-            if units > 0.0 && ns > 0.0 {
-                self.k[m.index()] = ns / units;
             }
         }
         self
     }
 }
 
-/// One iteration method + storage layout per chunk of one layer.
+/// One iteration method + storage layout + kernel tier per chunk of one
+/// layer.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LayerPlan {
     /// Indexed by chunk id; never contains `Auto`.
     pub methods: Vec<IterationMethod>,
     /// Physical weight layout per chunk, co-indexed with `methods`.
     pub storage: Vec<ChunkStorage>,
+    /// Kernel tier per chunk, co-indexed with `methods`. `Simd` entries
+    /// degrade to scalar at run time when the serving hardware has no
+    /// vector unit ([`SimdLevel::detect`]), bitwise identically.
+    pub tiers: Vec<KernelTier>,
 }
 
 /// A resolved kernel plan: one concrete method and one storage layout
@@ -447,6 +563,7 @@ impl KernelPlan {
                 .map(|l| LayerPlan {
                     methods: vec![method; l.chunked.num_chunks()],
                     storage: vec![ChunkStorage::Csc; l.chunked.num_chunks()],
+                    tiers: vec![KernelTier::Scalar; l.chunked.num_chunks()],
                 })
                 .collect(),
         }
@@ -458,6 +575,18 @@ impl KernelPlan {
     pub fn with_uniform_storage(mut self, storage: ChunkStorage) -> Self {
         for l in &mut self.layers {
             l.storage = vec![storage; l.methods.len()];
+        }
+        self
+    }
+
+    /// Forces `tier` on every chunk of every layer (the tier-ablation
+    /// and zero-alloc harnesses pin the SIMD tier this way; the planner
+    /// itself mixes tiers per chunk). Safe on any hardware: `Simd`
+    /// entries degrade to the scalar kernels when the detected level has
+    /// no vector unit.
+    pub fn with_uniform_tier(mut self, tier: KernelTier) -> Self {
+        for l in &mut self.layers {
+            l.tiers = vec![tier; l.methods.len()];
         }
         self
     }
@@ -476,6 +605,10 @@ impl KernelPlan {
         cost: &CostModel,
         pc: &PlannerConfig,
     ) -> Self {
+        // Tiers are planned against the hardware doing the planning: on
+        // scalar-only machines every chunk stays scalar (plans still
+        // serve anywhere — the tier is a speed hint, not a requirement).
+        let level = SimdLevel::detect();
         Self {
             layers: model
                 .layers
@@ -493,7 +626,13 @@ impl KernelPlan {
                     } else {
                         vec![ChunkStorage::Csc; methods.len()]
                     };
-                    LayerPlan { methods, storage }
+                    let tiers =
+                        cost.plan_layer_tiers(algo, &stats, &methods, &storage, level, pc);
+                    LayerPlan {
+                        methods,
+                        storage,
+                        tiers,
+                    }
                 })
                 .collect(),
         }
@@ -513,7 +652,8 @@ impl KernelPlan {
     }
 
     /// True when the plan's shape matches `model` (one method + one
-    /// layout per chunk per layer) and every entry is concrete.
+    /// layout + one tier per chunk per layer) and every entry is
+    /// concrete.
     pub fn matches(&self, model: &XmrModel) -> bool {
         self.layers.len() == model.layers.len()
             && self
@@ -523,6 +663,7 @@ impl KernelPlan {
                 .all(|(p, l)| {
                     p.methods.len() == l.chunked.num_chunks()
                         && p.storage.len() == p.methods.len()
+                        && p.tiers.len() == p.methods.len()
                 })
             && !self.uses(IterationMethod::Auto)
     }
@@ -538,6 +679,19 @@ impl KernelPlan {
     #[inline]
     pub fn layer_storage(&self, li: usize) -> &[ChunkStorage] {
         &self.layers[li].storage
+    }
+
+    /// Per-chunk kernel tiers of layer `li`.
+    #[inline]
+    pub fn layer_tiers(&self, li: usize) -> &[KernelTier] {
+        &self.layers[li].tiers
+    }
+
+    /// True when any chunk of any layer plans the SIMD tier.
+    pub fn uses_simd(&self) -> bool {
+        self.layers
+            .iter()
+            .any(|l| l.tiers.iter().any(|&t| t == KernelTier::Simd))
     }
 
     /// True when any chunk of any layer plans `method`.
@@ -569,7 +723,7 @@ impl KernelPlan {
     }
 
     /// Model-level summary: per-layer and total method histograms plus
-    /// the storage-layout histogram.
+    /// the storage-layout and kernel-tier histograms.
     pub fn summary(&self) -> PlanSummary {
         let per_layer: Vec<[usize; 4]> = self
             .layers
@@ -594,10 +748,23 @@ impl KernelPlan {
                 storage_total[s.index()] += 1;
             }
         }
+        let per_layer_simd: Vec<usize> = self
+            .layers
+            .iter()
+            .map(|l| l.tiers.iter().filter(|&&t| t == KernelTier::Simd).count())
+            .collect();
+        let mut tier_total = [0usize; 2];
+        for l in &self.layers {
+            for t in &l.tiers {
+                tier_total[t.index()] += 1;
+            }
+        }
         PlanSummary {
             per_layer,
             total,
             storage_total,
+            per_layer_simd,
+            tier_total,
         }
     }
 }
@@ -647,6 +814,12 @@ pub struct PlanSummary {
     pub total: [usize; 4],
     /// Chunk counts per storage layout over the whole model.
     pub storage_total: [usize; 3],
+    /// SIMD-tier chunk count per layer (the scalar count is the layer's
+    /// chunk total minus this).
+    pub per_layer_simd: Vec<usize>,
+    /// Chunk counts per kernel tier over the whole model, indexed by
+    /// [`KernelTier::index`].
+    pub tier_total: [usize; 2],
 }
 
 impl std::fmt::Display for PlanSummary {
@@ -656,7 +829,8 @@ impl std::fmt::Display for PlanSummary {
             for (m, &c) in CONCRETE.iter().zip(h) {
                 write!(f, "  {}={}", m.short(), c)?;
             }
-            writeln!(f)?;
+            let chunks: usize = h.iter().sum();
+            writeln!(f, "  [simd {}/{}]", self.per_layer_simd[li], chunks)?;
         }
         write!(f, "total:  ")?;
         for (m, &c) in CONCRETE.iter().zip(&self.total) {
@@ -666,6 +840,11 @@ impl std::fmt::Display for PlanSummary {
         write!(f, "layouts:")?;
         for (s, &c) in ChunkStorage::ALL.iter().zip(&self.storage_total) {
             write!(f, "  {}={}", s.short(), c)?;
+        }
+        writeln!(f)?;
+        write!(f, "tiers:  ")?;
+        for (t, &c) in KernelTier::ALL.iter().zip(&self.tier_total) {
+            write!(f, "  {}={}", t.short(), c)?;
         }
         Ok(())
     }
@@ -805,11 +984,68 @@ mod tests {
         assert!(!plan.uses(IterationMethod::Hash));
         assert!(!plan.uses_storage(ChunkStorage::DenseRows));
         assert!(!plan.uses_storage(ChunkStorage::Merged));
+        assert!(!plan.uses_simd(), "uniform plans start scalar");
         let s = plan.summary();
         let chunks: usize = m.layers.iter().map(|l| l.chunked.num_chunks()).sum();
         assert_eq!(s.total[IterationMethod::BinarySearch.index()], chunks);
         assert_eq!(s.storage_total[ChunkStorage::Csc.index()], chunks);
         assert_eq!(s.per_layer.len(), m.depth());
+        assert_eq!(s.tier_total, [chunks, 0]);
+
+        let plan = plan.with_uniform_tier(KernelTier::Simd);
+        assert!(plan.matches(&m));
+        assert!(plan.uses_simd());
+        assert_eq!(plan.summary().tier_total, [0, chunks]);
+    }
+
+    #[test]
+    fn tier_pass_prefers_simd_on_big_chunks_only() {
+        // Pure cost arithmetic — the level is passed in, so this test is
+        // hardware-independent.
+        let cost = CostModel::default();
+        let pc = PlannerConfig {
+            query_nnz_hint: 64,
+            batch_hint: 32,
+            ..Default::default()
+        };
+        let big = chunk_with_rows(2000, 32).stats();
+        let tiny = chunk_with_rows(2, 2).stats();
+        let stats = [big, tiny];
+        let methods = [IterationMethod::DenseLookup, IterationMethod::MarchingPointers];
+        let storage = [ChunkStorage::DenseRows, ChunkStorage::Csc];
+        let tiers = cost.plan_layer_tiers(
+            MatmulAlgo::Mscm,
+            &stats,
+            &methods,
+            &storage,
+            SimdLevel::Avx2,
+            &pc,
+        );
+        assert_eq!(tiers[0], KernelTier::Simd, "wide dense-rows chunk goes SIMD");
+        assert_eq!(
+            tiers[1],
+            KernelTier::Scalar,
+            "a tiny chunk cannot amortize the SIMD setup"
+        );
+        // No vector unit, or the baseline algo: everything stays scalar.
+        let none = cost.plan_layer_tiers(
+            MatmulAlgo::Mscm,
+            &stats,
+            &methods,
+            &storage,
+            SimdLevel::None,
+            &pc,
+        );
+        assert!(none.iter().all(|&t| t == KernelTier::Scalar));
+        let base = cost.plan_layer_tiers(
+            MatmulAlgo::Baseline,
+            &stats,
+            &methods,
+            &storage,
+            SimdLevel::Avx2,
+            &pc,
+        );
+        assert!(base.iter().all(|&t| t == KernelTier::Scalar));
     }
 
     #[test]
@@ -846,8 +1082,8 @@ mod tests {
             ..Default::default()
         };
         let cost = CostModel::default().calibrate(&m, &pc);
-        for k in cost.k {
-            assert!(k.is_finite() && k > 0.0, "bad constant {k}");
+        for k in cost.k.iter().chain(&cost.k_simd) {
+            assert!(k.is_finite() && *k > 0.0, "bad constant {k}");
         }
         // a calibrated model still yields a valid plan
         let plan = KernelPlan::auto_with_cost(&m, MatmulAlgo::Mscm, &cost, &pc);

@@ -8,8 +8,10 @@
 //!
 //! - [`sparse`] — sparse-matrix substrate: sparse vectors, CSR/CSC, the
 //!   paper's **column-chunked** weight format (eq. 7–8), the four
-//!   support-intersection iteration methods (§4 items 1–4), and a compact
-//!   open-addressing `u32 -> u32` map used by the hash iterators.
+//!   support-intersection iteration methods (§4 items 1–4) with their
+//!   runtime-dispatched **SIMD tier** ([`sparse::simd`]: AVX2/NEON,
+//!   detected once, bitwise identical to the scalar kernels), and a
+//!   compact open-addressing `u32 -> u32` map used by the hash iterators.
 //! - [`tree`] — the linear XMR tree model (§3): layers of sparse ranker
 //!   weight matrices, tree topology, binary model serialization.
 //! - [`train`] — everything needed to *produce* models: TFIDF featurizer,
@@ -23,7 +25,8 @@
 //!   masked matrix product evaluated by the vanilla per-column baseline or
 //!   by MSCM, each under all four iteration methods — or under the
 //!   per-chunk cost-model **kernel planner** (`IterationMethod::Auto`,
-//!   [`inference::plan`]), which picks the best method chunk by chunk
+//!   [`inference::plan`]), which picks the best method — and kernel
+//!   tier, scalar vs SIMD ([`inference::KernelTier`]) — chunk by chunk
 //!   with bitwise-identical output and plan-driven side indexes;
 //!   multi-threaded batch inference (§6.1); a NapkinXC-style per-column
 //!   hash comparator (§5.2).

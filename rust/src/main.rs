@@ -68,10 +68,12 @@ INFERENCE
                 select ns — and print the plan-drift join afterwards)
   plan          --model m.bin [--algo mscm|baseline] [--calibrate N]
                 [--batch-hint N] [--plan-query-nnz N] [--no-layout]
-                (resolve the per-chunk kernel plan; print the per-layer
-                method histogram, the storage-layout histogram, and the
-                side-index + weight memory vs the fixed hash / all-CSC
-                baselines)
+                (resolve the per-chunk kernel plan; print the detected
+                SIMD level, the scalar/SIMD cost constants — fitted when
+                --calibrate N times both kernel tiers — the per-layer
+                method histogram with its SIMD-vs-scalar split, the
+                storage-layout and tier histograms, and the side-index +
+                weight memory vs the fixed hash / all-CSC baselines)
   eval          --data corpus.svm [--branching B] [--beams 1,5,10,20]
                 [--test-frac 0.2]  (train/test split; P@k/R@k/nDCG per beam)
   serve         --model m.bin [--workers N] [--max-batch N] [--rps N]
@@ -116,7 +118,9 @@ INFERENCE
   --iter auto resolves a per-chunk kernel plan (cost model over chunk
   stats; --calibrate N times the kernels on N synthetic queries first)
   that also picks each chunk's weight storage layout (CSC, dense-rows,
-  merged; --no-layout keeps the seed CSC layout everywhere);
+  merged; --no-layout keeps the seed CSC layout everywhere) and kernel
+  tier (scalar or runtime-dispatched SIMD — AVX2/NEON — where the cost
+  model says the lanes amortize; MSCM_FORCE_SCALAR=1 forces scalar);
   predictions are bitwise identical to every fixed method.
 
 PAPER REPRODUCTION (synthetic suite; see DESIGN.md §5-6)
@@ -495,9 +499,11 @@ fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
     Ok(())
 }
 
-/// Resolves and prints a model's per-chunk kernel plan: the per-layer
-/// method histogram, and the side-index memory the plan needs versus the
-/// fixed `hash` configuration (the planner's measurable savings).
+/// Resolves and prints a model's per-chunk kernel plan: the detected
+/// SIMD level, the scalar/SIMD cost constants (fitted when `--calibrate`
+/// timed both tiers), the per-layer method histogram with its
+/// SIMD-vs-scalar split, and the side-index memory the plan needs versus
+/// the fixed `hash` configuration (the planner's measurable savings).
 fn cmd_plan(opts: &Opts) -> Result<(), anyhow::Error> {
     let path = opts
         .get("model")
@@ -510,7 +516,29 @@ fn cmd_plan(opts: &Opts) -> Result<(), anyhow::Error> {
     if pc.calibrate > 0 {
         eprintln!("calibrating cost model on {} synthetic queries ...", pc.calibrate);
     }
-    let plan = KernelPlan::auto(&model, algo, &pc);
+    let level = mscm_xmr::sparse::SimdLevel::detect();
+    println!(
+        "simd: {} (runtime-dispatched; MSCM_FORCE_SCALAR=1 forces scalar)",
+        level.label()
+    );
+    let cost = mscm_xmr::inference::CostModel::default().calibrate(&model, &pc);
+    let fmt_k = |k: &[f64; 4]| {
+        format!(
+            "marching={:.3} binary={:.3} hash={:.3} dense={:.3}",
+            k[0], k[1], k[2], k[3]
+        )
+    };
+    println!(
+        "cost constants (ns/unit, {}):",
+        if pc.calibrate > 0 { "fitted" } else { "analytical defaults" }
+    );
+    println!("  scalar: {}", fmt_k(&cost.k));
+    println!(
+        "  simd:   {} (+{:.0} ns setup per block)",
+        fmt_k(&cost.k_simd),
+        mscm_xmr::inference::plan::SIMD_SETUP_NS
+    );
+    let plan = KernelPlan::auto_with_cost(&model, algo, &cost, &pc);
     println!(
         "plan (algo {}, query-nnz hint {}, batch hint {}):",
         if algo == MatmulAlgo::Mscm { "mscm" } else { "baseline" },

@@ -14,13 +14,17 @@
 //! The hot path pays exactly one `Instant` pair per layer slice (one
 //! call to [`crate::inference::InferenceEngine::expand_layer`]) plus a
 //! walk over the already-resident beam parents accumulating into two
-//! stack arrays, flushed as at most `4 × 3` relaxed atomic adds. No
+//! stack arrays, flushed as at most `4 × 3 × 2` relaxed atomic adds. No
 //! locks, no allocations — `rust/tests/alloc.rs` pins the zero-alloc
 //! invariant with metrics enabled on the online, batch and sharded
 //! paths. Block attribution is exact, not sampled: every beamed parent
-//! is one block of its chunk's `(method, storage)` class, and the
+//! is one block of its chunk's `(method, storage, tier)` class, and the
 //! predicted cost of *those* chunks (precomputed per chunk at enable
 //! time) is what accumulates, so the join compares identical workloads.
+//! The tier half of the class is the **effective** tier — the plan's
+//! tier gated by the engine's detected SIMD level — so a SIMD-planned
+//! chunk running on scalar hardware is attributed (and cost-predicted)
+//! as the scalar kernel it actually executed.
 //!
 //! Layer wall time is measured once per slice rather than per class;
 //! [`DriftLayer`] therefore carries the measured ns exactly, while
@@ -32,25 +36,30 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::inference::{CostModel, IterationMethod, KernelPlan, MatmulAlgo, PlannerConfig};
-use crate::sparse::ChunkStorage;
+use crate::inference::{
+    CostModel, IterationMethod, KernelPlan, KernelTier, MatmulAlgo, PlannerConfig,
+};
+use crate::sparse::{ChunkStorage, SimdLevel};
 use crate::tree::XmrModel;
 use crate::util::Json;
 
 use super::Snapshot;
 
-/// Chunk classes: 4 concrete methods × 3 storage layouts.
-const CLASSES: usize = 12;
+/// Chunk classes: 4 concrete methods × 3 storage layouts × 2 kernel
+/// tiers (scalar classes occupy the low half so tier-free readers keep
+/// their indices).
+const CLASSES: usize = 24;
 
 #[inline]
-fn class_of(method: IterationMethod, storage: ChunkStorage) -> usize {
-    method.index() * 3 + storage.index()
+fn class_of(method: IterationMethod, storage: ChunkStorage, tier: KernelTier) -> usize {
+    tier.index() * 12 + method.index() * 3 + storage.index()
 }
 
-fn class_parts(class: usize) -> (IterationMethod, ChunkStorage) {
+fn class_parts(class: usize) -> (IterationMethod, ChunkStorage, KernelTier) {
     (
-        IterationMethod::from_index(class / 3).expect("class method in range"),
+        IterationMethod::from_index(class / 3 % 4).expect("class method in range"),
         ChunkStorage::from_index(class % 3).expect("class storage in range"),
+        KernelTier::from_index(class / 12).expect("class tier in range"),
     )
 }
 
@@ -89,6 +98,7 @@ impl EngineMetrics {
         model: &XmrModel,
         algo: MatmulAlgo,
         plan: &KernelPlan,
+        level: SimdLevel,
         cost: &CostModel,
         pc: &PlannerConfig,
     ) -> Self {
@@ -99,13 +109,22 @@ impl EngineMetrics {
             .map(|(li, layer)| {
                 let methods = plan.layer_methods(li);
                 let storage = plan.layer_storage(li);
+                let tiers = plan.layer_tiers(li);
                 let nc = layer.chunked.num_chunks();
                 let mut chunk_class = Vec::with_capacity(nc);
                 let mut chunk_pred_ns = Vec::with_capacity(nc);
                 for c in 0..nc {
                     let stats = layer.chunked.chunk_stats(c);
-                    chunk_class.push(class_of(methods[c], storage[c]) as u8);
-                    let pred = cost.planned_block_cost(algo, methods[c], storage[c], &stats, pc);
+                    // Attribute (and price) what actually runs: SIMD-planned
+                    // chunks degrade to scalar on non-vector hardware.
+                    let tier = if level.is_vector() {
+                        tiers[c]
+                    } else {
+                        KernelTier::Scalar
+                    };
+                    chunk_class.push(class_of(methods[c], storage[c], tier) as u8);
+                    let pred =
+                        cost.planned_block_cost(algo, methods[c], storage[c], tier, &stats, pc);
                     chunk_pred_ns.push(pred.max(0.0).round() as u64);
                 }
                 LayerMetrics {
@@ -169,11 +188,12 @@ impl EngineMetrics {
                 }
                 let pred = lm.pred_ns[class].load(Ordering::Relaxed);
                 predicted_ns += pred;
-                let (method, storage) = class_parts(class);
+                let (method, storage, tier) = class_parts(class);
                 cells.push(DriftCell {
                     layer: li,
                     method,
                     storage,
+                    tier,
                     blocks,
                     predicted_ns: pred,
                 });
@@ -192,6 +212,8 @@ impl EngineMetrics {
     /// `engine.`): `{prefix}layer{li}.ns` / `.calls` per layer and
     /// `{prefix}layer{li}.{method}.{storage}.blocks` / `.pred_ns` per
     /// touched chunk class — the form the `Stats` wire frame exports.
+    /// SIMD-tier classes add a `.simd` component before `.blocks` /
+    /// `.pred_ns`; scalar classes keep the historical key shape.
     pub fn export_into(&self, snap: &mut Snapshot, prefix: &str) {
         for (li, lm) in self.layers.iter().enumerate() {
             snap.counters.insert(
@@ -207,8 +229,11 @@ impl EngineMetrics {
                 if blocks == 0 {
                     continue;
                 }
-                let (method, storage) = class_parts(class);
-                let key = format!("{prefix}layer{li}.{}.{}", method.short(), storage.short());
+                let (method, storage, tier) = class_parts(class);
+                let mut key = format!("{prefix}layer{li}.{}.{}", method.short(), storage.short());
+                if tier == KernelTier::Simd {
+                    key.push_str(".simd");
+                }
                 snap.counters.insert(format!("{key}.blocks"), blocks);
                 snap.counters.insert(
                     format!("{key}.pred_ns"),
@@ -245,8 +270,8 @@ impl DriftLayer {
 }
 
 /// One chunk-class row of the drift join: how many blocks of a
-/// `(layer, method, storage)` class ran and what the cost model said
-/// they would cost.
+/// `(layer, method, storage, tier)` class ran and what the cost model
+/// said they would cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DriftCell {
     /// Layer index.
@@ -255,6 +280,8 @@ pub struct DriftCell {
     pub method: IterationMethod,
     /// Planned storage layout of the class.
     pub storage: ChunkStorage,
+    /// Effective kernel tier of the class (plan ∧ detected hardware).
+    pub tier: KernelTier,
     /// Blocks expanded.
     pub blocks: u64,
     /// Cost-model prediction for those blocks, ns.
@@ -310,10 +337,11 @@ impl PlanDrift {
         }
         for c in &self.cells {
             out.push_str(&format!(
-                "    layer {} {}/{}: blocks={} predicted={}ns\n",
+                "    layer {} {}/{}/{}: blocks={} predicted={}ns\n",
                 c.layer,
                 c.method.short(),
                 c.storage.short(),
+                c.tier.short(),
                 c.blocks,
                 c.predicted_ns
             ));
@@ -346,6 +374,7 @@ impl PlanDrift {
                     ("layer", Json::Num(c.layer as f64)),
                     ("method", Json::Str(c.method.short().to_string())),
                     ("storage", Json::Str(c.storage.short().to_string())),
+                    ("tier", Json::Str(c.tier.short().to_string())),
                     ("blocks", Json::Num(c.blocks as f64)),
                     ("predicted_ns", Json::Num(c.predicted_ns as f64)),
                 ])
@@ -367,11 +396,23 @@ mod tests {
 
     #[test]
     fn class_round_trips() {
+        let mut seen = std::collections::HashSet::new();
+        for t in KernelTier::ALL {
+            for m in IterationMethod::ALL {
+                for s in ChunkStorage::ALL {
+                    let c = class_of(m, s, t);
+                    assert!(c < CLASSES);
+                    assert!(seen.insert(c), "class {c} collides");
+                    assert_eq!(class_parts(c), (m, s, t));
+                }
+            }
+        }
+        assert_eq!(seen.len(), CLASSES);
+        // Scalar classes occupy the low half — existing tier-free
+        // consumers of the class indices keep their meaning.
         for m in IterationMethod::ALL {
             for s in ChunkStorage::ALL {
-                let c = class_of(m, s);
-                assert!(c < CLASSES);
-                assert_eq!(class_parts(c), (m, s));
+                assert!(class_of(m, s, KernelTier::Scalar) < 12);
             }
         }
     }

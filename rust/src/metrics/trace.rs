@@ -23,7 +23,8 @@
 //!     "expand_ns": int,      // masked-matmul expansion of this layer
 //!     "select_ns": int,      // global beam selection
 //!     "methods": {"marching"|"binary"|"hash"|"dense": blocks, ...},
-//!     "storages": {"csc"|"dense-rows"|"merged": blocks, ...}
+//!     "storages": {"csc"|"dense-rows"|"merged": blocks, ...},
+//!     "tiers": {"scalar"|"simd": blocks, ...}  // effective (hardware-gated)
 //!   }, ...]
 //! }
 //! ```
@@ -55,6 +56,10 @@ pub struct LayerTrace {
     /// Blocks per storage layout, indexed by
     /// [`crate::sparse::ChunkStorage::index`].
     pub storage_blocks: [u64; 3],
+    /// Blocks per *effective* kernel tier (the plan's tier gated by the
+    /// engine's detected SIMD level), indexed by
+    /// [`crate::inference::KernelTier::index`].
+    pub tier_blocks: [u64; 2],
 }
 
 /// A full per-query trace ([`crate::inference::InferenceEngine::predict_traced`]).
@@ -78,7 +83,7 @@ impl QueryTrace {
     /// JSON encoding (schema in the module docs). Zero-block method /
     /// storage entries are omitted.
     pub fn to_json(&self) -> Json {
-        use crate::inference::IterationMethod;
+        use crate::inference::{IterationMethod, KernelTier};
         use crate::sparse::ChunkStorage;
         let layers = self
             .layers
@@ -108,6 +113,18 @@ impl QueryTrace {
                         })
                         .collect(),
                 );
+                let tiers = Json::Obj(
+                    KernelTier::ALL
+                        .iter()
+                        .filter(|t| l.tier_blocks[t.index()] != 0)
+                        .map(|t| {
+                            (
+                                t.short().to_string(),
+                                Json::Num(l.tier_blocks[t.index()] as f64),
+                            )
+                        })
+                        .collect(),
+                );
                 Json::obj(vec![
                     ("layer", Json::Num(l.layer as f64)),
                     ("beam_width", Json::Num(l.beam_width as f64)),
@@ -116,6 +133,7 @@ impl QueryTrace {
                     ("select_ns", Json::Num(l.select_ns as f64)),
                     ("methods", methods),
                     ("storages", storages),
+                    ("tiers", tiers),
                 ])
             })
             .collect();
@@ -150,6 +168,7 @@ mod tests {
                 select_ns: 20,
                 method_blocks: [0, 0, 1, 0],
                 storage_blocks: [1, 0, 0],
+                tier_blocks: [1, 0],
             }],
         };
         let j = t.to_json();
@@ -167,6 +186,11 @@ mod tests {
             l0.get("storages").unwrap().get("csc").unwrap().as_f64(),
             Some(1.0)
         );
+        assert_eq!(
+            l0.get("tiers").unwrap().get("scalar").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert!(l0.get("tiers").unwrap().get("simd").is_none());
         // Round-trips through the strict parser.
         assert!(Json::parse(&j.to_string()).is_ok());
     }

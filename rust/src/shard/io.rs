@@ -17,11 +17,16 @@
 //!                     costed for the baseline algo; mandatory — a
 //!                     truncated V3 file is rejected)
 //! plan          if has_plan: per layer, num_chunks u64 then
-//!               num_chunks x u32 method codes (IterationMethod::index)
-//!               then num_chunks x u32 storage codes
-//!               (ChunkStorage::index)
+//!               num_chunks x u32 method codes, then num_chunks x u32
+//!               storage codes (ChunkStorage::index)
 //! (end)         trailing bytes are rejected
 //! ```
+//! A method code folds the chunk's kernel tier into the high range:
+//! `IterationMethod::index` (0–3) for scalar chunks,
+//! `IterationMethod::index + 4` (4–7) for SIMD-planned chunks; codes ≥ 8
+//! are rejected. An all-scalar plan therefore writes codes 0–3 — byte
+//! for byte what pre-tier writers produced — and pre-tier readers only
+//! choke on files that actually carry SIMD tiers.
 //! The body is read/written by the same codec as whole models, so format
 //! evolution stays in one place. The trailing kernel-plan section lets a
 //! planned (and possibly timing-calibrated) model load and serve without
@@ -45,7 +50,7 @@ use std::path::{Path, PathBuf};
 
 use super::partition::{ShardModel, ShardSpec};
 use crate::inference::plan::{KernelPlan, LayerPlan};
-use crate::inference::{IterationMethod, MatmulAlgo};
+use crate::inference::{IterationMethod, KernelTier, MatmulAlgo};
 use crate::sparse::ChunkStorage;
 use crate::tree::{read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64};
 
@@ -83,7 +88,15 @@ pub fn save_shard(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> 
             )?;
             for layer in &plan.layers {
                 write_u64(&mut w, layer.methods.len() as u64)?;
-                let codes: Vec<u32> = layer.methods.iter().map(|m| m.index() as u32).collect();
+                // Kernel tier rides in the method code's high range
+                // (+4 for SIMD) so all-scalar plans stay byte-identical
+                // to the pre-tier encoding.
+                let codes: Vec<u32> = layer
+                    .methods
+                    .iter()
+                    .zip(&layer.tiers)
+                    .map(|(m, t)| (m.index() + 4 * t.index()) as u32)
+                    .collect();
                 write_u32s(&mut w, &codes)?;
                 let codes: Vec<u32> = layer.storage.iter().map(|s| s.index() as u32).collect();
                 write_u32s(&mut w, &codes)?;
@@ -102,10 +115,21 @@ fn read_plan(r: &mut impl Read, depth: usize, with_storage: bool) -> io::Result<
         let n = read_u64(r)? as usize;
         let codes = read_u32s(r, n)?;
         let mut methods = Vec::with_capacity(n);
+        let mut tiers = Vec::with_capacity(n);
         for c in codes {
-            methods.push(IterationMethod::from_index(c as usize).ok_or_else(|| {
+            if c >= 8 {
+                return Err(invalid(format!(
+                    "layer {li}: unknown iteration-method code {c}"
+                )));
+            }
+            methods.push(IterationMethod::from_index(c as usize % 4).ok_or_else(|| {
                 invalid(format!("layer {li}: unknown iteration-method code {c}"))
             })?);
+            tiers.push(if c >= 4 {
+                KernelTier::Simd
+            } else {
+                KernelTier::Scalar
+            });
         }
         let storage = if with_storage {
             let codes = read_u32s(r, n)?;
@@ -119,7 +143,11 @@ fn read_plan(r: &mut impl Read, depth: usize, with_storage: bool) -> io::Result<
         } else {
             vec![ChunkStorage::Csc; n]
         };
-        layers.push(LayerPlan { methods, storage });
+        layers.push(LayerPlan {
+            methods,
+            storage,
+            tiers,
+        });
     }
     Ok(KernelPlan { layers })
 }
@@ -404,6 +432,54 @@ mod tests {
         for (a, b) in shards.iter().zip(&loaded) {
             assert_eq!(a.plan, b.plan, "shard {}", a.spec.shard_id);
         }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn simd_tiers_round_trip_in_envelope() {
+        use crate::inference::{IterationMethod, KernelPlan};
+        let m = tiny_model(20, 4, 3, 24);
+        let mut shards = partition(&m, 2);
+        // A hand-mixed tier assignment: first chunk of every layer SIMD,
+        // the rest scalar — exercises both halves of the code range.
+        for sh in &mut shards {
+            let mut plan = KernelPlan::uniform(&sh.model, IterationMethod::MarchingPointers);
+            for l in &mut plan.layers {
+                l.tiers[0] = KernelTier::Simd;
+            }
+            sh.plan = Some((MatmulAlgo::Mscm, plan));
+        }
+        let dir = crate::util::temp_dir("shard-io-tiers");
+        save_shards(&shards, &dir).unwrap();
+        let loaded = load_shards(&dir, false).unwrap();
+        for (a, b) in shards.iter().zip(&loaded) {
+            assert_eq!(a.plan, b.plan, "shard {}", a.spec.shard_id);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_method_code_is_rejected() {
+        // Method codes 0–7 are the tier-folded range; 8+ must be
+        // rejected, not wrapped around.
+        use crate::inference::{IterationMethod, KernelPlan};
+        let m = tiny_model(16, 3, 2, 4);
+        let mut shards = partition(&m, 2);
+        let plan = KernelPlan::uniform(&shards[0].model, IterationMethod::MarchingPointers);
+        let nc_bottom = plan.layers.last().unwrap().methods.len();
+        shards[0].plan = Some((MatmulAlgo::Mscm, plan));
+        let dir = crate::util::temp_dir("shard-io-badmethod");
+        let path = shard_file_name(&dir, 0, 2);
+        std::fs::create_dir_all(&dir).unwrap();
+        save_shard(&shards[0], &path).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        // The bottom layer's plan row is methods then storage (u32 LE
+        // each): the last method code sits nc_bottom u32s from the end.
+        let off = full.len() - 4 * (nc_bottom + 1);
+        full[off] = 8;
+        std::fs::write(&path, &full).unwrap();
+        let err = load_shard(&path, false).unwrap_err();
+        assert!(err.to_string().contains("iteration-method"), "{err}");
         std::fs::remove_dir_all(dir).ok();
     }
 

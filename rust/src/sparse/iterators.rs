@@ -27,8 +27,24 @@
 //! evaluated by [`vec_chunk_dense_rows`], whatever method the plan named
 //! — the probe *is* that layout's hash/dense/marching walk, and all
 //! kernels are bitwise identical anyway.
+//!
+//! # SIMD tier
+//!
+//! Each kernel additionally has a `_simd` variant taking the
+//! [`SimdLevel`] detected at engine construction. They compute the
+//! *bitwise identical* result by vectorizing only across independent
+//! output rows ([`crate::sparse::simd`] has the full argument):
+//!
+//! - the emit loop runs lane-parallel over runs of consecutive output
+//!   columns (non-fused mul+add; [`simd::axpy_emit`]) at every level;
+//! - on AVX2, [`vec_chunk_dense_rows_simd`] gathers 8 `row_ptr` probes
+//!   per step and [`vec_chunk_dense_simd`] gathers 8 scratch probes per
+//!   step, emitting hit lanes in ascending (scalar) order;
+//! - at [`SimdLevel::None`] every `_simd` variant *is* its scalar
+//!   oracle, which is how SIMD-planned shards serve on plain hardware.
 
 use super::chunked::{ChunkStorage, ChunkView};
+use super::simd::{self, SimdLevel};
 use super::vec::{lower_bound, SparseVecView};
 
 /// Accumulate `x_val * K[row at pos]` into `out`.
@@ -186,6 +202,167 @@ pub fn vec_chunk_dense_rows(x: SparseVecView<'_>, chunk: ChunkView<'_>, out: &mu
     }
 }
 
+/// [`emit`] with the run-vectorized accumulate loop
+/// ([`simd::axpy_emit`]) — bitwise identical at every level.
+#[inline(always)]
+fn emit_tiered(chunk: &ChunkView<'_>, pos: usize, x_val: f32, out: &mut [f32], level: SimdLevel) {
+    let (cols, vals) = chunk.row_entries(pos);
+    simd::axpy_emit(cols, vals, x_val, out, level);
+}
+
+/// SIMD tier of [`vec_chunk_marching`]: the intersection walk is
+/// inherently serial, but every matched row's emit vectorizes over
+/// consecutive-column runs.
+pub fn vec_chunk_marching_simd(
+    x: SparseVecView<'_>,
+    chunk: ChunkView<'_>,
+    out: &mut [f32],
+    level: SimdLevel,
+) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    debug_assert!(chunk.storage != ChunkStorage::DenseRows);
+    let rows = chunk.row_indices;
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < x.indices.len() && b < rows.len() {
+        let (ia, ib) = (x.indices[a], rows[b]);
+        if ia == ib {
+            emit_tiered(&chunk, b, x.values[a], out, level);
+            a += 1;
+            b += 1;
+        } else if ia < ib {
+            a += 1;
+        } else {
+            b += 1;
+        }
+    }
+}
+
+/// SIMD tier of [`vec_chunk_binary`]: `LowerBound` jumps unchanged,
+/// vectorized emit.
+pub fn vec_chunk_binary_simd(
+    x: SparseVecView<'_>,
+    chunk: ChunkView<'_>,
+    out: &mut [f32],
+    level: SimdLevel,
+) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    debug_assert!(chunk.storage != ChunkStorage::DenseRows);
+    let rows = chunk.row_indices;
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < x.indices.len() && b < rows.len() {
+        let (ia, ib) = (x.indices[a], rows[b]);
+        if ia == ib {
+            emit_tiered(&chunk, b, x.values[a], out, level);
+            a += 1;
+            b += 1;
+        } else if ia < ib {
+            a += lower_bound(&x.indices[a..], ib);
+        } else {
+            b += lower_bound(&rows[b..], ia);
+        }
+    }
+}
+
+/// SIMD tier of [`vec_chunk_hash`]: scalar map probes (the probe is
+/// latency-bound; vectorizing it would buy nothing), vectorized emit.
+///
+/// # Panics
+/// If the chunk carries no row map (only `Csc` chunks can).
+pub fn vec_chunk_hash_simd(
+    x: SparseVecView<'_>,
+    chunk: ChunkView<'_>,
+    out: &mut [f32],
+    level: SimdLevel,
+) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    let map = chunk
+        .row_map
+        .expect("hash iteration requires chunk row maps (build_row_maps)");
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        if let Some(pos) = map.get(i) {
+            emit_tiered(&chunk, pos as usize, xv, out, level);
+        }
+    }
+}
+
+/// SIMD tier of [`vec_chunk_dense`]: on AVX2 the scratch probe gathers
+/// 8 query rows per step and emits hit lanes in ascending lane order —
+/// exactly the scalar probe order; elsewhere scalar probes with
+/// vectorized emit.
+pub fn vec_chunk_dense_simd(
+    x: SparseVecView<'_>,
+    chunk: ChunkView<'_>,
+    scratch: &DenseScratch,
+    out: &mut [f32],
+    level: SimdLevel,
+) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    debug_assert!(scratch.loaded, "DenseScratch must be loaded with this chunk");
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 && x.indices.len() >= 8 {
+        let (ids, vals) = (x.indices, x.values);
+        let mut k = 0;
+        while k + 8 <= ids.len() {
+            let mut m = simd::nonzero_mask8(&scratch.pos, &ids[k..k + 8]);
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let p = scratch.pos[ids[k + lane] as usize];
+                emit_tiered(&chunk, (p - 1) as usize, vals[k + lane], out, level);
+            }
+            k += 8;
+        }
+        for (&i, &xv) in ids[k..].iter().zip(&vals[k..]) {
+            let p = scratch.pos[i as usize];
+            if p != 0 {
+                emit_tiered(&chunk, (p - 1) as usize, xv, out, level);
+            }
+        }
+        return;
+    }
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        let p = scratch.pos[i as usize];
+        if p != 0 {
+            emit_tiered(&chunk, (p - 1) as usize, xv, out, level);
+        }
+    }
+}
+
+/// SIMD tier of [`vec_chunk_dense_rows`]: on AVX2 the `row_ptr` probe
+/// gathers spans for 8 query nonzeros per step (start and end pointers,
+/// two gathers) and emits the non-empty lanes in ascending lane order;
+/// elsewhere scalar probes with vectorized emit.
+pub fn vec_chunk_dense_rows_simd(
+    x: SparseVecView<'_>,
+    chunk: ChunkView<'_>,
+    out: &mut [f32],
+    level: SimdLevel,
+) {
+    debug_assert_eq!(out.len(), chunk.ncols as usize);
+    debug_assert_eq!(chunk.storage, ChunkStorage::DenseRows);
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 && x.indices.len() >= 8 {
+        let (ids, vals) = (x.indices, x.values);
+        let mut k = 0;
+        while k + 8 <= ids.len() {
+            let mut m = simd::row_span_mask8(chunk.row_ptr, &ids[k..k + 8]);
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                m &= m - 1;
+                emit_tiered(&chunk, ids[k + lane] as usize, vals[k + lane], out, level);
+            }
+            k += 8;
+        }
+        for (&i, &xv) in ids[k..].iter().zip(&vals[k..]) {
+            emit_tiered(&chunk, i as usize, xv, out, level);
+        }
+        return;
+    }
+    for (&i, &xv) in x.indices.iter().zip(x.values) {
+        emit_tiered(&chunk, i as usize, xv, out, level);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +456,54 @@ mod tests {
         vec_chunk_binary(x.view(), chunk, &mut out);
         vec_chunk_hash(x.view(), chunk, &mut out);
         assert_eq!(out, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn simd_variants_match_scalar_oracles() {
+        use crate::sparse::ChunkStorage;
+        // A query wide enough (>= 8 nnz) to engage the gather paths.
+        let csc = CscMatrix::from_cols(
+            (0..12)
+                .map(|j| {
+                    SparseVec::from_pairs(
+                        (0..10).map(|r| ((r * 2 + j % 3) as u32, 0.3 * j as f32 - r as f32 * 0.11)).collect(),
+                    )
+                })
+                .collect(),
+            24,
+        );
+        let m = ChunkedMatrix::from_csc(&csc, &[0, 12], true);
+        let x = SparseVec::from_pairs((0..11).map(|i| ((i * 2) as u32, 1.0 + 0.2 * i as f32)).collect());
+        let chunk = m.view(0);
+        let width = chunk.ncols as usize;
+        for level in [SimdLevel::None, SimdLevel::detect()] {
+            let mut expect = vec![0.0f32; width];
+            vec_chunk_marching(x.view(), chunk, &mut expect);
+            let bitwise =
+                |o: &[f32]| o.iter().zip(&expect).all(|(a, b)| a.to_bits() == b.to_bits());
+
+            let mut out = vec![0.0f32; width];
+            vec_chunk_marching_simd(x.view(), chunk, &mut out, level);
+            assert!(bitwise(&out), "marching_simd at {level:?}");
+            out.fill(0.0);
+            vec_chunk_binary_simd(x.view(), chunk, &mut out, level);
+            assert!(bitwise(&out), "binary_simd at {level:?}");
+            out.fill(0.0);
+            vec_chunk_hash_simd(x.view(), chunk, &mut out, level);
+            assert!(bitwise(&out), "hash_simd at {level:?}");
+            let mut scratch = DenseScratch::new(24);
+            scratch.load(chunk);
+            out.fill(0.0);
+            vec_chunk_dense_simd(x.view(), chunk, &scratch, &mut out, level);
+            assert!(bitwise(&out), "dense_simd at {level:?}");
+            scratch.clear(chunk);
+
+            let mut dr = m.clone();
+            dr.apply_layout(&[ChunkStorage::DenseRows]);
+            out.fill(0.0);
+            vec_chunk_dense_rows_simd(x.view(), dr.view(0), &mut out, level);
+            assert!(bitwise(&out), "dense_rows_simd at {level:?}");
+        }
     }
 
     #[test]

@@ -11,9 +11,23 @@
 //!   horizontal array of per-parent **chunks** (eq. 7–8), each chunk a
 //!   vertical sparse array of sparse row vectors over the sibling columns.
 //!
+//! # Kernels and the SIMD tier
+//!
 //! [`iterators`] implements the four ways of walking the support
 //! intersection `S(x) ∩ S(K)` (marching pointers, binary search, hash-map,
-//! dense lookup) shared by the baseline and MSCM kernels.
+//! dense lookup) shared by the baseline and MSCM kernels — each in two
+//! **tiers**: the portable scalar loop and a runtime-dispatched SIMD
+//! variant (`vec_chunk_*_simd`, backed by [`simd`]). The SIMD tier
+//! vectorizes only across *independent* output rows — 8-lane AVX2
+//! gathers of `row_ptr`/scratch probes whose hits are emitted in scalar
+//! lane order, and non-fused lane-parallel `mul`+`add` over runs of
+//! consecutive output columns — so every output entry accumulates the
+//! exact same values in the exact same order as the scalar tier, and the
+//! two tiers are **bitwise identical** (pinned by `rust/tests/simd.rs`).
+//! [`simd::SimdLevel::detect`] resolves the hardware once per process
+//! (AVX2 on `x86_64`, NEON on `aarch64`, scalar otherwise or under
+//! `MSCM_FORCE_SCALAR=1`); the scalar tier is both the universal
+//! fallback and the exactness oracle.
 //!
 //! # Per-chunk weight layouts ([`ChunkStorage`])
 //!
@@ -51,10 +65,12 @@ pub mod csc;
 pub mod csr;
 pub mod hashmap;
 pub mod iterators;
+pub mod simd;
 pub mod vec;
 
 pub use chunked::{Chunk, ChunkStats, ChunkStorage, ChunkView, ChunkedMatrix};
 pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use hashmap::U32Map;
+pub use simd::SimdLevel;
 pub use vec::{SparseVec, SparseVecView};

@@ -1,0 +1,314 @@
+//! Runtime SIMD capability detection and the lane-level primitives
+//! behind the vectorized kernel tier
+//! ([`crate::inference::KernelTier::Simd`]).
+//!
+//! # Bitwise-exactness contract
+//!
+//! Every primitive here vectorizes **across independent output lanes
+//! only**; no operation ever changes the value or the order of the
+//! floating-point work a single output entry receives:
+//!
+//! - [`axpy_emit`] performs `out[c] += x * v` per entry with a separate
+//!   vector multiply and vector add — **never FMA**, whose fused single
+//!   rounding would differ from the scalar `mul` + `add` — and only over
+//!   runs of *consecutive, distinct* output columns, so each lane gets
+//!   exactly the one multiply-add the scalar loop would give it, in the
+//!   same order.
+//! - The gather probes ([`row_span_mask8`], [`nonzero_mask8`]) read
+//!   integers only; hit lanes are consumed in ascending lane order, which
+//!   is exactly the scalar probe order.
+//!
+//! Hence the SIMD tier is bit-for-bit the scalar tier on every input —
+//! property-pinned by `rust/tests/simd.rs` over the seeded model
+//! generator, remainder lanes (`nnz % 8 != 0`, run breaks) included.
+//!
+//! # Dispatch
+//!
+//! [`SimdLevel::detect`] runs once per process (cached): AVX2 via CPUID
+//! on `x86_64`, NEON unconditionally on `aarch64` (baseline mandatory
+//! there), [`SimdLevel::None`] elsewhere — or everywhere when
+//! `MSCM_FORCE_SCALAR=1` is set, which is how CI exercises the scalar
+//! fallback arm on SIMD hardware. Engines snapshot the level at
+//! construction; a plan's SIMD entries simply degrade to the scalar
+//! kernels when the level is `None`, so shard files planned on one
+//! machine serve identically on any other.
+
+use std::sync::OnceLock;
+
+/// The vector instruction set available to the SIMD kernel tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdLevel {
+    /// No usable vector unit (or `MSCM_FORCE_SCALAR=1`): the SIMD tier
+    /// degrades to the scalar kernels.
+    None,
+    /// 256-bit AVX2: 8-lane f32 axpy and 8-lane `i32` gather probes.
+    Avx2,
+    /// 128-bit NEON: 4-lane f32 axpy (no gather — probes stay scalar).
+    Neon,
+}
+
+impl SimdLevel {
+    /// The process-wide detected level, computed once and cached.
+    ///
+    /// `MSCM_FORCE_SCALAR=1` overrides detection to [`SimdLevel::None`]
+    /// (read at first call only, like the detection itself).
+    pub fn detect() -> SimdLevel {
+        static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+        *LEVEL.get_or_init(|| {
+            if matches!(std::env::var("MSCM_FORCE_SCALAR").as_deref(), Ok("1")) {
+                return SimdLevel::None;
+            }
+            detect_raw()
+        })
+    }
+
+    /// True when vector kernels exist at this level.
+    pub fn is_vector(&self) -> bool {
+        *self != SimdLevel::None
+    }
+
+    /// f32 lanes per vector step (1 when scalar).
+    pub fn lanes(&self) -> usize {
+        match self {
+            SimdLevel::None => 1,
+            SimdLevel::Avx2 => 8,
+            SimdLevel::Neon => 4,
+        }
+    }
+
+    /// Human-readable name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimdLevel::None => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_raw() -> SimdLevel {
+    if is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::None
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_raw() -> SimdLevel {
+    // NEON is a mandatory part of the aarch64 baseline ISA.
+    SimdLevel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_raw() -> SimdLevel {
+    SimdLevel::None
+}
+
+/// `out[cols[k]] += x * vals[k]` for every `k` in ascending order —
+/// the emit loop of every kernel — vectorizing runs of consecutive
+/// output columns at the given level. Bitwise identical to the scalar
+/// loop (see the module docs); with [`SimdLevel::None`] it *is* the
+/// scalar loop.
+///
+/// `cols` must be strictly increasing (distinct output columns of one
+/// stored row — guaranteed by chunk construction) with every value
+/// `< out.len()`.
+#[inline]
+pub(crate) fn axpy_emit(cols: &[u16], vals: &[f32], x: f32, out: &mut [f32], level: SimdLevel) {
+    debug_assert_eq!(cols.len(), vals.len());
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 && cols.len() >= 8 {
+        let n = cols.len();
+        let mut k = 0;
+        while k + 8 <= n {
+            let c0 = cols[k] as usize;
+            if cols[k + 7] as usize == c0 + 7 {
+                // 8 consecutive distinct columns: one non-fused
+                // mul + add per lane — the scalar step, lane-parallel.
+                debug_assert!(c0 + 8 <= out.len());
+                unsafe { x86::axpy8(out.as_mut_ptr().add(c0), vals.as_ptr().add(k), x) };
+                k += 8;
+            } else {
+                out[c0] += x * vals[k];
+                k += 1;
+            }
+        }
+        for (&c, &v) in cols[k..].iter().zip(&vals[k..]) {
+            out[c as usize] += x * v;
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if level == SimdLevel::Neon && cols.len() >= 4 {
+        let n = cols.len();
+        let mut k = 0;
+        while k + 4 <= n {
+            let c0 = cols[k] as usize;
+            if cols[k + 3] as usize == c0 + 3 {
+                debug_assert!(c0 + 4 <= out.len());
+                unsafe { arm::axpy4(out.as_mut_ptr().add(c0), vals.as_ptr().add(k), x) };
+                k += 4;
+            } else {
+                out[c0] += x * vals[k];
+                k += 1;
+            }
+        }
+        for (&c, &v) in cols[k..].iter().zip(&vals[k..]) {
+            out[c as usize] += x * v;
+        }
+        return;
+    }
+    let _ = level;
+    for (&c, &v) in cols.iter().zip(vals) {
+        out[c as usize] += x * v;
+    }
+}
+
+/// AVX2 8-lane row-span probe: bit `j` of the result is set iff
+/// `row_ptr[ids[j]] != row_ptr[ids[j] + 1]` (a non-empty `DenseRows`
+/// row). Lane order is query order, so consuming set bits from the
+/// lowest up replays the scalar probe order exactly.
+///
+/// Requires `ids.len() == 8`, every `id + 1 < row_ptr.len()`, and an
+/// AVX2-verified level (callers dispatch on [`SimdLevel::Avx2`], which
+/// only [`SimdLevel::detect`] hands out).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub(crate) fn row_span_mask8(row_ptr: &[u32], ids: &[u32]) -> u32 {
+    debug_assert_eq!(ids.len(), 8);
+    debug_assert!(ids.iter().all(|&i| (i as usize) + 1 < row_ptr.len()));
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    unsafe { x86::row_span_mask8(row_ptr.as_ptr(), ids.as_ptr()) }
+}
+
+/// AVX2 8-lane scratch probe: bit `j` set iff `pos[ids[j]] != 0` (the
+/// dense-lookup "row present" sentinel). Same lane-order contract as
+/// [`row_span_mask8`].
+///
+/// Requires `ids.len() == 8` and every `id < pos.len()`.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub(crate) fn nonzero_mask8(pos: &[u32], ids: &[u32]) -> u32 {
+    debug_assert_eq!(ids.len(), 8);
+    debug_assert!(ids.iter().all(|&i| (i as usize) < pos.len()));
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    unsafe { x86::nonzero_mask8(pos.as_ptr(), ids.as_ptr()) }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// `dst[l] += x * vals[l]` for lanes `l` in `0..8`, as a separate
+    /// vector multiply and vector add (never `vfmadd`: fusing would
+    /// round once where the scalar code rounds twice).
+    ///
+    /// # Safety
+    /// AVX2 must be available and both pointers must be readable
+    /// (and `dst` writable) for 8 `f32`s.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy8(dst: *mut f32, vals: *const f32, x: f32) {
+        let xv = _mm256_set1_ps(x);
+        let v = _mm256_loadu_ps(vals);
+        let d = _mm256_loadu_ps(dst);
+        _mm256_storeu_ps(dst, _mm256_add_ps(d, _mm256_mul_ps(xv, v)));
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `ids` must point at 8 `u32`s, each of
+    /// which (and its successor index) must be in bounds of `ptr`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn row_span_mask8(ptr: *const u32, ids: *const u32) -> u32 {
+        let idx = _mm256_loadu_si256(ids as *const __m256i);
+        let starts = _mm256_i32gather_epi32::<4>(ptr as *const i32, idx);
+        let next = _mm256_add_epi32(idx, _mm256_set1_epi32(1));
+        let ends = _mm256_i32gather_epi32::<4>(ptr as *const i32, next);
+        let empty = _mm256_cmpeq_epi32(starts, ends);
+        !(_mm256_movemask_ps(_mm256_castsi256_ps(empty)) as u32) & 0xFF
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `ids` must point at 8 `u32`s, each in
+    /// bounds of `pos`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn nonzero_mask8(pos: *const u32, ids: *const u32) -> u32 {
+        let idx = _mm256_loadu_si256(ids as *const __m256i);
+        let p = _mm256_i32gather_epi32::<4>(pos as *const i32, idx);
+        let zero = _mm256_cmpeq_epi32(p, _mm256_setzero_si256());
+        !(_mm256_movemask_ps(_mm256_castsi256_ps(zero)) as u32) & 0xFF
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// `dst[l] += x * vals[l]` for lanes `l` in `0..4` — `fmul` + `fadd`,
+    /// never the fused `fmla` (single rounding would diverge from the
+    /// scalar two-rounding result).
+    ///
+    /// # Safety
+    /// Both pointers must be readable (and `dst` writable) for 4 `f32`s.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy4(dst: *mut f32, vals: *const f32, x: f32) {
+        let xv = vdupq_n_f32(x);
+        let v = vld1q_f32(vals);
+        let d = vld1q_f32(dst);
+        vst1q_f32(dst, vaddq_f32(d, vmulq_f32(xv, v)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_stable_and_consistent() {
+        let a = SimdLevel::detect();
+        let b = SimdLevel::detect();
+        assert_eq!(a, b);
+        assert_eq!(a.is_vector(), a.lanes() > 1);
+        assert!(!a.label().is_empty());
+    }
+
+    #[test]
+    fn axpy_emit_matches_scalar_on_all_levels() {
+        // Mixed consecutive runs and breaks, plus a remainder tail.
+        let cols: Vec<u16> = vec![0, 1, 2, 3, 4, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 20];
+        let vals: Vec<f32> = (0..cols.len()).map(|k| 0.37 * k as f32 - 1.5).collect();
+        let x = 1.217f32;
+        let mut expect = vec![0.25f32; 24];
+        for (&c, &v) in cols.iter().zip(&vals) {
+            expect[c as usize] += x * v;
+        }
+        for level in [SimdLevel::None, SimdLevel::detect()] {
+            let mut out = vec![0.25f32; 24];
+            axpy_emit(&cols, &vals, x, &mut out, level);
+            let same = out.iter().zip(&expect).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "axpy_emit diverged at level {:?}", level);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn gather_masks_match_scalar_probes() {
+        if SimdLevel::detect() != SimdLevel::Avx2 {
+            return; // no AVX2 (or MSCM_FORCE_SCALAR): nothing to check
+        }
+        let row_ptr: Vec<u32> = vec![0, 2, 2, 5, 5, 5, 9, 9, 10, 12];
+        let ids: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 6, 8];
+        let m = row_span_mask8(&row_ptr, &ids);
+        for (lane, &i) in ids.iter().enumerate() {
+            let hit = row_ptr[i as usize] != row_ptr[i as usize + 1];
+            assert_eq!((m >> lane) & 1 == 1, hit, "lane {lane}");
+        }
+        let pos: Vec<u32> = vec![0, 3, 0, 1, 0, 0, 7, 0, 2];
+        let ids: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 6, 8];
+        let m = nonzero_mask8(&pos, &ids);
+        for (lane, &i) in ids.iter().enumerate() {
+            assert_eq!((m >> lane) & 1 == 1, pos[i as usize] != 0, "lane {lane}");
+        }
+    }
+}

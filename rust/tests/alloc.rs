@@ -35,7 +35,7 @@ use std::time::Duration;
 use mscm_xmr::coordinator::CoordinatorConfig;
 use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
 use mscm_xmr::inference::{
-    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo, Prediction,
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, KernelTier, MatmulAlgo, Prediction,
 };
 use mscm_xmr::shard::{
     GatherArena, ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
@@ -183,6 +183,42 @@ fn steady_state_hot_paths_do_not_allocate() {
             assert_eq!(
                 delta, 0,
                 "{storage:?}/{iter:?} hot path allocated {delta}x after warmup"
+            );
+        }
+    }
+
+    // --- forced SIMD tier over every layout: the same zero bar. The
+    // tier dispatch is a per-block branch into kernels that reuse the
+    // exact scalar-path buffers (gathers read in place, emits write the
+    // caller's slice); on non-vector hardware the branch degrades to the
+    // scalar kernels — either way nothing may allocate once warm. ---
+    for storage in ChunkStorage::ALL {
+        for iter in [
+            IterationMethod::MarchingPointers,
+            IterationMethod::DenseLookup,
+        ] {
+            let cfg = EngineConfig::new(MatmulAlgo::Mscm, iter);
+            let plan = KernelPlan::uniform(&model, iter)
+                .with_uniform_storage(storage)
+                .with_uniform_tier(KernelTier::Simd);
+            let engine = InferenceEngine::new_with_plan(model.clone(), cfg, plan);
+            let mut ws = engine.workspace();
+            let mut out: Vec<Vec<Prediction>> = vec![Vec::new(); x.rows];
+            for _ in 0..2 {
+                for q in &queries {
+                    std::hint::black_box(engine.predict_with(q, 10, 5, &mut ws));
+                }
+                engine.predict_range(&x, 0, x.rows, 10, 5, &mut ws, &mut out);
+            }
+            let before = allocs();
+            for q in &queries {
+                std::hint::black_box(engine.predict_with(q, 10, 5, &mut ws));
+            }
+            engine.predict_range(&x, 0, x.rows, 10, 5, &mut ws, &mut out);
+            let delta = allocs() - before;
+            assert_eq!(
+                delta, 0,
+                "SIMD-tier {storage:?}/{iter:?} hot path allocated {delta}x after warmup"
             );
         }
     }

@@ -1,0 +1,222 @@
+//! SIMD-tier exactness properties: the vectorized kernels are **bitwise
+//! identical** to their scalar oracles on arbitrary models and queries —
+//! the invariant that lets the planner flip tiers per chunk without
+//! changing a single prediction.
+//!
+//! Two levels of attack, both over the shared seeded harness in
+//! `tests/common` (`MSCM_TEST_SEED` replays failures):
+//!
+//! - **kernel level**: every `vec_chunk_*_simd` against its scalar
+//!   oracle, chunk by chunk, across all storage layouts — random widths
+//!   and row counts exercise every remainder-lane shape around the 8-wide
+//!   gathers and 4/8-wide accumulate runs;
+//! - **engine level**: whole engines with the plan tier forced to SIMD
+//!   against forced-scalar twins, both algorithms, online and batch,
+//!   beams 1 and 4.
+//!
+//! On hardware without a vector unit (or under `MSCM_FORCE_SCALAR=1` —
+//! a dedicated CI leg) the SIMD tier degrades to the scalar kernels, so
+//! every assertion here becomes `scalar == scalar`: the suite is green
+//! everywhere, and only *proves* vectorization correct where it runs.
+
+mod common;
+
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, KernelTier, MatmulAlgo,
+    PlannerConfig,
+};
+use mscm_xmr::sparse::iterators::{
+    vec_chunk_binary, vec_chunk_binary_simd, vec_chunk_dense, vec_chunk_dense_rows,
+    vec_chunk_dense_rows_simd, vec_chunk_dense_simd, vec_chunk_hash, vec_chunk_hash_simd,
+    vec_chunk_marching, vec_chunk_marching_simd, DenseScratch,
+};
+use mscm_xmr::sparse::{ChunkStorage, ChunkedMatrix, SimdLevel};
+
+/// Every tiered kernel pair on every chunk of a random matrix under one
+/// storage layout. `out` pairs are compared with `==` — bitwise, since
+/// equal f32 bit patterns are the only way NaN-free equal floats arise
+/// from these loops.
+fn check_layout(
+    chunked: &ChunkedMatrix,
+    queries: &mscm_xmr::sparse::CsrMatrix,
+    scratch: &mut DenseScratch,
+    level: SimdLevel,
+    ctx: &str,
+) {
+    for c in 0..chunked.num_chunks() {
+        let cv = chunked.view(c);
+        let w = cv.ncols as usize;
+        let mut a = vec![0.0f32; w];
+        let mut b = vec![0.0f32; w];
+        for qi in 0..queries.rows {
+            let x = queries.row(qi);
+            let mut run = |scalar: &mut dyn FnMut(&mut [f32]),
+                           simd: &mut dyn FnMut(&mut [f32]),
+                           kernel: &str| {
+                a.fill(0.0);
+                b.fill(0.0);
+                scalar(&mut a);
+                simd(&mut b);
+                assert_eq!(a, b, "{kernel} diverged on chunk {c} q {qi} ({ctx})");
+            };
+            match cv.storage {
+                ChunkStorage::DenseRows => {
+                    run(
+                        &mut |o| vec_chunk_dense_rows(x, cv, o),
+                        &mut |o| vec_chunk_dense_rows_simd(x, cv, o, level),
+                        "dense-rows",
+                    );
+                }
+                storage => {
+                    run(
+                        &mut |o| vec_chunk_marching(x, cv, o),
+                        &mut |o| vec_chunk_marching_simd(x, cv, o, level),
+                        "marching",
+                    );
+                    run(
+                        &mut |o| vec_chunk_binary(x, cv, o),
+                        &mut |o| vec_chunk_binary_simd(x, cv, o, level),
+                        "binary",
+                    );
+                    if storage == ChunkStorage::Csc && cv.row_map.is_some() {
+                        run(
+                            &mut |o| vec_chunk_hash(x, cv, o),
+                            &mut |o| vec_chunk_hash_simd(x, cv, o, level),
+                            "hash",
+                        );
+                    }
+                    scratch.load(cv);
+                    {
+                        let s: &DenseScratch = scratch;
+                        run(
+                            &mut |o| vec_chunk_dense(x, cv, s, o),
+                            &mut |o| vec_chunk_dense_simd(x, cv, s, o, level),
+                            "dense",
+                        );
+                    }
+                    scratch.clear(cv);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_kernels_match_scalar_oracles_on_random_chunks() {
+    let level = SimdLevel::detect();
+    let base = common::base_seed();
+    let mut g = common::ModelGen::new(base ^ 0x51D0);
+    for case in 0..40 {
+        let (csc, offsets) = g.matrix();
+        let queries = g.queries(csc.rows, 4);
+        let mut scratch = DenseScratch::new(csc.rows);
+        let seed = ChunkedMatrix::from_csc(&csc, &offsets, true);
+        let n = seed.num_chunks();
+        for storage in ChunkStorage::ALL {
+            let mut chunked = seed.clone();
+            chunked.apply_layout(&vec![storage; n]);
+            let ctx = format!("case {case} {storage:?} seed base {base:#x}");
+            check_layout(&chunked, &queries, &mut scratch, level, &ctx);
+        }
+        // Mixed layouts, the shape real plans produce.
+        let mut chunked = seed.clone();
+        let layout: Vec<ChunkStorage> = (0..n).map(|_| ChunkStorage::ALL[g.pick(0..3)]).collect();
+        chunked.apply_layout(&layout);
+        let ctx = format!("case {case} mixed seed base {base:#x}");
+        check_layout(&chunked, &queries, &mut scratch, level, &ctx);
+    }
+}
+
+/// A `(model, config, uniform method, tier)` engine: the plan is the
+/// uniform method plan with every block pinned to `tier`.
+fn tiered_engine(
+    case: &common::GenCase,
+    algo: MatmulAlgo,
+    iter: IterationMethod,
+    tier: KernelTier,
+) -> InferenceEngine {
+    let mut m = case.model.clone();
+    m.build_row_maps();
+    let plan = KernelPlan::uniform(&m, iter).with_uniform_tier(tier);
+    InferenceEngine::new_with_plan(m, EngineConfig::new(algo, iter), plan)
+}
+
+#[test]
+fn forced_simd_engines_match_scalar_twins() {
+    common::run_cases_capped(10, 200, |case_id, case| {
+        let rows = case.query_rows();
+        for algo in MatmulAlgo::ALL {
+            // One method per case keeps the grid affordable; across the
+            // ten cases all four methods recur for both algorithms.
+            let iter = IterationMethod::ALL[(case_id as usize + algo as usize) % 4];
+            let scalar = tiered_engine(case, algo, iter, KernelTier::Scalar);
+            let simd = tiered_engine(case, algo, iter, KernelTier::Simd);
+            for beam in [1usize, 4] {
+                let want = scalar.predict_batch(&case.queries, beam, 5);
+                let got = simd.predict_batch(&case.queries, beam, 5);
+                assert_eq!(
+                    got, want,
+                    "batch {algo:?}/{iter:?} beam={beam} ({})",
+                    case.shape
+                );
+                for (qi, row) in rows.iter().enumerate() {
+                    assert_eq!(
+                        simd.predict(row, beam, 5),
+                        scalar.predict(row, beam, 5),
+                        "online {algo:?}/{iter:?} beam={beam} q={qi} ({})",
+                        case.shape
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn auto_plan_matches_its_scalar_tier_twin() {
+    common::run_cases_capped(10, 200, |_, case| {
+        let mut m = case.model.clone();
+        m.build_row_maps();
+        let pc = PlannerConfig::default();
+        let plan = KernelPlan::auto(&m, MatmulAlgo::Mscm, &pc);
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+        let scalar_plan = plan.clone().with_uniform_tier(KernelTier::Scalar);
+        let auto = InferenceEngine::new_with_plan(m.clone(), cfg, plan);
+        let scalar = InferenceEngine::new_with_plan(m, cfg, scalar_plan);
+        for beam in [1usize, 4] {
+            assert_eq!(
+                auto.predict_batch(&case.queries, beam, 5),
+                scalar.predict_batch(&case.queries, beam, 5),
+                "auto-plan tier divergence beam={beam} ({})",
+                case.shape
+            );
+        }
+    });
+}
+
+#[test]
+fn forced_simd_parallel_batches_match_serial_scalar() {
+    common::run_cases_capped(6, 200, |_, case| {
+        let scalar = tiered_engine(
+            case,
+            MatmulAlgo::Mscm,
+            IterationMethod::MarchingPointers,
+            KernelTier::Scalar,
+        );
+        let simd = tiered_engine(
+            case,
+            MatmulAlgo::Mscm,
+            IterationMethod::MarchingPointers,
+            KernelTier::Simd,
+        );
+        let want = scalar.predict_batch(&case.queries, 4, 4);
+        for threads in [2usize, 5] {
+            assert_eq!(
+                simd.predict_batch_parallel(&case.queries, 4, 4, threads),
+                want,
+                "t={threads} ({})",
+                case.shape
+            );
+        }
+    });
+}
