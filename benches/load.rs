@@ -1,0 +1,202 @@
+//! Open-loop load generator against the in-process sharded serving
+//! stack — the under-load story ROADMAP item 2 tracks.
+//!
+//! Closed-loop benches (`benches/coordinator.rs`) submit the next query
+//! only after the previous reply, so the arrival rate collapses to
+//! whatever the server sustains and queueing delay is invisible. This
+//! bench is **open-loop**: arrivals are scheduled on a fixed clock
+//! (`t_i = i/λ`) regardless of completions, and each query's latency is
+//! measured from its *scheduled* arrival to its reply — queue growth is
+//! charged to latency instead of silently throttling the offered rate
+//! (no coordinated omission).
+//!
+//! The query mix is Zipfian over a fixed pool (popular queries repeat,
+//! as production traffic does). The sweep offers fractions of a
+//! measured closed-loop capacity probe, through saturation; a rate
+//! counts as *sustained* when the achieved throughput (arrivals /
+//! wall time including drain) stays within 90% of the offered rate
+//! with nothing shed. Emits `BENCH_load.json` (override with
+//! `--json <path>`) with per-rate p50/p99/p999 and the max sustained
+//! QPS in the run metadata.
+//!
+//! `cargo bench --bench load` — append `-- --quick` for the CI-sized
+//! run.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mscm_xmr::coordinator::{CoordinatorConfig, Response};
+use mscm_xmr::data::enterprise::EnterpriseSpec;
+use mscm_xmr::inference::{EngineConfig, IterationMethod, MatmulAlgo};
+use mscm_xmr::metrics::LatencyHistogram;
+use mscm_xmr::shard::{ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine};
+use mscm_xmr::sparse::SparseVec;
+use mscm_xmr::util::rng::Zipf;
+use mscm_xmr::util::{BenchReport, Json, Rng};
+
+const SHARDS: usize = 4;
+const BEAM: usize = 10;
+const TOPK: usize = 10;
+
+struct RateResult {
+    offered: f64,
+    achieved: f64,
+    completed: usize,
+    shed: usize,
+    hist: Arc<LatencyHistogram>,
+}
+
+/// One open-loop run: `n` arrivals at `offered` QPS, Zipf-drawn from
+/// `pool`. Latency is scheduled-arrival → reply; submissions the
+/// bounded router refuses are counted as shed, not retried.
+fn run_rate(
+    coord: &ShardedCoordinator,
+    pool: &[SparseVec],
+    zipf: &Zipf,
+    rng: &mut Rng,
+    offered: f64,
+    n: usize,
+) -> RateResult {
+    let hist = Arc::new(LatencyHistogram::new());
+    let interval = Duration::from_secs_f64(1.0 / offered);
+    let (done_tx, done_rx) = mpsc::channel::<(Instant, mpsc::Receiver<Response>)>();
+    let collector = {
+        let hist = Arc::clone(&hist);
+        std::thread::spawn(move || {
+            let mut completed = 0usize;
+            while let Ok((scheduled, rx)) = done_rx.recv() {
+                if rx.recv().is_ok() {
+                    hist.record(scheduled.elapsed());
+                    completed += 1;
+                }
+            }
+            completed
+        })
+    };
+    let start = Instant::now();
+    let mut shed = 0usize;
+    for i in 0..n {
+        let target = start + interval.mul_f64(i as f64);
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        let q = &pool[zipf.sample(rng)];
+        match coord.submit(q.clone()) {
+            Ok((_, rx)) => done_tx.send((target, rx)).expect("collector alive"),
+            Err(_) => shed += 1,
+        }
+    }
+    drop(done_tx);
+    let completed = collector.join().expect("collector join");
+    let wall = start.elapsed().as_secs_f64();
+    RateResult {
+        offered,
+        achieved: completed as f64 / wall,
+        completed,
+        shed,
+        hist,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let spec = EnterpriseSpec {
+        num_labels: if quick { 20_000 } else { 100_000 },
+        dim: if quick { 20_000 } else { 50_000 },
+        ..Default::default()
+    };
+    eprintln!("synthesizing L={} model ...", spec.num_labels);
+    let model = spec.build_model();
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let engine = Arc::new(ShardedEngine::from_model(&model, SHARDS, cfg));
+    let coord = ShardedCoordinator::start(
+        Arc::clone(&engine),
+        ShardedCoordinatorConfig {
+            base: CoordinatorConfig {
+                workers: 2,
+                max_batch: 32,
+                max_batch_delay: Duration::from_micros(300),
+                beam: BEAM,
+                topk: TOPK,
+                queue_capacity: 1_000_000,
+            },
+            shard_workers: 1,
+            ..Default::default()
+        },
+    );
+
+    let pool_size = if quick { 256 } else { 1024 };
+    let x = spec.build_queries(pool_size);
+    let pool: Vec<SparseVec> = (0..pool_size).map(|i| x.row_owned(i)).collect();
+    let zipf = Zipf::new(pool_size, 1.0);
+    let mut rng = Rng::seed_from_u64(0x10AD);
+
+    let mut report = BenchReport::new("load");
+    report.set_meta("quick", Json::Str(quick.to_string()));
+    report.set_meta("labels", Json::Num(spec.num_labels as f64));
+    report.set_meta("shards", Json::Num(SHARDS as f64));
+
+    // Closed-loop capacity probe: a burst submitted all at once keeps
+    // every worker busy; its throughput anchors the sweep's rates.
+    let probe_n = if quick { 600 } else { 2_000 };
+    for _ in 0..probe_n / 4 {
+        coord
+            .query_blocking(pool[zipf.sample(&mut rng)].clone())
+            .expect("warmup reply");
+    }
+    let t = Instant::now();
+    let rxs: Vec<_> = (0..probe_n)
+        .map(|_| coord.submit(pool[zipf.sample(&mut rng)].clone()).expect("probe submit").1)
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("probe reply");
+    }
+    let capacity = probe_n as f64 / t.elapsed().as_secs_f64();
+    eprintln!("closed-loop capacity probe: {capacity:.0} qps");
+    report.set_meta("capacity_probe_qps", Json::Num(capacity));
+
+    // The sweep: well below, near, and past the probe — the overload
+    // point shows up as achieved < offered plus a latency cliff.
+    let secs = if quick { 1.5 } else { 4.0 };
+    let mut max_sustained = 0.0f64;
+    for frac in [0.25, 0.5, 0.75, 0.9, 1.1] {
+        let offered = capacity * frac;
+        let n = ((offered * secs) as usize).clamp(100, 100_000);
+        let r = run_rate(&coord, &pool, &zipf, &mut rng, offered, n);
+        let sustained = r.shed == 0 && r.achieved >= 0.9 * r.offered;
+        if sustained {
+            max_sustained = max_sustained.max(r.achieved);
+        }
+        println!(
+            "offered {:.0} qps ({frac:.2}x): achieved {:.0} qps shed={} {} {}",
+            r.offered,
+            r.achieved,
+            r.shed,
+            r.hist.summary(),
+            if sustained { "[sustained]" } else { "[saturated]" }
+        );
+        report.record_extra(
+            "open-loop",
+            r.hist.quantile_ms(0.5) * 1e6,
+            32,
+            &cfg.label(),
+            vec![
+                ("offered_qps", Json::Num(r.offered)),
+                ("achieved_qps", Json::Num(r.achieved)),
+                ("completed", Json::Num(r.completed as f64)),
+                ("shed", Json::Num(r.shed as f64)),
+                ("p50_ms", Json::Num(r.hist.quantile_ms(0.5))),
+                ("p99_ms", Json::Num(r.hist.quantile_ms(0.99))),
+                ("p999_ms", Json::Num(r.hist.quantile_ms(0.999))),
+                ("max_ms", Json::Num(r.hist.max_ms())),
+                ("sustained", Json::Bool(sustained)),
+            ],
+        );
+    }
+    println!("max sustained: {max_sustained:.0} qps");
+    report.set_meta("max_sustained_qps", Json::Num(max_sustained));
+    coord.shutdown();
+    report.finish(&args);
+}

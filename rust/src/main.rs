@@ -10,10 +10,13 @@
 //!   TCP for remote serving); `--iter auto` enables the cost-model
 //!   kernel planner on any of them
 //! - observability: `metrics` (poll a live shard host's stats over the
-//!   wire `Stats` frame, once or as windowed diffs); `infer --trace`
-//!   (per-query layer traces + the plan-drift join); `serve
-//!   --metrics-addr/--stats-interval/--trace-sample` (live exposition,
-//!   periodic windowed stats, sampled request traces)
+//!   wire `Stats` frame, once or as windowed diffs; `--traces` polls the
+//!   host's tail-sampling flight recorder over the wire `Traces` frame
+//!   instead); `infer --trace` (per-query layer traces + the plan-drift
+//!   join); `serve --metrics-addr/--stats-interval/--trace-sample`
+//!   (live exposition, periodic windowed stats, sampled request
+//!   traces); `serve --flight-recorder N` sizes the coordinator-side
+//!   flight recorder ring (0 disables tracing entirely)
 //! - paper reproduction: `bench table|figure3|figure4|figure5|figure6|
 //!   table4|table5|table6|all`
 //! - runtime: `xla-smoke` (load + execute the AOT artifacts)
@@ -38,8 +41,8 @@ use mscm_xmr::inference::{
 use mscm_xmr::repro;
 use mscm_xmr::metrics::Snapshot;
 use mscm_xmr::shard::{
-    load_shard, load_shards, partition, poll_stats, save_shards, FaultPlan, RemoteConfig,
-    RemoteCoordinatorConfig, RemoteShardedCoordinator, ShardHost, ShardHostConfig,
+    load_shard, load_shards, partition, poll_stats, poll_traces, save_shards, FaultPlan,
+    RemoteConfig, RemoteCoordinatorConfig, RemoteShardedCoordinator, ShardHost, ShardHostConfig,
     ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
 };
 use mscm_xmr::train::{train_model, RankerParams, Tfidf};
@@ -98,11 +101,19 @@ INFERENCE
                 seconds) [--trace-sample N [--trace out.json]] (sample
                 every Nth request into a trace file; the final metrics
                 snapshot is appended)
+                [--flight-recorder N] (size of the tail-sampling trace
+                ring on the sharded/remote stacks — traces over the live
+                p99 are pinned, the rest 1-in-8 sampled; default 256,
+                0 disables tracing entirely; pinned tail traces are
+                printed after the load loop)
   shard-host    --shard shard-000-of-004.bin [--addr 127.0.0.1:0]
                 [--algo ...] [--iter ...|auto [--calibrate N]]
                 [--no-speculate] [--no-metrics]  (host one shard over TCP
                 for serve --remote; port 0 picks a free port and prints
                 it; answers the wire Stats poll unless --no-metrics)
+                [--flight-recorder N] (host-side tail-sampling trace
+                ring, answering the wire Traces poll; default 256, 0
+                disables the recorder and all per-round timing)
                 chaos flags (deterministic fault injection, for drills —
                 see shard::fault): [--fault-seed N] [--fault-refuse P]
                 [--fault-drop-after N] [--fault-delay-ms N]
@@ -114,6 +125,11 @@ INFERENCE
                 stats over the wire Stats frame; with --interval, print
                 windowed diffs of successive snapshots — N windows then
                 exit, 0 = forever)
+                [--traces]  (poll the host's flight recorder over the
+                wire Traces frame instead: one summary line per retained
+                trace — newest first, pinned tail traces marked — or the
+                full span trees with --format json; with --interval,
+                re-poll every S seconds)
 
   --iter auto resolves a per-chunk kernel plan (cost model over chunk
   stats; --calibrate N times the kernels on N synthetic queries first)
@@ -636,7 +652,9 @@ fn cmd_infer(opts: &Opts) -> Result<(), anyhow::Error> {
 
 /// Polls a live serving process (any `shard-host` answering the wire
 /// `Stats` frame) and prints its metrics snapshot — once, or as windowed
-/// diffs with `--interval`.
+/// diffs with `--interval`. With `--traces`, polls the host's flight
+/// recorder over the wire `Traces` frame instead and prints the
+/// retained trace records (newest first, pinned tail traces marked).
 fn cmd_metrics(opts: &Opts) -> Result<(), anyhow::Error> {
     let addr = parse_remote_addrs(
         opts.get("addr")
@@ -646,14 +664,37 @@ fn cmd_metrics(opts: &Opts) -> Result<(), anyhow::Error> {
     if !matches!(format.as_str(), "text" | "prom" | "json") {
         return Err(usage(format!("bad --format '{format}' (text|prom|json)")));
     }
+    let interval = get(opts, "interval", 0u64)?;
+    let count = get(opts, "count", 0usize)?;
+    let rc = RemoteConfig::default();
+    if opts.contains_key("traces") {
+        if format == "prom" {
+            return Err(usage("--traces renders text or json, not prom"));
+        }
+        let mut windows = 0usize;
+        loop {
+            let records = poll_traces(addr, &rc)?;
+            if format == "json" {
+                let arr = Json::Arr(records.iter().map(|r| r.to_json()).collect());
+                println!("{arr}");
+            } else {
+                println!("{} retained traces @ {addr}", records.len());
+                for r in &records {
+                    println!("  {}", r.summary());
+                }
+            }
+            windows += 1;
+            if interval == 0 || (count > 0 && windows >= count) {
+                return Ok(());
+            }
+            std::thread::sleep(std::time::Duration::from_secs(interval));
+        }
+    }
     let render = |snap: &Snapshot| match format.as_str() {
         "prom" => snap.render_prometheus(),
         "json" => format!("{}\n", snap.to_json()),
         _ => snap.render_text(),
     };
-    let interval = get(opts, "interval", 0u64)?;
-    let count = get(opts, "count", 0usize)?;
-    let rc = RemoteConfig::default();
     let mut last = poll_stats(addr, &rc)?;
     if interval == 0 {
         print!("{}", render(&last));
@@ -773,6 +814,23 @@ impl Serving {
         }
     }
 
+    /// Flight-recorder status plus the pinned tail traces, printed after
+    /// the load loop (the single-engine stack has no scatter rounds to
+    /// trace, so it carries no recorder).
+    fn print_flight_recorder(&self) {
+        let rec = match self {
+            Serving::Single(_) => None,
+            Serving::Sharded(c) => c.flight_recorder(),
+            Serving::Remote(c) => c.flight_recorder(),
+        };
+        if let Some(rec) = rec {
+            println!("{}", rec.status_line());
+            for r in rec.export().iter().filter(|r| r.pinned).take(8) {
+                println!("  {}", r.summary());
+            }
+        }
+    }
+
     fn shutdown(self) {
         match self {
             Serving::Single(c) => c.shutdown(),
@@ -817,6 +875,7 @@ fn cmd_shard_host(opts: &Opts) -> Result<(), anyhow::Error> {
         planner: planner_config(opts)?,
         speculate: !opts.contains_key("no-speculate"),
         metrics: !opts.contains_key("no-metrics"),
+        flight_recorder: get(opts, "flight-recorder", 256usize)?,
     };
     // Any --fault-* flag arms the deterministic injector (chaos drills).
     let fault_keys = [
@@ -909,6 +968,7 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
             deadline: std::time::Duration::from_millis(get(opts, "deadline-ms", 0u64)?),
             hedge: opts.contains_key("hedge"),
             allow_partial: opts.contains_key("allow-partial"),
+            flight_recorder: get(opts, "flight-recorder", 256usize)?,
             ..Default::default()
         };
         let coord = RemoteShardedCoordinator::start(
@@ -948,6 +1008,7 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
             ShardedCoordinatorConfig {
                 base,
                 shard_workers: get(opts, "shard-workers", 2usize)?,
+                flight_recorder: get(opts, "flight-recorder", 256usize)?,
             },
         );
         (dim, Serving::Sharded(coord))
@@ -986,6 +1047,7 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
                 ShardedCoordinatorConfig {
                     base,
                     shard_workers: get(opts, "shard-workers", 2usize)?,
+                    flight_recorder: get(opts, "flight-recorder", 256usize)?,
                 },
             );
             (dim, Serving::Sharded(coord))
@@ -1104,6 +1166,7 @@ fn cmd_serve(opts: &Opts) -> Result<(), anyhow::Error> {
     println!("queue:   {}", stats.queue_wait.summary());
     println!("mean batch: {:.1}", stats.mean_batch());
     coord.print_round_telemetry();
+    coord.print_flight_recorder();
     if trace_sample > 0 {
         let out = opts.get("trace").cloned().unwrap_or_else(|| "traces.json".into());
         let n = sampled.len();

@@ -174,6 +174,25 @@ impl EngineMetrics {
         self.layers.iter().map(|l| l.ns.load(Ordering::Relaxed)).sum()
     }
 
+    /// Bitmask of the *effective* kernel tiers that have executed blocks
+    /// in layer `li` so far (bit position = [`KernelTier::index`]). The
+    /// distributed trace spans stamp this on every round so a trace tree
+    /// shows which tier actually ran each layer on each host — a
+    /// SIMD-planned shard degraded to scalar hardware is visible per
+    /// span, not just in the aggregate drift join. Lock-free reads; no
+    /// allocation.
+    pub fn layer_tier_mask(&self, li: usize) -> u32 {
+        let mut mask = 0u32;
+        if let Some(lm) = self.layers.get(li) {
+            for class in 0..CLASSES {
+                if lm.blocks[class].load(Ordering::Relaxed) != 0 {
+                    mask |= 1 << (class / 12);
+                }
+            }
+        }
+        mask
+    }
+
     /// Joins the measurements against the plan's predictions — the
     /// [`PlanDrift`] report ROADMAP item 5's recalibration consumes.
     pub fn plan_drift(&self) -> PlanDrift {

@@ -42,12 +42,23 @@
 //! and the planner should recalibrate ([`CostModel::calibrate`]) or
 //! re-plan. See [`EngineMetrics`] for the recording contract.
 //!
-//! # Query traces
+//! # Query traces and the distributed trace tree
 //!
 //! [`QueryTrace`] (emitted by `infer --trace out.json`, sampled by
 //! `serve --trace-sample N`) is the opt-in per-query view: beam width,
 //! chunks touched, kernel/storage mix and expand/select ns per layer,
 //! plus ranking time. The JSON schema is documented on [`QueryTrace`].
+//!
+//! [`TraceRecord`] is the **cross-process** view: per-batch trace trees
+//! over the scatter-gather serving path — per-shard per-round
+//! [`RoundSpan`]s carrying client tx/round/join-wait times, the
+//! host-side [`HostSpan`] piggybacked on wire v3 `Cands` replies, and
+//! `EV_*` event annotations (hedges, failovers, ejections, degraded
+//! rounds, speculation hits/misses). The [`FlightRecorder`] retains the
+//! last N of them with tail-based sampling — traces above the live p99
+//! are pinned, the rest 1-in-N sampled — exported via the `Traces` wire
+//! poll, `metrics --traces` and `serve --flight-recorder`. See the
+//! trace module docs for the retention and hot-path contracts.
 //!
 //! [`CostModel::calibrate`]: crate::inference::CostModel::calibrate
 
@@ -55,7 +66,11 @@ mod drift;
 mod trace;
 
 pub use drift::{DriftCell, DriftLayer, EngineMetrics, PlanDrift};
-pub use trace::{LayerTrace, QueryTrace};
+pub use trace::{
+    event_names, FlightRecorder, FlightRecorderConfig, HostSpan, LayerTrace, QueryTrace,
+    RoundSpan, TraceRecord, EV_DEAD, EV_DEGRADED, EV_EJECTION, EV_FAILOVER, EV_HEDGE,
+    EV_SPEC_HIT, EV_SPEC_MISS, MAX_TRACE_SPANS,
+};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -193,15 +208,17 @@ impl LatencyHistogram {
         self.max_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
-    /// One-line summary matching Table 4's columns.
+    /// One-line summary matching Table 4's columns (plus the p999 the
+    /// under-load story tracks — see ROADMAP item 2 / `benches/load.rs`).
     pub fn summary(&self) -> String {
         format!(
-            "n={} avg={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            "n={} avg={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms",
             self.count(),
             self.mean_ms(),
             self.quantile_ms(0.50),
             self.quantile_ms(0.95),
             self.quantile_ms(0.99),
+            self.quantile_ms(0.999),
             self.max_ms()
         )
     }
@@ -293,12 +310,13 @@ impl HistogramSnapshot {
     /// One-line summary matching [`LatencyHistogram::summary`].
     pub fn summary(&self) -> String {
         format!(
-            "n={} avg={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            "n={} avg={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms",
             self.count,
             self.mean_ms(),
             self.quantile_ms(0.50),
             self.quantile_ms(0.95),
             self.quantile_ms(0.99),
+            self.quantile_ms(0.999),
             self.max_ms()
         )
     }
@@ -524,6 +542,7 @@ impl Snapshot {
             out.push_str(&format!("mscm_{k}_p50_ms {}\n", h.quantile_ms(0.50)));
             out.push_str(&format!("mscm_{k}_p95_ms {}\n", h.quantile_ms(0.95)));
             out.push_str(&format!("mscm_{k}_p99_ms {}\n", h.quantile_ms(0.99)));
+            out.push_str(&format!("mscm_{k}_p999_ms {}\n", h.quantile_ms(0.999)));
         }
         out
     }

@@ -1,39 +1,89 @@
-//! Opt-in per-query tracing — the structured record behind
-//! `infer --trace out.json` and the sampled `serve --trace-sample N`.
+//! Query tracing — the in-process [`QueryTrace`] behind
+//! `infer --trace out.json`, and the **distributed** trace tree +
+//! tail-sampling [`FlightRecorder`] behind the sharded serving path.
 //!
-//! A [`QueryTrace`] is produced by
-//! [`crate::inference::InferenceEngine::predict_traced`], a separate
-//! cold path that steps the beam search layer by layer with extra
-//! timers and bookkeeping. The hot paths carry **no** tracing hooks at
-//! all, so the disabled path costs nothing (pinned by
-//! `rust/tests/alloc.rs`).
+//! # Distributed traces
 //!
-//! # JSON schema
+//! A [`TraceRecord`] is one batch's walk through the scatter-gather
+//! protocol: per shard, per layer round, a [`RoundSpan`] carrying the
+//! client-side timings (`tx_ns` encode+send, `round_ns` scatter → reply
+//! decoded, `wait_ns` join-wait share past the round's first reply) and
+//! the host-side [`HostSpan`] piggybacked on the wire v3 `Cands` reply
+//! (`decode_ns` / `expand_ns` / `encode_ns` on the host's own clock,
+//! plus the effective kernel-tier bitmask of the expanded layer). The
+//! `events` bit set annotates what the serving layer did to the round:
+//! hedges, failovers, ejections, dead shards / degraded rounds, and
+//! speculation hits/misses ([`EV_HEDGE`] … [`EV_SPEC_MISS`]). A host
+//! span is a genuine sub-interval of the client's batch window (the
+//! host may start decoding while the client is still scattering to its
+//! peers, so only the batch-level bound `host.total_ns() <= total_ns`
+//! is guaranteed span by span), and `round_ns − host.total_ns()`
+//! estimates the wire + queue share — the decomposition ROADMAP items
+//! 2/5 consume (adaptive batch delay, online recalibration) attributed
+//! to *real* queries, not averages.
+//!
+//! # The flight recorder
+//!
+//! [`FlightRecorder`] is an always-on, fixed-capacity ring of the last
+//! N [`TraceRecord`]s with **tail-based retention**: every record is
+//! observed into an internal [`LatencyHistogram`](super::LatencyHistogram),
+//! and a trace whose total latency exceeds the live p99 (once a sample
+//! floor is met) is *pinned* — it always claims a slot, and sampled
+//! writes cannot evict it until the ring has lapped it. Everything else
+//! is 1-in-N sampled. The slow queries a probability sampler
+//! statistically misses are exactly the ones retained.
+//!
+//! Hot-path contract (pinned by `rust/tests/alloc.rs` and
+//! `rust/tests/tracing.rs`): recording is allocation-free — every
+//! slot's span vector is pre-sized at construction and refilled in
+//! place — and never blocks: slots are claimed with a `try_lock`, so a
+//! contended slot drops the sample (counted) instead of waiting.
+//! Tracing never changes results (traced serving is bitwise identical
+//! to untraced), and with the recorder disabled the serving paths carry
+//! no tracing hooks at all.
+//!
+//! # Distributed trace JSON schema
+//!
+//! [`TraceRecord::to_json`] (exported by `metrics --traces` and the
+//! `Traces` wire poll — see [`crate::shard::wire`]):
 //!
 //! ```text
 //! {
-//!   "query_nnz": int,        // nonzeros of the query vector
-//!   "beam": int, "topk": int,
-//!   "total_ns": int,         // whole search, expand + select + rank
-//!   "rank_ns": int,          // final top-k ranking
-//!   "layers": [{
-//!     "layer": int,
-//!     "beam_width": int,     // surviving parents expanded (= chunks touched)
-//!     "candidates": int,     // children generated before the beam cut
-//!     "expand_ns": int,      // masked-matmul expansion of this layer
-//!     "select_ns": int,      // global beam selection
-//!     "methods": {"marching"|"binary"|"hash"|"dense": blocks, ...},
-//!     "storages": {"csc"|"dense-rows"|"merged": blocks, ...},
-//!     "tiers": {"scalar"|"simd": blocks, ...}  // effective (hardware-gated)
+//!   "trace_id": int,          // batch span id, carried on wire v3 Expand
+//!   "batch": int, "beam": int,
+//!   "total_ns": int,          // whole batch, scatter rounds + ranking
+//!   "pinned": bool,           // true: retained as a tail (> live p99) trace
+//!   "events": ["hedge"|"failover"|"ejection"|"dead-shard"|"degraded"
+//!              |"spec-hit"|"spec-miss", ...],   // union over spans
+//!   "truncated_spans": int,   // spans dropped past MAX_TRACE_SPANS
+//!   "spans": [{
+//!     "shard": int, "layer": int,
+//!     "tx_ns": int,           // client: encode + send of the Expand
+//!     "round_ns": int,        // client: scatter done -> reply decoded
+//!     "wait_ns": int,         // client: this reply - first reply of round
+//!     "host_decode_ns": int,  // host: Expand decode
+//!     "host_expand_ns": int,  // host: expand + speculation
+//!     "host_encode_ns": int,  // host: Cands encode
+//!     "tiers": ["scalar"|"simd", ...],  // effective tiers run on the host
+//!     "events": [...]         // this round's annotations
 //!   }, ...]
 //! }
 //! ```
 //!
-//! On the sharded serving paths, `serve --trace-sample N` wraps sampled
+//! # Per-query traces
+//!
+//! [`QueryTrace`] is produced by
+//! [`crate::inference::InferenceEngine::predict_traced`], a separate
+//! cold path that steps the beam search layer by layer with extra
+//! timers and bookkeeping (schema documented on [`QueryTrace`]). On the
+//! sharded serving paths, `serve --trace-sample N` wraps sampled
 //! requests in an outer object carrying queue/total ns and batch size
-//! plus a windowed stats diff (gather/wire/join live in the
-//! `scatter.*` / `remote.scatter.*` histograms there) — see the serve
-//! command docs in `main.rs`.
+//! plus a windowed stats diff — see the serve command docs in
+//! `main.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::util::Json;
 
@@ -63,6 +113,27 @@ pub struct LayerTrace {
 }
 
 /// A full per-query trace ([`crate::inference::InferenceEngine::predict_traced`]).
+///
+/// JSON schema ([`QueryTrace::to_json`]):
+///
+/// ```text
+/// {
+///   "query_nnz": int,        // nonzeros of the query vector
+///   "beam": int, "topk": int,
+///   "total_ns": int,         // whole search, expand + select + rank
+///   "rank_ns": int,          // final top-k ranking
+///   "layers": [{
+///     "layer": int,
+///     "beam_width": int,     // surviving parents expanded (= chunks touched)
+///     "candidates": int,     // children generated before the beam cut
+///     "expand_ns": int,      // masked-matmul expansion of this layer
+///     "select_ns": int,      // global beam selection
+///     "methods": {"marching"|"binary"|"hash"|"dense": blocks, ...},
+///     "storages": {"csc"|"dense-rows"|"merged": blocks, ...},
+///     "tiers": {"scalar"|"simd": blocks, ...}  // effective (hardware-gated)
+///   }, ...]
+/// }
+/// ```
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct QueryTrace {
     /// Nonzeros of the query vector.
@@ -80,7 +151,7 @@ pub struct QueryTrace {
 }
 
 impl QueryTrace {
-    /// JSON encoding (schema in the module docs). Zero-block method /
+    /// JSON encoding (schema on [`QueryTrace`]). Zero-block method /
     /// storage entries are omitted.
     pub fn to_json(&self) -> Json {
         use crate::inference::{IterationMethod, KernelTier};
@@ -148,6 +219,464 @@ impl QueryTrace {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Distributed traces: spans, events, records, and the flight recorder.
+// ---------------------------------------------------------------------------
+
+/// A hedged retry fired on this round (the first read hit the p99 bound
+/// and the round was re-issued on the next replica).
+pub const EV_HEDGE: u32 = 1 << 0;
+/// The round failed over to another replica (io error / timeout on the
+/// active connection).
+pub const EV_FAILOVER: u32 = 1 << 1;
+/// A replica's circuit breaker opened during this round.
+pub const EV_EJECTION: u32 = 1 << 2;
+/// This shard was marked dead for the batch (all replicas down under
+/// `--allow-partial`); the span carries no reply timings.
+pub const EV_DEAD: u32 = 1 << 3;
+/// The round completed with at least one dead shard — the batch is
+/// serving degraded results over the live shards' label subspace.
+pub const EV_DEGRADED: u32 = 1 << 4;
+/// The speculative next-layer hint covered the whole global beam: the
+/// next layer was assembled locally and its network round skipped.
+pub const EV_SPEC_HIT: u32 = 1 << 5;
+/// A speculative hint was requested but did not cover the beam; the
+/// next layer paid a full network round.
+pub const EV_SPEC_MISS: u32 = 1 << 6;
+
+const EVENT_NAMES: [(u32, &str); 7] = [
+    (EV_HEDGE, "hedge"),
+    (EV_FAILOVER, "failover"),
+    (EV_EJECTION, "ejection"),
+    (EV_DEAD, "dead-shard"),
+    (EV_DEGRADED, "degraded"),
+    (EV_SPEC_HIT, "spec-hit"),
+    (EV_SPEC_MISS, "spec-miss"),
+];
+
+/// The names of the set bits in an `EV_*` event mask (cold path:
+/// allocates the vector).
+pub fn event_names(events: u32) -> Vec<&'static str> {
+    EVENT_NAMES
+        .iter()
+        .filter(|(bit, _)| events & bit != 0)
+        .map(|&(_, name)| name)
+        .collect()
+}
+
+/// Host-side timings of one layer round, measured inside the shard host
+/// around the `Expand → Cands` handling and piggybacked on the wire v3
+/// `Cands` reply. All times are on the host's own monotonic clock but
+/// are pure durations, so they compose with the client-side batch
+/// window that strictly contains them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HostSpan {
+    /// `Expand` frame decode (query rows + beam slice), ns.
+    pub decode_ns: u64,
+    /// Layer expansion plus speculative next-layer expansion, ns.
+    pub expand_ns: u64,
+    /// `Cands` reply encode, ns (backpatched into the frame after the
+    /// encode completes).
+    pub encode_ns: u64,
+    /// Effective kernel tiers that have executed blocks in the expanded
+    /// layer (bit = [`crate::inference::KernelTier::index`]); 0 when the
+    /// host serves without engine telemetry.
+    pub tiers: u32,
+}
+
+impl HostSpan {
+    /// Total host-side time of the round, ns.
+    pub fn total_ns(&self) -> u64 {
+        self.decode_ns + self.expand_ns + self.encode_ns
+    }
+}
+
+/// One shard's slice of one layer round in a distributed trace tree.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundSpan {
+    /// Shard id.
+    pub shard: u32,
+    /// Layer expanded this round.
+    pub layer: u32,
+    /// Client: encode + send of the `Expand` frame, ns.
+    pub tx_ns: u64,
+    /// Client: scatter complete → this shard's reply decoded, ns.
+    pub round_ns: u64,
+    /// Client: this shard's reply − the round's first reply, ns — the
+    /// join-wait share this shard charged the gather (0 for the round's
+    /// fastest shard).
+    pub wait_ns: u64,
+    /// Host-side decode/expand/encode (zeros for an in-process round's
+    /// decode/encode, or when the host replied without a span).
+    pub host: HostSpan,
+    /// `EV_*` annotations for this round.
+    pub events: u32,
+}
+
+/// Spans kept per [`TraceRecord`]; rounds past the cap are dropped and
+/// counted in [`TraceRecord::truncated`]. Sized for deep trees × wide
+/// partitions (e.g. 16 shards × 8 layers) without unbounded growth.
+pub const MAX_TRACE_SPANS: usize = 128;
+
+/// One batch's distributed trace: identity, totals, and the per-shard
+/// per-round spans. Slot-pooled inside the [`FlightRecorder`] — the
+/// span vector is pre-sized at construction and refilled in place, so
+/// steady-state recording never allocates.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceRecord {
+    /// Batch span id, carried to hosts in the v3 `Expand` trace section.
+    pub trace_id: u64,
+    /// Queries in the traced batch.
+    pub batch: u32,
+    /// Beam width served.
+    pub beam: u32,
+    /// Whole-batch wall time (scatter rounds + ranking), ns.
+    pub total_ns: u64,
+    /// Union of every span's `EV_*` bits plus batch-level annotations.
+    pub events: u32,
+    /// True when retained as a tail trace (total latency above the live
+    /// p99 at record time) rather than a 1-in-N sample.
+    pub pinned: bool,
+    /// Spans dropped past [`MAX_TRACE_SPANS`].
+    pub truncated: u32,
+    /// Per-shard per-round spans, in join order.
+    pub spans: Vec<RoundSpan>,
+}
+
+impl TraceRecord {
+    /// An empty record whose span vector holds [`MAX_TRACE_SPANS`]
+    /// capacity up front (the allocation happens here, never in
+    /// [`TraceRecord::push_span`]).
+    pub fn with_capacity() -> Self {
+        TraceRecord {
+            spans: Vec::with_capacity(MAX_TRACE_SPANS),
+            ..TraceRecord::default()
+        }
+    }
+
+    /// Resets every field, keeping the span vector's capacity.
+    pub fn clear(&mut self) {
+        self.trace_id = 0;
+        self.batch = 0;
+        self.beam = 0;
+        self.total_ns = 0;
+        self.events = 0;
+        self.pinned = false;
+        self.truncated = 0;
+        self.spans.clear();
+    }
+
+    /// Appends a span, folding its events into the record's union;
+    /// spans past [`MAX_TRACE_SPANS`] are counted as truncated instead
+    /// of growing the vector.
+    pub fn push_span(&mut self, span: RoundSpan) {
+        self.events |= span.events;
+        if self.spans.len() < MAX_TRACE_SPANS {
+            self.spans.push(span);
+        } else {
+            self.truncated += 1;
+        }
+    }
+
+    /// JSON encoding (schema in the module docs). Cold path.
+    pub fn to_json(&self) -> Json {
+        use crate::inference::KernelTier;
+        let names = |events: u32| {
+            Json::Arr(
+                event_names(events)
+                    .into_iter()
+                    .map(|n| Json::Str(n.to_string()))
+                    .collect(),
+            )
+        };
+        let tiers = |mask: u32| {
+            Json::Arr(
+                KernelTier::ALL
+                    .iter()
+                    .filter(|t| mask & (1 << t.index()) != 0)
+                    .map(|t| Json::Str(t.short().to_string()))
+                    .collect(),
+            )
+        };
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("shard", Json::Num(s.shard as f64)),
+                    ("layer", Json::Num(s.layer as f64)),
+                    ("tx_ns", Json::Num(s.tx_ns as f64)),
+                    ("round_ns", Json::Num(s.round_ns as f64)),
+                    ("wait_ns", Json::Num(s.wait_ns as f64)),
+                    ("host_decode_ns", Json::Num(s.host.decode_ns as f64)),
+                    ("host_expand_ns", Json::Num(s.host.expand_ns as f64)),
+                    ("host_encode_ns", Json::Num(s.host.encode_ns as f64)),
+                    ("tiers", tiers(s.host.tiers)),
+                    ("events", names(s.events)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("trace_id", Json::Num(self.trace_id as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("beam", Json::Num(self.beam as f64)),
+            ("total_ns", Json::Num(self.total_ns as f64)),
+            ("pinned", Json::Bool(self.pinned)),
+            ("events", names(self.events)),
+            ("truncated_spans", Json::Num(self.truncated as f64)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+
+    /// One-line human rendering for `metrics --traces` text output.
+    pub fn summary(&self) -> String {
+        let ev = event_names(self.events).join(",");
+        format!(
+            "trace {} batch={} beam={} total={:.3}ms spans={}{} {}{}",
+            self.trace_id,
+            self.batch,
+            self.beam,
+            self.total_ns as f64 / 1e6,
+            self.spans.len(),
+            if self.truncated > 0 {
+                format!("(+{} truncated)", self.truncated)
+            } else {
+                String::new()
+            },
+            if self.pinned { "PINNED" } else { "sampled" },
+            if ev.is_empty() {
+                String::new()
+            } else {
+                format!(" [{ev}]")
+            },
+        )
+    }
+}
+
+/// Tuning knobs for a [`FlightRecorder`].
+#[derive(Clone, Copy, Debug)]
+pub struct FlightRecorderConfig {
+    /// Ring capacity in records; 0 disables the recorder entirely.
+    pub capacity: usize,
+    /// Non-tail traces are kept 1 in `sample_every` (≥ 1).
+    pub sample_every: u64,
+    /// Quantile of the internal latency histogram above which a trace is
+    /// pinned.
+    pub pin_quantile: f64,
+    /// Observations the internal histogram needs before the pin
+    /// threshold is live — below the floor everything is sampled, never
+    /// pinned (a cold histogram cannot produce a sane p99).
+    pub min_samples: u64,
+}
+
+impl Default for FlightRecorderConfig {
+    fn default() -> Self {
+        FlightRecorderConfig {
+            capacity: 256,
+            sample_every: 8,
+            pin_quantile: 0.99,
+            min_samples: 64,
+        }
+    }
+}
+
+/// One ring slot: the pooled record plus a packed publish word —
+/// bit 63 = pinned, low bits = the write sequence (0 = never written).
+struct Slot {
+    meta: AtomicU64,
+    rec: Mutex<TraceRecord>,
+}
+
+const SLOT_PINNED: u64 = 1 << 63;
+const SLOT_SEQ: u64 = SLOT_PINNED - 1;
+
+/// A fixed-capacity ring of the last N [`TraceRecord`]s with tail-based
+/// retention (module docs). Shared by every serving thread of a
+/// coordinator or host; recording is allocation-free and never blocks
+/// (per-slot `try_lock`, contended slots drop the sample and count it).
+pub struct FlightRecorder {
+    slots: Vec<Slot>,
+    /// Monotone write-attempt sequence; `seq % capacity` picks the slot.
+    head: AtomicU64,
+    /// 1-in-N sampling tick for non-pinned traces.
+    tick: AtomicU64,
+    /// Trace-id sequence ([`FlightRecorder::next_trace_id`]) — one
+    /// stream per recorder, so every serving thread sharing it mints
+    /// unique ids.
+    ids: AtomicU64,
+    /// Every observed total feeds this histogram; its live
+    /// `pin_quantile` is the pin threshold.
+    totals: super::LatencyHistogram,
+    recorded: AtomicU64,
+    pinned: AtomicU64,
+    dropped: AtomicU64,
+    cfg: FlightRecorderConfig,
+}
+
+impl FlightRecorder {
+    /// A recorder with `cfg.capacity` pre-sized slots (every record's
+    /// span vector is allocated here, once).
+    pub fn new(cfg: FlightRecorderConfig) -> Self {
+        let cfg = FlightRecorderConfig {
+            sample_every: cfg.sample_every.max(1),
+            ..cfg
+        };
+        FlightRecorder {
+            slots: (0..cfg.capacity)
+                .map(|_| Slot {
+                    meta: AtomicU64::new(0),
+                    rec: Mutex::new(TraceRecord::with_capacity()),
+                })
+                .collect(),
+            head: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+            ids: AtomicU64::new(0),
+            totals: super::LatencyHistogram::new(),
+            recorded: AtomicU64::new(0),
+            pinned: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    /// Ring capacity in records.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Totals observed so far (every call to [`FlightRecorder::record`],
+    /// retained or not).
+    pub fn observed(&self) -> u64 {
+        self.totals.count()
+    }
+
+    /// Mints the next trace id (1-based; serving threads sharing one
+    /// recorder share the sequence, so ids never collide).
+    pub fn next_trace_id(&self) -> u64 {
+        self.ids.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Records retained into the ring so far.
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Records retained as pinned tail traces.
+    pub fn pinned(&self) -> u64 {
+        self.pinned.load(Ordering::Relaxed)
+    }
+
+    /// Retention candidates dropped (slot contention or a protected
+    /// pinned occupant) — distinct from traces the 1-in-N sampler never
+    /// selected.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The live pin threshold in ms, once the sample floor is met.
+    pub fn pin_threshold_ms(&self) -> Option<f64> {
+        self.totals
+            .quantile_ms_if(self.cfg.pin_quantile, self.cfg.min_samples)
+    }
+
+    /// Observes one batch's `total` latency and, if retained (tail-
+    /// pinned or 1-in-N sampled), claims a slot and hands its pooled
+    /// record to `fill` (already cleared; `total_ns` and `pinned` are
+    /// stamped by the recorder). Returns whether the trace was retained.
+    ///
+    /// Never blocks and never allocates: see the module docs.
+    pub fn record(&self, total: Duration, fill: impl FnOnce(&mut TraceRecord)) -> bool {
+        if self.slots.is_empty() {
+            return false;
+        }
+        // The pin threshold is computed over *prior* traffic before the
+        // current total is folded in — a lone outlier must not raise the
+        // quantile it is being compared against.
+        let pin = self
+            .pin_threshold_ms()
+            .is_some_and(|p99| total.as_secs_f64() * 1e3 > p99);
+        self.totals.record(total);
+        if !pin && self.tick.fetch_add(1, Ordering::Relaxed) % self.cfg.sample_every != 0 {
+            return false;
+        }
+        let seq = self.head.fetch_add(1, Ordering::Relaxed) + 1;
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        // Tail retention: a sampled write never evicts a pinned record
+        // until the ring has lapped it twice (age in retained writes).
+        let meta = slot.meta.load(Ordering::Acquire);
+        if !pin
+            && meta & SLOT_PINNED != 0
+            && seq.saturating_sub(meta & SLOT_SEQ) <= 2 * self.slots.len() as u64
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let Ok(mut rec) = slot.rec.try_lock() else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        };
+        rec.clear();
+        fill(&mut rec);
+        rec.total_ns = total.as_nanos() as u64;
+        rec.pinned = pin;
+        drop(rec);
+        slot.meta
+            .store(if pin { SLOT_PINNED | seq } else { seq }, Ordering::Release);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        if pin {
+            self.pinned.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Newest-first copy of the retained records (cold path: allocates,
+    /// and skips any slot a writer holds at the instant of the copy).
+    pub fn export(&self) -> Vec<TraceRecord> {
+        let mut out: Vec<(u64, TraceRecord)> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            if slot.meta.load(Ordering::Acquire) & SLOT_SEQ == 0 {
+                continue;
+            }
+            let Ok(rec) = slot.rec.try_lock() else {
+                continue;
+            };
+            // Re-read the sequence under the lock so record + meta agree.
+            let seq = slot.meta.load(Ordering::Acquire) & SLOT_SEQ;
+            if seq != 0 {
+                out.push((seq, rec.clone()));
+            }
+        }
+        out.sort_by(|a, b| b.0.cmp(&a.0));
+        out.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// One-line status for stats output.
+    pub fn status_line(&self) -> String {
+        format!(
+            "flight recorder: cap={} observed={} recorded={} pinned={} dropped={} pin_threshold={}",
+            self.capacity(),
+            self.observed(),
+            self.recorded(),
+            self.pinned(),
+            self.dropped(),
+            match self.pin_threshold_ms() {
+                Some(ms) => format!("{ms:.3}ms"),
+                None => "warming".to_string(),
+            }
+        )
+    }
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("capacity", &self.capacity())
+            .field("recorded", &self.recorded())
+            .field("pinned", &self.pinned())
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +722,150 @@ mod tests {
         assert!(l0.get("tiers").unwrap().get("simd").is_none());
         // Round-trips through the strict parser.
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    fn span(shard: u32, layer: u32, events: u32) -> RoundSpan {
+        RoundSpan {
+            shard,
+            layer,
+            tx_ns: 10,
+            round_ns: 1000,
+            wait_ns: 5,
+            host: HostSpan {
+                decode_ns: 100,
+                expand_ns: 200,
+                encode_ns: 50,
+                tiers: 0b01,
+            },
+            events,
+        }
+    }
+
+    #[test]
+    fn trace_record_json_and_events() {
+        let mut rec = TraceRecord::with_capacity();
+        rec.trace_id = 7;
+        rec.batch = 4;
+        rec.beam = 10;
+        rec.total_ns = 5000;
+        rec.push_span(span(0, 0, EV_FAILOVER));
+        rec.push_span(span(1, 0, EV_SPEC_HIT));
+        assert_eq!(rec.events, EV_FAILOVER | EV_SPEC_HIT);
+        let j = rec.to_json();
+        assert_eq!(j.get("trace_id").unwrap().as_f64(), Some(7.0));
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(
+            spans[0].get("host_expand_ns").unwrap().as_f64(),
+            Some(200.0)
+        );
+        let evs = spans[0].get("events").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert!(Json::parse(&j.to_string()).is_ok());
+        assert!(rec.summary().contains("trace 7"), "{}", rec.summary());
+        // Span cap: overflow counts, never grows.
+        for _ in 0..2 * MAX_TRACE_SPANS {
+            rec.push_span(span(2, 1, 0));
+        }
+        assert_eq!(rec.spans.len(), MAX_TRACE_SPANS);
+        assert!(rec.truncated > 0);
+        assert!(rec.spans.capacity() >= MAX_TRACE_SPANS);
+    }
+
+    #[test]
+    fn flight_recorder_ring_wraps_and_samples() {
+        let rec = FlightRecorder::new(FlightRecorderConfig {
+            capacity: 8,
+            sample_every: 1,
+            ..Default::default()
+        });
+        for i in 0..100u64 {
+            rec.record(Duration::from_micros(500), |r| {
+                r.trace_id = i;
+                r.push_span(span(0, 0, 0));
+            });
+        }
+        let out = rec.export();
+        assert_eq!(out.len(), 8, "ring holds exactly its capacity");
+        // Newest first, and the newest writes survived the wrap.
+        assert_eq!(out[0].trace_id, 99);
+        assert!(out.iter().all(|r| r.trace_id >= 92), "{out:?}");
+        assert_eq!(rec.recorded(), 100);
+        // 1-in-N sampling actually thins.
+        let sparse = FlightRecorder::new(FlightRecorderConfig {
+            capacity: 8,
+            sample_every: 10,
+            ..Default::default()
+        });
+        for i in 0..100u64 {
+            sparse.record(Duration::from_micros(500), |r| r.trace_id = i);
+        }
+        assert_eq!(sparse.recorded(), 10);
+        assert_eq!(sparse.observed(), 100);
+    }
+
+    #[test]
+    fn flight_recorder_pins_tail_traces() {
+        let cfg = FlightRecorderConfig {
+            capacity: 16,
+            sample_every: 1000, // sampling alone would keep almost nothing
+            ..Default::default()
+        };
+        let rec = FlightRecorder::new(cfg);
+        // Warm past the sample floor with fast traces. The threshold is
+        // computed over prior traffic, but already-pinned slow traces do
+        // land in the histogram — warm enough that four 80 ms outliers
+        // cannot drag the p99 rank into their own bucket.
+        for i in 0..400u64 {
+            rec.record(Duration::from_micros(900 + i % 50), |r| r.trace_id = i);
+        }
+        assert!(rec.pin_threshold_ms().is_some());
+        // Every injected-slow trace must be pinned and retained.
+        for i in 0..4u64 {
+            let kept = rec.record(Duration::from_millis(80), |r| {
+                r.trace_id = 10_000 + i;
+            });
+            assert!(kept, "slow trace {i} not retained");
+        }
+        let out = rec.export();
+        for i in 0..4u64 {
+            let r = out
+                .iter()
+                .find(|r| r.trace_id == 10_000 + i)
+                .unwrap_or_else(|| panic!("slow trace {i} missing from export"));
+            assert!(r.pinned, "slow trace {i} retained but not pinned");
+        }
+        // Fast follow-up samples cannot evict the pinned tails.
+        let fast = FlightRecorderConfig {
+            capacity: 16,
+            sample_every: 1,
+            ..Default::default()
+        };
+        let rec = FlightRecorder::new(fast);
+        for i in 0..200u64 {
+            rec.record(Duration::from_micros(900), |r| r.trace_id = i);
+        }
+        assert!(rec.record(Duration::from_millis(80), |r| r.trace_id = 777));
+        // Enough sampled writes to lap back onto the pinned slot (but
+        // under the two-lap protection window).
+        for i in 0..20u64 {
+            rec.record(Duration::from_micros(900), |r| r.trace_id = 300 + i);
+        }
+        assert!(
+            rec.export().iter().any(|r| r.trace_id == 777 && r.pinned),
+            "pinned tail evicted by sampled writes within one lap"
+        );
+        assert!(rec.dropped() > 0, "eviction protection never engaged");
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = FlightRecorder::new(FlightRecorderConfig {
+            capacity: 0,
+            ..Default::default()
+        });
+        assert!(!rec.record(Duration::from_millis(1), |_| {}));
+        assert!(rec.export().is_empty());
+        assert_eq!(rec.observed(), 0);
     }
 }

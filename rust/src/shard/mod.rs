@@ -111,6 +111,36 @@
 //! pins that a live host keeps serving bitwise-identical results while
 //! being polled.
 //!
+//! # Distributed tracing and the flight recorder (protocol v3)
+//!
+//! Protocol v3 makes every scatter round *traceable* without making any
+//! round *slower*. An `Expand` frame may carry a trace flag plus the
+//! coordinator-minted batch trace id; a traced host times its own
+//! decode → expand → encode split and piggybacks a fixed-size host span
+//! (plus the effective kernel-tier mask for the layer) on the `Cands`
+//! reply. Untraced frames are byte-identical to the v2 payloads, so
+//! tracing never perturbs the bytes it measures. The client side
+//! ([`RemoteGather`] and the in-process [`ShardedCoordinator`])
+//! assembles a per-batch **trace tree** — one
+//! [`RoundSpan`](crate::metrics::RoundSpan) per shard per layer round,
+//! carrying send time, round wall time, join-wait skew, the host span,
+//! and the chaos events (hedge / failover / ejection / dead shard /
+//! degraded batch / speculation hit or miss) attributed to that round.
+//!
+//! Completed traces land in a fixed-capacity lock-free
+//! [`FlightRecorder`](crate::metrics::FlightRecorder) ring on both ends
+//! (tail-based retention: batches over the live p99 are pinned, the
+//! rest 1-in-N sampled; recording is allocation-free and drops under
+//! contention rather than blocking). A host's ring is pollable over the
+//! wire: an **empty-payload** `Traces` frame is a poll request, answered
+//! with the retained [`TraceRecord`](crate::metrics::TraceRecord)s,
+//! newest first. [`poll_traces`] is the one-call client; `metrics
+//! --traces` wraps it, and `serve --flight-recorder N` sizes (or, at 0,
+//! fully disables) the coordinator-side ring. `rust/tests/tracing.rs`
+//! pins the contract: traced serving is bitwise identical to untraced,
+//! span sums stay inside their enclosing rounds, and injected-slow
+//! queries are provably retained by the tail sampler.
+//!
 //! # Failover and replica health
 //!
 //! Each shard is addressable by one or more replicas. Every replica
@@ -190,7 +220,7 @@ pub use fault::{ConnSchedule, FaultInjector, FaultPlan};
 pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
 pub use partition::{partition, subtree_nnz, ShardModel, ShardSpec};
 pub use remote::{
-    discover, poll_stats, RemoteConfig, RemoteCoordinatorConfig, RemoteGather,
+    discover, poll_stats, poll_traces, RemoteConfig, RemoteCoordinatorConfig, RemoteGather,
     RemoteShardedCoordinator, RemoteStats, ReplicaPhase, ShardHost, ShardHostConfig,
 };
 pub use serve::{ShardedCoordinator, ShardedCoordinatorConfig};

@@ -78,7 +78,11 @@ use crate::coordinator::{
 use crate::inference::{
     rank_into, select_top, EngineConfig, InferenceEngine, PlannerConfig, Prediction, Workspace,
 };
-use crate::metrics::{Registry, ScatterMetrics, Snapshot};
+use crate::metrics::{
+    FlightRecorder, FlightRecorderConfig, HostSpan, Registry, RoundSpan, ScatterMetrics, Snapshot,
+    TraceRecord, EV_DEAD, EV_DEGRADED, EV_EJECTION, EV_FAILOVER, EV_HEDGE, EV_SPEC_HIT,
+    EV_SPEC_MISS, MAX_TRACE_SPANS,
+};
 use crate::sparse::{CsrMatrix, SparseVec, SparseVecView};
 use crate::util::Rng;
 
@@ -108,6 +112,13 @@ pub struct ShardHostConfig {
     /// one timer pair per layer round and zero steady-state allocations
     /// (`rust/tests/alloc.rs`).
     pub metrics: bool,
+    /// Capacity of the host-side [`FlightRecorder`] ring. When > 0
+    /// (default 256) every round is timed (decode/expand/encode) and fed
+    /// to the recorder, traced rounds piggyback a [`HostSpan`] on their
+    /// reply, and [`wire::MsgType::Traces`] polls answer with the
+    /// retained records. 0 disables the recorder *and* all round timing
+    /// — fully-disabled tracing costs zero.
+    pub flight_recorder: usize,
 }
 
 impl Default for ShardHostConfig {
@@ -117,6 +128,7 @@ impl Default for ShardHostConfig {
             planner: PlannerConfig::default(),
             speculate: true,
             metrics: true,
+            flight_recorder: 256,
         }
     }
 }
@@ -132,6 +144,9 @@ struct HostShared {
     /// Installed fault plan ([`ShardHost::with_faults`]); `None` on
     /// production hosts — the serve path then writes directly.
     faults: Option<Arc<FaultInjector>>,
+    /// Host-side flight recorder ([`ShardHostConfig::flight_recorder`]);
+    /// `None` disables all round timing.
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 impl HostShared {
@@ -224,6 +239,12 @@ impl ShardHost {
         };
         let stop = Arc::new(AtomicBool::new(false));
         let conns: ConnRegistry = Arc::new(Mutex::new(Vec::new()));
+        let recorder = (config.flight_recorder > 0).then(|| {
+            Arc::new(FlightRecorder::new(FlightRecorderConfig {
+                capacity: config.flight_recorder,
+                ..FlightRecorderConfig::default()
+            }))
+        });
         let shared = Arc::new(HostShared {
             engine,
             info,
@@ -231,6 +252,7 @@ impl ShardHost {
             stop: Arc::clone(&stop),
             registry: Registry::new(),
             faults: faults.clone(),
+            recorder,
         });
         let conns2 = Arc::clone(&conns);
         let accept = std::thread::Builder::new()
@@ -413,6 +435,7 @@ fn serve_conn(
     sh.registry.counter("host.connections").inc();
     let expand_frames = sh.registry.counter("host.expand_frames");
     let stats_polls = sh.registry.counter("host.stats_polls");
+    let trace_polls = sh.registry.counter("host.trace_polls");
 
     let engine = &sh.engine;
     let dim = engine.model().dim;
@@ -449,11 +472,35 @@ fn serve_conn(
                 }
                 continue;
             }
+            // A flight-recorder poll: reply with the retained trace
+            // records (empty when the recorder is disabled). Like Stats,
+            // polls leave all round state untouched.
+            MsgType::Traces => {
+                if let Err(e) = wire::decode_traces_poll(&rx) {
+                    return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, &e.to_string());
+                }
+                trace_polls.inc();
+                let records = sh.recorder.as_ref().map(|r| r.export()).unwrap_or_default();
+                wire::encode_traces(&mut tx, &records);
+                if !host_write(&mut w, &tx, &mut faults)? {
+                    return Ok(());
+                }
+                continue;
+            }
             _ => {
-                return reply_error(&mut w, &mut tx, wire::ERR_PROTOCOL, "expected Expand or Stats");
+                return reply_error(
+                    &mut w,
+                    &mut tx,
+                    wire::ERR_PROTOCOL,
+                    "expected Expand, Stats or Traces",
+                );
             }
         }
         expand_frames.inc();
+        // All round timing is gated on the recorder: with it disabled
+        // the serve loop takes no timestamps at all and the reply never
+        // carries a span — fully-disabled tracing costs zero.
+        let t0 = sh.recorder.as_ref().map(|_| Instant::now());
         let hdr = match wire::decode_expand(&rx, dim, &mut x, &mut round) {
             Ok(h) => h,
             Err(e) => return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, &e.to_string()),
@@ -470,6 +517,8 @@ fn serve_conn(
                 return reply_error(&mut w, &mut tx, wire::ERR_MALFORMED, "beam node out of range");
             }
         }
+        let decode_ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
+        let t_expand = t0.map(|_| Instant::now());
         expand_round(engine, &x, layer, &mut round, &mut ws);
         let do_spec = hdr.speculate && sh.speculate && layer + 1 < depth;
         if do_spec {
@@ -485,9 +534,55 @@ fn serve_conn(
                 &mut ws,
             );
         }
-        wire::encode_cands(&mut tx, hdr.round_id, hdr.layer, &round, do_spec.then_some(&spec));
+        let mut hspan = HostSpan {
+            decode_ns,
+            expand_ns: t_expand.map_or(0, |t| t.elapsed().as_nanos() as u64),
+            encode_ns: 0,
+            tiers: t0
+                .and(engine.metrics())
+                .map_or(0, |m| m.layer_tier_mask(layer)),
+        };
+        // The reply carries the span only when the round asked for one
+        // (an untraced reply stays byte-identical to v2). `encode_ns` is
+        // backpatched: the encode can't time itself from the inside.
+        let attach = hdr.trace && t0.is_some();
+        let t_encode = t0.map(|_| Instant::now());
+        wire::encode_cands(
+            &mut tx,
+            hdr.round_id,
+            hdr.layer,
+            &round,
+            do_spec.then_some(&spec),
+            attach.then_some(&hspan),
+        );
+        if let Some(t) = t_encode {
+            hspan.encode_ns = t.elapsed().as_nanos() as u64;
+            if attach {
+                wire::patch_cands_encode_ns(&mut tx, hspan.encode_ns);
+            }
+        }
         if !host_write(&mut w, &tx, &mut faults)? {
             return Ok(());
+        }
+        // Feed the host recorder (untraced rounds too, under trace id
+        // 0): one span covering this round, total = decode → written.
+        if let (Some(rec), Some(t)) = (sh.recorder.as_ref(), t0) {
+            let shard_id = sh.info.shard_id;
+            let n = round.n;
+            rec.record(t.elapsed(), |r| {
+                r.trace_id = hdr.trace_id;
+                r.batch = n as u32;
+                r.beam = hdr.beam;
+                r.push_span(RoundSpan {
+                    shard: shard_id,
+                    layer: hdr.layer,
+                    tx_ns: 0,
+                    round_ns: hspan.total_ns(),
+                    wait_ns: 0,
+                    host: hspan,
+                    events: 0,
+                });
+            });
         }
     }
 }
@@ -580,6 +675,15 @@ pub struct RemoteConfig {
     /// Seed for the backoff/cooldown jitter streams — chaos runs replay
     /// exactly under one seed (`MSCM_TEST_SEED` convention).
     pub seed: u64,
+    /// Capacity of the client-side [`FlightRecorder`] ring (shared by
+    /// every gather worker of a coordinator). When > 0 (default 256)
+    /// every batch is traced: `Expand` frames carry the trace flag + a
+    /// batch span id, hosts piggyback their decode/expand/encode timing
+    /// on each reply, and the per-batch trace tree (per-shard per-round
+    /// spans + hedge/failover/ejection/degraded/speculation events) is
+    /// recorded with tail-based retention. 0 disables tracing entirely —
+    /// round payloads are then byte-identical to v2.
+    pub flight_recorder: usize,
     /// Client-transport fault injection (seeded connect refusal, send
     /// delay); test machinery, `None` in production.
     pub faults: Option<Arc<FaultInjector>>,
@@ -600,6 +704,7 @@ impl Default for RemoteConfig {
             backoff_base: Duration::from_millis(2),
             backoff_cap: Duration::from_millis(200),
             seed: 0x5EED_CA5E,
+            flight_recorder: 256,
             faults: None,
         }
     }
@@ -1248,6 +1353,22 @@ pub fn poll_stats(addr: SocketAddr, cfg: &RemoteConfig) -> io::Result<Snapshot> 
     }
 }
 
+/// Polls one shard host's flight recorder over a fresh connection
+/// (handshake + one [`wire::MsgType::Traces`] round) — the
+/// `metrics --traces` transport. Newest records first; empty when the
+/// host's recorder is disabled.
+pub fn poll_traces(addr: SocketAddr, cfg: &RemoteConfig) -> io::Result<Vec<TraceRecord>> {
+    let (mut conn, _) = RemoteShard::connect_addr(addr, cfg)?;
+    let mut buf = Vec::new();
+    wire::encode_traces_poll(&mut buf);
+    conn.w.write_all(&buf)?;
+    match wire::read_frame(&mut conn.r, &mut buf)? {
+        MsgType::Traces => wire::decode_traces(&buf),
+        MsgType::Error => Err(wire::error_from_frame(&buf)),
+        ty => Err(invalid(format!("expected Traces, got {ty:?}"))),
+    }
+}
+
 /// The remote gather stage: drives N shard hosts through the
 /// layer-synchronized protocol exactly like the in-process
 /// [`ShardedEngine`] drives its units, with replica failover and
@@ -1269,6 +1390,20 @@ pub struct RemoteGather {
     x: CsrMatrix,
     round_id: u64,
     stats: Arc<RemoteStats>,
+    /// Client flight recorder; `Some` traces every batch
+    /// ([`RemoteConfig::flight_recorder`]). Shared across a coordinator's
+    /// gather workers ([`RemoteGather::set_recorder`]).
+    recorder: Option<Arc<FlightRecorder>>,
+    /// Pooled span buffer of the batch being assembled (hard-capped at
+    /// [`MAX_TRACE_SPANS`]; overflow counted in `span_drop`).
+    spans: Vec<RoundSpan>,
+    /// Spans dropped past the cap in the current batch.
+    span_drop: u32,
+    /// Host span decoded off each shard's latest reply (zeros when the
+    /// host sent none).
+    host_spans: Vec<HostSpan>,
+    /// Per-shard encode+send time of the current round, ns.
+    tx_ns: Vec<u64>,
 }
 
 /// Hedge only once a shard's round histogram holds this many samples —
@@ -1305,6 +1440,12 @@ impl RemoteGather {
         if stats.scatter.num_shards() != s_count {
             return Err(invalid("shared stats sized for a different shard count"));
         }
+        let recorder = (cfg.flight_recorder > 0).then(|| {
+            Arc::new(FlightRecorder::new(FlightRecorderConfig {
+                capacity: cfg.flight_recorder,
+                ..FlightRecorderConfig::default()
+            }))
+        });
         Ok(Self {
             shards,
             cfg,
@@ -1318,6 +1459,11 @@ impl RemoteGather {
             x: CsrMatrix::default(),
             round_id: 0,
             stats,
+            recorder,
+            spans: Vec::with_capacity(MAX_TRACE_SPANS),
+            span_drop: 0,
+            host_spans: vec![HostSpan::default(); s_count],
+            tx_ns: vec![0; s_count],
         })
     }
 
@@ -1344,6 +1490,30 @@ impl RemoteGather {
     /// Shared transport statistics.
     pub fn stats(&self) -> &Arc<RemoteStats> {
         &self.stats
+    }
+
+    /// The client-side flight recorder (`None` when tracing is off).
+    pub fn recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.recorder.as_ref()
+    }
+
+    /// Replaces the flight recorder — how a coordinator shares one ring
+    /// across its gather workers (mirrors the shared [`RemoteStats`]).
+    pub fn set_recorder(&mut self, recorder: Option<Arc<FlightRecorder>>) {
+        self.recorder = recorder;
+    }
+
+    /// Polls shard `shard`'s flight recorder over the
+    /// [`wire::MsgType::Traces`] frame, with the same failover the
+    /// rounds use. Newest records first; empty when the host's recorder
+    /// is disabled.
+    pub fn poll_shard_traces(&mut self, shard: usize) -> io::Result<Vec<TraceRecord>> {
+        let sh = &mut self.shards[shard];
+        wire::encode_traces_poll(&mut sh.tx);
+        match sh.round_trip(&self.cfg, &self.stats, None)? {
+            MsgType::Traces => wire::decode_traces(&sh.rx),
+            ty => Err(invalid(format!("shard {shard}: expected Traces, got {ty:?}"))),
+        }
     }
 
     /// Polls shard `shard`'s live metrics over the
@@ -1515,7 +1685,18 @@ impl RemoteGather {
             return Err(invalid(format!("shard {s}: reply for a different batch size")));
         }
         self.spec_ok[s] = ch.has_spec && self.spec[s].n == n;
+        self.host_spans[s] = ch.host_span.unwrap_or_default();
         Ok(())
+    }
+
+    /// Appends one span to the current batch's trace, counting overflow
+    /// past the wire cap instead of growing.
+    fn push_span(&mut self, span: RoundSpan) {
+        if self.spans.len() < MAX_TRACE_SPANS {
+            self.spans.push(span);
+        } else {
+            self.span_drop += 1;
+        }
     }
 
     /// Marks shard `s` down for the rest of the batch: its round slot is
@@ -1541,6 +1722,18 @@ impl RemoteGather {
         let s_count = self.shards.len();
         self.arena.begin_rounds(s_count, n);
         self.dead.iter_mut().for_each(|d| *d = false);
+        // Trace setup: one trace id per batch, one span per live shard
+        // per real network round, assembled into the recorder at batch
+        // end. `tracing` is the only flag the hot path checks — with the
+        // recorder off nothing below takes a timestamp.
+        let tracing = self.recorder.is_some();
+        let t_batch = Instant::now();
+        self.spans.clear();
+        self.span_drop = 0;
+        let trace_id = self
+            .recorder
+            .as_ref()
+            .map_or(0, |r| r.next_trace_id());
         let now = Instant::now();
         for sh in &mut self.shards {
             sh.rotate(now);
@@ -1561,6 +1754,8 @@ impl RemoteGather {
                 layer: l as u32,
                 beam: beam as u32,
                 speculate: want_spec,
+                trace: tracing,
+                trace_id,
             };
             // Scatter: encode every live shard's slice, write them all
             // before reading any reply so hosts expand concurrently.
@@ -1568,6 +1763,7 @@ impl RemoteGather {
                 if self.dead[s] {
                     continue;
                 }
+                let t_tx = tracing.then(Instant::now);
                 wire::encode_expand(
                     &mut self.shards[s].tx,
                     &hdr,
@@ -1576,10 +1772,14 @@ impl RemoteGather {
                     n,
                 );
                 self.shards[s].send(&self.cfg, deadline);
+                if let Some(t) = t_tx {
+                    self.tx_ns[s] = t.elapsed().as_nanos() as u64;
+                }
             }
             // Join: collect replies in shard order, failing over as
             // needed; record per-shard latency and the join wait (read-
             // completion order — see the `RemoteStats::scatter` caveat).
+            let round_start = self.spans.len();
             let t_round = Instant::now();
             let mut first_reply: Option<Duration> = None;
             let mut last_reply = Duration::ZERO;
@@ -1587,18 +1787,68 @@ impl RemoteGather {
                 if self.dead[s] {
                     continue;
                 }
-                if let Err(e) = self.join_shard(s, rid, l as u32, n, deadline) {
+                // Joins are sequential, so a diff of the shared failure
+                // counters around this shard's join attributes hedges,
+                // failovers and ejections to its span.
+                let ev0 = if tracing {
+                    [&self.stats.hedges, &self.stats.failovers, &self.stats.ejections]
+                        .map(|c| c.load(Ordering::Relaxed))
+                } else {
+                    [0; 3]
+                };
+                let joined = self.join_shard(s, rid, l as u32, n, deadline);
+                let mut events = 0u32;
+                if tracing {
+                    let [h, f, e] =
+                        [&self.stats.hedges, &self.stats.failovers, &self.stats.ejections]
+                            .map(|c| c.load(Ordering::Relaxed));
+                    if h > ev0[0] {
+                        events |= EV_HEDGE;
+                    }
+                    if f > ev0[1] {
+                        events |= EV_FAILOVER;
+                    }
+                    if e > ev0[2] {
+                        events |= EV_EJECTION;
+                    }
+                }
+                if let Err(e) = joined {
                     // Deadline expiry always fails the batch — a partial
                     // result must not cost more than the budget either.
                     let budget_gone = deadline.is_some_and(|d| Instant::now() >= d);
                     if self.cfg.allow_partial && !budget_gone {
                         self.mark_dead(s, n);
+                        if tracing {
+                            self.push_span(RoundSpan {
+                                shard: s as u32,
+                                layer: l as u32,
+                                tx_ns: self.tx_ns[s],
+                                round_ns: t_round.elapsed().as_nanos() as u64,
+                                wait_ns: 0,
+                                host: HostSpan::default(),
+                                events: events | EV_DEAD,
+                            });
+                        }
                         continue;
                     }
                     return Err(e);
                 }
                 let elapsed = t_round.elapsed();
                 self.stats.scatter.record_round(s, elapsed);
+                if tracing {
+                    // Join-wait share: this reply minus the round's first
+                    // (0 for the shard that answered first).
+                    let wait = first_reply.map_or(Duration::ZERO, |f| elapsed.saturating_sub(f));
+                    self.push_span(RoundSpan {
+                        shard: s as u32,
+                        layer: l as u32,
+                        tx_ns: self.tx_ns[s],
+                        round_ns: elapsed.as_nanos() as u64,
+                        wait_ns: wait.as_nanos() as u64,
+                        host: self.host_spans[s],
+                        events,
+                    });
+                }
                 first_reply.get_or_insert(elapsed);
                 last_reply = elapsed;
             }
@@ -1618,15 +1868,42 @@ impl RemoteGather {
             if l < self.depth && want_spec {
                 if self.try_assemble_spec(n) {
                     self.stats.spec_rounds_saved.fetch_add(1, Ordering::Relaxed);
+                    if tracing {
+                        for sp in &mut self.spans[round_start..] {
+                            sp.events |= EV_SPEC_HIT;
+                        }
+                    }
                     self.merge_layer(l, beam);
                     l += 1;
                 } else {
                     self.stats.spec_misses.fetch_add(1, Ordering::Relaxed);
+                    if tracing {
+                        for sp in &mut self.spans[round_start..] {
+                            sp.events |= EV_SPEC_MISS;
+                        }
+                    }
                 }
             }
         }
         for q in 0..n {
             rank_into(&mut self.arena.global_beams[q], topk, &mut self.arena.out[q]);
+        }
+        if let Some(rec) = &self.recorder {
+            let degraded = self.dead.iter().any(|&d| d);
+            let spans = &self.spans;
+            let span_drop = self.span_drop;
+            rec.record(t_batch.elapsed(), |r| {
+                r.trace_id = trace_id;
+                r.batch = n as u32;
+                r.beam = beam as u32;
+                for sp in spans {
+                    r.push_span(*sp);
+                }
+                r.truncated += span_drop;
+                if degraded {
+                    r.events |= EV_DEGRADED;
+                }
+            });
         }
         Ok(())
     }
@@ -1758,6 +2035,9 @@ struct RemoteInner {
     config: RemoteCoordinatorConfig,
     stats: CoordinatorStats,
     remote_stats: Arc<RemoteStats>,
+    /// One flight recorder shared by every gather worker (`None` when
+    /// [`RemoteConfig::flight_recorder`] is 0).
+    recorder: Option<Arc<FlightRecorder>>,
     router: Router,
     dim: usize,
     num_shards: usize,
@@ -1793,16 +2073,21 @@ impl RemoteShardedCoordinator {
         let mut gathers = Vec::with_capacity(workers);
         let first = RemoteGather::connect_groups(groups, config.remote.clone(), None)?;
         let remote_stats = Arc::clone(first.stats());
+        let recorder = first.recorder().cloned();
         let dim = first.dim();
         let num_shards = first.num_shards();
         let num_labels = first.num_labels();
         gathers.push(first);
         for _ in 1..workers {
-            gathers.push(RemoteGather::connect_groups(
+            let mut g = RemoteGather::connect_groups(
                 groups,
                 config.remote.clone(),
                 Some(Arc::clone(&remote_stats)),
-            )?);
+            )?;
+            // All workers feed one ring, so the exported trace set spans
+            // the whole coordinator and trace ids never collide.
+            g.set_recorder(recorder.clone());
+            gathers.push(g);
         }
 
         let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -1811,6 +2096,7 @@ impl RemoteShardedCoordinator {
         let inner = Arc::new(RemoteInner {
             stats: CoordinatorStats::default(),
             remote_stats,
+            recorder,
             router: Router::new(req_tx, config.base.queue_capacity),
             dim,
             num_shards,
@@ -1870,6 +2156,12 @@ impl RemoteShardedCoordinator {
     /// round latency).
     pub fn remote_stats(&self) -> &Arc<RemoteStats> {
         &self.inner.remote_stats
+    }
+
+    /// The coordinator-side flight recorder, shared by every gather
+    /// worker (`None` when tracing is off).
+    pub fn flight_recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.inner.recorder.as_ref()
     }
 
     /// Point-in-time [`Snapshot`] joining the front-door coordinator

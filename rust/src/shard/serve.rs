@@ -52,6 +52,9 @@ use std::time::{Duration, Instant};
 use super::engine::{GatherArena, ShardRound, ShardedEngine};
 use crate::coordinator::batcher::{spawn_batcher, WorkerPool};
 use crate::coordinator::{CoordinatorConfig, CoordinatorStats, Request, Response, Router};
+use crate::metrics::{
+    FlightRecorder, FlightRecorderConfig, HostSpan, RoundSpan, MAX_TRACE_SPANS,
+};
 use crate::sparse::{CsrMatrix, SparseVec};
 
 /// Configuration of the sharded serving system.
@@ -64,6 +67,12 @@ pub struct ShardedCoordinatorConfig {
     /// Worker threads *per shard*; each owns a private per-shard
     /// [`crate::inference::Workspace`].
     pub shard_workers: usize,
+    /// Capacity of the coordinator's [`FlightRecorder`] ring. When > 0
+    /// (default 256) every batch is traced — per-shard per-layer spans
+    /// (tx/round/join-wait, shard expand time, effective kernel tiers)
+    /// recorded with tail-based retention. 0 disables tracing and all
+    /// round timestamps beyond the existing scatter histograms.
+    pub flight_recorder: usize,
 }
 
 impl Default for ShardedCoordinatorConfig {
@@ -71,6 +80,7 @@ impl Default for ShardedCoordinatorConfig {
         Self {
             base: CoordinatorConfig::default(),
             shard_workers: 1,
+            flight_recorder: 256,
         }
     }
 }
@@ -84,19 +94,27 @@ struct LayerJob {
     layer: usize,
     x: Arc<CsrMatrix>,
     round: ShardRound,
-    reply: mpsc::Sender<(usize, ShardRound)>,
+    /// Reply: `(shard, round, expand_ns)` — expand time 0 when the
+    /// coordinator is not tracing.
+    reply: mpsc::Sender<(usize, ShardRound, u64)>,
 }
 
 /// Per-gather-worker pooled state (see the module docs).
 struct GatherState {
     arena: GatherArena,
     x: Arc<CsrMatrix>,
+    /// Pooled span buffer of the batch being traced (hard-capped at
+    /// [`MAX_TRACE_SPANS`]).
+    spans: Vec<RoundSpan>,
 }
 
 struct Inner {
     engine: Arc<ShardedEngine>,
     config: ShardedCoordinatorConfig,
     stats: CoordinatorStats,
+    /// Flight recorder shared by the gather workers (`None` when
+    /// [`ShardedCoordinatorConfig::flight_recorder`] is 0).
+    recorder: Option<Arc<FlightRecorder>>,
     router: Router,
     /// Scatter fan-out senders, one per shard; cleared at shutdown to
     /// disconnect the shard pools.
@@ -120,6 +138,7 @@ impl ShardedCoordinator {
         let batch_rx = Arc::new(Mutex::new(batch_rx));
 
         // Per-shard scatter queues + pools.
+        let timed = config.flight_recorder > 0;
         let mut shard_txs = Vec::with_capacity(num_shards);
         let mut shard_pools = Vec::with_capacity(num_shards);
         for s in 0..num_shards {
@@ -140,19 +159,28 @@ impl ShardedCoordinator {
                         mut round,
                         reply,
                     } = job;
+                    let t0 = timed.then(Instant::now);
                     engine_run.expand_shard_layer(shard, &x, layer, &mut round, ws);
+                    let expand_ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
                     // Gatherer may have bailed (shutdown) — fine; the
                     // loaned buffers die with the channel.
-                    let _ = reply.send((shard, round));
+                    let _ = reply.send((shard, round, expand_ns));
                 },
             ));
             shard_txs.push(tx);
         }
 
+        let recorder = timed.then(|| {
+            Arc::new(FlightRecorder::new(FlightRecorderConfig {
+                capacity: config.flight_recorder,
+                ..FlightRecorderConfig::default()
+            }))
+        });
         let inner = Arc::new(Inner {
             engine: Arc::clone(&engine),
             config: config.clone(),
             stats: CoordinatorStats::with_scatter(num_shards),
+            recorder,
             router: Router::new(req_tx, config.base.queue_capacity),
             shard_txs: Mutex::new(shard_txs),
         });
@@ -180,6 +208,7 @@ impl ShardedCoordinator {
                 |_w| GatherState {
                     arena: GatherArena::new(),
                     x: Arc::new(CsrMatrix::default()),
+                    spans: Vec::with_capacity(MAX_TRACE_SPANS),
                 },
                 move |state, batch: Vec<Request>| scatter_gather(&inner, state, batch),
             )
@@ -235,6 +264,12 @@ impl ShardedCoordinator {
         &self.inner.engine
     }
 
+    /// The coordinator's flight recorder, shared by every gather worker
+    /// (`None` when tracing is off).
+    pub fn flight_recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.inner.recorder.as_ref()
+    }
+
     /// Stops accepting new work; in-flight batches still complete.
     pub fn stop(&self) {
         self.inner.router.close();
@@ -271,7 +306,7 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
     let topk = inner.config.base.topk;
     let dispatch_time = Instant::now();
 
-    let GatherState { arena, x } = state;
+    let GatherState { arena, x, spans } = state;
     // Rebuild the pooled query matrix in place. The Arc is normally
     // unique again here — every shard dropped its clone when its last
     // LayerJob finished — so this is alloc-free; the fallback covers the
@@ -282,6 +317,13 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
     Arc::get_mut(x)
         .expect("query matrix uniquely held")
         .assign_rows(engine.dim(), batch.iter().map(|req| req.query.view()));
+
+    // Trace setup: one span per shard per layer round, assembled into
+    // the shared recorder at batch end (pooled buffer — no steady-state
+    // allocations).
+    let tracing = inner.recorder.is_some();
+    spans.clear();
+    let mut span_drop = 0u32;
 
     let ok = engine.drive(n, beam, topk, arena, |l, rounds| {
         let (tx, rx) = mpsc::channel();
@@ -302,6 +344,7 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
                 });
             }
         }
+        let tx_ns = tracing.then(|| t_round.elapsed().as_nanos() as u64);
         drop(tx);
         let mut received = 0usize;
         // Round telemetry: per-shard reply latency plus the join wait
@@ -309,7 +352,7 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
         // costs the gather join).
         let mut first_reply = Duration::ZERO;
         let mut last_reply = Duration::ZERO;
-        while let Ok((s, round)) = rx.recv() {
+        while let Ok((s, round, expand_ns)) = rx.recv() {
             let elapsed = t_round.elapsed();
             if let Some(sc) = &inner.stats.scatter {
                 sc.record_round(s, elapsed);
@@ -318,6 +361,30 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
                 first_reply = elapsed;
             }
             last_reply = elapsed;
+            if let Some(tx_ns) = tx_ns {
+                let span = RoundSpan {
+                    shard: s as u32,
+                    layer: l as u32,
+                    tx_ns,
+                    round_ns: elapsed.as_nanos() as u64,
+                    wait_ns: elapsed.saturating_sub(first_reply).as_nanos() as u64,
+                    host: HostSpan {
+                        decode_ns: 0,
+                        expand_ns,
+                        encode_ns: 0,
+                        tiers: inner
+                            .engine
+                            .shard_metrics(s)
+                            .map_or(0, |m| m.layer_tier_mask(l)),
+                    },
+                    events: 0,
+                };
+                if spans.len() < MAX_TRACE_SPANS {
+                    spans.push(span);
+                } else {
+                    span_drop += 1;
+                }
+            }
             rounds[s] = round;
             received += 1;
         }
@@ -334,6 +401,20 @@ fn scatter_gather(inner: &Inner, state: &mut GatherState, batch: Vec<Request>) {
             inner.router.mark_done();
         }
         return;
+    }
+
+    if let Some(rec) = &inner.recorder {
+        let trace_id = rec.next_trace_id();
+        let spans = &*spans;
+        rec.record(dispatch_time.elapsed(), |r| {
+            r.trace_id = trace_id;
+            r.batch = n as u32;
+            r.beam = beam as u32;
+            for sp in spans {
+                r.push_span(*sp);
+            }
+            r.truncated += span_drop;
+        });
     }
 
     for (q, req) in batch.into_iter().enumerate() {
@@ -391,6 +472,7 @@ mod tests {
                     ..Default::default()
                 },
                 shard_workers: 2,
+                ..Default::default()
             },
         );
         let mut rng = Rng::seed_from_u64(6);

@@ -27,9 +27,10 @@
 //! |-------------|---------------|---------|
 //! | `Hello`     | client → host | empty (version rides in the header) |
 //! | `ShardInfo` | host → client | shard identity + per-layer topology |
-//! | `Expand`    | client → host | one layer round: queries + beam slices |
-//! | `Cands`     | host → client | per-query candidates (+ speculation) |
+//! | `Expand`    | client → host | one layer round: queries + beam slices (+ trace id, v3) |
+//! | `Cands`     | host → client | per-query candidates (+ speculation, + host span v3) |
 //! | `Stats`     | both          | empty = poll request; reply = snapshot (v2) |
+//! | `Traces`    | both          | empty = poll request; reply = flight-recorder records (v3) |
 //! | `Error`     | host → client | code + message, then the host closes |
 //!
 //! A `Stats` frame with an **empty** payload is a poll: the host replies
@@ -53,6 +54,45 @@
 //! the shard-local beam slice — so rounds are stateless: a round that
 //! times out on one replica re-issues byte-identically to the next
 //! ([`super::remote`]'s failover).
+//!
+//! # v3: distributed tracing
+//!
+//! Protocol v3 threads the cross-process trace tree through the round
+//! frames without changing untraced bytes:
+//!
+//! - The `Expand` speculation flag became a **flag word**: bit 0 =
+//!   speculate (the v2 meaning), bit 1 = trace. When the trace bit is
+//!   set, a `u64` batch span id (`trace_id`) follows the flag word;
+//!   every other bit is rejected. An untraced v3 `Expand` payload is
+//!   byte-identical to its v2 encoding.
+//! - The `Cands` speculation flag is the same flag word: bit 0 = the
+//!   reply carries a speculation section, bit 1 = it ends with a **host
+//!   span** — `decode_ns`/`expand_ns`/`encode_ns` (`u64` each) measured
+//!   around the host's round handling, plus a `u32` effective
+//!   kernel-tier bitmask. `encode_ns` is backpatched into the encoded
+//!   frame ([`patch_cands_encode_ns`]) because the encode duration is
+//!   only known once the encode finishes. An untraced reply is
+//!   byte-identical to v2.
+//! - A `Traces` frame with an **empty** payload polls the peer's
+//!   [`crate::metrics::FlightRecorder`]; the reply is a `Traces` frame
+//!   carrying its retained [`crate::metrics::TraceRecord`]s —
+//!
+//! ```text
+//! u32 n_records    n × {
+//!   u64 trace_id; u32 batch; u32 beam; u64 total_ns;
+//!   u32 events; u32 flags (bit 0 = pinned); u32 truncated; u32 n_spans;
+//!   n_spans × { u32 shard; u32 layer;
+//!               u64 tx_ns; u64 round_ns; u64 wait_ns;
+//!               u64 decode_ns; u64 expand_ns; u64 encode_ns;
+//!               u32 tiers; u32 events }
+//! }
+//! ```
+//!
+//! decoded as strictly as the `Stats` reply: record/span counts are
+//! capped ([`MAX_TRACE_RECORDS`], [`crate::metrics::MAX_TRACE_SPANS`]),
+//! unknown flag bits are rejected, and trailing bytes fail the frame.
+//! Like `Stats`, polls are valid any time after the handshake and leave
+//! round state untouched.
 //!
 //! # Partial writes and corruption
 //!
@@ -78,14 +118,18 @@
 use std::io::{self, Read};
 
 use super::engine::ShardRound;
-use crate::metrics::{HistogramSnapshot, Snapshot};
+use crate::metrics::{
+    HistogramSnapshot, HostSpan, RoundSpan, Snapshot, TraceRecord, MAX_TRACE_SPANS,
+};
 use crate::sparse::CsrMatrix;
 
 /// Frame magic ("MXWP" as a little-endian u32).
 pub const WIRE_MAGIC: u32 = 0x4d58_5750;
 /// Protocol version; peers must match exactly. v2 added the `Stats`
-/// poll/reply frame.
-pub const WIRE_VERSION: u16 = 2;
+/// poll/reply frame; v3 added the `Expand`/`Cands` trace sections and
+/// the `Traces` poll (untraced round payloads are byte-identical to
+/// v2).
+pub const WIRE_VERSION: u16 = 3;
 /// Frame header length in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Maximum accepted payload (guards against garbage length fields).
@@ -111,6 +155,9 @@ pub enum MsgType {
     Cands,
     /// Metrics poll (empty payload) or its snapshot reply.
     Stats,
+    /// Flight-recorder poll (empty payload) or its trace-record reply
+    /// (v3).
+    Traces,
     /// Protocol failure; the sender closes after this frame.
     Error,
 }
@@ -124,6 +171,7 @@ impl MsgType {
             MsgType::Cands => 4,
             MsgType::Error => 5,
             MsgType::Stats => 6,
+            MsgType::Traces => 7,
         }
     }
 
@@ -135,6 +183,7 @@ impl MsgType {
             4 => MsgType::Cands,
             5 => MsgType::Error,
             6 => MsgType::Stats,
+            7 => MsgType::Traces,
             _ => return None,
         })
     }
@@ -175,6 +224,13 @@ pub struct ExpandHeader {
     /// Ask the host to piggyback its local top-`beam` expansion of the
     /// *next* layer onto the reply.
     pub speculate: bool,
+    /// Ask the host to time this round and piggyback a [`HostSpan`] on
+    /// the reply (v3). When unset the encoded payload is byte-identical
+    /// to v2.
+    pub trace: bool,
+    /// Batch span id carried to the host when `trace` is set (0
+    /// otherwise; not encoded for untraced rounds).
+    pub trace_id: u64,
 }
 
 /// Header of an [`MsgType::Cands`] reply.
@@ -186,6 +242,9 @@ pub struct CandsHeader {
     pub layer: u32,
     /// The reply carries a speculation section.
     pub has_spec: bool,
+    /// The host's round timings, when the reply ends with a v3 span
+    /// section (`None` from an untraced host).
+    pub host_span: Option<HostSpan>,
 }
 
 /// A host's speculative expansion of one layer, pooled like
@@ -489,7 +548,10 @@ pub fn encode_expand(
     put_u64(buf, hdr.round_id);
     put_u32(buf, hdr.layer);
     put_u32(buf, hdr.beam);
-    put_u32(buf, hdr.speculate as u32);
+    put_u32(buf, hdr.speculate as u32 | (hdr.trace as u32) << 1);
+    if hdr.trace {
+        put_u64(buf, hdr.trace_id);
+    }
     put_u32(buf, n as u32);
     for q in 0..n {
         let row = x.row(q);
@@ -523,11 +585,13 @@ pub fn decode_expand(
     let round_id = rd.u64()?;
     let layer = rd.u32()?;
     let beam = rd.u32()?;
-    let speculate = match rd.u32()? {
-        0 => false,
-        1 => true,
-        v => return Err(invalid(format!("bad speculate flag {v}"))),
-    };
+    let flags = rd.u32()?;
+    if flags & !0b11 != 0 {
+        return Err(invalid(format!("bad speculate flag {flags}")));
+    }
+    let speculate = flags & 0b01 != 0;
+    let trace = flags & 0b10 != 0;
+    let trace_id = if trace { rd.u64()? } else { 0 };
     let n = rd.u32()? as usize;
     if n == 0 {
         return Err(invalid("empty round (n = 0)"));
@@ -576,24 +640,31 @@ pub fn decode_expand(
         layer,
         beam,
         speculate,
+        trace,
+        trace_id,
     })
 }
 
 /// Encodes a round reply from the host's pooled buffers: per-query
 /// candidates out of `round.cands`, plus the speculation section when
-/// `spec` is given.
+/// `spec` is given, plus the v3 host span when the round was traced.
+///
+/// `span.encode_ns` is typically 0 here — the host cannot time the
+/// encode it is still inside of. Measure after this returns and
+/// backpatch with [`patch_cands_encode_ns`].
 pub fn encode_cands(
     buf: &mut Vec<u8>,
     round_id: u64,
     layer: u32,
     round: &ShardRound,
     spec: Option<&SpecRound>,
+    span: Option<&HostSpan>,
 ) {
     let n = round.n;
     begin_frame(buf, MsgType::Cands);
     put_u64(buf, round_id);
     put_u32(buf, layer);
-    put_u32(buf, spec.is_some() as u32);
+    put_u32(buf, spec.is_some() as u32 | (span.is_some() as u32) << 1);
     put_u32(buf, n as u32);
     for c in &round.cands[..n] {
         put_u32(buf, c.len() as u32);
@@ -618,7 +689,24 @@ pub fn encode_cands(
             put_pairs(buf, &sp.children[q]);
         }
     }
+    if let Some(sp) = span {
+        put_u64(buf, sp.decode_ns);
+        put_u64(buf, sp.expand_ns);
+        put_u64(buf, sp.encode_ns);
+        put_u32(buf, sp.tiers);
+    }
     end_frame(buf);
+}
+
+/// Backpatches the `encode_ns` field of the trailing host span in an
+/// already-encoded [`MsgType::Cands`] frame. The span section ends the
+/// payload as `decode_ns u64, expand_ns u64, encode_ns u64, tiers u32`,
+/// so `encode_ns` occupies `frame[len-12..len-4]`. Only valid on a frame
+/// produced by [`encode_cands`] with `span = Some(..)`.
+pub fn patch_cands_encode_ns(frame: &mut [u8], encode_ns: u64) {
+    let len = frame.len();
+    debug_assert!(len >= HEADER_LEN + 12, "frame too short to hold a host span");
+    frame[len - 12..len - 4].copy_from_slice(&encode_ns.to_le_bytes());
 }
 
 /// Decodes an [`MsgType::Cands`] payload into the gather stage's pooled
@@ -632,11 +720,12 @@ pub fn decode_cands(
     let mut rd = Rd::new(payload);
     let round_id = rd.u64()?;
     let layer = rd.u32()?;
-    let has_spec = match rd.u32()? {
-        0 => false,
-        1 => true,
-        v => return Err(invalid(format!("bad speculation flag {v}"))),
-    };
+    let flags = rd.u32()?;
+    if flags & !0b11 != 0 {
+        return Err(invalid(format!("bad speculation flag {flags}")));
+    }
+    let has_spec = flags & 0b01 != 0;
+    let has_span = flags & 0b10 != 0;
     let n = rd.u32()? as usize;
     if n == 0 {
         return Err(invalid("empty reply (n = 0)"));
@@ -665,11 +754,22 @@ pub fn decode_cands(
     } else {
         spec.n = 0;
     }
+    let host_span = if has_span {
+        Some(HostSpan {
+            decode_ns: rd.u64()?,
+            expand_ns: rd.u64()?,
+            encode_ns: rd.u64()?,
+            tiers: rd.u32()?,
+        })
+    } else {
+        None
+    };
     rd.done()?;
     Ok(CandsHeader {
         round_id,
         layer,
         has_spec,
+        host_span,
     })
 }
 
@@ -828,4 +928,107 @@ pub fn decode_stats(payload: &[u8]) -> io::Result<Snapshot> {
     }
     rd.done()?;
     Ok(snap)
+}
+
+/// Most trace records a [`MsgType::Traces`] reply may carry — far above
+/// any real flight recorder, low enough that a garbage count fails fast.
+const MAX_TRACE_RECORDS: usize = 65_536;
+
+/// Encodes a flight-recorder poll: a [`MsgType::Traces`] frame with an
+/// empty payload.
+pub fn encode_traces_poll(buf: &mut Vec<u8>) {
+    begin_frame(buf, MsgType::Traces);
+    end_frame(buf);
+}
+
+/// Validates a [`MsgType::Traces`] poll payload (must be empty — a
+/// non-empty payload at the host means the peer sent a dump where a
+/// poll belongs).
+pub fn decode_traces_poll(payload: &[u8]) -> io::Result<()> {
+    if !payload.is_empty() {
+        return Err(invalid("traces poll must have an empty payload"));
+    }
+    Ok(())
+}
+
+/// Encodes a flight-recorder dump (layout in the module docs): newest
+/// records first, exactly as [`crate::metrics::FlightRecorder::export`]
+/// returns them.
+pub fn encode_traces(buf: &mut Vec<u8>, records: &[TraceRecord]) {
+    debug_assert!(records.len() <= MAX_TRACE_RECORDS, "trace dump over wire cap");
+    begin_frame(buf, MsgType::Traces);
+    put_u32(buf, records.len() as u32);
+    for rec in records {
+        put_u64(buf, rec.trace_id);
+        put_u32(buf, rec.batch);
+        put_u32(buf, rec.beam);
+        put_u64(buf, rec.total_ns);
+        put_u32(buf, rec.events);
+        put_u32(buf, rec.pinned as u32);
+        put_u32(buf, rec.truncated);
+        debug_assert!(rec.spans.len() <= MAX_TRACE_SPANS);
+        put_u32(buf, rec.spans.len() as u32);
+        for sp in &rec.spans {
+            put_u32(buf, sp.shard);
+            put_u32(buf, sp.layer);
+            put_u64(buf, sp.tx_ns);
+            put_u64(buf, sp.round_ns);
+            put_u64(buf, sp.wait_ns);
+            put_u64(buf, sp.host.decode_ns);
+            put_u64(buf, sp.host.expand_ns);
+            put_u64(buf, sp.host.encode_ns);
+            put_u32(buf, sp.host.tiers);
+            put_u32(buf, sp.events);
+        }
+    }
+    end_frame(buf);
+}
+
+/// Decodes a [`MsgType::Traces`] dump reply.
+pub fn decode_traces(payload: &[u8]) -> io::Result<Vec<TraceRecord>> {
+    let mut rd = Rd::new(payload);
+    let nr = rd.u32()? as usize;
+    if nr > MAX_TRACE_RECORDS {
+        return Err(invalid(format!("{nr} trace records exceeds wire cap")));
+    }
+    rd.need(nr * 36)?;
+    let mut records = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        let mut rec = TraceRecord::with_capacity();
+        rec.trace_id = rd.u64()?;
+        rec.batch = rd.u32()?;
+        rec.beam = rd.u32()?;
+        rec.total_ns = rd.u64()?;
+        rec.events = rd.u32()?;
+        let flags = rd.u32()?;
+        if flags & !0b1 != 0 {
+            return Err(invalid(format!("bad trace record flags {flags}")));
+        }
+        rec.pinned = flags & 0b1 != 0;
+        rec.truncated = rd.u32()?;
+        let ns = rd.u32()? as usize;
+        if ns > MAX_TRACE_SPANS {
+            return Err(invalid(format!("{ns} trace spans exceeds wire cap")));
+        }
+        rd.need(ns * 56)?;
+        for _ in 0..ns {
+            rec.spans.push(RoundSpan {
+                shard: rd.u32()?,
+                layer: rd.u32()?,
+                tx_ns: rd.u64()?,
+                round_ns: rd.u64()?,
+                wait_ns: rd.u64()?,
+                host: HostSpan {
+                    decode_ns: rd.u64()?,
+                    expand_ns: rd.u64()?,
+                    encode_ns: rd.u64()?,
+                    tiers: rd.u32()?,
+                },
+                events: rd.u32()?,
+            });
+        }
+        records.push(rec);
+    }
+    rd.done()?;
+    Ok(records)
 }

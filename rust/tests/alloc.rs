@@ -15,14 +15,23 @@
 //! - all of the above with engine telemetry enabled (`with_metrics`):
 //!   the per-layer timing + plan-drift attribution must be free of
 //!   steady-state allocations, and the disabled trace path has no hook
-//!   on the hot path at all.
+//!   on the hot path at all,
+//! - `FlightRecorder::record` itself (slot-pooled ring, spans refilled
+//!   in place),
+//! - the remote loopback rounds (`RemoteGather::predict_with` against
+//!   in-process `ShardHost`s) with tracing fully on: client scatter /
+//!   join / trace assembly *and* the hosts' decode / expand / encode /
+//!   recorder writes all land in the same process-wide tally, and the
+//!   whole traced round trip must stay at zero once warm.
 //!
 //! The full coordinator round trip (`query_blocking`) cannot be zero —
 //! each request inherently allocates its reply channel, queue nodes and
 //! the client-owned ranking — so it is *bounded* instead: the pooled
 //! round-buffer protocol keeps the per-query count at a small constant,
 //! where the pre-pooling code allocated fresh nested beam/candidate
-//! vectors on every `layer × shard` round.
+//! vectors on every `layer × shard` round. The bound is measured with
+//! the flight recorder on (the default), so trace assembly rides inside
+//! the same constant.
 //!
 //! Everything runs inside ONE `#[test]` so no sibling test thread can
 //! pollute the process-wide counter mid-measurement.
@@ -37,8 +46,10 @@ use mscm_xmr::data::synthetic::{synth_model, synth_queries, DatasetSpec};
 use mscm_xmr::inference::{
     EngineConfig, InferenceEngine, IterationMethod, KernelPlan, KernelTier, MatmulAlgo, Prediction,
 };
+use mscm_xmr::metrics::{FlightRecorder, FlightRecorderConfig, HostSpan, RoundSpan};
 use mscm_xmr::shard::{
-    GatherArena, ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
+    partition, GatherArena, RemoteConfig, RemoteGather, ShardHost, ShardHostConfig,
+    ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
 };
 use mscm_xmr::sparse::{ChunkStorage, SparseVec};
 
@@ -320,6 +331,103 @@ fn steady_state_hot_paths_do_not_allocate() {
         );
     }
 
+    // --- flight recorder recording: zero ---
+    // Slots (and their span vectors) are pre-sized at construction;
+    // `record` claims a slot with a try_lock and refills the pooled
+    // record in place. The measured loop wraps the ring many times and
+    // crosses the pin-threshold warm floor, so sampled writes, pinned-
+    // slot protection and threshold reads are all inside the window.
+    {
+        let rec = FlightRecorder::new(FlightRecorderConfig {
+            capacity: 16,
+            sample_every: 2,
+            ..Default::default()
+        });
+        let span = RoundSpan {
+            shard: 1,
+            layer: 2,
+            tx_ns: 1_000,
+            round_ns: 90_000,
+            wait_ns: 4_000,
+            host: HostSpan {
+                decode_ns: 2_000,
+                expand_ns: 60_000,
+                encode_ns: 3_000,
+                tiers: 0b01,
+            },
+            events: 0,
+        };
+        for i in 0..64u64 {
+            rec.record(Duration::from_micros(400 + i % 7), |r| {
+                r.trace_id = i;
+                for _ in 0..8 {
+                    r.push_span(span);
+                }
+            });
+        }
+        let before = allocs();
+        for i in 0..256u64 {
+            rec.record(Duration::from_micros(400 + i % 7), |r| {
+                r.trace_id = 1_000 + i;
+                for _ in 0..8 {
+                    r.push_span(span);
+                }
+            });
+        }
+        let delta = allocs() - before;
+        assert_eq!(delta, 0, "flight recorder recording allocated {delta}x");
+        assert!(rec.recorded() > 0, "nothing retained through the measured loop");
+    }
+
+    // --- remote loopback rounds, tracing fully on: zero ---
+    // The hosts run in-process threads, so the *entire* traced round
+    // trip counts here: client encode/scatter/join/span assembly and
+    // recorder write, plus each host's decode, expansion, speculation,
+    // reply encode, backpatch and its own recorder write. Warmup passes
+    // over the same query set size every pooled codec buffer to its
+    // maximum, after which traced serving must not touch the allocator.
+    {
+        let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+        let mut hosts = Vec::new();
+        let mut groups = Vec::new();
+        for shard in partition(&model, 2) {
+            let host = ShardHost::spawn(
+                shard,
+                ShardHostConfig {
+                    engine: cfg,
+                    ..Default::default()
+                },
+                "127.0.0.1:0",
+            )
+            .expect("spawn loopback host");
+            groups.push(vec![host.local_addr()]);
+            hosts.push(host);
+        }
+        let mut g = RemoteGather::connect_groups(&groups, RemoteConfig::default(), None)
+            .expect("connect loopback hosts");
+        assert!(g.recorder().is_some(), "tracing is on by default");
+        for _ in 0..3 {
+            for q in &queries {
+                std::hint::black_box(g.predict_with(q, 10, 5).expect("warmup round"));
+            }
+        }
+        let before = allocs();
+        for q in &queries {
+            std::hint::black_box(g.predict_with(q, 10, 5).expect("measured round"));
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "traced remote rounds allocated {delta}x after warmup"
+        );
+        let rec = g.recorder().expect("recorder attached");
+        assert!(rec.observed() > 0, "recorder observed no batches");
+        assert!(rec.recorded() > 0, "recorder retained no batches");
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+
     // --- coordinator round trip: bounded, not zero ---
     // Per request the protocol must allocate only channel/queue nodes and
     // the client-owned reply. Before round-buffer pooling, every
@@ -340,6 +448,9 @@ fn steady_state_hot_paths_do_not_allocate() {
                 ..Default::default()
             },
             shard_workers: 1,
+            // Default: the flight recorder is on, so the measured bound
+            // below covers batch tracing (pooled spans + ring write).
+            ..Default::default()
         },
     );
     for q in &queries {
@@ -362,5 +473,8 @@ fn steady_state_hot_paths_do_not_allocate() {
         per_query <= 96,
         "coordinator round trip allocated {per_query}x per query (pooling regressed?)"
     );
+    // Tracing actually ran inside the measured bound.
+    let rec = coord.flight_recorder().expect("recorder on by default");
+    assert!(rec.observed() > 0, "coordinator recorder observed no batches");
     coord.shutdown();
 }

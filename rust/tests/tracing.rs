@@ -1,0 +1,442 @@
+//! Distributed-tracing properties over loopback (`mscm_xmr::shard`,
+//! protocol v3 + `mscm_xmr::metrics::FlightRecorder`):
+//!
+//! - a traced remote batch assembles a complete cross-process trace
+//!   tree — one span per live shard per real network round, host
+//!   decode/expand/encode inside the client's batch window, kernel-tier
+//!   annotations, join-wait shares;
+//! - tracing is invisible to serving: traced predictions are bitwise
+//!   identical to untraced ones (and to the unsharded engine);
+//! - the tail sampler provably retains injected-slow queries once its
+//!   histogram is warm;
+//! - chaos events (dead shard, degraded batch, speculation hits) are
+//!   annotated onto the spans they happened in;
+//! - a host's flight recorder round-trips over the wire `Traces` poll
+//!   with the trace ids the client minted.
+//!
+//! Seeded via `MSCM_TEST_SEED` (`tests/common`), so the CI randomized
+//! leg replays failures exactly.
+
+mod common;
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mscm_xmr::data::synthetic::{synth_model, synth_queries};
+use mscm_xmr::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use mscm_xmr::metrics::{
+    FlightRecorder, FlightRecorderConfig, EV_DEAD, EV_DEGRADED, EV_SPEC_HIT,
+};
+use mscm_xmr::shard::{
+    partition, poll_traces, FaultPlan, RemoteConfig, RemoteGather, ShardHost, ShardHostConfig,
+};
+use mscm_xmr::tree::XmrModel;
+
+/// Spawns one loopback host per shard of an `s`-way partition,
+/// `flight_recorder` sizing each host's ring (0 = host tracing off).
+fn spawn_hosts(
+    model: &XmrModel,
+    s: usize,
+    cfg: EngineConfig,
+    flight_recorder: usize,
+) -> (Vec<ShardHost>, Vec<Vec<SocketAddr>>) {
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(model, s) {
+        let host = ShardHost::spawn(
+            shard,
+            ShardHostConfig {
+                engine: cfg,
+                flight_recorder,
+                ..Default::default()
+            },
+            "127.0.0.1:0",
+        )
+        .expect("spawn shard host");
+        groups.push(vec![host.local_addr()]);
+        hosts.push(host);
+    }
+    (hosts, groups)
+}
+
+/// A recorder that retains *every* batch (sampling gate 1-in-1), so
+/// structural assertions see each trace.
+fn keep_all_recorder(capacity: usize) -> Arc<FlightRecorder> {
+    Arc::new(FlightRecorder::new(FlightRecorderConfig {
+        capacity,
+        sample_every: 1,
+        ..FlightRecorderConfig::default()
+    }))
+}
+
+/// The tentpole acceptance property: a traced remote batch produces a
+/// cross-process trace tree covering every shard × every real round,
+/// with host time inside the client's batch window and the effective
+/// kernel tiers annotated.
+#[test]
+fn remote_trace_tree_covers_every_shard_round() {
+    let sp = common::dataset_spec("tracing-tree", 96, 384);
+    let seed = common::base_seed();
+    let model = synth_model(&sp, 8, seed);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let s = 3usize;
+    let (hosts, groups) = spawn_hosts(&model, s, cfg, 256);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            speculate: false, // every layer ships: spans = shards × depth
+            ..Default::default()
+        },
+        None,
+    )
+    .expect("connect");
+    let rec = keep_all_recorder(64);
+    g.set_recorder(Some(Arc::clone(&rec)));
+    let depth = g.depth();
+    let queries = synth_queries(&sp, 10, seed ^ 0xABCD);
+    for qi in 0..queries.rows {
+        g.predict(&queries.row_owned(qi), 5, 5).expect("predict");
+    }
+    assert_eq!(rec.recorded(), queries.rows as u64, "keep-all recorder retains every batch");
+    let records = rec.export();
+    assert_eq!(records.len(), queries.rows.min(64));
+    for r in &records {
+        assert!(r.trace_id > 0, "batch trace ids are minted from 1");
+        assert_eq!(r.batch, 1, "online predicts are single-query batches");
+        assert_eq!(r.truncated, 0);
+        assert_eq!(
+            r.spans.len(),
+            s * depth,
+            "one span per shard per real round (no speculation)"
+        );
+        // Every (shard, layer) pair is present exactly once.
+        for shard in 0..s as u32 {
+            for layer in 0..depth as u32 {
+                assert_eq!(
+                    r.spans.iter().filter(|sp| sp.shard == shard && sp.layer == layer).count(),
+                    1,
+                    "trace {} shard {shard} layer {layer}",
+                    r.trace_id
+                );
+            }
+        }
+        // Every span is a genuine sub-interval of the batch window
+        // (hosts expand concurrently, so only per-span bounds — not the
+        // sum — are guaranteed); join-wait is a sub-interval of its
+        // round.
+        for sp in &r.spans {
+            assert!(sp.host.total_ns() <= r.total_ns, "host work inside the batch window");
+            assert!(sp.round_ns <= r.total_ns, "round inside the batch window");
+            assert!(sp.wait_ns <= sp.round_ns, "join wait inside its round");
+        }
+        assert!(
+            r.spans.iter().any(|sp| sp.host.expand_ns > 0),
+            "trace {}: traced hosts time their expansion",
+            r.trace_id
+        );
+        // The hosts serve with engine telemetry on (the default), so
+        // the expanded layers carry effective kernel-tier masks.
+        assert!(
+            r.spans.iter().any(|sp| sp.host.tiers != 0),
+            "trace {}: no span carries a kernel-tier mask",
+            r.trace_id
+        );
+    }
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// Tracing must be invisible: a fully-traced gather and a tracing-
+/// disabled gather (wire payloads byte-identical to v2) return bitwise
+/// identical rankings, both equal to the unsharded engine.
+#[test]
+fn traced_serving_is_bitwise_identical_to_untraced() {
+    let sp = common::dataset_spec("tracing-exact", 80, 256);
+    let seed = common::base_seed();
+    let model = synth_model(&sp, 4, seed ^ 0x77);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let reference = InferenceEngine::new(model.clone(), cfg);
+    let queries = synth_queries(&sp, 8, seed ^ 0x1234);
+    for speculate in [false, true] {
+        let (hosts, groups) = spawn_hosts(&model, 2, cfg, 256);
+        let mut traced = RemoteGather::connect_groups(
+            &groups,
+            RemoteConfig {
+                speculate,
+                flight_recorder: 256,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        traced.set_recorder(Some(keep_all_recorder(256)));
+        let mut untraced = RemoteGather::connect_groups(
+            &groups,
+            RemoteConfig {
+                speculate,
+                flight_recorder: 0,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        assert!(untraced.recorder().is_none(), "flight_recorder: 0 disables tracing");
+        for qi in 0..queries.rows {
+            let q = queries.row_owned(qi);
+            for beam in [1usize, 3, 8] {
+                let want = reference.predict(&q, beam, 5);
+                assert_eq!(
+                    traced.predict(&q, beam, 5).unwrap(),
+                    want,
+                    "traced spec={speculate} beam={beam} q={qi}"
+                );
+                assert_eq!(
+                    untraced.predict(&q, beam, 5).unwrap(),
+                    want,
+                    "untraced spec={speculate} beam={beam} q={qi}"
+                );
+            }
+        }
+        assert!(traced.recorder().unwrap().recorded() > 0);
+        for h in hosts {
+            h.shutdown();
+        }
+    }
+}
+
+/// Tail retention, end to end: warm the recorder's histogram with fast
+/// loopback batches under a sampling gate that would discard everything,
+/// then route queries through replicas with an injected 40 ms reply
+/// delay — the slow traces must be pinned into the ring.
+#[test]
+fn tail_sampler_retains_injected_slow_queries() {
+    let sp = common::dataset_spec("tracing-tail", 64, 128);
+    let seed = common::base_seed();
+    let model = synth_model(&sp, 4, seed ^ 0x5109);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::MarchingPointers);
+    let rec = Arc::new(FlightRecorder::new(FlightRecorderConfig {
+        capacity: 64,
+        // The 1-in-N gate alone would retain (nearly) nothing: slow
+        // traces can only survive by being pinned over the live p99.
+        sample_every: 1_000_000,
+        pin_quantile: 0.99,
+        min_samples: 32,
+    }));
+
+    // Phase 1: warm. 80 fast batches feed the histogram past the pin
+    // floor; none are slow, so the p99 settles at loopback speed.
+    let (fast_hosts, fast_groups) = spawn_hosts(&model, 2, cfg, 0);
+    let mut fast = RemoteGather::connect_groups(&fast_groups, RemoteConfig::default(), None).unwrap();
+    fast.set_recorder(Some(Arc::clone(&rec)));
+    let queries = synth_queries(&sp, 80, seed ^ 0xFA57);
+    for qi in 0..queries.rows {
+        fast.predict(&queries.row_owned(qi), 4, 5).unwrap();
+    }
+    assert_eq!(rec.observed(), 80);
+    assert!(rec.pin_threshold_ms().is_some(), "pin floor met after warmup");
+    // Loopback jitter can pin the odd warm batch; only the *increase*
+    // under injection is asserted.
+    let warm_pinned = rec.pinned();
+
+    // Phase 2: inject. Every reply from these replicas is delayed 40 ms,
+    // so a full batch (≥ 1 round) lands far beyond the warm p99.
+    let mut slow_hosts = Vec::new();
+    let mut slow_groups = Vec::new();
+    for shard in partition(&model, 2) {
+        let host = ShardHost::with_faults(
+            shard,
+            ShardHostConfig {
+                engine: cfg,
+                ..Default::default()
+            },
+            "127.0.0.1:0",
+            FaultPlan {
+                seed,
+                delay_replies: Duration::from_millis(40),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        slow_groups.push(vec![host.local_addr()]);
+        slow_hosts.push(host);
+    }
+    let mut slow = RemoteGather::connect_groups(&slow_groups, RemoteConfig::default(), None).unwrap();
+    slow.set_recorder(Some(Arc::clone(&rec)));
+    for qi in 0..3 {
+        slow.predict(&queries.row_owned(qi), 4, 5).unwrap();
+    }
+    assert!(
+        rec.pinned() > warm_pinned,
+        "an injected-slow batch must be tail-pinned (threshold {:?} ms)",
+        rec.pin_threshold_ms()
+    );
+    let pinned: Vec<_> = rec.export().into_iter().filter(|r| r.pinned).collect();
+    assert!(
+        pinned.iter().any(|r| r.total_ns >= 20_000_000),
+        "no exported pinned trace carries an injected-slow total: {:?}",
+        pinned.iter().map(|r| r.total_ns).collect::<Vec<_>>()
+    );
+    for h in fast_hosts.into_iter().chain(slow_hosts) {
+        h.shutdown();
+    }
+}
+
+/// Chaos annotations: killing a single-replica shard under
+/// `allow_partial` marks its span `dead-shard` and the batch `degraded`.
+#[test]
+fn dead_shard_and_degraded_batch_are_annotated() {
+    let sp = common::dataset_spec("tracing-chaos", 64, 128);
+    let seed = common::base_seed();
+    let model = synth_model(&sp, 4, seed ^ 0xC0C0);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let (mut hosts, groups) = spawn_hosts(&model, 2, cfg, 0);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            allow_partial: true,
+            speculate: false, // spec-hit bits would dirty the clean warmup trace
+            round_timeout: Duration::from_millis(500),
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(5),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let rec = keep_all_recorder(16);
+    g.set_recorder(Some(Arc::clone(&rec)));
+    let queries = synth_queries(&sp, 4, seed ^ 0xD1E);
+    g.predict(&queries.row_owned(0), 4, 5).expect("healthy warmup query");
+    hosts.remove(1).shutdown(); // shard 1 has no other replica
+    g.predict(&queries.row_owned(1), 4, 5).expect("degraded query must complete");
+    let records = rec.export();
+    let degraded = records
+        .iter()
+        .find(|r| r.events & EV_DEGRADED != 0)
+        .expect("a degraded batch must be flagged in its trace");
+    let dead_span = degraded
+        .spans
+        .iter()
+        .find(|sp| sp.events & EV_DEAD != 0)
+        .expect("the dead shard's round must carry the dead-shard event");
+    assert_eq!(dead_span.shard, 1);
+    assert_eq!(dead_span.host, Default::default(), "a dead round has no host span");
+    // The warmup trace stays clean.
+    assert!(records.iter().any(|r| r.events == 0 && r.spans.iter().all(|sp| sp.events == 0)));
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// Speculation annotations: when hosts serve hints and the whole beam is
+/// covered, the round that carried the hint is marked `spec-hit`.
+#[test]
+fn speculative_rounds_are_annotated_with_spec_hits() {
+    let sp = common::dataset_spec("tracing-spec", 64, 256);
+    let seed = common::base_seed();
+    let model = synth_model(&sp, 4, seed ^ 0x59EC);
+    assert!(model.depth() >= 2, "speculation needs at least two layers");
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let (hosts, groups) = spawn_hosts(&model, 2, cfg, 0);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            speculate: true,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let rec = keep_all_recorder(16);
+    g.set_recorder(Some(Arc::clone(&rec)));
+    let queries = synth_queries(&sp, 4, seed ^ 0xBEE);
+    for qi in 0..queries.rows {
+        g.predict(&queries.row_owned(qi), 4, 5).unwrap();
+    }
+    let records = rec.export();
+    assert!(
+        records.iter().any(|r| r.spans.iter().any(|sp| sp.events & EV_SPEC_HIT != 0)),
+        "cooperating hosts must produce spec-hit rounds"
+    );
+    // A saved round ships no frames, so a spec-hit trace has fewer
+    // spans than shards × depth.
+    let depth = g.depth();
+    assert!(
+        records.iter().any(|r| r.spans.len() < 2 * depth),
+        "no trace saved a network round of spans"
+    );
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
+/// The wire export: host-side flight recorders answer the `Traces` poll
+/// with the rounds they retained, carrying the client-minted trace ids —
+/// and polling is stable and side-effect free.
+#[test]
+fn host_flight_recorder_round_trips_over_the_traces_poll() {
+    let sp = common::dataset_spec("tracing-poll", 80, 256);
+    let seed = common::base_seed();
+    let model = synth_model(&sp, 4, seed ^ 0x9011);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    // Host rings sample 1-in-8 (the default), so drive enough rounds
+    // that each host retains several records.
+    let (hosts, groups) = spawn_hosts(&model, 2, cfg, 256);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            speculate: false,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let rec = keep_all_recorder(256);
+    g.set_recorder(Some(Arc::clone(&rec)));
+    let queries = synth_queries(&sp, 40, seed ^ 0x70CC);
+    for qi in 0..queries.rows {
+        g.predict(&queries.row_owned(qi), 4, 5).unwrap();
+    }
+    // Every batch was traced and the keep-all client ring is big enough,
+    // so the client's export holds the full minted id set.
+    let client_ids: Vec<u64> = rec.export().iter().map(|r| r.trace_id).collect();
+    assert_eq!(client_ids.len(), queries.rows);
+
+    let via_gather = g.poll_shard_traces(0).expect("poll shard 0");
+    assert!(!via_gather.is_empty(), "host 0 retained no rounds");
+    for r in &via_gather {
+        assert!(client_ids.contains(&r.trace_id), "host record {} has a foreign id", r.trace_id);
+        assert_eq!(r.spans.len(), 1, "hosts record one span per round");
+        let sp0 = &r.spans[0];
+        assert_eq!(sp0.shard, 0);
+        assert!((sp0.layer as usize) < g.depth());
+        // round_ns is the decode+expand+encode sum; the record total
+        // additionally covers validation and the reply write.
+        assert_eq!(sp0.round_ns, sp0.host.total_ns());
+        assert!(sp0.round_ns <= r.total_ns, "host span inside the host record window");
+    }
+    assert!(
+        via_gather.iter().any(|r| r.spans[0].host.expand_ns > 0),
+        "host rounds time their expansion"
+    );
+    assert!(
+        via_gather.iter().any(|r| r.spans[0].host.encode_ns > 0),
+        "encode time is backpatched into the retained span"
+    );
+    // A fresh-connection poll (the `metrics --traces` path) sees the
+    // same ring, and polling twice returns identical records — polls
+    // are not themselves recorded.
+    let direct = poll_traces(groups[0][0], &RemoteConfig::default()).expect("direct poll");
+    assert_eq!(direct, via_gather);
+    assert_eq!(g.poll_shard_traces(0).unwrap(), via_gather);
+
+    // A host spawned with its recorder disabled answers with an empty
+    // dump instead of an error.
+    let (off_hosts, off_groups) = spawn_hosts(&model, 1, cfg, 0);
+    assert!(poll_traces(off_groups[0][0], &RemoteConfig::default()).unwrap().is_empty());
+    for h in hosts.into_iter().chain(off_hosts) {
+        h.shutdown();
+    }
+}

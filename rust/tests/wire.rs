@@ -1,16 +1,19 @@
 //! Round-trip and fuzz-ish property tests for the shard wire codec
-//! (`mscm_xmr::shard::wire`): random beams/candidates/speculation
-//! round-trip bit-exactly through pooled buffers, and every malformed
-//! frame — truncated, bad magic, wrong version, unknown type, trailing
-//! bytes, out-of-range ids — is rejected with a descriptive error
-//! instead of reaching the kernels.
+//! (`mscm_xmr::shard::wire`): random beams/candidates/speculation/
+//! trace-span sections round-trip bit-exactly through pooled buffers,
+//! and every malformed frame — truncated, bad magic, wrong version,
+//! unknown type, unknown flag bits, trailing bytes, out-of-range ids —
+//! is rejected with a descriptive error instead of reaching the
+//! kernels.
 
 use std::io::Cursor;
 
+use mscm_xmr::metrics::{HostSpan, RoundSpan, TraceRecord, EV_FAILOVER, EV_HEDGE};
 use mscm_xmr::shard::wire::{
-    decode_cands, decode_error, decode_expand, decode_shard_info, encode_cands, encode_error,
-    encode_expand, encode_hello, encode_shard_info, read_frame, CandsHeader, ExpandHeader,
-    MsgType, SpecRound, WireShardInfo, HEADER_LEN, WIRE_VERSION,
+    decode_cands, decode_error, decode_expand, decode_shard_info, decode_traces,
+    decode_traces_poll, encode_cands, encode_error, encode_expand, encode_hello,
+    encode_shard_info, encode_traces, encode_traces_poll, patch_cands_encode_ns, read_frame,
+    CandsHeader, ExpandHeader, MsgType, SpecRound, WireShardInfo, HEADER_LEN, WIRE_VERSION,
 };
 use mscm_xmr::shard::ShardRound;
 use mscm_xmr::sparse::{CsrMatrix, SparseVec};
@@ -67,11 +70,15 @@ fn expand_frames_round_trip_randomized() {
         let queries = rand_queries(&mut rng, n, dim);
         let beams: Vec<Vec<(u32, f32)>> =
             (0..n).map(|_| rand_pairs(&mut rng, 6, 40)).collect();
+        let trace = rng.gen_bool(0.5);
         let hdr = ExpandHeader {
             round_id: rng.gen_range(0..1 << 30) as u64,
             layer: rng.gen_range(0..5) as u32,
             beam: rng.gen_range(1..20) as u32,
             speculate: rng.gen_bool(0.5),
+            trace,
+            // An untraced frame carries no id on the wire and decodes to 0.
+            trace_id: if trace { rng.gen_range(1..1 << 30) as u64 } else { 0 },
         };
         encode_expand(&mut buf, &hdr, &queries, &beams, n);
         let (ty, payload) = frame_payload(&buf).expect("valid frame");
@@ -115,8 +122,15 @@ fn cands_frames_round_trip_with_and_without_speculation() {
                     .collect();
             }
         }
+        let with_span = rng.gen_bool(0.5);
+        let span = HostSpan {
+            decode_ns: rng.gen_range(0..1 << 20) as u64,
+            expand_ns: rng.gen_range(0..1 << 20) as u64,
+            encode_ns: rng.gen_range(0..1 << 20) as u64,
+            tiers: rng.gen_range(0..4) as u32,
+        };
         let rid = rng.gen_range(0..1 << 20) as u64;
-        encode_cands(&mut buf, rid, 3, &round, with_spec.then_some(&spec));
+        encode_cands(&mut buf, rid, 3, &round, with_spec.then_some(&spec), with_span.then_some(&span));
         let (ty, payload) = frame_payload(&buf).expect("valid frame");
         assert_eq!(ty, MsgType::Cands);
         let hdr: CandsHeader =
@@ -124,6 +138,7 @@ fn cands_frames_round_trip_with_and_without_speculation() {
         assert_eq!(hdr.round_id, rid, "case {case}");
         assert_eq!(hdr.layer, 3);
         assert_eq!(hdr.has_spec, with_spec);
+        assert_eq!(hdr.host_span, with_span.then_some(span), "case {case}");
         assert_eq!(round_out.n, n);
         for q in 0..n {
             assert_eq!(round_out.cands[q], round.cands[q], "case {case} q={q}");
@@ -207,6 +222,8 @@ fn truncated_expand_payload_never_panics_and_always_errors() {
         layer: 1,
         beam: 10,
         speculate: true,
+        trace: true,
+        trace_id: 0xBEEF,
     };
     let mut buf = Vec::new();
     encode_expand(&mut buf, &hdr, &queries, &beams, n);
@@ -272,6 +289,8 @@ fn structural_violations_in_payloads_are_rejected() {
         layer: 0,
         beam: 4,
         speculate: false,
+        trace: false,
+        trace_id: 0,
     };
     let mut buf = Vec::new();
     encode_expand(&mut buf, &hdr, &queries, &beams, 2);
@@ -288,6 +307,13 @@ fn structural_violations_in_payloads_are_rejected() {
     // A query feature id beyond the host's dimension.
     let err = decode_expand(&payload, 2, &mut x, &mut round).unwrap_err();
     assert!(err.to_string().contains("out of range"), "{err}");
+
+    // Unknown flag bits are reserved: the v3 flag word sits after
+    // round_id (u64) + layer (u32) + beam (u32), at payload offset 16.
+    let mut bad_flags = payload.clone();
+    bad_flags[16] |= 0b100;
+    let err = decode_expand(&bad_flags, dim, &mut x, &mut round).unwrap_err();
+    assert!(err.to_string().contains("flag"), "{err}");
 
     // Beam node ids must be strictly ascending: duplicate one.
     let dup_beams = vec![vec![(3u32, 0.5f32), (3, 0.5)], vec![(0u32, 1.0f32)]];
@@ -320,6 +346,141 @@ fn reader_consumes_exactly_one_frame_from_a_stream() {
         std::io::ErrorKind::UnexpectedEof
     );
     let _ = HEADER_LEN; // layout constant is part of the public contract
+}
+
+/// A populated trace record for codec tests: random identity/timing
+/// fields and a handful of spans with event annotations.
+fn rand_record(rng: &mut Rng) -> TraceRecord {
+    let mut rec = TraceRecord::with_capacity();
+    rec.trace_id = rng.gen_range(1..1 << 30) as u64;
+    rec.batch = rng.gen_range(1..64) as u32;
+    rec.beam = rng.gen_range(1..20) as u32;
+    rec.total_ns = rng.gen_range(0..1 << 30) as u64;
+    rec.pinned = rng.gen_bool(0.5);
+    rec.truncated = rng.gen_range(0..3) as u32;
+    for _ in 0..rng.gen_range(0..6) {
+        rec.push_span(RoundSpan {
+            shard: rng.gen_range(0..8) as u32,
+            layer: rng.gen_range(0..5) as u32,
+            tx_ns: rng.gen_range(0..1 << 20) as u64,
+            round_ns: rng.gen_range(0..1 << 20) as u64,
+            wait_ns: rng.gen_range(0..1 << 20) as u64,
+            host: HostSpan {
+                decode_ns: rng.gen_range(0..1 << 20) as u64,
+                expand_ns: rng.gen_range(0..1 << 20) as u64,
+                encode_ns: rng.gen_range(0..1 << 20) as u64,
+                tiers: rng.gen_range(0..4) as u32,
+            },
+            events: match rng.gen_range(0..3) {
+                0 => EV_HEDGE,
+                1 => EV_FAILOVER,
+                _ => 0,
+            },
+        });
+    }
+    rec
+}
+
+#[test]
+fn traces_poll_and_dump_round_trip() {
+    // The poll: an empty-payload Traces frame, rejected when non-empty.
+    let mut buf = Vec::new();
+    encode_traces_poll(&mut buf);
+    let (ty, payload) = frame_payload(&buf).unwrap();
+    assert_eq!(ty, MsgType::Traces);
+    assert!(payload.is_empty());
+    decode_traces_poll(&payload).unwrap();
+    assert!(decode_traces_poll(&[0u8]).is_err());
+
+    // The dump: random records (spans, events, pinned marks) round-trip
+    // in order — the codec must preserve the recorder's newest-first
+    // export exactly.
+    let mut rng = Rng::seed_from_u64(0x7A);
+    for case in 0..20 {
+        let records: Vec<TraceRecord> =
+            (0..rng.gen_range(0..5)).map(|_| rand_record(&mut rng)).collect();
+        encode_traces(&mut buf, &records);
+        let (ty, payload) = frame_payload(&buf).unwrap();
+        assert_eq!(ty, MsgType::Traces);
+        assert_eq!(decode_traces(&payload).unwrap(), records, "case {case}");
+    }
+}
+
+#[test]
+fn traces_dump_truncation_and_bad_flags_are_rejected() {
+    let mut rng = Rng::seed_from_u64(0x7B);
+    let records = vec![rand_record(&mut rng), rand_record(&mut rng)];
+    let mut buf = Vec::new();
+    encode_traces(&mut buf, &records);
+    let (_, payload) = frame_payload(&buf).unwrap();
+    // Every strict prefix must fail cleanly (no panic, no partial parse).
+    for cut in 0..payload.len() {
+        assert!(decode_traces(&payload[..cut]).is_err(), "prefix of {cut} bytes decoded");
+    }
+    // Trailing garbage after a well-formed dump.
+    let mut trailing = payload.clone();
+    trailing.extend_from_slice(&[0u8; 2]);
+    assert!(decode_traces(&trailing).unwrap_err().to_string().contains("trailing"));
+    // Unknown record flag bits: the first record's flag word sits at
+    // count (u32) + trace_id (u64) + batch + beam (u32 each) +
+    // total_ns (u64) + events (u32) = payload offset 32.
+    let mut bad = payload.clone();
+    bad[32] |= 0b10;
+    let err = decode_traces(&bad).unwrap_err();
+    assert!(err.to_string().contains("trace record flags"), "{err}");
+}
+
+#[test]
+fn traced_cands_sections_survive_truncation_fuzz_and_backpatch() {
+    // A Cands reply carrying *both* trailing sections (speculation +
+    // host span): every prefix fails cleanly, the full payload decodes,
+    // and the encode_ns backpatch lands in the span the peer decodes.
+    let mut rng = Rng::seed_from_u64(0x7C);
+    let n = 3usize;
+    let mut round = ShardRound::default();
+    round.ensure(n);
+    for c in round.cands.iter_mut().take(n) {
+        *c = rand_pairs(&mut rng, 8, 300);
+    }
+    let mut spec = SpecRound::default();
+    spec.ensure(n);
+    for q in 0..n {
+        spec.parents[q] = rand_pairs(&mut rng, 4, 80);
+        spec.child_counts[q] = spec.parents[q].iter().map(|_| 2u32).collect();
+        let total = 2 * spec.parents[q].len();
+        spec.children[q] = (0..total).map(|i| (i as u32, 0.5f32)).collect();
+    }
+    let span = HostSpan { decode_ns: 100, expand_ns: 2_000, encode_ns: 0, tiers: 0b11 };
+    let mut frame = Vec::new();
+    encode_cands(&mut frame, 42, 1, &round, Some(&spec), Some(&span));
+    patch_cands_encode_ns(&mut frame, 333);
+    let (ty, payload) = frame_payload(&frame).unwrap();
+    assert_eq!(ty, MsgType::Cands);
+    let mut round_out = ShardRound::default();
+    let mut spec_out = SpecRound::default();
+    for cut in 0..payload.len() {
+        assert!(
+            decode_cands(&payload[..cut], &mut round_out, &mut spec_out).is_err(),
+            "prefix of {cut} bytes decoded"
+        );
+    }
+    let hdr = decode_cands(&payload, &mut round_out, &mut spec_out).unwrap();
+    assert!(hdr.has_spec);
+    assert_eq!(
+        hdr.host_span,
+        Some(HostSpan { decode_ns: 100, expand_ns: 2_000, encode_ns: 333, tiers: 0b11 })
+    );
+    for q in 0..n {
+        assert_eq!(round_out.cands[q], round.cands[q]);
+        assert_eq!(spec_out.parents[q], spec.parents[q]);
+    }
+
+    // Unknown Cands flag bits: the flag word sits after round_id (u64)
+    // + layer (u32), at payload offset 12.
+    let mut bad = payload.clone();
+    bad[12] |= 0b100;
+    let err = decode_cands(&bad, &mut round_out, &mut spec_out).unwrap_err();
+    assert!(err.to_string().contains("flag"), "{err}");
 }
 
 #[test]
