@@ -1,0 +1,229 @@
+//! Resident-memory story for the MSCMXMR4 storage tiers — the bench
+//! behind the "100M-label scale" ROADMAP item.
+//!
+//! Four serving configurations of the same model, all loaded from the
+//! layout-resolved V4 shard format:
+//!
+//! - `heap-f32`    — exact f32 weights, parsed onto the heap,
+//! - `heap-quant`  — the `--approx` planned layout (f16/int8 chunks),
+//!   parsed onto the heap,
+//! - `mmap-f32`    — exact weights served straight out of the page
+//!   cache via [`mscm_xmr::shard::load_shard_mmap`],
+//! - `mmap-quant`  — quantized weights, memory-mapped.
+//!
+//! For each we report the shard file size, the **heap bytes the load
+//! actually pinned** (a byte-tracking `#[global_allocator]` shim — the
+//! mmap variants must come in far under the file weight because the
+//! weight arrays are borrowed from the mapping), the cold-start parse
+//! time, online p50/p99 over a shared query pool, and — for the
+//! quantized variants — precision-overlap@k against the exact engine's
+//! rankings.
+//!
+//! Emits `BENCH_memory.json` (override with `--json <path>`).
+//! `cargo bench --bench memory` — append `-- --quick` for the CI-sized
+//! run.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::Path;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::time::Instant;
+
+use mscm_xmr::data::enterprise::EnterpriseSpec;
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo, PlannerConfig, Prediction,
+};
+use mscm_xmr::metrics::LatencyHistogram;
+use mscm_xmr::repro::precision_overlap_at_k;
+use mscm_xmr::shard::{load_shard, load_shard_mmap, partition, save_shard_v4};
+use mscm_xmr::sparse::SparseVec;
+use mscm_xmr::util::{BenchReport, Json};
+
+const BEAM: usize = 10;
+const TOPK: usize = 10;
+
+/// Live-byte tally across the whole process. Frees are subtracted, so
+/// after a load the delta is the bytes that survive — the resident
+/// footprint of the model, not parse scratch.
+static LIVE: AtomicI64 = AtomicI64::new(0);
+
+struct TrackingAlloc;
+
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            LIVE.fetch_add(layout.size() as i64, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as i64, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            LIVE.fetch_add(layout.size() as i64, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            LIVE.fetch_add(new_size as i64 - layout.size() as i64, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn live_bytes() -> i64 {
+    LIVE.load(Ordering::Relaxed)
+}
+
+struct VariantResult {
+    file_bytes: u64,
+    resident_bytes: i64,
+    weight_bytes: usize,
+    load_ms: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    preds: Vec<Vec<Prediction>>,
+}
+
+/// Cold-loads one shard file (heap parse or mmap), then serves the
+/// query pool online through a reused workspace. The resident delta is
+/// taken across the load alone so engine-side arenas don't blur the
+/// storage comparison.
+fn run_variant(path: &Path, mmap: bool, pool: &[SparseVec]) -> VariantResult {
+    let file_bytes = std::fs::metadata(path).expect("shard file metadata").len();
+    let before = live_bytes();
+    let t = Instant::now();
+    let shard = if mmap {
+        load_shard_mmap(path, false).expect("mmap shard load")
+    } else {
+        load_shard(path, false).expect("heap shard load")
+    };
+    let load_ms = t.elapsed().as_secs_f64() * 1e3;
+    let resident_bytes = (live_bytes() - before).max(0);
+    let weight_bytes: usize = shard.model.layers.iter().map(|l| l.chunked.weight_bytes()).sum();
+    let (algo, plan) = shard.plan.clone().expect("a V4 shard always carries a plan");
+    let engine = InferenceEngine::new_with_plan(
+        shard.model,
+        EngineConfig::new(algo, IterationMethod::Auto),
+        plan,
+    );
+    let mut ws = engine.workspace();
+    // Warm the arenas so latency quantiles measure steady state.
+    let _ = engine.predict_with(&pool[0], BEAM, TOPK, &mut ws);
+    let hist = LatencyHistogram::new();
+    let mut preds = Vec::with_capacity(pool.len());
+    for q in pool {
+        let t = Instant::now();
+        let ranked = engine.predict_with(q, BEAM, TOPK, &mut ws).to_vec();
+        hist.record(t.elapsed());
+        preds.push(ranked);
+    }
+    VariantResult {
+        file_bytes,
+        resident_bytes,
+        weight_bytes,
+        load_ms,
+        p50_ms: hist.quantile_ms(0.5),
+        p99_ms: hist.quantile_ms(0.99),
+        preds,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let spec = EnterpriseSpec {
+        num_labels: if quick { 20_000 } else { 100_000 },
+        dim: if quick { 20_000 } else { 50_000 },
+        ..Default::default()
+    };
+    eprintln!("synthesizing L={} model ...", spec.num_labels);
+    let model = spec.build_model();
+
+    let dir = std::env::temp_dir().join(format!("mscm_memory_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench scratch dir");
+    let exact_path = dir.join("exact.mscm");
+    let quant_path = dir.join("quant.mscm");
+
+    // Two single-shard builds of the same model: the exact plan and the
+    // opt-in `--approx` plan that admits the f16/int8 layouts.
+    let mut exact = partition(&model, 1).remove(0);
+    exact.plan_auto(MatmulAlgo::Mscm, &PlannerConfig::default());
+    save_shard_v4(&exact, &exact_path).expect("write exact shard");
+    let mut quant = partition(&model, 1).remove(0);
+    quant.plan_auto(
+        MatmulAlgo::Mscm,
+        &PlannerConfig {
+            approx: true,
+            ..PlannerConfig::default()
+        },
+    );
+    save_shard_v4(&quant, &quant_path).expect("write quant shard");
+    drop(exact);
+    drop(quant);
+
+    let pool_size = if quick { 128 } else { 512 };
+    let x = spec.build_queries(pool_size);
+    let pool: Vec<SparseVec> = (0..pool_size).map(|i| x.row_owned(i)).collect();
+
+    let mut report = BenchReport::new("memory");
+    report.set_meta("quick", Json::Str(quick.to_string()));
+    report.set_meta("labels", Json::Num(spec.num_labels as f64));
+    report.set_meta("dim", Json::Num(spec.dim as f64));
+
+    let variants: [(&str, &Path, bool); 4] = [
+        ("heap-f32", &exact_path, false),
+        ("heap-quant", &quant_path, false),
+        ("mmap-f32", &exact_path, true),
+        ("mmap-quant", &quant_path, true),
+    ];
+    let mut baseline: Option<Vec<Vec<Prediction>>> = None;
+    for (label, path, mmap) in variants {
+        let r = run_variant(path, mmap, &pool);
+        let overlap = baseline
+            .as_ref()
+            .map(|b| precision_overlap_at_k(b, &r.preds, TOPK));
+        println!(
+            "{label:<10} file {:>8} KiB  resident {:>8} KiB  load {:>7.1} ms  p50 {:.3} ms  p99 {:.3} ms{}",
+            r.file_bytes / 1024,
+            r.resident_bytes / 1024,
+            r.load_ms,
+            r.p50_ms,
+            r.p99_ms,
+            match overlap {
+                Some(o) => format!("  overlap@{TOPK} {o:.4}"),
+                None => String::new(),
+            }
+        );
+        let mut extras = vec![
+            ("file_bytes", Json::Num(r.file_bytes as f64)),
+            ("resident_bytes", Json::Num(r.resident_bytes as f64)),
+            ("weight_bytes", Json::Num(r.weight_bytes as f64)),
+            ("load_ms", Json::Num(r.load_ms)),
+            ("p50_ms", Json::Num(r.p50_ms)),
+            ("p99_ms", Json::Num(r.p99_ms)),
+            ("mmap", Json::Bool(mmap)),
+        ];
+        if let Some(o) = overlap {
+            extras.push(("precision_overlap_at_k", Json::Num(o)));
+        }
+        report.record_extra(label, r.p50_ms * 1e6, 1, "mscm/auto", extras);
+        if baseline.is_none() {
+            baseline = Some(r.preds);
+        }
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    report.finish(&args);
+}

@@ -116,6 +116,11 @@ pub struct Workspace {
     pub(crate) dense_pos: Option<DenseScratch>,
     /// Chunk currently loaded into `dense_pos`.
     pub(crate) loaded_chunk: Option<u32>,
+    /// Dequantized f32 values of the quantized chunk currently being
+    /// evaluated (approximate `F16`/`Int8` layouts). Grown to the largest
+    /// quantized chunk once, then recycled — chunk-order evaluation
+    /// dequantizes each chunk once per batch pass.
+    pub(crate) dequant: Vec<f32>,
     /// `O(d)` query scatter (baseline dense lookup, Parabel/Bonsai style).
     pub(crate) dense_x: Option<Vec<f32>>,
     /// Dense output for one vector×chunk product (max sibling width).
@@ -181,6 +186,7 @@ impl Workspace {
         Self {
             dense_pos: dense_pos.then(|| DenseScratch::new(model.dim)),
             loaded_chunk: None,
+            dequant: Vec::new(),
             dense_x: dense_x.then(|| vec![0.0f32; model.dim]),
             out_block: vec![0.0; max_b],
             blocks: Vec::new(),
@@ -207,6 +213,7 @@ impl Workspace {
         }
         self.dense_pos.as_ref().map_or(0, |d| d.memory_bytes())
             + self.dense_x.as_ref().map_or(0, |d| bytes::<f32>(d.capacity()))
+            + bytes::<f32>(self.dequant.capacity())
             + bytes::<f32>(self.out_block.capacity())
             + bytes::<(u32, u32, f32)>(self.blocks.capacity())
             + bytes::<(u32, u32, f32)>(self.blocks_tmp.capacity())
@@ -347,20 +354,50 @@ impl InferenceEngine {
     /// built on hash-planned `Csc` chunks, and under `Auto` any resident
     /// map on a chunk planned away from hash is dropped (the memory the
     /// planner saves).
-    pub fn new_with_plan(mut model: XmrModel, config: EngineConfig, plan: KernelPlan) -> Self {
+    pub fn new_with_plan(mut model: XmrModel, config: EngineConfig, mut plan: KernelPlan) -> Self {
         assert!(plan.matches(&model), "kernel plan does not fit this model");
         for (li, layer) in model.layers.iter_mut().enumerate() {
-            layer.chunked.apply_layout(plan.layer_storage(li));
+            let frozen = layer.chunked.merged.is_some()
+                || layer
+                    .chunked
+                    .chunks
+                    .iter()
+                    .any(|c| c.storage != ChunkStorage::Csc);
+            if frozen {
+                // Layout-resolved models (`MSCMXMR4` loads, possibly
+                // mmap-backed — immutable weight arrays) cannot be
+                // re-laid: the plan adopts the resident layout instead.
+                plan.layers[li].storage =
+                    layer.chunked.chunks.iter().map(|c| c.storage).collect();
+            } else {
+                layer.chunked.apply_layout(plan.layer_storage(li));
+            }
+        }
+        if config.algo == MatmulAlgo::Baseline {
+            // Layout-resolved loads carry an empty CSC stub (the chunked
+            // side holds the weights); the baseline's per-column walks
+            // need real columns, so hydrate them on the heap here.
+            for layer in &mut model.layers {
+                if layer.csc_is_stub() {
+                    layer.csc = layer.chunked.to_csc();
+                }
+            }
         }
         if config.algo == MatmulAlgo::Mscm {
             // Fixed configs keep whatever maps the model came with (their
             // plan never consults them); Auto owns the memory story. The
-            // non-Csc layouts already dropped theirs in apply_layout.
+            // non-Csc layouts already dropped theirs in apply_layout;
+            // quantized chunks keep the Csc structure and stay hashable.
             let prune = config.iter == IterationMethod::Auto;
             for (li, layer) in model.layers.iter_mut().enumerate() {
                 let methods = plan.layer_methods(li);
                 for (chunk, &m) in layer.chunked.chunks.iter_mut().zip(methods) {
-                    if m == IterationMethod::Hash && chunk.storage == ChunkStorage::Csc {
+                    if m == IterationMethod::Hash
+                        && matches!(
+                            chunk.storage,
+                            ChunkStorage::Csc | ChunkStorage::F16 | ChunkStorage::Int8
+                        )
+                    {
                         if chunk.row_map.is_none() {
                             chunk.build_row_map();
                         }
@@ -410,6 +447,13 @@ impl InferenceEngine {
             "model chunk storage does not match the plan's layouts \
              (apply them by constructing via InferenceEngine::new_with_plan)"
         );
+        if config.algo == MatmulAlgo::Baseline {
+            assert!(
+                model.layers.iter().all(|l| !l.csc_is_stub()),
+                "baseline over a layout-resolved (mmap) model needs hydrated CSC \
+                 columns — construct via InferenceEngine::new_with_plan"
+            );
+        }
         if config.algo == MatmulAlgo::Mscm {
             let ok = model.layers.iter().enumerate().all(|(li, l)| {
                 l.chunked
@@ -418,7 +462,10 @@ impl InferenceEngine {
                     .zip(plan.layer_methods(li))
                     .all(|(c, &m)| {
                         m != IterationMethod::Hash
-                            || c.storage != ChunkStorage::Csc
+                            || !matches!(
+                                c.storage,
+                                ChunkStorage::Csc | ChunkStorage::F16 | ChunkStorage::Int8
+                            )
                             || c.row_map.is_some()
                     })
             });

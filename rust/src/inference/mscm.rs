@@ -60,7 +60,7 @@ use crate::sparse::iterators::{
     vec_chunk_dense_rows_simd, vec_chunk_dense_simd, vec_chunk_hash, vec_chunk_hash_simd,
     vec_chunk_marching, vec_chunk_marching_simd,
 };
-use crate::sparse::{Chunk, ChunkStorage, ChunkView, CsrMatrix, SimdLevel};
+use crate::sparse::{Chunk, ChunkStorage, ChunkView, ChunkedMatrix, CsrMatrix, SimdLevel};
 use crate::tree::Layer;
 
 /// Orders `ws.blocks` by `(chunk, query)` via a stable counting sort
@@ -219,17 +219,46 @@ pub(crate) fn mscm_layer(
     ws.loaded_chunk = None;
     // Split borrows: the block list is iterated while the arena is filled.
     let blocks = std::mem::take(&mut ws.blocks);
+    // Quantized chunks have no resident f32 values: they are decoded
+    // into this workspace arena one chunk at a time. Chunk-sorted blocks
+    // amortize the decode the same way they amortize cache loads, and
+    // the arena only grows — the hot path stays allocation-free once
+    // warm. Taken out of the workspace so the view borrow below does not
+    // conflict with the arena writes.
+    let mut dequant = std::mem::take(&mut ws.dequant);
+    let mut loaded_quant: Option<u32> = None;
     // Blocks are chunk-sorted (Alg. 3), so the layout-resolved view is
     // reused across every block sharing a chunk — one storage dispatch
-    // per chunk run, not per block.
+    // per chunk run, not per block. Dequantized views are rebuilt per
+    // block instead (they borrow the arena, which the next quantized
+    // chunk mutates).
     let mut cached: Option<(u32, ChunkView<'_>)> = None;
     for &(p, q, ps) in &blocks {
-        let chunk = match cached {
-            Some((cp, view)) if cp == p => view,
-            _ => {
-                let view = chunked.view(p as usize);
-                cached = Some((p, view));
-                view
+        let chunk_ref = &chunked.chunks[p as usize];
+        let chunk = if chunk_ref.storage.is_quantized() {
+            if loaded_quant != Some(p) {
+                chunk_ref.dequantize_into(&mut dequant);
+                loaded_quant = Some(p);
+            }
+            // A Csc-shaped view over the chunk's exact structure and the
+            // decoded values: every ordinary kernel runs unmodified.
+            ChunkView {
+                ncols: chunk_ref.ncols,
+                storage: ChunkStorage::Csc,
+                row_indices: &chunk_ref.row_indices,
+                row_ptr: &chunk_ref.row_ptr,
+                col_idx: &chunk_ref.col_idx,
+                values: &dequant[..],
+                row_map: chunk_ref.row_map.as_ref(),
+            }
+        } else {
+            match cached {
+                Some((cp, view)) if cp == p => view,
+                _ => {
+                    let view = chunked.view(p as usize);
+                    cached = Some((p, view));
+                    view
+                }
             }
         };
         let base = chunked.chunk_start(p as usize) as u32;
@@ -257,7 +286,7 @@ pub(crate) fn mscm_layer(
                 if ws.loaded_chunk != Some(p) {
                     let scratch = ws.dense_pos.as_mut().expect("dense scratch");
                     if let Some(prev) = ws.loaded_chunk {
-                        scratch.clear(chunked.view(prev as usize));
+                        scratch.clear(scratch_view(chunked, prev as usize));
                     }
                     scratch.load(chunk);
                     ws.loaded_chunk = Some(p);
@@ -302,11 +331,33 @@ pub(crate) fn mscm_layer(
         ws.cand_cursor[q as usize] = dst + width;
     }
     ws.blocks = blocks;
+    ws.dequant = dequant;
     // Leave the scratch clean for the next layer/batch.
     if let Some(prev) = ws.loaded_chunk.take() {
         if let Some(scratch) = ws.dense_pos.as_mut() {
-            scratch.clear(chunked.view(prev as usize));
+            scratch.clear(scratch_view(chunked, prev as usize));
         }
+    }
+}
+
+/// The view the dense scratch's load/clear walks read (`row_indices`
+/// only) for chunk `c`. Quantized chunks have no borrowable f32 payload
+/// — their structure arrays are exact, so a values-free `Csc`-shaped
+/// view serves the position walks.
+fn scratch_view(chunked: &ChunkedMatrix, c: usize) -> ChunkView<'_> {
+    let chunk = &chunked.chunks[c];
+    if chunk.storage.is_quantized() {
+        ChunkView {
+            ncols: chunk.ncols,
+            storage: ChunkStorage::Csc,
+            row_indices: &chunk.row_indices,
+            row_ptr: &chunk.row_ptr,
+            col_idx: &chunk.col_idx,
+            values: &[],
+            row_map: chunk.row_map.as_ref(),
+        }
+    } else {
+        chunked.view(c)
     }
 }
 

@@ -60,6 +60,17 @@
 //!   dominates such chunks, and coalescing them puts sibling chunks that
 //!   are beam-activated together contiguous in memory. A singleton
 //!   candidate gains nothing and stays `Csc`.
+//! - [`ChunkStorage::F16`] / [`ChunkStorage::Int8`] — **approximate**
+//!   layouts, reachable only under [`PlannerConfig::approx`]: same
+//!   `Csc`-shaped structure with the value payload quantized to half
+//!   precision (2 B/entry) or per-chunk-scaled bytes (1 B/entry + one
+//!   `f32` scale). Default planning never selects them, so exact modes
+//!   stay bitwise exact; with the flag on, `Csc` chunks that are not
+//!   dense-probed quantize by size (`Int8` from 64 stored entries, `F16`
+//!   from 8) and the serving kernels dequantize into a per-workspace
+//!   arena. `DenseLookup`-planned chunks never quantize: the `O(d)`
+//!   scratch load/clear walk reads the chunk *view*, which quantized
+//!   chunks do not expose.
 //! - Everything else stays [`ChunkStorage::Csc`].
 //!
 //! The planner also drives the **side indexes**: chunk row maps are built
@@ -120,6 +131,12 @@ pub struct PlannerConfig {
     /// off — re-laying storage needs an owned model; the flag also
     /// drives the layout-ablation rows of `benches/planner.rs`.
     pub storage: bool,
+    /// Allow the **approximate** quantized layouts
+    /// ([`ChunkStorage::F16`] / [`ChunkStorage::Int8`]). Off by default:
+    /// exact deployments must stay bitwise identical across plans, so
+    /// lossy layouts are strictly opt-in (the `--approx` planner flag),
+    /// gated by the precision@k regression suite.
+    pub approx: bool,
 }
 
 impl Default for PlannerConfig {
@@ -130,6 +147,7 @@ impl Default for PlannerConfig {
             calibrate: 0,
             seed: 0x9A7_F17,
             storage: true,
+            approx: false,
         }
     }
 }
@@ -389,6 +407,26 @@ impl CostModel {
                 i = j;
             } else {
                 i += 1;
+            }
+        }
+        // Approximate mode: quantize the value payload of the remaining
+        // row-sparse chunks by size. Int8 (1 B/entry + per-chunk scale)
+        // once a chunk is big enough for the scale to be representative,
+        // F16 (2 B/entry, no calibration risk) below that, and tiny
+        // chunks stay exact — their bytes don't matter. DenseLookup
+        // chunks are excluded: the dense scratch load/clear walk reads
+        // the chunk view, which quantized chunks don't expose.
+        if pc.approx {
+            for c in 0..n {
+                if storage[c] == ChunkStorage::Csc
+                    && methods[c] != IterationMethod::DenseLookup
+                {
+                    if stats[c].nnz >= 64 {
+                        storage[c] = ChunkStorage::Int8;
+                    } else if stats[c].nnz >= 8 {
+                        storage[c] = ChunkStorage::F16;
+                    }
+                }
             }
         }
         storage
@@ -742,7 +780,7 @@ impl KernelPlan {
                 *t += c;
             }
         }
-        let mut storage_total = [0usize; 3];
+        let mut storage_total = [0usize; 5];
         for l in &self.layers {
             for s in &l.storage {
                 storage_total[s.index()] += 1;
@@ -812,8 +850,11 @@ pub struct PlanSummary {
     pub per_layer: Vec<[usize; 4]>,
     /// Chunk counts per method over the whole model.
     pub total: [usize; 4],
-    /// Chunk counts per storage layout over the whole model.
-    pub storage_total: [usize; 3],
+    /// Chunk counts per storage layout over the whole model, indexed by
+    /// [`ChunkStorage::index`] over [`ChunkStorage::EVERY`] (the two
+    /// trailing slots count the approximate `F16`/`Int8` layouts and
+    /// stay zero outside `--approx` plans).
+    pub storage_total: [usize; 5],
     /// SIMD-tier chunk count per layer (the scalar count is the layer's
     /// chunk total minus this).
     pub per_layer_simd: Vec<usize>,
@@ -838,7 +879,7 @@ impl std::fmt::Display for PlanSummary {
         }
         writeln!(f)?;
         write!(f, "layouts:")?;
-        for (s, &c) in ChunkStorage::ALL.iter().zip(&self.storage_total) {
+        for (s, &c) in ChunkStorage::EVERY.iter().zip(&self.storage_total) {
             write!(f, "  {}={}", s.short(), c)?;
         }
         writeln!(f)?;
@@ -962,6 +1003,49 @@ mod tests {
         assert_eq!(storage[1], ChunkStorage::Merged);
         assert_eq!(storage[3], ChunkStorage::Csc, "singleton run reverts");
         assert_ne!(storage[2], ChunkStorage::Merged);
+    }
+
+    #[test]
+    fn approx_flag_gates_quantized_layouts() {
+        let cost = CostModel::default();
+        let pc = PlannerConfig {
+            query_nnz_hint: 8,
+            batch_hint: 1,
+            ..Default::default()
+        };
+        // big (nnz >= 64), mid (8 <= nnz < 64), tiny (nnz < 8)
+        let stats = [
+            chunk_with_rows(400, 4).stats(),
+            chunk_with_rows(40, 4).stats(),
+            chunk_with_rows(2, 2).stats(),
+        ];
+        assert!(stats[0].nnz >= 64 && stats[1].nnz >= 8 && stats[1].nnz < 64);
+        let mut methods = [IterationMethod::BinarySearch; 3];
+        // Default (exact) planning never emits a quantized layout.
+        let exact =
+            cost.plan_layer_storage(MatmulAlgo::Mscm, &stats, &mut methods, 1_000_000, &pc);
+        assert!(exact.iter().all(|s| !s.is_quantized()), "{exact:?}");
+        // --approx: Int8 for big chunks, F16 for mid, tiny stays exact.
+        let apc = PlannerConfig {
+            approx: true,
+            ..pc
+        };
+        let mut methods = [IterationMethod::BinarySearch; 3];
+        let approx =
+            cost.plan_layer_storage(MatmulAlgo::Mscm, &stats, &mut methods, 1_000_000, &apc);
+        assert_eq!(approx[0], ChunkStorage::Int8);
+        assert_eq!(approx[1], ChunkStorage::F16);
+        assert!(!approx[2].is_quantized());
+        // DenseLookup-planned chunks never quantize, even when large.
+        let mut methods = [IterationMethod::DenseLookup; 3];
+        let dense =
+            cost.plan_layer_storage(MatmulAlgo::Mscm, &stats, &mut methods, 1_000_000, &apc);
+        for (c, s) in dense.iter().enumerate() {
+            assert!(
+                !s.is_quantized(),
+                "dense-planned chunk {c} must stay exact, got {s:?}"
+            );
+        }
     }
 
     #[test]

@@ -41,7 +41,8 @@ use mscm_xmr::inference::{
 use mscm_xmr::repro;
 use mscm_xmr::metrics::Snapshot;
 use mscm_xmr::shard::{
-    load_shard, load_shards, partition, poll_stats, poll_traces, save_shards, FaultPlan,
+    load_shard, load_shards, partition, partition_planned, poll_stats, poll_traces, save_shard_v4,
+    save_shards, shard_file_name, FaultPlan,
     RemoteConfig, RemoteCoordinatorConfig, RemoteShardedCoordinator, ShardHost, ShardHostConfig,
     ShardedCoordinator, ShardedCoordinatorConfig, ShardedEngine,
 };
@@ -61,7 +62,10 @@ MODEL PRODUCTION
   stats         --model m.bin
   shard         --model m.bin --shards S --out dir/   (split into S shard files;
                 cuts balanced by subtree nnz; with --iter auto [--calibrate N]
-                each shard file also stores its resolved kernel plan)
+                [--approx] cuts balance planned resident bytes instead and
+                each shard writes layout-resolved, mmap-servable (MSCMXMR4)
+                with its kernel plan; MSCM_FORCE_MMAP=1 makes hosts load
+                such files through a read-only memory map)
 
 INFERENCE
   infer         --model m.bin --queries q.svm [--algo mscm|baseline]
@@ -137,7 +141,11 @@ INFERENCE
   merged; --no-layout keeps the seed CSC layout everywhere) and kernel
   tier (scalar or runtime-dispatched SIMD — AVX2/NEON — where the cost
   model says the lanes amortize; MSCM_FORCE_SCALAR=1 forces scalar);
-  predictions are bitwise identical to every fixed method.
+  predictions are bitwise identical to every fixed method. --approx
+  additionally opts the planner into the lossy quantized weight layouts
+  (f16, int8 with a per-chunk scale) on CSC-shaped chunks — smaller
+  resident bytes, approximate scores; without --approx every layout
+  stays exact.
 
 PAPER REPRODUCTION (synthetic suite; see DESIGN.md §5-6)
   bench table    --branching 2|8|32 [--scale 10] [--only d1,d2] [--json f]
@@ -349,6 +357,9 @@ fn planner_config(opts: &Opts) -> Result<PlannerConfig, anyhow::Error> {
         // --no-layout pins every chunk to the seed CSC layout (plan
         // ablation; also what shared-model engines do implicitly).
         storage: !opts.contains_key("no-layout"),
+        // --approx opts into the lossy f16/int8 weight layouts; exact
+        // planning (the default) never selects them.
+        approx: opts.contains_key("approx"),
     })
 }
 
@@ -465,7 +476,11 @@ fn cmd_stats(opts: &Opts) -> Result<(), anyhow::Error> {
 
 /// Splits a model file into `--shards` standalone shard files under
 /// `--out` (canonical `shard-XXX-of-YYY.bin` names, loadable by
-/// `serve --shards-dir`).
+/// `serve --shards-dir`). With `--iter auto` the cut is balanced by the
+/// bytes each subtree keeps resident under a global kernel plan
+/// (quantized layouts included under `--approx`), each shard re-plans
+/// its own chunks, and the files are written in the layout-resolved
+/// `MSCMXMR4` envelope a host can serve straight off a memory map.
 fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
     let path = opts
         .get("model")
@@ -477,7 +492,18 @@ fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
     let out = opts.get("out").cloned().unwrap_or_else(|| "shards".into());
     let model = load_model(path, false)?;
     println!("model: {}", model.stats());
-    let mut parts = partition(&model, shards);
+    let config = engine_config(opts)?;
+    let planned = config.iter == IterationMethod::Auto;
+    let mut parts = if planned {
+        // Plan the *global* model once so the cut balances the bytes
+        // the planned layouts actually keep resident, then re-plan per
+        // shard below (plans are per-shard over the shard's own chunks).
+        let pc = planner_config(opts)?;
+        let global = KernelPlan::auto(&model, config.algo, &pc);
+        partition_planned(&model, shards, &global)
+    } else {
+        partition(&model, shards)
+    };
     if parts.len() != shards {
         eprintln!(
             "note: clamped to {} shards (the root has only that many children)",
@@ -486,8 +512,7 @@ fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
     }
     // --iter auto: resolve (and optionally calibrate) each shard's
     // kernel plan now, so the shard files serve without re-planning.
-    let config = engine_config(opts)?;
-    if config.iter == IterationMethod::Auto {
+    if planned {
         let pc = planner_config(opts)?;
         for p in &mut parts {
             p.plan_auto(config.algo, &pc);
@@ -498,7 +523,20 @@ fn cmd_shard(opts: &Opts) -> Result<(), anyhow::Error> {
             );
         }
     }
-    let paths = save_shards(&parts, &out)?;
+    let paths = if planned {
+        // Planned shards ship layout-resolved (V4): quantization baked
+        // into the arrays, mmap-servable without a rewrite.
+        std::fs::create_dir_all(&out)?;
+        let mut paths = Vec::with_capacity(parts.len());
+        for p in &parts {
+            let path = shard_file_name(&out, p.spec.shard_id, p.spec.num_shards);
+            save_shard_v4(p, &path)?;
+            paths.push(path);
+        }
+        paths
+    } else {
+        save_shards(&parts, &out)?
+    };
     for (s, p) in parts.iter().zip(&paths) {
         println!(
             "shard {}/{}: root children [{}, {}), labels [{}, {}) -> {}",

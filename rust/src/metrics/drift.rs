@@ -47,11 +47,18 @@ use super::Snapshot;
 
 /// Chunk classes: 4 concrete methods × 3 storage layouts × 2 kernel
 /// tiers (scalar classes occupy the low half so tier-free readers keep
-/// their indices).
+/// their indices). The quantized layouts (`F16`/`Int8`) execute the
+/// CSC-shaped kernels after an arena dequantize, so they attribute to
+/// the `Csc` class rather than widening the table.
 const CLASSES: usize = 24;
 
 #[inline]
 fn class_of(method: IterationMethod, storage: ChunkStorage, tier: KernelTier) -> usize {
+    let storage = if storage.is_quantized() {
+        ChunkStorage::Csc
+    } else {
+        storage
+    };
     tier.index() * 12 + method.index() * 3 + storage.index()
 }
 
@@ -432,6 +439,14 @@ mod tests {
         for m in IterationMethod::ALL {
             for s in ChunkStorage::ALL {
                 assert!(class_of(m, s, KernelTier::Scalar) < 12);
+            }
+        }
+        // Quantized layouts run the CSC kernels and share its class.
+        for t in KernelTier::ALL {
+            for m in IterationMethod::ALL {
+                for s in [ChunkStorage::F16, ChunkStorage::Int8] {
+                    assert_eq!(class_of(m, s, t), class_of(m, ChunkStorage::Csc, t));
+                }
             }
         }
     }

@@ -125,15 +125,23 @@ impl LatencyHistogram {
     /// `bucket_bounds_bracket_every_value` property test below: indices
     /// are monotone in `us`, `bucket_upper(bucket_index(us)) >= us`, and
     /// each bucket's value range is contiguous. Values at or above the
-    /// 2^24 µs ceiling fold into the last octave by their low bits;
-    /// count/sum/max stay exact there and quantiles past the ceiling
-    /// fall back to `max_us`.
+    /// 2^24 µs ceiling all fold into the single last bucket (keeping the
+    /// index monotone through the boundary); count/sum/max stay exact
+    /// there and quantiles past the ceiling fall back to `max_us`.
     fn bucket_index(us: u64) -> usize {
         if us < 1 {
             return 0;
         }
         let oct = 63 - us.leading_zeros() as u64; // floor(log2)
-        let oct = oct.min(OCTAVES - 1);
+        if oct >= OCTAVES {
+            // At or past the 2^24 µs ceiling everything folds into the
+            // single last bucket. The old low-bits fold could map a
+            // ceiling value *below* smaller ones (bucket_index(2^24)
+            // landed at sub-bucket 0 of the top octave, under
+            // bucket_index(2^24 - 1)), breaking monotonicity and the
+            // bracketing contract at the boundary.
+            return (OCTAVES * SUB - 1) as usize;
+        }
         let frac = if oct == 0 {
             0
         } else {
@@ -258,21 +266,30 @@ pub struct HistogramSnapshot {
 impl HistogramSnapshot {
     /// The window between `earlier` and `self`: per-bucket and
     /// count/sum subtraction (saturating, so a reset or mismatched pair
-    /// degrades to zeros instead of wrapping). `max_us` stays the
-    /// all-time maximum — a windowed max is not recoverable from two
-    /// cumulative snapshots.
+    /// degrades to zeros instead of wrapping). The *exact* windowed max
+    /// is not recoverable from two cumulative snapshots, so `max_us` is
+    /// derived from the diffed buckets: the upper bound of the highest
+    /// nonempty bucket, tightened by the lifetime max — an **upper
+    /// estimate** within one bucket's resolution, and `0` for an empty
+    /// window. (Carrying the lifetime `max_us` here, as earlier versions
+    /// did, made `metrics --interval` windows and the quantile
+    /// past-ceiling fallback report stale pre-window tails forever.)
     pub fn diff(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
-        let buckets = self
+        let buckets: Vec<u64> = self
             .buckets
             .iter()
             .enumerate()
             .map(|(i, &b)| b.saturating_sub(earlier.buckets.get(i).copied().unwrap_or(0)))
             .collect();
+        let max_us = buckets
+            .iter()
+            .rposition(|&b| b != 0)
+            .map_or(0, |i| LatencyHistogram::bucket_upper(i).min(self.max_us));
         HistogramSnapshot {
             buckets,
             count: self.count.saturating_sub(earlier.count),
             sum_us: self.sum_us.saturating_sub(earlier.sum_us),
-            max_us: self.max_us,
+            max_us,
         }
     }
 
@@ -880,18 +897,35 @@ mod tests {
                 }
             }
         }
-        // Octave boundaries up to the ceiling.
+        // Every octave boundary ±1, the 2^24 µs ceiling included. Up to
+        // and at the ceiling the full bracket holds (bucket_upper of the
+        // last bucket is exactly 2^24); past it only monotonicity can —
+        // values above the ceiling fold into the last bucket, whose
+        // upper bound they exceed (the documented max_us fallback).
         let mut last = 0usize;
         let mut prev = 0u64;
-        for oct in 1..OCTAVES {
+        for oct in 1..=OCTAVES {
             for us in [(1u64 << oct) - 1, 1u64 << oct, (1u64 << oct) + 1] {
-                if us < prev || us >= ceiling {
+                if us < prev {
                     continue;
                 }
                 prev = us;
-                check(us, &mut last);
+                if us <= ceiling {
+                    check(us, &mut last);
+                } else {
+                    let i = LatencyHistogram::bucket_index(us);
+                    assert!(i >= last, "bucket_index({us}) = {i} < {last}");
+                    assert_eq!(i, (OCTAVES * SUB - 1) as usize, "past-ceiling fold");
+                    last = i;
+                }
             }
         }
+        // The boundary regression pinned: the ceiling maps to the last
+        // bucket, never below its predecessor.
+        assert_eq!(
+            LatencyHistogram::bucket_index(ceiling),
+            LatencyHistogram::bucket_index(ceiling - 1),
+        );
         // Seeded log-uniform sweep: random pairs stay ordered.
         let mut rng = crate::util::Rng::seed_from_u64(0xB0C4E7);
         for _ in 0..5_000 {
@@ -928,6 +962,40 @@ mod tests {
         let z = s2.diff(&s2);
         assert_eq!(z.count, 0);
         assert!(z.buckets.iter().all(|&b| b == 0));
+        assert_eq!(z.max_us, 0, "an empty window has no maximum");
+    }
+
+    /// Regression: the windowed max must come from the window, not the
+    /// lifetime. Pre-fix, `diff` carried the all-time `max_us` into
+    /// every window, so a single old spike polluted `metrics --interval`
+    /// summaries (and the quantile past-ceiling fallback) forever.
+    #[test]
+    fn diff_windowed_max_tracks_the_window() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(100)); // lifetime spike: 100_000 µs
+        let s1 = h.snapshot();
+        h.record(Duration::from_millis(1)); // the window: one 1_000 µs obs
+        let s2 = h.snapshot();
+        let w = s2.diff(&s1);
+        assert_eq!(w.count, 1);
+        assert!(
+            w.max_us < 100_000,
+            "window max {} leaked the pre-window lifetime spike",
+            w.max_us
+        );
+        // Upper-estimate contract: covers the true windowed max within
+        // one bucket's resolution.
+        assert!(w.max_us >= 1_000, "window max {} under the true max", w.max_us);
+        assert!(
+            w.max_us as f64 <= 1_000.0 * 1.5,
+            "window max {} looser than one bucket",
+            w.max_us
+        );
+        // A window holding the lifetime max keeps reporting it exactly
+        // (the bucket-upper estimate is tightened by the lifetime max).
+        let all = s2.diff(&HistogramSnapshot::default());
+        assert_eq!(all.count, 2);
+        assert_eq!(all.max_us, 100_000);
     }
 
     #[test]

@@ -104,8 +104,10 @@ pub struct LayerTrace {
     /// [`crate::inference::IterationMethod::index`].
     pub method_blocks: [u64; 4],
     /// Blocks per storage layout, indexed by
-    /// [`crate::sparse::ChunkStorage::index`].
-    pub storage_blocks: [u64; 3],
+    /// [`crate::sparse::ChunkStorage::index`] over
+    /// [`crate::sparse::ChunkStorage::EVERY`] (trailing slots: the
+    /// approximate `F16`/`Int8` layouts).
+    pub storage_blocks: [u64; 5],
     /// Blocks per *effective* kernel tier (the plan's tier gated by the
     /// engine's detected SIMD level), indexed by
     /// [`crate::inference::KernelTier::index`].
@@ -129,7 +131,7 @@ pub struct LayerTrace {
 ///     "expand_ns": int,      // masked-matmul expansion of this layer
 ///     "select_ns": int,      // global beam selection
 ///     "methods": {"marching"|"binary"|"hash"|"dense": blocks, ...},
-///     "storages": {"csc"|"dense-rows"|"merged": blocks, ...},
+///     "storages": {"csc"|"dense-rows"|"merged"|"f16"|"int8": blocks, ...},
 ///     "tiers": {"scalar"|"simd": blocks, ...}  // effective (hardware-gated)
 ///   }, ...]
 /// }
@@ -173,7 +175,7 @@ impl QueryTrace {
                         .collect(),
                 );
                 let storages = Json::Obj(
-                    ChunkStorage::ALL
+                    ChunkStorage::EVERY
                         .iter()
                         .filter(|s| l.storage_blocks[s.index()] != 0)
                         .map(|s| {
@@ -696,7 +698,7 @@ mod tests {
                 expand_ns: 700,
                 select_ns: 20,
                 method_blocks: [0, 0, 1, 0],
-                storage_blocks: [1, 0, 0],
+                storage_blocks: [1, 0, 0, 0, 0],
                 tier_blocks: [1, 0],
             }],
         };

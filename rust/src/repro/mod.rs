@@ -13,8 +13,8 @@ pub use figures::{
     print_figure6, Figure5Row, Figure6Row,
 };
 pub use tables::{
-    bench_table, build_dataset, print_figure34, print_table, rows_to_json, table5, table6,
-    BenchOptions, TableRow,
+    bench_table, build_dataset, precision_overlap_at_k, print_figure34, print_table, rows_to_json,
+    table5, table6, BenchOptions, TableRow,
 };
 
 use crate::util::Json;

@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::synthetic::{paper_suite, synth_model, synth_queries, DatasetSpec};
-use crate::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo};
+use crate::inference::{EngineConfig, InferenceEngine, IterationMethod, MatmulAlgo, Prediction};
 use crate::sparse::CsrMatrix;
 use crate::tree::XmrModel;
 use crate::util::Json;
@@ -90,6 +90,32 @@ fn measure_online(engine: &InferenceEngine, x: &CsrMatrix, opts: &BenchOptions) 
         std::hint::black_box(engine.predict_with(q, opts.beam, opts.topk, &mut ws));
     }
     t.elapsed().as_secs_f64() * 1e3 / n as f64
+}
+
+/// Mean top-`k` label overlap between an approximate run and its exact
+/// (f32) oracle — the regression gate for the planner's `--approx`
+/// quantized layouts: per query, `|approx ∩ exact| / k` over the two
+/// top-`k` label sets, averaged across queries. `1.0` means identical
+/// retrieved sets (scores may still differ in low bits); the quant
+/// property suite (`rust/tests/quant.rs`) pins a floor on this value.
+pub fn precision_overlap_at_k(
+    exact: &[Vec<Prediction>],
+    approx: &[Vec<Prediction>],
+    k: usize,
+) -> f64 {
+    assert_eq!(exact.len(), approx.len(), "query counts differ");
+    assert!(k > 0, "k must be positive");
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let mut total = 0.0f64;
+    for (e, a) in exact.iter().zip(approx) {
+        let truth: std::collections::HashSet<u32> = e.iter().take(k).map(|p| p.label).collect();
+        let hits = a.iter().take(k).filter(|p| truth.contains(&p.label)).count();
+        // an oracle list shorter than k gates on the labels that exist
+        total += hits as f64 / truth.len().min(k).max(1) as f64;
+    }
+    total / exact.len() as f64
 }
 
 /// Runs the Table-1/2/3 grid for one branching factor.

@@ -1,7 +1,22 @@
 //! Shard serialization: a versioned envelope around the [`crate::tree`]
 //! model body.
 //!
-//! Current format (`MSCMXMR3`, little-endian):
+//! Two current formats share the header:
+//!
+//! - **`MSCMXMR3`** — the portable build-time envelope: the model body in
+//!   its all-`Csc` build form plus the resolved kernel plan. Loading
+//!   re-applies the plan's storage layouts on the heap.
+//! - **`MSCMXMR4`** — the *layout-resolved* serving envelope
+//!   ([`save_shard_v4`]): every chunk's arrays are written in their
+//!   planned physical layout ([`ChunkStorage`], quantized variants
+//!   included), each weight array padded to a 64-byte file offset, so a
+//!   host can serve the file directly through a read-only memory map
+//!   ([`MmapModel`]) with the kernels reading borrowed slices — models
+//!   larger than RAM never materialize on the heap. The same byte layout
+//!   parses on the heap too (the default), byte-for-byte into the same
+//!   model.
+//!
+//! `MSCMXMR3` format (little-endian):
 //! ```text
 //! magic         u64  = 0x4d53_434d_584d_5233 ("MSCMXMR3")
 //! shard_id      u64
@@ -40,10 +55,43 @@
 //! the model body read as plan-less. Both legacy leniencies are V2-only;
 //! V3 parsing is strict (fuzzed in `rust/tests/format.rs`).
 //!
+//! `MSCMXMR4` format (little-endian; same 7-word spec header and
+//! `layer_offsets` as V3, then):
+//! ```text
+//! dim           u64
+//! per layer:
+//!   cols          u64
+//!   num_chunks    u64
+//!   chunk_offsets (num_chunks + 1) x u32
+//!   per chunk:
+//!     storage     u32 (ChunkStorage::index; unknown codes rejected)
+//!     ncols       u32 (must match the chunk-offset width)
+//!     merged_slot u32
+//!     scale       f32 (exactly 1.0 unless Int8; Int8: finite, > 0)
+//!     5 array lengths  u64 each (row_indices, row_ptr, col_idx,
+//!                      values, qvalues — cross-checked per layout)
+//!     5 arrays,   each padded to a 64-byte file offset when nonempty
+//!                 (padding bytes must be zero)
+//!   merged store  u64 flag (0/1); if 1: num_spans u64, three
+//!                 num_spans x u32 span columns, 4 array lengths u64,
+//!                 then the 4 shared arrays (64-byte padded)
+//! plan flag     u64 (1 = costed for MSCM, 2 = baseline; a V4 file
+//!               MUST carry a plan — 0 is rejected)
+//! plan          per-layer rows, same encoding as V3
+//! (end)         trailing bytes are rejected
+//! ```
+//! V4 carries no CSC section: loaders install an empty CSC stub per
+//! layer ([`crate::tree::Layer::csc_is_stub`]) and
+//! [`crate::inference::InferenceEngine::new_with_plan`] rebuilds real
+//! columns only when the baseline algo needs them. Hash row maps are
+//! always rebuilt on the heap (they are pointer-y side indices, not
+//! flat arrays).
+//!
 //! A shard file is also the deployment unit of cross-process serving:
 //! `repro shard-host --shard <file>` loads exactly one of these (stored
 //! plan honored) and serves it over the [`super::wire`] protocol to a
-//! [`super::RemoteShardedCoordinator`].
+//! [`super::RemoteShardedCoordinator`]. Setting `MSCM_FORCE_MMAP=1`
+//! routes every V4 [`load_shard`] through the memory-mapped path.
 
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
@@ -51,10 +99,14 @@ use std::path::{Path, PathBuf};
 use super::partition::{ShardModel, ShardSpec};
 use crate::inference::plan::{KernelPlan, LayerPlan};
 use crate::inference::{IterationMethod, KernelTier, MatmulAlgo};
-use crate::sparse::ChunkStorage;
-use crate::tree::{read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64};
+use crate::sparse::{Arr, Chunk, ChunkStorage, ChunkedMatrix, CscMatrix, MergedStore};
+use crate::tree::{
+    read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64, Layer, XmrModel,
+};
 
-/// Current envelope magic ("MSCMXMR3").
+/// Layout-resolved envelope magic ("MSCMXMR4") — mmap-servable.
+const SHARD_MAGIC_V4: u64 = 0x4d53_434d_584d_5234;
+/// Build-time envelope magic ("MSCMXMR3").
 const SHARD_MAGIC: u64 = 0x4d53_434d_584d_5233;
 /// Legacy envelope magic ("MSCMXMR2") — storage-less plans, still loaded.
 const SHARD_MAGIC_V2: u64 = 0x4d53_434d_584d_5232;
@@ -63,18 +115,49 @@ fn invalid(msg: impl Into<String>) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.into())
 }
 
+/// Writes the per-layer plan rows shared by the V3 and V4 envelopes.
+fn write_plan(w: &mut impl Write, plan: &KernelPlan) -> io::Result<()> {
+    for layer in &plan.layers {
+        write_u64(w, layer.methods.len() as u64)?;
+        // Kernel tier rides in the method code's high range
+        // (+4 for SIMD) so all-scalar plans stay byte-identical
+        // to the pre-tier encoding.
+        let codes: Vec<u32> = layer
+            .methods
+            .iter()
+            .zip(&layer.tiers)
+            .map(|(m, t)| (m.index() + 4 * t.index()) as u32)
+            .collect();
+        write_u32s(w, &codes)?;
+        let codes: Vec<u32> = layer.storage.iter().map(|s| s.index() as u32).collect();
+        write_u32s(w, &codes)?;
+    }
+    Ok(())
+}
+
+/// Writes the spec header + layer offsets shared by every envelope
+/// version (everything between the magic and the model body).
+fn write_header(w: &mut impl Write, shard: &ShardModel) -> io::Result<()> {
+    write_u64(w, shard.spec.shard_id as u64)?;
+    write_u64(w, shard.spec.num_shards as u64)?;
+    write_u64(w, shard.spec.root_lo as u64)?;
+    write_u64(w, shard.spec.root_hi as u64)?;
+    write_u64(w, shard.spec.label_offset)?;
+    write_u64(w, shard.spec.num_labels)?;
+    write_u64(w, shard.layer_offsets.len() as u64)?;
+    write_u32s(w, &shard.layer_offsets)
+}
+
 /// Saves one shard (kernel plan included, when resolved) to `path`.
 pub fn save_shard(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> {
+    assert!(
+        shard.model.layers.iter().all(|l| !l.csc_is_stub()),
+        "a layout-resolved (MSCMXMR4-loaded) model has no CSC columns to \
+         serialize — re-save it with save_shard_v4"
+    );
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     write_u64(&mut w, SHARD_MAGIC)?;
-    write_u64(&mut w, shard.spec.shard_id as u64)?;
-    write_u64(&mut w, shard.spec.num_shards as u64)?;
-    write_u64(&mut w, shard.spec.root_lo as u64)?;
-    write_u64(&mut w, shard.spec.root_hi as u64)?;
-    write_u64(&mut w, shard.spec.label_offset)?;
-    write_u64(&mut w, shard.spec.num_labels)?;
-    write_u64(&mut w, shard.layer_offsets.len() as u64)?;
-    write_u32s(&mut w, &shard.layer_offsets)?;
+    write_header(&mut w, shard)?;
     write_model_body(&mut w, &shard.model)?;
     match &shard.plan {
         None => write_u64(&mut w, 0)?,
@@ -86,24 +169,614 @@ pub fn save_shard(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> 
                     MatmulAlgo::Baseline => 2,
                 },
             )?;
-            for layer in &plan.layers {
-                write_u64(&mut w, layer.methods.len() as u64)?;
-                // Kernel tier rides in the method code's high range
-                // (+4 for SIMD) so all-scalar plans stay byte-identical
-                // to the pre-tier encoding.
-                let codes: Vec<u32> = layer
-                    .methods
-                    .iter()
-                    .zip(&layer.tiers)
-                    .map(|(m, t)| (m.index() + 4 * t.index()) as u32)
-                    .collect();
-                write_u32s(&mut w, &codes)?;
-                let codes: Vec<u32> = layer.storage.iter().map(|s| s.index() as u32).collect();
-                write_u32s(&mut w, &codes)?;
-            }
+            write_plan(&mut w, plan)?;
         }
     }
     w.flush()
+}
+
+// =====================================================================
+// MSCMXMR4: the layout-resolved, mmap-servable envelope
+// =====================================================================
+
+/// Pads `buf` with zero bytes to the next 64-byte boundary.
+fn pad64(buf: &mut Vec<u8>) {
+    while buf.len() % 64 != 0 {
+        buf.push(0);
+    }
+}
+
+fn put_arr_u32(buf: &mut Vec<u8>, v: &[u32]) {
+    if !v.is_empty() {
+        pad64(buf);
+        for &x in v {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn put_arr_u16(buf: &mut Vec<u8>, v: &[u16]) {
+    if !v.is_empty() {
+        pad64(buf);
+        for &x in v {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn put_arr_f32(buf: &mut Vec<u8>, v: &[f32]) {
+    if !v.is_empty() {
+        pad64(buf);
+        for &x in v {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn put_arr_u8(buf: &mut Vec<u8>, v: &[u8]) {
+    if !v.is_empty() {
+        pad64(buf);
+        buf.extend_from_slice(v);
+    }
+}
+
+/// Saves one shard to `path` in the layout-resolved `MSCMXMR4` envelope.
+///
+/// The shard **must** carry a resolved kernel plan (V4 files store the
+/// *planned* physical layouts, quantization included; there is no
+/// "unplanned" V4). The stored model is a clone with the plan's storage
+/// applied, so the caller's shard is untouched and the on-disk arrays
+/// are exactly what a host serves — over mmap, without rewriting a byte.
+pub fn save_shard_v4(shard: &ShardModel, path: impl AsRef<Path>) -> io::Result<()> {
+    let (algo, plan) = shard.plan.as_ref().ok_or_else(|| {
+        invalid("an MSCMXMR4 shard stores a layout-resolved model: resolve a kernel plan first")
+    })?;
+    let mut model = shard.model.clone();
+    for (li, layer) in model.layers.iter_mut().enumerate() {
+        layer.chunked.apply_layout(plan.layer_storage(li));
+    }
+    let mut buf = Vec::new();
+    write_u64(&mut buf, SHARD_MAGIC_V4)?;
+    write_header(&mut buf, shard)?;
+    write_u64(&mut buf, model.dim as u64)?;
+    for layer in &model.layers {
+        let cm = &layer.chunked;
+        write_u64(&mut buf, cm.cols as u64)?;
+        write_u64(&mut buf, cm.chunks.len() as u64)?;
+        write_u32s(&mut buf, &cm.chunk_offsets)?;
+        for chunk in &cm.chunks {
+            write_u32s(&mut buf, &[chunk.storage.index() as u32])?;
+            write_u32s(&mut buf, &[chunk.ncols])?;
+            write_u32s(&mut buf, &[chunk.merged_slot])?;
+            buf.extend_from_slice(&chunk.scale.to_le_bytes());
+            write_u64(&mut buf, chunk.row_indices.len() as u64)?;
+            write_u64(&mut buf, chunk.row_ptr.len() as u64)?;
+            write_u64(&mut buf, chunk.col_idx.len() as u64)?;
+            write_u64(&mut buf, chunk.values.len() as u64)?;
+            write_u64(&mut buf, chunk.qvalues.len() as u64)?;
+            put_arr_u32(&mut buf, &chunk.row_indices);
+            put_arr_u32(&mut buf, &chunk.row_ptr);
+            put_arr_u16(&mut buf, &chunk.col_idx);
+            put_arr_f32(&mut buf, &chunk.values);
+            put_arr_u8(&mut buf, &chunk.qvalues);
+        }
+        match &cm.merged {
+            None => write_u64(&mut buf, 0)?,
+            Some(store) => {
+                write_u64(&mut buf, 1)?;
+                let (rows_start, rows, ptr_start) = store.span_columns();
+                write_u64(&mut buf, rows_start.len() as u64)?;
+                write_u32s(&mut buf, &rows_start)?;
+                write_u32s(&mut buf, &rows)?;
+                write_u32s(&mut buf, &ptr_start)?;
+                let (ri, rp, ci, va) = store.raw_arrays();
+                write_u64(&mut buf, ri.len() as u64)?;
+                write_u64(&mut buf, rp.len() as u64)?;
+                write_u64(&mut buf, ci.len() as u64)?;
+                write_u64(&mut buf, va.len() as u64)?;
+                put_arr_u32(&mut buf, ri);
+                put_arr_u32(&mut buf, rp);
+                put_arr_u16(&mut buf, ci);
+                put_arr_f32(&mut buf, va);
+            }
+        }
+    }
+    write_u64(
+        &mut buf,
+        match algo {
+            MatmulAlgo::Mscm => 1,
+            MatmulAlgo::Baseline => 2,
+        },
+    )?;
+    write_plan(&mut buf, plan)?;
+    std::fs::write(path, &buf)
+}
+
+/// Little-endian plain-old-data element of a V4 weight array.
+trait FromLe: Copy + 'static {
+    const SIZE: usize;
+    fn from_le(b: &[u8]) -> Self;
+}
+
+impl FromLe for u8 {
+    const SIZE: usize = 1;
+    fn from_le(b: &[u8]) -> Self {
+        b[0]
+    }
+}
+
+impl FromLe for u16 {
+    const SIZE: usize = 2;
+    fn from_le(b: &[u8]) -> Self {
+        u16::from_le_bytes(b.try_into().unwrap())
+    }
+}
+
+impl FromLe for u32 {
+    const SIZE: usize = 4;
+    fn from_le(b: &[u8]) -> Self {
+        u32::from_le_bytes(b.try_into().unwrap())
+    }
+}
+
+impl FromLe for f32 {
+    const SIZE: usize = 4;
+    fn from_le(b: &[u8]) -> Self {
+        f32::from_le_bytes(b.try_into().unwrap())
+    }
+}
+
+/// One parser over a complete in-memory V4 image, shared by the heap
+/// loader (copies every array into [`Arr::Owned`]) and the mmap loader
+/// (`zero_copy`: borrows [`Arr::Mapped`] slices straight out of the
+/// mapping — only constructed over little-endian process-lifetime maps).
+struct BodyCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    zero_copy: bool,
+}
+
+impl io::Read for BodyCursor<'_> {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        let n = out.len().min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl<'a> BodyCursor<'a> {
+    fn bytes(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                io::Error::new(io::ErrorKind::UnexpectedEof, "truncated MSCMXMR4 shard file")
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u64v(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn u32v(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32v(&mut self) -> io::Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    /// Small always-heap header array (chunk offsets, span columns).
+    fn u32_vec(&mut self, n: usize) -> io::Result<Vec<u32>> {
+        let nbytes = n
+            .checked_mul(4)
+            .ok_or_else(|| invalid("array length overflow"))?;
+        Ok(self
+            .bytes(nbytes)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Advances to the next 64-byte boundary, rejecting nonzero padding
+    /// (corruption hiding in the slack would otherwise go unnoticed).
+    fn align64(&mut self) -> io::Result<()> {
+        let next = (self.pos + 63) & !63usize;
+        let end = next.min(self.buf.len());
+        if self.buf[self.pos..end].iter().any(|&b| b != 0) {
+            return Err(invalid("nonzero alignment padding in MSCMXMR4 shard file"));
+        }
+        if next > self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "truncated MSCMXMR4 shard file",
+            ));
+        }
+        self.pos = next;
+        Ok(())
+    }
+
+    /// One 64-byte-aligned weight array of `len` elements (empty arrays
+    /// are written without padding, mirroring the writer).
+    fn arr<T: FromLe>(&mut self, len: usize) -> io::Result<Arr<T>> {
+        if len == 0 {
+            return Ok(Arr::default());
+        }
+        self.align64()?;
+        let nbytes = len
+            .checked_mul(T::SIZE)
+            .ok_or_else(|| invalid("array length overflow"))?;
+        let bytes = self.bytes(nbytes)?;
+        if self.zero_copy {
+            let ptr = bytes.as_ptr();
+            // The 64-byte file offsets plus the page-aligned mapping
+            // base guarantee this; reject rather than UB if a damaged
+            // file ever slips through.
+            if (ptr as usize) % std::mem::align_of::<T>() != 0 {
+                return Err(invalid("misaligned weight array in mapped shard file"));
+            }
+            // Safety: the pointer spans `len` elements of a read-only,
+            // never-unmapped (process-lifetime) PROT_READ mapping, and
+            // `T` is plain little-endian data on a little-endian target.
+            Ok(Arr::Mapped {
+                ptr: ptr as *const T,
+                len,
+            })
+        } else {
+            Ok(Arr::Owned(
+                bytes.chunks_exact(T::SIZE).map(T::from_le).collect(),
+            ))
+        }
+    }
+}
+
+/// Header/body consistency checks shared by every envelope version.
+fn validate_shard(shard: &ShardModel, depth: usize) -> io::Result<()> {
+    let spec = &shard.spec;
+    let model = &shard.model;
+    if let Some((_, p)) = &shard.plan {
+        if !p.matches(model) {
+            return Err(invalid("stored kernel plan does not fit the model body"));
+        }
+    }
+    if spec.shard_id >= spec.num_shards {
+        return Err(invalid(format!(
+            "shard id {} out of range for {} shards",
+            spec.shard_id, spec.num_shards
+        )));
+    }
+    if spec.root_hi < spec.root_lo {
+        return Err(invalid("shard root-child range is inverted"));
+    }
+    if model.depth() != depth {
+        return Err(invalid("shard header depth disagrees with model body"));
+    }
+    if model.num_labels() as u64 != spec.num_labels {
+        return Err(invalid("shard label count disagrees with model body"));
+    }
+    if shard.layer_offsets.last().copied().unwrap_or(0) as u64 != spec.label_offset {
+        return Err(invalid("shard label offset disagrees with layer offsets"));
+    }
+    if shard.layer_offsets.first().copied().unwrap_or(0) != spec.root_lo {
+        return Err(invalid("shard root offset disagrees with layer offsets"));
+    }
+    if model.layers[0].num_nodes() as u64 != (spec.root_hi - spec.root_lo) as u64 {
+        return Err(invalid("shard root-child range disagrees with model body"));
+    }
+    Ok(())
+}
+
+/// Parses a complete `MSCMXMR4` image (header validation included).
+/// `zero_copy` must only be set over a little-endian, process-lifetime
+/// mapping — the returned model then borrows its weight arrays from it.
+fn read_shard_v4(buf: &[u8], zero_copy: bool, with_row_maps: bool) -> io::Result<ShardModel> {
+    let mut c = BodyCursor {
+        buf,
+        pos: 0,
+        zero_copy,
+    };
+    if c.u64v()? != SHARD_MAGIC_V4 {
+        return Err(invalid("not an MSCMXMR4 shard file"));
+    }
+    let spec = ShardSpec {
+        shard_id: c.u64v()? as u32,
+        num_shards: c.u64v()? as u32,
+        root_lo: c.u64v()? as u32,
+        root_hi: c.u64v()? as u32,
+        label_offset: c.u64v()?,
+        num_labels: c.u64v()?,
+    };
+    let depth = c.u64v()? as usize;
+    let layer_offsets = c.u32_vec(depth)?;
+    let dim = c.u64v()? as usize;
+    let mut layers = Vec::with_capacity(depth);
+    for li in 0..depth {
+        let cols = c.u64v()? as usize;
+        let num_chunks = c.u64v()? as usize;
+        let chunk_offsets = c.u32_vec(num_chunks.checked_add(1).ok_or_else(|| {
+            invalid("array length overflow")
+        })?)?;
+        if num_chunks == 0
+            || chunk_offsets[0] != 0
+            || chunk_offsets[num_chunks] as usize != cols
+            || chunk_offsets.windows(2).any(|w| w[1] < w[0])
+        {
+            return Err(invalid(format!(
+                "layer {li}: chunk offsets do not tile the layer"
+            )));
+        }
+        let mut chunks = Vec::with_capacity(num_chunks);
+        for ci in 0..num_chunks {
+            let tag = c.u32v()?;
+            let storage = ChunkStorage::from_index(tag as usize)
+                .ok_or_else(|| invalid(format!("layer {li}: unknown storage-layout code {tag}")))?;
+            let ncols = c.u32v()?;
+            let merged_slot = c.u32v()?;
+            let scale = c.f32v()?;
+            if ncols != chunk_offsets[ci + 1] - chunk_offsets[ci] {
+                return Err(invalid(format!(
+                    "layer {li} chunk {ci}: width disagrees with chunk offsets"
+                )));
+            }
+            let rows = c.u64v()? as usize;
+            let ptr = c.u64v()? as usize;
+            let idx = c.u64v()? as usize;
+            let val = c.u64v()? as usize;
+            let qval = c.u64v()? as usize;
+            let shape_ok = match storage {
+                ChunkStorage::Merged => {
+                    rows == 0 && ptr == 0 && idx == 0 && val == 0 && qval == 0
+                }
+                ChunkStorage::DenseRows => {
+                    rows == 0 && ptr == dim + 1 && val == idx && qval == 0
+                }
+                ChunkStorage::Csc => ptr == rows + 1 && val == idx && qval == 0,
+                ChunkStorage::F16 => ptr == rows + 1 && val == 0 && qval == 2 * idx,
+                ChunkStorage::Int8 => ptr == rows + 1 && val == 0 && qval == idx,
+            };
+            if !shape_ok {
+                return Err(invalid(format!(
+                    "layer {li} chunk {ci}: array lengths do not fit the {} layout",
+                    storage.short()
+                )));
+            }
+            let scale_ok = if storage == ChunkStorage::Int8 {
+                scale.is_finite() && scale > 0.0
+            } else {
+                scale == 1.0
+            };
+            if !scale_ok {
+                return Err(invalid(format!(
+                    "layer {li} chunk {ci}: bad quantization scale {scale}"
+                )));
+            }
+            let row_indices = c.arr::<u32>(rows)?;
+            let row_ptr = c.arr::<u32>(ptr)?;
+            let col_idx = c.arr::<u16>(idx)?;
+            let values = c.arr::<f32>(val)?;
+            let qvalues = c.arr::<u8>(qval)?;
+            chunks.push(Chunk {
+                ncols,
+                storage,
+                row_indices,
+                row_ptr,
+                col_idx,
+                values,
+                qvalues,
+                scale,
+                row_map: None,
+                merged_slot,
+            });
+        }
+        let merged = match c.u64v()? {
+            0 => None,
+            1 => {
+                let num_spans = c.u64v()? as usize;
+                let rows_start = c.u32_vec(num_spans)?;
+                let span_rows = c.u32_vec(num_spans)?;
+                let ptr_start = c.u32_vec(num_spans)?;
+                let spans: Vec<(u32, u32, u32)> = rows_start
+                    .into_iter()
+                    .zip(span_rows)
+                    .zip(ptr_start)
+                    .map(|((a, b), p)| (a, b, p))
+                    .collect();
+                let rl = c.u64v()? as usize;
+                let pl = c.u64v()? as usize;
+                let il = c.u64v()? as usize;
+                let vl = c.u64v()? as usize;
+                if il != vl {
+                    return Err(invalid(format!(
+                        "layer {li}: merged-store array lengths disagree"
+                    )));
+                }
+                let ri = c.arr::<u32>(rl)?;
+                let rp = c.arr::<u32>(pl)?;
+                let cidx = c.arr::<u16>(il)?;
+                let va = c.arr::<f32>(vl)?;
+                Some(Box::new(MergedStore::from_raw(spans, ri, rp, cidx, va)))
+            }
+            v => return Err(invalid(format!("layer {li}: bad merged-store flag {v}"))),
+        };
+        let num_spans = merged.as_ref().map(|m| m.num_spans()).unwrap_or(0);
+        for (ci, chunk) in chunks.iter().enumerate() {
+            if chunk.storage == ChunkStorage::Merged && chunk.merged_slot as usize >= num_spans {
+                return Err(invalid(format!(
+                    "layer {li} chunk {ci}: merged span slot out of range"
+                )));
+            }
+        }
+        let chunked = ChunkedMatrix {
+            rows: dim,
+            cols,
+            chunk_offsets,
+            chunks,
+            merged,
+        };
+        // V4 carries no CSC section: install the stub (right shape, no
+        // entries). `InferenceEngine::new_with_plan` hydrates real
+        // columns from the chunked side iff the baseline algo runs.
+        let csc = CscMatrix {
+            rows: dim,
+            cols,
+            indptr: vec![0; cols + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        };
+        layers.push(Layer::from_parts(csc, chunked));
+    }
+    let mut model = XmrModel::new(dim, layers);
+    if with_row_maps {
+        // Side indices always live on the heap, even over a mapping.
+        model.build_row_maps();
+    }
+    let algo = match c.u64v()? {
+        1 => MatmulAlgo::Mscm,
+        2 => MatmulAlgo::Baseline,
+        v => {
+            return Err(invalid(format!(
+                "an MSCMXMR4 shard must carry a kernel plan (bad flag {v})"
+            )))
+        }
+    };
+    let plan = read_plan(&mut c, depth, true)?;
+    if c.pos != c.buf.len() {
+        return Err(invalid("trailing bytes after the shard payload"));
+    }
+    let shard = ShardModel {
+        spec,
+        layer_offsets,
+        model,
+        plan: Some((algo, plan)),
+    };
+    validate_shard(&shard, depth)?;
+    Ok(shard)
+}
+
+/// A read-only, process-lifetime memory map of one `MSCMXMR4` shard
+/// file — the dependency-free mmap wrapper the zero-copy loader builds
+/// on. The mapping is intentionally never unmapped (models live for the
+/// process), which is what makes handing out `'static` slices and
+/// pointer-copy clones of [`Arr::Mapped`] sound.
+pub struct MmapModel {
+    base: *const u8,
+    len: usize,
+}
+
+// Safety: the mapping is immutable (PROT_READ, MAP_PRIVATE), never
+// written and never unmapped; sharing the base pointer across threads
+// is reading shared immutable memory.
+unsafe impl Send for MmapModel {}
+unsafe impl Sync for MmapModel {}
+
+#[cfg(all(unix, target_endian = "little"))]
+mod mmap_sys {
+    //! Raw `mmap(2)` binding — no libc crate in the dependency budget.
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+    }
+}
+
+impl MmapModel {
+    /// Maps `path` read-only for the life of the process. Errors on
+    /// empty files, OS mapping failures, and (at compile time via the
+    /// heap fallback in [`load_shard_mmap`]) on targets without the
+    /// mmap path (non-unix or big-endian).
+    #[cfg(all(unix, target_endian = "little"))]
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(invalid("cannot map an empty shard file"));
+        }
+        let len = usize::try_from(len).map_err(|_| invalid("shard file exceeds address space"))?;
+        let ptr = unsafe {
+            mmap_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                mmap_sys::PROT_READ,
+                mmap_sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        // `file` closes here; the mapping survives the fd by POSIX.
+        Ok(MmapModel {
+            base: ptr as *const u8,
+            len,
+        })
+    }
+
+    /// Unsupported-target stub: the zero-copy path needs unix `mmap`
+    /// and a little-endian layout; callers fall back to the heap parse.
+    #[cfg(not(all(unix, target_endian = "little")))]
+    pub fn open(_path: impl AsRef<Path>) -> io::Result<Self> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "memory-mapped shards need a little-endian unix target",
+        ))
+    }
+
+    /// The mapped file image. `'static` because the mapping is never
+    /// torn down.
+    pub fn bytes(&self) -> &'static [u8] {
+        // Safety: base/len describe a live, never-unmapped PROT_READ
+        // mapping.
+        unsafe { std::slice::from_raw_parts(self.base, self.len) }
+    }
+
+    /// Size of the backing file image in bytes — what the OS pages in
+    /// on demand instead of the heap holding it (the residency bound
+    /// `rust/tests/quant.rs` pins the mmap path against).
+    pub fn file_bytes(&self) -> u64 {
+        self.len as u64
+    }
+}
+
+/// Loads a `MSCMXMR4` shard through a read-only memory map: weight
+/// arrays stay borrowed from the page cache ([`Arr::Mapped`]) and only
+/// chunk/layer scaffolding (plus hash row maps, when requested) touches
+/// the heap — hosts serve models larger than RAM with unchanged
+/// kernels. On targets without the mmap path this transparently falls
+/// back to the heap parse of the same bytes.
+pub fn load_shard_mmap(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<ShardModel> {
+    #[cfg(all(unix, target_endian = "little"))]
+    {
+        let map = MmapModel::open(&path)?;
+        read_shard_v4(map.bytes(), true, with_row_maps)
+    }
+    #[cfg(not(all(unix, target_endian = "little")))]
+    {
+        let buf = std::fs::read(&path)?;
+        read_shard_v4(&buf, false, with_row_maps)
+    }
+}
+
+/// Whether `MSCM_FORCE_MMAP=1` routes V4 loads through the mapped path
+/// (the CI leg that runs the whole suite over borrowed weight arrays).
+fn force_mmap() -> bool {
+    std::env::var("MSCM_FORCE_MMAP").map(|v| v == "1").unwrap_or(false)
 }
 
 /// Reads the trailing kernel-plan section (`depth` layer rows). V3 rows
@@ -153,10 +826,20 @@ fn read_plan(r: &mut impl Read, depth: usize, with_storage: bool) -> io::Result<
 }
 
 /// Loads one shard from `path` (hash row maps rebuilt when
-/// `with_row_maps`), validating header/body consistency.
+/// `with_row_maps`), validating header/body consistency. Handles every
+/// envelope version; `MSCMXMR4` files parse onto the heap by default
+/// and through [`load_shard_mmap`] when `MSCM_FORCE_MMAP=1`.
 pub fn load_shard(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<ShardModel> {
     let mut r = BufReader::new(std::fs::File::open(&path)?);
     let legacy = match read_u64(&mut r)? {
+        SHARD_MAGIC_V4 => {
+            drop(r);
+            if force_mmap() {
+                return load_shard_mmap(&path, with_row_maps);
+            }
+            let buf = std::fs::read(&path)?;
+            return read_shard_v4(&buf, false, with_row_maps);
+        }
         SHARD_MAGIC => false,
         SHARD_MAGIC_V2 => true,
         _ => return Err(invalid("not an MSCM-XMR shard file")),
@@ -190,41 +873,14 @@ pub fn load_shard(path: impl AsRef<Path>, with_row_maps: bool) -> io::Result<Sha
             return Err(invalid("trailing bytes after the shard payload"));
         }
     }
-    if let Some((_, p)) = &plan {
-        if !p.matches(&model) {
-            return Err(invalid("stored kernel plan does not fit the model body"));
-        }
-    }
-    if spec.shard_id >= spec.num_shards {
-        return Err(invalid(format!(
-            "shard id {} out of range for {} shards",
-            spec.shard_id, spec.num_shards
-        )));
-    }
-    if spec.root_hi < spec.root_lo {
-        return Err(invalid("shard root-child range is inverted"));
-    }
-    if model.depth() != depth {
-        return Err(invalid("shard header depth disagrees with model body"));
-    }
-    if model.num_labels() as u64 != spec.num_labels {
-        return Err(invalid("shard label count disagrees with model body"));
-    }
-    if layer_offsets.last().copied().unwrap_or(0) as u64 != spec.label_offset {
-        return Err(invalid("shard label offset disagrees with layer offsets"));
-    }
-    if layer_offsets.first().copied().unwrap_or(0) != spec.root_lo {
-        return Err(invalid("shard root offset disagrees with layer offsets"));
-    }
-    if model.layers[0].num_nodes() as u64 != (spec.root_hi - spec.root_lo) as u64 {
-        return Err(invalid("shard root-child range disagrees with model body"));
-    }
-    Ok(ShardModel {
+    let shard = ShardModel {
         spec,
         layer_offsets,
         model,
         plan,
-    })
+    };
+    validate_shard(&shard, depth)?;
+    Ok(shard)
 }
 
 /// Canonical file name of shard `id` in an `num_shards`-way partition.
@@ -512,6 +1168,62 @@ mod tests {
         std::fs::remove_file(shard_file_name(&dir, 2, 4)).unwrap();
         let err = load_shards(&dir, false).unwrap_err();
         assert!(err.to_string().contains("incomplete"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v4_round_trip_heap_and_mmap() {
+        use crate::inference::PlannerConfig;
+        let m = tiny_model(20, 4, 3, 25);
+        let mut shards = partition(&m, 2);
+        for s in &mut shards {
+            s.plan_auto(MatmulAlgo::Mscm, &PlannerConfig::default());
+        }
+        let dir = crate::util::temp_dir("shard-io-v4");
+        std::fs::create_dir_all(&dir).unwrap();
+        for s in &shards {
+            let path = shard_file_name(&dir, s.spec.shard_id, s.spec.num_shards);
+            save_shard_v4(s, &path).unwrap();
+            let heap = load_shard(&path, true).unwrap();
+            assert_eq!(heap.spec, s.spec);
+            assert_eq!(heap.plan, s.plan);
+            let (_, plan) = heap.plan.as_ref().unwrap();
+            for (li, layer) in heap.model.layers.iter().enumerate() {
+                // no CSC section in a V4 file: the stub stands in
+                assert_eq!(layer.csc.nnz(), 0);
+                for (c, chunk) in layer.chunked.chunks.iter().enumerate() {
+                    assert_eq!(chunk.storage, plan.layer_storage(li)[c], "layer {li} chunk {c}");
+                }
+            }
+            // the mapped load parses the same bytes to the same model
+            let mapped = load_shard_mmap(&path, true).unwrap();
+            assert_eq!(mapped.spec, heap.spec);
+            assert_eq!(mapped.plan, heap.plan);
+            for (la, lb) in mapped.model.layers.iter().zip(&heap.model.layers) {
+                assert_eq!(la.chunked.chunk_offsets, lb.chunked.chunk_offsets);
+                for (ca, cb) in la.chunked.chunks.iter().zip(&lb.chunked.chunks) {
+                    assert_eq!(ca.storage, cb.storage);
+                    assert_eq!(ca.ncols, cb.ncols);
+                    assert_eq!(ca.row_indices, cb.row_indices);
+                    assert_eq!(ca.row_ptr, cb.row_ptr);
+                    assert_eq!(ca.col_idx, cb.col_idx);
+                    assert_eq!(ca.values, cb.values);
+                    assert_eq!(ca.qvalues, cb.qvalues);
+                    assert_eq!(ca.scale, cb.scale);
+                }
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v4_requires_a_plan() {
+        let m = tiny_model(16, 3, 2, 26);
+        let shards = partition(&m, 2);
+        let dir = crate::util::temp_dir("shard-io-v4-noplan");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = save_shard_v4(&shards[0], dir.join("s.bin")).unwrap_err();
+        assert!(err.to_string().contains("kernel plan"), "{err}");
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -12,7 +12,13 @@
 //!   [`ShardModel`]s — each wraps a self-contained `XmrModel` over a
 //!   contiguous root-child range plus the remap back to global ids. Cuts
 //!   are balanced by per-subtree weight nnz ([`subtree_nnz`]) rather than
-//!   root-child count, so shard residency stays even on skewed trees.
+//!   root-child count, so shard residency stays even on skewed trees;
+//!   [`partition_planned`] balances by **planned resident bytes**
+//!   ([`subtree_weight_bytes`]) instead — under a resolved plan, nnz is
+//!   no longer proportional to bytes (a `DenseRows` chunk pays `d + 1`
+//!   pointer slots, a quantized chunk a quarter the payload), and the
+//!   byte-weighted cuts keep per-machine residency even where nnz cuts
+//!   drift.
 //!   Each shard optionally carries its own resolved
 //!   [`KernelPlan`](crate::inference::KernelPlan)
 //!   ([`ShardModel::plan_auto`]) — plans are per-shard, computed over the
@@ -28,6 +34,18 @@
 //!   each chunk's method *and* storage layout
 //!   ([`crate::sparse::ChunkStorage`]); legacy `MSCMXMR2` files load as
 //!   all-CSC).
+//! - [`save_shard_v4`] writes the **layout-resolved** `MSCMXMR4`
+//!   envelope: every chunk serialized in its *planned* physical layout
+//!   (quantized payloads included), weight arrays 64-byte-aligned so the
+//!   file doubles as an in-memory image. [`load_shard`] reads V4
+//!   transparently (heap parse); [`load_shard_mmap`] serves the same
+//!   file zero-copy off a private read-only mapping ([`MmapModel`] —
+//!   raw `mmap(2)`, no libc crate), pinning only per-chunk structs on
+//!   the heap while the weight bytes stay in the page cache. Exact
+//!   layouts serve bitwise-identically either way; `MSCM_FORCE_MMAP=1`
+//!   routes every V4 `load_shard` through the mapping (the CI leg).
+//!   Byte layout and validation rules are specified in the `io` module
+//!   docs and fuzzed by `rust/tests/format.rs`.
 //! - [`ShardedEngine`] runs a query against every shard and merges the
 //!   results; [`ShardedCoordinator`] serves it with dynamic batching,
 //!   per-shard worker pools (each worker holding its own
@@ -185,7 +203,12 @@
 //! **Deadline budgets** ([`RemoteConfig::deadline`](remote::RemoteConfig)):
 //! a per-batch budget caps every round read, reconnect and backoff sleep;
 //! when it runs out the batch fails with `TimedOut` rather than retrying
-//! further, so no batch outlives its budget.
+//! further, so no batch outlives its budget. An *exhausted* budget is
+//! distinguished from the `Duration::ZERO` "no deadline" config
+//! sentinel: a remaining budget that computes to zero surfaces as
+//! `TimedOut` rather than being passed on as a zero socket timeout
+//! (which `std` reads as *unbounded* — the collision `rust/tests/chaos.rs`
+//! pins against).
 //!
 //! **Degraded-mode contract**
 //! ([`RemoteConfig::allow_partial`](remote::RemoteConfig)): by default a
@@ -217,8 +240,13 @@ pub mod wire;
 
 pub use engine::{GatherArena, ShardRound, ShardedEngine};
 pub use fault::{ConnSchedule, FaultInjector, FaultPlan};
-pub use io::{load_shard, load_shards, save_shard, save_shards, shard_file_name};
-pub use partition::{partition, subtree_nnz, ShardModel, ShardSpec};
+pub use io::{
+    load_shard, load_shard_mmap, load_shards, save_shard, save_shard_v4, save_shards,
+    shard_file_name, MmapModel,
+};
+pub use partition::{
+    partition, partition_planned, subtree_nnz, subtree_weight_bytes, ShardModel, ShardSpec,
+};
 pub use remote::{
     discover, poll_stats, poll_traces, RemoteConfig, RemoteCoordinatorConfig, RemoteGather,
     RemoteShardedCoordinator, RemoteStats, ReplicaPhase, ShardHost, ShardHostConfig,

@@ -1,13 +1,19 @@
 //! Model partitioning: contiguous root-subtree groups → standalone shard
 //! models plus the remap back to the global id spaces.
 //!
-//! Cuts are placed by **per-subtree weight nnz** (the bytes a shard must
-//! keep resident), not by root-child count: on skewed trees a count-even
-//! split can leave one shard holding most of the model. The weighted cut
-//! changes only *where* the contiguous boundaries fall — every exactness
+//! Cuts are placed by **per-subtree residency weight**, not by
+//! root-child count: on skewed trees a count-even split can leave one
+//! shard holding most of the model. [`partition`] weighs subtrees by
+//! weight nnz; [`partition_planned`] weighs them by the **bytes the
+//! planned storage layouts actually keep resident**
+//! ([`subtree_weight_bytes`]) — under quantized (`F16`/`Int8`) or
+//! dense-rows layouts, equal nnz is far from equal bytes, and the byte
+//! weighting is what keeps per-host memory even. Either weighting only
+//! changes *where* the contiguous boundaries fall — every exactness
 //! argument of [`crate::shard`] is boundary-agnostic.
 
 use crate::inference::{KernelPlan, MatmulAlgo, PlannerConfig};
+use crate::sparse::{ChunkStats, ChunkStorage};
 use crate::tree::{Layer, XmrModel};
 
 /// Identity of one shard within a partition.
@@ -97,6 +103,65 @@ pub fn subtree_nnz(model: &XmrModel) -> Vec<u64> {
         .collect()
 }
 
+/// Resident bytes of one chunk's weight arrays under `storage`,
+/// computed from structural stats alone — the planned-layout analogue
+/// of `Chunk::weight_bytes`, usable *before* the layout is applied.
+fn layout_weight_bytes(storage: ChunkStorage, stats: &ChunkStats, dim: usize) -> u64 {
+    let rows = stats.rows as u64;
+    let nnz = stats.nnz as u64;
+    match storage {
+        // row_indices (4B) + row_ptr (4B, rows+1) + col_idx (2B) +
+        // values (4B)
+        ChunkStorage::Csc => rows * 8 + 4 + nnz * 6,
+        // row_ptr indexed by row id (d+1 entries); no row_indices
+        ChunkStorage::DenseRows => 4 * (dim as u64 + 1) + nnz * 6,
+        // Csc arrays in the shared store plus a 12-byte span entry
+        ChunkStorage::Merged => 12 + rows * 8 + 4 + nnz * 6,
+        // Csc scaffolding, 2-byte packed values instead of 4-byte f32
+        ChunkStorage::F16 => rows * 8 + 4 + nnz * 4,
+        // Csc scaffolding, 1-byte values plus the dequantization scale
+        ChunkStorage::Int8 => rows * 8 + 4 + nnz * 3 + 4,
+    }
+}
+
+/// Bytes each root child's whole subtree keeps resident under the
+/// planned storage layouts (`plan`; `None` reads each chunk's current
+/// layout — all-`Csc` on freshly built models). Layer 0 is one chunk
+/// shared by every subtree, so its bytes are attributed per entry.
+pub fn subtree_weight_bytes(model: &XmrModel, plan: Option<&KernelPlan>) -> Vec<u64> {
+    let root_children = model.layers[0].num_nodes();
+    let dim = model.dim;
+    (0..root_children)
+        .map(|r| {
+            let (mut lo, mut hi) = (r, r + 1);
+            let mut total = 0u64;
+            for (li, layer) in model.layers.iter().enumerate() {
+                if li == 0 {
+                    // 6 bytes per stored entry (col_idx + value); the
+                    // shared chunk scaffolding is not attributable.
+                    total += 6 * (layer.csc.indptr[hi] - layer.csc.indptr[lo]) as u64;
+                    continue;
+                }
+                // Chunks of layer `li` are one per node of layer
+                // `li - 1`: the subtree owns chunk ids `lo..hi` and its
+                // node range advances to their column span.
+                let offs = &layer.chunked.chunk_offsets;
+                let (c0, c1) = (offs[lo] as usize, offs[hi] as usize);
+                for c in lo..hi {
+                    let stats = layer.chunked.chunk_stats(c);
+                    let storage = match plan {
+                        Some(p) => p.layer_storage(li)[c],
+                        None => layer.chunked.chunks[c].storage,
+                    };
+                    total += layout_weight_bytes(storage, &stats, dim);
+                }
+                (lo, hi) = (c0, c1);
+            }
+            total
+        })
+        .collect()
+}
+
 /// Contiguous cuts of `weights.len()` items into `parts` groups with
 /// near-equal weight sums: boundary `p` is the first index where the
 /// cumulative weight reaches `p/parts` of the total, clamped so every
@@ -146,6 +211,33 @@ pub fn partition(model: &XmrModel, num_shards: usize) -> Vec<ShardModel> {
     let root_children = model.layers[0].num_nodes();
     let s = num_shards.min(root_children);
     let bounds = balanced_cuts(&subtree_nnz(model), s);
+    partition_at(model, &bounds)
+}
+
+/// [`partition`], but balanced by the bytes each subtree keeps
+/// resident under `plan`'s storage layouts ([`subtree_weight_bytes`])
+/// instead of raw weight nnz. With quantized or dense-rows layouts in
+/// the plan the two weightings diverge, and this is the one that keeps
+/// per-host memory even. `plan` must be a plan over the **global**
+/// model (`shard --iter auto` resolves one before cutting); per-shard
+/// plans are still re-resolved per shard afterwards.
+pub fn partition_planned(
+    model: &XmrModel,
+    num_shards: usize,
+    plan: &KernelPlan,
+) -> Vec<ShardModel> {
+    assert!(num_shards >= 1, "need at least one shard");
+    let root_children = model.layers[0].num_nodes();
+    let s = num_shards.min(root_children);
+    let bounds = balanced_cuts(&subtree_weight_bytes(model, Some(plan)), s);
+    partition_at(model, &bounds)
+}
+
+/// Builds the standalone shard models for the given root-child cut
+/// boundaries (the shared back half of [`partition`] /
+/// [`partition_planned`]).
+fn partition_at(model: &XmrModel, bounds: &[u32]) -> Vec<ShardModel> {
+    let s = bounds.len() - 1;
     let mut shards = Vec::with_capacity(s);
     for i in 0..s {
         // Node range of the previous layer, driving this layer's chunk
@@ -295,6 +387,55 @@ mod tests {
         let total: u64 = w.iter().sum();
         let model_total: u64 = m.layers.iter().map(|l| l.csc.nnz() as u64).sum();
         assert_eq!(total, model_total);
+    }
+
+    #[test]
+    fn planned_partition_balances_resident_bytes() {
+        use crate::inference::IterationMethod;
+        // 16 root children; quantize everything under the first half of
+        // the tree to Int8, so equal nnz is very unequal bytes.
+        let m = tiny_model(24, 16, 2, 41);
+        let mut plan = KernelPlan::uniform(&m, IterationMethod::MarchingPointers);
+        for li in 1..m.depth() {
+            let n = plan.layers[li].storage.len();
+            for c in 0..n / 2 {
+                plan.layers[li].storage[c] = ChunkStorage::Int8;
+            }
+        }
+        let w = subtree_weight_bytes(&m, Some(&plan));
+        assert_eq!(w.len(), 16);
+        // plan-free weights over a built (all-Csc) model read the
+        // chunks' own layout: heavier than the half-quantized plan
+        let w_csc = subtree_weight_bytes(&m, None);
+        assert!(w.iter().zip(&w_csc).take(8).all(|(a, b)| a < b));
+        assert!(w.iter().zip(&w_csc).skip(8).all(|(a, b)| a == b));
+        let s = 4usize;
+        let bytes_of = |shards: &[ShardModel]| -> Vec<u64> {
+            shards
+                .iter()
+                .map(|sh| {
+                    w[sh.spec.root_lo as usize..sh.spec.root_hi as usize]
+                        .iter()
+                        .sum()
+                })
+                .collect()
+        };
+        let ratio = |g: &[u64]| -> f64 {
+            let max = *g.iter().max().unwrap() as f64;
+            let min = *g.iter().min().unwrap() as f64;
+            max / min.max(1.0)
+        };
+        let by_nnz = ratio(&bytes_of(&partition(&m, s)));
+        let planned_shards = partition_planned(&m, s, &plan);
+        let by_bytes = ratio(&bytes_of(&planned_shards));
+        assert!(
+            by_bytes < by_nnz * 0.9,
+            "planned cut must balance planned bytes: {by_bytes:.3} vs nnz-cut {by_nnz:.3} (w={w:?})"
+        );
+        // still a complete, contiguous partition
+        assert_eq!(planned_shards.len(), s);
+        let labels: u64 = planned_shards.iter().map(|sh| sh.spec.num_labels).sum();
+        assert_eq!(labels as usize, m.num_labels());
     }
 
     #[test]

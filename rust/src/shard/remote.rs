@@ -715,15 +715,45 @@ fn nonzero(d: Duration) -> Option<Duration> {
     (d > Duration::ZERO).then_some(d)
 }
 
+/// What remains of the batch deadline, with exhaustion surfaced as an
+/// error instead of a duration. `RemoteConfig` timeouts use
+/// `Duration::ZERO` as the "disabled" sentinel, and a remaining budget
+/// that clips to exactly zero would alias into that sentinel downstream
+/// (a zero "timeout" reading as *no* timeout — an expired deadline
+/// turned into an unbounded wait). Budget exhaustion must therefore
+/// fail the batch with `TimedOut` *before* any further socket op, never
+/// flow onward as a `Duration`.
+fn checked_budget(deadline: Option<Instant>) -> io::Result<Option<Duration>> {
+    match deadline {
+        None => Ok(None),
+        Some(d) => {
+            let rem = d.saturating_duration_since(Instant::now());
+            if rem.is_zero() {
+                Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "batch deadline exhausted",
+                ))
+            } else {
+                Ok(Some(rem))
+            }
+        }
+    }
+}
+
 /// Socket timeout for one round: the configured round timeout capped by
-/// what remains of the batch deadline (`None` = unbounded).
-fn effective_timeout(round_timeout: Duration, deadline: Option<Instant>) -> Option<Duration> {
-    let rem = deadline.map(|d| d.saturating_duration_since(Instant::now()));
-    match (nonzero(round_timeout), rem) {
+/// what remains of the batch deadline (`None` = unbounded). Fails with
+/// `TimedOut` when the budget is already spent ([`checked_budget`]) so
+/// an exhausted deadline can never read as "no timeout".
+fn effective_timeout(
+    round_timeout: Duration,
+    deadline: Option<Instant>,
+) -> io::Result<Option<Duration>> {
+    let rem = checked_budget(deadline)?;
+    Ok(match (nonzero(round_timeout), rem) {
         (Some(b), Some(r)) => Some(b.min(r)),
         (Some(b), None) => Some(b),
         (None, r) => r,
-    }
+    })
 }
 
 /// Transport-level serving statistics, shared by every gather worker of
@@ -1104,7 +1134,10 @@ impl RemoteShard {
             return Ok(());
         }
         let addr = self.active_addr();
-        let budget = deadline.map(|d| d.saturating_duration_since(Instant::now()));
+        // An exhausted budget errs here, before the connect: a zero
+        // remainder must not alias into the "no connect timeout"
+        // sentinel and wait unboundedly.
+        let budget = checked_budget(deadline)?;
         let (conn, info) = Self::connect_with(addr, cfg, budget)?;
         if info != self.info {
             return Err(invalid(format!(
@@ -1137,9 +1170,17 @@ impl RemoteShard {
     }
 
     /// Best-effort scatter: write the retained `tx` frame on the active
-    /// connection. Failures are absorbed silently — [`RemoteShard::recv`]
-    /// runs the full failover loop.
+    /// connection, armed with the effective timeout so the write itself
+    /// is bounded by the deadline remainder (a paused peer with full
+    /// socket buffers must not stall a batch past its budget, even with
+    /// the round timeout disabled). An exhausted budget does **no**
+    /// socket op at all — [`RemoteShard::recv`] fails the batch with the
+    /// deadline error. Other failures are absorbed silently; `recv` runs
+    /// the full failover loop.
     fn send(&mut self, cfg: &RemoteConfig, deadline: Option<Instant>) {
+        let Ok(eff) = effective_timeout(cfg.round_timeout, deadline) else {
+            return;
+        };
         if self.ensure_conn(cfg, deadline).is_err() {
             return;
         }
@@ -1153,7 +1194,7 @@ impl RemoteShard {
             .conn
             .as_mut()
             .expect("connection just ensured");
-        if conn.w.write_all(&self.tx).is_err() {
+        if conn.set_timeouts(eff).is_err() || conn.w.write_all(&self.tx).is_err() {
             self.replicas[self.active].conn = None;
         }
     }
@@ -1163,6 +1204,9 @@ impl RemoteShard {
     /// the retained frame, read the reply. Success resets the replica's
     /// failure count and feeds its latency EWMA.
     fn try_round(&mut self, cfg: &RemoteConfig, deadline: Option<Instant>) -> io::Result<MsgType> {
+        // Budget check first: exhaustion must fail before the connect or
+        // any other socket op ([`checked_budget`]).
+        let eff = effective_timeout(cfg.round_timeout, deadline)?;
         self.ensure_conn(cfg, deadline)?;
         if let Some(f) = &cfg.faults {
             let d = f.client_send_delay();
@@ -1180,7 +1224,7 @@ impl RemoteShard {
                 .conn
                 .as_mut()
                 .expect("connection just ensured");
-            conn.set_timeouts(effective_timeout(cfg.round_timeout, deadline))?;
+            conn.set_timeouts(eff)?;
             conn.w.write_all(tx)?;
             wire::read_frame(&mut conn.r, rx)?
         };
@@ -1219,6 +1263,15 @@ impl RemoteShard {
                 Ok(ty) => return Ok(ty),
                 Err(e) => {
                     last = Some((addr, e));
+                    // Distinguish budget expiry from replica failure
+                    // *before* penalizing anyone: a round that died only
+                    // because the deadline ran out mid-attempt must not
+                    // bump the replica's failure count, open its
+                    // circuit, or count as a failover — the replica may
+                    // be perfectly healthy.
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        return Err(deadline_error(attempts, &last));
+                    }
                     let all_ejected = self.fail_over(cfg, stats);
                     let mut pause = match all_ejected {
                         Some(wait) => wait.min(cfg.eject_cooldown_cap.max(cfg.eject_cooldown)),
@@ -1256,7 +1309,7 @@ impl RemoteShard {
         hedge_after: Option<Duration>,
     ) -> io::Result<MsgType> {
         if self.replicas[self.active].conn.is_some() {
-            let base = effective_timeout(cfg.round_timeout, deadline);
+            let base = effective_timeout(cfg.round_timeout, deadline)?;
             let (first, hedged) = match (hedge_after, base) {
                 (Some(h), Some(b)) => (Some(h.min(b)), h < b),
                 (Some(h), None) => (Some(h), true),
@@ -1277,6 +1330,16 @@ impl RemoteShard {
                     return Ok(ty);
                 }
                 Err(e) => {
+                    // Budget expiry is not a replica failure: if the
+                    // read died because the batch deadline ran out,
+                    // surface `deadline_error` without penalizing the
+                    // (possibly healthy) replica — the caller drops
+                    // every connection on error, so skipping
+                    // `fail_over` leaves no desynced stream behind.
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        let last = Some((self.replicas[self.active].addr, e));
+                        return Err(deadline_error(1, &last));
+                    }
                     // A timeout mid-frame leaves the stream desynced and
                     // any read error poisons it: drop the connection
                     // either way and re-issue elsewhere.

@@ -15,7 +15,7 @@
 //!
 //! # Storage layouts ([`ChunkStorage`])
 //!
-//! The row-sparse layout above ([`ChunkStorage::Csc`]) is one of three
+//! The row-sparse layout above ([`ChunkStorage::Csc`]) is one of five
 //! physical layouts a chunk may use; the kernel plan
 //! ([`crate::inference::plan`]) picks one per chunk from the same cost
 //! model that picks the kernels:
@@ -30,13 +30,33 @@
 //!   arrays are coalesced into the layer's shared [`MergedStore`] with a
 //!   sub-chunk span table, removing the per-chunk `Vec` overhead and
 //!   putting adjacent tiny chunks contiguous in memory.
+//! - [`ChunkStorage::F16`] / [`ChunkStorage::Int8`] — **approximate**
+//!   quantized layouts for the 100M-label memory regime: the chunk keeps
+//!   its exact `Csc` structure (`row_indices`/`row_ptr`/`col_idx`) but
+//!   stores values as packed little-endian f16 pairs or as `i8` against a
+//!   per-chunk `scale` (`max |v| / 127`), shrinking the value payload 2x
+//!   and 4x. They are only ever chosen under the planner's explicit
+//!   `--approx` flag; kernels consume them by dequantizing into the
+//!   workspace's `dequant` arena ([`Chunk::dequantize_into`]) and running
+//!   the ordinary `Csc` kernels over the reconstructed values, so the
+//!   only deviation from exact serving is the value rounding itself
+//!   (bounded, property-tested in `rust/tests/quant.rs`).
 //!
 //! Kernels never touch `Chunk` fields directly — they consume a
 //! [`ChunkView`] resolved by [`ChunkedMatrix::view`], which presents every
-//! layout through one slice-based interface. All layouts hold the exact
-//! same entries in the exact same per-row order, so every layout is
-//! bitwise identical to `Csc` under every kernel (property-tested in
-//! `rust/tests/layout.rs`).
+//! layout through one slice-based interface. All **exact** layouts hold
+//! the exact same entries in the exact same per-row order, so every exact
+//! layout is bitwise identical to `Csc` under every kernel
+//! (property-tested in `rust/tests/layout.rs`).
+//!
+//! # Borrowed backing storage ([`Arr`])
+//!
+//! Every weight array is an [`Arr`]: either an owned `Vec` (models built
+//! or loaded on the heap) or a borrowed slice of a memory-mapped
+//! `MSCMXMR4` shard file ([`crate::shard::MmapModel`]) — the kernels read
+//! through `Deref<Target = [T]>` either way and cannot tell the
+//! difference, which is what lets a host serve models larger than RAM
+//! with zero per-chunk copies.
 
 use super::csc::CscMatrix;
 use super::hashmap::U32Map;
@@ -56,29 +76,65 @@ pub enum ChunkStorage {
     /// Coalesced into the matrix's shared [`MergedStore`]; the chunk
     /// itself keeps only its span slot.
     Merged,
+    /// Approximate: `Csc` structure, values packed as little-endian f16
+    /// pairs in `qvalues` (2 bytes/entry). `--approx` only.
+    F16,
+    /// Approximate: `Csc` structure, values stored as `i8` against the
+    /// per-chunk `scale` (1 byte/entry). `--approx` only.
+    Int8,
 }
 
 impl ChunkStorage {
-    /// All layouts, in serialization order.
+    /// The **exact** layouts, in serialization order — the set every
+    /// structural invariant (kernel classes, trace histograms, layout
+    /// sweeps) iterates. The quantized layouts run the `Csc`-shaped
+    /// kernels over dequantized values, so they add no new kernel class;
+    /// use [`ChunkStorage::EVERY`] where all five serialization codes
+    /// matter.
     pub const ALL: [ChunkStorage; 3] = [
         ChunkStorage::Csc,
         ChunkStorage::DenseRows,
         ChunkStorage::Merged,
     ];
 
-    /// Histogram/serialization index (0..3).
+    /// Every layout — exact and quantized — in serialization order.
+    pub const EVERY: [ChunkStorage; 5] = [
+        ChunkStorage::Csc,
+        ChunkStorage::DenseRows,
+        ChunkStorage::Merged,
+        ChunkStorage::F16,
+        ChunkStorage::Int8,
+    ];
+
+    /// Histogram/serialization index (0..5).
     #[inline]
     pub fn index(&self) -> usize {
         match self {
             ChunkStorage::Csc => 0,
             ChunkStorage::DenseRows => 1,
             ChunkStorage::Merged => 2,
+            ChunkStorage::F16 => 3,
+            ChunkStorage::Int8 => 4,
         }
     }
 
     /// Inverse of [`ChunkStorage::index`] (envelope deserialization).
     pub fn from_index(i: usize) -> Option<ChunkStorage> {
-        ChunkStorage::ALL.get(i).copied()
+        match i {
+            0 => Some(ChunkStorage::Csc),
+            1 => Some(ChunkStorage::DenseRows),
+            2 => Some(ChunkStorage::Merged),
+            3 => Some(ChunkStorage::F16),
+            4 => Some(ChunkStorage::Int8),
+            _ => None,
+        }
+    }
+
+    /// Whether this layout stores rounded values ([`ChunkStorage::F16`] /
+    /// [`ChunkStorage::Int8`]) instead of the exact f32 payload.
+    #[inline]
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, ChunkStorage::F16 | ChunkStorage::Int8)
     }
 
     /// Compact name for layout histograms.
@@ -87,8 +143,176 @@ impl ChunkStorage {
             ChunkStorage::Csc => "csc",
             ChunkStorage::DenseRows => "dense-rows",
             ChunkStorage::Merged => "merged",
+            ChunkStorage::F16 => "f16",
+            ChunkStorage::Int8 => "int8",
         }
     }
+}
+
+// =====================================================================
+// Backing storage: owned or memory-mapped
+// =====================================================================
+
+/// A weight array that is either heap-owned or a borrowed slice of a
+/// leaked, read-only, process-lifetime memory mapping (the `MSCMXMR4`
+/// mmap loader — see [`crate::shard::MmapModel`]). Kernels read through
+/// `Deref<Target = [T]>` and never see the difference.
+///
+/// `Mapped` pointers come exclusively from `PROT_READ`/`MAP_PRIVATE`
+/// mappings that are intentionally never unmapped, so sharing them
+/// across threads and cloning them by pointer copy is sound.
+pub enum Arr<T: 'static> {
+    /// Heap-owned values (built models, legacy-envelope loads).
+    Owned(Vec<T>),
+    /// Borrowed from a leaked read-only mapping.
+    Mapped {
+        /// First element (alignment-checked by the mmap loader).
+        ptr: *const T,
+        /// Element count.
+        len: usize,
+    },
+}
+
+// Safety: `Mapped` pointers reference immutable, process-lifetime,
+// read-only mappings (never unmapped, never written); `Owned` is a Vec.
+unsafe impl<T: Send + Sync> Send for Arr<T> {}
+unsafe impl<T: Send + Sync> Sync for Arr<T> {}
+
+impl<T> std::ops::Deref for Arr<T> {
+    type Target = [T];
+    #[inline(always)]
+    fn deref(&self) -> &[T] {
+        match self {
+            Arr::Owned(v) => v,
+            Arr::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+        }
+    }
+}
+
+impl<T> Default for Arr<T> {
+    fn default() -> Self {
+        Arr::Owned(Vec::new())
+    }
+}
+
+impl<T> From<Vec<T>> for Arr<T> {
+    fn from(v: Vec<T>) -> Self {
+        Arr::Owned(v)
+    }
+}
+
+impl<T: Clone> Clone for Arr<T> {
+    fn clone(&self) -> Self {
+        match self {
+            Arr::Owned(v) => Arr::Owned(v.clone()),
+            // The mapping outlives the process: a pointer copy is a
+            // correct, zero-cost clone.
+            Arr::Mapped { ptr, len } => Arr::Mapped { ptr: *ptr, len: *len },
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Arr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self[..], f)
+    }
+}
+
+impl<T: PartialEq> PartialEq for Arr<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PartialEq> PartialEq<Vec<T>> for Arr<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T> Arr<T> {
+    /// The owned `Vec` for in-place mutation (layout application, store
+    /// coalescing — build-time paths only).
+    ///
+    /// # Panics
+    /// On a `Mapped` array: mmap-served weights are immutable by
+    /// construction, and every mutating path runs on owned models.
+    pub fn vec_mut(&mut self) -> &mut Vec<T> {
+        match self {
+            Arr::Owned(v) => v,
+            Arr::Mapped { .. } => panic!("cannot mutate a memory-mapped weight array"),
+        }
+    }
+}
+
+// =====================================================================
+// Half-precision codec (hand-rolled: no half/f16 dependency)
+// =====================================================================
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// underflow → subnormals → ±0).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN signalled via a set mantissa bit).
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        // Subnormal half (or zero): shift the full 24-bit significand
+        // down past the exponent deficit, rounding to nearest even.
+        if e < -10 {
+            return sign;
+        }
+        let full = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half & 1) == 1) {
+            half + 1
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    let half = (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let out = sign | ((e as u16) << 10) | half;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        // The carry may overflow the mantissa into the exponent — that
+        // is the correct rounding (including up to infinity).
+        out + 1
+    } else {
+        out
+    }
+}
+
+/// IEEE 754 binary16 bits → f32 (exact: every f16 value is an f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: value = man * 2^-24; normalize into f32.
+            let b = 31 - man.leading_zeros();
+            sign | ((103 + b) << 23) | ((man ^ (1 << b)) << (23 - b))
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
 }
 
 /// Sentinel for [`Chunk::merged_slot`] on non-merged chunks.
@@ -103,20 +327,29 @@ pub struct Chunk {
     pub ncols: u32,
     /// Physical layout of this chunk's arrays.
     pub storage: ChunkStorage,
-    /// `Csc`: sorted ids of nonzero rows (the set `S(K)`). Empty for the
-    /// other layouts.
-    pub row_indices: Vec<u32>,
-    /// `Csc`: offsets into `col_idx`/`values` per stored row, length
-    /// `row_indices.len() + 1`. `DenseRows`: offsets indexed directly by
-    /// row id, length `d + 1`. `Merged`: empty (lives in the store).
-    pub row_ptr: Vec<u32>,
+    /// `Csc`/`F16`/`Int8`: sorted ids of nonzero rows (the set `S(K)`).
+    /// Empty for the other layouts.
+    pub row_indices: Arr<u32>,
+    /// `Csc`/`F16`/`Int8`: offsets into `col_idx`/values per stored row,
+    /// length `row_indices.len() + 1`. `DenseRows`: offsets indexed
+    /// directly by row id, length `d + 1`. `Merged`: empty (lives in the
+    /// store).
+    pub row_ptr: Arr<u32>,
     /// Within-chunk column of each entry (`0..ncols`); empty for `Merged`.
-    pub col_idx: Vec<u16>,
-    /// Entry values, co-indexed with `col_idx`; empty for `Merged`.
-    pub values: Vec<f32>,
+    pub col_idx: Arr<u16>,
+    /// Entry values, co-indexed with `col_idx`; empty for `Merged` and
+    /// the quantized layouts.
+    pub values: Arr<f32>,
+    /// Quantized value payload (`F16`: packed little-endian f16 pairs,
+    /// `2 * nnz` bytes; `Int8`: one `i8`-as-`u8` per entry). Empty for
+    /// the exact layouts.
+    pub qvalues: Arr<u8>,
+    /// Dequantization scale (`Int8`: `max |v| / 127`, or `1.0` for an
+    /// all-zero chunk; `1.0` otherwise).
+    pub scale: f32,
     /// Optional row-id → row-position map for the hash iteration method
-    /// (only ever present on `Csc` chunks — the other layouts don't need
-    /// one).
+    /// (only ever present on `Csc`-structured chunks — `Csc` itself and
+    /// the quantized layouts; `DenseRows`/`Merged` don't need one).
     pub row_map: Option<U32Map>,
     /// Span slot in the matrix's [`MergedStore`] (`Merged` only).
     pub merged_slot: u32,
@@ -161,11 +394,11 @@ impl ChunkStats {
 #[derive(Clone, Debug, Default)]
 pub struct MergedStore {
     spans: Vec<MergedSpan>,
-    row_indices: Vec<u32>,
+    row_indices: Arr<u32>,
     /// Per sub-chunk: `rows + 1` offsets (global into `col_idx`/`values`).
-    row_ptr: Vec<u32>,
-    col_idx: Vec<u16>,
-    values: Vec<f32>,
+    row_ptr: Arr<u32>,
+    col_idx: Arr<u16>,
+    values: Arr<f32>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -189,11 +422,57 @@ impl MergedStore {
             rows: chunk.row_indices.len() as u32,
             ptr_start: self.row_ptr.len() as u32,
         });
-        self.row_indices.extend_from_slice(&chunk.row_indices);
-        self.row_ptr.extend(chunk.row_ptr.iter().map(|&p| p + base));
-        self.col_idx.extend_from_slice(&chunk.col_idx);
-        self.values.extend_from_slice(&chunk.values);
+        self.row_indices.vec_mut().extend_from_slice(&chunk.row_indices);
+        self.row_ptr
+            .vec_mut()
+            .extend(chunk.row_ptr.iter().map(|&p| p + base));
+        self.col_idx.vec_mut().extend_from_slice(&chunk.col_idx);
+        self.values.vec_mut().extend_from_slice(&chunk.values);
         slot
+    }
+
+    /// Span table as parallel `(rows_start, rows, ptr_start)` columns —
+    /// the `MSCMXMR4` serialization of the store's topology.
+    pub(crate) fn span_columns(&self) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let rs = self.spans.iter().map(|s| s.rows_start).collect();
+        let r = self.spans.iter().map(|s| s.rows).collect();
+        let ps = self.spans.iter().map(|s| s.ptr_start).collect();
+        (rs, r, ps)
+    }
+
+    /// The four shared weight arrays, for serialization.
+    pub(crate) fn raw_arrays(&self) -> (&[u32], &[u32], &[u16], &[f32]) {
+        (&self.row_indices, &self.row_ptr, &self.col_idx, &self.values)
+    }
+
+    /// Rebuilds a store from its serialized parts (`MSCMXMR4` loaders;
+    /// the arrays may be heap copies or mmap borrows).
+    pub(crate) fn from_raw(
+        spans: Vec<(u32, u32, u32)>,
+        row_indices: Arr<u32>,
+        row_ptr: Arr<u32>,
+        col_idx: Arr<u16>,
+        values: Arr<f32>,
+    ) -> Self {
+        MergedStore {
+            spans: spans
+                .into_iter()
+                .map(|(rows_start, rows, ptr_start)| MergedSpan {
+                    rows_start,
+                    rows,
+                    ptr_start,
+                })
+                .collect(),
+            row_indices,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Number of coalesced sub-chunks.
+    pub(crate) fn num_spans(&self) -> usize {
+        self.spans.len()
     }
 
     /// The layout-resolved view of sub-chunk `slot`.
@@ -334,13 +613,15 @@ impl Chunk {
     }
 
     /// Total entries stored in this chunk's own arrays (0 for `Merged` —
-    /// the store holds them).
+    /// the store holds them). `col_idx` is co-indexed with the value
+    /// payload under every layout, exact or quantized, so it is the one
+    /// layout-independent entry count.
     #[inline]
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        self.col_idx.len()
     }
 
-    /// Structural statistics. Valid for `Csc` and `DenseRows`; `Merged`
+    /// Structural statistics. Valid for every layout but `Merged`, whose
     /// chunks must be read via [`ChunkedMatrix::chunk_stats`].
     ///
     /// # Panics
@@ -352,6 +633,11 @@ impl Chunk {
             self.storage != ChunkStorage::Merged,
             "merged chunk stats live in the store (use ChunkedMatrix::chunk_stats)"
         );
+        if self.storage.is_quantized() {
+            // Quantized chunks keep the exact `Csc` structure; only the
+            // value payload is rounded, so stats are purely structural.
+            return ChunkStats::new(self.ncols as usize, self.col_idx.len(), self.row_indices.len());
+        }
         self.view().stats()
     }
 
@@ -363,18 +649,25 @@ impl Chunk {
         (&self.col_idx[s..e], &self.values[s..e])
     }
 
-    /// The layout-resolved view of a non-merged chunk (merged chunks need
-    /// the owning matrix — use [`ChunkedMatrix::view`]).
+    /// The layout-resolved view of a non-merged, non-quantized chunk
+    /// (merged chunks need the owning matrix, quantized chunks need a
+    /// dequantization arena — use [`ChunkedMatrix::view`] /
+    /// [`Chunk::dequantize_into`]).
     ///
     /// # Panics
-    /// On a `Merged` chunk, in release builds too — an empty view would
-    /// be a silent wrong answer, and every hot path goes through
-    /// [`ChunkedMatrix::view`], which resolves the store first.
+    /// On a `Merged` or quantized chunk, in release builds too — an
+    /// empty-values view would be a silent wrong answer, and every hot
+    /// path goes through [`ChunkedMatrix::view`], which resolves the
+    /// store first.
     #[inline]
     pub fn view(&self) -> ChunkView<'_> {
         assert!(
             self.storage != ChunkStorage::Merged,
             "merged chunks are viewed through ChunkedMatrix::view"
+        );
+        assert!(
+            !self.storage.is_quantized(),
+            "quantized chunks are dequantized into the workspace, not viewed directly"
         );
         ChunkView {
             ncols: self.ncols,
@@ -388,11 +681,15 @@ impl Chunk {
     }
 
     /// Builds (or rebuilds) the hash index used by the hash iterator.
-    /// Only `Csc` chunks carry one: `DenseRows` probes `row_ptr`
-    /// directly and `Merged` chunks fall back to binary search, so for
-    /// those layouts this is a no-op.
+    /// Only `Csc`-structured chunks carry one (`Csc` itself and the
+    /// quantized layouts, whose row structure is identical): `DenseRows`
+    /// probes `row_ptr` directly and `Merged` chunks fall back to binary
+    /// search, so for those layouts this is a no-op.
     pub fn build_row_map(&mut self) {
-        if self.storage != ChunkStorage::Csc {
+        if !matches!(
+            self.storage,
+            ChunkStorage::Csc | ChunkStorage::F16 | ChunkStorage::Int8
+        ) {
             return;
         }
         self.row_map = Some(U32Map::from_pairs(
@@ -403,15 +700,78 @@ impl Chunk {
         ));
     }
 
+    /// Reconstructs this quantized chunk's f32 values into `out`
+    /// (cleared first), co-indexed with `col_idx` — the kernel-facing
+    /// bridge: the caller wraps `out` in a `Csc`-shaped [`ChunkView`]
+    /// and runs the ordinary kernels over it.
+    ///
+    /// # Panics
+    /// On a non-quantized chunk (exact layouts are viewed directly).
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        match self.storage {
+            ChunkStorage::F16 => {
+                out.reserve(self.qvalues.len() / 2);
+                out.extend(
+                    self.qvalues
+                        .chunks_exact(2)
+                        .map(|p| f16_to_f32(u16::from_le_bytes([p[0], p[1]]))),
+                );
+            }
+            ChunkStorage::Int8 => {
+                out.reserve(self.qvalues.len());
+                let s = self.scale;
+                out.extend(self.qvalues.iter().map(|&b| (b as i8) as f32 * s));
+            }
+            _ => panic!("dequantize_into on a non-quantized chunk"),
+        }
+    }
+
+    /// Quantizes an exact `Csc` chunk in place to `target` (`F16` or
+    /// `Int8`): the structure arrays are untouched, `values` moves into
+    /// the packed `qvalues` payload, and `scale` is set (`Int8`:
+    /// `max |v| / 127`, `1.0` for an all-zero chunk).
+    fn quantize(&mut self, target: ChunkStorage) {
+        debug_assert_eq!(self.storage, ChunkStorage::Csc);
+        match target {
+            ChunkStorage::F16 => {
+                let mut q = Vec::with_capacity(self.values.len() * 2);
+                for &v in self.values.iter() {
+                    q.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+                }
+                self.qvalues = q.into();
+                self.scale = 1.0;
+            }
+            ChunkStorage::Int8 => {
+                let max = self.values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = if max > 0.0 { max / 127.0 } else { 1.0 };
+                let inv = 1.0 / scale;
+                let q: Vec<u8> = self
+                    .values
+                    .iter()
+                    .map(|&v| ((v * inv).round().clamp(-127.0, 127.0) as i8) as u8)
+                    .collect();
+                self.qvalues = q.into();
+                self.scale = scale;
+            }
+            _ => unreachable!("quantize targets are F16/Int8 only"),
+        }
+        self.values = Arr::default();
+        self.storage = target;
+    }
+
     /// Bytes of the weight payload under this chunk's layout (row map
-    /// excluded — that is side-index memory). `Merged` chunks report 0
-    /// here; their share lives in the store
-    /// ([`ChunkedMatrix::chunk_weight_bytes`] accounts it).
+    /// excluded — that is side-index memory; quantized chunks count
+    /// their 4-byte scale). `Merged` chunks report 0 here; their share
+    /// lives in the store ([`ChunkedMatrix::chunk_weight_bytes`]
+    /// accounts it).
     pub fn weight_bytes(&self) -> usize {
         self.row_indices.len() * 4
             + self.row_ptr.len() * 4
             + self.col_idx.len() * 2
             + self.values.len() * 4
+            + self.qvalues.len()
+            + self.storage.is_quantized() as usize * 4
     }
 
     /// Approximate resident bytes (hash index included if built).
@@ -434,8 +794,8 @@ impl Chunk {
             }
             ptr.push(self.row_ptr[pos]);
         }
-        self.row_ptr = ptr;
-        self.row_indices = Vec::new();
+        self.row_ptr = ptr.into();
+        self.row_indices = Arr::default();
         self.row_map = None;
         self.storage = ChunkStorage::DenseRows;
     }
@@ -521,10 +881,12 @@ impl ChunkedMatrix {
             let mut chunk = Chunk {
                 ncols: (c1 - c0) as u32,
                 storage: ChunkStorage::Csc,
-                row_indices,
-                row_ptr,
-                col_idx,
-                values,
+                row_indices: row_indices.into(),
+                row_ptr: row_ptr.into(),
+                col_idx: col_idx.into(),
+                values: values.into(),
+                qvalues: Arr::default(),
+                scale: 1.0,
                 row_map: None,
                 merged_slot: NO_SLOT,
             };
@@ -570,12 +932,13 @@ impl ChunkedMatrix {
                     let slot = store.push(chunk);
                     chunk.storage = ChunkStorage::Merged;
                     chunk.merged_slot = slot;
-                    chunk.row_indices = Vec::new();
-                    chunk.row_ptr = Vec::new();
-                    chunk.col_idx = Vec::new();
-                    chunk.values = Vec::new();
+                    chunk.row_indices = Arr::default();
+                    chunk.row_ptr = Arr::default();
+                    chunk.col_idx = Arr::default();
+                    chunk.values = Arr::default();
                     chunk.row_map = None;
                 }
+                ChunkStorage::F16 | ChunkStorage::Int8 => chunk.quantize(target),
             }
         }
         if !store.spans.is_empty() {
@@ -585,6 +948,11 @@ impl ChunkedMatrix {
 
     /// The layout-resolved view of chunk `c` — the hot-loop accessor
     /// every kernel dispatch goes through.
+    ///
+    /// # Panics
+    /// On a quantized chunk: its f32 values do not exist until
+    /// [`Chunk::dequantize_into`] reconstructs them into a workspace
+    /// arena, so there is no borrowable view to hand out.
     #[inline]
     pub fn view(&self, c: usize) -> ChunkView<'_> {
         let chunk = &self.chunks[c];
@@ -622,19 +990,38 @@ impl ChunkedMatrix {
     }
 
     /// Reconstructs the CSC representation (inverse of [`Self::from_csc`]
-    /// under any layout); used by round-trip tests and the model
-    /// converter.
+    /// under any exact layout; quantized chunks reconstruct their
+    /// *rounded* values — the approximation the planner opted into);
+    /// used by round-trip tests, the model converter, and
+    /// baseline-on-`MSCMXMR4` hydration.
     pub fn to_csc(&self) -> CscMatrix {
         let mut cols: Vec<SparseVec> = vec![SparseVec::new(); self.cols];
+        let mut dequant = Vec::new();
         for c in 0..self.num_chunks() {
             let base = self.chunk_start(c);
-            self.view(c).for_each_row(|r, cs, vs| {
+            let mut emit = |r: u32, cs: &[u16], vs: &[f32]| {
                 for (&cj, &v) in cs.iter().zip(vs) {
                     let col = &mut cols[base + cj as usize];
                     col.indices.push(r);
                     col.values.push(v);
                 }
-            });
+            };
+            let chunk = &self.chunks[c];
+            if chunk.storage.is_quantized() {
+                chunk.dequantize_into(&mut dequant);
+                ChunkView {
+                    ncols: chunk.ncols,
+                    storage: ChunkStorage::Csc,
+                    row_indices: &chunk.row_indices,
+                    row_ptr: &chunk.row_ptr,
+                    col_idx: &chunk.col_idx,
+                    values: &dequant,
+                    row_map: None,
+                }
+                .for_each_row(&mut emit);
+            } else {
+                self.view(c).for_each_row(&mut emit);
+            }
         }
         // Entries were appended in ascending row order per column already.
         CscMatrix::from_cols(cols, self.rows)
@@ -681,6 +1068,11 @@ impl ChunkedMatrix {
                 .as_ref()
                 .expect("merged chunk without a store")
                 .stats(chunk.merged_slot as usize, chunk.ncols),
+            ChunkStorage::F16 | ChunkStorage::Int8 => ChunkStats::new(
+                chunk.ncols as usize,
+                chunk.col_idx.len(),
+                chunk.row_indices.len(),
+            ),
             _ => chunk.view().stats(),
         }
     }
@@ -886,10 +1278,138 @@ mod tests {
 
     #[test]
     fn storage_index_round_trips() {
-        for (i, s) in ChunkStorage::ALL.into_iter().enumerate() {
+        for (i, s) in ChunkStorage::EVERY.into_iter().enumerate() {
             assert_eq!(s.index(), i);
             assert_eq!(ChunkStorage::from_index(i), Some(s));
         }
-        assert_eq!(ChunkStorage::from_index(3), None);
+        assert_eq!(ChunkStorage::from_index(5), None);
+        // ALL stays the exact-layout prefix every kernel-class invariant
+        // iterates.
+        assert_eq!(&ChunkStorage::EVERY[..3], &ChunkStorage::ALL[..]);
+        assert!(ChunkStorage::ALL.iter().all(|s| !s.is_quantized()));
+        assert!(ChunkStorage::F16.is_quantized() && ChunkStorage::Int8.is_quantized());
+    }
+
+    #[test]
+    fn f16_codec_round_trips_and_bounds_error() {
+        // Exactly representable values survive bit for bit.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, -3.25, 65504.0, 6.1035156e-5] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "{v} must be exact in f16");
+        }
+        // Specials.
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e6)), f32::INFINITY, "overflow goes to inf");
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e-12)), 0.0, "deep underflow flushes to zero");
+        // Round-to-nearest-even at the half-ulp: 1 + 2^-11 is exactly
+        // between 1.0 and the next f16 (1 + 2^-10); even mantissa wins.
+        assert_eq!(f16_to_f32(f32_to_f16(1.0 + 2f32.powi(-11))), 1.0);
+        assert_eq!(
+            f16_to_f32(f32_to_f16(1.0 + 3.0 * 2f32.powi(-11))),
+            1.0 + 2.0 * 2f32.powi(-10),
+            "odd half-ulp rounds up to the even neighbor"
+        );
+        // Relative error bound 2^-11 over a deterministic value sweep
+        // (normals) and absolute bound 2^-25 in the subnormal range.
+        let mut x = 1.37e-3f32;
+        for _ in 0..200 {
+            let r = f16_to_f32(f32_to_f16(x));
+            assert!(
+                (r - x).abs() <= x.abs() * 2f32.powi(-11) + 2f32.powi(-25),
+                "f16 error out of bounds at {x}: {r}"
+            );
+            x *= -1.171;
+        }
+    }
+
+    #[test]
+    fn quantized_layouts_preserve_structure_and_bound_values() {
+        let csc = sample_csc();
+        let plain = ChunkedMatrix::from_csc(&csc, &[0, 2, 4], false);
+        let mut m = ChunkedMatrix::from_csc(&csc, &[0, 2, 4], true);
+        m.apply_layout(&[ChunkStorage::F16, ChunkStorage::Int8]);
+
+        let k0 = &m.chunks[0];
+        assert_eq!(k0.storage, ChunkStorage::F16);
+        assert!(k0.values.is_empty(), "exact payload must be dropped");
+        assert_eq!(k0.qvalues.len(), 2 * k0.nnz());
+        assert_eq!(k0.scale, 1.0);
+        let k1 = &m.chunks[1];
+        assert_eq!(k1.storage, ChunkStorage::Int8);
+        assert_eq!(k1.qvalues.len(), k1.nnz());
+        assert_eq!(k1.scale, 4.0 / 127.0, "scale is max |v| / 127");
+
+        // Structure (and therefore stats and nnz) is untouched.
+        assert_eq!(m.nnz(), plain.nnz());
+        for c in 0..2 {
+            assert_eq!(m.chunk_stats(c), plain.chunk_stats(c), "chunk {c}");
+            assert_eq!(m.chunks[c].row_indices, plain.chunks[c].row_indices);
+            assert_eq!(m.chunks[c].col_idx, plain.chunks[c].col_idx);
+        }
+        // Quantized chunks keep their hash index (same row structure).
+        assert!(m.chunks[0].row_map.is_some());
+
+        // Dequantization: f16 is exact on these values; int8 is within
+        // half a quantization step per entry.
+        let mut dq = Vec::new();
+        m.chunks[0].dequantize_into(&mut dq);
+        assert_eq!(dq, vec![1.0, -1.0, 2.0, 0.5, 1.0]);
+        m.chunks[1].dequantize_into(&mut dq);
+        let exact = [4.0f32, 3.0, 1.0];
+        assert_eq!(dq.len(), exact.len());
+        for (got, want) in dq.iter().zip(exact) {
+            assert!(
+                (got - want).abs() <= k1.scale / 2.0 + 1e-7,
+                "int8 entry {want} off by more than half a step: {got}"
+            );
+        }
+        // to_csc reconstructs the rounded values (the served weights).
+        let rt = m.to_csc();
+        assert_eq!(rt.col(0).values, &[1.0f32, 2.0]);
+        assert!((rt.col(2).values[0] - 4.0).abs() <= k1.scale / 2.0 + 1e-7);
+
+        // Byte accounting: f16 halves and int8 quarters the value
+        // payload relative to the exact chunk (+4 bytes of scale each).
+        let (p0, p1) = (plain.chunk_weight_bytes(0), plain.chunk_weight_bytes(1));
+        assert_eq!(m.chunk_weight_bytes(0), p0 - 4 * 5 + 2 * 5 + 4);
+        assert_eq!(m.chunk_weight_bytes(1), p1 - 4 * 3 + 3 + 4);
+    }
+
+    #[test]
+    fn all_zero_chunk_quantizes_with_unit_scale() {
+        let csc = CscMatrix::from_cols(
+            vec![SparseVec::from_pairs(vec![(1, 0.0)]), SparseVec::new()],
+            4,
+        );
+        let mut m = ChunkedMatrix::from_csc(&csc, &[0, 2], false);
+        m.apply_layout(&[ChunkStorage::Int8]);
+        assert_eq!(m.chunks[0].scale, 1.0);
+        let mut dq = Vec::new();
+        m.chunks[0].dequantize_into(&mut dq);
+        assert_eq!(dq, vec![0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dequantized into the workspace")]
+    fn quantized_chunks_cannot_be_viewed() {
+        let mut m = ChunkedMatrix::from_csc(&sample_csc(), &[0, 2, 4], false);
+        m.apply_layout(&[ChunkStorage::F16, ChunkStorage::Csc]);
+        let _ = m.view(0);
+    }
+
+    #[test]
+    fn mapped_arr_reads_like_a_slice() {
+        // Simulate a mapping with a leaked, immutable heap array — the
+        // same lifetime contract the mmap loader establishes.
+        let leaked: &'static [u32] = Vec::from([7u32, 9, 11]).leak();
+        let a = Arr::Mapped {
+            ptr: leaked.as_ptr(),
+            len: leaked.len(),
+        };
+        assert_eq!(a, vec![7u32, 9, 11]);
+        assert_eq!(a.clone()[1], 9);
+        let owned: Arr<u32> = vec![7u32, 9, 11].into();
+        assert_eq!(owned, a);
     }
 }

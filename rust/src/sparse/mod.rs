@@ -31,11 +31,11 @@
 //!
 //! # Per-chunk weight layouts ([`ChunkStorage`])
 //!
-//! Each chunk of a [`ChunkedMatrix`] additionally carries one of three
+//! Each chunk of a [`ChunkedMatrix`] additionally carries one of five
 //! physical *storage layouts*, chosen by the kernel planner
 //! ([`crate::inference::plan`]) from the same per-chunk cost model that
 //! picks the kernels (extended with per-layout byte + probe-time terms,
-//! timing-calibration aware):
+//! timing-calibration aware). Three are **exact** — always eligible:
 //!
 //! - **`Csc`** — the seed row-sparse layout: sorted `row_indices` plus a
 //!   `row_ptr` slice per stored row. Always valid; the only layout that
@@ -53,12 +53,30 @@
 //!   beam-activated together contiguous in memory. Picked for
 //!   marching/binary-planned chunks below the tiny-chunk thresholds.
 //!
-//! Every layout stores the exact same entries in the exact same per-row
-//! order, so all layouts are **bitwise identical** to `Csc` under every
-//! kernel and algorithm — enforced by the seeded property harness in
-//! `rust/tests/layout.rs`. Kernels consume layout-resolved
+//! Every exact layout stores the exact same entries in the exact same
+//! per-row order, so all three are **bitwise identical** to `Csc` under
+//! every kernel and algorithm — enforced by the seeded property harness
+//! in `rust/tests/layout.rs`. Kernels consume layout-resolved
 //! [`ChunkView`]s; engines apply a plan's layout at construction via
 //! [`ChunkedMatrix::apply_layout`] (models are always *built* all-`Csc`).
+//!
+//! Two more layouts are **approximate** — strictly opt-in behind the
+//! planner's `approx` flag (the `--approx` CLI switch), never chosen for
+//! an exact deployment:
+//!
+//! - **`F16`** — `Csc` structure with the value payload packed as IEEE
+//!   754 binary16 ([`f32_to_f16`] / [`f16_to_f32`], hand-rolled — no
+//!   `half` dependency): 4 → 2 bytes per stored weight at ≤ 2⁻¹¹
+//!   relative error.
+//! - **`Int8`** — `Csc` structure with values stored as symmetric
+//!   per-chunk linear-quantized bytes (`scale = max |v| / 127`): 4 → 1
+//!   bytes per weight at ≤ `scale / 2` absolute error.
+//!
+//! Quantized chunks keep their structure arrays bitwise-intact — only
+//! the payload is packed — and serve through the ordinary `Csc` kernels
+//! after a workspace-resident dequantization
+//! ([`chunked::Chunk::dequantize_into`]); the top-k damage is gated by
+//! the precision@k regression suite in `rust/tests/quant.rs`.
 
 pub mod chunked;
 pub mod csc;
@@ -68,7 +86,10 @@ pub mod iterators;
 pub mod simd;
 pub mod vec;
 
-pub use chunked::{Chunk, ChunkStats, ChunkStorage, ChunkView, ChunkedMatrix};
+pub use chunked::{
+    f16_to_f32, f32_to_f16, Arr, Chunk, ChunkStats, ChunkStorage, ChunkView, ChunkedMatrix,
+    MergedStore,
+};
 pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use hashmap::U32Map;

@@ -63,6 +63,16 @@ impl LeScalar for u32 {
     }
 }
 
+impl LeScalar for u16 {
+    const WIDTH: usize = 2;
+    fn put(self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.to_le_bytes());
+    }
+    fn take(bytes: &[u8]) -> Self {
+        u16::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
 impl LeScalar for f32 {
     const WIDTH: usize = 4;
     fn put(self, buf: &mut Vec<u8>) {
@@ -120,6 +130,14 @@ pub(crate) fn write_u32s(w: &mut impl Write, vs: &[u32]) -> io::Result<()> {
 }
 
 pub(crate) fn read_u32s(r: &mut impl Read, n: usize) -> io::Result<Vec<u32>> {
+    read_scalars(r, n)
+}
+
+pub(crate) fn write_u16s(w: &mut impl Write, vs: &[u16]) -> io::Result<()> {
+    write_scalars(w, vs)
+}
+
+pub(crate) fn read_u16s(r: &mut impl Read, n: usize) -> io::Result<Vec<u16>> {
     read_scalars(r, n)
 }
 

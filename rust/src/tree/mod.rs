@@ -11,7 +11,10 @@ mod io;
 mod model;
 
 pub use io::{load_model, save_model};
-pub(crate) use io::{read_model_body, read_u32s, read_u64, write_model_body, write_u32s, write_u64};
+pub(crate) use io::{
+    read_f32s, read_model_body, read_u16s, read_u32s, read_u64, read_u64s, write_f32s,
+    write_model_body, write_u16s, write_u32s, write_u64, write_u64s,
+};
 pub use model::{Layer, ModelStats, XmrModel};
 
 #[cfg(test)]

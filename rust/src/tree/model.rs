@@ -24,6 +24,22 @@ impl Layer {
         Self { csc, chunked }
     }
 
+    /// Assembles a layer from already-built parts — the `MSCMXMR4`
+    /// loaders, whose chunked side comes off the file layout-resolved.
+    /// `csc` may be the empty placeholder of an mmap-served layer (see
+    /// [`Layer::csc_is_stub`]); real columns are only rebuilt when the
+    /// baseline algo actually needs them.
+    pub(crate) fn from_parts(csc: CscMatrix, chunked: ChunkedMatrix) -> Self {
+        Self { csc, chunked }
+    }
+
+    /// Whether `csc` is the empty placeholder of a layout-resolved
+    /// (`MSCMXMR4`-mmap) load rather than real baseline columns: right
+    /// shape, zero entries, while the chunked side holds the weights.
+    pub fn csc_is_stub(&self) -> bool {
+        self.csc.nnz() == 0 && self.chunked.nnz() != 0
+    }
+
     /// Column range (child nodes) of parent `j` in this layer.
     #[inline]
     pub fn children_of(&self, j: usize) -> std::ops::Range<usize> {
@@ -95,9 +111,11 @@ impl XmrModel {
     }
 
     /// Structural statistics (Table 5 analogue + memory accounting).
+    /// Counted off the chunked side, which always holds the weights —
+    /// `csc` may be an empty stub on mmap-served models.
     pub fn stats(&self) -> ModelStats {
         let last = self.layers.last().unwrap();
-        let total_nnz: usize = self.layers.iter().map(|l| l.csc.nnz()).sum();
+        let total_nnz: usize = self.layers.iter().map(|l| l.chunked.nnz()).sum();
         let max_branching = self
             .layers
             .iter()
@@ -109,7 +127,11 @@ impl XmrModel {
             num_labels: last.num_nodes(),
             depth: self.depth(),
             total_nnz,
-            avg_label_col_nnz: last.csc.avg_col_nnz(),
+            avg_label_col_nnz: if last.num_nodes() == 0 {
+                0.0
+            } else {
+                last.chunked.nnz() as f64 / last.num_nodes() as f64
+            },
             max_branching,
             csc_bytes: self.layers.iter().map(|l| l.csc.memory_bytes()).sum(),
             chunked_bytes: self.layers.iter().map(|l| l.chunked.memory_bytes()).sum(),

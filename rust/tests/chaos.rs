@@ -187,6 +187,128 @@ fn deadline_bounds_batches_against_a_paused_host() {
     }
 }
 
+/// Regression pin for the zero-deadline sentinel collision: a budget
+/// that expires while a paused host holds the read (and one that
+/// expires *between* rounds behind delayed replies) must fail the batch
+/// with `TimedOut` — and must **not** be booked as replica failures.
+/// Pre-fix, budget expiry ran the failover path: `failovers` was bumped
+/// per expired batch and, past `eject_after` of them, the perfectly
+/// healthy replica was ejected by the circuit breaker.
+#[test]
+fn deadline_expiry_never_penalizes_healthy_replicas() {
+    let sp = spec(64, 128);
+    let model = synth_model(&sp, 4, 0xB4D6);
+    let engine = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Hash);
+    let reference = InferenceEngine::new(model.clone(), engine);
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(&model, 2) {
+        let h = ShardHost::with_faults(shard, host_cfg(engine), "127.0.0.1:0", FaultPlan::default())
+            .unwrap();
+        groups.push(vec![h.local_addr()]);
+        hosts.push(h);
+    }
+    let deadline = Duration::from_millis(200);
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            // Only the deadline budget can bound these batches; the
+            // round timeout would allow a 30 s stall.
+            round_timeout: Duration::from_secs(30),
+            deadline,
+            eject_after: 3,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let queries = synth_queries(&sp, 4, 0xB4D7);
+    let q0 = queries.row_owned(0);
+    assert_eq!(g.predict(&q0, 5, 5).unwrap(), reference.predict(&q0, 5, 5));
+
+    // More expired batches than `eject_after`: pre-fix this ejects the
+    // replica; post-fix it must not even count as a failover.
+    hosts[0].pause();
+    let t0 = Instant::now();
+    for i in 0..4 {
+        let err = g
+            .predict(&q0, 5, 5)
+            .expect_err("an expired budget must fail the batch");
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "batch {i}: {err}");
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < deadline * 4 * 8,
+        "expired batches outlived their budgets: {elapsed:?} vs 4 x {deadline:?}"
+    );
+    assert_eq!(
+        g.stats().failovers.load(Ordering::Relaxed),
+        0,
+        "budget expiry must not be booked as a replica failover"
+    );
+    assert_eq!(
+        g.stats().ejections.load(Ordering::Relaxed),
+        0,
+        "budget expiry must not eject a healthy replica"
+    );
+
+    // The replica was never poisoned: the very next query after resume
+    // is exact, with no cooldown to wait out.
+    hosts[0].resume();
+    for qi in 0..queries.rows {
+        let q = queries.row_owned(qi);
+        assert_eq!(
+            g.predict(&q, 5, 5).expect("unpenalized replica must serve immediately"),
+            reference.predict(&q, 5, 5),
+            "q={qi} after resume"
+        );
+    }
+    drop(g);
+    for h in hosts {
+        h.shutdown();
+    }
+
+    // Between-rounds expiry: every reply is delayed by more than half
+    // the budget, so the second round's budget has already lapsed when
+    // (or shortly after) it starts. Still `TimedOut`, still zero
+    // failovers.
+    let delay = FaultPlan {
+        seed: common::base_seed() ^ 2,
+        delay_replies: Duration::from_millis(200),
+        ..Default::default()
+    };
+    let mut hosts = Vec::new();
+    let mut groups = Vec::new();
+    for shard in partition(&model, 2) {
+        let h = ShardHost::with_faults(shard, host_cfg(engine), "127.0.0.1:0", delay.clone())
+            .unwrap();
+        groups.push(vec![h.local_addr()]);
+        hosts.push(h);
+    }
+    let mut g = RemoteGather::connect_groups(
+        &groups,
+        RemoteConfig {
+            round_timeout: Duration::from_secs(30),
+            deadline: Duration::from_millis(300),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let err = g
+        .predict(&q0, 5, 5)
+        .expect_err("a budget lapsing between rounds must fail the batch");
+    assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+    assert_eq!(
+        g.stats().failovers.load(Ordering::Relaxed),
+        0,
+        "between-rounds expiry must not be booked as a failover"
+    );
+    for h in hosts {
+        h.shutdown();
+    }
+}
+
 /// Degraded mode: killing every replica of shard 1 fails the default
 /// (exact-or-fail) gather but lets an `allow_partial` gather answer from
 /// shard 0 alone — flagged, counted, and bitwise equal to serving shard

@@ -1,9 +1,12 @@
-//! Fuzz/robustness tests for the `MSCMXMR3` shard envelope (the
-//! `tests/wire.rs` treatment, applied to the on-disk format):
+//! Fuzz/robustness tests for the `MSCMXMR3` and `MSCMXMR4` shard
+//! envelopes (the `tests/wire.rs` treatment, applied to the on-disk
+//! format):
 //!
-//! - every truncated prefix of a valid V3 file is rejected,
+//! - every truncated prefix of a valid V3 or V4 file is rejected,
 //! - corrupted magic / plan flags / method codes / storage codes and
-//!   trailing garbage are rejected,
+//!   trailing garbage are rejected — and, V4-specific: corrupted body
+//!   storage tags, a non-1.0 scale on an exact chunk, nonzero
+//!   alignment padding and a missing plan tail,
 //! - legacy `MSCMXMR2` files still load — plan-less pre-planner files
 //!   and method-only plan sections both read as all-`Csc` — and serve
 //!   exactly,
@@ -18,7 +21,9 @@ mod common;
 use mscm_xmr::inference::{
     EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo,
 };
-use mscm_xmr::shard::{load_shard, partition, save_shard, shard_file_name, ShardedEngine};
+use mscm_xmr::shard::{
+    load_shard, partition, save_shard, save_shard_v4, shard_file_name, ShardedEngine,
+};
 use mscm_xmr::sparse::ChunkStorage;
 
 /// A deliberately *small* fixed-shape model (the prefix fuzz below is
@@ -105,9 +110,10 @@ fn corrupted_tags_and_versions_are_rejected() {
     };
 
     // Unknown future version and the raw model magic are both rejected.
-    let mut v4 = bytes.clone();
-    v4[0] = 0x34; // "…MXR4"
-    check_err(v4, "future version magic");
+    // (`…MXR4` is a real format now — version fuzzing moved to 0x35.)
+    let mut v5 = bytes.clone();
+    v5[0] = 0x35; // "…MXR5"
+    check_err(v5, "future version magic");
     let mut v1 = bytes.clone();
     v1[0] = 0x31; // the MSCMXMR1 model magic
     check_err(v1, "model-file magic");
@@ -242,6 +248,137 @@ fn legacy_v2_files_load_as_csc_and_serve_exactly() {
             "q={qi}"
         );
     }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Saves the fuzz model as one `MSCMXMR4` shard whose hand-mixed plan
+/// exercises every storage code — the quantized pair included — and
+/// returns (dir, path, loaded shard). The loaded copy supplies the
+/// layer shapes the offset arithmetic below needs.
+fn saved_v4(tag: &str) -> (
+    std::path::PathBuf,
+    std::path::PathBuf,
+    mscm_xmr::shard::ShardModel,
+) {
+    let model = fuzz_model();
+    // One shard keeps every chunk, maximizing per-layer chunk counts.
+    let mut sh = partition(&model, 1).remove(0);
+    let mut plan = KernelPlan::uniform(&sh.model, IterationMethod::BinarySearch);
+    for l in &mut plan.layers {
+        let n = l.storage.len();
+        if n >= 2 {
+            l.storage[0] = ChunkStorage::F16;
+        }
+        if n >= 3 {
+            l.storage[1] = ChunkStorage::Int8;
+        }
+        if n >= 5 {
+            l.storage[2] = ChunkStorage::Merged;
+            l.storage[3] = ChunkStorage::Merged;
+        }
+        l.storage[n - 1] = ChunkStorage::DenseRows;
+    }
+    assert!(
+        plan.uses_storage(ChunkStorage::F16) && plan.uses_storage(ChunkStorage::Int8),
+        "fuzz model too narrow to place the quantized layouts"
+    );
+    sh.plan = Some((MatmulAlgo::Mscm, plan));
+    let dir = mscm_xmr::util::temp_dir(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("shard.v4.bin");
+    save_shard_v4(&sh, &path).unwrap();
+    let loaded = load_shard(&path, false).unwrap();
+    assert_eq!(loaded.spec, sh.spec);
+    assert_eq!(loaded.plan, sh.plan, "V4 plan round-trips");
+    (dir, path, loaded)
+}
+
+#[test]
+fn v4_every_truncated_prefix_is_rejected() {
+    let (dir, path, _) = saved_v4("fmt-v4-prefix");
+    let bytes = std::fs::read(&path).unwrap();
+    let scratch = dir.join("prefix.bin");
+    for len in 0..bytes.len() {
+        std::fs::write(&scratch, &bytes[..len]).unwrap();
+        assert!(
+            load_shard(&scratch, false).is_err(),
+            "V4 prefix of {len}/{} bytes parsed",
+            bytes.len()
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn v4_corrupted_fields_are_rejected() {
+    let (dir, path, shard) = saved_v4("fmt-v4-corrupt");
+    let bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    let scratch = dir.join("corrupt.bin");
+    let check_err = |mutated: Vec<u8>, what: &str| {
+        std::fs::write(&scratch, &mutated).unwrap();
+        assert!(load_shard(&scratch, false).is_err(), "{what} accepted");
+    };
+
+    // Unknown future version on a V4 image, and trailing garbage (the
+    // V4 tail is strict — nothing may follow the plan rows).
+    let mut v5 = bytes.clone();
+    v5[0] = 0x35;
+    check_err(v5, "future version magic");
+    let mut padded = bytes.clone();
+    padded.push(0xAB);
+    check_err(padded, "trailing byte");
+
+    // The plan tail reuses the V3 row encoding, so the V3 offsets hold:
+    // storage codes end the file, method codes sit 8 * num_chunks
+    // before them, and the algo flag leads the section.
+    let chunks_bottom = shard.model.layers.last().unwrap().chunked.num_chunks();
+    let mut bad_storage = bytes.clone();
+    bad_storage[n - 4] = 0xEE;
+    check_err(bad_storage, "unknown plan storage code");
+    let mut bad_method = bytes.clone();
+    bad_method[n - 8 * chunks_bottom] = 0xC8;
+    check_err(bad_method, "unknown plan method code");
+    let plan_bytes: usize = 8
+        + shard
+            .model
+            .layers
+            .iter()
+            .map(|l| 8 + 8 * l.chunked.num_chunks())
+            .sum::<usize>();
+    let mut bad_flag = bytes.clone();
+    bad_flag[n - plan_bytes] = 9;
+    check_err(bad_flag, "bad plan flag");
+    // Flag 0 (plan-less) is legal V3 but not V4: a layout-resolved
+    // shard without its plan cannot be served.
+    let mut no_plan = bytes[..n - plan_bytes].to_vec();
+    no_plan.extend_from_slice(&0u64.to_le_bytes());
+    check_err(no_plan, "plan-less V4");
+
+    // Body offsets, from the front: magic (8) + spec header
+    // (7 u64 + layer_offsets u32s) + dim u64 + layer 0's cols +
+    // num_chunks u64s + (nc0 + 1) chunk offsets lands on chunk 0's
+    // storage tag; scale sits 12 bytes further (after the three u32s);
+    // the chunk header is 56 bytes, and the first weight array is
+    // 64-byte aligned right after it.
+    let nc0 = shard.model.layers[0].chunked.num_chunks();
+    let body = 8 + 56 + 4 * shard.layer_offsets.len() + 8 + 16 + 4 * (nc0 + 1);
+    let mut bad_tag = bytes.clone();
+    bad_tag[body] = 0xEE;
+    check_err(bad_tag, "unknown body storage tag");
+    // Chunk 0 of layer 0 is exact (DenseRows), so its scale must be
+    // exactly 1.0 on disk.
+    let mut bad_scale = bytes.clone();
+    assert_eq!(&bad_scale[body + 12..body + 16], &1.0f32.to_le_bytes());
+    bad_scale[body + 12] ^= 0x01;
+    check_err(bad_scale, "non-1.0 scale on an exact chunk");
+    // Alignment padding must be zero.
+    let pad_at = body + 56;
+    assert!(pad_at % 64 != 0, "fuzz shape leaves no padding to corrupt");
+    let mut bad_pad = bytes.clone();
+    bad_pad[pad_at] = 0x5A;
+    check_err(bad_pad, "nonzero alignment padding");
+
     std::fs::remove_dir_all(dir).ok();
 }
 

@@ -1,0 +1,317 @@
+//! Quantized + memory-mapped storage properties (the `--approx` /
+//! MSCMXMR4 acceptance gates):
+//!
+//! - the hand-rolled f16 codec round-trips within half-precision error
+//!   bounds over a seeded value sweep, signs and zeros preserved,
+//! - chunk-level quantization (`F16`/`Int8`) leaves every structure
+//!   array bitwise-intact and reconstructs values within the layout's
+//!   analytic error bound (f16: relative 2^-10; int8: scale/2),
+//! - the `--approx` planner gate: the default plan never emits a
+//!   quantized layout; the approx plan does, and its top-k rankings
+//!   stay above the precision@5 floor against the exact oracle,
+//! - exact modes are **exact**: a V4 shard served from the heap and the
+//!   same file served via mmap rank bitwise-identically to an engine
+//!   built from the in-memory model,
+//! - the mmap path is cheap: resident heap stays below the file's
+//!   weight bytes (and below the heap-parsed footprint), and the warm
+//!   serving loop on a mapped engine — quantized engines included —
+//!   touches the allocator zero times.
+//!
+//! Everything runs inside ONE `#[test]` (the process-wide allocator
+//! tallies must not see sibling test threads), seeded via
+//! `rust/tests/common` (`MSCM_TEST_SEED` replayable).
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+use mscm_xmr::inference::{
+    EngineConfig, InferenceEngine, IterationMethod, KernelPlan, MatmulAlgo, PlannerConfig,
+};
+use mscm_xmr::repro::precision_overlap_at_k;
+use mscm_xmr::shard::{load_shard, load_shard_mmap, partition, save_shard_v4, ShardedEngine};
+use mscm_xmr::sparse::{f16_to_f32, f32_to_f16, ChunkStorage, ChunkedMatrix};
+use mscm_xmr::util::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static LIVE: AtomicI64 = AtomicI64::new(0);
+
+/// Counts allocator entries and tracks live bytes (frees subtracted) so
+/// one shim serves both the steady-state-zero and the resident-bytes
+/// assertions.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            LIVE.fetch_add(layout.size() as i64, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as i64, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            LIVE.fetch_add(layout.size() as i64, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            LIVE.fetch_add(new_size as i64 - layout.size() as i64, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn live() -> i64 {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// Half-precision relative error bound (10 mantissa bits, rounded to
+/// nearest — 2^-11 — doubled for slack) plus an absolute epsilon that
+/// covers the subnormal range.
+fn f16_close(orig: f32, got: f32) -> bool {
+    (orig - got).abs() <= orig.abs() / 1024.0 + 1e-6
+}
+
+fn f16_codec_bounds() {
+    let mut rng = Rng::seed_from_u64(common::base_seed() ^ 0xF16);
+    for _ in 0..10_000 {
+        let v = rng.gen_f32(-8.0, 8.0);
+        let rt = f16_to_f32(f32_to_f16(v));
+        assert!(f16_close(v, rt), "f16 round trip {v} -> {rt}");
+        // The sign bit survives every codec path, underflow-to-zero
+        // included (negative zero stays negative).
+        assert_eq!(
+            v.is_sign_negative(),
+            rt.is_sign_negative(),
+            "sign lost: {v} -> {rt}"
+        );
+    }
+    assert_eq!(f16_to_f32(f32_to_f16(0.0)).to_bits(), 0.0f32.to_bits());
+    assert_eq!(f16_to_f32(f32_to_f16(1.0)), 1.0);
+    assert_eq!(f16_to_f32(f32_to_f16(-2.5)), -2.5);
+}
+
+fn chunk_quantization_bounds() {
+    let mut g = common::ModelGen::new(common::base_seed() ^ 0x0_8B17);
+    for case in 0..12 {
+        let (csc, offsets) = g.matrix();
+        let exact = ChunkedMatrix::from_csc(&csc, &offsets, false);
+        for target in [ChunkStorage::F16, ChunkStorage::Int8] {
+            let mut q = exact.clone();
+            q.apply_layout(&vec![target; q.num_chunks()]);
+            let mut deq = Vec::new();
+            for c in 0..exact.num_chunks() {
+                let e = &exact.chunks[c];
+                let quant = &q.chunks[c];
+                assert_eq!(quant.storage, target, "case {case} chunk {c}");
+                // Structure is untouched; only the payload is packed.
+                assert!(quant.row_indices == e.row_indices);
+                assert!(quant.row_ptr == e.row_ptr);
+                assert!(quant.col_idx == e.col_idx);
+                assert!(quant.values.is_empty());
+                if e.values.is_empty() {
+                    continue;
+                }
+                quant.dequantize_into(&mut deq);
+                assert_eq!(deq.len(), e.values.len(), "case {case} chunk {c}");
+                for (i, (&orig, &got)) in e.values.iter().zip(&deq).enumerate() {
+                    let ok = match target {
+                        ChunkStorage::F16 => f16_close(orig, got),
+                        _ => (orig - got).abs() <= quant.scale * 0.5 + 1e-4,
+                    };
+                    assert!(
+                        ok,
+                        "case {case} chunk {c} value {i}: {orig} -> {got} \
+                         ({target:?}, scale {})",
+                        quant.scale
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The `--approx` gate: quantized layouts appear only when asked for,
+/// and when they do, top-5 rankings stay above the precision floor and
+/// warm quantized serving never touches the allocator.
+fn approx_precision_gate() {
+    let model = common::skewed_model(96, 400, 8, 0x51AB5);
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+    let exact_plan = KernelPlan::auto(&model, MatmulAlgo::Mscm, &PlannerConfig::default());
+    assert!(
+        !exact_plan.uses_storage(ChunkStorage::F16)
+            && !exact_plan.uses_storage(ChunkStorage::Int8),
+        "quantized layouts must be opt-in"
+    );
+    let approx_plan = KernelPlan::auto(
+        &model,
+        MatmulAlgo::Mscm,
+        &PlannerConfig {
+            approx: true,
+            ..PlannerConfig::default()
+        },
+    );
+    assert!(
+        approx_plan.uses_storage(ChunkStorage::F16)
+            || approx_plan.uses_storage(ChunkStorage::Int8),
+        "the approx plan quantized nothing — the gate below is vacuous"
+    );
+    let exact = InferenceEngine::new_with_plan(model.clone(), cfg, exact_plan);
+    let quant = InferenceEngine::new_with_plan(model.clone(), cfg, approx_plan);
+    let mut g = common::ModelGen::new(common::base_seed() ^ 0x9A7E);
+    let queries = g.queries(model.dim, 64);
+    let e = exact.predict_batch(&queries, 10, 10);
+    let a = quant.predict_batch(&queries, 10, 10);
+    let p5 = precision_overlap_at_k(&e, &a, 5);
+    assert!(p5 >= 0.9, "precision@5 regression under --approx: {p5:.4}");
+
+    // Warm, then pin: the dequant arena is workspace-resident, so the
+    // second pass over the same queries must not allocate.
+    let rows: Vec<_> = (0..queries.rows).map(|i| queries.row_owned(i)).collect();
+    let mut ws = quant.workspace();
+    for q in &rows {
+        let _ = quant.predict_with(q, 8, 6, &mut ws);
+    }
+    let a0 = allocs();
+    for q in &rows {
+        let _ = quant.predict_with(q, 8, 6, &mut ws);
+    }
+    assert_eq!(
+        allocs() - a0,
+        0,
+        "quantized steady-state serving must be allocation-free"
+    );
+}
+
+fn v4_mmap_serves_exactly_and_cheaply() {
+    // Dense columns (col_nnz 48) make the weight payload dominate the
+    // per-chunk struct overhead, so the resident-bytes assertions have
+    // real margin.
+    let spec = mscm_xmr::data::synthetic::DatasetSpec {
+        name: "quant-mmap",
+        dim: 256,
+        num_labels: 1500,
+        paper_dim: 256,
+        paper_labels: 0,
+        query_nnz: 16,
+        col_nnz: 48,
+        sibling_overlap: 0.6,
+        zipf_theta: 1.0,
+    };
+    let model = mscm_xmr::data::synthetic::synth_model(&spec, 3, 0xD15C);
+    let mut sh = partition(&model, 1).remove(0);
+    sh.plan_auto(MatmulAlgo::Mscm, &PlannerConfig::default());
+    let dir = mscm_xmr::util::temp_dir("quant-mmap");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exact.v4.bin");
+    save_shard_v4(&sh, &path).unwrap();
+    let file_bytes = std::fs::metadata(&path).unwrap().len() as i64;
+
+    let before = live();
+    let heap = load_shard(&path, false).unwrap();
+    let heap_resident = live() - before;
+    let before = live();
+    let mapped = load_shard_mmap(&path, false).unwrap();
+    let mmap_resident = live() - before;
+    let weight_bytes: i64 = mapped
+        .model
+        .layers
+        .iter()
+        .map(|l| l.chunked.weight_bytes() as i64)
+        .sum();
+
+    // The mmap claims only hold where the zero-copy path exists; the
+    // fallback (non-unix / big-endian) heap-parses by design. And under
+    // MSCM_FORCE_MMAP the "heap" load above was itself mapped, so the
+    // heap-vs-mmap comparison is skipped there.
+    if cfg!(all(unix, target_endian = "little")) {
+        assert!(
+            mmap_resident < weight_bytes,
+            "mmap pinned {mmap_resident} heap bytes >= {weight_bytes} weight bytes"
+        );
+        assert!(
+            mmap_resident < file_bytes,
+            "mmap pinned {mmap_resident} heap bytes >= the {file_bytes}-byte file"
+        );
+        let forced = std::env::var("MSCM_FORCE_MMAP").map(|v| v == "1").unwrap_or(false);
+        if !forced {
+            assert!(
+                mmap_resident < heap_resident,
+                "mmap resident {mmap_resident} >= heap resident {heap_resident}"
+            );
+        }
+    }
+
+    // Exact modes stay exact: heap-served, mmap-served and the
+    // in-memory model all rank bitwise-identically.
+    let cfg = EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::Auto);
+    let reference = InferenceEngine::new(
+        model.clone(),
+        EngineConfig::new(MatmulAlgo::Mscm, IterationMethod::BinarySearch),
+    );
+    let via_heap = ShardedEngine::new(vec![heap], cfg);
+    let via_mmap = ShardedEngine::new(vec![mapped], cfg);
+    let mut g = common::ModelGen::new(common::base_seed() ^ 0x4444);
+    let queries = g.queries(model.dim, 32);
+    for i in 0..queries.rows {
+        let q = queries.row_owned(i);
+        let want = reference.predict(&q, 8, 6);
+        assert_eq!(via_heap.predict(&q, 8, 6), want, "heap-served V4 drifted (q={i})");
+        assert_eq!(via_mmap.predict(&q, 8, 6), want, "mmap-served V4 drifted (q={i})");
+    }
+
+    // Steady-state serving straight off the mapping is allocation-free.
+    let m2 = load_shard_mmap(&path, false).unwrap();
+    let (algo, plan) = m2.plan.clone().expect("V4 carries a plan");
+    let engine = InferenceEngine::new_with_plan(
+        m2.model,
+        EngineConfig::new(algo, IterationMethod::Auto),
+        plan,
+    );
+    let rows: Vec<_> = (0..queries.rows).map(|i| queries.row_owned(i)).collect();
+    let mut ws = engine.workspace();
+    for q in &rows {
+        let _ = engine.predict_with(q, 8, 6, &mut ws);
+    }
+    let a0 = allocs();
+    for q in &rows {
+        let _ = engine.predict_with(q, 8, 6, &mut ws);
+    }
+    assert_eq!(
+        allocs() - a0,
+        0,
+        "mmap steady-state serving must be allocation-free"
+    );
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn quantized_and_mapped_storage_properties() {
+    f16_codec_bounds();
+    chunk_quantization_bounds();
+    approx_precision_gate();
+    v4_mmap_serves_exactly_and_cheaply();
+}
